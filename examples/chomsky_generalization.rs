@@ -1,0 +1,73 @@
+//! Chomsky Hierarchy length generalization (Tables 4/5 workload): train
+//! minLSTM on Even Pairs with short sequences, evaluate far beyond the
+//! training lengths.
+//!
+//!     make artifacts && cargo run --release --example chomsky_generalization
+
+use std::path::Path;
+use std::rc::Rc;
+
+use minrnn::config::{Schedule, TrainConfig};
+use minrnn::coordinator::trainer::{FnSource, Trainer};
+use minrnn::data::chomsky;
+use minrnn::runtime::{Manifest, Model, Runtime};
+use minrnn::util::rng::Rng;
+use minrnn::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    minrnn::util::logging::init();
+    let steps: usize = std::env::args().nth(1)
+        .and_then(|s| s.parse().ok()).unwrap_or(150);
+
+    let rt = Runtime::cpu()?;
+    let manifest = Rc::new(Manifest::load(Path::new("artifacts"))?);
+    let model = Model::open(&rt, manifest, "chm_even_pairs_minlstm")?;
+    let train_t = model.variant.seq_len;
+    let b = model.variant.batch;
+
+    let task = chomsky::by_name("even_pairs").unwrap();
+    let train_max = task.max_content_for(train_t);
+    let mut src = FnSource {
+        f: move |rng: &mut Rng| {
+            let task = chomsky::EvenPairs;
+            chomsky::batch(&task, rng, b, train_t, 1,
+                           chomsky::ChomskyTask::max_content_for(
+                               &task, train_t))
+        },
+    };
+    let cfg = TrainConfig {
+        variant: model.variant.name.clone(),
+        steps,
+        lr: 1e-3,
+        schedule: Schedule::WarmupCosine { warmup: steps / 10 },
+        eval_every: 0,
+        log_every: (steps / 10).max(1),
+        ..Default::default()
+    };
+    let trainer = Trainer::new(&model, cfg);
+    let mut state = model.init(0, 1.0)?;
+    trainer.run(&mut state, &mut src)?;
+
+    let mut table = Table::new(
+        &format!("Even Pairs: trained on content ≤ {train_max}, \
+                  evaluated beyond"),
+        &["eval T", "content range", "seq acc"]);
+    let mut rng = Rng::new(99);
+    for ef in &model.variant.eval_files {
+        let eval_max = task.max_content_for(ef.seq_len);
+        let lo = if ef.seq_len > train_t { train_max + 1 } else { 1 };
+        let lo = lo.min(eval_max);
+        let mut acc = 0.0;
+        let n = 6;
+        for _ in 0..n {
+            let batch = chomsky::batch(task.as_ref(), &mut rng, ef.batch,
+                                       ef.seq_len, lo, eval_max);
+            acc += model.eval(&state, &batch)?.seq_acc / n as f32;
+        }
+        table.row(vec![ef.seq_len.to_string(),
+                       format!("{lo}..{eval_max}"),
+                       format!("{acc:.3}")]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! End-to-end headline run (DESIGN.md §Deliverables): train the Figure-2
+//! minGRU character language model on the ~1M-char synthetic corpus for a
+//! few hundred steps, log the loss curve, compare against minLSTM, and
+//! sample text.  Results land in results/e2e_lm.md and EXPERIMENTS.md
+//! quotes them.
+//!
+//!     make artifacts && cargo run --release --example lm_shakespeare [steps]
+
+use std::path::Path;
+use std::rc::Rc;
+
+use minrnn::bench_harness::lm::LmSource;
+use minrnn::config::{Schedule, TrainConfig};
+use minrnn::coordinator::{infer, trainer::Trainer};
+use minrnn::data::corpus::CharVocab;
+use minrnn::runtime::{Manifest, Model, Runtime};
+use minrnn::util::rng::Rng;
+use minrnn::util::table::{fnum, Table};
+
+fn main() -> anyhow::Result<()> {
+    minrnn::util::logging::init();
+    let steps: usize = std::env::args().nth(1)
+        .and_then(|s| s.parse().ok()).unwrap_or(300);
+
+    let rt = Runtime::cpu()?;
+    let manifest = Rc::new(Manifest::load(Path::new("artifacts"))?);
+    let mut table = Table::new(
+        &format!("End-to-end char-LM training ({steps} steps, B=8, T=256, \
+                  3 layers, d=128)"),
+        &["model", "step", "train loss", "test loss"]);
+
+    for kind in ["mingru", "minlstm"] {
+        let model = Model::open(&rt, manifest.clone(),
+                                &format!("fig2_{kind}"))?;
+        let mut src = LmSource::new(model.variant.batch,
+                                    model.variant.seq_len);
+        let cfg = TrainConfig {
+            variant: model.variant.name.clone(),
+            steps,
+            lr: 1e-3,
+            schedule: Schedule::WarmupCosine { warmup: steps / 10 },
+            eval_every: (steps / 10).max(1),
+            eval_batches: 2,
+            log_every: (steps / 20).max(1),
+            ..Default::default()
+        };
+        let trainer = Trainer::new(&model, cfg);
+        let mut state = model.init(0, 0.0)?;
+        let report = trainer.run(&mut state, &mut src)?;
+
+        let losses: std::collections::BTreeMap<usize, f32> =
+            report.loss_curve.iter().cloned().collect();
+        for (step, ev) in &report.eval_curve {
+            let train_l = losses.range(..=step).next_back()
+                .map(|(_, &l)| l).unwrap_or(f32::NAN);
+            table.row(vec![kind.into(), step.to_string(),
+                           fnum(train_l as f64), fnum(ev.loss as f64)]);
+        }
+        println!("{kind}: best test loss {:.4} @ step {} \
+                  ({:.2} steps/s)",
+                 report.best_eval_loss, report.best_eval_step,
+                 report.steps_per_sec);
+        assert!(report.best_eval_loss
+                < report.eval_curve.first().unwrap().1.loss,
+                "{kind}: test loss did not improve");
+
+        // sample a continuation through the decode path
+        let vocab = CharVocab::new();
+        let mut rng = Rng::new(7);
+        let out = infer::generate(&model, &state.params,
+                                  &vocab.encode("The "), 120, 0.8,
+                                  &mut rng)?;
+        println!("{kind} sample: {:?}\n", vocab.decode(&out));
+    }
+
+    println!("{}", table.render());
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/e2e_lm.md", table.render_markdown())?;
+    println!("wrote results/e2e_lm.md");
+    Ok(())
+}

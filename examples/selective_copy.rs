@@ -1,0 +1,50 @@
+//! Selective Copying (Tables 1–2 workload): train minGRU with 1 vs 3
+//! layers and show the layer effect the paper highlights in Table 1.
+//!
+//!     make artifacts && cargo run --release --example selective_copy [steps]
+
+use std::path::Path;
+use std::rc::Rc;
+
+use minrnn::config::{Schedule, TrainConfig};
+use minrnn::coordinator::data_source_for;
+use minrnn::coordinator::trainer::Trainer;
+use minrnn::runtime::{Manifest, Model, Runtime};
+use minrnn::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    minrnn::util::logging::init();
+    let steps: usize = std::env::args().nth(1)
+        .and_then(|s| s.parse().ok()).unwrap_or(200);
+
+    let rt = Runtime::cpu()?;
+    let manifest = Rc::new(Manifest::load(Path::new("artifacts"))?);
+    let mut table = Table::new(
+        "Selective Copying: effect of depth (Table 1 trend)",
+        &["model", "layers", "token acc", "seq acc"]);
+
+    for layers in [1usize, 3] {
+        let model = Model::open(&rt, manifest.clone(),
+                                &format!("tab1_mingru_l{layers}"))?;
+        let mut data = data_source_for(&model.variant)?;
+        let cfg = TrainConfig {
+            variant: model.variant.name.clone(),
+            steps,
+            lr: 1e-3,
+            schedule: Schedule::WarmupCosine { warmup: steps / 10 },
+            eval_every: steps,
+            eval_batches: 8,
+            log_every: (steps / 10).max(1),
+            ..Default::default()
+        };
+        let trainer = Trainer::new(&model, cfg);
+        let mut state = model.init(0, 0.0)?;
+        let report = trainer.run(&mut state, data.as_mut())?;
+        let ev = report.final_eval.unwrap_or_default();
+        table.row(vec!["minGRU".into(), layers.to_string(),
+                       format!("{:.3}", ev.token_acc),
+                       format!("{:.3}", ev.seq_acc)]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}

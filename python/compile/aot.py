@@ -1,0 +1,345 @@
+"""AOT exporter: lowers every registered variant (exports.py) to HLO *text*
+plus a manifest the Rust coordinator consumes.
+
+HLO text — NOT serialized protos — is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published `xla` crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Executable calling conventions (mirrored in rust/src/runtime/):
+
+    init:     (seed i32[], forget_bias f32[])
+                → (params..., opt...)
+    train:    (params..., opt..., x, targets, mask, lr f32[], drop_seed i32[])
+                → (params..., opt..., loss f32[], grad_norm f32[])
+    eval:     (params..., x, targets, mask)
+                → (loss, token_acc, seq_acc)      [masked_ce]
+                → (loss,)                         [masked_mse]
+    step:     (params..., x_t, state...) → (logits, state'...)
+    prefill:  (params..., x) → (last_logits, state...)
+
+Usage: python -m compile.aot --out ../artifacts [--only GROUP|NAME ...]
+                             [--force] [--list] [--mem-analysis]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import exports, tasks
+from .kernels import scan as scan_kernel
+from .kernels import vjp as kernel_vjp
+from .models import backbone
+
+S = jax.ShapeDtypeStruct
+F32, I32 = jnp.float32, jnp.int32
+
+
+# ---------------------------------------------------------------------------
+# lowering helpers
+# ---------------------------------------------------------------------------
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _dtype_name(dt) -> str:
+    return {"float32": "f32", "int32": "i32", "uint32": "u32"}[str(dt)]
+
+
+def _keystr(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def leaf_specs(tree) -> list:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [{"name": _keystr(path),
+             "shape": list(leaf.shape),
+             "dtype": _dtype_name(leaf.dtype)} for path, leaf in flat]
+
+
+def io_spec(shape, dtype) -> dict:
+    return {"shape": list(shape), "dtype": _dtype_name(jnp.dtype(dtype))}
+
+
+def _lower_write(fn, arg_specs, path: str, force: bool) -> float:
+    """Lower fn at arg_specs, write HLO text; returns elapsed seconds."""
+    if os.path.exists(path) and not force:
+        return 0.0
+    t0 = time.time()
+    # keep_unused: the calling convention is positional — arguments that a
+    # particular variant doesn't use (e.g. forget_bias for minGRU, the
+    # dropout seed when dropout=0) must still be parameters of the HLO.
+    lowered = jax.jit(fn, keep_unused=True).lower(*arg_specs)
+    text = to_hlo_text(lowered)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        f.write(text)
+    os.replace(tmp, path)
+    return time.time() - t0
+
+
+# ---------------------------------------------------------------------------
+# per-variant export
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: dict, task: str, B: int, T: int):
+    """(x, targets, mask) ShapeDtypeStructs for a (B, T) batch."""
+    if cfg["vocab_in"] is not None:
+        x = S((B, T), I32)
+    else:
+        x = S((B, T, cfg["input_dim"]), F32)
+    if task == "masked_ce":
+        tgt = S((B, T), I32)
+    else:
+        tgt = S((B, T, cfg["vocab_out"]), F32)
+    mask = S((B, T), F32)
+    return x, tgt, mask
+
+
+def export_variant(name: str, spec: dict, outdir: str, force: bool,
+                   mem_analysis: bool) -> dict:
+    cfg = backbone.with_defaults(spec["cfg"])
+    task = spec["task"]
+    B, T = spec["batch"], spec["seq_len"]
+    files_wanted = spec["files"]
+
+    init_fn = tasks.make_init(cfg)
+    params_s, opt_s = jax.eval_shape(init_fn, S((), I32), S((), F32))
+    flat_p, pdef = jax.tree_util.tree_flatten(params_s)
+    flat_o, odef = jax.tree_util.tree_flatten(opt_s)
+    n_p, n_o = len(flat_p), len(flat_o)
+
+    entry = {
+        "group": spec["group"], "cfg": cfg, "task": task,
+        "batch": B, "seq_len": T,
+        "optim": spec["optim"], "workload": spec["workload"],
+        "params": leaf_specs(params_s), "opt": leaf_specs(opt_s),
+        "files": {},
+        "depth": {
+            "parallel_scan": scan_kernel.depth_estimate(T),
+            "sequential": T,
+        },
+        "kernel": {
+            "block_n": kernel_vjp.CONFIG["block_n"],
+            "time_chunk": kernel_vjp.CONFIG["time_chunk"],
+            "vmem_bytes": scan_kernel.vmem_bytes(
+                kernel_vjp.CONFIG["block_n"],
+                kernel_vjp.CONFIG["time_chunk"]),
+        },
+    }
+    elapsed = 0.0
+
+    # ---- init -------------------------------------------------------------
+    def init_flat(seed, fb):
+        p, o = init_fn(seed, fb)
+        return tuple(jax.tree_util.tree_leaves(p)) + \
+            tuple(jax.tree_util.tree_leaves(o))
+
+    fname = f"{name}.init.hlo.txt"
+    elapsed += _lower_write(init_flat, (S((), I32), S((), F32)),
+                            os.path.join(outdir, fname), force)
+    entry["files"]["init"] = fname
+
+    # ---- train ------------------------------------------------------------
+    if files_wanted.get("train"):
+        ts = tasks.make_train_step(cfg, task, **spec["optim"])
+
+        def train_flat(*args):
+            p = pdef.unflatten(list(args[:n_p]))
+            o = odef.unflatten(list(args[n_p:n_p + n_o]))
+            x, tgt, mask, lr, seed = args[n_p + n_o:]
+            p2, o2, loss, gn = ts(p, o, x, tgt, mask, lr, seed)
+            return tuple(jax.tree_util.tree_leaves(p2)) + \
+                tuple(jax.tree_util.tree_leaves(o2)) + (loss, gn)
+
+        x_s, tgt_s, mask_s = batch_specs(cfg, task, B, T)
+        arg_specs = tuple(flat_p) + tuple(flat_o) + \
+            (x_s, tgt_s, mask_s, S((), F32), S((), I32))
+        fname = f"{name}.train.hlo.txt"
+        elapsed += _lower_write(train_flat, arg_specs,
+                                os.path.join(outdir, fname), force)
+        entry["files"]["train"] = fname
+        entry["io"] = {"x": io_spec(x_s.shape, x_s.dtype),
+                       "targets": io_spec(tgt_s.shape, tgt_s.dtype),
+                       "mask": io_spec(mask_s.shape, mask_s.dtype)}
+
+        if mem_analysis:
+            try:
+                compiled = jax.jit(train_flat).lower(*arg_specs).compile()
+                ma = compiled.memory_analysis()
+                entry["memory"] = {
+                    "temp_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+                    "argument_bytes": int(
+                        getattr(ma, "argument_size_in_bytes", 0)),
+                    "output_bytes": int(
+                        getattr(ma, "output_size_in_bytes", 0)),
+                    "generated_code_bytes": int(
+                        getattr(ma, "generated_code_size_in_bytes", 0)),
+                }
+            except Exception as e:  # pragma: no cover - best effort
+                entry["memory"] = {"error": str(e)}
+
+    # ---- eval -------------------------------------------------------------
+    if files_wanted.get("eval"):
+        es = tasks.make_eval_step(cfg, task)
+        entry["files"]["eval"] = []
+        for (eb, et) in files_wanted["eval"]:
+            def eval_flat(*args):
+                p = pdef.unflatten(list(args[:n_p]))
+                x, tgt, mask = args[n_p:]
+                return es(p, x, tgt, mask)
+
+            x_s, tgt_s, mask_s = batch_specs(cfg, task, eb, et)
+            fname = f"{name}.eval.b{eb}.t{et}.hlo.txt"
+            elapsed += _lower_write(
+                eval_flat, tuple(flat_p) + (x_s, tgt_s, mask_s),
+                os.path.join(outdir, fname), force)
+            entry["files"]["eval"].append(
+                {"batch": eb, "seq_len": et, "file": fname,
+                 "x": io_spec(x_s.shape, x_s.dtype),
+                 "targets": io_spec(tgt_s.shape, tgt_s.dtype)})
+
+    # ---- decode step ------------------------------------------------------
+    if files_wanted.get("step"):
+        ds = tasks.make_decode_step(cfg)
+        entry["files"]["step"] = []
+        for sb in files_wanted["step"]:
+            state_s = jax.eval_shape(lambda b=sb: backbone.init_state(cfg, b))
+            flat_s, sdef = jax.tree_util.tree_flatten(state_s)
+            n_s = len(flat_s)
+
+            def step_flat(*args, _sdef=sdef, _n_s=n_s):
+                p = pdef.unflatten(list(args[:n_p]))
+                x_t = args[n_p]
+                st = _sdef.unflatten(list(args[n_p + 1:n_p + 1 + _n_s]))
+                logits, st2 = ds(p, x_t, st)
+                return (logits,) + tuple(jax.tree_util.tree_leaves(st2))
+
+            if cfg["vocab_in"] is not None:
+                xt_s = S((sb,), I32)
+            else:
+                xt_s = S((sb, cfg["input_dim"]), F32)
+            fname = f"{name}.step.b{sb}.hlo.txt"
+            elapsed += _lower_write(
+                step_flat, tuple(flat_p) + (xt_s,) + tuple(flat_s),
+                os.path.join(outdir, fname), force)
+            entry["files"]["step"].append(
+                {"batch": sb, "file": fname,
+                 "x": io_spec(xt_s.shape, xt_s.dtype),
+                 "state": leaf_specs(state_s)})
+
+    # ---- prefill ----------------------------------------------------------
+    if files_wanted.get("prefill"):
+        pf = tasks.make_prefill(cfg)
+        entry["files"]["prefill"] = []
+        for (pb, pt) in files_wanted["prefill"]:
+            state_s = jax.eval_shape(lambda b=pb: backbone.init_state(cfg, b))
+
+            def prefill_flat(*args):
+                p = pdef.unflatten(list(args[:n_p]))
+                x = args[n_p]
+                logits, st = pf(p, x)
+                return (logits[:, -1, :],) + \
+                    tuple(jax.tree_util.tree_leaves(st))
+
+            if cfg["vocab_in"] is not None:
+                x_s = S((pb, pt), I32)
+            else:
+                x_s = S((pb, pt, cfg["input_dim"]), F32)
+            fname = f"{name}.prefill.b{pb}.t{pt}.hlo.txt"
+            elapsed += _lower_write(prefill_flat, tuple(flat_p) + (x_s,),
+                                    os.path.join(outdir, fname), force)
+            entry["files"]["prefill"].append(
+                {"batch": pb, "seq_len": pt, "file": fname,
+                 "x": io_spec(x_s.shape, x_s.dtype),
+                 "state": leaf_specs(state_s)})
+
+    entry["lower_seconds"] = round(elapsed, 2)
+    return entry
+
+
+# ---------------------------------------------------------------------------
+# main
+# ---------------------------------------------------------------------------
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="AOT-export model variants to HLO text")
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="variant names or group names to export")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--mem-analysis", action="store_true",
+                    help="compile fig1 train steps and record memory stats")
+    args = ap.parse_args(argv)
+
+    grp = exports.groups()
+    if args.list:
+        for g, names in sorted(grp.items()):
+            print(f"{g}: {len(names)} variants")
+            for n in names:
+                print(f"  {n}")
+        return 0
+
+    if args.only:
+        selected = []
+        for sel in args.only:
+            if sel in grp:
+                selected.extend(grp[sel])
+            elif sel in exports.VARIANTS:
+                selected.append(sel)
+            else:
+                print(f"unknown variant/group: {sel}", file=sys.stderr)
+                return 1
+    else:
+        selected = list(exports.VARIANTS)
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest_path = os.path.join(args.out, "manifest.json")
+    manifest = {"variants": {}, "scan_config": dict(kernel_vjp.CONFIG)}
+    if os.path.exists(manifest_path):
+        try:
+            with open(manifest_path) as f:
+                manifest["variants"] = json.load(f).get("variants", {})
+        except Exception:
+            pass
+
+    t0 = time.time()
+    for i, name in enumerate(selected):
+        spec = exports.VARIANTS[name]
+        entry = export_variant(name, spec, args.out, args.force,
+                               args.mem_analysis and spec["group"] == "fig1")
+        manifest["variants"][name] = entry
+        print(f"[{i + 1}/{len(selected)}] {name} "
+              f"({entry['lower_seconds']}s)", flush=True)
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"exported {len(selected)} variants in {time.time() - t0:.1f}s "
+          f"→ {manifest_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,219 @@
+"""Variant registry: every artifact the coordinator can load, keyed by the
+paper experiment it serves.  This file is the single source of truth for
+shapes — `aot.py` lowers from it and `artifacts/manifest.json` mirrors it
+for the Rust side.
+
+Scales are chosen for a single-CPU-core PJRT testbed (see DESIGN.md §2 —
+we reproduce relationships, not absolute T4 numbers); every entry records
+the paper's original scale in ``workload``.
+"""
+
+from __future__ import annotations
+
+# ---------------------------------------------------------------------------
+# Experiment groups.  A variant spec:
+#   cfg       — backbone config (models/backbone.py)
+#   task      — 'masked_ce' | 'masked_mse'
+#   batch     — training batch
+#   seq_len   — training sequence length
+#   files     — which executables to export:
+#               'train', 'eval' (list of (batch, T)), 'step' (list of batch),
+#               'prefill' (list of (batch, T))
+#   optim     — weight_decay / clip_norm
+#   workload  — generator description for the Rust data layer
+# ---------------------------------------------------------------------------
+
+VARIANTS: dict[str, dict] = {}
+
+
+def _add(name: str, **spec):
+    assert name not in VARIANTS, name
+    VARIANTS[name] = spec
+
+
+# --- quickstart: tiny LM used by examples/quickstart.rs and tests ----------
+
+_add("quickstart",
+     group="quickstart",
+     cfg=dict(kind="mingru", n_layers=1, d_model=32, expansion=2,
+              vocab_in=64, vocab_out=64, conv=True, mlp=True, dropout=0.0,
+              max_len=96),
+     task="masked_ce", batch=4, seq_len=64,
+     files=dict(train=True, eval=[(4, 64)], step=[1, 4],
+                prefill=[(4, 64)]),
+     optim=dict(weight_decay=0.0, clip_norm=1.0),
+     workload=dict(kind="char_lm", vocab=64, paper_scale="n/a (smoke)"))
+
+
+# --- Figure 1: training cost vs sequence length ----------------------------
+
+FIG1_KINDS = ["mingru", "minlstm", "gru", "lstm", "s6"]
+FIG1_LENGTHS = [64, 128, 256, 512, 1024]
+
+for kind in FIG1_KINDS:
+    for T in FIG1_LENGTHS:
+        _add(f"fig1_{kind}_t{T}",
+             group="fig1",
+             cfg=dict(kind=kind, n_layers=1, d_model=64, expansion=1,
+                      vocab_in=16, vocab_out=16, conv=False, mlp=False,
+                      dropout=0.0, max_len=T),
+             task="masked_ce", batch=8, seq_len=T,
+             files=dict(train=True),
+             optim=dict(weight_decay=0.0, clip_norm=1.0),
+             workload=dict(kind="random_tokens", vocab=16,
+                           paper_scale="B=64, T up to 4096, T4 GPU"))
+
+
+# --- Tables 1 & 2: Selective Copying ---------------------------------------
+
+SC = dict(seq_len=272, ctx_len=256, n_data=16, vocab=16)
+
+for kind in ["mingru", "minlstm"]:
+    for n_layers in [1, 2, 3]:
+        _add(f"tab1_{kind}_l{n_layers}",
+             group="tab1",
+             cfg=dict(kind=kind, n_layers=n_layers, d_model=32, expansion=4,
+                      vocab_in=SC["vocab"], vocab_out=SC["vocab"],
+                      conv=False, mlp=False, dropout=0.1,
+                      max_len=SC["seq_len"]),
+             task="masked_ce", batch=16, seq_len=SC["seq_len"],
+             files=dict(train=True, eval=[(16, SC["seq_len"])]),
+             optim=dict(weight_decay=0.0, clip_norm=1.0),
+             workload=dict(kind="selective_copy", **SC,
+                           paper_scale="T=4096, 400k steps, exp. factor 6"))
+
+
+# --- Figure 2 (+ Figure 5): character language modelling -------------------
+
+LM = dict(vocab=64, seq_len=256)
+# positional table / KV-cache capacity must cover the longest prefill
+# context (Figure 3 sweeps up to 1024) plus decode headroom
+LM_MAX_LEN = 1024 + 64
+FIG2_KINDS = ["mingru", "minlstm", "s6", "transformer"]
+
+for kind in FIG2_KINDS:
+    conv = kind != "transformer"
+    _add(f"fig2_{kind}",
+         group="fig2",
+         cfg=dict(kind=kind, n_layers=3, d_model=128,
+                  expansion=(2 if conv else 1),
+                  vocab_in=LM["vocab"], vocab_out=LM["vocab"],
+                  conv=conv, mlp=True, dropout=0.2, n_heads=4,
+                  max_len=LM_MAX_LEN),
+         task="masked_ce", batch=8, seq_len=LM["seq_len"],
+         files=dict(train=True, eval=[(8, LM["seq_len"])],
+                    step=[1, 8, 32],
+                    prefill=[(8, 64), (8, 256), (8, 1024)]),
+         optim=dict(weight_decay=0.0, clip_norm=0.25),
+         workload=dict(kind="char_lm", vocab=LM["vocab"],
+                       paper_scale="Shakespeare 1.0M chars, d=384, B=64"))
+
+# traditional RNN LM variants: used by Figures 3/4 (inference) — init + decode
+for kind in ["gru", "lstm"]:
+    _add(f"infer_{kind}",
+         group="fig34",
+         cfg=dict(kind=kind, n_layers=3, d_model=128, expansion=2,
+                  vocab_in=LM["vocab"], vocab_out=LM["vocab"],
+                  conv=True, mlp=True, dropout=0.0,
+                  max_len=LM_MAX_LEN),
+         task="masked_ce", batch=8, seq_len=LM["seq_len"],
+         files=dict(step=[1, 8, 32], prefill=[(8, 64), (8, 256), (8, 1024)]),
+         optim=dict(weight_decay=0.0, clip_norm=1.0),
+         workload=dict(kind="char_lm", vocab=LM["vocab"],
+                       paper_scale="batch 8..64, ctx up to 2048, T4"))
+
+
+# --- Tables 4 & 5: Chomsky Hierarchy ---------------------------------------
+
+CHOMSKY_TASKS = ["bucket_sort", "missing_duplicate", "cycle_nav",
+                 "even_pairs", "majority", "majority_count"]
+CH = dict(train_len=64, eval_lens=[64, 128, 288], vocab=16)
+
+for task_name in CHOMSKY_TASKS:
+    for kind in ["minlstm", "mingru"]:
+        _add(f"chm_{task_name}_{kind}",
+             group="tab45",
+             cfg=dict(kind=kind, n_layers=2, d_model=64, expansion=2,
+                      vocab_in=CH["vocab"], vocab_out=CH["vocab"],
+                      conv=True, mlp=False, dropout=0.0,
+                      max_len=max(CH["eval_lens"])),
+             task="masked_ce", batch=32, seq_len=CH["train_len"],
+             files=dict(train=True,
+                        eval=[(32, L) for L in CH["eval_lens"]]),
+             optim=dict(weight_decay=0.01, clip_norm=1.0),
+             workload=dict(kind=f"chomsky/{task_name}", **CH,
+                           paper_scale="train len<=40, eval 40-256, 500k steps"))
+
+
+# --- Long Range Arena (Tables 4/5) + Table 6 ablation ----------------------
+
+LRA = {
+    "listops": dict(seq_len=256, vocab_in=20, n_classes=10, batch=16,
+                    d_model=64, n_layers=2),
+    "retrieval": dict(seq_len=512, vocab_in=32, n_classes=2, batch=8,
+                      d_model=64, n_layers=2),
+    "gimage": dict(seq_len=256, vocab_in=32, n_classes=10, batch=8,
+                   d_model=96, n_layers=2),
+}
+
+for task_name, w in LRA.items():
+    _add(f"lra_{task_name}_minlstm",
+         group="tab45",
+         cfg=dict(kind="minlstm", n_layers=w["n_layers"],
+                  d_model=w["d_model"], expansion=2,
+                  vocab_in=w["vocab_in"], vocab_out=max(w["n_classes"], 2),
+                  conv=True, mlp=True, dropout=0.1, max_len=w["seq_len"]),
+         task="masked_ce", batch=w["batch"], seq_len=w["seq_len"],
+         files=dict(train=True, eval=[(w["batch"], w["seq_len"])]),
+         optim=dict(weight_decay=0.05, clip_norm=1.0),
+         workload=dict(kind=f"lra/{task_name}", **w,
+                       paper_scale="T 1024-4000, 250k steps, 6-8 blocks"))
+
+# Table 6: minLSTM on ListOps, ± Conv ± MLP
+for suffix, conv, use_mlp in [("plain", False, False), ("conv", True, False),
+                              ("mlp", False, True)]:
+    w = LRA["listops"]
+    _add(f"tab6_listops_{suffix}",
+         group="tab6",
+         cfg=dict(kind="minlstm", n_layers=w["n_layers"],
+                  d_model=w["d_model"], expansion=2,
+                  vocab_in=w["vocab_in"], vocab_out=w["n_classes"],
+                  conv=conv, mlp=use_mlp, dropout=0.1, max_len=w["seq_len"]),
+         task="masked_ce", batch=w["batch"], seq_len=w["seq_len"],
+         files=dict(train=True, eval=[(w["batch"], w["seq_len"])]),
+         optim=dict(weight_decay=0.05, clip_norm=1.0),
+         workload=dict(kind="lra/listops", **w,
+                       paper_scale="Table 6 ablation"))
+# (the +Conv+MLP row is lra_listops_minlstm itself)
+
+
+# --- Table 3: offline RL (Decision-minRNN) ---------------------------------
+
+RL_ENVS = {
+    "pointmass": dict(obs_dim=4, act_dim=2),
+    "pendulum": dict(obs_dim=3, act_dim=1),
+    "walker1d": dict(obs_dim=6, act_dim=2),
+}
+RL_CTX = 32
+
+for env, dims in RL_ENVS.items():
+    for kind in ["mingru", "minlstm"]:
+        feat = 1 + dims["obs_dim"] + dims["act_dim"]  # rtg ⊕ obs ⊕ prev act
+        _add(f"rl_{env}_{kind}",
+             group="tab3",
+             cfg=dict(kind=kind, n_layers=3, d_model=64, expansion=2,
+                      vocab_in=None, input_dim=feat,
+                      vocab_out=dims["act_dim"],
+                      conv=False, mlp=True, dropout=0.1, max_len=RL_CTX),
+             task="masked_mse", batch=16, seq_len=RL_CTX,
+             files=dict(train=True, eval=[(16, RL_CTX)], step=[1]),
+             optim=dict(weight_decay=1e-4, clip_norm=1.0),
+             workload=dict(kind=f"rl/{env}", ctx=RL_CTX, **dims,
+                           paper_scale="D4RL MuJoCo, 100k steps, B=64"))
+
+
+def groups() -> dict[str, list[str]]:
+    out: dict[str, list[str]] = {}
+    for name, spec in VARIANTS.items():
+        out.setdefault(spec["group"], []).append(name)
+    return out

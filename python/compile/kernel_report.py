@@ -1,0 +1,51 @@
+"""L1 §Perf: kernel structure report — VMEM footprint and critical-path
+depth per (block_n, time_chunk) configuration.
+
+`interpret=True` gives CPU-numpy wallclock only (not a TPU proxy), so the
+optimization target is *structural*: stay under the VMEM budget while
+minimizing depth = T/time_chunk (sequential carry) + log2(time_chunk)
+(Hillis–Steele ladder).  Larger chunks cut carry steps but grow tiles;
+the default (block_n=256, time_chunk=128) sits on the knee.
+
+Usage: python -m compile.kernel_report [T ...]
+"""
+
+from __future__ import annotations
+
+import sys
+
+from .kernels import scan
+
+VMEM_BUDGET = 16 * 1024 * 1024  # typical TPU core VMEM
+
+
+def report(lengths: list[int]) -> str:
+    rows = []
+    for tc in [32, 64, 128, 256, 512]:
+        for bn in [128, 256, 512]:
+            vmem = scan.vmem_bytes(bn, tc)
+            depths = [scan.depth_estimate(t, tc) for t in lengths]
+            rows.append((tc, bn, vmem, depths,
+                         vmem <= VMEM_BUDGET // 4))
+    head = f"{'chunk':>6} {'block_n':>8} {'vmem':>12} " + \
+        " ".join(f"depth@T={t:<6}" for t in lengths) + "  fits(<4MiB)"
+    lines = [head, "-" * len(head)]
+    for tc, bn, vmem, depths, fits in rows:
+        lines.append(
+            f"{tc:>6} {bn:>8} {vmem:>12,} "
+            + " ".join(f"{d:>13}" for d in depths)
+            + f"  {'yes' if fits else 'NO'}")
+    return "\n".join(lines)
+
+
+def main() -> int:
+    lengths = [int(a) for a in sys.argv[1:]] or [256, 1024, 4096]
+    print(report(lengths))
+    print(f"\ndefault config: block_n={scan.DEFAULT_BLOCK_N}, "
+          f"time_chunk={scan.DEFAULT_TIME_CHUNK} "
+          f"(vmem {scan.vmem_bytes():,} B)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,13 @@
+"""L1: Pallas kernels for the parallel-scan hot spot of minGRU / minLSTM.
+
+Public surface:
+    scan.scan_log / scan.scan_linear    — generic chunked parallel scans
+    mingru.mingru_scan                  — fused gate+scan, Algorithm 6
+    minlstm.minlstm_scan                — fused gate+scan, Algorithm 8
+    ref.*                               — sequential pure-jnp oracles
+"""
+
+from . import ref, scan, mingru, minlstm  # noqa: F401
+from .scan import scan_log, scan_linear, vmem_bytes, depth_estimate  # noqa: F401
+from .mingru import mingru_scan  # noqa: F401
+from .minlstm import minlstm_scan  # noqa: F401

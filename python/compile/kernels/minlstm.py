@@ -1,0 +1,103 @@
+"""Fused minLSTM Pallas kernel (Algorithm 8, log-space parallel mode,
+length-independence scaling).
+
+Same structure as the minGRU kernel; the gate math differs:
+    diff   = softplus(-p) - softplus(-k)      (p: forget pre-act, k: input)
+    log f' = -softplus(diff)
+    log i' = -softplus(-diff)
+    log b  = log i' + log g(pre)
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .scan import (LOG_ZERO, DEFAULT_BLOCK_N, DEFAULT_TIME_CHUNK,
+                   _prefix_logaddexp, _ceil_to)
+from .mingru import _softplus, _log_g
+
+
+def _minlstm_kernel(p_ref, k_ref, pre_ref, lh0_ref, o_ref, ca_ref, cl_ref, *,
+                    time_chunk: int):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        ca_ref[...] = jnp.zeros_like(ca_ref)
+        cl_ref[...] = lh0_ref[...]
+
+    diff = _softplus(-p_ref[...]) - _softplus(-k_ref[...])
+    la = -_softplus(diff)                         # log f'
+    lb = -_softplus(-diff) + _log_g(pre_ref[...])  # log i' + log g(pre)
+
+    carry_a = ca_ref[...]
+    carry_l = cl_ref[...]
+    a_star = jnp.cumsum(la, axis=0)
+    s = jnp.logaddexp(carry_l[None, :],
+                      _prefix_logaddexp(lb - a_star, time_chunk)
+                      - carry_a[None, :])
+    o_ref[...] = jnp.exp((carry_a[None, :] + a_star) + s)
+    ca_ref[...] = carry_a + a_star[-1]
+    cl_ref[...] = s[-1]
+
+
+def minlstm_scan(p: jax.Array, k: jax.Array, h_tilde_pre: jax.Array,
+                 h0: jax.Array, *,
+                 block_n: int = DEFAULT_BLOCK_N,
+                 time_chunk: int = DEFAULT_TIME_CHUNK,
+                 interpret: bool = True) -> jax.Array:
+    """Fused parallel-mode minLSTM with length-independence scaling.
+
+    p, k, h_tilde_pre: (B, T, D) forget / input / candidate pre-activations.
+    h0: (B, D) positive initial state.
+    Returns h: (B, T, D) — matches ref.minlstm_sequential.
+    """
+    B, T, D = p.shape
+    assert k.shape == (B, T, D) and h_tilde_pre.shape == (B, T, D)
+    assert h0.shape == (B, D)
+
+    pf = jnp.moveaxis(p, 1, 0).reshape(T, B * D)
+    kf = jnp.moveaxis(k, 1, 0).reshape(T, B * D)
+    cf = jnp.moveaxis(h_tilde_pre, 1, 0).reshape(T, B * D)
+    lh0 = jnp.log(h0).reshape(B * D)
+
+    N = B * D
+    tc = 1 << max(0, math.ceil(math.log2(min(time_chunk, T))))
+    bn = min(block_n, N)
+    Tp, Np = _ceil_to(T, tc), _ceil_to(N, bn)
+    pf = jnp.pad(pf, ((0, Tp - T), (0, Np - N)))
+    kf = jnp.pad(kf, ((0, Tp - T), (0, Np - N)))
+    cf = jnp.pad(cf, ((0, Tp - T), (0, Np - N)), constant_values=LOG_ZERO / 2)
+    lh0 = jnp.pad(lh0, (0, Np - N))
+
+    grid = (Np // bn, Tp // tc)
+    out_shapes = [
+        jax.ShapeDtypeStruct((Tp, Np), pf.dtype),
+        jax.ShapeDtypeStruct((Np,), pf.dtype),
+        jax.ShapeDtypeStruct((Np,), pf.dtype),
+    ]
+    h, _, _ = pl.pallas_call(
+        functools.partial(_minlstm_kernel, time_chunk=tc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tc, bn), lambda c, t: (t, c)),
+            pl.BlockSpec((tc, bn), lambda c, t: (t, c)),
+            pl.BlockSpec((tc, bn), lambda c, t: (t, c)),
+            pl.BlockSpec((bn,), lambda c, t: (c,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tc, bn), lambda c, t: (t, c)),
+            pl.BlockSpec((bn,), lambda c, t: (c,)),
+            pl.BlockSpec((bn,), lambda c, t: (c,)),
+        ],
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(pf, kf, cf, lh0)
+
+    h = h[:T, :N].reshape(T, B, D)
+    return jnp.moveaxis(h, 0, 1)

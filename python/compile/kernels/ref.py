@@ -1,0 +1,191 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+Everything here is the *sequential* math from the paper's Appendix A/B,
+implemented with `jax.lax.scan` (i.e. exactly the BPTT formulation the
+parallel kernels must match). These functions are the single source of
+truth for correctness: pytest sweeps the Pallas kernels against them.
+
+Shapes follow the paper's convention: `(batch, time, hidden)` for
+sequences, `(batch, hidden)` for per-step states.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Core recurrence: v_t = a_t ⊙ v_{t-1} + b_t   (Section 2.3)
+# ---------------------------------------------------------------------------
+
+def linear_recurrence(a: jax.Array, b: jax.Array, h0: jax.Array) -> jax.Array:
+    """Sequential v_t = a_t * v_{t-1} + b_t with v_0 = h0.
+
+    a, b: (B, T, D); h0: (B, D).  Returns h: (B, T, D) = v_1..v_T.
+    """
+
+    def step(carry, ab):
+        a_t, b_t = ab
+        v = a_t * carry + b_t
+        return v, v
+
+    # scan over time: move T to the front
+    aT = jnp.moveaxis(a, 1, 0)
+    bT = jnp.moveaxis(b, 1, 0)
+    _, hT = jax.lax.scan(step, h0, (aT, bT))
+    return jnp.moveaxis(hT, 0, 1)
+
+
+def log_linear_recurrence(log_a: jax.Array, log_b: jax.Array,
+                          log_h0: jax.Array) -> jax.Array:
+    """Sequential evaluation of the log-space recurrence (Appendix B.1).
+
+    Computes h_t where log(h_t) = logaddexp(log_a_t + log_h_{t-1}, log_b_t),
+    i.e. h_t = a_t * h_{t-1} + b_t with all quantities positive.
+    Returns h (real space), shape (B, T, D).
+    """
+
+    def step(carry, ab):
+        la, lb = ab
+        lh = jnp.logaddexp(la + carry, lb)
+        return lh, lh
+
+    laT = jnp.moveaxis(log_a, 1, 0)
+    lbT = jnp.moveaxis(log_b, 1, 0)
+    _, lhT = jax.lax.scan(step, log_h0, (laT, lbT))
+    return jnp.exp(jnp.moveaxis(lhT, 0, 1))
+
+
+def heinsen_scan_log(log_a: jax.Array, log_b: jax.Array,
+                     log_h0: jax.Array) -> jax.Array:
+    """Parallel-form (but jnp, not Pallas) Heinsen (2023) log-space scan.
+
+    Used to cross-check the *algorithm* independently of the kernel:
+        a_star_t   = cumsum(log_a)            (prefix products in log space)
+        log_h_t    = a_star_t + logcumsumexp(log_b - a_star, with log_h0 at t=0)
+    """
+    a_star = jnp.cumsum(log_a, axis=1)  # (B, T, D)
+    # prepend the initial state as a value with zero accumulated coefficient
+    x = jnp.concatenate([log_h0[:, None, :], log_b - a_star], axis=1)
+    # logcumsumexp along time, stabilized by the per-channel global max
+    # (a running max cannot be factored out of the cumulative sum)
+    m = jnp.max(x, axis=1, keepdims=True)
+    lcse = jnp.log(jnp.cumsum(jnp.exp(x - m), axis=1)) + m
+    return jnp.exp(a_star + lcse[:, 1:, :])
+
+
+# ---------------------------------------------------------------------------
+# g(): the positivity-ensuring activation of Appendix B (Listing 6)
+# ---------------------------------------------------------------------------
+
+def g(x: jax.Array) -> jax.Array:
+    """g(x) = x + 0.5 for x >= 0 else sigmoid(x) — continuous, positive."""
+    return jnp.where(x >= 0, x + 0.5, jax.nn.sigmoid(x))
+
+
+def log_g(x: jax.Array) -> jax.Array:
+    """log(g(x)) computed stably (Listing 6)."""
+    return jnp.where(x >= 0, jnp.log(jnp.maximum(x, 0) + 0.5),
+                     -jax.nn.softplus(-x))
+
+
+# ---------------------------------------------------------------------------
+# minGRU (Algorithms 1/2 vanilla, 5/6 log-space)
+# ---------------------------------------------------------------------------
+
+def mingru_sequential(k: jax.Array, h_tilde_pre: jax.Array,
+                      h0: jax.Array) -> jax.Array:
+    """Sequential log-space-trained minGRU (Algorithm 5).
+
+    k:           pre-activation of the update gate, z_t = sigmoid(k_t); (B,T,D)
+    h_tilde_pre: pre-activation of the candidate, h~_t = g(pre);        (B,T,D)
+    h0:          initial hidden state (positive);                        (B,D)
+    """
+    z = jax.nn.sigmoid(k)
+    h_tilde = g(h_tilde_pre)
+
+    def step(carry, zh):
+        z_t, ht_t = zh
+        h = (1.0 - z_t) * carry + z_t * ht_t
+        return h, h
+
+    zT = jnp.moveaxis(z, 1, 0)
+    hT = jnp.moveaxis(h_tilde, 1, 0)
+    _, out = jax.lax.scan(step, h0, (zT, hT))
+    return jnp.moveaxis(out, 0, 1)
+
+
+def mingru_log_inputs(k: jax.Array, h_tilde_pre: jax.Array, h0: jax.Array):
+    """The (log_a, log_b, log_h0) triple fed to the log-space scan for minGRU.
+
+    log(1 - z_t) = -softplus(k_t);  log(z_t) = -softplus(-k_t)
+    log(b_t)     = log(z_t) + log(g(pre_t))
+    """
+    log_coeffs = -jax.nn.softplus(k)
+    log_z = -jax.nn.softplus(-k)
+    log_b = log_z + log_g(h_tilde_pre)
+    log_h0 = jnp.log(h0)
+    return log_coeffs, log_b, log_h0
+
+
+def mingru_vanilla_sequential(k: jax.Array, h_tilde: jax.Array,
+                              h0: jax.Array) -> jax.Array:
+    """Vanilla minGRU (Algorithm 1): candidate NOT passed through g()."""
+    z = jax.nn.sigmoid(k)
+
+    def step(carry, zh):
+        z_t, ht_t = zh
+        h = (1.0 - z_t) * carry + z_t * ht_t
+        return h, h
+
+    zT = jnp.moveaxis(z, 1, 0)
+    hT = jnp.moveaxis(h_tilde, 1, 0)
+    _, out = jax.lax.scan(step, h0, (zT, hT))
+    return jnp.moveaxis(out, 0, 1)
+
+
+# ---------------------------------------------------------------------------
+# minLSTM (Algorithms 3/4 vanilla, 7/8 log-space; length-independent scaling)
+# ---------------------------------------------------------------------------
+
+def minlstm_sequential(p: jax.Array, k: jax.Array, h_tilde_pre: jax.Array,
+                       h0: jax.Array) -> jax.Array:
+    """Sequential log-space-trained minLSTM (Algorithm 7).
+
+    p: forget-gate pre-activation, f_t = sigmoid(p_t)
+    k: input-gate  pre-activation, i_t = sigmoid(k_t)
+    Normalized: f' = f/(f+i), i' = i/(f+i);  h~ = g(pre).
+    """
+    f = jax.nn.sigmoid(p)
+    i = jax.nn.sigmoid(k)
+    fp = f / (f + i)
+    ip = i / (f + i)
+    h_tilde = g(h_tilde_pre)
+
+    def step(carry, fih):
+        f_t, i_t, ht_t = fih
+        h = f_t * carry + i_t * ht_t
+        return h, h
+
+    fT = jnp.moveaxis(fp, 1, 0)
+    iT = jnp.moveaxis(ip, 1, 0)
+    hT = jnp.moveaxis(h_tilde, 1, 0)
+    _, out = jax.lax.scan(step, h0, (fT, iT, hT))
+    return jnp.moveaxis(out, 0, 1)
+
+
+def minlstm_log_inputs(p: jax.Array, k: jax.Array, h_tilde_pre: jax.Array,
+                       h0: jax.Array):
+    """(log_a, log_b, log_h0) for minLSTM per Algorithm 8.
+
+    diff      = softplus(-p) - softplus(-k)
+    log f'    = -softplus(diff)
+    log i'    = -softplus(-diff)
+    """
+    diff = jax.nn.softplus(-p) - jax.nn.softplus(-k)
+    log_f = -jax.nn.softplus(diff)
+    log_i = -jax.nn.softplus(-diff)
+    log_b = log_i + log_g(h_tilde_pre)
+    log_h0 = jnp.log(h0)
+    return log_f, log_b, log_h0

@@ -1,0 +1,266 @@
+"""L1 Pallas kernels: chunked parallel scans for `v_t = a_t ⊙ v_{t-1} + b_t`.
+
+Two variants, both used by the paper:
+
+* ``scan_log``    — the numerically-stable log-space scan (Appendix B /
+                    Heinsen 2023).  Inputs are ``log(a)``/``log(b)``; all
+                    values are positive in real space.  Used by minGRU and
+                    minLSTM.
+* ``scan_linear`` — the vanilla real-space scan (Section 2.3).  Coefficients
+                    and values are unconstrained.  Used by the S6-lite
+                    baseline and the vanilla (Appendix A) minRNNs.
+
+Kernel structure (the TPU mapping, run here under ``interpret=True``):
+
+* Sequences are canonicalized to ``(T, N)`` with ``N = batch · hidden`` —
+  the recurrence is elementwise over channels, so batch and hidden fuse
+  into one vectorized axis (TPU: lanes/sublanes of the VPU; there are no
+  matmuls in the scan itself, projections stay in L2 where XLA's `dot`
+  already targets the MXU).
+* ``grid = (N/block_n, T/time_chunk)`` with time innermost: Pallas grids
+  iterate sequentially over the trailing axis, so per-(channel-tile)
+  carries can live in revisited output blocks (the standard accumulator
+  pattern).  Each grid step holds a ``(time_chunk, block_n)`` tile of each
+  operand in VMEM.
+* Within a tile the prefix combine is a **Hillis–Steele doubling ladder**
+  (log2(time_chunk) fully-vectorized steps) — this is the "parallel" in
+  parallel scan; the sequential carry across chunks costs O(T/time_chunk)
+  depth, so total depth is O(T/tc + log tc) instead of BPTT's O(T).
+* VMEM per grid step ≈ 3 · time_chunk · block_n · 4 B (operands + output)
+  plus 2 · block_n · 4 B of carry.  Defaults (128 × 256) ≈ 0.4 MiB — far
+  under the ~16 MiB VMEM budget; see DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# A large-but-finite stand-in for log(0): keeps padded positions inert
+# without generating inf - inf = nan in intermediate expressions.
+LOG_ZERO = -1e30
+
+DEFAULT_BLOCK_N = 256
+DEFAULT_TIME_CHUNK = 128
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+# ---------------------------------------------------------------------------
+# In-kernel prefix ladders (operate on (tc, bn) tiles, axis 0 = time)
+# ---------------------------------------------------------------------------
+
+def _prefix_logaddexp(x: jax.Array, tc: int) -> jax.Array:
+    """Inclusive prefix logsumexp along axis 0 via Hillis–Steele doubling."""
+    acc = x
+    shift = 1
+    while shift < tc:
+        prev = jnp.concatenate(
+            [jnp.full((shift, acc.shape[1]), LOG_ZERO, acc.dtype),
+             acc[:-shift]], axis=0)
+        acc = jnp.logaddexp(acc, prev)
+        shift *= 2
+    return acc
+
+
+def _prefix_affine(a: jax.Array, b: jax.Array, tc: int):
+    """Inclusive prefix composition of affine maps v ↦ a·v + b along axis 0.
+
+    Returns (A, B) with A_t = ∏_{i≤t} a_i and B_t = scan of b (zero init),
+    via the associative composition (a2,b2)∘(a1,b1) = (a1·a2, a2·b1 + b2).
+    """
+    A, B = a, b
+    shift = 1
+    while shift < tc:
+        pad_a = jnp.ones((shift, A.shape[1]), A.dtype)
+        pad_b = jnp.zeros((shift, B.shape[1]), B.dtype)
+        A_prev = jnp.concatenate([pad_a, A[:-shift]], axis=0)
+        B_prev = jnp.concatenate([pad_b, B[:-shift]], axis=0)
+        B = A * B_prev + B
+        A = A * A_prev
+        shift *= 2
+    return A, B
+
+
+# ---------------------------------------------------------------------------
+# Log-space scan kernel
+# ---------------------------------------------------------------------------
+
+def _scan_log_kernel(la_ref, lb_ref, lh0_ref, o_ref, ca_ref, cl_ref, *,
+                     time_chunk: int):
+    """One (channel-tile, time-chunk) grid step of the log-space scan.
+
+    ca_ref: running cumulative log-coefficient A (per channel)
+    cl_ref: running log-state  log(h_{chunk start - 1})-style accumulator,
+            specifically S = log Σ exp(log_b_i - A_i) including log_h0.
+    """
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        ca_ref[...] = jnp.zeros_like(ca_ref)
+        cl_ref[...] = lh0_ref[...]
+
+    carry_a = ca_ref[...]          # (bn,)
+    carry_l = cl_ref[...]          # (bn,)
+
+    la = la_ref[...]               # (tc, bn)
+    lb = lb_ref[...]
+
+    a_star = jnp.cumsum(la, axis=0)              # local Σ log a
+    x = lb - a_star                              # log(b_i / ∏_{≤i} a)
+    p = _prefix_logaddexp(x, time_chunk)         # local prefix lse
+    # global S_t = logaddexp(carry_l, p_t - carry_a)
+    s = jnp.logaddexp(carry_l[None, :], p - carry_a[None, :])
+    log_h = (carry_a[None, :] + a_star) + s
+    o_ref[...] = jnp.exp(log_h)
+
+    ca_ref[...] = carry_a + a_star[-1]
+    cl_ref[...] = s[-1]
+
+
+def scan_log(log_a: jax.Array, log_b: jax.Array, log_h0: jax.Array, *,
+             block_n: int = DEFAULT_BLOCK_N,
+             time_chunk: int = DEFAULT_TIME_CHUNK,
+             interpret: bool = True) -> jax.Array:
+    """Parallel log-space scan.  log_a, log_b: (B, T, D); log_h0: (B, D).
+
+    Returns h (real space, positive): (B, T, D) — h_1..h_T of
+    h_t = a_t ⊙ h_{t-1} + b_t with h_0 = exp(log_h0).
+    """
+    B, T, D = log_a.shape
+    assert log_b.shape == (B, T, D) and log_h0.shape == (B, D)
+
+    # canonicalize to (T, N)
+    la = jnp.moveaxis(log_a, 1, 0).reshape(T, B * D)
+    lb = jnp.moveaxis(log_b, 1, 0).reshape(T, B * D)
+    lh0 = log_h0.reshape(B * D)
+
+    N = B * D
+    tc = min(time_chunk, _ceil_to(T, 1))
+    tc = 1 << max(0, math.ceil(math.log2(min(tc, T))))  # power of two ≤ chunk
+    bn = min(block_n, N)
+
+    Tp, Np = _ceil_to(T, tc), _ceil_to(N, bn)
+    la = jnp.pad(la, ((0, Tp - T), (0, Np - N)))               # log a = 0 ⇒ a = 1
+    lb = jnp.pad(lb, ((0, Tp - T), (0, Np - N)),
+                 constant_values=LOG_ZERO)                     # b = 0
+    lh0 = jnp.pad(lh0, (0, Np - N))
+
+    grid = (Np // bn, Tp // tc)
+    out_shapes = [
+        jax.ShapeDtypeStruct((Tp, Np), la.dtype),   # h
+        jax.ShapeDtypeStruct((Np,), la.dtype),      # carry A
+        jax.ShapeDtypeStruct((Np,), la.dtype),      # carry S
+    ]
+    h, _, _ = pl.pallas_call(
+        functools.partial(_scan_log_kernel, time_chunk=tc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tc, bn), lambda c, t: (t, c)),
+            pl.BlockSpec((tc, bn), lambda c, t: (t, c)),
+            pl.BlockSpec((bn,), lambda c, t: (c,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tc, bn), lambda c, t: (t, c)),
+            pl.BlockSpec((bn,), lambda c, t: (c,)),
+            pl.BlockSpec((bn,), lambda c, t: (c,)),
+        ],
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(la, lb, lh0)
+
+    h = h[:T, :N].reshape(T, B, D)
+    return jnp.moveaxis(h, 0, 1)
+
+
+# ---------------------------------------------------------------------------
+# Real-space (vanilla) scan kernel
+# ---------------------------------------------------------------------------
+
+def _scan_linear_kernel(a_ref, b_ref, h0_ref, o_ref, ch_ref, *,
+                        time_chunk: int):
+    """One grid step of the vanilla scan: h = A_t · carry + B_t."""
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        ch_ref[...] = h0_ref[...]
+
+    carry = ch_ref[...]                       # (bn,)
+    A, Bv = _prefix_affine(a_ref[...], b_ref[...], time_chunk)
+    h = A * carry[None, :] + Bv
+    o_ref[...] = h
+    ch_ref[...] = h[-1]
+
+
+def scan_linear(a: jax.Array, b: jax.Array, h0: jax.Array, *,
+                block_n: int = DEFAULT_BLOCK_N,
+                time_chunk: int = DEFAULT_TIME_CHUNK,
+                interpret: bool = True) -> jax.Array:
+    """Parallel real-space scan.  a, b: (B, T, D); h0: (B, D) → h: (B, T, D)."""
+    B, T, D = a.shape
+    assert b.shape == (B, T, D) and h0.shape == (B, D)
+
+    at = jnp.moveaxis(a, 1, 0).reshape(T, B * D)
+    bt = jnp.moveaxis(b, 1, 0).reshape(T, B * D)
+    h0f = h0.reshape(B * D)
+
+    N = B * D
+    tc = 1 << max(0, math.ceil(math.log2(min(time_chunk, T))))
+    bn = min(block_n, N)
+    Tp, Np = _ceil_to(T, tc), _ceil_to(N, bn)
+    at = jnp.pad(at, ((0, Tp - T), (0, Np - N)), constant_values=1.0)
+    bt = jnp.pad(bt, ((0, Tp - T), (0, Np - N)))
+    h0f = jnp.pad(h0f, (0, Np - N))
+
+    grid = (Np // bn, Tp // tc)
+    out_shapes = [
+        jax.ShapeDtypeStruct((Tp, Np), at.dtype),
+        jax.ShapeDtypeStruct((Np,), at.dtype),
+    ]
+    h, _ = pl.pallas_call(
+        functools.partial(_scan_linear_kernel, time_chunk=tc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tc, bn), lambda c, t: (t, c)),
+            pl.BlockSpec((tc, bn), lambda c, t: (t, c)),
+            pl.BlockSpec((bn,), lambda c, t: (c,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tc, bn), lambda c, t: (t, c)),
+            pl.BlockSpec((bn,), lambda c, t: (c,)),
+        ],
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(at, bt, h0f)
+
+    h = h[:T, :N].reshape(T, B, D)
+    return jnp.moveaxis(h, 0, 1)
+
+
+# ---------------------------------------------------------------------------
+# VMEM / roofline estimation (used by DESIGN.md §Perf and tests)
+# ---------------------------------------------------------------------------
+
+def vmem_bytes(block_n: int = DEFAULT_BLOCK_N,
+               time_chunk: int = DEFAULT_TIME_CHUNK,
+               n_operands: int = 3, dtype_bytes: int = 4) -> int:
+    """Per-grid-step VMEM footprint of the scan kernel (operands + output +
+    carries + one ladder temp)."""
+    tile = time_chunk * block_n * dtype_bytes
+    carries = 2 * block_n * dtype_bytes
+    return (n_operands + 1) * tile + carries
+
+
+def depth_estimate(seq_len: int, time_chunk: int = DEFAULT_TIME_CHUNK) -> int:
+    """Critical-path depth of the chunked scan (vs. seq_len for BPTT)."""
+    tc = 1 << max(0, math.ceil(math.log2(min(time_chunk, seq_len))))
+    chunks = _ceil_to(seq_len, tc) // tc
+    return chunks + int(math.log2(tc))

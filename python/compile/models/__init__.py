@@ -1,0 +1,6 @@
+"""L2: JAX model definitions (paper architecture + baselines)."""
+
+from . import (layers, mingru, minlstm, gru, lstm, s6lite, transformer,
+               backbone)  # noqa: F401
+from .backbone import (MIXERS, init, init_state, apply_parallel,
+                       apply_step, with_defaults)  # noqa: F401

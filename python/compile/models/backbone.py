@@ -1,0 +1,162 @@
+"""Backbone: embeds inputs, stacks residual blocks around a mixer, projects
+to the output vocabulary — the paper's minimalistic architecture (App. C.2):
+
+    x → Embed [+pos if transformer]
+      → N × [ RMSNorm → (Conv4) → mixer → +residual
+              (RMSNorm → MLP → +residual) ]
+      → RMSNorm → Head
+
+Config keys (a plain dict, mirrored in artifacts/manifest.json):
+    kind        'mingru' | 'minlstm' | 'gru' | 'lstm' | 's6' | 'transformer'
+    n_layers    blocks
+    d_model     residual width
+    expansion   α: mixer hidden d_h = α·d_model (ignored by transformer)
+    vocab_in    input vocabulary (None → continuous input of `input_dim`)
+    input_dim   continuous feature width (RL)
+    vocab_out   output head width (classes / vocab / action-dim)
+    conv, mlp   block components (Table 6 ablation switches)
+    mlp_mult    MLP expansion
+    dropout     dropout rate (applied to residual branches)
+    max_len     maximum sequence length (positional table / KV cache)
+    n_heads     attention heads
+    forget_bias minLSTM forget-gate bias init (Figure 5)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers, mingru, minlstm, gru, lstm, s6lite, transformer
+
+MIXERS = {
+    "mingru": mingru,
+    "minlstm": minlstm,
+    "gru": gru,
+    "lstm": lstm,
+    "s6": s6lite,
+    "transformer": transformer,
+}
+
+DEFAULTS = dict(expansion=1, conv=False, mlp=False, mlp_mult=4, dropout=0.0,
+                n_heads=4, forget_bias=0.0, vocab_in=None, input_dim=None)
+
+
+def with_defaults(cfg: dict) -> dict:
+    out = dict(DEFAULTS)
+    out.update(cfg)
+    return out
+
+
+def init(key, cfg: dict) -> dict:
+    cfg = with_defaults(cfg)
+    mixer = MIXERS[cfg["kind"]]
+    d = cfg["d_model"]
+    n = cfg["n_layers"]
+    keys = jax.random.split(key, 3 * n + 4)
+
+    params: dict = {}
+    if cfg["vocab_in"] is not None:
+        params["embed"] = layers.embedding_init(keys[0], cfg["vocab_in"], d)
+    else:
+        params["in_proj"] = layers.dense_init(keys[0], cfg["input_dim"], d)
+    if cfg["kind"] == "transformer":
+        params["pos"] = layers.embedding_init(keys[1], cfg["max_len"], d)
+
+    blocks = []
+    for i in range(n):
+        kb = keys[2 + 3 * i:5 + 3 * i]
+        block = {"ln1": layers.rmsnorm_init(d),
+                 "mixer": mixer.init(kb[0], cfg)}
+        if cfg["conv"]:
+            block["conv"] = layers.conv4_init(kb[1], d)
+        if cfg["mlp"]:
+            block["ln2"] = layers.rmsnorm_init(d)
+            block["mlp"] = layers.mlp_init(kb[2], d, cfg["mlp_mult"])
+        blocks.append(block)
+    params["blocks"] = blocks
+    params["ln_f"] = layers.rmsnorm_init(d)
+    params["head"] = layers.dense_init(keys[-1], d, cfg["vocab_out"],
+                                       scale=0.02)
+    return params
+
+
+def init_state(cfg: dict, batch: int) -> dict:
+    cfg = with_defaults(cfg)
+    mixer = MIXERS[cfg["kind"]]
+    layers_state = []
+    for _ in range(cfg["n_layers"]):
+        st = {"mixer": mixer.init_state(cfg, batch)}
+        if cfg["conv"]:
+            st["conv"] = layers.conv4_state(batch, cfg["d_model"])
+        layers_state.append(st)
+    return {"pos": jnp.zeros((), jnp.int32), "layers": layers_state}
+
+
+def _embed_in(params: dict, cfg: dict, x: jax.Array) -> jax.Array:
+    if cfg["vocab_in"] is not None:
+        return layers.embed(params["embed"], x)
+    return layers.dense(params["in_proj"], x)
+
+
+def apply_parallel(params: dict, cfg: dict, x: jax.Array, *,
+                   train: bool = False, rng: jax.Array | None = None):
+    """Parallel (training) mode.  x: (B, T) int32 or (B, T, F) float32.
+
+    Returns (logits: (B, T, vocab_out), final decode state)."""
+    cfg = with_defaults(cfg)
+    mixer = MIXERS[cfg["kind"]]
+    h = _embed_in(params, cfg, x)
+    B, T = h.shape[0], h.shape[1]
+    if cfg["kind"] == "transformer":
+        h = h + params["pos"]["w"][None, :T, :]
+
+    if rng is None:
+        rng = jax.random.PRNGKey(0)
+
+    states = []
+    for i, block in enumerate(params["blocks"]):
+        u = layers.rmsnorm(block["ln1"], h)
+        st: dict = {}
+        if cfg["conv"]:
+            st["conv"] = layers.conv4_final_state(u)
+            u = layers.conv4(block["conv"], u)
+        y, mstate = mixer.parallel(block["mixer"], cfg, u)
+        st["mixer"] = mstate
+        h = h + layers.dropout(jax.random.fold_in(rng, 2 * i), y,
+                               cfg["dropout"], train)
+        if cfg["mlp"]:
+            z = layers.mlp(block["mlp"], layers.rmsnorm(block["ln2"], h))
+            h = h + layers.dropout(jax.random.fold_in(rng, 2 * i + 1), z,
+                                   cfg["dropout"], train)
+        states.append(st)
+
+    logits = layers.dense(params["head"], layers.rmsnorm(params["ln_f"], h))
+    state = {"pos": jnp.asarray(T, jnp.int32), "layers": states}
+    return logits, state
+
+
+def apply_step(params: dict, cfg: dict, x_t: jax.Array, state: dict):
+    """Sequential (decode) mode.  x_t: (B,) int32 or (B, F) float32.
+
+    Returns (logits_t: (B, vocab_out), new state)."""
+    cfg = with_defaults(cfg)
+    mixer = MIXERS[cfg["kind"]]
+    h = _embed_in(params, cfg, x_t)
+    if cfg["kind"] == "transformer":
+        h = h + jnp.take(params["pos"]["w"], state["pos"], axis=0)
+
+    new_layers = []
+    for block, st in zip(params["blocks"], state["layers"]):
+        u = layers.rmsnorm(block["ln1"], h)
+        new_st: dict = {}
+        if cfg["conv"]:
+            u, new_st["conv"] = layers.conv4_step(block["conv"], st["conv"], u)
+        y, new_st["mixer"] = mixer.step(block["mixer"], cfg, u, st["mixer"])
+        h = h + y
+        if cfg["mlp"]:
+            h = h + layers.mlp(block["mlp"], layers.rmsnorm(block["ln2"], h))
+        new_layers.append(new_st)
+
+    logits = layers.dense(params["head"], layers.rmsnorm(params["ln_f"], h))
+    return logits, {"pos": state["pos"] + 1, "layers": new_layers}

@@ -1,0 +1,71 @@
+"""Traditional GRU mixer (Cho et al., 2014; Section 2.2) — the sequential
+BPTT baseline of Figures 1/3/4.
+
+Gates depend on h_{t-1}, so both training and inference run a `lax.scan`
+over time (linear depth — this is precisely the bottleneck the paper's
+minimal models remove).  Interface matches the other mixers; parallel()
+here *is* the sequential rollout.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+
+
+def d_hidden(cfg: dict) -> int:
+    return int(cfg["d_model"] * cfg.get("expansion", 1))
+
+
+def init(key, cfg: dict) -> dict:
+    d = cfg["d_model"]
+    dh = d_hidden(cfg)
+    keys = jax.random.split(key, 4)
+    # Linear_{d_h}([x_t, h_{t-1}]) for each of z, r, h~ — implemented as a
+    # single fused (d + d_h) → 3·d_h projection like PyTorch's GRU.
+    return {
+        "wx": layers.dense_init(keys[0], d, 3 * dh),
+        "wh": layers.dense_init(keys[1], dh, 3 * dh),
+        "down": layers.dense_init(keys[2], dh, d),
+    }
+
+
+def init_state(cfg: dict, batch: int) -> jax.Array:
+    return jnp.zeros((batch, d_hidden(cfg)), jnp.float32)
+
+
+def _cell(p: dict, dh: int, x_proj_t: jax.Array, h: jax.Array) -> jax.Array:
+    """One GRU step given the precomputed input projection (B, 3·dh)."""
+    hz = h @ p["wh"]["w"][:, :dh] + p["wh"]["b"][:dh]
+    hr = h @ p["wh"]["w"][:, dh:2 * dh] + p["wh"]["b"][dh:2 * dh]
+    z = jax.nn.sigmoid(x_proj_t[..., :dh] + hz)
+    r = jax.nn.sigmoid(x_proj_t[..., dh:2 * dh] + hr)
+    hh = (r * h) @ p["wh"]["w"][:, 2 * dh:] + p["wh"]["b"][2 * dh:]
+    h_tilde = jnp.tanh(x_proj_t[..., 2 * dh:] + hh)
+    return (1.0 - z) * h + z * h_tilde
+
+
+def parallel(p: dict, cfg: dict, x: jax.Array, h0: jax.Array | None = None):
+    """Sequential rollout over (B, T, d) — BPTT when differentiated."""
+    B = x.shape[0]
+    dh = d_hidden(cfg)
+    if h0 is None:
+        h0 = init_state(cfg, B)
+    x_proj = layers.dense(p["wx"], x)                     # (B, T, 3·dh)
+
+    def f(h, xp_t):
+        h_new = _cell(p, dh, xp_t, h)
+        return h_new, h_new
+
+    _, hs = jax.lax.scan(f, h0, jnp.moveaxis(x_proj, 1, 0))
+    hs = jnp.moveaxis(hs, 0, 1)
+    return layers.dense(p["down"], hs), hs[:, -1, :]
+
+
+def step(p: dict, cfg: dict, x_t: jax.Array, h: jax.Array):
+    dh = d_hidden(cfg)
+    x_proj = layers.dense(p["wx"], x_t)
+    h_new = _cell(p, dh, x_proj, h)
+    return layers.dense(p["down"], h_new), h_new

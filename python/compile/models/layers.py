@@ -1,0 +1,128 @@
+"""Shared neural-net building blocks (pure functional, dict params).
+
+The paper's architecture (Appendix C.2): pre-norm residual blocks of
+``[RMSNorm → Conv4 → mixer]`` optionally followed by ``[RMSNorm → MLP]``,
+with a down-projection inside each mixer for expanded hidden states.
+
+Everything is a plain function over a dict-of-arrays parameter tree so the
+whole model lowers cleanly to a single HLO module.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# dense / embedding
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, *, scale: float | None = None,
+               bias: float = 0.0) -> dict:
+    """LeCun-normal weights (PyTorch-default-like), constant bias."""
+    if scale is None:
+        scale = 1.0 / math.sqrt(d_in)
+    w = jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+    return {"w": w, "b": jnp.full((d_out,), bias, jnp.float32)}
+
+
+def dense(p: dict, x: jax.Array) -> jax.Array:
+    return x @ p["w"] + p["b"]
+
+
+def embedding_init(key, vocab: int, d: int) -> dict:
+    return {"w": jax.random.normal(key, (vocab, d), jnp.float32) * 0.02}
+
+
+def embed(p: dict, ids: jax.Array) -> jax.Array:
+    return jnp.take(p["w"], ids, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# normalization
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int) -> dict:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * p["scale"]
+
+
+# ---------------------------------------------------------------------------
+# temporal depthwise causal conv, kernel size 4 (the Mamba/xLSTM "Conv4")
+# ---------------------------------------------------------------------------
+
+CONV_K = 4
+
+
+def conv4_init(key, d: int, k: int = CONV_K) -> dict:
+    w = jax.random.normal(key, (k, d), jnp.float32) / math.sqrt(k)
+    return {"w": w, "b": jnp.zeros((d,), jnp.float32)}
+
+
+def conv4(p: dict, x: jax.Array) -> jax.Array:
+    """Causal depthwise conv over time.  x: (B, T, D) → (B, T, D).
+
+    y_t = b + Σ_{j=0..k-1} w_j ⊙ x_{t-k+1+j}  (zero padding on the left).
+    Implemented as k shifted adds — cheap, fusion-friendly, and exactly
+    matches the step-mode ring buffer.
+    """
+    k = p["w"].shape[0]
+    B, T, D = x.shape
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    y = jnp.zeros_like(x) + p["b"]
+    for j in range(k):
+        y = y + xp[:, j:j + T, :] * p["w"][j]
+    return jax.nn.silu(y)
+
+
+def conv4_step(p: dict, buf: jax.Array, x_t: jax.Array):
+    """Step mode.  buf: (B, k-1, D) previous inputs; x_t: (B, D).
+
+    Returns (y_t, new_buf)."""
+    k = p["w"].shape[0]
+    window = jnp.concatenate([buf, x_t[:, None, :]], axis=1)  # (B, k, D)
+    y = jnp.einsum("bkd,kd->bd", window, p["w"]) + p["b"]
+    return jax.nn.silu(y), window[:, 1:, :]
+
+
+def conv4_state(batch: int, d: int, k: int = CONV_K) -> jax.Array:
+    return jnp.zeros((batch, k - 1, d), jnp.float32)
+
+
+def conv4_final_state(x: jax.Array, k: int = CONV_K) -> jax.Array:
+    """The buffer a parallel pass leaves behind: last k-1 inputs."""
+    B, T, D = x.shape
+    xp = jnp.pad(x, ((0, 0), (max(0, (k - 1) - T), 0), (0, 0)))
+    return xp[:, -(k - 1):, :]
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d: int, mult: int = 4) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {"up": dense_init(k1, d, mult * d),
+            "down": dense_init(k2, mult * d, d)}
+
+
+def mlp(p: dict, x: jax.Array) -> jax.Array:
+    return dense(p["down"], jax.nn.gelu(dense(p["up"], x)))
+
+
+# ---------------------------------------------------------------------------
+# dropout (deterministic given a key; `train` is a static flag)
+# ---------------------------------------------------------------------------
+
+def dropout(key, x: jax.Array, rate: float, train: bool) -> jax.Array:
+    if not train or rate <= 0.0:
+        return x
+    keep = jax.random.bernoulli(key, 1.0 - rate, x.shape)
+    return jnp.where(keep, x / (1.0 - rate), 0.0)

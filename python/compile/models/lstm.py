@@ -1,0 +1,67 @@
+"""Traditional LSTM mixer (Hochreiter & Schmidhuber, 1997; Section 2.1) —
+the second sequential BPTT baseline.  State is (h, c)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+
+
+def d_hidden(cfg: dict) -> int:
+    return int(cfg["d_model"] * cfg.get("expansion", 1))
+
+
+def init(key, cfg: dict) -> dict:
+    d = cfg["d_model"]
+    dh = d_hidden(cfg)
+    keys = jax.random.split(key, 3)
+    # Fused (x, h) → 4·dh projections: order [i, f, o, c~] like PyTorch.
+    return {
+        "wx": layers.dense_init(keys[0], d, 4 * dh),
+        "wh": layers.dense_init(keys[1], dh, 4 * dh),
+        "down": layers.dense_init(keys[2], dh, d),
+    }
+
+
+def init_state(cfg: dict, batch: int) -> dict:
+    dh = d_hidden(cfg)
+    return {"h": jnp.zeros((batch, dh), jnp.float32),
+            "c": jnp.zeros((batch, dh), jnp.float32)}
+
+
+def _cell(p: dict, dh: int, x_proj_t: jax.Array, h: jax.Array, c: jax.Array):
+    gates = x_proj_t + h @ p["wh"]["w"] + p["wh"]["b"]
+    i = jax.nn.sigmoid(gates[..., :dh])
+    f = jax.nn.sigmoid(gates[..., dh:2 * dh])
+    o = jax.nn.sigmoid(gates[..., 2 * dh:3 * dh])
+    c_tilde = jnp.tanh(gates[..., 3 * dh:])
+    c_new = f * c + i * c_tilde
+    h_new = o * jnp.tanh(c_new)
+    return h_new, c_new
+
+
+def parallel(p: dict, cfg: dict, x: jax.Array, h0: dict | None = None):
+    B = x.shape[0]
+    dh = d_hidden(cfg)
+    if h0 is None:
+        h0 = init_state(cfg, B)
+    x_proj = layers.dense(p["wx"], x)
+
+    def f(carry, xp_t):
+        h, c = carry
+        h_new, c_new = _cell(p, dh, xp_t, h, c)
+        return (h_new, c_new), h_new
+
+    (hT, cT), hs = jax.lax.scan(f, (h0["h"], h0["c"]),
+                                jnp.moveaxis(x_proj, 1, 0))
+    hs = jnp.moveaxis(hs, 0, 1)
+    return layers.dense(p["down"], hs), {"h": hT, "c": cT}
+
+
+def step(p: dict, cfg: dict, x_t: jax.Array, state: dict):
+    dh = d_hidden(cfg)
+    x_proj = layers.dense(p["wx"], x_t)
+    h_new, c_new = _cell(p, dh, x_proj, state["h"], state["c"])
+    return layers.dense(p["down"], h_new), {"h": h_new, "c": c_new}

@@ -1,0 +1,60 @@
+"""minGRU mixer (Section 3.1) — parallel mode via the fused Pallas kernel,
+sequential mode (Algorithm 5) for decode.
+
+Parameters: O(2·d_h·d_x) for the gates plus the down-projection for the
+expanded state (Appendix C.2), vs GRU's O(3·d_h(d_x+d_h)).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ref
+from ..kernels.vjp import mingru_scan_ad
+from . import layers
+
+# The initial hidden state must be positive for the log-space formulation;
+# g(0) = 0.5 is the natural "zero-input" resting value.
+H0_VALUE = 0.5
+
+
+def d_hidden(cfg: dict) -> int:
+    return int(cfg["d_model"] * cfg.get("expansion", 1))
+
+
+def init(key, cfg: dict) -> dict:
+    d = cfg["d_model"]
+    dh = d_hidden(cfg)
+    kz, kh, kd = jax.random.split(key, 3)
+    return {
+        "linear_z": layers.dense_init(kz, d, dh),
+        "linear_h": layers.dense_init(kh, d, dh),
+        "down": layers.dense_init(kd, dh, d),
+    }
+
+
+def init_state(cfg: dict, batch: int) -> jax.Array:
+    return jnp.full((batch, d_hidden(cfg)), H0_VALUE, jnp.float32)
+
+
+def parallel(p: dict, cfg: dict, x: jax.Array, h0: jax.Array | None = None):
+    """x: (B, T, d) → (y: (B, T, d), h_T: (B, d_h))."""
+    B = x.shape[0]
+    if h0 is None:
+        h0 = init_state(cfg, B)
+    k = layers.dense(p["linear_z"], x)
+    pre = layers.dense(p["linear_h"], x)
+    h = mingru_scan_ad(k, pre, h0)
+    return layers.dense(p["down"], h), h[:, -1, :]
+
+
+def step(p: dict, cfg: dict, x_t: jax.Array, h: jax.Array):
+    """x_t: (B, d), h: (B, d_h) → (y_t: (B, d), h': (B, d_h)).
+
+    Algorithm 5 verbatim: z = σ(k); h' = (1-z)h + z·g(pre)."""
+    k = layers.dense(p["linear_z"], x_t)
+    pre = layers.dense(p["linear_h"], x_t)
+    z = jax.nn.sigmoid(k)
+    h_new = (1.0 - z) * h + z * ref.g(pre)
+    return layers.dense(p["down"], h_new), h_new

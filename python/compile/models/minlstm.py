@@ -1,0 +1,61 @@
+"""minLSTM mixer (Section 3.2, length-independence scaling) — parallel mode
+via the fused Pallas kernel, sequential mode (Algorithm 7) for decode.
+
+`forget_bias` (Figure 5 / Appendix D.4): a constant added to the forget-gate
+pre-activation bias at init, pushing f_t → 1 early in training to promote
+information retention.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ref
+from ..kernels.vjp import minlstm_scan_ad
+from . import layers
+
+H0_VALUE = 0.5
+
+
+def d_hidden(cfg: dict) -> int:
+    return int(cfg["d_model"] * cfg.get("expansion", 1))
+
+
+def init(key, cfg: dict) -> dict:
+    d = cfg["d_model"]
+    dh = d_hidden(cfg)
+    kf, ki, kh, kd = jax.random.split(key, 4)
+    fb = float(cfg.get("forget_bias", 0.0))
+    return {
+        "linear_f": layers.dense_init(kf, d, dh, bias=fb),
+        "linear_i": layers.dense_init(ki, d, dh),
+        "linear_h": layers.dense_init(kh, d, dh),
+        "down": layers.dense_init(kd, dh, d),
+    }
+
+
+def init_state(cfg: dict, batch: int) -> jax.Array:
+    return jnp.full((batch, d_hidden(cfg)), H0_VALUE, jnp.float32)
+
+
+def parallel(p: dict, cfg: dict, x: jax.Array, h0: jax.Array | None = None):
+    """x: (B, T, d) → (y: (B, T, d), h_T: (B, d_h))."""
+    B = x.shape[0]
+    if h0 is None:
+        h0 = init_state(cfg, B)
+    pf = layers.dense(p["linear_f"], x)
+    ki = layers.dense(p["linear_i"], x)
+    pre = layers.dense(p["linear_h"], x)
+    h = minlstm_scan_ad(pf, ki, pre, h0)
+    return layers.dense(p["down"], h), h[:, -1, :]
+
+
+def step(p: dict, cfg: dict, x_t: jax.Array, h: jax.Array):
+    """Algorithm 7: f' = f/(f+i), i' = i/(f+i); h' = f'h + i'·g(pre)."""
+    f = jax.nn.sigmoid(layers.dense(p["linear_f"], x_t))
+    i = jax.nn.sigmoid(layers.dense(p["linear_i"], x_t))
+    pre = layers.dense(p["linear_h"], x_t)
+    denom = f + i
+    h_new = (f / denom) * h + (i / denom) * ref.g(pre)
+    return layers.dense(p["down"], h_new), h_new

@@ -1,0 +1,95 @@
+"""Causal multi-head self-attention mixer — the Transformer baseline of
+Figure 2 (nanoGPT-style).  Positional information is added by the backbone
+(learned absolute embeddings).
+
+Step mode keeps a fixed-capacity KV cache of length ``cfg["max_len"]`` so the
+decode executable has static shapes; positions beyond the write cursor are
+masked out.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+
+NEG_INF = -1e30
+
+
+def init(key, cfg: dict) -> dict:
+    d = cfg["d_model"]
+    k1, k2 = jax.random.split(key)
+    return {
+        "qkv": layers.dense_init(k1, d, 3 * d),
+        "proj": layers.dense_init(k2, d, d, scale=0.02),
+    }
+
+
+def init_state(cfg: dict, batch: int) -> dict:
+    d, L = cfg["d_model"], cfg["max_len"]
+    return {
+        "k": jnp.zeros((batch, L, d), jnp.float32),
+        "v": jnp.zeros((batch, L, d), jnp.float32),
+        # number of valid cache entries (scalar; shared across the batch)
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def _split_heads(x: jax.Array, n_heads: int) -> jax.Array:
+    B, T, D = x.shape
+    return x.reshape(B, T, n_heads, D // n_heads).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    B, H, T, Dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(B, T, H * Dh)
+
+
+def parallel(p: dict, cfg: dict, x: jax.Array, state0: dict | None = None):
+    """Full causal attention over (B, T, d).  Returns (y, prefilled cache)."""
+    B, T, D = x.shape
+    H = cfg.get("n_heads", 4)
+    qkv = layers.dense(p["qkv"], x)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    qh, kh, vh = (_split_heads(t, H) for t in (q, k, v))
+    scores = jnp.einsum("bhtd,bhsd->bhts", qh, kh) / math.sqrt(D // H)
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    scores = jnp.where(mask, scores, NEG_INF)
+    att = jax.nn.softmax(scores, axis=-1)
+    y = layers.dense(p["proj"], _merge_heads(jnp.einsum("bhts,bhsd->bhtd",
+                                                        att, vh)))
+    # prefill the decode cache
+    L = cfg["max_len"]
+    kc = jnp.zeros((B, L, D), jnp.float32).at[:, :T].set(k)
+    vc = jnp.zeros((B, L, D), jnp.float32).at[:, :T].set(v)
+    state = {"k": kc, "v": vc, "len": jnp.asarray(T, jnp.int32)}
+    return y, state
+
+
+def step(p: dict, cfg: dict, x_t: jax.Array, state: dict):
+    """Single-token decode against the KV cache.  x_t: (B, d)."""
+    B, D = x_t.shape
+    H = cfg.get("n_heads", 4)
+    L = cfg["max_len"]
+    qkv = layers.dense(p["qkv"], x_t)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    pos = state["len"]
+    kc = jax.lax.dynamic_update_slice(state["k"], k[:, None, :],
+                                      (0, pos, 0))
+    vc = jax.lax.dynamic_update_slice(state["v"], v[:, None, :],
+                                      (0, pos, 0))
+
+    qh = q.reshape(B, H, D // H)
+    kh = kc.reshape(B, L, H, D // H).transpose(0, 2, 1, 3)
+    vh = vc.reshape(B, L, H, D // H).transpose(0, 2, 1, 3)
+    scores = jnp.einsum("bhd,bhsd->bhs", qh, kh) / math.sqrt(D // H)
+    valid = jnp.arange(L) <= pos
+    scores = jnp.where(valid[None, None, :], scores, NEG_INF)
+    att = jax.nn.softmax(scores, axis=-1)
+    y = jnp.einsum("bhs,bhsd->bhd", att, vh).reshape(B, D)
+    y = layers.dense(p["proj"], y)
+    return y, {"k": kc, "v": vc, "len": pos + 1}

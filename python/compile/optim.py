@@ -1,0 +1,70 @@
+"""Pure-JAX AdamW with global-norm gradient clipping.
+
+No optax in this environment, so the optimizer is implemented directly —
+which also keeps the exported train-step HLO fully self-contained: the Rust
+coordinator passes a learning-rate scalar and never sees a gradient.
+
+State layout: {"step": i32 scalar, "m": tree-like params, "v": tree-like
+params}. The flattened (m, v) leaves are exported alongside the parameters
+so the coordinator can checkpoint/restore optimizer state too.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init(params) -> dict:
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"step": jnp.zeros((), jnp.int32),
+            "m": zeros,
+            "v": jax.tree_util.tree_map(jnp.zeros_like, params)}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+def adamw_update(params, grads, opt_state: dict, lr: jax.Array, *,
+                 betas=(0.9, 0.999), eps: float = 1e-8,
+                 weight_decay: float = 0.0, clip_norm: float = 0.0):
+    """One AdamW step.  `lr` is a traced scalar (host-driven schedule).
+
+    Returns (new_params, new_opt_state, grad_norm)."""
+    b1, b2 = betas
+    if clip_norm and clip_norm > 0:
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+    else:
+        gnorm = global_norm(grads)
+
+    step = opt_state["step"] + 1
+    sf = step.astype(jnp.float32)
+    bc1 = 1.0 - jnp.power(b1, sf)
+    bc2 = 1.0 - jnp.power(b2, sf)
+
+    def upd(p, g, m, v):
+        m_new = b1 * m + (1.0 - b1) * g
+        v_new = b2 * v + (1.0 - b2) * jnp.square(g)
+        m_hat = m_new / bc1
+        v_hat = v_new / bc2
+        p_new = p - lr * (m_hat / (jnp.sqrt(v_hat) + eps) + weight_decay * p)
+        return p_new, m_new, v_new
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(opt_state["m"])
+    flat_v = jax.tree_util.tree_leaves(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v
+           in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"step": step, "m": new_m, "v": new_v}, gnorm

@@ -1,0 +1,132 @@
+"""Task graphs: loss functions and the train / eval / decode step builders
+that `aot.py` lowers to HLO.
+
+Two task families cover every experiment in the paper:
+
+* ``masked_ce``  — masked cross-entropy over discrete targets.  Subsumes
+  language modelling (mask = all ones), Selective Copying (mask = the 16
+  answer positions), Chomsky transduction (mask = answer span) and LRA
+  classification (mask = final position, targets = class id).
+* ``masked_mse`` — masked mean-squared error over continuous targets
+  (Decision-Transformer-style action regression for the RL experiments).
+
+Exported signatures (flat, see aot.py):
+    train_step(params, opt, tokens/feats, targets, mask, lr, drop_seed)
+        → (params', opt', loss, grad_norm)
+    eval_step(params, tokens/feats, targets, mask)
+        → (loss, token_acc, seq_acc)        (ce)
+        → (loss,)                            (mse)
+    decode_step(params, token/feat, state) → (logits, state')
+    prefill(params, tokens/feats) → (logits, state)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .models import backbone
+from . import optim
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def masked_ce_loss(logits: jax.Array, targets: jax.Array,
+                   mask: jax.Array) -> jax.Array:
+    """logits: (B,T,V); targets: (B,T) int32; mask: (B,T) float32."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def masked_ce_metrics(logits, targets, mask):
+    """(loss, token_acc, seq_acc): seq_acc counts an example correct only if
+    *every* masked position is correct — the Selective-Copy / Chomsky
+    accuracy criterion."""
+    loss = masked_ce_loss(logits, targets, mask)
+    pred = jnp.argmax(logits, axis=-1)
+    correct = (pred == targets).astype(jnp.float32) * mask
+    token_acc = jnp.sum(correct) / jnp.maximum(jnp.sum(mask), 1.0)
+    per_seq_ok = jnp.sum(correct, axis=1) >= jnp.sum(mask, axis=1) - 1e-6
+    has_mask = jnp.sum(mask, axis=1) > 0
+    seq_acc = jnp.sum(jnp.where(has_mask, per_seq_ok.astype(jnp.float32), 0.0)
+                      ) / jnp.maximum(jnp.sum(has_mask.astype(jnp.float32)),
+                                      1.0)
+    return loss, token_acc, seq_acc
+
+
+def masked_mse_loss(pred: jax.Array, targets: jax.Array,
+                    mask: jax.Array) -> jax.Array:
+    """pred/targets: (B,T,A); mask: (B,T)."""
+    se = jnp.sum(jnp.square(pred - targets), axis=-1)
+    return jnp.sum(se * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# step builders (close over a static cfg)
+# ---------------------------------------------------------------------------
+
+def make_loss_fn(cfg: dict, task: str, train: bool):
+    def loss_fn(params, x, targets, mask, rng):
+        logits, _ = backbone.apply_parallel(params, cfg, x, train=train,
+                                            rng=rng)
+        if task == "masked_ce":
+            return masked_ce_loss(logits, targets, mask)
+        return masked_mse_loss(logits, targets, mask)
+    return loss_fn
+
+
+def make_train_step(cfg: dict, task: str, *, weight_decay: float = 0.0,
+                    clip_norm: float = 1.0):
+    loss_fn = make_loss_fn(cfg, task, train=True)
+
+    def train_step(params, opt_state, x, targets, mask, lr, drop_seed):
+        rng = jax.random.PRNGKey(drop_seed.astype(jnp.uint32))
+        loss, grads = jax.value_and_grad(loss_fn)(params, x, targets, mask,
+                                                  rng)
+        new_params, new_opt, gnorm = optim.adamw_update(
+            params, grads, opt_state, lr,
+            weight_decay=weight_decay, clip_norm=clip_norm)
+        return new_params, new_opt, loss, gnorm
+
+    return train_step
+
+
+def make_eval_step(cfg: dict, task: str):
+    def eval_step(params, x, targets, mask):
+        logits, _ = backbone.apply_parallel(params, cfg, x, train=False)
+        if task == "masked_ce":
+            return masked_ce_metrics(logits, targets, mask)
+        return (masked_mse_loss(logits, targets, mask),)
+    return eval_step
+
+
+def make_decode_step(cfg: dict):
+    def decode_step(params, x_t, state):
+        return backbone.apply_step(params, cfg, x_t, state)
+    return decode_step
+
+
+def make_prefill(cfg: dict):
+    def prefill(params, x):
+        logits, state = backbone.apply_parallel(params, cfg, x, train=False)
+        return logits, state
+    return prefill
+
+
+def make_init(cfg: dict):
+    """init(seed, forget_bias) → (params, opt_state).
+
+    forget_bias is a traced input so Figure 5's sweep shares one artifact:
+    it is added to the minLSTM forget-gate bias after the static init."""
+    def init_fn(seed, forget_bias):
+        key = jax.random.PRNGKey(seed.astype(jnp.uint32))
+        params = backbone.init(key, cfg)
+        if cfg.get("kind") == "minlstm":
+            for block in params["blocks"]:
+                b = block["mixer"]["linear_f"]["b"]
+                block["mixer"]["linear_f"]["b"] = b + forget_bias
+        return params, optim.init(params)
+    return init_fn

@@ -1,0 +1,92 @@
+"""AOT export path: registry consistency, HLO text emission, manifest
+round-trip, and the flat calling convention."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, exports, tasks
+from compile.models import backbone
+
+
+def test_registry_names_and_groups_unique_and_wellformed():
+    groups = exports.groups()
+    assert "fig1" in groups and "tab1" in groups and "fig2" in groups
+    total = sum(len(v) for v in groups.values())
+    assert total == len(exports.VARIANTS)
+    for name, spec in exports.VARIANTS.items():
+        assert spec["task"] in ("masked_ce", "masked_mse"), name
+        cfg = backbone.with_defaults(spec["cfg"])
+        assert cfg["kind"] in backbone.MIXERS, name
+        assert spec["batch"] >= 1 and spec["seq_len"] >= 1
+        assert "workload" in spec and "kind" in spec["workload"], name
+
+
+def test_every_group_covers_its_experiment():
+    groups = exports.groups()
+    # fig1: 5 kinds × 5 lengths
+    assert len(groups["fig1"]) == 25
+    # tab1: 2 kinds × 3 layer counts
+    assert len(groups["tab1"]) == 6
+    # tab45 includes 6 chomsky tasks × 2 kinds + 3 LRA
+    assert len(groups["tab45"]) == 15
+    # tab3: 3 envs × 2 kinds
+    assert len(groups["tab3"]) == 6
+
+
+def test_eval_shape_param_specs_stable():
+    """Flattening must be deterministic — the Rust side indexes by order."""
+    spec = exports.VARIANTS["quickstart"]
+    cfg = backbone.with_defaults(spec["cfg"])
+    init_fn = tasks.make_init(cfg)
+    s = jax.ShapeDtypeStruct((), jnp.int32)
+    f = jax.ShapeDtypeStruct((), jnp.float32)
+    a1, _ = jax.eval_shape(init_fn, s, f)
+    a2, _ = jax.eval_shape(init_fn, s, f)
+    l1 = aot.leaf_specs(a1)
+    l2 = aot.leaf_specs(a2)
+    assert l1 == l2
+    names = [x["name"] for x in l1]
+    assert len(names) == len(set(names)), "leaf names must be unique"
+    assert all(x["dtype"] in ("f32", "i32") for x in l1)
+
+
+def test_export_writes_hlo_text_and_manifest(tmp_path):
+    out = str(tmp_path)
+    rc = aot.main(["--out", out, "--only", "quickstart"])
+    assert rc == 0
+    files = os.listdir(out)
+    assert "manifest.json" in files
+    hlo = [f for f in files if f.endswith(".hlo.txt")]
+    # init + train + eval + 2 steps + prefill
+    assert len(hlo) >= 6, hlo
+    text = open(os.path.join(out, "quickstart.train.hlo.txt")).read()
+    assert text.startswith("HloModule"), "must be HLO text, not proto"
+    m = json.load(open(os.path.join(out, "manifest.json")))
+    v = m["variants"]["quickstart"]
+    assert v["task"] == "masked_ce"
+    assert len(v["params"]) > 0
+    # opt state = step + m + v per param leaf
+    assert len(v["opt"]) == 2 * len(v["params"]) + 1
+    # skip-if-exists: second run lowers nothing
+    rc = aot.main(["--out", out, "--only", "quickstart"])
+    assert rc == 0
+    m2 = json.load(open(os.path.join(out, "manifest.json")))
+    assert m2["variants"]["quickstart"]["lower_seconds"] == 0
+
+
+def test_unknown_selector_fails():
+    assert aot.main(["--out", "/tmp/x_unused", "--only", "nope"]) == 1
+
+
+@pytest.mark.parametrize("name", ["fig1_gru_t64", "rl_pointmass_mingru",
+                                  "chm_majority_minlstm"])
+def test_variant_shapes_lower(tmp_path, name):
+    """A representative variant from each family lowers end to end."""
+    rc = aot.main(["--out", str(tmp_path), "--only", name])
+    assert rc == 0
+    m = json.load(open(tmp_path / "manifest.json"))
+    assert name in m["variants"]

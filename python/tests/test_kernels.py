@@ -1,0 +1,184 @@
+"""L1 correctness: Pallas kernels vs the sequential jnp oracles (ref.py),
+swept over shapes/blockings with hypothesis."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import mingru, minlstm, ref, scan
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("ci")
+
+
+def rand(rng, *shape, lo=-2.0, hi=2.0):
+    return jnp.asarray(rng.uniform(lo, hi, size=shape).astype(np.float32))
+
+
+shapes = st.tuples(st.integers(1, 3),      # B
+                   st.integers(1, 70),     # T
+                   st.integers(1, 9))      # D
+blockings = st.tuples(st.sampled_from([2, 4, 8, 32]),   # block_n
+                      st.sampled_from([4, 8, 16, 64]))  # time_chunk
+
+
+@hypothesis.given(shapes, blockings, st.integers(0, 2**31 - 1))
+def test_scan_linear_matches_sequential(shape, blocking, seed):
+    B, T, D = shape
+    bn, tc = blocking
+    rng = np.random.default_rng(seed)
+    a = rand(rng, B, T, D, lo=-1.0, hi=1.0)
+    b = rand(rng, B, T, D)
+    h0 = rand(rng, B, D)
+    want = ref.linear_recurrence(a, b, h0)
+    got = scan.scan_linear(a, b, h0, block_n=bn, time_chunk=tc)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@hypothesis.given(shapes, blockings, st.integers(0, 2**31 - 1))
+def test_scan_log_matches_sequential(shape, blocking, seed):
+    B, T, D = shape
+    bn, tc = blocking
+    rng = np.random.default_rng(seed)
+    log_a = rand(rng, B, T, D, lo=-3.0, hi=0.0)   # a ∈ (0, 1]
+    log_b = rand(rng, B, T, D, lo=-3.0, hi=3.0)
+    log_h0 = rand(rng, B, D, lo=-2.0, hi=2.0)
+    want = ref.log_linear_recurrence(log_a, log_b, log_h0)
+    got = scan.scan_log(log_a, log_b, log_h0, block_n=bn, time_chunk=tc)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+@hypothesis.given(shapes, blockings, st.integers(0, 2**31 - 1))
+def test_mingru_kernel_matches_algorithm5(shape, blocking, seed):
+    B, T, D = shape
+    bn, tc = blocking
+    rng = np.random.default_rng(seed)
+    k = rand(rng, B, T, D, lo=-4.0, hi=4.0)
+    pre = rand(rng, B, T, D, lo=-4.0, hi=4.0)
+    h0 = rand(rng, B, D, lo=0.05, hi=2.0)
+    want = ref.mingru_sequential(k, pre, h0)
+    got = mingru.mingru_scan(k, pre, h0, block_n=bn, time_chunk=tc)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+@hypothesis.given(shapes, blockings, st.integers(0, 2**31 - 1))
+def test_minlstm_kernel_matches_algorithm7(shape, blocking, seed):
+    B, T, D = shape
+    bn, tc = blocking
+    rng = np.random.default_rng(seed)
+    p = rand(rng, B, T, D, lo=-4.0, hi=4.0)
+    k = rand(rng, B, T, D, lo=-4.0, hi=4.0)
+    pre = rand(rng, B, T, D, lo=-4.0, hi=4.0)
+    h0 = rand(rng, B, D, lo=0.05, hi=2.0)
+    want = ref.minlstm_sequential(p, k, pre, h0)
+    got = minlstm.minlstm_scan(p, k, pre, h0, block_n=bn, time_chunk=tc)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+def test_heinsen_identity_cross_check():
+    """The jnp Heinsen formulation agrees with the kernel and the scan."""
+    rng = np.random.default_rng(0)
+    B, T, D = 2, 33, 5
+    log_a = rand(rng, B, T, D, lo=-2.0, hi=0.0)
+    log_b = rand(rng, B, T, D)
+    log_h0 = rand(rng, B, D)
+    a = ref.heinsen_scan_log(log_a, log_b, log_h0)
+    b = ref.log_linear_recurrence(log_a, log_b, log_h0)
+    c = scan.scan_log(log_a, log_b, log_h0, block_n=4, time_chunk=8)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(c, b, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("T", [1, 2, 3, 127, 128, 129])
+def test_edge_sequence_lengths(T):
+    rng = np.random.default_rng(T)
+    B, D = 2, 3
+    a = rand(rng, B, T, D, lo=-1.0, hi=1.0)
+    b = rand(rng, B, T, D)
+    h0 = rand(rng, B, D)
+    got = scan.scan_linear(a, b, h0)
+    want = ref.linear_recurrence(a, b, h0)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_g_positivity_and_continuity():
+    x = jnp.linspace(-10, 10, 2001)
+    g = ref.g(x)
+    assert bool(jnp.all(g > 0)), "g must be positive"
+    # continuity at 0: g(0-) = σ(0) = 0.5 = g(0+)
+    np.testing.assert_allclose(float(ref.g(jnp.asarray(0.0))), 0.5)
+    np.testing.assert_allclose(ref.log_g(x), jnp.log(g), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_vmem_estimate_under_budget():
+    # the default blocking must fit comfortably in a 16 MiB VMEM
+    assert scan.vmem_bytes() < 4 * 1024 * 1024
+
+
+def test_depth_estimate_monotone_and_log():
+    d512 = scan.depth_estimate(512)
+    d4096 = scan.depth_estimate(4096)
+    assert d512 < 512, "parallel depth must beat BPTT"
+    assert d4096 < 4096
+    assert d4096 <= 8 * d512, "depth growth should be ~linear in chunks"
+
+
+class TestGradients:
+    """Custom VJPs vs autodiff through the sequential reference."""
+
+    def check(self, fn_ad, fn_ref, args, tol=2e-3):
+        def loss_ad(*a):
+            return jnp.sum(jnp.tanh(fn_ad(*a)))
+
+        def loss_ref(*a):
+            return jnp.sum(jnp.tanh(fn_ref(*a)))
+
+        ga = jax.grad(loss_ad, argnums=tuple(range(len(args))))(*args)
+        gr = jax.grad(loss_ref, argnums=tuple(range(len(args))))(*args)
+        for x, y in zip(ga, gr):
+            np.testing.assert_allclose(x, y, rtol=tol, atol=tol)
+
+    def test_scan_linear_vjp(self):
+        from compile.kernels import vjp
+        rng = np.random.default_rng(0)
+        B, T, D = 2, 21, 3
+        a = rand(rng, B, T, D, lo=0.05, hi=0.95)
+        b = rand(rng, B, T, D)
+        h0 = rand(rng, B, D)
+        self.check(vjp.scan_linear_ad, ref.linear_recurrence, (a, b, h0))
+
+    def test_mingru_vjp(self):
+        from compile.kernels import vjp
+        rng = np.random.default_rng(1)
+        B, T, D = 2, 17, 4
+        k = rand(rng, B, T, D)
+        pre = rand(rng, B, T, D)
+        h0 = rand(rng, B, D, lo=0.1, hi=1.0)
+        self.check(vjp.mingru_scan_ad, ref.mingru_sequential, (k, pre, h0))
+
+    def test_minlstm_vjp(self):
+        from compile.kernels import vjp
+        rng = np.random.default_rng(2)
+        B, T, D = 2, 17, 4
+        p = rand(rng, B, T, D)
+        k = rand(rng, B, T, D)
+        pre = rand(rng, B, T, D)
+        h0 = rand(rng, B, D, lo=0.1, hi=1.0)
+        self.check(vjp.minlstm_scan_ad, ref.minlstm_sequential,
+                   (p, k, pre, h0))
+
+    def test_scan_log_vjp(self):
+        from compile.kernels import vjp
+        rng = np.random.default_rng(3)
+        B, T, D = 2, 13, 3
+        la = rand(rng, B, T, D, lo=-2.0, hi=0.0)
+        lb = rand(rng, B, T, D)
+        lh0 = rand(rng, B, D)
+        self.check(vjp.scan_log_ad, ref.log_linear_recurrence,
+                   (la, lb, lh0), tol=5e-3)

@@ -1,0 +1,146 @@
+"""Task-graph builders: train/eval/decode step semantics at the exact flat
+signatures aot.py exports."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import tasks
+from compile.kernels import vjp
+from compile.models import backbone
+
+vjp.CONFIG.update(block_n=64, time_chunk=16)
+
+
+def cfg_ce(**kw):
+    c = dict(kind="mingru", n_layers=1, d_model=16, expansion=2,
+             vocab_in=10, vocab_out=10, dropout=0.0, max_len=24)
+    c.update(kw)
+    return backbone.with_defaults(c)
+
+
+def cfg_mse(**kw):
+    c = dict(kind="minlstm", n_layers=1, d_model=16, expansion=2,
+             vocab_in=None, input_dim=5, vocab_out=3, mlp=True,
+             dropout=0.0, max_len=24)
+    c.update(kw)
+    return backbone.with_defaults(c)
+
+
+def test_train_step_signature_and_determinism():
+    cfg = cfg_ce()
+    init = tasks.make_init(cfg)
+    params, opt = init(jnp.asarray(0, jnp.int32), jnp.asarray(0.0))
+    ts = tasks.make_train_step(cfg, "masked_ce", clip_norm=1.0)
+    x = jax.random.randint(jax.random.PRNGKey(0), (2, 12), 0, 10)
+    y = jnp.roll(x, -1, axis=1)
+    m = jnp.ones((2, 12))
+    out1 = ts(params, opt, x, y, m, jnp.asarray(1e-3),
+              jnp.asarray(7, jnp.int32))
+    out2 = ts(params, opt, x, y, m, jnp.asarray(1e-3),
+              jnp.asarray(7, jnp.int32))
+    assert float(out1[2]) == float(out2[2]), "train step must be pure"
+    # optimizer step counter advanced exactly once
+    assert int(out1[1]["step"]) == 1
+
+
+def test_grad_norm_reported_and_clipped():
+    cfg = cfg_ce()
+    init = tasks.make_init(cfg)
+    params, opt = init(jnp.asarray(0, jnp.int32), jnp.asarray(0.0))
+    ts = tasks.make_train_step(cfg, "masked_ce", clip_norm=0.5)
+    x = jax.random.randint(jax.random.PRNGKey(0), (2, 12), 0, 10)
+    y = jnp.roll(x, -1, axis=1)
+    m = jnp.ones((2, 12))
+    _, _, _, gnorm = ts(params, opt, x, y, m, jnp.asarray(1e-3),
+                        jnp.asarray(0, jnp.int32))
+    # reported norm is the raw pre-clip norm; must be positive and finite
+    assert float(gnorm) > 0 and np.isfinite(float(gnorm))
+
+
+def test_eval_step_shapes_ce_and_mse():
+    cfg = cfg_ce()
+    init = tasks.make_init(cfg)
+    params, _ = init(jnp.asarray(0, jnp.int32), jnp.asarray(0.0))
+    es = tasks.make_eval_step(cfg, "masked_ce")
+    x = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, 10)
+    loss, tok, seq = es(params, x, x, jnp.ones((2, 12)))
+    for v in (loss, tok, seq):
+        assert v.shape == ()
+
+    cfg2 = cfg_mse()
+    init2 = tasks.make_init(cfg2)
+    p2, _ = init2(jnp.asarray(0, jnp.int32), jnp.asarray(0.0))
+    es2 = tasks.make_eval_step(cfg2, "masked_mse")
+    xf = jax.random.normal(jax.random.PRNGKey(2), (2, 12, 5))
+    tf = jax.random.normal(jax.random.PRNGKey(3), (2, 12, 3))
+    (loss2,) = es2(p2, xf, tf, jnp.ones((2, 12)))
+    assert loss2.shape == ()
+    assert float(loss2) > 0
+
+
+def test_mse_task_trains():
+    cfg = cfg_mse()
+    init = tasks.make_init(cfg)
+    params, opt = init(jnp.asarray(0, jnp.int32), jnp.asarray(0.0))
+    ts = tasks.make_train_step(cfg, "masked_mse")
+    xf = jax.random.normal(jax.random.PRNGKey(2), (4, 12, 5))
+    # learnable mapping: target = first 3 input dims
+    tf = xf[..., :3]
+    m = jnp.ones((4, 12))
+    first = None
+    for i in range(25):
+        params, opt, loss, _ = ts(params, opt, xf, tf, m,
+                                  jnp.asarray(3e-3),
+                                  jnp.asarray(i, jnp.int32))
+        if first is None:
+            first = float(loss)
+    assert float(loss) < first * 0.8, f"{first} → {float(loss)}"
+
+
+def test_decode_step_matches_parallel_for_masked_positions():
+    cfg = cfg_ce()
+    init = tasks.make_init(cfg)
+    params, _ = init(jnp.asarray(3, jnp.int32), jnp.asarray(0.0))
+    ds = tasks.make_decode_step(cfg)
+    pf = tasks.make_prefill(cfg)
+    x = jax.random.randint(jax.random.PRNGKey(4), (2, 10), 0, 10)
+    full_logits, state = pf(params, x)
+    # the task-level prefill returns full logits (aot.py slices [:, -1]
+    # when exporting); the last position feeds decode
+    full, _ = backbone.apply_parallel(params, cfg, x)
+    np.testing.assert_allclose(full_logits, full, rtol=1e-5, atol=1e-5)
+    last_logits = full_logits[:, -1]
+    # decode continues consistently
+    nxt = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
+    logits2, _ = ds(params, nxt, state)
+    x_ext = jnp.concatenate([x, nxt[:, None]], axis=1)
+    full2, _ = backbone.apply_parallel(params, cfg, x_ext)
+    np.testing.assert_allclose(logits2, full2[:, -1], rtol=2e-4, atol=2e-4)
+
+
+def test_mask_zero_positions_never_affect_loss():
+    cfg = cfg_ce()
+    init = tasks.make_init(cfg)
+    params, _ = init(jnp.asarray(0, jnp.int32), jnp.asarray(0.0))
+    loss_fn = tasks.make_loss_fn(cfg, "masked_ce", train=False)
+    x = jax.random.randint(jax.random.PRNGKey(5), (2, 12), 0, 10)
+    y = jnp.roll(x, -1, axis=1)
+    m = jnp.zeros((2, 12)).at[:, :4].set(1.0)
+    base = loss_fn(params, x, y, m, jax.random.PRNGKey(0))
+    y_perturbed = y.at[:, 8:].set(0)
+    pert = loss_fn(params, x, y_perturbed, m, jax.random.PRNGKey(0))
+    assert float(base) == float(pert)
+
+
+@pytest.mark.parametrize("kind", ["mingru", "minlstm", "s6", "transformer"])
+def test_all_parallel_kinds_build_train_graphs(kind):
+    cfg = cfg_ce(kind=kind, conv=(kind != "transformer"), mlp=True)
+    init = tasks.make_init(cfg)
+    s = jax.ShapeDtypeStruct
+    params_s, opt_s = jax.eval_shape(init, s((), jnp.int32),
+                                     s((), jnp.float32))
+    assert len(jax.tree_util.tree_leaves(params_s)) > 0
+    assert len(jax.tree_util.tree_leaves(opt_s)) \
+        == 2 * len(jax.tree_util.tree_leaves(params_s)) + 1

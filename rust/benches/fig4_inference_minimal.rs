@@ -1,0 +1,13 @@
+//! cargo-bench entry point regenerating paper experiment `fig4`
+//! (see rust/src/bench_harness). Quick mode by default; MINRNN_FULL=1
+//! for full scale. Requires `make artifacts`.
+
+use std::path::Path;
+
+use minrnn::bench_harness::Ctx;
+use minrnn::coordinator::run_experiment;
+
+fn main() {
+    let ctx = Ctx::new(Path::new("artifacts")).expect("load artifacts");
+    run_experiment(&ctx, "fig4").expect("experiment fig4");
+}

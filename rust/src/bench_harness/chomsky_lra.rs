@@ -1,0 +1,225 @@
+//! Tables 4/5 (Chomsky Hierarchy + LRA) and Table 6 (architecture
+//! ablation on ListOps).
+
+use anyhow::Result;
+
+use crate::config::{Schedule, TrainConfig};
+use crate::coordinator::trainer::{DataSource, Trainer};
+use crate::data::chomsky::{self, ChomskyTask};
+use crate::data::lra::{collate_classification, gimage, listops, retrieval};
+use crate::runtime::Model;
+use crate::tensor::Batch;
+use crate::util::rng::Rng;
+use crate::util::table::Table;
+
+use super::Ctx;
+
+// ---------------------------------------------------------------------------
+// Chomsky
+// ---------------------------------------------------------------------------
+
+struct ChomskySource {
+    task: Box<dyn ChomskyTask>,
+    batch: usize,
+    train_t: usize,
+    eval_t: usize,
+}
+
+impl DataSource for ChomskySource {
+    fn train_batch(&mut self, rng: &mut Rng) -> Batch {
+        let max_c = self.task.max_content_for(self.train_t);
+        chomsky::batch(self.task.as_ref(), rng, self.batch, self.train_t,
+                       1, max_c)
+    }
+
+    fn eval_batch(&mut self, rng: &mut Rng) -> Batch {
+        // length generalization: contents beyond the training range
+        let train_max = self.task.max_content_for(self.train_t);
+        let eval_max = self.task.max_content_for(self.eval_t);
+        let lo = (train_max + 1).min(eval_max);
+        chomsky::batch(self.task.as_ref(), rng, self.batch, self.eval_t,
+                       lo, eval_max)
+    }
+}
+
+/// Train one chm variant; returns (in-dist acc, gen acc per eval length).
+fn train_chomsky(ctx: &Ctx, task_name: &str, kind: &str, steps: usize)
+                 -> Result<(f32, Vec<(usize, f32)>)> {
+    let name = format!("chm_{task_name}_{kind}");
+    let model = Model::open(&ctx.rt, ctx.manifest.clone(), &name)?;
+    let train_t = model.variant.seq_len;
+    let task = chomsky::by_name(task_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown task {task_name}"))?;
+    let mut src = ChomskySource {
+        task,
+        batch: model.variant.batch,
+        train_t,
+        eval_t: train_t,
+    };
+    let cfg = TrainConfig {
+        variant: name.clone(),
+        steps,
+        lr: 1e-3,
+        schedule: Schedule::WarmupCosine { warmup: steps / 10 },
+        seed: ctx.seed,
+        eval_every: 0,
+        log_every: (steps / 5).max(1),
+        ..Default::default()
+    };
+    let trainer = Trainer::new(&model, cfg);
+    let mut state = model.init(ctx.seed as i32, 1.0)?;
+    trainer.run(&mut state, &mut src)?;
+
+    // in-distribution accuracy at the training length
+    let mut rng = Rng::new(ctx.seed ^ 0xE7A1);
+    let max_c = src.task.max_content_for(train_t);
+    let mut in_acc = 0f32;
+    let n_eval = 4;
+    for _ in 0..n_eval {
+        let b = chomsky::batch(src.task.as_ref(), &mut rng,
+                               model.variant.batch, train_t, 1, max_c);
+        in_acc += model.eval(&state, &b)?.seq_acc / n_eval as f32;
+    }
+
+    // generalization at the longer exported eval lengths
+    let mut gen = Vec::new();
+    for ef in &model.variant.eval_files {
+        if ef.seq_len <= train_t {
+            continue;
+        }
+        let eval_max = src.task.max_content_for(ef.seq_len);
+        let lo = (src.task.max_content_for(train_t) + 1).min(eval_max);
+        let mut acc = 0f32;
+        for _ in 0..n_eval {
+            let b = chomsky::batch(src.task.as_ref(), &mut rng, ef.batch,
+                                   ef.seq_len, lo, eval_max);
+            acc += model.eval(&state, &b)?.seq_acc / n_eval as f32;
+        }
+        gen.push((ef.seq_len, acc));
+    }
+    Ok((in_acc, gen))
+}
+
+pub fn run_tab45_chomsky(ctx: &Ctx) -> Result<Table> {
+    let steps = ctx.steps(80, 2000);
+    let mut table = Table::new(
+        "Table 4/5 (Chomsky Hierarchy): accuracy; trained content ≤ 30, \
+         evaluated beyond training lengths (paper: ≤40 → 40–256)",
+        &["task", "model", "in-dist acc", "gen acc (T=128)",
+          "gen acc (T=288)"]);
+    for task in ["bucket_sort", "missing_duplicate", "cycle_nav",
+                 "even_pairs", "majority", "majority_count"] {
+        for kind in ["minlstm", "mingru"] {
+            let (in_acc, gen) = train_chomsky(ctx, task, kind, steps)?;
+            let find = |t: usize| gen.iter().find(|(l, _)| *l == t)
+                .map(|(_, a)| format!("{:.2}", a))
+                .unwrap_or_else(|| "-".into());
+            table.row(vec![task.into(), kind.into(),
+                           format!("{in_acc:.2}"),
+                           find(128), find(288)]);
+        }
+    }
+    Ok(table)
+}
+
+// ---------------------------------------------------------------------------
+// LRA
+// ---------------------------------------------------------------------------
+
+pub struct LraSource {
+    pub kind: String,
+    pub batch: usize,
+    pub t: usize,
+}
+
+impl DataSource for LraSource {
+    fn train_batch(&mut self, rng: &mut Rng) -> Batch {
+        let b = self.batch;
+        let t = self.t;
+        let examples: Vec<(Vec<i32>, i32)> = (0..b).map(|_| {
+            match self.kind.as_str() {
+                "listops" => listops::sample(rng, t - 10),
+                "retrieval" => retrieval::sample(rng, (t - 3) / 2),
+                _ => gimage::sample(rng),
+            }
+        }).collect();
+        collate_classification(&examples, t)
+    }
+}
+
+fn train_lra(ctx: &Ctx, variant: &str, task: &str, steps: usize)
+             -> Result<f32> {
+    let model = Model::open(&ctx.rt, ctx.manifest.clone(), variant)?;
+    let mut src = LraSource {
+        kind: task.to_string(),
+        batch: model.variant.batch,
+        t: model.variant.seq_len,
+    };
+    let cfg = TrainConfig {
+        variant: variant.to_string(),
+        steps,
+        lr: 1e-3,
+        schedule: Schedule::WarmupCosine { warmup: steps / 10 },
+        seed: ctx.seed,
+        eval_every: (steps / 2).max(1),
+        eval_batches: 6,
+        log_every: (steps / 5).max(1),
+        ..Default::default()
+    };
+    let trainer = Trainer::new(&model, cfg);
+    let mut state = model.init(ctx.seed as i32, 1.0)?;
+    let report = trainer.run(&mut state, &mut src)?;
+    Ok(report.final_eval.map(|e| e.seq_acc).unwrap_or(0.0))
+}
+
+pub fn run_tab45_lra(ctx: &Ctx) -> Result<Table> {
+    let steps = ctx.steps(80, 2000);
+    let mut table = Table::new(
+        "Table 4 (LRA, scaled): classification accuracy \
+         (paper baselines quoted from the xLSTM paper)",
+        &["task", "model", "accuracy", "source"]);
+    for (task, paper_rows) in [
+        ("retrieval", vec![("Mamba", 0.90), ("xLSTM", 0.91),
+                           ("minLSTM (paper)", 0.89)]),
+        ("listops", vec![("Mamba", 0.33), ("xLSTM", 0.41),
+                         ("minLSTM (paper)", 0.59)]),
+        ("gimage", vec![("Mamba", 0.69), ("xLSTM", 0.70),
+                        ("minLSTM (paper)", 0.67)]),
+    ] {
+        for (m, a) in paper_rows {
+            table.row(vec![task.into(), m.into(), format!("{a}"),
+                           "paper (quoted)".into()]);
+        }
+        let acc = train_lra(ctx, &format!("lra_{task}_minlstm"), task,
+                            steps)?;
+        table.row(vec![task.into(), "minLSTM".into(),
+                       format!("{acc:.2}"), "measured (scaled)".into()]);
+    }
+    Ok(table)
+}
+
+pub fn run_tab45(ctx: &Ctx) -> Result<()> {
+    let ch = run_tab45_chomsky(ctx)?;
+    let lra = run_tab45_lra(ctx)?;
+    ctx.emit("tab45_chomsky_lra", &[&ch, &lra])?;
+    Ok(())
+}
+
+pub fn run_tab6(ctx: &Ctx) -> Result<()> {
+    let steps = ctx.steps(80, 2000);
+    let mut table = Table::new(
+        "Table 6: architecture ablation, minLSTM on ListOps \
+         (paper: 0.46 / 0.45 / 0.52 / 0.59)",
+        &["model", "accuracy"]);
+    for (label, variant) in [
+        ("minLSTM", "tab6_listops_plain"),
+        ("minLSTM (+ Conv)", "tab6_listops_conv"),
+        ("minLSTM (+ MLP)", "tab6_listops_mlp"),
+        ("minLSTM (+ Conv + MLP)", "lra_listops_minlstm"),
+    ] {
+        let acc = train_lra(ctx, variant, "listops", steps)?;
+        table.row(vec![label.into(), format!("{acc:.2}")]);
+    }
+    ctx.emit("tab6_ablation", &[&table])?;
+    Ok(())
+}

@@ -1,0 +1,105 @@
+//! Figure 1: training runtime (left), speedup over traditional RNNs
+//! (middle), and memory footprint (right) vs sequence length.
+//!
+//! Hardware adaptation (DESIGN.md §2): the paper's T4 numbers show parallel
+//! scan ≈ flat runtime vs BPTT linear-in-T.  On one CPU core wall-clock
+//! follows *work*, so alongside measured step time we report the
+//! hardware-independent signals: HLO critical-path depth (O(T/tc + log tc)
+//! for the scan vs O(T) for BPTT) and the XLA-reported training memory.
+
+use anyhow::Result;
+
+use crate::data::random_tokens;
+use crate::util::bench::{bench, BenchConfig};
+use crate::util::rng::Rng;
+use crate::util::table::{fnum, Table};
+use crate::runtime::Model;
+
+use super::Ctx;
+
+pub const KINDS: [&str; 5] = ["mingru", "minlstm", "gru", "lstm", "s6"];
+pub const LENGTHS: [usize; 5] = [64, 128, 256, 512, 1024];
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    let lengths: Vec<usize> = if ctx.quick {
+        vec![64, 256, 1024]
+    } else {
+        LENGTHS.to_vec()
+    };
+    let bcfg = if ctx.quick { BenchConfig::quick() }
+               else { BenchConfig::default() };
+
+    let mut runtime_t = Table::new(
+        "Figure 1 (left): train-step runtime [ms] vs sequence length \
+         (B=8, d=64, 1 layer, CPU PJRT)",
+        &{
+            let mut h = vec!["model"];
+            h.extend(lengths.iter().map(|t| {
+                Box::leak(format!("T={t}").into_boxed_str()) as &str
+            }));
+            h
+        });
+    let mut speed_t = Table::new(
+        "Figure 1 (middle): speedup of minimal RNNs over traditional \
+         counterparts (same T)",
+        &{
+            let mut h = vec!["pair"];
+            h.extend(lengths.iter().map(|t| {
+                Box::leak(format!("T={t}").into_boxed_str()) as &str
+            }));
+            h
+        });
+    let mut mem_t = Table::new(
+        "Figure 1 (right): XLA train memory (temp bytes) and graph depth",
+        &["model", "T", "temp_bytes", "depth(parallel)", "depth(BPTT)"]);
+
+    let mut rng = Rng::new(ctx.seed);
+    let mut ms: std::collections::BTreeMap<(String, usize), f64> =
+        Default::default();
+
+    for kind in KINDS {
+        let mut row = vec![kind.to_string()];
+        for &t in &lengths {
+            let name = format!("fig1_{kind}_t{t}");
+            let model = Model::open(&ctx.rt, ctx.manifest.clone(), &name)?;
+            let mut state = model.init(0, 0.0)?;
+            let batch = random_tokens::batch(&mut rng, model.variant.batch,
+                                             t, 16);
+            // one warm call compiles + caches
+            model.train_step(&mut state, &batch, 1e-3, 0)?;
+            let r = bench(&name, &bcfg, || {
+                model.train_step(&mut state, &batch, 1e-3, 0).unwrap();
+            });
+            ms.insert((kind.to_string(), t), r.mean_ms());
+            row.push(fnum(r.mean_ms()));
+
+            // sequential models (BPTT) have no parallel-scan depth
+            let par_depth = if matches!(kind, "gru" | "lstm") {
+                "n/a (BPTT)".to_string()
+            } else {
+                model.variant.depth_parallel.to_string()
+            };
+            let temp = model.variant.memory.as_ref()
+                .and_then(|m| m.get("temp_bytes").copied())
+                .map(|b| b.to_string())
+                .unwrap_or_else(|| "n/a".into());
+            mem_t.row(vec![kind.to_string(), t.to_string(), temp,
+                           par_depth,
+                           model.variant.depth_sequential.to_string()]);
+        }
+        runtime_t.row(row);
+    }
+
+    for (minimal, trad) in [("mingru", "gru"), ("minlstm", "lstm")] {
+        let mut row = vec![format!("{trad}/{minimal}")];
+        for &t in &lengths {
+            let a = ms[&(trad.to_string(), t)];
+            let b = ms[&(minimal.to_string(), t)];
+            row.push(format!("{:.2}x", a / b));
+        }
+        speed_t.row(row);
+    }
+
+    ctx.emit("fig1_training_cost", &[&runtime_t, &speed_t, &mem_t])?;
+    Ok(())
+}

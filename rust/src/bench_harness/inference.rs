@@ -1,0 +1,104 @@
+//! Figures 3 & 4: inference runtime.
+//!
+//! Fig 3 — time to ingest N context tokens then decode: parallelizable
+//! models (minGRU/minLSTM/S6/Transformer) use the parallel prefill
+//! executable; traditional RNNs (GRU/LSTM) must consume the context
+//! sequentially (their prefill HLO is the lax.scan rollout — linear time).
+//!
+//! Fig 4 — per-token decode cost of minimal vs traditional RNNs across
+//! batch sizes.
+
+use anyhow::Result;
+
+use crate::runtime::Model;
+use crate::tensor::Tensor;
+use crate::util::bench::{bench, BenchConfig};
+use crate::util::rng::Rng;
+use crate::util::table::{fnum, Table};
+
+use super::Ctx;
+
+const CTXS: [usize; 3] = [64, 256, 1024];
+const BATCHES: [usize; 3] = [1, 8, 32];
+
+fn variant_for(kind: &str) -> String {
+    match kind {
+        "gru" | "lstm" => format!("infer_{kind}"),
+        _ => format!("fig2_{kind}"),
+    }
+}
+
+pub fn run_fig3(ctx: &Ctx) -> Result<()> {
+    let bcfg = if ctx.quick { BenchConfig::quick() }
+               else { BenchConfig::default() };
+    let mut table = Table::new(
+        "Figure 3: context ingestion time [ms] (batch 8). Parallel models \
+         prefill in one pass; GRU/LSTM scan the context sequentially.",
+        &["model", "ctx=64", "ctx=256", "ctx=1024", "scaling"]);
+    let mut rng = Rng::new(ctx.seed);
+    for kind in ["mingru", "minlstm", "s6", "transformer", "gru", "lstm"] {
+        let model = Model::open(&ctx.rt, ctx.manifest.clone(),
+                                &variant_for(kind))?;
+        let state = model.init(0, 0.0)?;
+        let mut row = vec![kind.to_string()];
+        let mut times = Vec::new();
+        for &t in &CTXS {
+            let vocab = model.variant.cfg_usize("vocab_in").unwrap_or(64);
+            let tokens: Vec<i32> = (0..8 * t)
+                .map(|_| rng.below(vocab as u64) as i32).collect();
+            let x = Tensor::i32(vec![8, t], tokens);
+            model.prefill(&state.params, &x)?; // warm/compile
+            let r = bench(&format!("{kind}@{t}"), &bcfg, || {
+                model.prefill(&state.params, &x).unwrap();
+            });
+            times.push(r.mean_ms());
+            row.push(fnum(r.mean_ms()));
+        }
+        // slope of time vs ctx: ~1.0 → linear, ≪1 → sublinear
+        let ratio = times.last().unwrap() / times.first().unwrap();
+        let len_ratio = *CTXS.last().unwrap() as f64 / CTXS[0] as f64;
+        row.push(format!("{:.2}x over {:.0}x tokens", ratio, len_ratio));
+        table.row(row);
+    }
+    ctx.emit("fig3_inference_context", &[&table])?;
+    Ok(())
+}
+
+pub fn run_fig4(ctx: &Ctx) -> Result<()> {
+    let bcfg = if ctx.quick { BenchConfig::quick() }
+               else { BenchConfig::default() };
+    let mut table = Table::new(
+        "Figure 4: per-decode-step time [ms] across batch sizes \
+         (minimal vs traditional RNNs)",
+        &["model", "B=1", "B=8", "B=32", "tok/s @ B=32"]);
+    let mut rng = Rng::new(ctx.seed);
+    for kind in ["mingru", "minlstm", "gru", "lstm", "s6", "transformer"] {
+        let model = Model::open(&ctx.rt, ctx.manifest.clone(),
+                                &variant_for(kind))?;
+        let tstate = model.init(0, 0.0)?;
+        let vocab = model.variant.cfg_usize("vocab_in").unwrap_or(64);
+        let mut row = vec![kind.to_string()];
+        let mut last_ms = 0.0;
+        for &b in &BATCHES {
+            let x = Tensor::i32(
+                vec![b],
+                (0..b).map(|_| rng.below(vocab as u64) as i32).collect());
+            // thread the state through iterations: measures the pure
+            // steady-state decode step, not state allocation
+            let warm = model.decode_state_zeros(b)?;
+            let (_, st0) = model.decode_step(&tstate.params, &x, warm)?;
+            let mut st = Some(st0);
+            let r = bench(&format!("{kind}@b{b}"), &bcfg, || {
+                let (_, s2) = model.decode_step(&tstate.params, &x,
+                                                st.take().unwrap()).unwrap();
+                st = Some(s2);
+            });
+            last_ms = r.mean_ms();
+            row.push(fnum(r.mean_ms()));
+        }
+        row.push(fnum(32.0 / (last_ms / 1e3)));
+        table.row(row);
+    }
+    ctx.emit("fig4_inference_minimal", &[&table])?;
+    Ok(())
+}

@@ -1,0 +1,122 @@
+//! Figure 2: character-level language modelling learning curves
+//! (minGRU / minLSTM / S6-lite / Transformer on the synthetic corpus), and
+//! Figure 5: minLSTM forget-gate bias initialization sweep.
+
+use anyhow::Result;
+
+use crate::config::{Schedule, TrainConfig};
+use crate::coordinator::trainer::{DataSource, Trainer};
+use crate::data::corpus::LmDataset;
+use crate::runtime::Model;
+use crate::tensor::Batch;
+use crate::util::rng::Rng;
+use crate::util::table::{fnum, Table};
+
+use super::Ctx;
+
+pub struct LmSource {
+    pub train: LmDataset,
+    pub test: LmDataset,
+    pub b: usize,
+    pub t: usize,
+}
+
+impl LmSource {
+    pub fn new(b: usize, t: usize) -> Self {
+        LmSource {
+            train: LmDataset::synthetic(400_000, 0),
+            test: LmDataset::synthetic(60_000, 1),
+            b,
+            t,
+        }
+    }
+}
+
+impl DataSource for LmSource {
+    fn train_batch(&mut self, rng: &mut Rng) -> Batch {
+        self.train.batch(rng, self.b, self.t)
+    }
+
+    fn eval_batch(&mut self, rng: &mut Rng) -> Batch {
+        self.test.batch(rng, self.b, self.t)
+    }
+}
+
+pub struct LmRun {
+    pub kind: String,
+    pub curve: Vec<(usize, f32)>,       // (step, test loss)
+    pub best_loss: f32,
+    pub best_step: usize,
+    pub steps_per_sec: f64,
+}
+
+pub fn train_lm(ctx: &Ctx, variant: &str, steps: usize, forget_bias: f32,
+                seed: u64) -> Result<LmRun> {
+    let model = Model::open(&ctx.rt, ctx.manifest.clone(), variant)?;
+    let mut src = LmSource::new(model.variant.batch, model.variant.seq_len);
+    let cfg = TrainConfig {
+        variant: variant.to_string(),
+        steps,
+        lr: 1e-3,
+        schedule: Schedule::WarmupCosine { warmup: steps / 10 },
+        seed,
+        forget_bias,
+        eval_every: (steps / 10).max(1),
+        eval_batches: 2,
+        log_every: (steps / 10).max(1),
+        ..Default::default()
+    };
+    let trainer = Trainer::new(&model, cfg);
+    let mut state = model.init(seed as i32, forget_bias)?;
+    let report = trainer.run(&mut state, &mut src)?;
+    Ok(LmRun {
+        kind: variant.to_string(),
+        curve: report.eval_curve.iter()
+            .map(|(s, e)| (*s, e.loss)).collect(),
+        best_loss: report.best_eval_loss,
+        best_step: report.best_eval_step,
+        steps_per_sec: report.steps_per_sec,
+    })
+}
+
+pub fn run_fig2(ctx: &Ctx) -> Result<()> {
+    let steps = ctx.steps(100, 1200);
+    let mut summary = Table::new(
+        "Figure 2: char-LM on synthetic corpus (paper: Shakespeare). \
+         Test cross-entropy; lower is better.",
+        &["model", "best test loss", "best @ step", "steps/s"]);
+    let mut curves = Table::new(
+        "Figure 2 learning curves: test loss by step",
+        &["model", "step", "test loss"]);
+    for kind in ["mingru", "minlstm", "s6", "transformer"] {
+        let run = train_lm(ctx, &format!("fig2_{kind}"), steps, 0.0,
+                           ctx.seed)?;
+        summary.row(vec![kind.into(), fnum(run.best_loss as f64),
+                         run.best_step.to_string(),
+                         fnum(run.steps_per_sec)]);
+        for (s, l) in &run.curve {
+            curves.row(vec![kind.into(), s.to_string(), fnum(*l as f64)]);
+        }
+    }
+    ctx.emit("fig2_language_model", &[&summary, &curves])?;
+    Ok(())
+}
+
+pub fn run_fig5(ctx: &Ctx) -> Result<()> {
+    let steps = ctx.steps(60, 800);
+    let mut table = Table::new(
+        "Figure 5: minLSTM forget-gate bias init vs training efficiency",
+        &["forget_bias", "best test loss", "loss @ 25% steps",
+          "loss @ 100% steps"]);
+    for bias in [0.0f32, 1.0, 2.0, 4.0] {
+        let run = train_lm(ctx, "fig2_minlstm", steps, bias, ctx.seed)?;
+        let early = run.curve.iter()
+            .find(|(s, _)| *s >= steps / 4)
+            .map(|(_, l)| *l).unwrap_or(f32::NAN);
+        let last = run.curve.last().map(|(_, l)| *l).unwrap_or(f32::NAN);
+        table.row(vec![format!("{bias}"), fnum(run.best_loss as f64),
+                       fnum(early as f64), fnum(last as f64)]);
+    }
+    ctx.emit("fig5_bias_init", &[&table])?;
+    Ok(())
+}

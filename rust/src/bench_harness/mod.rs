@@ -1,0 +1,76 @@
+//! Experiment harness: one module per paper table/figure.  Each entry
+//! regenerates the paper's rows (measured on this testbed, with the paper's
+//! quoted baselines where the paper itself quotes them) and writes both an
+//! ASCII table to stdout and a markdown file under `results/`.
+
+pub mod chomsky_lra;
+pub mod fig1;
+pub mod inference;
+pub mod lm;
+pub mod rl;
+pub mod selective;
+
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::runtime::{Manifest, Runtime};
+use crate::util::table::Table;
+use crate::log_info;
+
+pub struct Ctx {
+    pub rt: Runtime,
+    pub manifest: Rc<Manifest>,
+    /// Quick mode: fewer steps/seeds — used by `cargo bench` so the suite
+    /// finishes on a single CPU core.  Full mode via MINRNN_FULL=1.
+    pub quick: bool,
+    pub results_dir: PathBuf,
+    pub seed: u64,
+}
+
+impl Ctx {
+    pub fn new(artifacts: &Path) -> Result<Ctx> {
+        crate::util::logging::init();
+        let quick = std::env::var("MINRNN_FULL").map(|v| v != "1")
+            .unwrap_or(true);
+        let rt = Runtime::cpu()?;
+        let manifest = Rc::new(Manifest::load(artifacts)?);
+        let results_dir = PathBuf::from("results");
+        std::fs::create_dir_all(&results_dir)?;
+        Ok(Ctx { rt, manifest, quick, results_dir, seed: 0 })
+    }
+
+    /// Steps scaled by mode.
+    pub fn steps(&self, quick: usize, full: usize) -> usize {
+        if self.quick { quick } else { full }
+    }
+
+    pub fn seeds(&self) -> Vec<u64> {
+        if self.quick { vec![0] } else { vec![0, 1, 2] }
+    }
+
+    pub fn emit(&self, id: &str, tables: &[&Table]) -> Result<()> {
+        let mut md = String::new();
+        for t in tables {
+            println!("{}", t.render());
+            md.push_str(&t.render_markdown());
+            md.push('\n');
+        }
+        let path = self.results_dir.join(format!("{id}.md"));
+        std::fs::write(&path, md)?;
+        log_info!("wrote {}", path.display());
+        Ok(())
+    }
+}
+
+/// Format "mean ± std" over per-seed values.
+pub fn pm(values: &[f32]) -> String {
+    let v64: Vec<f64> = values.iter().map(|&x| x as f64).collect();
+    if values.len() <= 1 {
+        format!("{:.1}", v64.first().copied().unwrap_or(0.0))
+    } else {
+        format!("{:.1} ± {:.1}", crate::util::stats::mean(&v64),
+                crate::util::stats::std(&v64))
+    }
+}

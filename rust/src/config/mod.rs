@@ -1,0 +1,180 @@
+//! Run configuration: typed training/eval settings assembled from defaults
+//! → optional JSON config file → CLI overrides (highest precedence).
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::util::cli::Parsed;
+use crate::util::json::{self, Json};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Schedule {
+    Constant,
+    /// Linear warmup then cosine decay to 10% of peak.
+    WarmupCosine { warmup: usize },
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub artifacts: PathBuf,
+    pub variant: String,
+    pub steps: usize,
+    pub lr: f32,
+    pub schedule: Schedule,
+    pub seed: u64,
+    pub forget_bias: f32,
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    pub log_every: usize,
+    pub checkpoint: Option<PathBuf>,
+    pub resume: Option<PathBuf>,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            artifacts: PathBuf::from("artifacts"),
+            variant: String::new(),
+            steps: 200,
+            lr: 1e-3,
+            schedule: Schedule::WarmupCosine { warmup: 20 },
+            seed: 0,
+            forget_bias: 0.0,
+            eval_every: 50,
+            eval_batches: 4,
+            log_every: 10,
+            checkpoint: None,
+            resume: None,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Learning rate at a step under the configured schedule.
+    pub fn lr_at(&self, step: usize) -> f32 {
+        match self.schedule {
+            Schedule::Constant => self.lr,
+            Schedule::WarmupCosine { warmup } => {
+                if step < warmup {
+                    self.lr * (step + 1) as f32 / warmup as f32
+                } else if self.steps <= warmup {
+                    self.lr
+                } else {
+                    let p = (step - warmup) as f32
+                        / (self.steps - warmup).max(1) as f32;
+                    let cos = 0.5 * (1.0 + (std::f32::consts::PI
+                                            * p.min(1.0)).cos());
+                    self.lr * (0.1 + 0.9 * cos)
+                }
+            }
+        }
+    }
+
+    /// Apply a parsed JSON config object (keys mirror field names).
+    pub fn apply_json(&mut self, j: &Json) -> Result<()> {
+        if let Some(v) = j.get("steps").and_then(|v| v.as_usize()) {
+            self.steps = v;
+        }
+        if let Some(v) = j.get("lr").and_then(|v| v.as_f64()) {
+            self.lr = v as f32;
+        }
+        if let Some(v) = j.get("seed").and_then(|v| v.as_i64()) {
+            self.seed = v as u64;
+        }
+        if let Some(v) = j.get("forget_bias").and_then(|v| v.as_f64()) {
+            self.forget_bias = v as f32;
+        }
+        if let Some(v) = j.get("eval_every").and_then(|v| v.as_usize()) {
+            self.eval_every = v;
+        }
+        if let Some(v) = j.get("eval_batches").and_then(|v| v.as_usize()) {
+            self.eval_batches = v;
+        }
+        if let Some(v) = j.get("log_every").and_then(|v| v.as_usize()) {
+            self.log_every = v;
+        }
+        if let Some(v) = j.get("variant").and_then(|v| v.as_str()) {
+            self.variant = v.to_string();
+        }
+        if let Some(v) = j.get("artifacts").and_then(|v| v.as_str()) {
+            self.artifacts = PathBuf::from(v);
+        }
+        if let Some(v) = j.get("schedule").and_then(|v| v.as_str()) {
+            self.schedule = match v {
+                "constant" => Schedule::Constant,
+                _ => Schedule::WarmupCosine {
+                    warmup: j.get("warmup").and_then(|w| w.as_usize())
+                        .unwrap_or(20),
+                },
+            };
+        }
+        Ok(())
+    }
+
+    /// Apply CLI options produced by the standard train option set.
+    pub fn apply_cli(&mut self, p: &Parsed) -> Result<()> {
+        if let Some(path) = p.get("config") {
+            let text = std::fs::read_to_string(path)?;
+            let j = json::parse(&text)
+                .map_err(|e| anyhow::anyhow!("config {path}: {e}"))?;
+            self.apply_json(&j)?;
+        }
+        if let Some(v) = p.get("artifacts") {
+            self.artifacts = PathBuf::from(v);
+        }
+        if let Some(v) = p.get("steps") {
+            self.steps = v.parse()?;
+        }
+        if let Some(v) = p.get("lr") {
+            self.lr = v.parse()?;
+        }
+        if let Some(v) = p.get("seed") {
+            self.seed = v.parse()?;
+        }
+        if let Some(v) = p.get("forget-bias") {
+            self.forget_bias = v.parse()?;
+        }
+        if let Some(v) = p.get("eval-every") {
+            self.eval_every = v.parse()?;
+        }
+        if let Some(v) = p.get("checkpoint") {
+            self.checkpoint = Some(PathBuf::from(v));
+        }
+        if let Some(v) = p.get("resume") {
+            self.resume = Some(PathBuf::from(v));
+        }
+        if p.flag("constant-lr") {
+            self.schedule = Schedule::Constant;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_warmup_then_decay() {
+        let cfg = TrainConfig { lr: 1.0, steps: 120,
+                                schedule: Schedule::WarmupCosine { warmup: 20 },
+                                ..Default::default() };
+        assert!(cfg.lr_at(0) < 0.1);
+        assert!((cfg.lr_at(19) - 1.0).abs() < 1e-6);
+        assert!(cfg.lr_at(119) < 0.2);
+        assert!(cfg.lr_at(60) < cfg.lr_at(25));
+    }
+
+    #[test]
+    fn json_overrides() {
+        let mut cfg = TrainConfig::default();
+        let j = json::parse(
+            r#"{"steps": 7, "lr": 0.5, "schedule": "constant"}"#).unwrap();
+        cfg.apply_json(&j).unwrap();
+        assert_eq!(cfg.steps, 7);
+        assert_eq!(cfg.lr, 0.5);
+        assert_eq!(cfg.schedule, Schedule::Constant);
+        assert_eq!(cfg.lr_at(3), 0.5);
+    }
+}

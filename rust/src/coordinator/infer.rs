@@ -1,0 +1,117 @@
+//! Inference engine: sequential decode (Algorithm 5/7 step executables),
+//! parallel prefill for context ingestion, sampling, and the DT-style RL
+//! rollout used for Table 3 scoring.
+
+use anyhow::{anyhow, Result};
+
+use crate::data::rl::OfflineDataset;
+use crate::data::rl::envs;
+use crate::runtime::Model;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Softmax sampling with temperature from a logits row.
+pub fn sample_logits(logits: &[f32], temperature: f32,
+                     rng: &mut Rng) -> usize {
+    if temperature <= 1e-6 {
+        return logits.iter().enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i).unwrap_or(0);
+    }
+    let max = logits.iter().cloned().fold(f32::MIN, f32::max);
+    let weights: Vec<f64> = logits.iter()
+        .map(|&l| (((l - max) / temperature) as f64).exp())
+        .collect();
+    rng.categorical(&weights)
+}
+
+/// Autoregressive generation for a single prompt (batch-1 step artifact).
+///
+/// The prompt is consumed token-by-token through the step executable (RNN
+/// decode is O(1)/token, so sequential prompt ingestion is exactly what
+/// Figure 3 measures for traditional RNNs; parallel models can use
+/// `prefill` when an artifact of matching shape exists).
+pub fn generate(model: &Model, params: &[xla::Literal], prompt: &[i32],
+                n_tokens: usize, temperature: f32,
+                rng: &mut Rng) -> Result<Vec<i32>> {
+    let mut state = model.decode_state_zeros(1)?;
+    let mut logits = Tensor::zeros_f32(vec![1, 1]);
+    for &tok in prompt {
+        let x = Tensor::i32(vec![1], vec![tok]);
+        let (l, s) = model.decode_step(params, &x, state)?;
+        logits = l;
+        state = s;
+    }
+    let mut out = Vec::with_capacity(n_tokens);
+    let mut last = *prompt.last()
+        .ok_or_else(|| anyhow!("empty prompt"))?;
+    for _ in 0..n_tokens {
+        let row = logits.data.as_f32()
+            .ok_or_else(|| anyhow!("logits not f32"))?;
+        last = sample_logits(row, temperature, rng) as i32;
+        out.push(last);
+        let x = Tensor::i32(vec![1], vec![last]);
+        let (l, s) = model.decode_step(params, &x, state)?;
+        logits = l;
+        state = s;
+    }
+    let _ = last;
+    Ok(out)
+}
+
+/// Decision-Transformer-style policy rollout in a live environment:
+/// condition on a target return-to-go, feed (rtg, obs, prev action)
+/// features through the decode step, execute the predicted action.
+/// Returns the raw episode return.
+pub fn rollout_decision(model: &Model, params: &[xla::Literal],
+                        ds: &OfflineDataset, target_return: f32,
+                        seed: u64) -> Result<f32> {
+    let mut env = envs::by_name(&ds.env_name)
+        .ok_or_else(|| anyhow!("unknown env {}", ds.env_name))?;
+    let mut rng = Rng::new(seed);
+    let mut obs = env.reset(&mut rng);
+    let mut state = model.decode_state_zeros(1)?;
+    let mut rtg = target_return;
+    let mut prev_action = vec![0f32; ds.act_dim];
+    let mut total = 0f32;
+    loop {
+        let mut feat = Vec::with_capacity(ds.feature_dim());
+        feat.push(rtg / ds.rtg_scale);
+        feat.extend(ds.norm_obs(&obs));
+        feat.extend(&prev_action);
+        let x = Tensor::f32(vec![1, ds.feature_dim()], feat);
+        let (pred, s) = model.decode_step(params, &x, state)?;
+        state = s;
+        let action: Vec<f32> = pred.data.as_f32()
+            .ok_or_else(|| anyhow!("action not f32"))?
+            .iter().map(|&a| a.clamp(-1.0, 1.0)).collect();
+        let (o, r, done) = env.step(&action);
+        obs = o;
+        total += r;
+        rtg -= r;
+        prev_action = action;
+        if done {
+            break;
+        }
+    }
+    Ok(total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampling_greedy_and_stochastic() {
+        let mut rng = Rng::new(0);
+        let logits = [0.0f32, 5.0, 1.0];
+        assert_eq!(sample_logits(&logits, 0.0, &mut rng), 1);
+        // at temperature 1 the argmax should still dominate
+        let mut hits = [0usize; 3];
+        for _ in 0..500 {
+            hits[sample_logits(&logits, 1.0, &mut rng)] += 1;
+        }
+        assert!(hits[1] > 400, "{hits:?}");
+        assert!(hits[0] + hits[2] > 0);
+    }
+}

@@ -1,0 +1,403 @@
+//! Coordinator: CLI entrypoints, training orchestration, inference engine,
+//! serving loop, and the experiment registry.
+
+pub mod infer;
+pub mod server;
+pub mod trainer;
+
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, Result};
+
+use crate::bench_harness::{self, Ctx};
+use crate::config::TrainConfig;
+use crate::data::corpus::CharVocab;
+use crate::runtime::{Manifest, Model, Runtime};
+use crate::util::cli::Command;
+use crate::util::rng::Rng;
+use crate::log_info;
+
+/// Experiment registry: id → description.
+pub const EXPERIMENTS: &[(&str, &str)] = &[
+    ("fig1", "training runtime/speedup/memory vs sequence length"),
+    ("tab1", "layers vs accuracy on Selective Copying"),
+    ("tab2", "Selective Copying vs modern baselines"),
+    ("tab3", "offline RL (D4RL-style), expert-normalized scores"),
+    ("fig2", "character LM learning curves"),
+    ("tab45", "Chomsky Hierarchy + Long Range Arena"),
+    ("tab6", "architecture ablation on ListOps"),
+    ("fig3", "inference runtime with context tokens"),
+    ("fig4", "decode-step runtime, minimal vs traditional RNNs"),
+    ("fig5", "minLSTM forget-gate bias initialization"),
+];
+
+pub fn run_experiment(ctx: &Ctx, id: &str) -> Result<()> {
+    match id {
+        "fig1" => bench_harness::fig1::run(ctx),
+        "tab1" => bench_harness::selective::run_tab1(ctx),
+        "tab2" => bench_harness::selective::run_tab2(ctx),
+        "tab3" => bench_harness::rl::run(ctx),
+        "fig2" => bench_harness::lm::run_fig2(ctx),
+        "tab45" => bench_harness::chomsky_lra::run_tab45(ctx),
+        "tab6" => bench_harness::chomsky_lra::run_tab6(ctx),
+        "fig3" => bench_harness::inference::run_fig3(ctx),
+        "fig4" => bench_harness::inference::run_fig4(ctx),
+        "fig5" => bench_harness::lm::run_fig5(ctx),
+        other => Err(anyhow!("unknown experiment '{other}'; known: {}",
+                             EXPERIMENTS.iter().map(|(n, _)| *n)
+                             .collect::<Vec<_>>().join(", "))),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CLI
+// ---------------------------------------------------------------------------
+
+const USAGE: &str = "minrnn — Were RNNs All We Needed? (minGRU/minLSTM)
+
+Subcommands:
+  list                         list artifact variants
+  info <variant>               show a variant's manifest entry
+  train <variant>              train a variant on its workload
+  generate <variant>           sample text from a (trained) LM variant
+  serve <variant>              dynamic-batching serving demo
+  experiment <id>|all          regenerate a paper table/figure
+  experiments                  list experiment ids
+  perf <variant>               profile the train-step hot path (L3 vs XLA)
+Run `minrnn <subcommand> --help` for options.";
+
+pub fn cli_main(args: Vec<String>) -> i32 {
+    crate::util::logging::init();
+    match dispatch(args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("{e:#}");
+            1
+        }
+    }
+}
+
+fn dispatch(args: Vec<String>) -> Result<()> {
+    let Some(sub) = args.first().cloned() else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match sub.as_str() {
+        "list" => cmd_list(rest),
+        "info" => cmd_info(rest),
+        "train" => cmd_train(rest),
+        "generate" => cmd_generate(rest),
+        "serve" => cmd_serve(rest),
+        "experiment" => cmd_experiment(rest),
+        "perf" => cmd_perf(rest),
+        "experiments" => {
+            for (id, desc) in EXPERIMENTS {
+                println!("{id:8} {desc}");
+            }
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(anyhow!("unknown subcommand '{other}'\n\n{USAGE}")),
+    }
+}
+
+fn artifacts_opt(cmd: Command) -> Command {
+    cmd.opt("artifacts", Some("artifacts"), "artifacts directory")
+}
+
+fn open_manifest(dir: &str) -> Result<Rc<Manifest>> {
+    Ok(Rc::new(Manifest::load(Path::new(dir))?))
+}
+
+fn cmd_list(args: &[String]) -> Result<()> {
+    let cmd = artifacts_opt(Command::new("list", "list artifact variants"));
+    let p = cmd.parse(args)?;
+    let manifest = open_manifest(p.req("artifacts")?)?;
+    println!("{:30} {:8} {:>7} {:>8} {:>10}",
+             "variant", "group", "batch", "seq_len", "params");
+    for v in manifest.variants.values() {
+        println!("{:30} {:8} {:>7} {:>8} {:>10}",
+                 v.name, v.group, v.batch, v.seq_len, v.param_elements());
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &[String]) -> Result<()> {
+    let cmd = artifacts_opt(Command::new("info", "show variant details"))
+        .positional("variant", "variant name");
+    let p = cmd.parse(args)?;
+    let manifest = open_manifest(p.req("artifacts")?)?;
+    let name = p.pos.first()
+        .ok_or_else(|| anyhow!("usage: minrnn info <variant>"))?;
+    let v = manifest.variant(name)?;
+    println!("variant   {}", v.name);
+    println!("group     {}", v.group);
+    println!("task      {}", v.task);
+    println!("workload  {}", v.workload_kind());
+    println!("batch     {}   seq_len {}", v.batch, v.seq_len);
+    println!("params    {} leaves, {} elements",
+             v.n_params(), v.param_elements());
+    println!("depth     parallel {}  sequential {}",
+             v.depth_parallel, v.depth_sequential);
+    println!("files:");
+    println!("  init    {}", v.init_file);
+    if let Some(t) = &v.train_file {
+        println!("  train   {t}");
+    }
+    for e in &v.eval_files {
+        println!("  eval    {} (b{} t{})", e.file, e.batch, e.seq_len);
+    }
+    for s in &v.step_files {
+        println!("  step    {} (b{})", s.file, s.batch);
+    }
+    for f in &v.prefill_files {
+        println!("  prefill {} (b{} t{})", f.file, f.batch, f.seq_len);
+    }
+    Ok(())
+}
+
+fn train_command() -> Command {
+    artifacts_opt(Command::new("train", "train a variant on its workload"))
+        .opt("steps", Some("200"), "optimizer steps")
+        .opt("lr", Some("0.001"), "peak learning rate")
+        .opt("seed", Some("0"), "seed")
+        .opt("forget-bias", Some("0"), "minLSTM forget-gate bias init")
+        .opt("eval-every", Some("50"), "steps between evals (0 = off)")
+        .opt("checkpoint", None, "directory for checkpoints")
+        .opt("resume", None, "checkpoint file to resume from")
+        .opt("config", None, "JSON config file (CLI overrides it)")
+        .flag("constant-lr", "disable warmup+cosine schedule")
+        .positional("variant", "artifact variant to train")
+}
+
+/// Build the workload data source for a variant from its manifest entry.
+pub fn data_source_for(v: &crate::runtime::Variant)
+                       -> Result<Box<dyn trainer::DataSource>> {
+    use crate::data::{chomsky, random_tokens, rl, selective_copy};
+    let kind = v.workload_kind();
+    let b = v.batch;
+    let t = v.seq_len;
+    if kind == "char_lm" {
+        let src = bench_harness::lm::LmSource::new(b, t);
+        return Ok(Box::new(src));
+    }
+    if kind == "random_tokens" {
+        let vocab = v.workload.get("vocab").and_then(|x| x.as_i64())
+            .unwrap_or(16) as i32;
+        return Ok(Box::new(trainer::FnSource {
+            f: move |rng: &mut Rng| random_tokens::batch(rng, b, t, vocab),
+        }));
+    }
+    if kind == "selective_copy" {
+        let ctx_len = v.workload.get("ctx_len").and_then(|x| x.as_usize())
+            .unwrap_or(256);
+        let n_data = v.workload.get("n_data").and_then(|x| x.as_usize())
+            .unwrap_or(16);
+        let task = selective_copy::SelectiveCopy::new(ctx_len, n_data);
+        return Ok(Box::new(trainer::FnSource {
+            f: move |rng: &mut Rng| task.batch(rng, b),
+        }));
+    }
+    if let Some(task_name) = kind.strip_prefix("chomsky/") {
+        let task = chomsky::by_name(task_name)
+            .ok_or_else(|| anyhow!("unknown chomsky task {task_name}"))?;
+        return Ok(Box::new(trainer::FnSource {
+            f: move |rng: &mut Rng| {
+                let max_c = task.max_content_for(t);
+                chomsky::batch(task.as_ref(), rng, b, t, 1, max_c)
+            },
+        }));
+    }
+    if let Some(task_name) = kind.strip_prefix("lra/") {
+        let src = bench_harness::chomsky_lra::LraSource {
+            kind: task_name.to_string(),
+            batch: b,
+            t,
+        };
+        return Ok(Box::new(src));
+    }
+    if let Some(env) = kind.strip_prefix("rl/") {
+        let ds = rl::OfflineDataset::build(env, rl::Regime::Medium, 100, 0);
+        return Ok(Box::new(trainer::FnSource {
+            f: move |rng: &mut Rng| ds.batch(rng, b, t),
+        }));
+    }
+    Err(anyhow!("no data source for workload '{kind}'"))
+}
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let p = train_command().parse(args)?;
+    let mut cfg = TrainConfig::default();
+    cfg.apply_cli(&p)?;
+    let variant = p.pos.first()
+        .ok_or_else(|| anyhow!("usage: minrnn train <variant>"))?
+        .clone();
+    cfg.variant = variant.clone();
+    cfg.artifacts = PathBuf::from(p.req("artifacts")?);
+
+    let rt = Runtime::cpu()?;
+    let manifest = open_manifest(cfg.artifacts.to_str().unwrap())?;
+    let model = Model::open(&rt, manifest, &variant)?;
+    let mut data = data_source_for(&model.variant)?;
+    let mut state = match &cfg.resume {
+        Some(path) => model.load_checkpoint(path)?,
+        None => model.init(cfg.seed as i32, cfg.forget_bias)?,
+    };
+    let trainer = trainer::Trainer::new(&model, cfg);
+    let report = trainer.run(&mut state, data.as_mut())?;
+    log_info!("done: final loss {:.4}, best eval {:.4} @ step {}, \
+               {:.2} steps/s",
+              report.final_loss, report.best_eval_loss,
+              report.best_eval_step, report.steps_per_sec);
+    Ok(())
+}
+
+fn cmd_generate(args: &[String]) -> Result<()> {
+    let cmd = artifacts_opt(
+        Command::new("generate", "sample text from an LM variant"))
+        .opt("prompt", Some("The "), "prompt text")
+        .opt("tokens", Some("200"), "tokens to generate")
+        .opt("temperature", Some("0.8"), "sampling temperature")
+        .opt("seed", Some("0"), "sampling seed")
+        .opt("resume", None, "checkpoint to load (default: fresh init)")
+        .positional("variant", "LM variant with a b=1 step executable");
+    let p = cmd.parse(args)?;
+    let variant = p.pos.first()
+        .ok_or_else(|| anyhow!("usage: minrnn generate <variant>"))?;
+    let rt = Runtime::cpu()?;
+    let manifest = open_manifest(p.req("artifacts")?)?;
+    let model = Model::open(&rt, manifest, variant)?;
+    let state = match p.get("resume") {
+        Some(path) => model.load_checkpoint(Path::new(path))?,
+        None => model.init(p.get("seed").unwrap().parse()?, 0.0)?,
+    };
+    let vocab = CharVocab::new();
+    let prompt = vocab.encode(p.req("prompt")?);
+    let mut rng = Rng::new(p.u64("seed")?);
+    let out = infer::generate(&model, &state.params, &prompt,
+                              p.usize("tokens")?, p.f32("temperature")?,
+                              &mut rng)?;
+    println!("{}{}", p.req("prompt")?, vocab.decode(&out));
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let cmd = artifacts_opt(
+        Command::new("serve", "dynamic-batching serving demo"))
+        .opt("requests", Some("24"), "number of synthetic requests")
+        .opt("tokens", Some("16"), "tokens per request")
+        .opt("seed", Some("0"), "seed")
+        .positional("variant", "LM variant with step executables");
+    let p = cmd.parse(args)?;
+    let variant = p.pos.first()
+        .ok_or_else(|| anyhow!("usage: minrnn serve <variant>"))?;
+    let rt = Runtime::cpu()?;
+    let manifest = open_manifest(p.req("artifacts")?)?;
+    let model = Model::open(&rt, manifest, variant)?;
+    let state = model.init(0, 0.0)?;
+    let n = p.usize("requests")?;
+    let n_tokens = p.usize("tokens")?;
+    let vocab = model.variant.cfg_usize("vocab_in").unwrap_or(64);
+    let mut rng = Rng::new(p.u64("seed")?);
+    let requests: Vec<server::Request> = (0..n).map(|i| server::Request {
+        id: i as u64,
+        prompt: (0..8 + rng.usize_below(8))
+            .map(|_| rng.below(vocab as u64) as i32).collect(),
+        n_tokens,
+    }).collect();
+    let stats = server::serve(&model, &state.params, requests, 0.8,
+                              p.u64("seed")?)?;
+    println!("served {} requests / {} tokens in {:.2}s",
+             stats.responses.len(), stats.tokens_generated, stats.total_s);
+    println!("throughput {:.1} tok/s, mean latency {:.1} ms",
+             stats.throughput_tok_s(), stats.mean_latency_s() * 1e3);
+    let mut batches: Vec<usize> = stats.responses.iter().map(|r| r.batch)
+        .collect();
+    batches.sort_unstable();
+    batches.dedup();
+    println!("batch sizes used: {batches:?}");
+    Ok(())
+}
+
+/// Profile the per-step cost split of the training hot path:
+/// host batch generation, input-literal construction, XLA execution,
+/// output fetch + tuple decomposition.  This is the L3 §Perf measurement
+/// (DESIGN.md §7): host overhead should be a small fraction of execute.
+fn cmd_perf(args: &[String]) -> Result<()> {
+    let cmd = artifacts_opt(Command::new("perf", "profile train hot path"))
+        .opt("steps", Some("30"), "measured steps")
+        .positional("variant", "artifact variant");
+    let p = cmd.parse(args)?;
+    let variant = p.pos.first()
+        .ok_or_else(|| anyhow!("usage: minrnn perf <variant>"))?;
+    let rt = Runtime::cpu()?;
+    let manifest = open_manifest(p.req("artifacts")?)?;
+    let model = Model::open(&rt, manifest, variant)?;
+    let mut data = data_source_for(&model.variant)?;
+    let mut state = model.init(0, 0.0)?;
+    let mut rng = Rng::new(0);
+
+    // warm (compile + caches)
+    let warm_batch = data.train_batch(&mut rng);
+    model.train_step(&mut state, &warm_batch, 1e-3, 0)?;
+    rt.take_profile();
+
+    let steps = p.usize("steps")?;
+    let mut gen_s = 0.0;
+    let mut lit_s = 0.0;
+    let t_all = std::time::Instant::now();
+    for i in 0..steps {
+        let t0 = std::time::Instant::now();
+        let batch = data.train_batch(&mut rng);
+        gen_s += t0.elapsed().as_secs_f64();
+        let t1 = std::time::Instant::now();
+        let _probe = batch.x.to_literal()?; // cost of literal conversion
+        lit_s += t1.elapsed().as_secs_f64();
+        model.train_step(&mut state, &batch, 1e-3, i as i32)?;
+    }
+    let total = t_all.elapsed().as_secs_f64();
+    let (exec, fetch) = rt.take_profile();
+    let other = total - gen_s - exec - fetch;
+    println!("variant {} — {} steps, {:.1} ms/step", variant, steps,
+             total / steps as f64 * 1e3);
+    let pct = |x: f64| 100.0 * x / total;
+    println!("  batch generation : {:7.2} ms/step ({:4.1}%)",
+             gen_s / steps as f64 * 1e3, pct(gen_s));
+    println!("  XLA execute      : {:7.2} ms/step ({:4.1}%)",
+             exec / steps as f64 * 1e3, pct(exec));
+    println!("  output fetch     : {:7.2} ms/step ({:4.1}%)",
+             fetch / steps as f64 * 1e3, pct(fetch));
+    println!("  other host       : {:7.2} ms/step ({:4.1}%)",
+             other / steps as f64 * 1e3, pct(other));
+    println!("  (input-literal probe: {:.3} ms/step)",
+             lit_s / steps as f64 * 1e3);
+    Ok(())
+}
+
+fn cmd_experiment(args: &[String]) -> Result<()> {
+    let cmd = artifacts_opt(
+        Command::new("experiment", "regenerate a paper table/figure"))
+        .flag("full", "full-scale run (default: quick)")
+        .positional("id", "experiment id or 'all'");
+    let p = cmd.parse(args)?;
+    let id = p.pos.first()
+        .ok_or_else(|| anyhow!("usage: minrnn experiment <id>|all"))?;
+    if p.flag("full") {
+        std::env::set_var("MINRNN_FULL", "1");
+    }
+    let ctx = Ctx::new(Path::new(p.req("artifacts")?))?;
+    if id == "all" {
+        for (eid, _) in EXPERIMENTS {
+            log_info!("=== experiment {eid} ===");
+            run_experiment(&ctx, eid)?;
+        }
+        Ok(())
+    } else {
+        run_experiment(&ctx, id)
+    }
+}

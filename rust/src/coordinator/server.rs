@@ -1,0 +1,195 @@
+//! Serving layer: request queue + dynamic batcher + continuous batched
+//! decode over the fixed-batch step executables.
+//!
+//! PJRT handles are not `Send`, so the serving loop owns the runtime and
+//! requests are plain host data.  The batcher picks the largest exported
+//! batch size that the queue can fill (padding idle lanes), the decode
+//! loop runs all lanes in lockstep — prompt tokens are consumed lane-wise
+//! (RNN decode is O(1)/token), then sampling continues until each lane has
+//! its requested tokens.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::Model;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+use super::infer::sample_logits;
+
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub n_tokens: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    /// Seconds spent waiting in queue before the batch started.
+    pub queue_s: f64,
+    /// Seconds from batch start to this request's completion.
+    pub service_s: f64,
+    /// Batch size this request was served in.
+    pub batch: usize,
+}
+
+/// Picks batch sizes: largest exported size ≤ queue length, else the
+/// smallest exported size (padding idle lanes) once anything is waiting.
+pub fn plan_batch(queue_len: usize, available: &[usize]) -> Option<usize> {
+    if queue_len == 0 {
+        return None;
+    }
+    let mut sizes: Vec<usize> = available.to_vec();
+    sizes.sort_unstable();
+    sizes.iter().rev().find(|&&b| b <= queue_len).copied()
+        .or_else(|| sizes.first().copied())
+}
+
+pub struct ServeStats {
+    pub responses: Vec<Response>,
+    pub total_s: f64,
+    pub tokens_generated: usize,
+}
+
+impl ServeStats {
+    pub fn throughput_tok_s(&self) -> f64 {
+        self.tokens_generated as f64 / self.total_s.max(1e-9)
+    }
+
+    pub fn mean_latency_s(&self) -> f64 {
+        if self.responses.is_empty() {
+            return 0.0;
+        }
+        self.responses.iter().map(|r| r.queue_s + r.service_s).sum::<f64>()
+            / self.responses.len() as f64
+    }
+}
+
+/// Serve a workload of requests to completion using dynamic batching.
+pub fn serve(model: &Model, params: &[xla::Literal],
+             requests: Vec<Request>, temperature: f32,
+             seed: u64) -> Result<ServeStats> {
+    let available: Vec<usize> = model.variant.step_files.iter()
+        .map(|s| s.batch).collect();
+    if available.is_empty() {
+        return Err(anyhow!("variant {} exports no step executables",
+                           model.variant.name));
+    }
+    let mut rng = Rng::new(seed);
+    let mut queue: VecDeque<(Request, Instant)> =
+        requests.into_iter().map(|r| (r, Instant::now())).collect();
+    let mut responses = Vec::new();
+    let mut tokens_generated = 0usize;
+    let t_start = Instant::now();
+
+    while let Some(bsize) = plan_batch(queue.len(), &available) {
+        let take = bsize.min(queue.len());
+        let batch: Vec<(Request, Instant)> =
+            (0..take).filter_map(|_| queue.pop_front()).collect();
+        let batch_start = Instant::now();
+
+        // lane state
+        let mut state = model.decode_state_zeros(bsize)?;
+        let mut pos = vec![0usize; bsize];            // prompt cursor
+        let mut done_at: Vec<Option<Instant>> = vec![None; bsize];
+        let mut outputs: Vec<Vec<i32>> = vec![Vec::new(); bsize];
+        let mut last_logits: Option<Tensor> = None;
+
+        loop {
+            // build the lane-wise input token vector
+            let mut xs = vec![0i32; bsize];
+            let mut any_active = false;
+            for lane in 0..bsize {
+                if lane >= batch.len() {
+                    continue; // padding lane
+                }
+                let req = &batch[lane].0;
+                if pos[lane] < req.prompt.len() {
+                    xs[lane] = req.prompt[pos[lane]];
+                    any_active = true;
+                } else if outputs[lane].len() < req.n_tokens {
+                    // feed the last sampled token
+                    xs[lane] = outputs[lane].last().copied()
+                        .unwrap_or_else(|| *req.prompt.last().unwrap_or(&0));
+                    any_active = true;
+                }
+            }
+            if !any_active {
+                break;
+            }
+
+            let x = Tensor::i32(vec![bsize], xs);
+            let (logits, new_state) = model.decode_step(params, &x, state)?;
+            state = new_state;
+
+            // consume logits: lanes past their prompt sample a token
+            let vocab = logits.dims[1];
+            let rows = logits.data.as_f32()
+                .ok_or_else(|| anyhow!("logits not f32"))?;
+            for lane in 0..bsize.min(batch.len()) {
+                let req = &batch[lane].0;
+                if pos[lane] < req.prompt.len() {
+                    pos[lane] += 1;
+                    if pos[lane] < req.prompt.len() {
+                        continue;
+                    }
+                    // prompt just finished → next step samples
+                }
+                if pos[lane] >= req.prompt.len()
+                    && outputs[lane].len() < req.n_tokens {
+                    let row = &rows[lane * vocab..(lane + 1) * vocab];
+                    let tok = sample_logits(row, temperature, &mut rng)
+                        as i32;
+                    outputs[lane].push(tok);
+                    tokens_generated += 1;
+                    if outputs[lane].len() == req.n_tokens
+                        && done_at[lane].is_none() {
+                        done_at[lane] = Some(Instant::now());
+                    }
+                }
+            }
+            last_logits = Some(logits);
+        }
+        let _ = last_logits;
+
+        for (lane, (req, enqueued)) in batch.into_iter().enumerate() {
+            let finished = done_at[lane].unwrap_or_else(Instant::now);
+            responses.push(Response {
+                id: req.id,
+                tokens: std::mem::take(&mut outputs[lane]),
+                queue_s: (batch_start - enqueued).as_secs_f64(),
+                service_s: (finished - batch_start).as_secs_f64(),
+                batch: bsize,
+            });
+        }
+    }
+
+    Ok(ServeStats {
+        responses,
+        total_s: t_start.elapsed().as_secs_f64(),
+        tokens_generated,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_batch_policy() {
+        let avail = [1usize, 8, 32];
+        assert_eq!(plan_batch(0, &avail), None);
+        assert_eq!(plan_batch(1, &avail), Some(1));
+        assert_eq!(plan_batch(7, &avail), Some(1));
+        assert_eq!(plan_batch(8, &avail), Some(8));
+        assert_eq!(plan_batch(31, &avail), Some(8));
+        assert_eq!(plan_batch(100, &avail), Some(32));
+        // only large batches exported → pad up
+        assert_eq!(plan_batch(3, &[8]), Some(8));
+    }
+}

@@ -1,0 +1,155 @@
+//! Training loop: drives the AOT train-step executable with host-side
+//! batching, LR scheduling, periodic evaluation, early stopping, and
+//! checkpointing.  One PJRT call per optimizer step — gradients never
+//! reach the host.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::runtime::{EvalMetrics, Model, TrainState};
+use crate::tensor::Batch;
+use crate::util::rng::Rng;
+use crate::util::stats::Ema;
+use crate::log_info;
+
+/// Anything that can produce training / evaluation batches.
+pub trait DataSource {
+    fn train_batch(&mut self, rng: &mut Rng) -> Batch;
+    /// Defaults to a fresh training batch (on-the-fly tasks).
+    fn eval_batch(&mut self, rng: &mut Rng) -> Batch {
+        self.train_batch(rng)
+    }
+}
+
+/// Closure-backed data source.
+pub struct FnSource<F: FnMut(&mut Rng) -> Batch> {
+    pub f: F,
+}
+
+impl<F: FnMut(&mut Rng) -> Batch> DataSource for FnSource<F> {
+    fn train_batch(&mut self, rng: &mut Rng) -> Batch {
+        (self.f)(rng)
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct TrainReport {
+    /// (step, raw loss) at every log point.
+    pub loss_curve: Vec<(usize, f32)>,
+    /// (step, eval metrics) at every eval point.
+    pub eval_curve: Vec<(usize, EvalMetrics)>,
+    pub final_loss: f32,
+    pub best_eval_loss: f32,
+    pub best_eval_step: usize,
+    pub final_eval: Option<EvalMetrics>,
+    pub steps_per_sec: f64,
+    pub steps_run: usize,
+}
+
+pub struct Trainer<'m, 'rt> {
+    pub model: &'m Model<'rt>,
+    pub cfg: TrainConfig,
+    /// Stop if eval loss hasn't improved for this many evals (0 = never).
+    pub patience: usize,
+}
+
+impl<'m, 'rt> Trainer<'m, 'rt> {
+    pub fn new(model: &'m Model<'rt>, cfg: TrainConfig) -> Self {
+        Trainer { model, cfg, patience: 0 }
+    }
+
+    /// Run the configured number of steps; returns the report and leaves
+    /// the trained state in `state`.
+    pub fn run(&self, state: &mut TrainState, data: &mut dyn DataSource)
+               -> Result<TrainReport> {
+        let mut rng = Rng::new(self.cfg.seed ^ 0x7124_11);
+        let mut eval_rng = Rng::new(self.cfg.seed ^ 0xEEE1);
+        let mut report = TrainReport {
+            best_eval_loss: f32::INFINITY,
+            ..Default::default()
+        };
+        let mut ema = Ema::new(0.1);
+        let mut evals_since_best = 0usize;
+        let t0 = Instant::now();
+
+        for step in 0..self.cfg.steps {
+            let batch = data.train_batch(&mut rng);
+            let lr = self.cfg.lr_at(step);
+            let m = self.model.train_step(state, &batch, lr,
+                                          (self.cfg.seed as i32)
+                                          ^ (step as i32).wrapping_mul(2654435761u32 as i32))?;
+            let smooth = ema.push(m.loss as f64);
+            if step % self.cfg.log_every.max(1) == 0
+                || step + 1 == self.cfg.steps {
+                report.loss_curve.push((step, m.loss));
+                log_info!("{} step {step:5} loss {:.4} (ema {:.4}) \
+                           gnorm {:.3} lr {:.2e}",
+                          self.model.variant.name, m.loss, smooth,
+                          m.grad_norm, lr);
+            }
+            report.final_loss = m.loss;
+
+            let do_eval = self.cfg.eval_every > 0
+                && !self.model.variant.eval_files.is_empty()
+                && ((step + 1) % self.cfg.eval_every == 0
+                    || step + 1 == self.cfg.steps);
+            if do_eval {
+                let em = self.evaluate(state, data, &mut eval_rng)?;
+                report.eval_curve.push((step + 1, em));
+                log_info!("{} eval@{}: loss {:.4} tok_acc {:.3} \
+                           seq_acc {:.3}",
+                          self.model.variant.name, step + 1, em.loss,
+                          em.token_acc, em.seq_acc);
+                if em.loss < report.best_eval_loss {
+                    report.best_eval_loss = em.loss;
+                    report.best_eval_step = step + 1;
+                    evals_since_best = 0;
+                    if let Some(dir) = &self.cfg.checkpoint {
+                        std::fs::create_dir_all(dir)?;
+                        self.model.save_checkpoint(
+                            state, &dir.join(format!(
+                                "{}.best.ckpt", self.model.variant.name)))?;
+                    }
+                } else {
+                    evals_since_best += 1;
+                    if self.patience > 0 && evals_since_best >= self.patience {
+                        log_info!("early stop at step {} (patience {})",
+                                  step + 1, self.patience);
+                        report.steps_run = step + 1;
+                        break;
+                    }
+                }
+                report.final_eval = Some(em);
+            }
+            report.steps_run = step + 1;
+        }
+
+        report.steps_per_sec =
+            report.steps_run as f64 / t0.elapsed().as_secs_f64();
+        if let Some(dir) = &self.cfg.checkpoint {
+            std::fs::create_dir_all(dir)?;
+            self.model.save_checkpoint(
+                state,
+                &dir.join(format!("{}.final.ckpt",
+                                  self.model.variant.name)))?;
+        }
+        Ok(report)
+    }
+
+    /// Average eval metrics over `eval_batches` fresh batches.
+    pub fn evaluate(&self, state: &TrainState, data: &mut dyn DataSource,
+                    rng: &mut Rng) -> Result<EvalMetrics> {
+        let n = self.cfg.eval_batches.max(1);
+        let mut acc = EvalMetrics::default();
+        for _ in 0..n {
+            let b = data.eval_batch(rng);
+            let m = self.model.eval(state, &b)?;
+            acc.loss += m.loss / n as f32;
+            acc.token_acc += m.token_acc / n as f32;
+            acc.seq_acc += m.seq_acc / n as f32;
+        }
+        Ok(acc)
+    }
+}

@@ -1,0 +1,148 @@
+//! Chomsky Hierarchy benchmark tasks (Deletang et al. 2023) plus the two
+//! xLSTM additions (Majority, Majority Count) — Tables 4/5.
+//!
+//! Every task emits `(input, target, mask)` triples of variable length that
+//! the batcher pads to the executable's static T.  Shared token map
+//! (vocab 16): 0 = PAD, 1 = SEP / answer-slot marker, task symbols from 2.
+//!
+//! Models train on content lengths ≤ `train_max_content` and are evaluated
+//! on longer sequences (length generalization).
+
+use crate::tensor::{Batch, Tensor};
+use crate::util::rng::Rng;
+
+pub mod tasks;
+
+pub use tasks::{BucketSort, CycleNav, EvenPairs, Majority, MajorityCount,
+                MissingDuplicate};
+
+pub const PAD: i32 = 0;
+pub const SEP: i32 = 1;
+
+/// One generated example.
+#[derive(Clone, Debug)]
+pub struct Example {
+    pub input: Vec<i32>,
+    pub target: Vec<i32>,
+    pub mask: Vec<f32>,
+}
+
+impl Example {
+    pub fn len(&self) -> usize {
+        self.input.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.input.is_empty()
+    }
+}
+
+/// A formal-language transduction task.
+pub trait ChomskyTask {
+    /// Stable identifier used in artifact names ("bucket_sort", ...).
+    fn name(&self) -> &'static str;
+
+    /// Total sequence length for a given content length.
+    fn total_len(&self, content: usize) -> usize;
+
+    /// Largest content length whose total fits in `t`.
+    fn max_content_for(&self, t: usize) -> usize {
+        let mut n = 1;
+        while self.total_len(n + 1) <= t {
+            n += 1;
+        }
+        n
+    }
+
+    /// Generate one example with the given content length.
+    fn sample(&self, rng: &mut Rng, content: usize) -> Example;
+}
+
+/// Pad examples to length `t` and stack into a Batch.
+pub fn collate(examples: &[Example], t: usize) -> Batch {
+    let b = examples.len();
+    let mut x = vec![PAD; b * t];
+    let mut y = vec![0i32; b * t];
+    let mut m = vec![0f32; b * t];
+    for (i, ex) in examples.iter().enumerate() {
+        assert!(ex.len() <= t, "example len {} > T {}", ex.len(), t);
+        let off = i * t;
+        x[off..off + ex.len()].copy_from_slice(&ex.input);
+        y[off..off + ex.len()].copy_from_slice(&ex.target);
+        m[off..off + ex.len()].copy_from_slice(&ex.mask);
+    }
+    Batch {
+        x: Tensor::i32(vec![b, t], x),
+        targets: Tensor::i32(vec![b, t], y),
+        mask: Tensor::f32(vec![b, t], m),
+    }
+}
+
+/// Fresh batch with content lengths uniform in [min_content, max_content].
+pub fn batch(task: &dyn ChomskyTask, rng: &mut Rng, batch_size: usize,
+             t: usize, min_content: usize, max_content: usize) -> Batch {
+    let hi = task.max_content_for(t).min(max_content);
+    let lo = min_content.min(hi).max(1);
+    let examples: Vec<Example> = (0..batch_size).map(|_| {
+        let n = lo + rng.usize_below(hi - lo + 1);
+        task.sample(rng, n)
+    }).collect();
+    collate(&examples, t)
+}
+
+/// All tasks, boxed, in the paper's Table 5 order.
+pub fn all_tasks() -> Vec<Box<dyn ChomskyTask>> {
+    vec![Box::new(BucketSort), Box::new(MissingDuplicate),
+         Box::new(CycleNav), Box::new(EvenPairs),
+         Box::new(Majority), Box::new(MajorityCount)]
+}
+
+pub fn by_name(name: &str) -> Option<Box<dyn ChomskyTask>> {
+    all_tasks().into_iter().find(|t| t.name() == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collate_pads() {
+        let ex = Example {
+            input: vec![2, 3, 1],
+            target: vec![0, 0, 2],
+            mask: vec![0.0, 0.0, 1.0],
+        };
+        let b = collate(&[ex], 6);
+        assert_eq!(b.x.data.as_i32().unwrap(), &[2, 3, 1, 0, 0, 0]);
+        assert_eq!(b.mask.data.as_f32().unwrap(),
+                   &[0.0, 0.0, 1.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn max_content_roundtrip() {
+        for task in all_tasks() {
+            let n = task.max_content_for(64);
+            assert!(task.total_len(n) <= 64,
+                    "{}: total {} > 64", task.name(), task.total_len(n));
+            assert!(task.total_len(n + 1) > 64, "{} not maximal", task.name());
+        }
+    }
+
+    #[test]
+    fn all_tasks_generate_within_vocab() {
+        let mut rng = Rng::new(0);
+        for task in all_tasks() {
+            for _ in 0..20 {
+                let ex = task.sample(&mut rng, 12);
+                assert!(ex.input.iter().all(|&t| (0..16).contains(&t)),
+                        "{} input out of vocab", task.name());
+                assert!(ex.target.iter().all(|&t| (0..16).contains(&t)),
+                        "{} target out of vocab", task.name());
+                assert_eq!(ex.input.len(), ex.target.len());
+                assert_eq!(ex.input.len(), ex.mask.len());
+                assert!(ex.mask.iter().any(|&m| m > 0.0),
+                        "{} empty mask", task.name());
+            }
+        }
+    }
+}

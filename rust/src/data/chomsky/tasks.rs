@@ -1,0 +1,319 @@
+//! The six Chomsky-hierarchy tasks of Table 5.
+//!
+//! Layouts (0 = PAD, 1 = SEP/answer marker):
+//!   BucketSort       : w (n sym ∈ 2..=6)  SEP  n answer slots → sorted w
+//!   MissingDuplicate : w (n sym ∈ {2,3})  w-with-one-MASK(4)  SEP  1 slot
+//!   CycleNav         : n moves ∈ {2:+1, 3:-1, 4:stay}  SEP  1 slot
+//!                      → final position on a 5-cycle as token 5+pos
+//!   EvenPairs        : w (n sym ∈ {2,3})  SEP  1 slot → 5 iff first==last
+//!                      (⇔ even number of ab/ba boundary pairs) else 6
+//!   Majority         : w (n sym ∈ {2,3,4})  SEP  1 slot → majority symbol
+//!   MajorityCount    : w (n sym ∈ {2,3})   SEP  9 slots → count of the
+//!                      majority symbol, 9-bit binary MSB-first (2=0, 3=1)
+
+use super::{ChomskyTask, Example, SEP};
+use crate::util::rng::Rng;
+
+const MASK_TOK: i32 = 4;
+
+fn answer_section(input: &mut Vec<i32>, target: &mut Vec<i32>,
+                  mask: &mut Vec<f32>, answers: &[i32]) {
+    for &a in answers {
+        input.push(SEP);
+        target.push(a);
+        mask.push(1.0);
+    }
+}
+
+fn content_section(input: &mut Vec<i32>, target: &mut Vec<i32>,
+                   mask: &mut Vec<f32>, content: &[i32]) {
+    input.extend_from_slice(content);
+    target.extend(std::iter::repeat(0).take(content.len()));
+    mask.extend(std::iter::repeat(0.0).take(content.len()));
+}
+
+fn sep(input: &mut Vec<i32>, target: &mut Vec<i32>, mask: &mut Vec<f32>) {
+    input.push(SEP);
+    target.push(0);
+    mask.push(0.0);
+}
+
+// ---------------------------------------------------------------------------
+
+pub struct BucketSort;
+
+impl ChomskyTask for BucketSort {
+    fn name(&self) -> &'static str {
+        "bucket_sort"
+    }
+
+    fn total_len(&self, n: usize) -> usize {
+        2 * n + 1
+    }
+
+    fn sample(&self, rng: &mut Rng, n: usize) -> Example {
+        let w: Vec<i32> = (0..n).map(|_| 2 + rng.below(5) as i32).collect();
+        let mut sorted = w.clone();
+        sorted.sort_unstable();
+        let (mut i, mut t, mut m) = (Vec::new(), Vec::new(), Vec::new());
+        content_section(&mut i, &mut t, &mut m, &w);
+        sep(&mut i, &mut t, &mut m);
+        answer_section(&mut i, &mut t, &mut m, &sorted);
+        Example { input: i, target: t, mask: m }
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+pub struct MissingDuplicate;
+
+impl ChomskyTask for MissingDuplicate {
+    fn name(&self) -> &'static str {
+        "missing_duplicate"
+    }
+
+    fn total_len(&self, n: usize) -> usize {
+        2 * n + 2
+    }
+
+    fn sample(&self, rng: &mut Rng, n: usize) -> Example {
+        let w: Vec<i32> = (0..n).map(|_| 2 + rng.below(2) as i32).collect();
+        let hole = rng.usize_below(n);
+        let mut w2 = w.clone();
+        let answer = w2[hole];
+        w2[hole] = MASK_TOK;
+        let (mut i, mut t, mut m) = (Vec::new(), Vec::new(), Vec::new());
+        content_section(&mut i, &mut t, &mut m, &w);
+        content_section(&mut i, &mut t, &mut m, &w2);
+        sep(&mut i, &mut t, &mut m);
+        answer_section(&mut i, &mut t, &mut m, &[answer]);
+        Example { input: i, target: t, mask: m }
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+pub struct CycleNav;
+
+pub const CYCLE: i32 = 5;
+
+impl ChomskyTask for CycleNav {
+    fn name(&self) -> &'static str {
+        "cycle_nav"
+    }
+
+    fn total_len(&self, n: usize) -> usize {
+        n + 2
+    }
+
+    fn sample(&self, rng: &mut Rng, n: usize) -> Example {
+        let moves: Vec<i32> = (0..n).map(|_| 2 + rng.below(3) as i32)
+            .collect();
+        let mut pos: i32 = 0;
+        for &mv in &moves {
+            pos = match mv {
+                2 => (pos + 1).rem_euclid(CYCLE),
+                3 => (pos - 1).rem_euclid(CYCLE),
+                _ => pos,
+            };
+        }
+        let (mut i, mut t, mut m) = (Vec::new(), Vec::new(), Vec::new());
+        content_section(&mut i, &mut t, &mut m, &moves);
+        sep(&mut i, &mut t, &mut m);
+        answer_section(&mut i, &mut t, &mut m, &[5 + pos]);
+        Example { input: i, target: t, mask: m }
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+pub struct EvenPairs;
+
+impl ChomskyTask for EvenPairs {
+    fn name(&self) -> &'static str {
+        "even_pairs"
+    }
+
+    fn total_len(&self, n: usize) -> usize {
+        n + 2
+    }
+
+    fn sample(&self, rng: &mut Rng, n: usize) -> Example {
+        let w: Vec<i32> = (0..n).map(|_| 2 + rng.below(2) as i32).collect();
+        let even = w.first() == w.last();
+        let (mut i, mut t, mut m) = (Vec::new(), Vec::new(), Vec::new());
+        content_section(&mut i, &mut t, &mut m, &w);
+        sep(&mut i, &mut t, &mut m);
+        answer_section(&mut i, &mut t, &mut m,
+                       &[if even { 5 } else { 6 }]);
+        Example { input: i, target: t, mask: m }
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+pub struct Majority;
+
+impl ChomskyTask for Majority {
+    fn name(&self) -> &'static str {
+        "majority"
+    }
+
+    fn total_len(&self, n: usize) -> usize {
+        n + 2
+    }
+
+    fn sample(&self, rng: &mut Rng, n: usize) -> Example {
+        let w: Vec<i32> = (0..n).map(|_| 2 + rng.below(3) as i32).collect();
+        let mut counts = [0usize; 3];
+        for &s in &w {
+            counts[(s - 2) as usize] += 1;
+        }
+        let best = (0..3).max_by_key(|&k| (counts[k], 2 - k)).unwrap();
+        let (mut i, mut t, mut m) = (Vec::new(), Vec::new(), Vec::new());
+        content_section(&mut i, &mut t, &mut m, &w);
+        sep(&mut i, &mut t, &mut m);
+        answer_section(&mut i, &mut t, &mut m, &[2 + best as i32]);
+        Example { input: i, target: t, mask: m }
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+pub struct MajorityCount;
+
+pub const COUNT_BITS: usize = 9;
+
+impl ChomskyTask for MajorityCount {
+    fn name(&self) -> &'static str {
+        "majority_count"
+    }
+
+    fn total_len(&self, n: usize) -> usize {
+        n + 1 + COUNT_BITS
+    }
+
+    fn sample(&self, rng: &mut Rng, n: usize) -> Example {
+        let w: Vec<i32> = (0..n).map(|_| 2 + rng.below(2) as i32).collect();
+        let ones = w.iter().filter(|&&s| s == 3).count();
+        let count = ones.max(n - ones);
+        let bits: Vec<i32> = (0..COUNT_BITS).rev()
+            .map(|b| 2 + ((count >> b) & 1) as i32)
+            .collect();
+        let (mut i, mut t, mut m) = (Vec::new(), Vec::new(), Vec::new());
+        content_section(&mut i, &mut t, &mut m, &w);
+        sep(&mut i, &mut t, &mut m);
+        answer_section(&mut i, &mut t, &mut m, &bits);
+        Example { input: i, target: t, mask: m }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::chomsky::ChomskyTask;
+
+    #[test]
+    fn bucket_sort_sorted_answers() {
+        let mut rng = Rng::new(0);
+        for n in [1usize, 2, 5, 17] {
+            let ex = BucketSort.sample(&mut rng, n);
+            assert_eq!(ex.input.len(), 2 * n + 1);
+            let answers: Vec<i32> = ex.target.iter().zip(&ex.mask)
+                .filter(|(_, &m)| m > 0.0).map(|(&t, _)| t).collect();
+            assert_eq!(answers.len(), n);
+            let mut expect: Vec<i32> = ex.input[..n].to_vec();
+            expect.sort_unstable();
+            assert_eq!(answers, expect, "n={n}");
+        }
+    }
+
+    #[test]
+    fn missing_duplicate_recoverable() {
+        let mut rng = Rng::new(1);
+        for _ in 0..30 {
+            let ex = MissingDuplicate.sample(&mut rng, 9);
+            let w = &ex.input[..9];
+            let w2 = &ex.input[9..18];
+            let hole = w2.iter().position(|&s| s == MASK_TOK).unwrap();
+            let answer = ex.target.iter().zip(&ex.mask)
+                .find(|(_, &m)| m > 0.0).unwrap().0;
+            assert_eq!(*answer, w[hole]);
+            // the two halves agree everywhere else
+            for k in 0..9 {
+                if k != hole {
+                    assert_eq!(w[k], w2[k]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cycle_nav_known_sequence() {
+        // +1 +1 -1 stay +1 → position 2
+        let ex = {
+            let mut rng = Rng::new(2);
+            // generate until we get the desired move pattern? no — compute
+            // directly by constructing the example by hand through sample's
+            // own logic: instead verify consistency re-simulating.
+            CycleNav.sample(&mut rng, 13)
+        };
+        let moves = &ex.input[..13];
+        let mut pos: i32 = 0;
+        for &mv in moves {
+            pos = match mv {
+                2 => (pos + 1).rem_euclid(5),
+                3 => (pos - 1).rem_euclid(5),
+                _ => pos,
+            };
+        }
+        let ans = ex.target.iter().zip(&ex.mask)
+            .find(|(_, &m)| m > 0.0).unwrap().0;
+        assert_eq!(*ans, 5 + pos);
+    }
+
+    #[test]
+    fn even_pairs_first_last() {
+        let mut rng = Rng::new(3);
+        for _ in 0..30 {
+            let ex = EvenPairs.sample(&mut rng, 7);
+            let w = &ex.input[..7];
+            let ans = *ex.target.iter().zip(&ex.mask)
+                .find(|(_, &m)| m > 0.0).unwrap().0;
+            assert_eq!(ans == 5, w[0] == w[6]);
+        }
+    }
+
+    #[test]
+    fn majority_is_argmax() {
+        let mut rng = Rng::new(4);
+        for _ in 0..30 {
+            let ex = Majority.sample(&mut rng, 11);
+            let w = &ex.input[..11];
+            let ans = *ex.target.iter().zip(&ex.mask)
+                .find(|(_, &m)| m > 0.0).unwrap().0;
+            let count = |s: i32| w.iter().filter(|&&x| x == s).count();
+            for s in 2..=4 {
+                assert!(count(ans) >= count(s),
+                        "answer {ans} not majority in {w:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn majority_count_binary() {
+        let mut rng = Rng::new(5);
+        for _ in 0..30 {
+            let ex = MajorityCount.sample(&mut rng, 10);
+            let w = &ex.input[..10];
+            let ones = w.iter().filter(|&&s| s == 3).count();
+            let count = ones.max(10 - ones);
+            let bits: Vec<i32> = ex.target.iter().zip(&ex.mask)
+                .filter(|(_, &m)| m > 0.0).map(|(&t, _)| t).collect();
+            assert_eq!(bits.len(), COUNT_BITS);
+            let decoded = bits.iter()
+                .fold(0usize, |acc, &b| acc * 2 + (b - 2) as usize);
+            assert_eq!(decoded, count);
+        }
+    }
+}

@@ -1,0 +1,251 @@
+//! Character-level language-modelling corpus (Figure 2).
+//!
+//! Substitution for the Shakespeare corpus (no network access —
+//! DESIGN.md §3): a deterministic synthetic English-like text source.
+//! Words are built from syllables, ranked by a Zipf law (natural-language
+//! frequency shape), and chained with a first-order Markov process over
+//! part-of-speech-like slots so local structure exists for a model to
+//! learn; sentences carry capitalization and punctuation.
+//!
+//! The fixed 64-symbol character vocabulary covers a–z, space, newline,
+//! digits and punctuation; `CharVocab` maps chars ↔ token ids.
+
+use crate::tensor::{Batch, Tensor};
+use crate::util::rng::{Rng, Zipf};
+
+/// Fixed character inventory (64 symbols).  Index = token id.
+pub const ALPHABET: &str =
+    "\n abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ.,;:!?'-01";
+
+#[derive(Clone, Debug)]
+pub struct CharVocab {
+    to_id: [i32; 128],
+    chars: Vec<char>,
+}
+
+impl Default for CharVocab {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CharVocab {
+    pub fn new() -> Self {
+        let chars: Vec<char> = ALPHABET.chars().collect();
+        assert_eq!(chars.len(), 64);
+        let mut to_id = [-1i32; 128];
+        for (i, &c) in chars.iter().enumerate() {
+            to_id[c as usize] = i as i32;
+        }
+        CharVocab { to_id, chars }
+    }
+
+    pub fn size(&self) -> usize {
+        self.chars.len()
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.chars()
+            .map(|c| {
+                let idx = c as usize;
+                if idx < 128 && self.to_id[idx] >= 0 {
+                    self.to_id[idx]
+                } else {
+                    1 // unknown → space
+                }
+            })
+            .collect()
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> String {
+        ids.iter()
+            .map(|&i| self.chars.get(i as usize).copied().unwrap_or('?'))
+            .collect()
+    }
+}
+
+/// Synthetic text generator.
+pub struct CorpusGen {
+    lexicon: Vec<String>,
+    zipf: Zipf,
+}
+
+const ONSETS: &[&str] = &["b", "c", "d", "f", "g", "h", "l", "m", "n", "p",
+                          "r", "s", "t", "v", "w", "th", "st", "ch", "br",
+                          "gr", "sh", "pl", ""];
+const NUCLEI: &[&str] = &["a", "e", "i", "o", "u", "ea", "ou", "ai", "ee"];
+const CODAS: &[&str] = &["", "n", "r", "s", "t", "l", "d", "m", "ng", "st",
+                         "ck"];
+
+impl CorpusGen {
+    pub fn new(lexicon_size: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0x1ec5_1ab1);
+        let mut lexicon = Vec::with_capacity(lexicon_size);
+        let mut seen = std::collections::HashSet::new();
+        while lexicon.len() < lexicon_size {
+            let syllables = 1 + rng.usize_below(3);
+            let mut w = String::new();
+            for _ in 0..syllables {
+                w.push_str(ONSETS[rng.usize_below(ONSETS.len())]);
+                w.push_str(NUCLEI[rng.usize_below(NUCLEI.len())]);
+                w.push_str(CODAS[rng.usize_below(CODAS.len())]);
+            }
+            if w.len() >= 2 && seen.insert(w.clone()) {
+                lexicon.push(w);
+            }
+        }
+        CorpusGen { lexicon, zipf: Zipf::new(lexicon_size, 1.05) }
+    }
+
+    /// Generate roughly `n_chars` characters of text.
+    pub fn generate(&self, n_chars: usize, seed: u64) -> String {
+        let mut rng = Rng::new(seed);
+        let mut out = String::with_capacity(n_chars + 64);
+        let mut sentence_start = true;
+        let mut words_in_sentence = 0;
+        let mut sentences_in_par = 0;
+        while out.len() < n_chars {
+            let w = &self.lexicon[self.zipf.sample(&mut rng)];
+            if sentence_start {
+                let mut cs = w.chars();
+                if let Some(c0) = cs.next() {
+                    out.extend(c0.to_uppercase());
+                    out.push_str(cs.as_str());
+                }
+                sentence_start = false;
+            } else {
+                out.push_str(w);
+            }
+            words_in_sentence += 1;
+            let end_sentence = words_in_sentence >= 4 && rng.bool(0.22)
+                || words_in_sentence >= 14;
+            if end_sentence {
+                let p = ['.', '.', '.', '!', '?'][rng.usize_below(5)];
+                out.push(p);
+                sentences_in_par += 1;
+                if sentences_in_par >= 3 && rng.bool(0.4) {
+                    out.push('\n');
+                    sentences_in_par = 0;
+                } else {
+                    out.push(' ');
+                }
+                sentence_start = true;
+                words_in_sentence = 0;
+            } else if rng.bool(0.08) {
+                out.push(',');
+                out.push(' ');
+            } else {
+                out.push(' ');
+            }
+        }
+        out.truncate(n_chars);
+        out
+    }
+}
+
+/// Token stream + window batcher for LM training.
+pub struct LmDataset {
+    pub tokens: Vec<i32>,
+    pub vocab: CharVocab,
+}
+
+impl LmDataset {
+    /// Build the synthetic corpus (train split uses `seed`, test `seed+1`).
+    pub fn synthetic(n_chars: usize, seed: u64) -> Self {
+        let gen = CorpusGen::new(800, 42);
+        let vocab = CharVocab::new();
+        let tokens = vocab.encode(&gen.generate(n_chars, seed));
+        LmDataset { tokens, vocab }
+    }
+
+    pub fn from_text(text: &str) -> Self {
+        let vocab = CharVocab::new();
+        let tokens = vocab.encode(text);
+        LmDataset { tokens, vocab }
+    }
+
+    /// Random (x, next-char targets, all-ones mask) batch of shape (b, t).
+    pub fn batch(&self, rng: &mut Rng, b: usize, t: usize) -> Batch {
+        assert!(self.tokens.len() > t + 1, "corpus shorter than window");
+        let mut x = Vec::with_capacity(b * t);
+        let mut y = Vec::with_capacity(b * t);
+        for _ in 0..b {
+            let start = rng.usize_below(self.tokens.len() - t - 1);
+            x.extend(&self.tokens[start..start + t]);
+            y.extend(&self.tokens[start + 1..start + t + 1]);
+        }
+        Batch {
+            x: Tensor::i32(vec![b, t], x),
+            targets: Tensor::i32(vec![b, t], y),
+            mask: Tensor::f32(vec![b, t], vec![1.0; b * t]),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vocab_roundtrip() {
+        let v = CharVocab::new();
+        assert_eq!(v.size(), 64);
+        let s = "Hello, world!\nA1";
+        let ids = v.encode(s);
+        assert_eq!(v.decode(&ids), s);
+        assert!(ids.iter().all(|&i| (0..64).contains(&i)));
+    }
+
+    #[test]
+    fn generator_deterministic_and_sized() {
+        let g = CorpusGen::new(200, 0);
+        let a = g.generate(5000, 7);
+        let b = g.generate(5000, 7);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 5000);
+        let c = g.generate(5000, 8);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn text_has_structure() {
+        let g = CorpusGen::new(300, 1);
+        let text = g.generate(20_000, 3);
+        assert!(text.contains(". "), "no sentence breaks");
+        assert!(text.contains('\n'), "no paragraphs");
+        // space frequency in a natural-ish band
+        let spaces = text.chars().filter(|&c| c == ' ').count() as f64
+            / text.len() as f64;
+        assert!(spaces > 0.08 && spaces < 0.35, "space frac {spaces}");
+    }
+
+    #[test]
+    fn zipf_head_dominates() {
+        let g = CorpusGen::new(300, 1);
+        let text = g.generate(50_000, 3);
+        let mut counts = std::collections::HashMap::new();
+        for w in text.split_whitespace() {
+            *counts.entry(w.trim_matches(|c: char| !c.is_alphabetic())
+                          .to_lowercase()).or_insert(0usize) += 1;
+        }
+        let mut freqs: Vec<usize> = counts.values().copied().collect();
+        freqs.sort_unstable_by(|a, b| b.cmp(a));
+        // top word much more frequent than the 50th
+        assert!(freqs[0] > freqs.get(50).copied().unwrap_or(0) * 3);
+    }
+
+    #[test]
+    fn lm_batch_targets_shifted() {
+        let ds = LmDataset::synthetic(10_000, 0);
+        let mut rng = Rng::new(2);
+        let b = ds.batch(&mut rng, 3, 32);
+        let x = b.x.data.as_i32().unwrap();
+        let y = b.targets.data.as_i32().unwrap();
+        // y[i] should equal x[i+1] within each row
+        for row in 0..3 {
+            for i in 0..31 {
+                assert_eq!(y[row * 32 + i], x[row * 32 + i + 1]);
+            }
+        }
+    }
+}

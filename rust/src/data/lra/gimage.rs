@@ -1,0 +1,107 @@
+//! G-Image (LRA): classify a grayscale image fed as a flat pixel sequence.
+//! Procedural substitution for CIFAR-10-grayscale (DESIGN.md §3): ten
+//! visually distinct shape/texture classes rendered at 16×16 with random
+//! phase, scale and pixel noise, quantized to 30 gray levels.
+//!
+//! Token map (vocab_in 32): 0 PAD, 1 CLS, pixel levels → 2..=31.
+
+use crate::util::rng::Rng;
+
+pub const SIDE: usize = 16;
+pub const LEVELS: i32 = 30;
+pub const N_CLASSES: usize = 10;
+
+fn render(class: usize, rng: &mut Rng) -> Vec<f32> {
+    let mut img = vec![0f32; SIDE * SIDE];
+    let phase = rng.usize_below(SIDE);
+    let period = 2 + rng.usize_below(3);
+    let cx = 4.0 + rng.f32() * 8.0;
+    let cy = 4.0 + rng.f32() * 8.0;
+    let r = 3.0 + rng.f32() * 4.0;
+    for y in 0..SIDE {
+        for x in 0..SIDE {
+            let v = match class {
+                0 => ((y + phase) / period % 2) as f32,             // h-stripes
+                1 => ((x + phase) / period % 2) as f32,             // v-stripes
+                2 => (((x + phase) / period + (y + phase) / period) % 2)
+                    as f32,                                          // checker
+                3 => x as f32 / (SIDE - 1) as f32,                   // grad→
+                4 => y as f32 / (SIDE - 1) as f32,                   // grad↓
+                5 => {                                               // disc
+                    let d = ((x as f32 - cx).powi(2)
+                             + (y as f32 - cy).powi(2)).sqrt();
+                    if d < r { 1.0 } else { 0.0 }
+                }
+                6 => {                                               // ring
+                    let d = ((x as f32 - cx).powi(2)
+                             + (y as f32 - cy).powi(2)).sqrt();
+                    if (d - r).abs() < 1.2 { 1.0 } else { 0.0 }
+                }
+                7 => {                                               // square
+                    let inside = (x as f32 - cx).abs() < r * 0.8
+                        && (y as f32 - cy).abs() < r * 0.8;
+                    if inside { 1.0 } else { 0.0 }
+                }
+                8 => if x == y || x + 1 == y { 1.0 } else { 0.0 },   // diag
+                _ => ((x * 7 + y * 13 + phase) % 5) as f32 / 4.0,    // texture
+            };
+            img[y * SIDE + x] = v;
+        }
+    }
+    // pixel noise
+    for p in img.iter_mut() {
+        *p = (*p + rng.normal_f32(0.0, 0.08)).clamp(0.0, 1.0);
+    }
+    img
+}
+
+/// One example: (pixel tokens, class label).  Sequence length SIDE² = 256
+/// (the collate layer reserves the final slot for CLS, so we drop the last
+/// pixel — class information is global).
+pub fn sample(rng: &mut Rng) -> (Vec<i32>, i32) {
+    let class = rng.usize_below(N_CLASSES);
+    let img = render(class, rng);
+    let tokens: Vec<i32> = img[..SIDE * SIDE - 1].iter()
+        .map(|&p| 2 + (p * (LEVELS - 1) as f32).round() as i32)
+        .collect();
+    (tokens, class as i32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_in_range_all_classes() {
+        let mut rng = Rng::new(0);
+        let mut seen = [false; N_CLASSES];
+        for _ in 0..200 {
+            let (tokens, label) = sample(&mut rng);
+            assert_eq!(tokens.len(), 255);
+            assert!(tokens.iter().all(|&t| (2..=31).contains(&t)));
+            seen[label as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "not all classes sampled");
+    }
+
+    #[test]
+    fn classes_are_distinguishable() {
+        // mean pixel intensity separates gradients from stripes on average;
+        // check intra-class variance < inter-class distance for two easy
+        // classes (0 vs 5) as a sanity proxy for learnability.
+        let mut rng = Rng::new(1);
+        let mean_of = |class: usize, rng: &mut Rng| -> f32 {
+            let mut acc = 0.0;
+            for _ in 0..20 {
+                let img = render(class, rng);
+                // column variance distinguishes h-stripes from discs
+                let col0: f32 = (0..SIDE).map(|y| img[y * SIDE]).sum();
+                acc += col0;
+            }
+            acc / 20.0
+        };
+        let a = mean_of(0, &mut rng);
+        let b = mean_of(5, &mut rng);
+        assert!((a - b).abs() > 0.2, "classes look identical: {a} vs {b}");
+    }
+}

@@ -1,0 +1,143 @@
+//! ListOps (Nangia & Bowman 2018): evaluate a nested prefix expression.
+//!
+//! Example: [MAX 2 9 [MIN 4 7] 0] → 9.  Ten classes (digits 0–9).
+//!
+//! Token map (vocab_in 20): 0 PAD, 1 CLS, digits 0–9 → 2..=11,
+//! MAX 12, MIN 13, MED 14, SM 15 (sum mod 10), '[' 16, ']' 17.
+
+use crate::util::rng::Rng;
+
+pub const DIGIT0: i32 = 2;
+pub const OP_MAX: i32 = 12;
+pub const OP_MIN: i32 = 13;
+pub const OP_MED: i32 = 14;
+pub const OP_SM: i32 = 15;
+pub const OPEN: i32 = 16;
+pub const CLOSE: i32 = 17;
+
+#[derive(Clone, Debug)]
+pub enum Node {
+    Digit(u8),
+    Op(i32, Vec<Node>),
+}
+
+impl Node {
+    pub fn eval(&self) -> u8 {
+        match self {
+            Node::Digit(d) => *d,
+            Node::Op(op, args) => {
+                let mut vals: Vec<u8> = args.iter().map(|a| a.eval())
+                    .collect();
+                match *op {
+                    OP_MAX => *vals.iter().max().unwrap(),
+                    OP_MIN => *vals.iter().min().unwrap(),
+                    OP_MED => {
+                        vals.sort_unstable();
+                        vals[vals.len() / 2]
+                    }
+                    OP_SM => (vals.iter().map(|&v| v as u32).sum::<u32>()
+                              % 10) as u8,
+                    _ => unreachable!("bad op"),
+                }
+            }
+        }
+    }
+
+    pub fn tokens(&self, out: &mut Vec<i32>) {
+        match self {
+            Node::Digit(d) => out.push(DIGIT0 + *d as i32),
+            Node::Op(op, args) => {
+                out.push(OPEN);
+                out.push(*op);
+                for a in args {
+                    a.tokens(out);
+                }
+                out.push(CLOSE);
+            }
+        }
+    }
+
+    pub fn token_len(&self) -> usize {
+        match self {
+            Node::Digit(_) => 1,
+            Node::Op(_, args) => 3 + args.iter().map(|a| a.token_len())
+                .sum::<usize>(),
+        }
+    }
+}
+
+/// Random expression with at most `budget` tokens and depth ≤ `max_depth`.
+pub fn gen_expr(rng: &mut Rng, budget: usize, max_depth: usize) -> Node {
+    if budget < 6 || max_depth == 0 {
+        return Node::Digit(rng.below(10) as u8);
+    }
+    let op = [OP_MAX, OP_MIN, OP_MED, OP_SM][rng.usize_below(4)];
+    let n_args = 2 + rng.usize_below(4); // 2..=5 args
+    let mut remaining = budget - 3;
+    let mut args = Vec::with_capacity(n_args);
+    for k in 0..n_args {
+        let share = remaining / (n_args - k);
+        let child = if rng.bool(0.4) && share >= 6 {
+            gen_expr(rng, share, max_depth - 1)
+        } else {
+            Node::Digit(rng.below(10) as u8)
+        };
+        remaining = remaining.saturating_sub(child.token_len());
+        args.push(child);
+    }
+    Node::Op(op, args)
+}
+
+/// One example: (tokens, class label 0..=9).
+pub fn sample(rng: &mut Rng, max_tokens: usize) -> (Vec<i32>, i32) {
+    let expr = gen_expr(rng, max_tokens, 4);
+    let mut tokens = Vec::with_capacity(expr.token_len());
+    expr.tokens(&mut tokens);
+    (tokens, expr.eval() as i32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_known_expression() {
+        // [MAX 2 9 [MIN 4 7] 0] = 9
+        let e = Node::Op(OP_MAX, vec![
+            Node::Digit(2), Node::Digit(9),
+            Node::Op(OP_MIN, vec![Node::Digit(4), Node::Digit(7)]),
+            Node::Digit(0),
+        ]);
+        assert_eq!(e.eval(), 9);
+        // [SM 5 6] = 1; [MED 1 5 9] = 5
+        assert_eq!(Node::Op(OP_SM, vec![Node::Digit(5), Node::Digit(6)])
+                   .eval(), 1);
+        assert_eq!(Node::Op(OP_MED, vec![Node::Digit(1), Node::Digit(5),
+                                         Node::Digit(9)]).eval(), 5);
+    }
+
+    #[test]
+    fn tokens_balanced_and_bounded() {
+        let mut rng = Rng::new(0);
+        for _ in 0..100 {
+            let (tokens, label) = sample(&mut rng, 120);
+            assert!(tokens.len() <= 120 + 6, "len {}", tokens.len());
+            assert!((0..=9).contains(&label));
+            let opens = tokens.iter().filter(|&&t| t == OPEN).count();
+            let closes = tokens.iter().filter(|&&t| t == CLOSE).count();
+            assert_eq!(opens, closes);
+            assert!(tokens.iter().all(|&t| (2..=17).contains(&t)));
+        }
+    }
+
+    #[test]
+    fn token_len_matches() {
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let e = gen_expr(&mut rng, 80, 3);
+            let mut toks = Vec::new();
+            e.tokens(&mut toks);
+            assert_eq!(toks.len(), e.token_len());
+        }
+    }
+}

@@ -1,0 +1,52 @@
+//! Long Range Arena tasks (Tay et al. 2021), synthetic substitutions per
+//! DESIGN.md §3: ListOps (real generator + evaluator), Retrieval
+//! (synthetic citation pairs), G-Image (procedural grayscale shapes).
+//!
+//! All are sequence classification: the answer is predicted at the final
+//! (masked) position; targets hold the class id there.
+
+pub mod gimage;
+pub mod listops;
+pub mod retrieval;
+
+use crate::tensor::{Batch, Tensor};
+
+pub const PAD: i32 = 0;
+pub const CLS: i32 = 1;
+
+/// Stack classification examples: inputs padded to `t`, with a CLS answer
+/// slot at the last position carrying the label.
+pub fn collate_classification(examples: &[(Vec<i32>, i32)],
+                              t: usize) -> Batch {
+    let b = examples.len();
+    let mut x = vec![PAD; b * t];
+    let mut y = vec![0i32; b * t];
+    let mut m = vec![0f32; b * t];
+    for (i, (tokens, label)) in examples.iter().enumerate() {
+        assert!(tokens.len() < t, "example len {} >= T {}", tokens.len(), t);
+        let off = i * t;
+        x[off..off + tokens.len()].copy_from_slice(tokens);
+        x[off + t - 1] = CLS;
+        y[off + t - 1] = *label;
+        m[off + t - 1] = 1.0;
+    }
+    Batch {
+        x: Tensor::i32(vec![b, t], x),
+        targets: Tensor::i32(vec![b, t], y),
+        mask: Tensor::f32(vec![b, t], m),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collate_puts_label_last() {
+        let b = collate_classification(&[(vec![3, 4, 5], 7)], 6);
+        assert_eq!(b.x.data.as_i32().unwrap(), &[3, 4, 5, 0, 0, CLS]);
+        assert_eq!(b.targets.data.as_i32().unwrap(), &[0, 0, 0, 0, 0, 7]);
+        assert_eq!(b.mask.data.as_f32().unwrap(),
+                   &[0., 0., 0., 0., 0., 1.]);
+    }
+}

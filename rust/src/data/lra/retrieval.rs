@@ -1,0 +1,82 @@
+//! Retrieval (LRA): decide whether two token sequences refer to the same
+//! document.  Synthetic substitution for the ACL Anthology corpus: positive
+//! pairs are noisy copies of one "citation", negatives are independent
+//! draws (DESIGN.md §3).
+//!
+//! Token map (vocab_in 32): 0 PAD, 1 CLS, 2 SEP, body tokens 3..=31.
+
+use crate::util::rng::Rng;
+
+pub const SEP: i32 = 2;
+pub const BODY_MIN: i32 = 3;
+pub const BODY_MAX: i32 = 31;
+
+fn citation(rng: &mut Rng, len: usize) -> Vec<i32> {
+    (0..len).map(|_| BODY_MIN
+                 + rng.below((BODY_MAX - BODY_MIN + 1) as u64) as i32)
+        .collect()
+}
+
+fn perturb(rng: &mut Rng, base: &[i32], edits: usize) -> Vec<i32> {
+    let mut out = base.to_vec();
+    for _ in 0..edits {
+        let i = rng.usize_below(out.len());
+        out[i] = BODY_MIN + rng.below((BODY_MAX - BODY_MIN + 1) as u64) as i32;
+    }
+    out
+}
+
+/// One example: (tokens = a ++ SEP ++ b, label ∈ {0: different, 1: same}).
+/// Each side has length `side_len`.
+pub fn sample(rng: &mut Rng, side_len: usize) -> (Vec<i32>, i32) {
+    let a = citation(rng, side_len);
+    let same = rng.bool(0.5);
+    let b = if same {
+        // light edit noise, ≤ 10% of tokens
+        perturb(rng, &a, (side_len / 10).max(1))
+    } else {
+        citation(rng, side_len)
+    };
+    let mut tokens = Vec::with_capacity(2 * side_len + 1);
+    tokens.extend(&a);
+    tokens.push(SEP);
+    tokens.extend(&b);
+    (tokens, same as i32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn structure_and_balance() {
+        let mut rng = Rng::new(0);
+        let mut pos = 0;
+        for _ in 0..200 {
+            let (tokens, label) = sample(&mut rng, 20);
+            assert_eq!(tokens.len(), 41);
+            assert_eq!(tokens[20], SEP);
+            pos += label;
+            if label == 1 {
+                // positives differ in few positions
+                let diffs = tokens[..20].iter().zip(&tokens[21..])
+                    .filter(|(a, b)| a != b).count();
+                assert!(diffs <= 2, "too many edits: {diffs}");
+            }
+        }
+        assert!(pos > 60 && pos < 140, "unbalanced: {pos}/200");
+    }
+
+    #[test]
+    fn negatives_actually_differ() {
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let (tokens, label) = sample(&mut rng, 30);
+            if label == 0 {
+                let diffs = tokens[..30].iter().zip(&tokens[31..])
+                    .filter(|(a, b)| a != b).count();
+                assert!(diffs > 10, "negative pair too similar");
+            }
+        }
+    }
+}

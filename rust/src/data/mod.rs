@@ -1,0 +1,11 @@
+//! Data layer: workload generators for every experiment in the paper.
+//! All generators are deterministic given a seed (util::rng) and produce
+//! `tensor::Batch` triples matching the exported executables' shapes.
+
+pub mod batcher;
+pub mod chomsky;
+pub mod corpus;
+pub mod lra;
+pub mod random_tokens;
+pub mod rl;
+pub mod selective_copy;

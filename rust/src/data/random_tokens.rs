@@ -1,0 +1,31 @@
+//! Uniform random-token batches — the workload for the Figure 1 training
+//! cost sweep (cost is shape-dependent, not content-dependent).
+
+use crate::tensor::{Batch, Tensor};
+use crate::util::rng::Rng;
+
+pub fn batch(rng: &mut Rng, b: usize, t: usize, vocab: i32) -> Batch {
+    let n = b * t;
+    let x: Vec<i32> = (0..n).map(|_| rng.below(vocab as u64) as i32)
+        .collect();
+    let y: Vec<i32> = (0..n).map(|_| rng.below(vocab as u64) as i32)
+        .collect();
+    Batch {
+        x: Tensor::i32(vec![b, t], x),
+        targets: Tensor::i32(vec![b, t], y),
+        mask: Tensor::f32(vec![b, t], vec![1.0; n]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn in_vocab() {
+        let mut rng = Rng::new(0);
+        let b = batch(&mut rng, 3, 5, 16);
+        assert!(b.x.data.as_i32().unwrap().iter().all(|&v| v < 16 && v >= 0));
+        assert_eq!(b.x.dims, vec![3, 5]);
+    }
+}

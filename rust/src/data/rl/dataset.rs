@@ -1,0 +1,304 @@
+//! Offline RL datasets + Decision-Transformer-style batch construction
+//! (Table 3).  Mirrors D4RL's three data regimes:
+//!   Medium        — rollouts of the Medium policy
+//!   MediumReplay  — a "replay buffer": mixture from Random → Medium
+//!   MediumExpert  — half Medium, half Expert rollouts
+//!
+//! Sequence features per timestep: [return-to-go / scale, obs (normalized),
+//! previous action]; the model regresses the current action (masked MSE).
+
+use crate::tensor::{Batch, Tensor};
+use crate::util::rng::Rng;
+
+use super::envs::{self, Env};
+use super::policies::{self, Quality};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Regime {
+    Medium,
+    MediumReplay,
+    MediumExpert,
+}
+
+impl Regime {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Regime::Medium => "M",
+            Regime::MediumReplay => "M-R",
+            Regime::MediumExpert => "M-E",
+        }
+    }
+
+    pub fn all() -> [Regime; 3] {
+        [Regime::Medium, Regime::MediumReplay, Regime::MediumExpert]
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Episode {
+    pub obs: Vec<Vec<f32>>,
+    pub act: Vec<Vec<f32>>,
+    pub rew: Vec<f32>,
+}
+
+impl Episode {
+    pub fn len(&self) -> usize {
+        self.rew.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rew.is_empty()
+    }
+
+    pub fn ret(&self) -> f32 {
+        self.rew.iter().sum()
+    }
+
+    /// Return-to-go at each timestep.
+    pub fn rtg(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.len()];
+        let mut acc = 0.0;
+        for i in (0..self.len()).rev() {
+            acc += self.rew[i];
+            out[i] = acc;
+        }
+        out
+    }
+}
+
+pub struct OfflineDataset {
+    pub env_name: String,
+    pub regime: Regime,
+    pub episodes: Vec<Episode>,
+    pub obs_mean: Vec<f32>,
+    pub obs_std: Vec<f32>,
+    pub rtg_scale: f32,
+    pub obs_dim: usize,
+    pub act_dim: usize,
+}
+
+fn rollout(env: &mut dyn Env, q: Quality, rng: &mut Rng) -> Episode {
+    let mut obs = env.reset(rng);
+    let mut ep = Episode { obs: vec![], act: vec![], rew: vec![] };
+    loop {
+        let a = policies::act(env.name(), q, &obs, rng);
+        let (next, r, done) = env.step(&a);
+        ep.obs.push(obs);
+        ep.act.push(a);
+        ep.rew.push(r);
+        obs = next;
+        if done {
+            break;
+        }
+    }
+    ep
+}
+
+impl OfflineDataset {
+    /// Build a dataset of `n_episodes` rollouts under the given regime.
+    pub fn build(env_name: &str, regime: Regime, n_episodes: usize,
+                 seed: u64) -> Self {
+        let mut env = envs::by_name(env_name)
+            .unwrap_or_else(|| panic!("unknown env {env_name}"));
+        let mut rng = Rng::new(seed ^ 0xD4_71);
+        let mut episodes = Vec::with_capacity(n_episodes);
+        for i in 0..n_episodes {
+            let q = match regime {
+                Regime::Medium => Quality::Medium,
+                Regime::MediumExpert => {
+                    if i % 2 == 0 { Quality::Medium } else { Quality::Expert }
+                }
+                Regime::MediumReplay => {
+                    // replay: first third random-ish, middle mixed, last
+                    // third medium — an improving agent's buffer
+                    match 3 * i / n_episodes {
+                        0 => Quality::Random,
+                        1 => if rng.bool(0.5) { Quality::Random }
+                             else { Quality::Medium },
+                        _ => Quality::Medium,
+                    }
+                }
+            };
+            episodes.push(rollout(env.as_mut(), q, &mut rng));
+        }
+
+        let obs_dim = env.obs_dim();
+        let act_dim = env.act_dim();
+        let mut mean = vec![0f64; obs_dim];
+        let mut count = 0usize;
+        for ep in &episodes {
+            for o in &ep.obs {
+                for (m, &v) in mean.iter_mut().zip(o) {
+                    *m += v as f64;
+                }
+                count += 1;
+            }
+        }
+        for m in mean.iter_mut() {
+            *m /= count.max(1) as f64;
+        }
+        let mut var = vec![0f64; obs_dim];
+        for ep in &episodes {
+            for o in &ep.obs {
+                for ((v, &x), m) in var.iter_mut().zip(o).zip(&mean) {
+                    *v += (x as f64 - m) * (x as f64 - m);
+                }
+            }
+        }
+        let std: Vec<f32> = var.iter()
+            .map(|v| ((v / count.max(1) as f64).sqrt() as f32).max(1e-3))
+            .collect();
+        let max_abs_rtg = episodes.iter()
+            .map(|e| e.ret().abs())
+            .fold(1.0f32, f32::max);
+
+        OfflineDataset {
+            env_name: env_name.to_string(),
+            regime,
+            episodes,
+            obs_mean: mean.iter().map(|&m| m as f32).collect(),
+            obs_std: std,
+            rtg_scale: max_abs_rtg,
+            obs_dim,
+            act_dim,
+        }
+    }
+
+    pub fn feature_dim(&self) -> usize {
+        1 + self.obs_dim + self.act_dim
+    }
+
+    pub fn norm_obs(&self, obs: &[f32]) -> Vec<f32> {
+        obs.iter().zip(&self.obs_mean).zip(&self.obs_std)
+            .map(|((&o, &m), &s)| (o - m) / s)
+            .collect()
+    }
+
+    /// Best return in the dataset — used as the conditioning target.
+    pub fn target_return(&self) -> f32 {
+        self.episodes.iter().map(|e| e.ret()).fold(f32::MIN, f32::max)
+    }
+
+    /// DT-style training batch of shape (b, ctx): random episode windows.
+    pub fn batch(&self, rng: &mut Rng, b: usize, ctx: usize) -> Batch {
+        let f = self.feature_dim();
+        let mut x = vec![0f32; b * ctx * f];
+        let mut y = vec![0f32; b * ctx * self.act_dim];
+        let mut m = vec![0f32; b * ctx];
+        for bi in 0..b {
+            let ep = &self.episodes[rng.usize_below(self.episodes.len())];
+            let rtg = ep.rtg();
+            let max_start = ep.len().saturating_sub(1);
+            let start = rng.usize_below(max_start + 1);
+            let window = (ep.len() - start).min(ctx);
+            for k in 0..window {
+                let t = start + k;
+                let row = (bi * ctx + k) * f;
+                x[row] = rtg[t] / self.rtg_scale;
+                let no = self.norm_obs(&ep.obs[t]);
+                x[row + 1..row + 1 + self.obs_dim].copy_from_slice(&no);
+                if t > 0 {
+                    x[row + 1 + self.obs_dim..row + f]
+                        .copy_from_slice(&ep.act[t - 1]);
+                }
+                let yrow = (bi * ctx + k) * self.act_dim;
+                y[yrow..yrow + self.act_dim].copy_from_slice(&ep.act[t]);
+                m[bi * ctx + k] = 1.0;
+            }
+        }
+        Batch {
+            x: Tensor::f32(vec![b, ctx, f], x),
+            targets: Tensor::f32(vec![b, ctx, self.act_dim], y),
+            mask: Tensor::f32(vec![b, ctx], m),
+        }
+    }
+}
+
+/// Expert-normalized score per D4RL: 100·(S − S_random)/(S_expert − S_random).
+pub fn normalized_score(env_name: &str, raw: f32, seed: u64) -> f32 {
+    let anchor = |q: Quality| -> f32 {
+        let mut env = envs::by_name(env_name).unwrap();
+        let mut rng = Rng::new(seed ^ 0xA5C0);
+        let n = 16;
+        (0..n).map(|_| {
+            let ep = rollout(env.as_mut(), q, &mut rng);
+            ep.ret()
+        }).sum::<f32>() / n as f32
+    };
+    let lo = anchor(Quality::Random);
+    let hi = anchor(Quality::Expert);
+    100.0 * (raw - lo) / (hi - lo).max(1e-6)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset_shapes_and_stats() {
+        let ds = OfflineDataset::build("pointmass", Regime::Medium, 20, 0);
+        assert_eq!(ds.episodes.len(), 20);
+        assert_eq!(ds.obs_dim, 4);
+        assert_eq!(ds.act_dim, 2);
+        assert_eq!(ds.feature_dim(), 7);
+        assert!(ds.rtg_scale > 0.0);
+        // normalization is roughly standardizing
+        let ep = &ds.episodes[0];
+        let no = ds.norm_obs(&ep.obs[0]);
+        assert!(no.iter().all(|v| v.abs() < 20.0));
+    }
+
+    #[test]
+    fn regime_quality_ordering() {
+        let avg = |r: Regime| -> f32 {
+            let ds = OfflineDataset::build("pointmass", r, 30, 1);
+            ds.episodes.iter().map(|e| e.ret()).sum::<f32>() / 30.0
+        };
+        let m = avg(Regime::Medium);
+        let mr = avg(Regime::MediumReplay);
+        let me = avg(Regime::MediumExpert);
+        assert!(me > m, "M-E {me} <= M {m}");
+        assert!(m > mr, "M {m} <= M-R {mr}");
+    }
+
+    #[test]
+    fn rtg_decreasing_along_episode() {
+        let ds = OfflineDataset::build("pendulum", Regime::Medium, 5, 2);
+        let ep = &ds.episodes[0];
+        let rtg = ep.rtg();
+        assert!((rtg[0] - ep.ret()).abs() < 1e-3);
+        assert!((rtg[rtg.len() - 1] - ep.rew[ep.len() - 1]).abs() < 1e-4);
+    }
+
+    #[test]
+    fn batch_layout() {
+        let ds = OfflineDataset::build("walker1d", Regime::MediumExpert,
+                                       10, 3);
+        let mut rng = Rng::new(4);
+        let b = ds.batch(&mut rng, 6, 16);
+        assert_eq!(b.x.dims, vec![6, 16, ds.feature_dim()]);
+        assert_eq!(b.targets.dims, vec![6, 16, 2]);
+        assert_eq!(b.mask.dims, vec![6, 16]);
+        // some mask positions on
+        let on: f32 = b.mask.data.as_f32().unwrap().iter().sum();
+        assert!(on > 0.0);
+    }
+
+    #[test]
+    fn normalized_score_anchors() {
+        // the expert itself should score near 100, random near 0
+        let mut env = envs::by_name("pointmass").unwrap();
+        let mut rng = Rng::new(9);
+        let raw: f32 = (0..8).map(|_| {
+            rollout(env.as_mut(), Quality::Expert, &mut rng).ret()
+        }).sum::<f32>() / 8.0;
+        let score = normalized_score("pointmass", raw, 0);
+        assert!(score > 85.0 && score < 115.0, "expert score {score}");
+        let rand_score = normalized_score("pointmass", {
+            let mut rng = Rng::new(10);
+            (0..8).map(|_| rollout(env.as_mut(), Quality::Random, &mut rng)
+                       .ret()).sum::<f32>() / 8.0
+        }, 0);
+        assert!(rand_score.abs() < 20.0, "random score {rand_score}");
+    }
+}

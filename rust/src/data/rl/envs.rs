@@ -1,0 +1,304 @@
+//! Continuous-control environments — the simulation substrate replacing
+//! MuJoCo/D4RL (DESIGN.md §3).  Dense rewards, fixed horizons, fully
+//! deterministic dynamics given the reset state.
+
+use crate::util::rng::Rng;
+
+pub trait Env {
+    fn name(&self) -> &'static str;
+    fn obs_dim(&self) -> usize;
+    fn act_dim(&self) -> usize;
+    fn horizon(&self) -> usize;
+    fn reset(&mut self, rng: &mut Rng) -> Vec<f32>;
+    /// Returns (obs, reward, done).
+    fn step(&mut self, action: &[f32]) -> (Vec<f32>, f32, bool);
+}
+
+pub fn by_name(name: &str) -> Option<Box<dyn Env>> {
+    match name {
+        "pointmass" => Some(Box::new(PointMass::default())),
+        "pendulum" => Some(Box::new(Pendulum::default())),
+        "walker1d" => Some(Box::new(Walker1dLite::default())),
+        _ => None,
+    }
+}
+
+fn clamp1(a: &[f32], i: usize) -> f32 {
+    a.get(i).copied().unwrap_or(0.0).clamp(-1.0, 1.0)
+}
+
+// ---------------------------------------------------------------------------
+// PointMass: reach the origin on a 2-D plane (HalfCheetah-slot analogue —
+// smooth, easy dense-reward control).
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+pub struct PointMass {
+    pos: [f32; 2],
+    vel: [f32; 2],
+    t: usize,
+}
+
+impl PointMass {
+    fn obs(&self) -> Vec<f32> {
+        vec![self.pos[0], self.pos[1], self.vel[0], self.vel[1]]
+    }
+}
+
+impl Env for PointMass {
+    fn name(&self) -> &'static str {
+        "pointmass"
+    }
+
+    fn obs_dim(&self) -> usize {
+        4
+    }
+
+    fn act_dim(&self) -> usize {
+        2
+    }
+
+    fn horizon(&self) -> usize {
+        100
+    }
+
+    fn reset(&mut self, rng: &mut Rng) -> Vec<f32> {
+        self.pos = [rng.range_f32(-2.0, 2.0), rng.range_f32(-2.0, 2.0)];
+        self.vel = [0.0, 0.0];
+        self.t = 0;
+        self.obs()
+    }
+
+    fn step(&mut self, action: &[f32]) -> (Vec<f32>, f32, bool) {
+        let dt = 0.1;
+        let a = [clamp1(action, 0), clamp1(action, 1)];
+        for k in 0..2 {
+            self.vel[k] = 0.95 * self.vel[k] + a[k] * dt * 4.0;
+            self.pos[k] += self.vel[k] * dt;
+        }
+        let dist = (self.pos[0] * self.pos[0]
+                    + self.pos[1] * self.pos[1]).sqrt();
+        let reward = -dist - 0.05 * (a[0] * a[0] + a[1] * a[1]);
+        self.t += 1;
+        (self.obs(), reward, self.t >= self.horizon())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pendulum swing-up (Hopper-slot analogue — requires non-greedy control:
+// energy pumping before stabilization).
+// ---------------------------------------------------------------------------
+
+pub struct Pendulum {
+    theta: f32,
+    omega: f32,
+    t: usize,
+}
+
+impl Default for Pendulum {
+    fn default() -> Self {
+        Pendulum { theta: std::f32::consts::PI, omega: 0.0, t: 0 }
+    }
+}
+
+impl Pendulum {
+    fn obs(&self) -> Vec<f32> {
+        vec![self.theta.cos(), self.theta.sin(), self.omega / 8.0]
+    }
+}
+
+impl Env for Pendulum {
+    fn name(&self) -> &'static str {
+        "pendulum"
+    }
+
+    fn obs_dim(&self) -> usize {
+        3
+    }
+
+    fn act_dim(&self) -> usize {
+        1
+    }
+
+    fn horizon(&self) -> usize {
+        100
+    }
+
+    fn reset(&mut self, rng: &mut Rng) -> Vec<f32> {
+        self.theta = std::f32::consts::PI + rng.range_f32(-0.6, 0.6);
+        self.omega = rng.range_f32(-0.5, 0.5);
+        self.t = 0;
+        self.obs()
+    }
+
+    fn step(&mut self, action: &[f32]) -> (Vec<f32>, f32, bool) {
+        let dt = 0.05;
+        let (g, m, l) = (10.0f32, 1.0f32, 1.0f32);
+        let torque = clamp1(action, 0) * 2.0;
+        let acc = -3.0 * g / (2.0 * l) * self.theta.sin()
+            + 3.0 / (m * l * l) * torque;
+        // θ = 0 is upright (sin enters with a sign making 0 unstable
+        // equilibrium; matches the classic gym formulation shifted by π)
+        self.omega = (self.omega + acc * dt).clamp(-8.0, 8.0);
+        self.theta += self.omega * dt;
+        // wrap to (-π, π]
+        while self.theta > std::f32::consts::PI {
+            self.theta -= 2.0 * std::f32::consts::PI;
+        }
+        while self.theta <= -std::f32::consts::PI {
+            self.theta += 2.0 * std::f32::consts::PI;
+        }
+        let reward = -(self.theta * self.theta
+                       + 0.1 * self.omega * self.omega
+                       + 0.01 * torque * torque);
+        self.t += 1;
+        (self.obs(), reward, self.t >= self.horizon())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Walker1dLite: 1-D locomotion with a mass that must keep "posture" (height
+// within a band) while maximizing forward velocity (Walker2d-slot analogue).
+// ---------------------------------------------------------------------------
+
+pub struct Walker1dLite {
+    vel: f32,
+    height: f32,
+    hvel: f32,
+    phase: f32,
+    t: usize,
+}
+
+impl Default for Walker1dLite {
+    fn default() -> Self {
+        Walker1dLite { vel: 0.0, height: 1.0, hvel: 0.0, phase: 0.0, t: 0 }
+    }
+}
+
+impl Walker1dLite {
+    fn obs(&self) -> Vec<f32> {
+        vec![self.vel, self.height, self.hvel,
+             self.phase.sin(), self.phase.cos(),
+             (self.height - 1.0).abs()]
+    }
+
+    fn upright(&self) -> bool {
+        self.height > 0.5 && self.height < 1.5
+    }
+}
+
+impl Env for Walker1dLite {
+    fn name(&self) -> &'static str {
+        "walker1d"
+    }
+
+    fn obs_dim(&self) -> usize {
+        6
+    }
+
+    fn act_dim(&self) -> usize {
+        2
+    }
+
+    fn horizon(&self) -> usize {
+        100
+    }
+
+    fn reset(&mut self, rng: &mut Rng) -> Vec<f32> {
+        self.vel = 0.0;
+        self.height = rng.range_f32(0.9, 1.1);
+        self.hvel = rng.range_f32(-0.1, 0.1);
+        self.phase = rng.range_f32(0.0, std::f32::consts::TAU);
+        self.t = 0;
+        self.obs()
+    }
+
+    fn step(&mut self, action: &[f32]) -> (Vec<f32>, f32, bool) {
+        let dt = 0.1;
+        let drive = clamp1(action, 0);   // forward drive
+        let lift = clamp1(action, 1);    // posture control
+        self.phase = (self.phase + dt * 6.0) % std::f32::consts::TAU;
+        // forward motion only transfers efficiently when in phase and upright
+        let gait = 0.5 + 0.5 * self.phase.sin();
+        let eff = if self.upright() { gait } else { 0.1 };
+        self.vel = 0.9 * self.vel + drive * eff * 1.2;
+        // height dynamics: gravity pulls toward sagging, lift counteracts
+        self.hvel = 0.8 * self.hvel + (lift - 0.3 * (self.height - 0.7)
+                                       - 0.25) * dt * 8.0;
+        self.height = (self.height + self.hvel * dt).clamp(0.0, 2.0);
+        let reward = if self.upright() {
+            self.vel - 0.05 * (drive * drive + lift * lift)
+        } else {
+            -1.0
+        };
+        self.t += 1;
+        (self.obs(), reward, self.t >= self.horizon())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn envs_run_full_horizon() {
+        let mut rng = Rng::new(0);
+        for name in ["pointmass", "pendulum", "walker1d"] {
+            let mut env = by_name(name).unwrap();
+            let obs = env.reset(&mut rng);
+            assert_eq!(obs.len(), env.obs_dim());
+            let mut steps = 0;
+            loop {
+                let a = vec![0.1; env.act_dim()];
+                let (obs, r, done) = env.step(&a);
+                assert_eq!(obs.len(), env.obs_dim());
+                assert!(r.is_finite());
+                assert!(obs.iter().all(|v| v.is_finite()));
+                steps += 1;
+                if done {
+                    break;
+                }
+                assert!(steps <= env.horizon(), "{name} never terminates");
+            }
+            assert_eq!(steps, env.horizon());
+        }
+    }
+
+    #[test]
+    fn pointmass_controller_reaches_goal() {
+        // PD control should bring the mass near the origin
+        let mut rng = Rng::new(1);
+        let mut env = PointMass::default();
+        let mut obs = env.reset(&mut rng);
+        let mut last_r = f32::NEG_INFINITY;
+        for _ in 0..100 {
+            let a = vec![-1.2 * obs[0] - 0.8 * obs[2],
+                         -1.2 * obs[1] - 0.8 * obs[3]];
+            let (o, r, _) = env.step(&a);
+            obs = o;
+            last_r = r;
+        }
+        assert!(last_r > -0.3, "did not converge: final reward {last_r}");
+    }
+
+    #[test]
+    fn reset_is_stochastic_dynamics_deterministic() {
+        let mut rng1 = Rng::new(5);
+        let mut rng2 = Rng::new(5);
+        let mut e1 = Pendulum::default();
+        let mut e2 = Pendulum::default();
+        assert_eq!(e1.reset(&mut rng1), e2.reset(&mut rng2));
+        let (o1, r1, _) = e1.step(&[0.5]);
+        let (o2, r2, _) = e2.step(&[0.5]);
+        assert_eq!(o1, o2);
+        assert_eq!(r1, r2);
+        // different seeds → different starts
+        let mut rng3 = Rng::new(6);
+        let mut e3 = Pendulum::default();
+        assert_ne!(e3.reset(&mut rng3), {
+            let mut rng4 = Rng::new(7);
+            let mut e4 = Pendulum::default();
+            e4.reset(&mut rng4)
+        });
+    }
+}

@@ -1,0 +1,10 @@
+//! Offline-RL substrate: environments, scripted policies, D4RL-style
+//! datasets, and expert-normalized scoring (Table 3).
+
+pub mod dataset;
+pub mod envs;
+pub mod policies;
+
+pub use dataset::{normalized_score, OfflineDataset, Regime};
+pub use envs::Env;
+pub use policies::Quality;

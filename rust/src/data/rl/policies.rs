@@ -1,0 +1,129 @@
+//! Scripted behaviour policies of graded quality, used to build the
+//! Medium / Medium-Replay / Medium-Expert offline datasets (the D4RL data
+//! regimes of Table 3).
+
+use crate::util::rng::Rng;
+
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Quality {
+    Random,
+    Medium,
+    Expert,
+}
+
+/// Action for (env, quality) at an observation.  Medium = detuned expert
+/// with exploration noise (scores ≈ 1/3–1/2 of expert, matching D4RL's
+/// "policy scoring about one-third of an expert").
+pub fn act(env_name: &str, q: Quality, obs: &[f32], rng: &mut Rng)
+           -> Vec<f32> {
+    match q {
+        Quality::Random => random_action(env_name, rng),
+        Quality::Medium => {
+            let mut a = expert_action(env_name, obs);
+            for v in a.iter_mut() {
+                *v = (*v * 0.55 + rng.normal_f32(0.0, 0.45)).clamp(-1.0, 1.0);
+            }
+            a
+        }
+        Quality::Expert => {
+            let mut a = expert_action(env_name, obs);
+            for v in a.iter_mut() {
+                *v = (*v + rng.normal_f32(0.0, 0.03)).clamp(-1.0, 1.0);
+            }
+            a
+        }
+    }
+}
+
+fn random_action(env_name: &str, rng: &mut Rng) -> Vec<f32> {
+    let dim = match env_name {
+        "pendulum" => 1,
+        _ => 2,
+    };
+    (0..dim).map(|_| rng.range_f32(-1.0, 1.0)).collect()
+}
+
+fn expert_action(env_name: &str, obs: &[f32]) -> Vec<f32> {
+    match env_name {
+        "pointmass" => {
+            // PD controller toward the origin
+            vec![(-1.2 * obs[0] - 0.8 * obs[2]).clamp(-1.0, 1.0),
+                 (-1.2 * obs[1] - 0.8 * obs[3]).clamp(-1.0, 1.0)]
+        }
+        "pendulum" => {
+            let (cos_t, sin_t, omega_n) = (obs[0], obs[1], obs[2]);
+            let omega = omega_n * 8.0;
+            let theta = sin_t.atan2(cos_t);
+            // energy-based swing-up far from top, PD near the top
+            let a = if cos_t > 0.85 {
+                -8.0 * theta - 2.0 * omega
+            } else {
+                // pump energy: torque along velocity direction
+                let energy = 0.5 * omega * omega + 15.0 * (cos_t - 1.0);
+                if energy < 0.0 { 2.5 * omega.signum() } else { -0.5 * omega }
+            };
+            vec![(a / 2.0).clamp(-1.0, 1.0)]
+        }
+        "walker1d" => {
+            let (_vel, height, hvel, sin_p, _cos_p) =
+                (obs[0], obs[1], obs[2], obs[3], obs[4]);
+            // drive hard when the gait phase is favorable, keep posture
+            let drive = if sin_p > -0.2 { 1.0 } else { 0.3 };
+            let lift = (0.25 + 1.4 * (1.0 - height) - 0.6 * hvel)
+                .clamp(-1.0, 1.0);
+            vec![drive, lift]
+        }
+        _ => vec![0.0, 0.0],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rl::envs;
+
+    fn rollout_return(env_name: &str, q: Quality, seed: u64) -> f32 {
+        let mut env = envs::by_name(env_name).unwrap();
+        let mut rng = Rng::new(seed);
+        let mut obs = env.reset(&mut rng);
+        let mut total = 0.0;
+        loop {
+            let a = act(env_name, q, &obs, &mut rng);
+            let (o, r, done) = env.step(&a);
+            obs = o;
+            total += r;
+            if done {
+                break;
+            }
+        }
+        total
+    }
+
+    #[test]
+    fn quality_ordering_holds() {
+        for name in ["pointmass", "pendulum", "walker1d"] {
+            let avg = |q: Quality| -> f32 {
+                (0..8).map(|s| rollout_return(name, q, s)).sum::<f32>() / 8.0
+            };
+            let (r, m, e) = (avg(Quality::Random), avg(Quality::Medium),
+                             avg(Quality::Expert));
+            assert!(e > m, "{name}: expert {e} <= medium {m}");
+            assert!(m > r, "{name}: medium {m} <= random {r}");
+        }
+    }
+
+    #[test]
+    fn actions_bounded() {
+        let mut rng = Rng::new(0);
+        for name in ["pointmass", "pendulum", "walker1d"] {
+            let mut env = envs::by_name(name).unwrap();
+            let obs = env.reset(&mut rng);
+            for q in [Quality::Random, Quality::Medium, Quality::Expert] {
+                let a = act(name, q, &obs, &mut rng);
+                assert_eq!(a.len(), env.act_dim());
+                assert!(a.iter().all(|v| (-1.0..=1.0).contains(v)));
+            }
+        }
+    }
+}

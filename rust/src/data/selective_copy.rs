@@ -1,0 +1,122 @@
+//! Selective Copying task (Gu & Dao 2024, §4.2 / Tables 1–2).
+//!
+//! A sequence of noise tokens with `n_data` data tokens scattered through
+//! the first `ctx_len` positions; the model must reproduce the data tokens,
+//! in order, at the `n_data` answer slots that follow.  Content-aware
+//! gating is required: positions of the data tokens are random per sample.
+//!
+//! Token map (vocab 16): 0 = noise, 1 = answer-slot marker, 2..=15 = data.
+
+use crate::tensor::{Batch, Tensor};
+use crate::util::rng::Rng;
+
+pub const NOISE: i32 = 0;
+pub const MARKER: i32 = 1;
+pub const DATA_MIN: i32 = 2;
+pub const DATA_MAX: i32 = 15;
+
+#[derive(Clone, Copy, Debug)]
+pub struct SelectiveCopy {
+    pub ctx_len: usize,
+    pub n_data: usize,
+}
+
+impl SelectiveCopy {
+    pub fn new(ctx_len: usize, n_data: usize) -> Self {
+        assert!(n_data <= ctx_len);
+        SelectiveCopy { ctx_len, n_data }
+    }
+
+    pub fn total_len(&self) -> usize {
+        self.ctx_len + self.n_data
+    }
+
+    /// One example: (input, target, mask), each of length total_len().
+    pub fn sample(&self, rng: &mut Rng) -> (Vec<i32>, Vec<i32>, Vec<f32>) {
+        let t = self.total_len();
+        let mut input = vec![NOISE; t];
+        let mut target = vec![0i32; t];
+        let mut mask = vec![0f32; t];
+
+        let mut positions = rng.choose_distinct(self.ctx_len, self.n_data);
+        positions.sort_unstable(); // data order = order of appearance
+        let data: Vec<i32> = (0..self.n_data)
+            .map(|_| DATA_MIN + rng.below((DATA_MAX - DATA_MIN + 1) as u64)
+                 as i32)
+            .collect();
+        for (&pos, &tok) in positions.iter().zip(&data) {
+            input[pos] = tok;
+        }
+        for (i, &tok) in data.iter().enumerate() {
+            let slot = self.ctx_len + i;
+            input[slot] = MARKER;
+            target[slot] = tok;
+            mask[slot] = 1.0;
+        }
+        (input, target, mask)
+    }
+
+    /// A fresh batch (on-the-fly generation, as the paper trains).
+    pub fn batch(&self, rng: &mut Rng, batch_size: usize) -> Batch {
+        let t = self.total_len();
+        let mut x = Vec::with_capacity(batch_size * t);
+        let mut y = Vec::with_capacity(batch_size * t);
+        let mut m = Vec::with_capacity(batch_size * t);
+        for _ in 0..batch_size {
+            let (xi, yi, mi) = self.sample(rng);
+            x.extend(xi);
+            y.extend(yi);
+            m.extend(mi);
+        }
+        Batch {
+            x: Tensor::i32(vec![batch_size, t], x),
+            targets: Tensor::i32(vec![batch_size, t], y),
+            mask: Tensor::f32(vec![batch_size, t], m),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_structure() {
+        let task = SelectiveCopy::new(64, 8);
+        let mut rng = Rng::new(0);
+        for _ in 0..50 {
+            let (x, y, m) = task.sample(&mut rng);
+            assert_eq!(x.len(), 72);
+            // exactly 8 data tokens in the context
+            let data_in_ctx: Vec<i32> = x[..64].iter().copied()
+                .filter(|&t| t >= DATA_MIN).collect();
+            assert_eq!(data_in_ctx.len(), 8);
+            // answer slots are markers, mask only there
+            assert!(x[64..].iter().all(|&t| t == MARKER));
+            assert_eq!(m.iter().filter(|&&v| v > 0.0).count(), 8);
+            assert!(m[..64].iter().all(|&v| v == 0.0));
+            // targets at answer slots reproduce the data in order
+            let answers: Vec<i32> = y[64..].to_vec();
+            assert_eq!(answers, data_in_ctx);
+        }
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let task = SelectiveCopy::new(32, 4);
+        let mut rng = Rng::new(1);
+        let b = task.batch(&mut rng, 5);
+        assert_eq!(b.x.dims, vec![5, 36]);
+        assert_eq!(b.targets.dims, vec![5, 36]);
+        assert_eq!(b.mask.dims, vec![5, 36]);
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        let task = SelectiveCopy::new(40, 6);
+        let mut rng = Rng::new(2);
+        let (x, y, _) = task.sample(&mut rng);
+        assert!(x.iter().all(|&t| (0..16).contains(&t)));
+        assert!(y.iter().all(|&t| (0..16).contains(&t)));
+    }
+}

@@ -1,0 +1,17 @@
+//! minrnn — "Were RNNs All We Needed?" (Feng et al., 2024) reproduction.
+//!
+//! Three-layer architecture:
+//! * L1/L2 (build time): Pallas parallel-scan kernels + JAX models, AOT
+//!   lowered to `artifacts/*.hlo.txt` by `python/compile/aot.py`.
+//! * L3 (this crate): coordinator — data generation, training loops,
+//!   evaluation, inference serving, and the bench harness that regenerates
+//!   every table and figure of the paper. Loads artifacts via PJRT
+//!   (`xla` crate); Python is never on the request path.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+pub mod bench_harness;

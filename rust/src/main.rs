@@ -1,0 +1,7 @@
+//! `minrnn` CLI — leader entrypoint.
+use minrnn::coordinator::cli_main;
+
+fn main() {
+    let code = cli_main(std::env::args().skip(1).collect());
+    std::process::exit(code);
+}

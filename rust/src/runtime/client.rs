@@ -1,0 +1,118 @@
+//! PJRT client wrapper: loads AOT-compiled HLO text artifacts, caches the
+//! compiled executables, and provides a uniform "call with literals, get
+//! decomposed tuple back" interface.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HLO text →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<PathBuf, Rc<xla::PjRtLoadedExecutable>>>,
+    pub compile_seconds: RefCell<f64>,
+    /// Cumulative time inside `execute` (device compute) — everything else
+    /// in `run` is host overhead (output fetch + tuple decomposition).
+    pub execute_seconds: RefCell<f64>,
+    /// Cumulative time fetching + decomposing outputs.
+    pub fetch_seconds: RefCell<f64>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("create PJRT CPU client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            cache: RefCell::new(HashMap::new()),
+            compile_seconds: RefCell::new(0.0),
+            execute_seconds: RefCell::new(0.0),
+            fetch_seconds: RefCell::new(0.0),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact (cached by path).
+    pub fn load(&self, path: &Path) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(path) {
+            return Ok(exe.clone());
+        }
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parse HLO text {}: {e:?}",
+                                 path.display()))
+            .with_context(|| "is `make artifacts` up to date?")?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
+        let exe = Rc::new(exe);
+        *self.compile_seconds.borrow_mut() += t0.elapsed().as_secs_f64();
+        self.cache.borrow_mut().insert(path.to_path_buf(), exe.clone());
+        Ok(exe)
+    }
+
+    pub fn cached_executables(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    pub fn evict(&self, path: &Path) {
+        self.cache.borrow_mut().remove(path);
+    }
+
+    pub fn clear_cache(&self) {
+        self.cache.borrow_mut().clear();
+    }
+
+    /// Execute with literal arguments; returns the decomposed output tuple.
+    ///
+    /// All exports lower with `return_tuple=True`, so the single output
+    /// buffer is a tuple literal which we decompose into its leaves.
+    pub fn run(&self, exe: &xla::PjRtLoadedExecutable,
+               args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let t0 = Instant::now();
+        let buffers = exe.execute::<&xla::Literal>(args)
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        let t1 = Instant::now();
+        let out = buffers
+            .first().and_then(|d| d.first())
+            .ok_or_else(|| anyhow!("executable produced no outputs"))?;
+        let lit = out.to_literal_sync()
+            .map_err(|e| anyhow!("fetch output literal: {e:?}"))?;
+        let res = lit.to_tuple()
+            .map_err(|e| anyhow!("decompose output tuple: {e:?}"));
+        *self.execute_seconds.borrow_mut() +=
+            (t1 - t0).as_secs_f64();
+        *self.fetch_seconds.borrow_mut() += t1.elapsed().as_secs_f64();
+        res
+    }
+
+    /// Reset the profiling accumulators; returns (execute_s, fetch_s).
+    pub fn take_profile(&self) -> (f64, f64) {
+        let e = std::mem::take(&mut *self.execute_seconds.borrow_mut());
+        let f = std::mem::take(&mut *self.fetch_seconds.borrow_mut());
+        (e, f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let rt = Runtime::cpu().unwrap();
+        assert!(rt.platform().to_lowercase().contains("cpu")
+                || !rt.platform().is_empty());
+        assert_eq!(rt.cached_executables(), 0);
+    }
+}

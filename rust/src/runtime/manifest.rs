@@ -1,0 +1,249 @@
+//! Typed view of `artifacts/manifest.json` — the contract produced by
+//! `python/compile/aot.py`.  See that file's docstring for the calling
+//! conventions each executable follows.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::{self, Json};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct LeafSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl LeafSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<LeafSpec> {
+        Ok(LeafSpec {
+            name: j.req("name")?.as_str().unwrap_or_default().to_string(),
+            shape: j.req("shape")?.as_arr().unwrap_or_default().iter()
+                .filter_map(|d| d.as_usize()).collect(),
+            dtype: j.req("dtype")?.as_str().unwrap_or("f32").to_string(),
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl IoSpec {
+    fn from_json(j: &Json) -> Result<IoSpec> {
+        Ok(IoSpec {
+            shape: j.req("shape")?.as_arr().unwrap_or_default().iter()
+                .filter_map(|d| d.as_usize()).collect(),
+            dtype: j.req("dtype")?.as_str().unwrap_or("f32").to_string(),
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct EvalFile {
+    pub batch: usize,
+    pub seq_len: usize,
+    pub file: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct StepFile {
+    pub batch: usize,
+    pub file: String,
+    pub state: Vec<LeafSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct PrefillFile {
+    pub batch: usize,
+    pub seq_len: usize,
+    pub file: String,
+    pub state: Vec<LeafSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Variant {
+    pub name: String,
+    pub group: String,
+    pub task: String,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub cfg: Json,
+    pub workload: Json,
+    pub params: Vec<LeafSpec>,
+    pub opt: Vec<LeafSpec>,
+    pub init_file: String,
+    pub train_file: Option<String>,
+    pub eval_files: Vec<EvalFile>,
+    pub step_files: Vec<StepFile>,
+    pub prefill_files: Vec<PrefillFile>,
+    pub io: Option<(IoSpec, IoSpec, IoSpec)>,
+    pub depth_parallel: usize,
+    pub depth_sequential: usize,
+    pub memory: Option<BTreeMap<String, i64>>,
+}
+
+impl Variant {
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn n_opt(&self) -> usize {
+        self.opt.len()
+    }
+
+    pub fn param_elements(&self) -> usize {
+        self.params.iter().map(|p| p.elements()).sum()
+    }
+
+    /// Workload kind string, e.g. "char_lm", "chomsky/majority".
+    pub fn workload_kind(&self) -> String {
+        self.workload.get("kind").and_then(|k| k.as_str())
+            .unwrap_or("unknown").to_string()
+    }
+
+    pub fn cfg_usize(&self, key: &str) -> Option<usize> {
+        self.cfg.get(key).and_then(|v| v.as_usize())
+    }
+
+    pub fn cfg_str(&self, key: &str) -> Option<&str> {
+        self.cfg.get(key).and_then(|v| v.as_str())
+    }
+
+    pub fn step_for_batch(&self, batch: usize) -> Option<&StepFile> {
+        self.step_files.iter().find(|s| s.batch == batch)
+    }
+
+    pub fn prefill_for(&self, batch: usize, seq_len: usize)
+                       -> Option<&PrefillFile> {
+        self.prefill_files.iter()
+            .find(|p| p.batch == batch && p.seq_len == seq_len)
+    }
+
+    fn from_json(name: &str, j: &Json) -> Result<Variant> {
+        let files = j.req("files")?;
+        let leaf_list = |key: &str| -> Result<Vec<LeafSpec>> {
+            j.req(key)?.as_arr().unwrap_or_default().iter()
+                .map(LeafSpec::from_json).collect()
+        };
+        let eval_files = match files.get("eval") {
+            Some(Json::Arr(items)) => items.iter().map(|e| {
+                Ok(EvalFile {
+                    batch: e.req("batch")?.as_usize().unwrap_or(0),
+                    seq_len: e.req("seq_len")?.as_usize().unwrap_or(0),
+                    file: e.req("file")?.as_str().unwrap_or("").to_string(),
+                })
+            }).collect::<Result<Vec<_>>>()?,
+            _ => Vec::new(),
+        };
+        let step_files = match files.get("step") {
+            Some(Json::Arr(items)) => items.iter().map(|e| {
+                Ok(StepFile {
+                    batch: e.req("batch")?.as_usize().unwrap_or(0),
+                    file: e.req("file")?.as_str().unwrap_or("").to_string(),
+                    state: e.req("state")?.as_arr().unwrap_or_default()
+                        .iter().map(LeafSpec::from_json)
+                        .collect::<Result<Vec<_>>>()?,
+                })
+            }).collect::<Result<Vec<_>>>()?,
+            _ => Vec::new(),
+        };
+        let prefill_files = match files.get("prefill") {
+            Some(Json::Arr(items)) => items.iter().map(|e| {
+                Ok(PrefillFile {
+                    batch: e.req("batch")?.as_usize().unwrap_or(0),
+                    seq_len: e.req("seq_len")?.as_usize().unwrap_or(0),
+                    file: e.req("file")?.as_str().unwrap_or("").to_string(),
+                    state: e.req("state")?.as_arr().unwrap_or_default()
+                        .iter().map(LeafSpec::from_json)
+                        .collect::<Result<Vec<_>>>()?,
+                })
+            }).collect::<Result<Vec<_>>>()?,
+            _ => Vec::new(),
+        };
+        let io = match j.get("io") {
+            Some(io) => Some((
+                IoSpec::from_json(io.req("x")?)?,
+                IoSpec::from_json(io.req("targets")?)?,
+                IoSpec::from_json(io.req("mask")?)?,
+            )),
+            None => None,
+        };
+        let depth = j.get("depth");
+        let memory = j.get("memory").and_then(|m| m.as_obj()).map(|pairs| {
+            pairs.iter()
+                .filter_map(|(k, v)| v.as_i64().map(|n| (k.clone(), n)))
+                .collect()
+        });
+        Ok(Variant {
+            name: name.to_string(),
+            group: j.req("group")?.as_str().unwrap_or("").to_string(),
+            task: j.req("task")?.as_str().unwrap_or("").to_string(),
+            batch: j.req("batch")?.as_usize().unwrap_or(0),
+            seq_len: j.req("seq_len")?.as_usize().unwrap_or(0),
+            cfg: j.req("cfg")?.clone(),
+            workload: j.req("workload")?.clone(),
+            params: leaf_list("params")?,
+            opt: leaf_list("opt")?,
+            init_file: files.req("init")?.as_str().unwrap_or("").to_string(),
+            train_file: files.get("train").and_then(|f| f.as_str())
+                .map(|s| s.to_string()),
+            eval_files,
+            step_files,
+            prefill_files,
+            io,
+            depth_parallel: depth.and_then(|d| d.get("parallel_scan"))
+                .and_then(|v| v.as_usize()).unwrap_or(0),
+            depth_sequential: depth.and_then(|d| d.get("sequential"))
+                .and_then(|v| v.as_usize()).unwrap_or(0),
+            memory,
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub variants: BTreeMap<String, Variant>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(
+            || format!("read {} — run `make artifacts` first",
+                       path.display()))?;
+        let root = json::parse(&text)
+            .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+        let mut variants = BTreeMap::new();
+        for (name, vj) in root.req("variants")?.as_obj()
+            .ok_or_else(|| anyhow!("manifest variants not an object"))? {
+            variants.insert(name.clone(),
+                            Variant::from_json(name, vj)
+                                .with_context(|| format!("variant {name}"))?);
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), variants })
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&Variant> {
+        self.variants.get(name).ok_or_else(|| anyhow!(
+            "variant '{name}' not in manifest (have: {})",
+            self.variants.keys().cloned().collect::<Vec<_>>().join(", ")))
+    }
+
+    pub fn group(&self, group: &str) -> Vec<&Variant> {
+        self.variants.values().filter(|v| v.group == group).collect()
+    }
+
+    pub fn file_path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}

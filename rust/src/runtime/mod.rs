@@ -1,0 +1,10 @@
+//! Runtime layer: PJRT client + artifact manifest + per-variant model ops.
+//! Python never runs here — artifacts/*.hlo.txt are loaded directly.
+
+pub mod client;
+pub mod manifest;
+pub mod model;
+
+pub use client::Runtime;
+pub use manifest::{Manifest, Variant};
+pub use model::{EvalMetrics, Model, StepMetrics, TrainState};

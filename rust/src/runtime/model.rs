@@ -1,0 +1,285 @@
+//! Per-variant model runtime: owns the parameter/optimizer literals and
+//! exposes the train / eval / prefill / decode operations following the
+//! calling conventions documented in python/compile/aot.py.
+
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::tensor::{Batch, Tensor, TensorData};
+use crate::util::io::{self, NamedTensor};
+
+use super::client::Runtime;
+use super::manifest::{LeafSpec, Manifest, Variant};
+
+/// Parameters + optimizer state as device-feedable literals.
+pub struct TrainState {
+    pub params: Vec<xla::Literal>,
+    pub opt: Vec<xla::Literal>,
+    pub step: u64,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepMetrics {
+    pub loss: f32,
+    pub grad_norm: f32,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EvalMetrics {
+    pub loss: f32,
+    pub token_acc: f32,
+    pub seq_acc: f32,
+}
+
+pub struct Model<'rt> {
+    pub rt: &'rt Runtime,
+    pub manifest: Rc<Manifest>,
+    pub variant: Variant,
+}
+
+fn check_leaves(what: &str, specs: &[LeafSpec],
+                lits: &[xla::Literal]) -> Result<()> {
+    if specs.len() != lits.len() {
+        bail!("{what}: expected {} leaves, executable returned {}",
+              specs.len(), lits.len());
+    }
+    for (spec, lit) in specs.iter().zip(lits) {
+        let n = lit.element_count();
+        if n != spec.elements() {
+            bail!("{what}: leaf '{}' expected {:?} ({} elems), got {} elems",
+                  spec.name, spec.shape, spec.elements(), n);
+        }
+    }
+    Ok(())
+}
+
+impl<'rt> Model<'rt> {
+    pub fn open(rt: &'rt Runtime, manifest: Rc<Manifest>,
+                name: &str) -> Result<Model<'rt>> {
+        let variant = manifest.variant(name)?.clone();
+        Ok(Model { rt, manifest, variant })
+    }
+
+    fn path(&self, file: &str) -> std::path::PathBuf {
+        self.manifest.file_path(file)
+    }
+
+    // ---- init --------------------------------------------------------
+
+    /// Run the exported `init(seed, forget_bias)` executable.
+    pub fn init(&self, seed: i32, forget_bias: f32) -> Result<TrainState> {
+        let exe = self.rt.load(&self.path(&self.variant.init_file))?;
+        let seed_l = Tensor::scalar_i32(seed).to_literal()?;
+        let fb_l = Tensor::scalar_f32(forget_bias).to_literal()?;
+        let mut out = self.rt.run(&exe, &[&seed_l, &fb_l])?;
+        let n_p = self.variant.n_params();
+        let n_o = self.variant.n_opt();
+        if out.len() != n_p + n_o {
+            bail!("init returned {} leaves, manifest says {}+{}",
+                  out.len(), n_p, n_o);
+        }
+        let opt = out.split_off(n_p);
+        check_leaves("init params", &self.variant.params, &out)?;
+        check_leaves("init opt", &self.variant.opt, &opt)?;
+        Ok(TrainState { params: out, opt, step: 0 })
+    }
+
+    // ---- train -------------------------------------------------------
+
+    pub fn train_step(&self, state: &mut TrainState, batch: &Batch,
+                      lr: f32, drop_seed: i32) -> Result<StepMetrics> {
+        let file = self.variant.train_file.as_ref()
+            .ok_or_else(|| anyhow!("variant {} exports no train step",
+                                   self.variant.name))?;
+        let exe = self.rt.load(&self.path(file))?;
+
+        let x = batch.x.to_literal()?;
+        let t = batch.targets.to_literal()?;
+        let m = batch.mask.to_literal()?;
+        let lr_l = Tensor::scalar_f32(lr).to_literal()?;
+        let seed_l = Tensor::scalar_i32(drop_seed).to_literal()?;
+
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(
+            state.params.len() + state.opt.len() + 5);
+        args.extend(state.params.iter());
+        args.extend(state.opt.iter());
+        args.extend([&x, &t, &m, &lr_l, &seed_l]);
+
+        let mut out = self.rt.run(&exe, &args)?;
+        let n_p = self.variant.n_params();
+        let n_o = self.variant.n_opt();
+        if out.len() != n_p + n_o + 2 {
+            bail!("train step returned {} leaves, expected {}",
+                  out.len(), n_p + n_o + 2);
+        }
+        let gnorm = out.pop().unwrap().get_first_element::<f32>()
+            .map_err(|e| anyhow!("read grad_norm: {e:?}"))?;
+        let loss = out.pop().unwrap().get_first_element::<f32>()
+            .map_err(|e| anyhow!("read loss: {e:?}"))?;
+        let opt = out.split_off(n_p);
+        state.params = out;
+        state.opt = opt;
+        state.step += 1;
+        if !loss.is_finite() {
+            bail!("non-finite loss {loss} at step {} of {}",
+                  state.step, self.variant.name);
+        }
+        Ok(StepMetrics { loss, grad_norm: gnorm })
+    }
+
+    // ---- eval --------------------------------------------------------
+
+    /// Evaluate using the eval executable matching the batch's (B, T).
+    pub fn eval(&self, state: &TrainState, batch: &Batch)
+                -> Result<EvalMetrics> {
+        let (b, t) = (batch.batch_size(), batch.seq_len());
+        let ef = self.variant.eval_files.iter()
+            .find(|e| e.batch == b && e.seq_len == t)
+            .ok_or_else(|| anyhow!(
+                "no eval executable for batch={b} seq_len={t} in {} \
+                 (available: {:?})", self.variant.name,
+                self.variant.eval_files.iter()
+                    .map(|e| (e.batch, e.seq_len)).collect::<Vec<_>>()))?;
+        let exe = self.rt.load(&self.path(&ef.file))?;
+
+        let x = batch.x.to_literal()?;
+        let tg = batch.targets.to_literal()?;
+        let m = batch.mask.to_literal()?;
+        let mut args: Vec<&xla::Literal> = state.params.iter().collect();
+        args.extend([&x, &tg, &m]);
+
+        let out = self.rt.run(&exe, &args)?;
+        let scalar = |i: usize| -> Result<f32> {
+            out.get(i)
+                .ok_or_else(|| anyhow!("eval output {i} missing"))?
+                .get_first_element::<f32>()
+                .map_err(|e| anyhow!("read eval output {i}: {e:?}"))
+        };
+        if self.variant.task == "masked_ce" {
+            Ok(EvalMetrics { loss: scalar(0)?, token_acc: scalar(1)?,
+                             seq_acc: scalar(2)? })
+        } else {
+            Ok(EvalMetrics { loss: scalar(0)?, token_acc: 0.0,
+                             seq_acc: 0.0 })
+        }
+    }
+
+    // ---- decode ------------------------------------------------------
+
+    /// Fresh zero decode state for the step executable at `batch`.
+    pub fn decode_state_zeros(&self, batch: usize)
+                              -> Result<Vec<xla::Literal>> {
+        let sf = self.variant.step_for_batch(batch)
+            .ok_or_else(|| anyhow!("no step executable for batch {batch}"))?;
+        sf.state.iter().map(|spec| {
+            let n = spec.elements();
+            let t = match spec.dtype.as_str() {
+                "i32" => Tensor::i32(spec.shape.clone(), vec![0; n]),
+                _ => {
+                    // RNN hidden states start at the positive resting value
+                    // used by the log-space formulation (g(0) = 0.5); conv
+                    // buffers and the position counter start at zero.
+                    let fill = if spec.name.contains("mixer") { 0.5 } else { 0.0 };
+                    Tensor::f32(spec.shape.clone(), vec![fill; n])
+                }
+            };
+            t.to_literal()
+        }).collect()
+    }
+
+    /// One decode step: (logits, new_state).
+    pub fn decode_step(&self, params: &[xla::Literal], x_t: &Tensor,
+                       state: Vec<xla::Literal>)
+                       -> Result<(Tensor, Vec<xla::Literal>)> {
+        let batch = if x_t.dims.is_empty() { 1 } else { x_t.dims[0] };
+        let sf = self.variant.step_for_batch(batch)
+            .ok_or_else(|| anyhow!("no step executable for batch {batch}"))?;
+        let exe = self.rt.load(&self.path(&sf.file))?;
+        let x_l = x_t.to_literal()?;
+        let mut args: Vec<&xla::Literal> = params.iter().collect();
+        args.push(&x_l);
+        args.extend(state.iter());
+        let mut out = self.rt.run(&exe, &args)?;
+        if out.len() != 1 + sf.state.len() {
+            bail!("step returned {} leaves, expected {}", out.len(),
+                  1 + sf.state.len());
+        }
+        let new_state = out.split_off(1);
+        let logits = Tensor::from_literal(&out[0])?;
+        Ok((logits, new_state))
+    }
+
+    /// Parallel prefill over a context: (last-position logits, state).
+    pub fn prefill(&self, params: &[xla::Literal], x: &Tensor)
+                   -> Result<(Tensor, Vec<xla::Literal>)> {
+        let (b, t) = (x.dims[0], x.dims[1]);
+        let pf = self.variant.prefill_for(b, t)
+            .ok_or_else(|| anyhow!(
+                "no prefill executable for batch={b} seq_len={t} in {}",
+                self.variant.name))?;
+        let exe = self.rt.load(&self.path(&pf.file))?;
+        let x_l = x.to_literal()?;
+        let mut args: Vec<&xla::Literal> = params.iter().collect();
+        args.push(&x_l);
+        let mut out = self.rt.run(&exe, &args)?;
+        if out.len() != 1 + pf.state.len() {
+            bail!("prefill returned {} leaves, expected {}", out.len(),
+                  1 + pf.state.len());
+        }
+        let state = out.split_off(1);
+        let logits = Tensor::from_literal(&out[0])?;
+        Ok((logits, state))
+    }
+
+    // ---- checkpointing -------------------------------------------------
+
+    pub fn save_checkpoint(&self, state: &TrainState,
+                           path: &Path) -> Result<()> {
+        let mut tensors = Vec::new();
+        let dump = |prefix: &str, specs: &[LeafSpec],
+                    lits: &[xla::Literal], out: &mut Vec<NamedTensor>|
+                   -> Result<()> {
+            for (spec, lit) in specs.iter().zip(lits) {
+                let t = Tensor::from_literal(lit)?;
+                let name = format!("{prefix}/{}", spec.name);
+                out.push(match t.data {
+                    TensorData::F32(v) => NamedTensor::f32(&name, t.dims, v),
+                    TensorData::I32(v) => NamedTensor::i32(&name, t.dims, v),
+                });
+            }
+            Ok(())
+        };
+        dump("params", &self.variant.params, &state.params, &mut tensors)?;
+        dump("opt", &self.variant.opt, &state.opt, &mut tensors)?;
+        tensors.push(NamedTensor::i32("meta/step", vec![],
+                                      vec![state.step as i32]));
+        io::save(path, &tensors)
+    }
+
+    pub fn load_checkpoint(&self, path: &Path) -> Result<TrainState> {
+        let tensors = io::load(path)?;
+        let lookup = |name: &str| -> Result<&NamedTensor> {
+            tensors.iter().find(|t| t.name == name)
+                .ok_or_else(|| anyhow!("checkpoint missing tensor '{name}'"))
+        };
+        let restore = |prefix: &str, specs: &[LeafSpec]|
+                      -> Result<Vec<xla::Literal>> {
+            specs.iter().map(|spec| {
+                let nt = lookup(&format!("{prefix}/{}", spec.name))?;
+                if nt.dims != spec.shape {
+                    bail!("checkpoint tensor '{}' shape {:?} != manifest {:?}",
+                          spec.name, nt.dims, spec.shape);
+                }
+                Tensor { dims: nt.dims.clone(), data: nt.data.clone() }
+                    .to_literal()
+            }).collect()
+        };
+        let params = restore("params", &self.variant.params)?;
+        let opt = restore("opt", &self.variant.opt)?;
+        let step = lookup("meta/step")?.data.as_i32()
+            .and_then(|v| v.first().copied()).unwrap_or(0) as u64;
+        Ok(TrainState { params, opt, step })
+    }
+}

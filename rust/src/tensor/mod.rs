@@ -1,0 +1,137 @@
+//! Host-side tensors: the currency between data generators, the PJRT
+//! runtime, and checkpoints.  Thin on purpose — all heavy math happens
+//! inside the AOT-compiled XLA executables; the host only builds batches
+//! and interprets scalar outputs.
+
+use anyhow::{bail, Result};
+
+pub use crate::util::io::TensorData;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl Tensor {
+    pub fn f32(dims: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len(),
+                   "shape/data mismatch: {:?} vs {}", dims, data.len());
+        Tensor { dims, data: TensorData::F32(data) }
+    }
+
+    pub fn i32(dims: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len(),
+                   "shape/data mismatch: {:?} vs {}", dims, data.len());
+        Tensor { dims, data: TensorData::I32(data) }
+    }
+
+    pub fn zeros_f32(dims: Vec<usize>) -> Self {
+        let n = dims.iter().product();
+        Tensor::f32(dims, vec![0.0; n])
+    }
+
+    pub fn scalar_f32(x: f32) -> Self {
+        Tensor::f32(vec![], vec![x])
+    }
+
+    pub fn scalar_i32(x: i32) -> Self {
+        Tensor::i32(vec![], vec![x])
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype_name(&self) -> &'static str {
+        match self.data {
+            TensorData::F32(_) => "f32",
+            TensorData::I32(_) => "i32",
+        }
+    }
+
+    /// Convert into an XLA literal (copies; shapes become i64).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.dims.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            TensorData::F32(v) => xla::Literal::vec1(v),
+            TensorData::I32(v) => xla::Literal::vec1(v),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    /// Read an XLA literal back into a host tensor.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize)
+            .collect();
+        let data = match shape.ty() {
+            xla::ElementType::F32 => TensorData::F32(lit.to_vec::<f32>()?),
+            xla::ElementType::S32 => TensorData::I32(lit.to_vec::<i32>()?),
+            ty => bail!("unsupported literal element type {ty:?}"),
+        };
+        Ok(Tensor { dims, data })
+    }
+
+    pub fn scalar_value_f32(&self) -> Result<f32> {
+        match (&self.data, self.len()) {
+            (TensorData::F32(v), 1) => Ok(v[0]),
+            _ => bail!("not an f32 scalar: dims {:?}", self.dims),
+        }
+    }
+}
+
+/// A training/eval batch as the exported executables expect it:
+/// x (tokens or features), targets, loss mask.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub x: Tensor,
+    pub targets: Tensor,
+    pub mask: Tensor,
+}
+
+impl Batch {
+    pub fn batch_size(&self) -> usize {
+        self.x.dims[0]
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.x.dims[1]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_meta() {
+        let t = Tensor::f32(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.dtype_name(), "f32");
+        let s = Tensor::scalar_i32(7);
+        assert_eq!(s.dims, Vec::<usize>::new());
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::f32(vec![2, 2], vec![1.0; 3]);
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = Tensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+
+        let ti = Tensor::i32(vec![3], vec![-1, 0, 5]);
+        let back = Tensor::from_literal(&ti.to_literal().unwrap()).unwrap();
+        assert_eq!(back, ti);
+    }
+}

@@ -1,0 +1,165 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Warmup → adaptive iteration count → trimmed statistics.  Used by every
+//! `rust/benches/*.rs` entry point (harness = false) and by `minrnn bench`.
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_secs(1),
+            min_iters: 5,
+            max_iters: 1000,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Quick config for expensive end-to-end benches.
+    pub fn quick() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(300),
+            min_iters: 3,
+            max_iters: 50,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub median_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_s * 1e3
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        self.mean_s * 1e6
+    }
+
+    pub fn line(&self) -> String {
+        format!("{:40} {:>10.3} ms ±{:>8.3}  (median {:.3}, p95 {:.3}, n={})",
+                self.name, self.mean_s * 1e3, self.std_s * 1e3,
+                self.median_s * 1e3, self.p95_s * 1e3, self.iters)
+    }
+}
+
+/// Run `f` under the harness.  `f` should perform one complete operation.
+pub fn bench<F: FnMut()>(name: &str, cfg: &BenchConfig,
+                         mut f: F) -> BenchResult {
+    // warmup
+    let start = Instant::now();
+    while start.elapsed() < cfg.warmup {
+        f();
+    }
+    // measure
+    let mut samples: Vec<f64> = Vec::new();
+    let begin = Instant::now();
+    while (begin.elapsed() < cfg.measure || samples.len() < cfg.min_iters)
+        && samples.len() < cfg.max_iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    summarize(name, &samples)
+}
+
+/// Summarize raw per-iteration samples (trims the top 5% as outliers when
+/// enough samples exist).
+pub fn summarize(name: &str, samples: &[f64]) -> BenchResult {
+    assert!(!samples.is_empty());
+    let mut v = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let keep = if v.len() >= 20 { v.len() * 95 / 100 } else { v.len() };
+    let trimmed = &v[..keep.max(1)];
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_s: stats::mean(trimmed),
+        std_s: stats::std(trimmed),
+        median_s: stats::percentile(trimmed, 50.0),
+        p95_s: stats::percentile(&v, 95.0),
+        min_s: v[0],
+    }
+}
+
+/// Current process peak RSS in bytes (VmHWM from /proc; Linux only).
+pub fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest.trim().trim_end_matches(" kB")
+                .trim().parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
+}
+
+/// Current process RSS in bytes.
+pub fn rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmRSS:") {
+            let kb: u64 = rest.trim().trim_end_matches(" kB")
+                .trim().parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_sleep_duration() {
+        let cfg = BenchConfig {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(60),
+            min_iters: 3,
+            max_iters: 30,
+        };
+        let r = bench("sleep2ms", &cfg,
+                      || std::thread::sleep(Duration::from_millis(2)));
+        assert!(r.mean_ms() >= 1.8, "mean {}", r.mean_ms());
+        assert!(r.mean_ms() < 12.0, "mean {}", r.mean_ms());
+        assert!(r.iters >= 3);
+    }
+
+    #[test]
+    fn summarize_stats() {
+        let r = summarize("x", &[1.0, 2.0, 3.0]);
+        assert!((r.mean_s - 2.0).abs() < 1e-12);
+        assert_eq!(r.min_s, 1.0);
+        assert_eq!(r.iters, 3);
+    }
+
+    #[test]
+    fn rss_readable() {
+        assert!(rss_bytes().unwrap() > 0);
+        assert!(peak_rss_bytes().unwrap() >= rss_bytes().unwrap() / 2);
+    }
+}

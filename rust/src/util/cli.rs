@@ -1,0 +1,212 @@
+//! Declarative command-line parsing (clap is unavailable offline).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value`, repeated
+//! options, positional arguments, typed accessors with defaults, and
+//! auto-generated `--help` text.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+#[derive(Default, Clone, Debug)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+    pub positionals: Vec<(&'static str, &'static str)>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command { name, about, opts: Vec::new(), positionals: Vec::new() }
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, takes_value: false,
+                                 default: None });
+        self
+    }
+
+    pub fn opt(mut self, name: &'static str, default: Option<&'static str>,
+               help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, takes_value: true, default });
+        self
+    }
+
+    pub fn positional(mut self, name: &'static str,
+                      help: &'static str) -> Self {
+        self.positionals.push((name, help));
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.name, self.about);
+        for o in &self.opts {
+            let v = if o.takes_value { " <value>" } else { "" };
+            let d = o.default.map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  --{}{v}\n      {}{d}\n", o.name, o.help));
+        }
+        if !self.positionals.is_empty() {
+            s.push_str("\nPositionals:\n");
+            for (n, h) in &self.positionals {
+                s.push_str(&format!("  <{n}>  {h}\n"));
+            }
+        }
+        s
+    }
+
+    /// Parse `args` (without argv[0]).  Unknown options are errors.
+    pub fn parse(&self, args: &[String]) -> anyhow::Result<Parsed> {
+        let mut values: BTreeMap<String, Vec<String>> = BTreeMap::new();
+        let mut flags: Vec<String> = Vec::new();
+        let mut pos: Vec<String> = Vec::new();
+
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                anyhow::bail!("{}", self.usage());
+            }
+            if let Some(rest) = a.strip_prefix("--") {
+                let (name, inline) = match rest.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let spec = self.opts.iter().find(|o| o.name == name)
+                    .ok_or_else(|| anyhow::anyhow!(
+                        "unknown option --{name}\n\n{}", self.usage()))?;
+                if spec.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i).cloned().ok_or_else(
+                                || anyhow::anyhow!(
+                                    "--{name} requires a value"))?
+                        }
+                    };
+                    values.entry(name).or_default().push(v);
+                } else {
+                    if inline.is_some() {
+                        anyhow::bail!("--{name} takes no value");
+                    }
+                    flags.push(name);
+                }
+            } else {
+                pos.push(a.clone());
+            }
+            i += 1;
+        }
+
+        // fill defaults
+        for o in &self.opts {
+            if o.takes_value && !values.contains_key(o.name) {
+                if let Some(d) = o.default {
+                    values.insert(o.name.to_string(), vec![d.to_string()]);
+                }
+            }
+        }
+        Ok(Parsed { values, flags, pos })
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct Parsed {
+    values: BTreeMap<String, Vec<String>>,
+    flags: Vec<String>,
+    pub pos: Vec<String>,
+}
+
+impl Parsed {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        self.values.get(name).map(|v| v.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn req(&self, name: &str) -> anyhow::Result<&str> {
+        self.get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing required --{name}"))
+    }
+
+    pub fn usize(&self, name: &str) -> anyhow::Result<usize> {
+        Ok(self.req(name)?.parse()?)
+    }
+
+    pub fn u64(&self, name: &str) -> anyhow::Result<u64> {
+        Ok(self.req(name)?.parse()?)
+    }
+
+    pub fn f64(&self, name: &str) -> anyhow::Result<f64> {
+        Ok(self.req(name)?.parse()?)
+    }
+
+    pub fn f32(&self, name: &str) -> anyhow::Result<f32> {
+        Ok(self.req(name)?.parse()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("train", "train a model")
+            .opt("steps", Some("100"), "number of steps")
+            .opt("lr", Some("0.001"), "learning rate")
+            .opt("tag", None, "repeatable tag")
+            .flag("verbose", "chatty")
+            .positional("variant", "artifact variant")
+    }
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let p = cmd().parse(&s(&["--lr", "0.01", "myvariant"])).unwrap();
+        assert_eq!(p.usize("steps").unwrap(), 100);
+        assert_eq!(p.f64("lr").unwrap(), 0.01);
+        assert_eq!(p.pos, vec!["myvariant"]);
+        assert!(!p.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_form_and_flags() {
+        let p = cmd().parse(&s(&["--steps=7", "--verbose"])).unwrap();
+        assert_eq!(p.usize("steps").unwrap(), 7);
+        assert!(p.flag("verbose"));
+    }
+
+    #[test]
+    fn repeated_options() {
+        let p = cmd().parse(&s(&["--tag", "a", "--tag", "b"])).unwrap();
+        assert_eq!(p.get_all("tag"), vec!["a", "b"]);
+        assert_eq!(p.get("tag"), Some("b"));
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(cmd().parse(&s(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(cmd().parse(&s(&["--steps"])).is_err());
+    }
+}

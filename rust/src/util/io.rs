@@ -1,0 +1,212 @@
+//! Binary checkpoint format (NPZ-like, little-endian, self-describing).
+//!
+//!   magic "MRNN" | version u32 | n_tensors u32
+//!   per tensor: name_len u32 | name utf-8 | dtype u8 (0=f32, 1=i32)
+//!               | ndim u32 | dims u32[ndim] | raw data
+//!
+//! Used for parameter/optimizer checkpoints and dataset caches.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+pub const MAGIC: &[u8; 4] = b"MRNN";
+pub const VERSION: u32 = 1;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl TensorData {
+    pub fn len(&self) -> usize {
+        match self {
+            TensorData::F32(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            TensorData::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match self {
+            TensorData::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct NamedTensor {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl NamedTensor {
+    pub fn f32(name: &str, dims: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        NamedTensor { name: name.to_string(), dims,
+                      data: TensorData::F32(data) }
+    }
+
+    pub fn i32(name: &str, dims: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        NamedTensor { name: name.to_string(), dims,
+                      data: TensorData::I32(data) }
+    }
+}
+
+pub fn save(path: &Path, tensors: &[NamedTensor]) -> Result<()> {
+    let tmp = path.with_extension("tmp");
+    {
+        let mut w = BufWriter::new(File::create(&tmp)
+            .with_context(|| format!("create {}", tmp.display()))?);
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&(tensors.len() as u32).to_le_bytes())?;
+        for t in tensors {
+            let nb = t.name.as_bytes();
+            w.write_all(&(nb.len() as u32).to_le_bytes())?;
+            w.write_all(nb)?;
+            match &t.data {
+                TensorData::F32(_) => w.write_all(&[0u8])?,
+                TensorData::I32(_) => w.write_all(&[1u8])?,
+            }
+            w.write_all(&(t.dims.len() as u32).to_le_bytes())?;
+            for &d in &t.dims {
+                w.write_all(&(d as u32).to_le_bytes())?;
+            }
+            match &t.data {
+                TensorData::F32(v) => {
+                    for x in v {
+                        w.write_all(&x.to_le_bytes())?;
+                    }
+                }
+                TensorData::I32(v) => {
+                    for x in v {
+                        w.write_all(&x.to_le_bytes())?;
+                    }
+                }
+            }
+        }
+        w.flush()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+pub fn load(path: &Path) -> Result<Vec<NamedTensor>> {
+    let mut r = BufReader::new(File::open(path)
+        .with_context(|| format!("open {}", path.display()))?);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{}: not a MRNN checkpoint", path.display());
+    }
+    let version = read_u32(&mut r)?;
+    if version != VERSION {
+        bail!("{}: unsupported checkpoint version {version}", path.display());
+    }
+    let n = read_u32(&mut r)? as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let name_len = read_u32(&mut r)? as usize;
+        if name_len > 1 << 20 {
+            bail!("corrupt checkpoint: name length {name_len}");
+        }
+        let mut name_bytes = vec![0u8; name_len];
+        r.read_exact(&mut name_bytes)?;
+        let name = String::from_utf8(name_bytes)
+            .context("checkpoint name not utf-8")?;
+        let mut dtype = [0u8; 1];
+        r.read_exact(&mut dtype)?;
+        let ndim = read_u32(&mut r)? as usize;
+        if ndim > 16 {
+            bail!("corrupt checkpoint: ndim {ndim}");
+        }
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(read_u32(&mut r)? as usize);
+        }
+        let count: usize = dims.iter().product();
+        if count > 1 << 30 {
+            bail!("corrupt checkpoint: element count {count}");
+        }
+        let mut raw = vec![0u8; count * 4];
+        r.read_exact(&mut raw)?;
+        let data = match dtype[0] {
+            0 => TensorData::F32(raw.chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect()),
+            1 => TensorData::I32(raw.chunks_exact(4)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect()),
+            d => bail!("corrupt checkpoint: dtype {d}"),
+        };
+        out.push(NamedTensor { name, dims, data });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("minrnn_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ckpt.bin");
+        let tensors = vec![
+            NamedTensor::f32("w", vec![2, 3], vec![1., 2., 3., 4., 5., 6.]),
+            NamedTensor::i32("step", vec![], vec![42]),
+            NamedTensor::f32("empty", vec![0], vec![]),
+        ];
+        save(&path, &tensors).unwrap();
+        let loaded = load(&path).unwrap();
+        assert_eq!(loaded, tensors);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("minrnn_io_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let dir = std::env::temp_dir().join("minrnn_io_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trunc.bin");
+        let tensors = vec![NamedTensor::f32("w", vec![4], vec![1.; 4])];
+        save(&path, &tensors).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 5]).unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,0 +1,14 @@
+//! Substrate layer: in-repo replacements for crates unavailable in the
+//! offline build environment (clap, serde_json, rand, criterion, proptest,
+//! env_logger), each with its own unit tests.
+
+pub mod bench;
+pub mod cli;
+pub mod io;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod plot;
+pub mod rng;
+pub mod stats;
+pub mod table;

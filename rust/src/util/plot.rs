@@ -1,0 +1,150 @@
+//! ASCII line plots for terminal reports — loss curves (Figure 2/5) and
+//! runtime-vs-length curves (Figure 1/3) render directly in bench output
+//! and in results/*.md code blocks.
+
+/// Render one or more named series into a fixed-size character grid.
+/// X values need not be aligned across series; each series is drawn by
+/// nearest-column mapping.
+pub struct Plot {
+    pub title: String,
+    pub width: usize,
+    pub height: usize,
+    pub log_y: bool,
+    series: Vec<(String, Vec<(f64, f64)>)>,
+}
+
+const MARKS: [char; 6] = ['*', 'o', '+', 'x', '#', '@'];
+
+impl Plot {
+    pub fn new(title: &str) -> Self {
+        Plot { title: title.to_string(), width: 64, height: 16,
+               log_y: false, series: Vec::new() }
+    }
+
+    pub fn log_y(mut self) -> Self {
+        self.log_y = true;
+        self
+    }
+
+    pub fn series(&mut self, name: &str, points: &[(f64, f64)]) -> &mut Self {
+        self.series.push((name.to_string(), points.to_vec()));
+        self
+    }
+
+    fn y_tx(&self, y: f64) -> f64 {
+        if self.log_y { y.max(1e-12).ln() } else { y }
+    }
+
+    pub fn render(&self) -> String {
+        let pts: Vec<(f64, f64)> = self.series.iter()
+            .flat_map(|(_, p)| p.iter().cloned()).collect();
+        if pts.is_empty() {
+            return format!("{} (no data)\n", self.title);
+        }
+        let (mut x0, mut x1) = (f64::MAX, f64::MIN);
+        let (mut y0, mut y1) = (f64::MAX, f64::MIN);
+        for &(x, y) in &pts {
+            x0 = x0.min(x);
+            x1 = x1.max(x);
+            let ty = self.y_tx(y);
+            y0 = y0.min(ty);
+            y1 = y1.max(ty);
+        }
+        if (x1 - x0).abs() < 1e-12 {
+            x1 = x0 + 1.0;
+        }
+        if (y1 - y0).abs() < 1e-12 {
+            y1 = y0 + 1.0;
+        }
+        let mut grid = vec![vec![' '; self.width]; self.height];
+        for (si, (_, points)) in self.series.iter().enumerate() {
+            let mark = MARKS[si % MARKS.len()];
+            for &(x, y) in points {
+                let cx = ((x - x0) / (x1 - x0)
+                          * (self.width - 1) as f64).round() as usize;
+                let ty = self.y_tx(y);
+                let cy = ((ty - y0) / (y1 - y0)
+                          * (self.height - 1) as f64).round() as usize;
+                let row = self.height - 1 - cy.min(self.height - 1);
+                grid[row][cx.min(self.width - 1)] = mark;
+            }
+        }
+        let inv = |t: f64| if self.log_y { t.exp() } else { t };
+        let mut out = String::new();
+        out.push_str(&format!("{}\n", self.title));
+        for (i, row) in grid.iter().enumerate() {
+            let label = if i == 0 {
+                format!("{:>9.3}", inv(y1))
+            } else if i == self.height - 1 {
+                format!("{:>9.3}", inv(y0))
+            } else {
+                " ".repeat(9)
+            };
+            out.push_str(&format!("{label} |{}|\n",
+                                  row.iter().collect::<String>()));
+        }
+        out.push_str(&format!("{:>9} +{}+\n", "",
+                              "-".repeat(self.width)));
+        out.push_str(&format!("{:>10}{:<10.3}{:>width$.3}\n", "", x0, x1,
+                              width = self.width - 10));
+        let legend: Vec<String> = self.series.iter().enumerate()
+            .map(|(i, (n, _))| format!("{} {}", MARKS[i % MARKS.len()], n))
+            .collect();
+        out.push_str(&format!("{:>10}{}\n", "", legend.join("   ")));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_two_series() {
+        let mut p = Plot::new("losses");
+        p.series("a", &[(0.0, 4.0), (50.0, 2.0), (100.0, 1.0)]);
+        p.series("b", &[(0.0, 4.0), (50.0, 3.5), (100.0, 3.0)]);
+        let s = p.render();
+        assert!(s.contains("losses"));
+        assert!(s.contains('*') && s.contains('o'));
+        assert!(s.contains("* a") && s.contains("o b"));
+        assert_eq!(s.lines().count(), 16 + 4);
+    }
+
+    #[test]
+    fn extremes_land_on_edges() {
+        let mut p = Plot::new("t");
+        p.series("s", &[(0.0, 0.0), (1.0, 1.0)]);
+        let s = p.render();
+        let lines: Vec<&str> = s.lines().collect();
+        // max y on first grid row, min y on last
+        assert!(lines[1].contains('*'));
+        assert!(lines[16].contains('*'));
+    }
+
+    #[test]
+    fn log_scale_compresses() {
+        let mut p = Plot::new("t").log_y();
+        p.series("s", &[(0.0, 1.0), (1.0, 10.0), (2.0, 100.0)]);
+        let s = p.render();
+        // middle point should sit mid-grid on a log axis (grid rows only —
+        // the legend line also contains the series mark)
+        let mid_rows: Vec<usize> = s.lines().enumerate()
+            .filter(|(_, l)| l.contains('|') && l.contains('*'))
+            .map(|(i, _)| i).collect();
+        assert_eq!(mid_rows.len(), 3);
+        let gap1 = mid_rows[1] - mid_rows[0];
+        let gap2 = mid_rows[2] - mid_rows[1];
+        assert!((gap1 as i64 - gap2 as i64).abs() <= 1,
+                "log spacing uneven: {mid_rows:?}");
+    }
+
+    #[test]
+    fn empty_and_degenerate() {
+        let p = Plot::new("empty");
+        assert!(p.render().contains("no data"));
+        let mut p2 = Plot::new("flat");
+        p2.series("s", &[(0.0, 5.0), (1.0, 5.0)]);
+        assert!(p2.render().contains('*'));
+    }
+}

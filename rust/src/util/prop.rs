@@ -1,0 +1,207 @@
+//! Mini property-based testing framework (proptest is unavailable offline).
+//!
+//! A `Gen<T>` produces random values from an `Rng` plus a size hint; on
+//! failure the harness greedily shrinks the failing input (halving numbers,
+//! truncating vectors) and reports the minimal counterexample found.
+
+use super::rng::Rng;
+
+pub struct Gen<T> {
+    f: Box<dyn Fn(&mut Rng, usize) -> T>,
+}
+
+impl<T: 'static> Gen<T> {
+    pub fn new<F: Fn(&mut Rng, usize) -> T + 'static>(f: F) -> Self {
+        Gen { f: Box::new(f) }
+    }
+
+    pub fn sample(&self, rng: &mut Rng, size: usize) -> T {
+        (self.f)(rng, size)
+    }
+
+    pub fn map<U: 'static, F: Fn(T) -> U + 'static>(self, f: F) -> Gen<U> {
+        Gen::new(move |rng, size| f(self.sample(rng, size)))
+    }
+}
+
+pub fn usize_up_to(max: usize) -> Gen<usize> {
+    Gen::new(move |rng, size| rng.usize_below(max.min(size.max(1)) + 1))
+}
+
+pub fn i64_range(lo: i64, hi: i64) -> Gen<i64> {
+    Gen::new(move |rng, _| lo + rng.below((hi - lo + 1) as u64) as i64)
+}
+
+pub fn f64_range(lo: f64, hi: f64) -> Gen<f64> {
+    Gen::new(move |rng, _| rng.range_f64(lo, hi))
+}
+
+pub fn vec_of<T: 'static>(elem: Gen<T>, max_len: usize) -> Gen<Vec<T>> {
+    Gen::new(move |rng, size| {
+        let len = rng.usize_below(max_len.min(size.max(1)) + 1);
+        (0..len).map(|_| elem.sample(rng, size)).collect()
+    })
+}
+
+/// Values that know how to propose smaller versions of themselves.
+pub trait Shrink: Clone {
+    fn shrink(&self) -> Vec<Self>;
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0 { vec![] } else { vec![self / 2, self - 1] }
+    }
+}
+
+impl Shrink for i64 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self != 0 {
+            out.push(self / 2);
+            out.push(self - self.signum());
+            if *self < 0 {
+                out.push(-self);
+            }
+        }
+        out
+    }
+}
+
+impl Shrink for f64 {
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0.0 { vec![] } else { vec![self / 2.0, 0.0] }
+    }
+}
+
+impl<T: Shrink> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.is_empty() {
+            return out;
+        }
+        out.push(self[..self.len() / 2].to_vec());
+        out.push(self[1..].to_vec());
+        out.push(self[..self.len() - 1].to_vec());
+        // shrink one element
+        for (i, x) in self.iter().enumerate().take(4) {
+            for sx in x.shrink() {
+                let mut v = self.clone();
+                v[i] = sx;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self.0.shrink().into_iter()
+            .map(|a| (a, self.1.clone())).collect();
+        out.extend(self.1.shrink().into_iter()
+            .map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 200, seed: 0xC0FFEE, max_shrink_steps: 500 }
+    }
+}
+
+/// Run `prop` over `cases` random inputs; on failure shrink and panic with
+/// the minimal counterexample.
+pub fn check<T, P>(gen: &Gen<T>, prop: P)
+where
+    T: Shrink + std::fmt::Debug + 'static,
+    P: Fn(&T) -> bool,
+{
+    check_with(&Config::default(), gen, prop)
+}
+
+pub fn check_with<T, P>(cfg: &Config, gen: &Gen<T>, prop: P)
+where
+    T: Shrink + std::fmt::Debug + 'static,
+    P: Fn(&T) -> bool,
+{
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let size = 4 + case * 64 / cfg.cases.max(1); // grow sizes over run
+        let input = gen.sample(&mut rng, size);
+        if !prop(&input) {
+            let minimal = shrink_loop(input, &prop, cfg.max_shrink_steps);
+            panic!("property failed (case {case});\
+                    \n  minimal counterexample: {minimal:?}");
+        }
+    }
+}
+
+fn shrink_loop<T: Shrink + std::fmt::Debug, P: Fn(&T) -> bool>(
+    mut failing: T, prop: &P, max_steps: usize) -> T {
+    let mut steps = 0;
+    'outer: while steps < max_steps {
+        for candidate in failing.shrink() {
+            steps += 1;
+            if !prop(&candidate) {
+                failing = candidate;
+                continue 'outer;
+            }
+            if steps >= max_steps {
+                break 'outer;
+            }
+        }
+        break;
+    }
+    failing
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        // reversing twice is identity
+        let gen = vec_of(i64_range(-100, 100), 32);
+        check(&gen, |v| {
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            w == *v
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        // "all vectors are shorter than 3" fails; minimal example has len 3
+        let gen = vec_of(i64_range(0, 10), 32);
+        let result = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                check(&gen, |v| v.len() < 3);
+            }));
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("minimal counterexample"), "{msg}");
+        // minimal vec of len 3 printed with exactly 3 elements
+        let n_commas = msg[msg.find('[').unwrap()..].matches(',').count();
+        assert!(n_commas <= 3, "not shrunk: {msg}");
+    }
+
+    #[test]
+    fn numeric_shrink_reaches_small() {
+        let gen = i64_range(0, 1_000_000);
+        let result = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                check(&gen, |&x| x < 100);
+            }));
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("100"), "should shrink to 100: {msg}");
+    }
+}

@@ -1,0 +1,134 @@
+//! Cross-module invariants of the data layer (no PJRT needed):
+//! generator outputs always match the shapes/vocabs the exported
+//! executables expect, across randomized configurations.
+
+use minrnn::data::chomsky;
+use minrnn::data::lra::{collate_classification, gimage, listops, retrieval};
+use minrnn::data::rl::{OfflineDataset, Regime};
+use minrnn::data::selective_copy::SelectiveCopy;
+use minrnn::data::{corpus, random_tokens};
+use minrnn::tensor::TensorData;
+use minrnn::util::rng::Rng;
+
+fn assert_batch_invariants(b: &minrnn::tensor::Batch, vocab_in: i32) {
+    let (bs, t) = (b.x.dims[0], b.x.dims[1]);
+    assert_eq!(b.mask.dims, vec![bs, t]);
+    if let TensorData::I32(x) = &b.x.data {
+        assert!(x.iter().all(|&v| v >= 0 && v < vocab_in),
+                "token out of vocab {vocab_in}");
+    }
+    let m = b.mask.data.as_f32().unwrap();
+    assert!(m.iter().all(|&v| v == 0.0 || v == 1.0));
+    assert!(m.iter().any(|&v| v == 1.0), "mask all zeros");
+    // targets at masked positions are valid classes
+    if let (TensorData::I32(tg), m) = (&b.targets.data, m) {
+        for (i, &mask) in m.iter().enumerate() {
+            if mask > 0.0 {
+                assert!(tg[i] >= 0 && tg[i] < vocab_in,
+                        "target {} out of range", tg[i]);
+            }
+        }
+    }
+}
+
+#[test]
+fn selective_copy_many_configs() {
+    let mut rng = Rng::new(0);
+    for (ctx, nd) in [(32, 4), (64, 8), (256, 16), (100, 16)] {
+        let task = SelectiveCopy::new(ctx, nd);
+        for _ in 0..5 {
+            let b = task.batch(&mut rng, 3);
+            assert_batch_invariants(&b, 16);
+            assert_eq!(b.x.dims[1], ctx + nd);
+        }
+    }
+}
+
+#[test]
+fn chomsky_tasks_at_many_lengths() {
+    let mut rng = Rng::new(1);
+    for task in chomsky::all_tasks() {
+        for t in [32usize, 64, 128, 288] {
+            let max_c = task.max_content_for(t);
+            assert!(max_c >= 1, "{}: no content fits in {t}", task.name());
+            let b = chomsky::batch(task.as_ref(), &mut rng, 4, t, 1, max_c);
+            assert_batch_invariants(&b, 16);
+            assert_eq!(b.x.dims, vec![4, t]);
+        }
+    }
+}
+
+#[test]
+fn chomsky_deterministic_given_seed() {
+    let task = chomsky::BucketSort;
+    let b1 = chomsky::batch(&task, &mut Rng::new(7), 4, 64, 1, 20);
+    let b2 = chomsky::batch(&task, &mut Rng::new(7), 4, 64, 1, 20);
+    assert_eq!(b1.x, b2.x);
+    assert_eq!(b1.targets, b2.targets);
+}
+
+#[test]
+fn lra_generators_fit_exported_shapes() {
+    let mut rng = Rng::new(2);
+    // listops → T=256, vocab 20
+    for _ in 0..10 {
+        let examples: Vec<_> = (0..4)
+            .map(|_| listops::sample(&mut rng, 246)).collect();
+        let b = collate_classification(&examples, 256);
+        assert_batch_invariants(&b, 20);
+    }
+    // retrieval → T=512, vocab 32
+    let examples: Vec<_> = (0..4)
+        .map(|_| retrieval::sample(&mut rng, 254)).collect();
+    let b = collate_classification(&examples, 512);
+    assert_batch_invariants(&b, 32);
+    // gimage → T=256, vocab 32
+    let examples: Vec<_> = (0..4).map(|_| gimage::sample(&mut rng))
+        .collect();
+    let b = collate_classification(&examples, 256);
+    assert_batch_invariants(&b, 32);
+}
+
+#[test]
+fn corpus_tokens_under_64() {
+    let ds = corpus::LmDataset::synthetic(50_000, 0);
+    assert!(ds.tokens.iter().all(|&t| (0..64).contains(&t)));
+    let mut rng = Rng::new(0);
+    let b = ds.batch(&mut rng, 8, 256);
+    assert_batch_invariants(&b, 64);
+}
+
+#[test]
+fn random_tokens_shapes() {
+    let mut rng = Rng::new(0);
+    for t in [64usize, 1024] {
+        let b = random_tokens::batch(&mut rng, 8, t, 16);
+        assert_batch_invariants(&b, 16);
+    }
+}
+
+#[test]
+fn rl_batches_match_feature_layout() {
+    for env in ["pointmass", "pendulum", "walker1d"] {
+        let ds = OfflineDataset::build(env, Regime::Medium, 10, 0);
+        let mut rng = Rng::new(0);
+        let b = ds.batch(&mut rng, 4, 32);
+        assert_eq!(b.x.dims, vec![4, 32, ds.feature_dim()]);
+        assert_eq!(b.targets.dims, vec![4, 32, ds.act_dim]);
+        let x = b.x.data.as_f32().unwrap();
+        assert!(x.iter().all(|v| v.is_finite()));
+        // actions (targets) bounded by env contract
+        let y = b.targets.data.as_f32().unwrap();
+        assert!(y.iter().all(|&v| (-1.0..=1.0).contains(&v)));
+    }
+}
+
+#[test]
+fn rl_regimes_distinct_data() {
+    let m = OfflineDataset::build("pointmass", Regime::Medium, 10, 0);
+    let me = OfflineDataset::build("pointmass", Regime::MediumExpert, 10, 0);
+    let ret = |d: &OfflineDataset| -> f32 {
+        d.episodes.iter().map(|e| e.ret()).sum::<f32>() / 10.0
+    };
+    assert!(ret(&me) > ret(&m));
+}

@@ -1,0 +1,283 @@
+//! Integration tests over the real AOT artifacts: the full
+//! runtime → init → train → eval → decode → checkpoint path for the
+//! quickstart variant.  Requires `make artifacts` (at minimum
+//! `python -m compile.aot --out ../artifacts --only quickstart`).
+
+use std::path::Path;
+use std::rc::Rc;
+
+use minrnn::config::TrainConfig;
+use minrnn::coordinator::server::{serve, Request};
+use minrnn::coordinator::trainer::{FnSource, Trainer};
+use minrnn::coordinator::{data_source_for, infer};
+use minrnn::data::corpus::LmDataset;
+use minrnn::runtime::{Manifest, Model, Runtime};
+use minrnn::tensor::Tensor;
+use minrnn::util::rng::Rng;
+
+fn have_artifacts() -> bool {
+    Path::new("artifacts/manifest.json").exists()
+}
+
+fn open() -> (Runtime, Rc<Manifest>) {
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let manifest = Rc::new(Manifest::load(Path::new("artifacts")).unwrap());
+    (rt, manifest)
+}
+
+#[test]
+fn manifest_loads_and_quickstart_present() {
+    if !have_artifacts() {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    let (_rt, manifest) = open();
+    let v = manifest.variant("quickstart").unwrap();
+    assert_eq!(v.task, "masked_ce");
+    assert!(v.n_params() > 0);
+    assert!(v.train_file.is_some());
+    assert!(!v.eval_files.is_empty());
+    assert!(!v.step_files.is_empty());
+    assert!(!v.prefill_files.is_empty());
+}
+
+#[test]
+fn init_is_deterministic_and_seed_sensitive() {
+    if !have_artifacts() {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    let (rt, manifest) = open();
+    let model = Model::open(&rt, manifest, "quickstart").unwrap();
+    let a = model.init(1, 0.0).unwrap();
+    let b = model.init(1, 0.0).unwrap();
+    let c = model.init(2, 0.0).unwrap();
+    // compare a weight leaf (biases are zero regardless of seed)
+    let wi = model.variant.params.iter()
+        .position(|s| s.name.ends_with("/w") && s.shape.len() == 2)
+        .expect("no weight leaf");
+    let head_a = Tensor::from_literal(&a.params[wi]).unwrap();
+    let head_b = Tensor::from_literal(&b.params[wi]).unwrap();
+    let head_c = Tensor::from_literal(&c.params[wi]).unwrap();
+    assert_eq!(head_a, head_b, "same seed must give same params");
+    assert_ne!(head_a, head_c, "different seed must give different params");
+}
+
+#[test]
+fn training_reduces_loss_and_is_reproducible() {
+    if !have_artifacts() {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    let (rt, manifest) = open();
+    let model = Model::open(&rt, manifest, "quickstart").unwrap();
+    let run = |seed: u64| {
+        let mut state = model.init(seed as i32, 0.0).unwrap();
+        let mut data = data_source_for(&model.variant).unwrap();
+        let cfg = TrainConfig {
+            steps: 20,
+            lr: 2e-3,
+            eval_every: 0,
+            log_every: 100,
+            seed,
+            ..Default::default()
+        };
+        let trainer = Trainer::new(&model, cfg);
+        let report = trainer.run(&mut state, data.as_mut()).unwrap();
+        (report.loss_curve[0].1, report.final_loss)
+    };
+    let (first, last) = run(0);
+    assert!(last < first, "loss should drop: {first} → {last}");
+    let (first2, last2) = run(0);
+    assert_eq!(first, first2, "training must be reproducible");
+    assert_eq!(last, last2);
+}
+
+#[test]
+fn eval_metrics_sane() {
+    if !have_artifacts() {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    let (rt, manifest) = open();
+    let model = Model::open(&rt, manifest, "quickstart").unwrap();
+    let state = model.init(0, 0.0).unwrap();
+    let ds = LmDataset::synthetic(20_000, 0);
+    let mut rng = Rng::new(0);
+    let batch = ds.batch(&mut rng, 4, 64);
+    let m = model.eval(&state, &batch).unwrap();
+    // untrained 64-vocab: loss ≈ ln(64) ≈ 4.16
+    assert!(m.loss > 2.0 && m.loss < 8.0, "loss {}", m.loss);
+    assert!((0.0..=1.0).contains(&m.token_acc));
+    assert!((0.0..=1.0).contains(&m.seq_acc));
+}
+
+#[test]
+fn decode_matches_prefill_state_shapes_and_generates() {
+    if !have_artifacts() {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    let (rt, manifest) = open();
+    let model = Model::open(&rt, manifest, "quickstart").unwrap();
+    let state = model.init(0, 0.0).unwrap();
+
+    // prefill then continue decoding from the prefilled state
+    let mut rng = Rng::new(1);
+    let tokens: Vec<i32> = (0..4 * 64).map(|_| rng.below(64) as i32)
+        .collect();
+    let x = Tensor::i32(vec![4, 64], tokens.clone());
+    let (last_logits, pstate) = model.prefill(&state.params, &x).unwrap();
+    assert_eq!(last_logits.dims, vec![4, 64]);
+
+    let x_t = Tensor::i32(vec![4], tokens[..4].to_vec());
+    let (logits, _next) = model.decode_step(&state.params, &x_t, pstate)
+        .unwrap();
+    assert_eq!(logits.dims, vec![4, 64]);
+
+    // free generation runs and stays in-vocab
+    let out = infer::generate(&model, &state.params, &[1, 2, 3], 16, 1.0,
+                              &mut rng).unwrap();
+    assert_eq!(out.len(), 16);
+    assert!(out.iter().all(|&t| (0..64).contains(&t)));
+}
+
+#[test]
+fn decode_parallel_sequential_equivalence() {
+    // The paper's core identity: parallel-mode (prefill) and
+    // sequential-mode (decode) computations produce the same final state →
+    // the same next-token logits.
+    if !have_artifacts() {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    let (rt, manifest) = open();
+    let model = Model::open(&rt, manifest, "quickstart").unwrap();
+    let tstate = model.init(0, 0.0).unwrap();
+    let mut rng = Rng::new(5);
+    let tokens: Vec<i32> = (0..4 * 64).map(|_| rng.below(64) as i32)
+        .collect();
+
+    // parallel: prefill over the whole window
+    let x = Tensor::i32(vec![4, 64], tokens.clone());
+    let (par_logits, _) = model.prefill(&tstate.params, &x).unwrap();
+
+    // sequential: token-by-token decode
+    let mut st = model.decode_state_zeros(4).unwrap();
+    let mut seq_logits = Tensor::zeros_f32(vec![4, 64]);
+    for t in 0..64 {
+        let xt = Tensor::i32(
+            vec![4], (0..4).map(|b| tokens[b * 64 + t]).collect());
+        let (l, s) = model.decode_step(&tstate.params, &xt, st).unwrap();
+        seq_logits = l;
+        st = s;
+    }
+
+    let a = par_logits.data.as_f32().unwrap();
+    let b = seq_logits.data.as_f32().unwrap();
+    let max_err = a.iter().zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0f32, f32::max);
+    assert!(max_err < 2e-3, "parallel/sequential mismatch: {max_err}");
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_training() {
+    if !have_artifacts() {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    let (rt, manifest) = open();
+    let model = Model::open(&rt, manifest, "quickstart").unwrap();
+    let mut state = model.init(3, 0.0).unwrap();
+    let ds = LmDataset::synthetic(20_000, 0);
+    let mut rng = Rng::new(3);
+    for i in 0..3 {
+        let b = ds.batch(&mut rng, 4, 64);
+        model.train_step(&mut state, &b, 1e-3, i).unwrap();
+    }
+    let dir = std::env::temp_dir().join("minrnn_it_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("it.ckpt");
+    model.save_checkpoint(&state, &path).unwrap();
+    let restored = model.load_checkpoint(&path).unwrap();
+    assert_eq!(restored.step, 3);
+
+    // continuing training from restored state must equal continuing from
+    // the original (bitwise deterministic executables)
+    let b = ds.batch(&mut rng, 4, 64);
+    let mut s1 = state;
+    let mut s2 = restored;
+    let m1 = model.train_step(&mut s1, &b, 1e-3, 9).unwrap();
+    let m2 = model.train_step(&mut s2, &b, 1e-3, 9).unwrap();
+    assert_eq!(m1.loss, m2.loss);
+}
+
+#[test]
+fn corrupt_artifact_is_a_clean_error() {
+    if !have_artifacts() {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    let (rt, _) = open();
+    let dir = std::env::temp_dir().join("minrnn_bad_hlo");
+    std::fs::create_dir_all(&dir).unwrap();
+    let bad = dir.join("bad.hlo.txt");
+    std::fs::write(&bad, "HloModule utter_garbage ha ha").unwrap();
+    assert!(rt.load(&bad).is_err());
+}
+
+#[test]
+fn serving_dynamic_batching_end_to_end() {
+    if !have_artifacts() {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    let (rt, manifest) = open();
+    let model = Model::open(&rt, manifest, "quickstart").unwrap();
+    let state = model.init(0, 0.0).unwrap();
+    let mut rng = Rng::new(0);
+    let requests: Vec<Request> = (0..6).map(|i| Request {
+        id: i,
+        prompt: (0..3 + rng.usize_below(4))
+            .map(|_| rng.below(64) as i32).collect(),
+        n_tokens: 5,
+    }).collect();
+    let stats = serve(&model, &state.params, requests, 1.0, 0).unwrap();
+    assert_eq!(stats.responses.len(), 6);
+    assert!(stats.responses.iter().all(|r| r.tokens.len() == 5));
+    assert_eq!(stats.tokens_generated, 30);
+}
+
+#[test]
+fn trainer_rejects_wrong_shapes() {
+    if !have_artifacts() {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    let (rt, manifest) = open();
+    let model = Model::open(&rt, manifest, "quickstart").unwrap();
+    let mut state = model.init(0, 0.0).unwrap();
+    // wrong sequence length → executable must refuse
+    let bad = minrnn::tensor::Batch {
+        x: Tensor::i32(vec![4, 32], vec![0; 128]),
+        targets: Tensor::i32(vec![4, 32], vec![0; 128]),
+        mask: Tensor::f32(vec![4, 32], vec![1.0; 128]),
+    };
+    assert!(model.train_step(&mut state, &bad, 1e-3, 0).is_err());
+}
+
+#[test]
+fn fn_source_closure_works() {
+    // host-only check that the DataSource plumbing composes
+    let mut src = FnSource {
+        f: |rng: &mut Rng| {
+            let ds = LmDataset::synthetic(5_000, 0);
+            ds.batch(rng, 2, 16)
+        },
+    };
+    use minrnn::coordinator::trainer::DataSource;
+    let mut rng = Rng::new(0);
+    let b = src.train_batch(&mut rng);
+    assert_eq!(b.x.dims, vec![2, 16]);
+}

@@ -1,0 +1,169 @@
+//! Property-based tests (util::prop) over the substrates and the data
+//! layer: round-trips, invariants and oracles under random inputs.
+
+use minrnn::data::chomsky;
+use minrnn::data::lra::listops;
+use minrnn::util::json::{self, Json};
+use minrnn::util::prop::{check, i64_range, vec_of, Gen};
+use minrnn::util::rng::Rng;
+use minrnn::util::stats;
+use minrnn::util::io::{self, NamedTensor};
+
+#[test]
+fn prop_json_roundtrip_arbitrary_numbers() {
+    let gen = vec_of(i64_range(-1_000_000, 1_000_000), 24);
+    check(&gen, |v| {
+        let j = Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect());
+        let text = json::to_string(&j);
+        json::parse(&text).map(|p| p == j).unwrap_or(false)
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_strings() {
+    // random "hostile" strings: control chars, quotes, unicode
+    let gen = Gen::new(|rng: &mut Rng, size: usize| {
+        let n = rng.usize_below(size.max(1) + 1);
+        (0..n).map(|_| {
+            match rng.below(6) {
+                0 => '"',
+                1 => '\\',
+                2 => '\n',
+                3 => char::from_u32(rng.below(26) as u32 + 'a' as u32)
+                    .unwrap(),
+                4 => 'é',
+                _ => '😀',
+            }
+        }).collect::<String>()
+    });
+    let mut rng = Rng::new(1);
+    for case in 0..300 {
+        let s = gen.sample(&mut rng, 4 + case / 4);
+        let j = Json::Str(s.clone());
+        let parsed = json::parse(&json::to_string(&j)).unwrap();
+        assert_eq!(parsed.as_str(), Some(s.as_str()));
+    }
+}
+
+#[test]
+fn prop_checkpoint_roundtrip() {
+    let mut rng = Rng::new(2);
+    let dir = std::env::temp_dir().join("minrnn_prop_io");
+    std::fs::create_dir_all(&dir).unwrap();
+    for case in 0..30 {
+        let n_tensors = 1 + rng.usize_below(5);
+        let tensors: Vec<NamedTensor> = (0..n_tensors).map(|i| {
+            let d0 = 1 + rng.usize_below(6);
+            let d1 = 1 + rng.usize_below(6);
+            if rng.bool(0.5) {
+                NamedTensor::f32(&format!("t{i}"), vec![d0, d1],
+                                 (0..d0 * d1)
+                                 .map(|_| rng.normal_f32(0.0, 10.0))
+                                 .collect())
+            } else {
+                NamedTensor::i32(&format!("t{i}"), vec![d0, d1],
+                                 (0..d0 * d1)
+                                 .map(|_| rng.below(1000) as i32 - 500)
+                                 .collect())
+            }
+        }).collect();
+        let path = dir.join(format!("c{case}.bin"));
+        io::save(&path, &tensors).unwrap();
+        assert_eq!(io::load(&path).unwrap(), tensors);
+    }
+}
+
+#[test]
+fn prop_percentile_bounded_by_extremes() {
+    let gen = vec_of(i64_range(-1000, 1000), 40);
+    check(&gen, |v| {
+        if v.is_empty() {
+            return true;
+        }
+        let xs: Vec<f64> = v.iter().map(|&x| x as f64).collect();
+        let lo = xs.iter().cloned().fold(f64::MAX, f64::min);
+        let hi = xs.iter().cloned().fold(f64::MIN, f64::max);
+        [0.0, 25.0, 50.0, 99.0, 100.0].iter().all(|&q| {
+            let p = stats::percentile(&xs, q);
+            p >= lo - 1e-9 && p <= hi + 1e-9
+        })
+    });
+}
+
+#[test]
+fn prop_welford_equals_batch_stats() {
+    let gen = vec_of(i64_range(-500, 500), 64);
+    check(&gen, |v| {
+        if v.len() < 2 {
+            return true;
+        }
+        let xs: Vec<f64> = v.iter().map(|&x| x as f64).collect();
+        let mut w = stats::Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        (w.mean() - stats::mean(&xs)).abs() < 1e-9
+            && (w.std() - stats::std(&xs)).abs() < 1e-9
+    });
+}
+
+#[test]
+fn prop_listops_eval_matches_bruteforce() {
+    // independent reference evaluator over the token stream
+    fn eval_tokens(tokens: &[i32], pos: &mut usize) -> i64 {
+        let t = tokens[*pos];
+        *pos += 1;
+        if (2..=11).contains(&t) {
+            return (t - 2) as i64;
+        }
+        assert_eq!(t, listops::OPEN);
+        let op = tokens[*pos];
+        *pos += 1;
+        let mut vals = Vec::new();
+        while tokens[*pos] != listops::CLOSE {
+            vals.push(eval_tokens(tokens, pos));
+        }
+        *pos += 1;
+        match op {
+            listops::OP_MAX => *vals.iter().max().unwrap(),
+            listops::OP_MIN => *vals.iter().min().unwrap(),
+            listops::OP_MED => {
+                vals.sort_unstable();
+                vals[vals.len() / 2]
+            }
+            listops::OP_SM => vals.iter().sum::<i64>().rem_euclid(10),
+            _ => panic!("bad op"),
+        }
+    }
+
+    let mut rng = Rng::new(3);
+    for _ in 0..200 {
+        let (tokens, label) = listops::sample(&mut rng, 100);
+        let mut pos = 0;
+        let value = eval_tokens(&tokens, &mut pos);
+        assert_eq!(pos, tokens.len(), "evaluator must consume everything");
+        assert_eq!(value, label as i64);
+    }
+}
+
+#[test]
+fn prop_chomsky_total_len_consistent() {
+    let mut rng = Rng::new(4);
+    for task in chomsky::all_tasks() {
+        for _ in 0..40 {
+            let n = 1 + rng.usize_below(40);
+            let ex = task.sample(&mut rng, n);
+            assert_eq!(ex.input.len(), task.total_len(n),
+                       "{} total_len mismatch at n={n}", task.name());
+        }
+    }
+}
+
+#[test]
+fn prop_rng_below_never_exceeds() {
+    let gen = i64_range(1, 1_000_000);
+    check(&gen, |&n| {
+        let mut rng = Rng::new(n as u64);
+        (0..100).all(|_| rng.below(n as u64) < n as u64)
+    });
+}
