@@ -13,7 +13,7 @@ use minrnn::bench_harness::lm::LmSource;
 use minrnn::config::{Schedule, TrainConfig};
 use minrnn::coordinator::{infer, trainer::Trainer};
 use minrnn::data::corpus::CharVocab;
-use minrnn::runtime::{Manifest, Model, Runtime};
+use minrnn::runtime::{Manifest, Model, PjrtBackend, Runtime};
 use minrnn::util::rng::Rng;
 use minrnn::util::table::{fnum, Table};
 
@@ -67,8 +67,8 @@ fn main() -> anyhow::Result<()> {
         // sample a continuation through the decode path
         let vocab = CharVocab::new();
         let mut rng = Rng::new(7);
-        let out = infer::generate(&model, &state.params,
-                                  &vocab.encode("The "), 120, 0.8,
+        let backend = PjrtBackend::new(&model, &state.params);
+        let out = infer::generate(&backend, &vocab.encode("The "), 120, 0.8,
                                   &mut rng)?;
         println!("{kind} sample: {:?}\n", vocab.decode(&out));
     }

@@ -10,7 +10,7 @@ use minrnn::config::TrainConfig;
 use minrnn::coordinator::{infer, trainer::Trainer};
 use minrnn::coordinator::data_source_for;
 use minrnn::data::corpus::CharVocab;
-use minrnn::runtime::{Manifest, Model, Runtime};
+use minrnn::runtime::{Manifest, Model, PjrtBackend, Runtime};
 use minrnn::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
@@ -49,8 +49,8 @@ fn main() -> anyhow::Result<()> {
     let vocab = CharVocab::new();
     let mut rng = Rng::new(0);
     let prompt = vocab.encode("The ");
-    let tokens = infer::generate(&model, &state.params, &prompt, 60, 0.9,
-                                 &mut rng)?;
+    let backend = PjrtBackend::new(&model, &state.params);
+    let tokens = infer::generate(&backend, &prompt, 60, 0.9, &mut rng)?;
     println!("sample: {:?}", vocab.decode(&tokens));
 
     // 4. checkpoint round-trip

@@ -11,7 +11,7 @@ use minrnn::config::{Schedule, TrainConfig};
 use minrnn::coordinator::infer::rollout_decision;
 use minrnn::coordinator::trainer::{FnSource, Trainer};
 use minrnn::data::rl::{normalized_score, OfflineDataset, Regime};
-use minrnn::runtime::{Manifest, Model, Runtime};
+use minrnn::runtime::{Manifest, Model, PjrtBackend, Runtime};
 use minrnn::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
@@ -52,11 +52,11 @@ fn main() -> anyhow::Result<()> {
 
     let target = ds.target_return();
     println!("rolling out with target return {target:.1}...");
+    let backend = PjrtBackend::new(&model, &state.params);
     let mut total = 0f32;
     let n = 6;
     for k in 0..n {
-        let ret = rollout_decision(&model, &state.params, &ds, target,
-                                   1000 + k)?;
+        let ret = rollout_decision(&backend, &ds, target, 1000 + k)?;
         println!("  rollout {k}: raw return {ret:.1}");
         total += ret;
     }

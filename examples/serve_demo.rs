@@ -7,7 +7,7 @@ use std::path::Path;
 use std::rc::Rc;
 
 use minrnn::coordinator::server::{serve, Request};
-use minrnn::runtime::{Manifest, Model, Runtime};
+use minrnn::runtime::{Manifest, Model, PjrtBackend, Runtime};
 use minrnn::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
@@ -25,7 +25,8 @@ fn main() -> anyhow::Result<()> {
         n_tokens: 12,
     }).collect();
 
-    let stats = serve(&model, &state.params, requests, 0.8, 0)?;
+    let backend = PjrtBackend::new(&model, &state.params);
+    let stats = serve(&backend, requests, 0.8, 0)?;
     println!("served {} requests, {} tokens, {:.2}s total",
              stats.responses.len(), stats.tokens_generated, stats.total_s);
     println!("throughput: {:.1} tok/s", stats.throughput_tok_s());

@@ -1,0 +1,201 @@
+"""Export golden test vectors for the native Rust backend.
+
+Runs the pure-jnp reference oracles (`kernels.ref`) and the backbone
+(`models.backbone`) on small fixed-seed inputs and dumps inputs + expected
+outputs as JSON under ``rust/tests/golden/``.  The Rust test
+``rust/tests/native_golden.rs`` replays them through the native backend and
+asserts agreement to 1e-5 — with no artifacts, no PJRT, no skips.
+
+Regenerate (from ``python/``):
+
+    python -m compile.export_golden [--out ../rust/tests/golden]
+
+The JSON files are committed so `cargo test` never needs Python.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+from .models import backbone
+
+DEFAULT_OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "..", "..", "rust", "tests", "golden")
+
+
+def tensor(x) -> dict:
+    """A tensor as {shape, data} with full f32 precision."""
+    a = np.asarray(x, dtype=np.float32)
+    return {"shape": list(a.shape),
+            "data": [float(v) for v in a.reshape(-1)]}
+
+
+def itensor(x) -> dict:
+    a = np.asarray(x, dtype=np.int32)
+    return {"shape": list(a.shape), "data": [int(v) for v in a.reshape(-1)]}
+
+
+def _keystr(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def named_params(tree) -> list:
+    """Flatten a param tree to AOT-style named tensors (checkpoint names)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        entry = tensor(leaf)
+        entry["name"] = "params/" + _keystr(path)
+        out.append(entry)
+    return out
+
+
+def dump(out_dir: str, name: str, obj: dict) -> None:
+    path = os.path.join(out_dir, name)
+    with open(path, "w") as f:
+        json.dump(obj, f)
+    print(f"wrote {path} ({os.path.getsize(path)} bytes)")
+
+
+# ---------------------------------------------------------------------------
+# mixer-level cases (Algorithms 5/7 — the log-space-trained sequential math)
+# ---------------------------------------------------------------------------
+
+def mingru_cases(key) -> dict:
+    cases = []
+    for i, (b, t, d) in enumerate([(1, 1, 1), (2, 4, 3), (1, 12, 5)]):
+        k1, k2, k3, key = jax.random.split(key, 4)
+        k = jax.random.normal(k1, (b, t, d), jnp.float32) * 2.0
+        pre = jax.random.normal(k2, (b, t, d), jnp.float32) * 2.0
+        h0 = jax.random.uniform(k3, (b, d), jnp.float32, 0.1, 1.5)
+        if i == 0:
+            h0 = jnp.full((b, d), 0.5, jnp.float32)  # the decode resting state
+        h = ref.mingru_sequential(k, pre, h0)
+        cases.append({"k": tensor(k), "pre": tensor(pre), "h0": tensor(h0),
+                      "h": tensor(h)})
+    return {"doc": "minGRU Algorithm 5: z=sigmoid(k), h'=(1-z)h+z*g(pre)",
+            "cases": cases}
+
+
+def minlstm_cases(key) -> dict:
+    cases = []
+    for b, t, d in [(1, 1, 2), (2, 5, 3), (1, 10, 4)]:
+        k1, k2, k3, k4, key = jax.random.split(key, 5)
+        p = jax.random.normal(k1, (b, t, d), jnp.float32) * 2.0
+        k = jax.random.normal(k2, (b, t, d), jnp.float32) * 2.0
+        pre = jax.random.normal(k3, (b, t, d), jnp.float32) * 2.0
+        h0 = jax.random.uniform(k4, (b, d), jnp.float32, 0.1, 1.5)
+        h = ref.minlstm_sequential(p, k, pre, h0)
+        cases.append({"p": tensor(p), "k": tensor(k), "pre": tensor(pre),
+                      "h0": tensor(h0), "h": tensor(h)})
+    return {"doc": "minLSTM Algorithm 7: f'=f/(f+i), i'=i/(f+i), "
+                   "h'=f'h+i'*g(pre)",
+            "cases": cases}
+
+
+def scan_cases(key) -> dict:
+    log_cases = []
+    for b, t, d in [(1, 3, 2), (2, 70, 3)]:  # 70 straddles a chunk boundary
+        k1, k2, k3, key = jax.random.split(key, 4)
+        log_a = jax.random.uniform(k1, (b, t, d), jnp.float32, -5.0, 0.0)
+        log_b = jax.random.uniform(k2, (b, t, d), jnp.float32, -5.0, 1.0)
+        log_h0 = jax.random.uniform(k3, (b, d), jnp.float32, -2.0, 0.5)
+        h = ref.log_linear_recurrence(log_a, log_b, log_h0)
+        if t <= 16:
+            # cross-check the algorithm on short sequences only: the jnp
+            # Heinsen form underflows in f32 once cumsum(log_a) is large
+            h2 = ref.heinsen_scan_log(log_a, log_b, log_h0)
+            np.testing.assert_allclose(np.asarray(h), np.asarray(h2),
+                                       rtol=2e-4, atol=2e-5)
+        log_cases.append({"log_a": tensor(log_a), "log_b": tensor(log_b),
+                          "log_h0": tensor(log_h0), "h": tensor(h)})
+    lin_cases = []
+    for b, t, d in [(2, 6, 2), (1, 33, 3)]:
+        k1, k2, k3, key = jax.random.split(key, 4)
+        a = jax.random.uniform(k1, (b, t, d), jnp.float32, -1.05, 1.05)
+        bb = jax.random.normal(k2, (b, t, d), jnp.float32)
+        h0 = jax.random.normal(k3, (b, d), jnp.float32)
+        h = ref.linear_recurrence(a, bb, h0)
+        lin_cases.append({"a": tensor(a), "b": tensor(bb), "h0": tensor(h0),
+                          "h": tensor(h)})
+    return {"doc": "core recurrence v_t = a_t*v_{t-1} + b_t "
+                   "(log-space and real-space forms)",
+            "log": log_cases, "linear": lin_cases}
+
+
+# ---------------------------------------------------------------------------
+# backbone-level cases (full model forward + decode chain)
+# ---------------------------------------------------------------------------
+
+def backbone_case(key, cfg: dict, x, discrete: bool) -> dict:
+    cfg = backbone.with_defaults(cfg)
+    kp, key = jax.random.split(key)
+    params = backbone.init(kp, cfg)
+    logits_par, _ = backbone.apply_parallel(params, cfg, x, train=False)
+    B = x.shape[0]
+    T = x.shape[1]
+    state = backbone.init_state(cfg, B)
+    steps = []
+    for t in range(T):
+        x_t = x[:, t] if discrete else x[:, t, :]
+        logits_t, state = backbone.apply_step(params, cfg, x_t, state)
+        steps.append(logits_t)
+    logits_step = jnp.stack(steps, axis=1)
+    np.testing.assert_allclose(np.asarray(logits_par),
+                               np.asarray(logits_step),
+                               rtol=2e-3, atol=2e-4)
+    return {
+        "cfg": {k: v for k, v in cfg.items() if v is not None},
+        "params": named_params(params),
+        "x": itensor(x) if discrete else tensor(x),
+        "logits_parallel": tensor(logits_par),
+        "logits_step": tensor(logits_step),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+    out = os.path.abspath(args.out)
+    os.makedirs(out, exist_ok=True)
+
+    key = jax.random.PRNGKey(20260728)
+    k1, k2, k3, k4, k5, k6, k7 = jax.random.split(key, 7)
+
+    dump(out, "mingru_cells.json", mingru_cases(k1))
+    dump(out, "minlstm_cells.json", minlstm_cases(k2))
+    dump(out, "scan_cases.json", scan_cases(k3))
+
+    # full backbone, discrete tokens, conv + mlp on (quickstart-shaped)
+    cfg = dict(kind="mingru", n_layers=2, d_model=8, expansion=2,
+               vocab_in=11, vocab_out=11, conv=True, mlp=True, mlp_mult=2,
+               dropout=0.0, max_len=16)
+    x = jax.random.randint(k4, (2, 6), 0, 11, jnp.int32)
+    dump(out, "backbone_mingru.json", backbone_case(k5, cfg, x, True))
+
+    # minLSTM with forget bias, continuous features (RL-shaped), bare blocks
+    cfg2 = dict(kind="minlstm", n_layers=1, d_model=6, expansion=1,
+                vocab_in=None, input_dim=4, vocab_out=3, conv=False,
+                mlp=False, dropout=0.0, forget_bias=1.0, max_len=16)
+    x2 = jax.random.normal(k6, (2, 5, 4), jnp.float32)
+    dump(out, "backbone_minlstm.json", backbone_case(k7, cfg2, x2, False))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+//! Inference backends.  The [`crate::runtime::Backend`] trait abstracts
+//! "something that can prefill a context and decode tokens"; this module
+//! provides the **native** pure-Rust CPU implementation (module
+//! [`native`]), while the PJRT/XLA artifact implementation lives in
+//! [`crate::runtime::backend::PjrtBackend`].
+//!
+//! The native backend exists so that serving, testing, and the examples
+//! can run end-to-end with zero Python/XLA dependencies: it loads the same
+//! MRNN checkpoints the PJRT trainer writes (`util::io`), implements the
+//! log-space scan + sequential decode of the paper, and plugs into
+//! `coordinator::infer::generate` / `coordinator::server::serve` through
+//! the same trait as the artifact runtime.
+
+pub mod native;
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::runtime::Backend;
+use crate::tensor::Tensor;
+
+pub use native::{NativeInit, NativeModel, NativeState};
+
+/// Native CPU backend: owns the model parameters, serves any batch size.
+pub struct NativeBackend {
+    pub model: NativeModel,
+}
+
+impl NativeBackend {
+    pub fn new(model: NativeModel) -> NativeBackend {
+        NativeBackend { model }
+    }
+
+    /// Load from an MRNN checkpoint (as written by the PJRT trainer or
+    /// [`NativeModel::to_named`] + `util::io::save`).
+    pub fn from_checkpoint(path: &Path) -> Result<NativeBackend> {
+        Ok(NativeBackend { model: NativeModel::from_checkpoint(path)? })
+    }
+}
+
+impl Backend for NativeBackend {
+    type State = NativeState;
+
+    fn name(&self) -> &str {
+        "native"
+    }
+
+    fn step_batches(&self) -> Vec<usize> {
+        Vec::new() // any batch size works
+    }
+
+    fn decode_state(&self, batch: usize) -> Result<NativeState> {
+        Ok(self.model.init_state(batch))
+    }
+
+    fn decode_step(&self, x_t: &Tensor, state: NativeState)
+                   -> Result<(Tensor, NativeState)> {
+        self.model.step(x_t, state)
+    }
+
+    fn prefill(&self, x: &Tensor) -> Result<(Tensor, NativeState)> {
+        self.model.prefill(x)
+    }
+}

@@ -1,0 +1,374 @@
+//! Dense/normalization/activation primitives for the native CPU backend.
+//!
+//! Everything operates on flat row-major `f32` slices with explicit shapes,
+//! mirroring the JAX reference in `python/compile/models/layers.py`:
+//! weights are `(d_in, d_out)` row-major, biases `(d_out,)`, activations
+//! match the `jax.nn` definitions bit-for-bit up to libm rounding.
+
+use anyhow::{bail, Result};
+
+// ---------------------------------------------------------------------------
+// scalar activations
+// ---------------------------------------------------------------------------
+
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    if x >= 0.0 {
+        1.0 / (1.0 + (-x).exp())
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// Numerically stable `ln(1 + e^x)`.
+#[inline]
+pub fn softplus(x: f32) -> f32 {
+    x.max(0.0) + (-x.abs()).exp().ln_1p()
+}
+
+/// `g(x) = x + 0.5` for `x >= 0` else `sigmoid(x)` — the positivity
+/// activation of Appendix B (Listing 6).
+#[inline]
+pub fn g(x: f32) -> f32 {
+    if x >= 0.0 {
+        x + 0.5
+    } else {
+        sigmoid(x)
+    }
+}
+
+/// `log(g(x))` computed stably (Listing 6).
+#[inline]
+pub fn log_g(x: f32) -> f32 {
+    if x >= 0.0 {
+        (x + 0.5).ln()
+    } else {
+        -softplus(-x)
+    }
+}
+
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x * sigmoid(x)
+}
+
+/// Tanh-approximate GELU — `jax.nn.gelu`'s default (`approximate=True`).
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    const SQRT_2_OVER_PI: f32 = 0.797_884_56;
+    0.5 * x * (1.0 + (SQRT_2_OVER_PI * (x + 0.044_715 * x * x * x)).tanh())
+}
+
+/// Stable `log(e^a + e^b)` in f64 (the scan accumulates in f64).
+#[inline]
+pub fn logaddexp(a: f64, b: f64) -> f64 {
+    if a == f64::NEG_INFINITY {
+        return b;
+    }
+    if b == f64::NEG_INFINITY {
+        return a;
+    }
+    let m = a.max(b);
+    m + ((a - m).exp() + (b - m).exp()).ln()
+}
+
+/// Elementwise `dst += src`.
+#[inline]
+pub fn add_assign(dst: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d += *s;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// dense / embedding
+// ---------------------------------------------------------------------------
+
+/// Affine layer `y = x @ w + b`, `w: (d_in, d_out)` row-major.
+#[derive(Clone, Debug)]
+pub struct Dense {
+    pub d_in: usize,
+    pub d_out: usize,
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+impl Dense {
+    pub fn new(d_in: usize, d_out: usize, w: Vec<f32>, b: Vec<f32>)
+               -> Result<Dense> {
+        if w.len() != d_in * d_out || b.len() != d_out {
+            bail!("dense shape mismatch: w {} != {}x{}, b {} != {}",
+                  w.len(), d_in, d_out, b.len(), d_out);
+        }
+        Ok(Dense { d_in, d_out, w, b })
+    }
+
+    /// Apply to `rows` rows of `d_in` features; returns `rows * d_out`.
+    pub fn apply(&self, x: &[f32], rows: usize) -> Vec<f32> {
+        assert_eq!(x.len(), rows * self.d_in,
+                   "dense input: {} != {} rows x {}", x.len(), rows,
+                   self.d_in);
+        let mut y = vec![0.0f32; rows * self.d_out];
+        for r in 0..rows {
+            let xr = &x[r * self.d_in..(r + 1) * self.d_in];
+            let yr = &mut y[r * self.d_out..(r + 1) * self.d_out];
+            yr.copy_from_slice(&self.b);
+            for (k, &xv) in xr.iter().enumerate() {
+                let wrow = &self.w[k * self.d_out..(k + 1) * self.d_out];
+                for (yo, &wv) in yr.iter_mut().zip(wrow) {
+                    *yo += xv * wv;
+                }
+            }
+        }
+        y
+    }
+}
+
+/// Token embedding table `(vocab, d)`.
+#[derive(Clone, Debug)]
+pub struct Embedding {
+    pub vocab: usize,
+    pub d: usize,
+    pub w: Vec<f32>,
+}
+
+impl Embedding {
+    pub fn new(vocab: usize, d: usize, w: Vec<f32>) -> Result<Embedding> {
+        if w.len() != vocab * d {
+            bail!("embedding shape mismatch: {} != {}x{}", w.len(), vocab, d);
+        }
+        Ok(Embedding { vocab, d, w })
+    }
+
+    /// Gather rows; out-of-range ids clamp (like `jnp.take` under jit).
+    pub fn lookup(&self, ids: &[i32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; ids.len() * self.d];
+        for (r, &id) in ids.iter().enumerate() {
+            let row = (id.max(0) as usize).min(self.vocab - 1);
+            out[r * self.d..(r + 1) * self.d]
+                .copy_from_slice(&self.w[row * self.d..(row + 1) * self.d]);
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RMSNorm
+// ---------------------------------------------------------------------------
+
+/// `x * rsqrt(mean(x^2) + 1e-6) * scale`, normalized over the last dim.
+pub fn rmsnorm(x: &[f32], scale: &[f32], rows: usize, d: usize) -> Vec<f32> {
+    assert_eq!(x.len(), rows * d, "rmsnorm input");
+    assert_eq!(scale.len(), d, "rmsnorm scale");
+    let mut y = vec![0.0f32; rows * d];
+    for r in 0..rows {
+        let xr = &x[r * d..(r + 1) * d];
+        let ms = xr.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (ms + 1e-6).sqrt();
+        let yr = &mut y[r * d..(r + 1) * d];
+        for i in 0..d {
+            yr[i] = xr[i] * inv * scale[i];
+        }
+    }
+    y
+}
+
+// ---------------------------------------------------------------------------
+// temporal depthwise causal conv (kernel 4), parallel + ring-buffer step
+// ---------------------------------------------------------------------------
+
+pub const CONV_K: usize = 4;
+
+/// Depthwise causal conv over time with SiLU, `w: (k, d)` row-major.
+#[derive(Clone, Debug)]
+pub struct Conv4 {
+    pub k: usize,
+    pub d: usize,
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+impl Conv4 {
+    pub fn new(k: usize, d: usize, w: Vec<f32>, b: Vec<f32>) -> Result<Conv4> {
+        if w.len() != k * d || b.len() != d {
+            bail!("conv shape mismatch: w {} != {}x{}, b {} != {}",
+                  w.len(), k, d, b.len(), d);
+        }
+        Ok(Conv4 { k, d, w, b })
+    }
+
+    /// Parallel mode over `(B, T, D)`:
+    /// `y_t = silu(b + sum_j w_j * x_(t-k+1+j))`, zero padding on the left.
+    pub fn parallel(&self, x: &[f32], batch: usize, t: usize) -> Vec<f32> {
+        let d = self.d;
+        assert_eq!(x.len(), batch * t * d, "conv input");
+        let mut y = vec![0.0f32; batch * t * d];
+        for bi in 0..batch {
+            for ti in 0..t {
+                let yo = (bi * t + ti) * d;
+                for di in 0..d {
+                    let mut acc = self.b[di];
+                    for j in 0..self.k {
+                        let src = ti as isize + j as isize
+                            - (self.k as isize - 1);
+                        if src >= 0 {
+                            acc += self.w[j * d + di]
+                                * x[(bi * t + src as usize) * d + di];
+                        }
+                    }
+                    y[yo + di] = silu(acc);
+                }
+            }
+        }
+        y
+    }
+
+    /// The `(B, k-1, D)` buffer a parallel pass leaves behind: the last
+    /// `k-1` raw inputs (zero-padded when `T < k-1`).
+    pub fn final_state(&self, x: &[f32], batch: usize, t: usize) -> Vec<f32> {
+        let d = self.d;
+        let km1 = self.k - 1;
+        let mut st = vec![0.0f32; batch * km1 * d];
+        for bi in 0..batch {
+            for j in 0..km1 {
+                // buffer slot j holds x at time T - (k-1) + j
+                let src = t as isize - km1 as isize + j as isize;
+                if src >= 0 {
+                    let from = (bi * t + src as usize) * d;
+                    let to = (bi * km1 + j) * d;
+                    st[to..to + d].copy_from_slice(&x[from..from + d]);
+                }
+            }
+        }
+        st
+    }
+
+    /// Fresh zero ring buffer for `batch` lanes.
+    pub fn zero_state(&self, batch: usize) -> Vec<f32> {
+        vec![0.0f32; batch * (self.k - 1) * self.d]
+    }
+
+    /// Step mode: consumes `x_t: (B, D)`, returns `y_t` and shifts the
+    /// ring buffer `buf: (B, k-1, D)` in place.
+    pub fn step(&self, buf: &mut [f32], x_t: &[f32], batch: usize)
+                -> Vec<f32> {
+        let d = self.d;
+        let km1 = self.k - 1;
+        assert_eq!(buf.len(), batch * km1 * d, "conv buffer");
+        assert_eq!(x_t.len(), batch * d, "conv step input");
+        let mut y = vec![0.0f32; batch * d];
+        for bi in 0..batch {
+            for di in 0..d {
+                let mut acc = self.b[di] + self.w[km1 * d + di]
+                    * x_t[bi * d + di];
+                for j in 0..km1 {
+                    acc += self.w[j * d + di] * buf[(bi * km1 + j) * d + di];
+                }
+                y[bi * d + di] = silu(acc);
+            }
+            // shift: drop the oldest slot, append x_t
+            for j in 0..km1 - 1 {
+                let (to, from) = ((bi * km1 + j) * d, (bi * km1 + j + 1) * d);
+                buf.copy_within(from..from + d, to);
+            }
+            let last = (bi * km1 + km1 - 1) * d;
+            buf[last..last + d].copy_from_slice(&x_t[bi * d..(bi + 1) * d]);
+        }
+        y
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MLP block
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    pub up: Dense,
+    pub down: Dense,
+}
+
+impl Mlp {
+    pub fn apply(&self, x: &[f32], rows: usize) -> Vec<f32> {
+        let mut h = self.up.apply(x, rows);
+        for v in h.iter_mut() {
+            *v = gelu(*v);
+        }
+        self.down.apply(&h, rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_matches_hand_computation() {
+        // w = [[1, 2], [3, 4]], b = [10, 20]; x = [1, 1] → [14, 26]
+        let d = Dense::new(2, 2, vec![1.0, 2.0, 3.0, 4.0],
+                           vec![10.0, 20.0]).unwrap();
+        assert_eq!(d.apply(&[1.0, 1.0], 1), vec![14.0, 26.0]);
+        assert!(Dense::new(2, 2, vec![0.0; 3], vec![0.0; 2]).is_err());
+    }
+
+    #[test]
+    fn activations_sane() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-7);
+        assert!((softplus(0.0) - std::f32::consts::LN_2).abs() < 1e-6);
+        assert!((g(0.0) - 0.5).abs() < 1e-7);
+        assert!((g(1.5) - 2.0).abs() < 1e-7);
+        assert!((log_g(1.5) - 2.0f32.ln()).abs() < 1e-6);
+        // continuity of g at 0 from below
+        assert!((g(-1e-4) - 0.5).abs() < 1e-4);
+        // logaddexp basics
+        assert!((logaddexp(0.0, 0.0) - std::f64::consts::LN_2).abs() < 1e-12);
+        assert_eq!(logaddexp(f64::NEG_INFINITY, 3.0), 3.0);
+    }
+
+    #[test]
+    fn rmsnorm_unit_rows() {
+        let y = rmsnorm(&[3.0, 4.0], &[1.0, 1.0], 1, 2);
+        // rms = sqrt((9 + 16) / 2) = 3.5355
+        assert!((y[0] - 3.0 / 3.535_534).abs() < 1e-5, "{y:?}");
+        assert!((y[1] - 4.0 / 3.535_534).abs() < 1e-5, "{y:?}");
+    }
+
+    #[test]
+    fn conv_step_matches_parallel() {
+        let mut rng = crate::util::rng::Rng::new(11);
+        let (b, t, d) = (2usize, 7usize, 3usize);
+        let conv = Conv4::new(CONV_K, d,
+                              (0..CONV_K * d).map(|_| rng.normal_f32(0.0, 0.5))
+                                  .collect(),
+                              (0..d).map(|_| rng.normal_f32(0.0, 0.1))
+                                  .collect()).unwrap();
+        let x: Vec<f32> = (0..b * t * d).map(|_| rng.normal_f32(0.0, 1.0))
+            .collect();
+        let par = conv.parallel(&x, b, t);
+        let mut buf = conv.zero_state(b);
+        for ti in 0..t {
+            // gather x_t rows
+            let mut xt = vec![0.0f32; b * d];
+            for bi in 0..b {
+                xt[bi * d..(bi + 1) * d].copy_from_slice(
+                    &x[(bi * t + ti) * d..(bi * t + ti + 1) * d]);
+            }
+            let y = conv.step(&mut buf, &xt, b);
+            for bi in 0..b {
+                for di in 0..d {
+                    let p = par[(bi * t + ti) * d + di];
+                    let s = y[bi * d + di];
+                    assert!((p - s).abs() < 1e-5,
+                            "t={ti} b={bi} d={di}: {p} vs {s}");
+                }
+            }
+        }
+        // buffer after the full pass equals the parallel final state
+        let fs = conv.final_state(&x, b, t);
+        for (a, c) in buf.iter().zip(&fs) {
+            assert!((a - c).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,119 @@
+//! minGRU mixer (Section 3.1) for the native backend: parallel mode via
+//! the log-space scan (Algorithm 6), sequential decode (Algorithm 5).
+//! Mirrors `python/compile/models/mingru.py`.
+
+use super::linalg::{g, log_g, sigmoid, softplus, Dense};
+use super::scan;
+
+/// `g(0) = 0.5` — the positive resting hidden state the log-space
+/// formulation starts from.
+pub const H0_VALUE: f32 = 0.5;
+
+#[derive(Clone, Debug)]
+pub struct MinGru {
+    pub linear_z: Dense,
+    pub linear_h: Dense,
+    pub down: Dense,
+}
+
+impl MinGru {
+    pub fn d_hidden(&self) -> usize {
+        self.linear_z.d_out
+    }
+
+    /// Parallel mode.  `x: (B, T, d_model)`, `h0: (B, d_h)` →
+    /// `(y: (B, T, d_model), h_T: (B, d_h))`.
+    pub fn parallel(&self, x: &[f32], batch: usize, t: usize, h0: &[f32])
+                    -> (Vec<f32>, Vec<f32>) {
+        let rows = batch * t;
+        let k = self.linear_z.apply(x, rows);
+        let pre = self.linear_h.apply(x, rows);
+        let dh = self.d_hidden();
+        let n = rows * dh;
+        // Algorithm 6: log(1-z) = -softplus(k); log z = -softplus(-k)
+        let mut log_a = vec![0.0f32; n];
+        let mut log_b = vec![0.0f32; n];
+        for i in 0..n {
+            log_a[i] = -softplus(k[i]);
+            log_b[i] = -softplus(-k[i]) + log_g(pre[i]);
+        }
+        let log_h0: Vec<f32> = h0.iter().map(|&v| v.ln()).collect();
+        let h = scan::scan_log(&log_a, &log_b, &log_h0, batch, t, dh);
+        let y = self.down.apply(&h, rows);
+        let mut h_last = vec![0.0f32; batch * dh];
+        for bi in 0..batch {
+            h_last[bi * dh..(bi + 1) * dh].copy_from_slice(
+                &h[(bi * t + t - 1) * dh..(bi * t + t) * dh]);
+        }
+        (y, h_last)
+    }
+
+    /// One decode step (Algorithm 5): `z = σ(k)`,
+    /// `h' = (1-z) ⊙ h + z ⊙ g(pre)`.  Updates `h` in place, returns `y`.
+    pub fn step(&self, x_t: &[f32], batch: usize, h: &mut [f32]) -> Vec<f32> {
+        let k = self.linear_z.apply(x_t, batch);
+        let pre = self.linear_h.apply(x_t, batch);
+        debug_assert_eq!(h.len(), batch * self.d_hidden());
+        for i in 0..h.len() {
+            let z = sigmoid(k[i]);
+            h[i] = (1.0 - z) * h[i] + z * g(pre[i]);
+        }
+        self.down.apply(h, batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_dense(rng: &mut Rng, d_in: usize, d_out: usize) -> Dense {
+        let scale = 1.0 / (d_in as f32).sqrt();
+        Dense::new(d_in, d_out,
+                   (0..d_in * d_out).map(|_| rng.normal_f32(0.0, scale))
+                       .collect(),
+                   vec![0.0; d_out]).unwrap()
+    }
+
+    fn random_mingru(rng: &mut Rng, d: usize, dh: usize) -> MinGru {
+        MinGru {
+            linear_z: random_dense(rng, d, dh),
+            linear_h: random_dense(rng, d, dh),
+            down: random_dense(rng, dh, d),
+        }
+    }
+
+    #[test]
+    fn parallel_matches_sequential_decode() {
+        // The paper's core identity at the mixer level.
+        let mut rng = Rng::new(31);
+        let (batch, t, d, dh) = (2usize, 24usize, 4usize, 6usize);
+        let cell = random_mingru(&mut rng, d, dh);
+        let x: Vec<f32> = (0..batch * t * d)
+            .map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let h0 = vec![H0_VALUE; batch * dh];
+        let (y_par, h_last) = cell.parallel(&x, batch, t, &h0);
+
+        let mut h = h0.clone();
+        for ti in 0..t {
+            let mut xt = vec![0.0f32; batch * d];
+            for bi in 0..batch {
+                xt[bi * d..(bi + 1) * d].copy_from_slice(
+                    &x[(bi * t + ti) * d..(bi * t + ti + 1) * d]);
+            }
+            let y_t = cell.step(&xt, batch, &mut h);
+            for bi in 0..batch {
+                for di in 0..d {
+                    let p = y_par[(bi * t + ti) * d + di];
+                    let s = y_t[bi * d + di];
+                    assert!((p - s).abs() < 1e-4,
+                            "t={ti} b={bi} d={di}: {p} vs {s}");
+                }
+            }
+        }
+        for i in 0..h.len() {
+            assert!((h[i] - h_last[i]).abs() < 1e-4,
+                    "h_last[{i}]: {} vs {}", h[i], h_last[i]);
+        }
+    }
+}

@@ -1,0 +1,134 @@
+//! minLSTM mixer (Section 3.2, length-independence scaling) for the native
+//! backend: parallel mode via the log-space scan (Algorithm 8), sequential
+//! decode (Algorithm 7).  Mirrors `python/compile/models/minlstm.py`.
+
+use super::linalg::{g, log_g, sigmoid, softplus, Dense};
+use super::mingru::H0_VALUE;
+use super::scan;
+
+#[derive(Clone, Debug)]
+pub struct MinLstm {
+    pub linear_f: Dense,
+    pub linear_i: Dense,
+    pub linear_h: Dense,
+    pub down: Dense,
+}
+
+impl MinLstm {
+    pub fn d_hidden(&self) -> usize {
+        self.linear_f.d_out
+    }
+
+    /// Parallel mode.  `x: (B, T, d_model)`, `h0: (B, d_h)` →
+    /// `(y: (B, T, d_model), h_T: (B, d_h))`.
+    pub fn parallel(&self, x: &[f32], batch: usize, t: usize, h0: &[f32])
+                    -> (Vec<f32>, Vec<f32>) {
+        let rows = batch * t;
+        let p = self.linear_f.apply(x, rows);
+        let k = self.linear_i.apply(x, rows);
+        let pre = self.linear_h.apply(x, rows);
+        let dh = self.d_hidden();
+        let n = rows * dh;
+        // Algorithm 8: diff = softplus(-p) - softplus(-k);
+        //   log f' = -softplus(diff); log i' = -softplus(-diff)
+        let mut log_a = vec![0.0f32; n];
+        let mut log_b = vec![0.0f32; n];
+        for i in 0..n {
+            let diff = softplus(-p[i]) - softplus(-k[i]);
+            log_a[i] = -softplus(diff);
+            log_b[i] = -softplus(-diff) + log_g(pre[i]);
+        }
+        let log_h0: Vec<f32> = h0.iter().map(|&v| v.ln()).collect();
+        let h = scan::scan_log(&log_a, &log_b, &log_h0, batch, t, dh);
+        let y = self.down.apply(&h, rows);
+        let mut h_last = vec![0.0f32; batch * dh];
+        for bi in 0..batch {
+            h_last[bi * dh..(bi + 1) * dh].copy_from_slice(
+                &h[(bi * t + t - 1) * dh..(bi * t + t) * dh]);
+        }
+        (y, h_last)
+    }
+
+    /// One decode step (Algorithm 7): `f' = f/(f+i)`, `i' = i/(f+i)`,
+    /// `h' = f' ⊙ h + i' ⊙ g(pre)`.  Updates `h` in place, returns `y`.
+    ///
+    /// The normalized gates are evaluated as `f' = σ(-diff)`,
+    /// `i' = σ(diff)` with `diff = softplus(-p) - softplus(-k)` — the
+    /// mathematically identical form the parallel path uses — because the
+    /// naive `f/(f+i)` yields `0/0 = NaN` once both sigmoids underflow
+    /// (pre-activations below ≈ -103 in f32).
+    pub fn step(&self, x_t: &[f32], batch: usize, h: &mut [f32]) -> Vec<f32> {
+        let pf = self.linear_f.apply(x_t, batch);
+        let ki = self.linear_i.apply(x_t, batch);
+        let pre = self.linear_h.apply(x_t, batch);
+        debug_assert_eq!(h.len(), batch * self.d_hidden());
+        for idx in 0..h.len() {
+            let diff = softplus(-pf[idx]) - softplus(-ki[idx]);
+            let fp = sigmoid(-diff);
+            let ip = sigmoid(diff);
+            h[idx] = fp * h[idx] + ip * g(pre[idx]);
+        }
+        self.down.apply(h, batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_dense(rng: &mut Rng, d_in: usize, d_out: usize,
+                    bias: f32) -> Dense {
+        let scale = 1.0 / (d_in as f32).sqrt();
+        Dense::new(d_in, d_out,
+                   (0..d_in * d_out).map(|_| rng.normal_f32(0.0, scale))
+                       .collect(),
+                   vec![bias; d_out]).unwrap()
+    }
+
+    #[test]
+    fn parallel_matches_sequential_decode() {
+        let mut rng = Rng::new(41);
+        let (batch, t, d, dh) = (2usize, 20usize, 3usize, 5usize);
+        // non-zero forget bias exercises the Figure-5 init path
+        let cell = MinLstm {
+            linear_f: random_dense(&mut rng, d, dh, 1.0),
+            linear_i: random_dense(&mut rng, d, dh, 0.0),
+            linear_h: random_dense(&mut rng, d, dh, 0.0),
+            down: random_dense(&mut rng, dh, d, 0.0),
+        };
+        let x: Vec<f32> = (0..batch * t * d)
+            .map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let h0 = vec![H0_VALUE; batch * dh];
+        let (y_par, h_last) = cell.parallel(&x, batch, t, &h0);
+
+        // saturated gates must not NaN the decode step (0/0 guard)
+        let mut h_sat = vec![H0_VALUE; dh];
+        let x_sat = vec![1e4f32; d];
+        let y_sat = cell.step(&x_sat, 1, &mut h_sat);
+        assert!(h_sat.iter().all(|v| v.is_finite()),
+                "saturated-gate decode produced non-finite state");
+        assert!(y_sat.iter().all(|v| v.is_finite()));
+
+        let mut h = h0.clone();
+        for ti in 0..t {
+            let mut xt = vec![0.0f32; batch * d];
+            for bi in 0..batch {
+                xt[bi * d..(bi + 1) * d].copy_from_slice(
+                    &x[(bi * t + ti) * d..(bi * t + ti + 1) * d]);
+            }
+            let y_t = cell.step(&xt, batch, &mut h);
+            for bi in 0..batch {
+                for di in 0..d {
+                    let p = y_par[(bi * t + ti) * d + di];
+                    let s = y_t[bi * d + di];
+                    assert!((p - s).abs() < 1e-4,
+                            "t={ti} b={bi} d={di}: {p} vs {s}");
+                }
+            }
+        }
+        for i in 0..h.len() {
+            assert!((h[i] - h_last[i]).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! Pure-Rust CPU implementations of the minGRU/minLSTM inference path:
+//! scan primitives, mixer cells, and the backbone model.  No PJRT, no
+//! artifacts — everything here runs from a checkpoint (or random init)
+//! alone.
+
+pub mod linalg;
+pub mod mingru;
+pub mod minlstm;
+pub mod model;
+pub mod scan;
+
+pub use mingru::{MinGru, H0_VALUE};
+pub use minlstm::MinLstm;
+pub use model::{NativeInit, NativeModel, NativeState};

@@ -1,0 +1,643 @@
+//! Native backbone (Appendix C.2), mirroring
+//! `python/compile/models/backbone.py` for the minGRU/minLSTM mixers:
+//!
+//! ```text
+//! x → Embed (or in_proj for continuous features)
+//!   → N × [ RMSNorm → (Conv4) → mixer → +residual
+//!           (RMSNorm → MLP → +residual) ]
+//!   → RMSNorm → Head
+//! ```
+//!
+//! Parameters load from the MRNN checkpoint format (`util::io`) using the
+//! same leaf names the AOT manifest/checkpoints use
+//! (`params/blocks/0/mixer/linear_z/w`, ...), so a model trained through
+//! the PJRT path serves natively with zero conversion.  A seeded random
+//! init is provided for artifact-free smoke runs.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::tensor::{Tensor, TensorData};
+use crate::util::io::{self, NamedTensor};
+use crate::util::rng::Rng;
+
+use super::linalg::{self, Conv4, Dense, Embedding, Mlp, CONV_K};
+use super::mingru::{MinGru, H0_VALUE};
+use super::minlstm::MinLstm;
+
+// ---------------------------------------------------------------------------
+// parameter tree
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub enum MixerParams {
+    MinGru(MinGru),
+    MinLstm(MinLstm),
+}
+
+impl MixerParams {
+    pub fn d_hidden(&self) -> usize {
+        match self {
+            MixerParams::MinGru(m) => m.d_hidden(),
+            MixerParams::MinLstm(m) => m.d_hidden(),
+        }
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            MixerParams::MinGru(_) => "mingru",
+            MixerParams::MinLstm(_) => "minlstm",
+        }
+    }
+
+    fn parallel(&self, x: &[f32], batch: usize, t: usize, h0: &[f32])
+                -> (Vec<f32>, Vec<f32>) {
+        match self {
+            MixerParams::MinGru(m) => m.parallel(x, batch, t, h0),
+            MixerParams::MinLstm(m) => m.parallel(x, batch, t, h0),
+        }
+    }
+
+    fn step(&self, x_t: &[f32], batch: usize, h: &mut [f32]) -> Vec<f32> {
+        match self {
+            MixerParams::MinGru(m) => m.step(x_t, batch, h),
+            MixerParams::MinLstm(m) => m.step(x_t, batch, h),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct BlockParams {
+    pub ln1: Vec<f32>,
+    pub conv: Option<Conv4>,
+    pub mixer: MixerParams,
+    pub ln2: Option<Vec<f32>>,
+    pub mlp: Option<Mlp>,
+}
+
+#[derive(Clone, Debug)]
+pub enum InputLayer {
+    /// Token embedding for discrete inputs (`vocab_in`).
+    Embed(Embedding),
+    /// Linear projection for continuous features (`input_dim`, RL).
+    Proj(Dense),
+}
+
+#[derive(Clone, Debug)]
+pub struct NativeModel {
+    pub d_model: usize,
+    pub vocab_out: usize,
+    pub input: InputLayer,
+    pub blocks: Vec<BlockParams>,
+    pub ln_f: Vec<f32>,
+    pub head: Dense,
+}
+
+/// Per-layer decode state: mixer hidden + optional conv ring buffer.
+#[derive(Clone, Debug)]
+pub struct LayerState {
+    pub h: Vec<f32>,
+    pub conv: Option<Vec<f32>>,
+}
+
+/// Full decode state for a batch of lanes.
+#[derive(Clone, Debug)]
+pub struct NativeState {
+    pub batch: usize,
+    pub pos: usize,
+    pub layers: Vec<LayerState>,
+}
+
+// ---------------------------------------------------------------------------
+// random init (artifact-free smoke runs)
+// ---------------------------------------------------------------------------
+
+/// Architecture hyperparameters for [`NativeModel::init_random`]; mirrors
+/// the `cfg` dict of `backbone.py` for the natively-supported mixers.
+#[derive(Clone, Debug)]
+pub struct NativeInit {
+    pub kind: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub expansion: usize,
+    pub vocab_in: Option<usize>,
+    pub input_dim: Option<usize>,
+    pub vocab_out: usize,
+    pub conv: bool,
+    pub mlp: bool,
+    pub mlp_mult: usize,
+    pub forget_bias: f32,
+}
+
+impl Default for NativeInit {
+    fn default() -> Self {
+        NativeInit {
+            kind: "mingru".to_string(),
+            n_layers: 2,
+            d_model: 64,
+            expansion: 1,
+            vocab_in: Some(64),
+            input_dim: None,
+            vocab_out: 64,
+            conv: false,
+            mlp: false,
+            mlp_mult: 4,
+            forget_bias: 0.0,
+        }
+    }
+}
+
+fn dense_random(rng: &mut Rng, d_in: usize, d_out: usize, scale: f32,
+                bias: f32) -> Dense {
+    Dense {
+        d_in,
+        d_out,
+        w: (0..d_in * d_out).map(|_| rng.normal_f32(0.0, scale)).collect(),
+        b: vec![bias; d_out],
+    }
+}
+
+impl NativeModel {
+    /// LeCun-normal random init (like `layers.dense_init`); numerics differ
+    /// from the JAX PRNG, so this is for artifact-free smoke runs, not for
+    /// reproducing an XLA-initialized model.
+    pub fn init_random(cfg: &NativeInit, seed: u64) -> Result<NativeModel> {
+        let d = cfg.d_model;
+        let dh = d * cfg.expansion;
+        let mut rng = Rng::new(seed ^ 0x6E61_7469_7665);
+        let input = match (cfg.vocab_in, cfg.input_dim) {
+            (Some(v), _) => InputLayer::Embed(Embedding {
+                vocab: v,
+                d,
+                w: (0..v * d).map(|_| rng.normal_f32(0.0, 0.02)).collect(),
+            }),
+            (None, Some(f)) => InputLayer::Proj(dense_random(
+                &mut rng, f, d, 1.0 / (f as f32).sqrt(), 0.0)),
+            (None, None) => bail!("need vocab_in or input_dim"),
+        };
+        let lecun = |rng: &mut Rng, d_in: usize, d_out: usize, bias: f32| {
+            dense_random(rng, d_in, d_out, 1.0 / (d_in as f32).sqrt(), bias)
+        };
+        let mut blocks = Vec::with_capacity(cfg.n_layers);
+        for _ in 0..cfg.n_layers {
+            let mixer = match cfg.kind.as_str() {
+                "mingru" => MixerParams::MinGru(MinGru {
+                    linear_z: lecun(&mut rng, d, dh, 0.0),
+                    linear_h: lecun(&mut rng, d, dh, 0.0),
+                    down: lecun(&mut rng, dh, d, 0.0),
+                }),
+                "minlstm" => MixerParams::MinLstm(MinLstm {
+                    linear_f: lecun(&mut rng, d, dh, cfg.forget_bias),
+                    linear_i: lecun(&mut rng, d, dh, 0.0),
+                    linear_h: lecun(&mut rng, d, dh, 0.0),
+                    down: lecun(&mut rng, dh, d, 0.0),
+                }),
+                other => bail!("native backend supports mingru/minlstm, \
+                                not '{other}'"),
+            };
+            let conv = if cfg.conv {
+                Some(Conv4 {
+                    k: CONV_K,
+                    d,
+                    w: (0..CONV_K * d)
+                        .map(|_| rng.normal_f32(0.0,
+                                                1.0 / (CONV_K as f32).sqrt()))
+                        .collect(),
+                    b: vec![0.0; d],
+                })
+            } else {
+                None
+            };
+            let (ln2, mlp) = if cfg.mlp {
+                (Some(vec![1.0; d]),
+                 Some(Mlp {
+                     up: lecun(&mut rng, d, cfg.mlp_mult * d, 0.0),
+                     down: lecun(&mut rng, cfg.mlp_mult * d, d, 0.0),
+                 }))
+            } else {
+                (None, None)
+            };
+            blocks.push(BlockParams { ln1: vec![1.0; d], conv, mixer,
+                                      ln2, mlp });
+        }
+        Ok(NativeModel {
+            d_model: d,
+            vocab_out: cfg.vocab_out,
+            input,
+            blocks,
+            ln_f: vec![1.0; d],
+            head: dense_random(&mut rng, d, cfg.vocab_out, 0.02, 0.0),
+        })
+    }
+
+    // -----------------------------------------------------------------------
+    // checkpoint I/O
+    // -----------------------------------------------------------------------
+
+    pub fn from_checkpoint(path: &Path) -> Result<NativeModel> {
+        NativeModel::from_named(&io::load(path)?)
+    }
+
+    /// Build from named tensors using the AOT/checkpoint leaf naming
+    /// (an optional `params/` prefix is accepted on every leaf; extra
+    /// tensors such as optimizer state are ignored).
+    pub fn from_named(tensors: &[NamedTensor]) -> Result<NativeModel> {
+        let find = |name: &str| -> Option<&NamedTensor> {
+            tensors.iter().find(|t| {
+                t.name == name
+                    || t.name.strip_prefix("params/") == Some(name)
+            })
+        };
+        let tensor_f32 = |name: &str| -> Result<(Vec<usize>, Vec<f32>)> {
+            let t = find(name)
+                .ok_or_else(|| anyhow!("checkpoint missing '{name}'"))?;
+            let v = t.data.as_f32()
+                .ok_or_else(|| anyhow!("'{name}' is not f32"))?;
+            Ok((t.dims.clone(), v.to_vec()))
+        };
+        let dense = |name: &str| -> Result<Dense> {
+            let (wd, w) = tensor_f32(&format!("{name}/w"))?;
+            let (_, b) = tensor_f32(&format!("{name}/b"))?;
+            if wd.len() != 2 {
+                bail!("'{name}/w' is not a matrix: dims {wd:?}");
+            }
+            Dense::new(wd[0], wd[1], w, b)
+        };
+
+        let (input, d_model) = if find("embed/w").is_some() {
+            let (dims, w) = tensor_f32("embed/w")?;
+            if dims.len() != 2 {
+                bail!("'embed/w' is not a matrix: dims {dims:?}");
+            }
+            (InputLayer::Embed(Embedding::new(dims[0], dims[1], w)?),
+             dims[1])
+        } else {
+            let proj = dense("in_proj")?;
+            let d = proj.d_out;
+            (InputLayer::Proj(proj), d)
+        };
+
+        let mut blocks = Vec::new();
+        let mut i = 0usize;
+        while find(&format!("blocks/{i}/ln1/scale")).is_some() {
+            let (_, ln1) = tensor_f32(&format!("blocks/{i}/ln1/scale"))?;
+            let mixer = if find(&format!("blocks/{i}/mixer/linear_f/w"))
+                .is_some() {
+                MixerParams::MinLstm(MinLstm {
+                    linear_f: dense(&format!("blocks/{i}/mixer/linear_f"))?,
+                    linear_i: dense(&format!("blocks/{i}/mixer/linear_i"))?,
+                    linear_h: dense(&format!("blocks/{i}/mixer/linear_h"))?,
+                    down: dense(&format!("blocks/{i}/mixer/down"))?,
+                })
+            } else if find(&format!("blocks/{i}/mixer/linear_z/w"))
+                .is_some() {
+                MixerParams::MinGru(MinGru {
+                    linear_z: dense(&format!("blocks/{i}/mixer/linear_z"))?,
+                    linear_h: dense(&format!("blocks/{i}/mixer/linear_h"))?,
+                    down: dense(&format!("blocks/{i}/mixer/down"))?,
+                })
+            } else {
+                bail!("block {i}: mixer is not minGRU/minLSTM — the native \
+                       backend serves only the minimal RNN variants");
+            };
+            let conv = match find(&format!("blocks/{i}/conv/w")) {
+                Some(_) => {
+                    let (wd, w) = tensor_f32(&format!("blocks/{i}/conv/w"))?;
+                    let (_, b) = tensor_f32(&format!("blocks/{i}/conv/b"))?;
+                    if wd.len() != 2 {
+                        bail!("'blocks/{i}/conv/w' dims {wd:?}");
+                    }
+                    Some(Conv4::new(wd[0], wd[1], w, b)?)
+                }
+                None => None,
+            };
+            let (ln2, mlp) =
+                match find(&format!("blocks/{i}/ln2/scale")) {
+                    Some(_) => {
+                        let (_, s) =
+                            tensor_f32(&format!("blocks/{i}/ln2/scale"))?;
+                        (Some(s), Some(Mlp {
+                            up: dense(&format!("blocks/{i}/mlp/up"))?,
+                            down: dense(&format!("blocks/{i}/mlp/down"))?,
+                        }))
+                    }
+                    None => (None, None),
+                };
+            blocks.push(BlockParams { ln1, conv, mixer, ln2, mlp });
+            i += 1;
+        }
+        if blocks.is_empty() {
+            bail!("checkpoint has no 'blocks/0/ln1/scale' — not a backbone \
+                   parameter set");
+        }
+        let (_, ln_f) = tensor_f32("ln_f/scale")?;
+        let head = dense("head")?;
+        let vocab_out = head.d_out;
+        Ok(NativeModel { d_model, vocab_out, input, blocks, ln_f, head })
+    }
+
+    /// Export as named tensors (with the `params/` prefix), the inverse of
+    /// [`NativeModel::from_named`].
+    pub fn to_named(&self) -> Vec<NamedTensor> {
+        let mut out = Vec::new();
+        let dense = |out: &mut Vec<NamedTensor>, name: String, d: &Dense| {
+            out.push(NamedTensor::f32(&format!("{name}/w"),
+                                      vec![d.d_in, d.d_out], d.w.clone()));
+            out.push(NamedTensor::f32(&format!("{name}/b"),
+                                      vec![d.d_out], d.b.clone()));
+        };
+        match &self.input {
+            InputLayer::Embed(e) => out.push(NamedTensor::f32(
+                "params/embed/w", vec![e.vocab, e.d], e.w.clone())),
+            InputLayer::Proj(p) => dense(&mut out,
+                                         "params/in_proj".to_string(), p),
+        }
+        for (i, blk) in self.blocks.iter().enumerate() {
+            out.push(NamedTensor::f32(&format!("params/blocks/{i}/ln1/scale"),
+                                      vec![blk.ln1.len()], blk.ln1.clone()));
+            if let Some(c) = &blk.conv {
+                out.push(NamedTensor::f32(
+                    &format!("params/blocks/{i}/conv/w"),
+                    vec![c.k, c.d], c.w.clone()));
+                out.push(NamedTensor::f32(
+                    &format!("params/blocks/{i}/conv/b"),
+                    vec![c.d], c.b.clone()));
+            }
+            match &blk.mixer {
+                MixerParams::MinGru(m) => {
+                    dense(&mut out,
+                          format!("params/blocks/{i}/mixer/linear_z"),
+                          &m.linear_z);
+                    dense(&mut out,
+                          format!("params/blocks/{i}/mixer/linear_h"),
+                          &m.linear_h);
+                    dense(&mut out,
+                          format!("params/blocks/{i}/mixer/down"), &m.down);
+                }
+                MixerParams::MinLstm(m) => {
+                    dense(&mut out,
+                          format!("params/blocks/{i}/mixer/linear_f"),
+                          &m.linear_f);
+                    dense(&mut out,
+                          format!("params/blocks/{i}/mixer/linear_i"),
+                          &m.linear_i);
+                    dense(&mut out,
+                          format!("params/blocks/{i}/mixer/linear_h"),
+                          &m.linear_h);
+                    dense(&mut out,
+                          format!("params/blocks/{i}/mixer/down"), &m.down);
+                }
+            }
+            if let Some(s) = &blk.ln2 {
+                out.push(NamedTensor::f32(
+                    &format!("params/blocks/{i}/ln2/scale"),
+                    vec![s.len()], s.clone()));
+            }
+            if let Some(m) = &blk.mlp {
+                dense(&mut out, format!("params/blocks/{i}/mlp/up"), &m.up);
+                dense(&mut out, format!("params/blocks/{i}/mlp/down"),
+                      &m.down);
+            }
+        }
+        out.push(NamedTensor::f32("params/ln_f/scale",
+                                  vec![self.ln_f.len()], self.ln_f.clone()));
+        dense(&mut out, "params/head".to_string(), &self.head);
+        out
+    }
+
+    // -----------------------------------------------------------------------
+    // inference
+    // -----------------------------------------------------------------------
+
+    /// Fresh decode state: mixer hiddens at `g(0) = 0.5`, conv buffers and
+    /// the position counter at zero.
+    pub fn init_state(&self, batch: usize) -> NativeState {
+        let layers = self.blocks.iter().map(|blk| LayerState {
+            h: vec![H0_VALUE; batch * blk.mixer.d_hidden()],
+            conv: blk.conv.as_ref().map(|c| c.zero_state(batch)),
+        }).collect();
+        NativeState { batch, pos: 0, layers }
+    }
+
+    fn embed_rows(&self, x: &Tensor, rows: usize) -> Result<Vec<f32>> {
+        match (&self.input, &x.data) {
+            (InputLayer::Embed(e), TensorData::I32(ids)) => {
+                if ids.len() != rows {
+                    bail!("expected {rows} token ids, got {}", ids.len());
+                }
+                Ok(e.lookup(ids))
+            }
+            (InputLayer::Proj(p), TensorData::F32(v)) => {
+                if v.len() != rows * p.d_in {
+                    bail!("expected {rows}x{} features, got {}", p.d_in,
+                          v.len());
+                }
+                Ok(p.apply(v, rows))
+            }
+            (InputLayer::Embed(_), _) => {
+                bail!("model embeds token ids; got f32 input")
+            }
+            (InputLayer::Proj(_), _) => {
+                bail!("model projects continuous features; got i32 input")
+            }
+        }
+    }
+
+    /// One decode step.  `x_t`: `(B,)` i32 tokens or `(B, F)` f32 features.
+    /// Returns `(logits: (B, vocab_out), state')`.
+    pub fn step(&self, x_t: &Tensor, mut state: NativeState)
+                -> Result<(Tensor, NativeState)> {
+        let batch = state.batch;
+        if x_t.dims.first().copied().unwrap_or(0) != batch {
+            bail!("step input batch {:?} != state batch {batch}", x_t.dims);
+        }
+        let d = self.d_model;
+        let mut h = self.embed_rows(x_t, batch)?;
+        for (blk, st) in self.blocks.iter().zip(state.layers.iter_mut()) {
+            let mut u = linalg::rmsnorm(&h, &blk.ln1, batch, d);
+            if let (Some(conv), Some(buf)) = (&blk.conv, st.conv.as_mut()) {
+                u = conv.step(buf, &u, batch);
+            }
+            let y = blk.mixer.step(&u, batch, &mut st.h);
+            linalg::add_assign(&mut h, &y);
+            if let (Some(ln2), Some(mlp)) = (&blk.ln2, &blk.mlp) {
+                let z = mlp.apply(&linalg::rmsnorm(&h, ln2, batch, d), batch);
+                linalg::add_assign(&mut h, &z);
+            }
+        }
+        let logits = self.head.apply(
+            &linalg::rmsnorm(&h, &self.ln_f, batch, d), batch);
+        state.pos += 1;
+        Ok((Tensor::f32(vec![batch, self.vocab_out], logits), state))
+    }
+
+    /// Parallel forward over a whole context.  `x`: `(B, T)` i32 or
+    /// `(B, T, F)` f32.  Returns all-position logits `(B, T, vocab_out)`
+    /// and the decode state after the last position.
+    pub fn forward(&self, x: &Tensor) -> Result<(Tensor, NativeState)> {
+        let (batch, t) = match (x.dims.len(), &x.data) {
+            (2, TensorData::I32(_)) => (x.dims[0], x.dims[1]),
+            (3, TensorData::F32(_)) => (x.dims[0], x.dims[1]),
+            _ => bail!("forward expects (B, T) i32 or (B, T, F) f32, got \
+                        {:?} {}", x.dims, x.dtype_name()),
+        };
+        if t == 0 {
+            bail!("empty sequence");
+        }
+        let rows = batch * t;
+        let d = self.d_model;
+        let mut h = self.embed_rows(x, rows)?;
+        let mut layers = Vec::with_capacity(self.blocks.len());
+        for blk in &self.blocks {
+            let mut u = linalg::rmsnorm(&h, &blk.ln1, rows, d);
+            let conv_state = match &blk.conv {
+                Some(conv) => {
+                    let st = conv.final_state(&u, batch, t);
+                    u = conv.parallel(&u, batch, t);
+                    Some(st)
+                }
+                None => None,
+            };
+            let h0 = vec![H0_VALUE; batch * blk.mixer.d_hidden()];
+            let (y, h_last) = blk.mixer.parallel(&u, batch, t, &h0);
+            linalg::add_assign(&mut h, &y);
+            if let (Some(ln2), Some(mlp)) = (&blk.ln2, &blk.mlp) {
+                let z = mlp.apply(&linalg::rmsnorm(&h, ln2, rows, d), rows);
+                linalg::add_assign(&mut h, &z);
+            }
+            layers.push(LayerState { h: h_last, conv: conv_state });
+        }
+        let logits = self.head.apply(
+            &linalg::rmsnorm(&h, &self.ln_f, rows, d), rows);
+        Ok((Tensor::f32(vec![batch, t, self.vocab_out], logits),
+            NativeState { batch, pos: t, layers }))
+    }
+
+    /// Parallel prefill: last-position logits `(B, vocab_out)` + state,
+    /// matching the PJRT prefill calling convention.
+    pub fn prefill(&self, x: &Tensor) -> Result<(Tensor, NativeState)> {
+        let (all, state) = self.forward(x)?;
+        let (batch, t) = (all.dims[0], all.dims[1]);
+        let v = self.vocab_out;
+        let data = all.data.as_f32()
+            .ok_or_else(|| anyhow!("logits not f32"))?;
+        let mut last = vec![0.0f32; batch * v];
+        for bi in 0..batch {
+            last[bi * v..(bi + 1) * v].copy_from_slice(
+                &data[(bi * t + t - 1) * v..(bi * t + t) * v]);
+        }
+        Ok((Tensor::f32(vec![batch, v], last), state))
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn kind(&self) -> &'static str {
+        self.blocks.first().map(|b| b.mixer.kind()).unwrap_or("empty")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_model(kind: &str, conv: bool, mlp: bool) -> NativeModel {
+        NativeModel::init_random(&NativeInit {
+            kind: kind.to_string(),
+            n_layers: 2,
+            d_model: 8,
+            expansion: 2,
+            vocab_in: Some(11),
+            input_dim: None,
+            vocab_out: 11,
+            conv,
+            mlp,
+            mlp_mult: 2,
+            forget_bias: 0.5,
+        }, 7).unwrap()
+    }
+
+    #[test]
+    fn forward_and_step_agree() {
+        // the paper's parallel/sequential identity through the full stack
+        for kind in ["mingru", "minlstm"] {
+            let model = tiny_model(kind, true, true);
+            let (batch, t) = (2usize, 9usize);
+            let mut rng = crate::util::rng::Rng::new(3);
+            let tokens: Vec<i32> = (0..batch * t)
+                .map(|_| rng.below(11) as i32).collect();
+            let x = Tensor::i32(vec![batch, t], tokens.clone());
+            let (all, pstate) = model.forward(&x).unwrap();
+            assert_eq!(all.dims, vec![batch, t, 11]);
+            let all_v = all.data.as_f32().unwrap();
+
+            let mut st = model.init_state(batch);
+            for ti in 0..t {
+                let xt = Tensor::i32(
+                    vec![batch],
+                    (0..batch).map(|bi| tokens[bi * t + ti]).collect());
+                let (logits, st2) = model.step(&xt, st).unwrap();
+                st = st2;
+                let lv = logits.data.as_f32().unwrap();
+                for bi in 0..batch {
+                    for vi in 0..11 {
+                        let p = all_v[(bi * t + ti) * 11 + vi];
+                        let s = lv[bi * 11 + vi];
+                        assert!((p - s).abs() < 1e-4,
+                                "{kind} t={ti} b={bi} v={vi}: {p} vs {s}");
+                    }
+                }
+            }
+            assert_eq!(st.pos, pstate.pos);
+            for (a, b) in st.layers.iter().zip(&pstate.layers) {
+                for (x1, x2) in a.h.iter().zip(&b.h) {
+                    assert!((x1 - x2).abs() < 1e-4);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn named_roundtrip_is_exact() {
+        let model = tiny_model("minlstm", true, true);
+        let named = model.to_named();
+        let back = NativeModel::from_named(&named).unwrap();
+        let x = Tensor::i32(vec![1, 5], vec![1, 2, 3, 4, 5]);
+        let (a, _) = model.forward(&x).unwrap();
+        let (b, _) = back.forward(&x).unwrap();
+        assert_eq!(a, b, "roundtrip must be bit-exact");
+    }
+
+    #[test]
+    fn rejects_garbage_checkpoints() {
+        assert!(NativeModel::from_named(&[]).is_err());
+        let named = vec![NamedTensor::f32("params/embed/w", vec![4, 4],
+                                          vec![0.0; 16])];
+        assert!(NativeModel::from_named(&named).is_err());
+    }
+
+    #[test]
+    fn continuous_input_path() {
+        let model = NativeModel::init_random(&NativeInit {
+            kind: "minlstm".to_string(),
+            n_layers: 1,
+            d_model: 6,
+            expansion: 1,
+            vocab_in: None,
+            input_dim: Some(4),
+            vocab_out: 2,
+            conv: false,
+            mlp: false,
+            mlp_mult: 4,
+            forget_bias: 1.0,
+        }, 9).unwrap();
+        let x = Tensor::f32(vec![2, 3, 4], vec![0.1; 24]);
+        let (logits, state) = model.forward(&x).unwrap();
+        assert_eq!(logits.dims, vec![2, 3, 2]);
+        let xt = Tensor::f32(vec![2, 4], vec![0.2; 8]);
+        let (l2, _) = model.step(&xt, state).unwrap();
+        assert_eq!(l2.dims, vec![2, 2]);
+    }
+}

@@ -1,0 +1,136 @@
+//! The paper's core recurrence `v_t = a_t ⊙ v_{t-1} + b_t` on the host:
+//! real-space sequential scan, log-space sequential scan (Appendix B.1),
+//! and the chunked Heinsen-form log-space scan mirroring the structure of
+//! the Pallas kernel in `python/compile/kernels/scan.py` (prefix
+//! log-sum-exp inside a chunk + per-channel carries across chunks).
+//!
+//! All variants take flat row-major `(B, T, D)` coefficient/value slices
+//! and a `(B, D)` initial state, and return the `(B, T, D)` state sequence
+//! `h_1..h_T`.  Log-space accumulation runs in f64 internally — on CPU
+//! this is nearly free and removes the catastrophic-cancellation worry the
+//! TPU kernel handles with padding conventions.
+
+use super::linalg::logaddexp;
+
+/// Stand-in for `log(0)` that keeps padded/zero positions inert without
+/// producing `inf - inf = nan` (mirrors `scan.py::LOG_ZERO`).
+pub const LOG_ZERO: f32 = -1e30;
+
+/// Chunk length of the chunked scan (the Pallas kernel's `time_chunk`).
+pub const TIME_CHUNK: usize = 64;
+
+/// Sequential real-space scan: `h_t = a_t * h_{t-1} + b_t`, `h_0 = h0`.
+pub fn scan_linear(a: &[f32], b: &[f32], h0: &[f32], batch: usize, t: usize,
+                   d: usize) -> Vec<f32> {
+    assert_eq!(a.len(), batch * t * d, "scan_linear a");
+    assert_eq!(b.len(), batch * t * d, "scan_linear b");
+    assert_eq!(h0.len(), batch * d, "scan_linear h0");
+    let mut out = vec![0.0f32; batch * t * d];
+    for bi in 0..batch {
+        let mut v: Vec<f32> = h0[bi * d..(bi + 1) * d].to_vec();
+        for ti in 0..t {
+            let off = (bi * t + ti) * d;
+            for di in 0..d {
+                v[di] = a[off + di] * v[di] + b[off + di];
+                out[off + di] = v[di];
+            }
+        }
+    }
+    out
+}
+
+/// Sequential log-space scan (Appendix B.1):
+/// `log h_t = logaddexp(log_a_t + log h_{t-1}, log_b_t)`; returns real h.
+pub fn scan_log_seq(log_a: &[f32], log_b: &[f32], log_h0: &[f32],
+                    batch: usize, t: usize, d: usize) -> Vec<f32> {
+    assert_eq!(log_a.len(), batch * t * d, "scan_log_seq log_a");
+    assert_eq!(log_b.len(), batch * t * d, "scan_log_seq log_b");
+    assert_eq!(log_h0.len(), batch * d, "scan_log_seq log_h0");
+    let mut out = vec![0.0f32; batch * t * d];
+    for bi in 0..batch {
+        for di in 0..d {
+            let mut lh = log_h0[bi * d + di] as f64;
+            for ti in 0..t {
+                let off = (bi * t + ti) * d + di;
+                lh = logaddexp(log_a[off] as f64 + lh, log_b[off] as f64);
+                out[off] = lh.exp() as f32;
+            }
+        }
+    }
+    out
+}
+
+/// Chunked Heinsen-form log-space scan — the same algebra the Pallas
+/// kernel evaluates per grid step:
+///
+/// within a chunk, with `A_i = Σ_{j≤i} log_a_j` (local prefix sum) and
+/// carries `(carry_A, carry_S)` from previous chunks,
+///
+/// ```text
+/// x_i     = log_b_i - A_i
+/// p_i     = logsumexp_{j≤i} x_j              (prefix log-sum-exp)
+/// S_i     = logaddexp(carry_S, p_i - carry_A)
+/// log h_i = carry_A + A_i + S_i
+/// ```
+///
+/// and at a chunk boundary `carry_A += A_last`, `carry_S = S_last`.
+pub fn scan_log(log_a: &[f32], log_b: &[f32], log_h0: &[f32], batch: usize,
+                t: usize, d: usize) -> Vec<f32> {
+    assert_eq!(log_a.len(), batch * t * d, "scan_log log_a");
+    assert_eq!(log_b.len(), batch * t * d, "scan_log log_b");
+    assert_eq!(log_h0.len(), batch * d, "scan_log log_h0");
+    let mut out = vec![0.0f32; batch * t * d];
+    for bi in 0..batch {
+        for di in 0..d {
+            let mut carry_a = 0.0f64;
+            let mut carry_s = log_h0[bi * d + di] as f64;
+            let mut chunk_start = 0usize;
+            while chunk_start < t {
+                let chunk_end = (chunk_start + TIME_CHUNK).min(t);
+                let mut a_star = 0.0f64;
+                let mut p = f64::NEG_INFINITY;
+                let mut s = carry_s;
+                for ti in chunk_start..chunk_end {
+                    let off = (bi * t + ti) * d + di;
+                    a_star += log_a[off] as f64;
+                    let x = log_b[off] as f64 - a_star;
+                    p = logaddexp(p, x);
+                    s = logaddexp(carry_s, p - carry_a);
+                    out[off] = (carry_a + a_star + s).exp() as f32;
+                }
+                carry_a += a_star;
+                carry_s = s;
+                chunk_start = chunk_end;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    // Agreement with the naive sequential recurrence (and the a_t → 0/1
+    // edge cases) is property-tested in rust/tests/substrate_props.rs;
+    // here we pin only the seam the chunked form introduces.
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn chunk_boundaries_are_seamless() {
+        // T straddling several chunks with adversarial magnitudes
+        let mut rng = Rng::new(22);
+        let (batch, t, d) = (1usize, 3 * TIME_CHUNK + 7, 2usize);
+        let la: Vec<f32> = (0..batch * t * d)
+            .map(|_| rng.range_f32(-8.0, 0.0)).collect();
+        let lb: Vec<f32> = (0..batch * t * d)
+            .map(|_| rng.range_f32(-8.0, 2.0)).collect();
+        let lh0 = vec![0.5f32.ln(); batch * d];
+        let seq = scan_log_seq(&la, &lb, &lh0, batch, t, d);
+        let chunked = scan_log(&la, &lb, &lh0, batch, t, d);
+        for i in 0..seq.len() {
+            let tol = 1e-5 * seq[i].abs().max(1.0);
+            assert!((seq[i] - chunked[i]).abs() < tol,
+                    "[{i}] {} vs {}", seq[i], chunked[i]);
+        }
+    }
+}

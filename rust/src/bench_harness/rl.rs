@@ -8,7 +8,7 @@ use crate::config::{Schedule, TrainConfig};
 use crate::coordinator::infer::rollout_decision;
 use crate::coordinator::trainer::{DataSource, Trainer};
 use crate::data::rl::{normalized_score, OfflineDataset, Regime};
-use crate::runtime::Model;
+use crate::runtime::{Model, PjrtBackend};
 use crate::tensor::Batch;
 use crate::util::rng::Rng;
 use crate::util::table::Table;
@@ -54,9 +54,10 @@ pub fn run_cell(ctx: &Ctx, env: &str, kind: &str, regime: Regime,
     trainer.run(&mut state, &mut src)?;
 
     let target = ds.target_return();
+    let backend = PjrtBackend::new(&model, &state.params);
     let mut total = 0f32;
     for k in 0..n_rollouts {
-        total += rollout_decision(&model, &state.params, &ds, target,
+        total += rollout_decision(&backend, &ds, target,
                                   ctx.seed ^ (1000 + k as u64))?;
     }
     Ok(normalized_score(env, total / n_rollouts as f32, ctx.seed))

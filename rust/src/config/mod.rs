@@ -18,6 +18,8 @@ pub enum Schedule {
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
     pub artifacts: PathBuf,
+    /// Inference backend for decode-path commands: "pjrt" | "native".
+    pub backend: String,
     pub variant: String,
     pub steps: usize,
     pub lr: f32,
@@ -35,6 +37,7 @@ impl Default for TrainConfig {
     fn default() -> Self {
         TrainConfig {
             artifacts: PathBuf::from("artifacts"),
+            backend: "pjrt".to_string(),
             variant: String::new(),
             steps: 200,
             lr: 1e-3,
@@ -100,6 +103,9 @@ impl TrainConfig {
         if let Some(v) = j.get("artifacts").and_then(|v| v.as_str()) {
             self.artifacts = PathBuf::from(v);
         }
+        if let Some(v) = j.get("backend").and_then(|v| v.as_str()) {
+            self.backend = v.to_string();
+        }
         if let Some(v) = j.get("schedule").and_then(|v| v.as_str()) {
             self.schedule = match v {
                 "constant" => Schedule::Constant,
@@ -122,6 +128,9 @@ impl TrainConfig {
         }
         if let Some(v) = p.get("artifacts") {
             self.artifacts = PathBuf::from(v);
+        }
+        if let Some(v) = p.get("backend") {
+            self.backend = v.to_string();
         }
         if let Some(v) = p.get("steps") {
             self.steps = v.parse()?;
@@ -176,5 +185,14 @@ mod tests {
         assert_eq!(cfg.lr, 0.5);
         assert_eq!(cfg.schedule, Schedule::Constant);
         assert_eq!(cfg.lr_at(3), 0.5);
+    }
+
+    #[test]
+    fn backend_selection_defaults_and_overrides() {
+        let mut cfg = TrainConfig::default();
+        assert_eq!(cfg.backend, "pjrt");
+        let j = json::parse(r#"{"backend": "native"}"#).unwrap();
+        cfg.apply_json(&j).unwrap();
+        assert_eq!(cfg.backend, "native");
     }
 }

@@ -1,12 +1,15 @@
-//! Inference engine: sequential decode (Algorithm 5/7 step executables),
-//! parallel prefill for context ingestion, sampling, and the DT-style RL
-//! rollout used for Table 3 scoring.
+//! Inference engine: sequential decode (Algorithm 5/7 steps), parallel
+//! prefill for context ingestion, sampling, and the DT-style RL rollout
+//! used for Table 3 scoring.
+//!
+//! Everything is generic over [`Backend`], so the same code drives the
+//! PJRT artifact executables and the native pure-Rust model.
 
 use anyhow::{anyhow, Result};
 
-use crate::data::rl::OfflineDataset;
 use crate::data::rl::envs;
-use crate::runtime::Model;
+use crate::data::rl::OfflineDataset;
+use crate::runtime::Backend;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -25,37 +28,40 @@ pub fn sample_logits(logits: &[f32], temperature: f32,
     rng.categorical(&weights)
 }
 
-/// Autoregressive generation for a single prompt (batch-1 step artifact).
+/// Autoregressive generation for a single prompt (batch-1 decode).
 ///
-/// The prompt is consumed token-by-token through the step executable (RNN
+/// The prompt is consumed token-by-token through the decode step (RNN
 /// decode is O(1)/token, so sequential prompt ingestion is exactly what
 /// Figure 3 measures for traditional RNNs; parallel models can use
-/// `prefill` when an artifact of matching shape exists).
-pub fn generate(model: &Model, params: &[xla::Literal], prompt: &[i32],
-                n_tokens: usize, temperature: f32,
-                rng: &mut Rng) -> Result<Vec<i32>> {
-    let mut state = model.decode_state_zeros(1)?;
+/// [`Backend::prefill`] when the backend supports the context shape).
+pub fn generate<B: Backend>(backend: &B, prompt: &[i32], n_tokens: usize,
+                            temperature: f32, rng: &mut Rng)
+                            -> Result<Vec<i32>> {
+    let mut state = backend.decode_state(1)?;
     let mut logits = Tensor::zeros_f32(vec![1, 1]);
+    if prompt.is_empty() {
+        return Err(anyhow!("empty prompt"));
+    }
     for &tok in prompt {
         let x = Tensor::i32(vec![1], vec![tok]);
-        let (l, s) = model.decode_step(params, &x, state)?;
+        let (l, s) = backend.decode_step(&x, state)?;
         logits = l;
         state = s;
     }
     let mut out = Vec::with_capacity(n_tokens);
-    let mut last = *prompt.last()
-        .ok_or_else(|| anyhow!("empty prompt"))?;
-    for _ in 0..n_tokens {
+    for i in 0..n_tokens {
         let row = logits.data.as_f32()
             .ok_or_else(|| anyhow!("logits not f32"))?;
-        last = sample_logits(row, temperature, rng) as i32;
-        out.push(last);
-        let x = Tensor::i32(vec![1], vec![last]);
-        let (l, s) = model.decode_step(params, &x, state)?;
-        logits = l;
-        state = s;
+        let next = sample_logits(row, temperature, rng) as i32;
+        out.push(next);
+        if i + 1 < n_tokens {
+            // the last sampled token needs no further forward pass
+            let x = Tensor::i32(vec![1], vec![next]);
+            let (l, s) = backend.decode_step(&x, state)?;
+            logits = l;
+            state = s;
+        }
     }
-    let _ = last;
     Ok(out)
 }
 
@@ -63,14 +69,14 @@ pub fn generate(model: &Model, params: &[xla::Literal], prompt: &[i32],
 /// condition on a target return-to-go, feed (rtg, obs, prev action)
 /// features through the decode step, execute the predicted action.
 /// Returns the raw episode return.
-pub fn rollout_decision(model: &Model, params: &[xla::Literal],
-                        ds: &OfflineDataset, target_return: f32,
-                        seed: u64) -> Result<f32> {
+pub fn rollout_decision<B: Backend>(backend: &B, ds: &OfflineDataset,
+                                    target_return: f32, seed: u64)
+                                    -> Result<f32> {
     let mut env = envs::by_name(&ds.env_name)
         .ok_or_else(|| anyhow!("unknown env {}", ds.env_name))?;
     let mut rng = Rng::new(seed);
     let mut obs = env.reset(&mut rng);
-    let mut state = model.decode_state_zeros(1)?;
+    let mut state = backend.decode_state(1)?;
     let mut rtg = target_return;
     let mut prev_action = vec![0f32; ds.act_dim];
     let mut total = 0f32;
@@ -80,7 +86,7 @@ pub fn rollout_decision(model: &Model, params: &[xla::Literal],
         feat.extend(ds.norm_obs(&obs));
         feat.extend(&prev_action);
         let x = Tensor::f32(vec![1, ds.feature_dim()], feat);
-        let (pred, s) = model.decode_step(params, &x, state)?;
+        let (pred, s) = backend.decode_step(&x, state)?;
         state = s;
         let action: Vec<f32> = pred.data.as_f32()
             .ok_or_else(|| anyhow!("action not f32"))?
@@ -100,6 +106,7 @@ pub fn rollout_decision(model: &Model, params: &[xla::Literal],
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::{NativeBackend, NativeInit, NativeModel};
 
     #[test]
     fn sampling_greedy_and_stochastic() {
@@ -113,5 +120,22 @@ mod tests {
         }
         assert!(hits[1] > 400, "{hits:?}");
         assert!(hits[0] + hits[2] > 0);
+    }
+
+    #[test]
+    fn generate_runs_on_the_native_backend() {
+        // artifact-free end-to-end decode through the generic path
+        let model = NativeModel::init_random(&NativeInit {
+            vocab_in: Some(16),
+            vocab_out: 16,
+            d_model: 8,
+            ..Default::default()
+        }, 1).unwrap();
+        let backend = NativeBackend::new(model);
+        let mut rng = Rng::new(0);
+        let out = generate(&backend, &[1, 2, 3], 12, 1.0, &mut rng).unwrap();
+        assert_eq!(out.len(), 12);
+        assert!(out.iter().all(|&t| (0..16).contains(&t)));
+        assert!(generate(&backend, &[], 4, 1.0, &mut rng).is_err());
     }
 }

@@ -10,11 +10,12 @@ use std::rc::Rc;
 
 use anyhow::{anyhow, Result};
 
+use crate::backend::{NativeBackend, NativeInit, NativeModel};
 use crate::bench_harness::{self, Ctx};
 use crate::config::TrainConfig;
 use crate::data::corpus::CharVocab;
-use crate::runtime::{Manifest, Model, Runtime};
-use crate::util::cli::Command;
+use crate::runtime::{Manifest, Model, PjrtBackend, Runtime};
+use crate::util::cli::{Command, Parsed};
 use crate::util::rng::Rng;
 use crate::log_info;
 
@@ -60,11 +61,16 @@ Subcommands:
   list                         list artifact variants
   info <variant>               show a variant's manifest entry
   train <variant>              train a variant on its workload
-  generate <variant>           sample text from a (trained) LM variant
-  serve <variant>              dynamic-batching serving demo
+  generate [variant]           sample text from a (trained) LM variant
+  serve [variant]              dynamic-batching serving demo
   experiment <id>|all          regenerate a paper table/figure
   experiments                  list experiment ids
   perf <variant>               profile the train-step hot path (L3 vs XLA)
+
+`generate` and `serve` take `--backend pjrt|native`: `pjrt` runs the AOT
+XLA artifacts; `native` runs the pure-Rust CPU implementation and needs no
+artifacts (load weights with --resume, or sample from a seeded random
+init sized by --kind/--layers/--d-model/--expansion).
 Run `minrnn <subcommand> --help` for options.";
 
 pub fn cli_main(args: Vec<String>) -> i32 {
@@ -110,8 +116,23 @@ fn artifacts_opt(cmd: Command) -> Command {
     cmd.opt("artifacts", Some("artifacts"), "artifacts directory")
 }
 
+/// Open the artifact manifest.  A non-default `--artifacts` path wins;
+/// the default `artifacts` falls back to `$MINRNN_ARTIFACTS` when set
+/// (an explicit `--artifacts artifacts` is indistinguishable from the
+/// default and gets the same fallback).  Missing manifests produce the
+/// remedy message instead of a raw file-not-found.
 fn open_manifest(dir: &str) -> Result<Rc<Manifest>> {
-    Ok(Rc::new(Manifest::load(Path::new(dir))?))
+    use crate::runtime::backend as rtb;
+    let root = if dir == "artifacts" {
+        rtb::artifacts_root()
+    } else {
+        PathBuf::from(dir)
+    };
+    if !rtb::artifacts_available_at(&root) {
+        return Err(anyhow!("looked in {}: {}", root.display(),
+                           crate::runtime::ARTIFACTS_HELP));
+    }
+    Ok(Rc::new(Manifest::load(&root)?))
 }
 
 fn cmd_list(args: &[String]) -> Result<()> {
@@ -257,61 +278,115 @@ fn cmd_train(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Options shared by the backend-selectable inference subcommands.
+fn backend_opts(cmd: Command) -> Command {
+    cmd.opt("backend", None,
+            "inference backend: pjrt | native (default: config file \
+             `backend` key, else pjrt)")
+        .opt("config", None, "JSON config file (`backend` key honored)")
+        .opt("resume", None, "checkpoint to load (default: fresh init)")
+        .opt("kind", Some("mingru"),
+             "native fresh-init mixer: mingru | minlstm")
+        .opt("layers", Some("2"), "native fresh-init layer count")
+        .opt("d-model", Some("64"), "native fresh-init residual width")
+        .opt("expansion", Some("1"), "native fresh-init hidden expansion")
+}
+
+/// Backend selection: explicit `--backend` wins, then the config file's
+/// `backend` key, then "pjrt" — the standard `TrainConfig` precedence.
+fn resolve_backend(p: &Parsed) -> Result<String> {
+    let mut cfg = TrainConfig::default();
+    cfg.apply_cli(p)?;
+    Ok(cfg.backend)
+}
+
+/// A positional variant names a PJRT artifact; with the native backend it
+/// would be silently ignored — refuse instead of sampling a random init
+/// the user will mistake for the trained model.
+fn reject_variant_for_native(p: &Parsed) -> Result<()> {
+    if let Some(v) = p.pos.first() {
+        return Err(anyhow!(
+            "variant '{v}' selects a PJRT artifact and has no effect with \
+             --backend native; drop it, and load trained weights via \
+             --resume <ckpt> (default: seeded random init)"));
+    }
+    Ok(())
+}
+
+/// Build the native backend from --resume or a seeded random init.
+fn native_backend(p: &Parsed, vocab: usize) -> Result<NativeBackend> {
+    match p.get("resume") {
+        Some(path) => NativeBackend::from_checkpoint(Path::new(path)),
+        None => {
+            let cfg = NativeInit {
+                kind: p.req("kind")?.to_string(),
+                n_layers: p.usize("layers")?,
+                d_model: p.usize("d-model")?,
+                expansion: p.usize("expansion")?,
+                vocab_in: Some(vocab),
+                vocab_out: vocab,
+                ..Default::default()
+            };
+            log_info!("native backend: fresh {} init ({} layers, d={})",
+                      cfg.kind, cfg.n_layers, cfg.d_model);
+            Ok(NativeBackend::new(NativeModel::init_random(
+                &cfg, p.u64("seed")?)?))
+        }
+    }
+}
+
 fn cmd_generate(args: &[String]) -> Result<()> {
-    let cmd = artifacts_opt(
-        Command::new("generate", "sample text from an LM variant"))
+    let cmd = backend_opts(artifacts_opt(
+        Command::new("generate", "sample text from an LM variant")))
         .opt("prompt", Some("The "), "prompt text")
         .opt("tokens", Some("200"), "tokens to generate")
         .opt("temperature", Some("0.8"), "sampling temperature")
         .opt("seed", Some("0"), "sampling seed")
-        .opt("resume", None, "checkpoint to load (default: fresh init)")
-        .positional("variant", "LM variant with a b=1 step executable");
+        .positional("variant", "LM variant (pjrt backend only)");
     let p = cmd.parse(args)?;
-    let variant = p.pos.first()
-        .ok_or_else(|| anyhow!("usage: minrnn generate <variant>"))?;
-    let rt = Runtime::cpu()?;
-    let manifest = open_manifest(p.req("artifacts")?)?;
-    let model = Model::open(&rt, manifest, variant)?;
-    let state = match p.get("resume") {
-        Some(path) => model.load_checkpoint(Path::new(path))?,
-        None => model.init(p.get("seed").unwrap().parse()?, 0.0)?,
-    };
     let vocab = CharVocab::new();
     let prompt = vocab.encode(p.req("prompt")?);
     let mut rng = Rng::new(p.u64("seed")?);
-    let out = infer::generate(&model, &state.params, &prompt,
-                              p.usize("tokens")?, p.f32("temperature")?,
-                              &mut rng)?;
+    let out = match resolve_backend(&p)?.as_str() {
+        "native" => {
+            reject_variant_for_native(&p)?;
+            let backend = native_backend(&p, vocab.size())?;
+            infer::generate(&backend, &prompt, p.usize("tokens")?,
+                            p.f32("temperature")?, &mut rng)?
+        }
+        "pjrt" => {
+            let variant = p.pos.first().ok_or_else(
+                || anyhow!("usage: minrnn generate <variant> \
+                            (or --backend native)"))?;
+            let rt = Runtime::cpu()?;
+            let manifest = open_manifest(p.req("artifacts")?)?;
+            let model = Model::open(&rt, manifest, variant)?;
+            let state = match p.get("resume") {
+                Some(path) => model.load_checkpoint(Path::new(path))?,
+                None => model.init(p.get("seed").unwrap().parse()?, 0.0)?,
+            };
+            let backend = PjrtBackend::new(&model, &state.params);
+            infer::generate(&backend, &prompt, p.usize("tokens")?,
+                            p.f32("temperature")?, &mut rng)?
+        }
+        other => return Err(anyhow!(
+            "unknown backend '{other}' (expected pjrt | native)")),
+    };
     println!("{}{}", p.req("prompt")?, vocab.decode(&out));
     Ok(())
 }
 
-fn cmd_serve(args: &[String]) -> Result<()> {
-    let cmd = artifacts_opt(
-        Command::new("serve", "dynamic-batching serving demo"))
-        .opt("requests", Some("24"), "number of synthetic requests")
-        .opt("tokens", Some("16"), "tokens per request")
-        .opt("seed", Some("0"), "seed")
-        .positional("variant", "LM variant with step executables");
-    let p = cmd.parse(args)?;
-    let variant = p.pos.first()
-        .ok_or_else(|| anyhow!("usage: minrnn serve <variant>"))?;
-    let rt = Runtime::cpu()?;
-    let manifest = open_manifest(p.req("artifacts")?)?;
-    let model = Model::open(&rt, manifest, variant)?;
-    let state = model.init(0, 0.0)?;
-    let n = p.usize("requests")?;
-    let n_tokens = p.usize("tokens")?;
-    let vocab = model.variant.cfg_usize("vocab_in").unwrap_or(64);
-    let mut rng = Rng::new(p.u64("seed")?);
-    let requests: Vec<server::Request> = (0..n).map(|i| server::Request {
+fn synthetic_requests(rng: &mut Rng, n: usize, n_tokens: usize,
+                      vocab: usize) -> Vec<server::Request> {
+    (0..n).map(|i| server::Request {
         id: i as u64,
         prompt: (0..8 + rng.usize_below(8))
             .map(|_| rng.below(vocab as u64) as i32).collect(),
         n_tokens,
-    }).collect();
-    let stats = server::serve(&model, &state.params, requests, 0.8,
-                              p.u64("seed")?)?;
+    }).collect()
+}
+
+fn report_serve(stats: &server::ServeStats) {
     println!("served {} requests / {} tokens in {:.2}s",
              stats.responses.len(), stats.tokens_generated, stats.total_s);
     println!("throughput {:.1} tok/s, mean latency {:.1} ms",
@@ -321,6 +396,47 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     batches.sort_unstable();
     batches.dedup();
     println!("batch sizes used: {batches:?}");
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let cmd = backend_opts(artifacts_opt(
+        Command::new("serve", "dynamic-batching serving demo")))
+        .opt("requests", Some("24"), "number of synthetic requests")
+        .opt("tokens", Some("16"), "tokens per request")
+        .opt("seed", Some("0"), "seed")
+        .positional("variant", "LM variant (pjrt backend only)");
+    let p = cmd.parse(args)?;
+    let n = p.usize("requests")?;
+    let n_tokens = p.usize("tokens")?;
+    let mut rng = Rng::new(p.u64("seed")?);
+    let stats = match resolve_backend(&p)?.as_str() {
+        "native" => {
+            reject_variant_for_native(&p)?;
+            let backend = native_backend(&p, CharVocab::new().size())?;
+            let requests = synthetic_requests(
+                &mut rng, n, n_tokens, backend.model.vocab_out);
+            server::serve(&backend, requests, 0.8, p.u64("seed")?)?
+        }
+        "pjrt" => {
+            let variant = p.pos.first().ok_or_else(
+                || anyhow!("usage: minrnn serve <variant> \
+                            (or --backend native)"))?;
+            let rt = Runtime::cpu()?;
+            let manifest = open_manifest(p.req("artifacts")?)?;
+            let model = Model::open(&rt, manifest, variant)?;
+            let state = match p.get("resume") {
+                Some(path) => model.load_checkpoint(Path::new(path))?,
+                None => model.init(0, 0.0)?,
+            };
+            let vocab = model.variant.cfg_usize("vocab_in").unwrap_or(64);
+            let requests = synthetic_requests(&mut rng, n, n_tokens, vocab);
+            let backend = PjrtBackend::new(&model, &state.params);
+            server::serve(&backend, requests, 0.8, p.u64("seed")?)?
+        }
+        other => return Err(anyhow!(
+            "unknown backend '{other}' (expected pjrt | native)")),
+    };
+    report_serve(&stats);
     Ok(())
 }
 

@@ -5,9 +5,27 @@
 //!   lowered to `artifacts/*.hlo.txt` by `python/compile/aot.py`.
 //! * L3 (this crate): coordinator — data generation, training loops,
 //!   evaluation, inference serving, and the bench harness that regenerates
-//!   every table and figure of the paper. Loads artifacts via PJRT
-//!   (`xla` crate); Python is never on the request path.
+//!   every table and figure of the paper.
+//!
+//! Inference dispatches through the [`runtime::Backend`] trait with two
+//! implementations:
+//! * **pjrt** ([`runtime::PjrtBackend`]) — loads AOT artifacts via PJRT
+//!   (`xla` crate); Python is never on the request path.  Needs `make
+//!   artifacts` output and a real PJRT-capable `xla` dependency (the
+//!   default build vendors a host-only stub).
+//! * **native** ([`backend::NativeBackend`]) — a pure-Rust CPU
+//!   implementation of the minGRU/minLSTM backbone (log-space scan,
+//!   sequential decode, prefill) that loads the same MRNN checkpoints and
+//!   needs no artifacts at all.  `cargo test` exercises it against golden
+//!   vectors exported from the JAX reference (`rust/tests/golden/`).
+//!
+//! See `rust/README.md` for backend selection and test-gating details.
 
+// Tensor kernels index by (batch, time, channel) on flat buffers; explicit
+// index loops are the clearest way to write them.
+#![allow(clippy::needless_range_loop)]
+
+pub mod backend;
 pub mod config;
 pub mod coordinator;
 pub mod data;

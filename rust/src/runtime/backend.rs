@@ -1,0 +1,184 @@
+//! The [`Backend`] trait: a uniform decode/prefill interface over the two
+//! inference implementations —
+//!
+//! * [`PjrtBackend`] — the AOT-compiled XLA artifact path (this module),
+//! * `crate::backend::NativeBackend` — the pure-Rust CPU path.
+//!
+//! `coordinator::infer` (generation, RL rollouts) and
+//! `coordinator::server` (dynamic batching) are generic over this trait,
+//! so the whole serving stack runs identically with or without artifacts.
+
+use anyhow::Result;
+
+use crate::tensor::Tensor;
+
+use super::model::Model;
+
+/// Largest batch a backend without fixed step executables will form when
+/// planning dynamic batches.
+pub const MAX_DYNAMIC_BATCH: usize = 64;
+
+pub trait Backend {
+    /// Opaque per-batch decode state threaded through `decode_step`.
+    type State;
+
+    fn name(&self) -> &str;
+
+    /// Batch sizes with a dedicated decode executable; empty means the
+    /// backend handles any batch size (the default `plan_batch` then
+    /// forms exact-fit batches up to [`MAX_DYNAMIC_BATCH`]).  A backend
+    /// whose empty list means "no decode path at all" must override
+    /// `plan_batch` to return `None` — see `PjrtBackend`.
+    fn step_batches(&self) -> Vec<usize>;
+
+    /// Fresh decode state for `batch` lanes.
+    fn decode_state(&self, batch: usize) -> Result<Self::State>;
+
+    /// One decode step: `x_t` is `(B,)` i32 tokens or `(B, F)` f32
+    /// features; returns `(logits: (B, vocab_out), state')`.
+    fn decode_step(&self, x_t: &Tensor, state: Self::State)
+                   -> Result<(Tensor, Self::State)>;
+
+    /// Parallel context ingestion: `(last-position logits, state)`.
+    fn prefill(&self, x: &Tensor) -> Result<(Tensor, Self::State)>;
+
+    /// Pick a batch size for `queue_len` waiting requests, or `None` when
+    /// the queue is empty.
+    fn plan_batch(&self, queue_len: usize) -> Option<usize> {
+        if queue_len == 0 {
+            return None;
+        }
+        let available = self.step_batches();
+        if available.is_empty() {
+            Some(queue_len.min(MAX_DYNAMIC_BATCH))
+        } else {
+            plan_batch(queue_len, &available)
+        }
+    }
+}
+
+/// Picks batch sizes for fixed-size executables: the largest exported size
+/// ≤ queue length, else the smallest exported size (padding idle lanes)
+/// once anything is waiting.
+pub fn plan_batch(queue_len: usize, available: &[usize]) -> Option<usize> {
+    if queue_len == 0 {
+        return None;
+    }
+    let mut sizes: Vec<usize> = available.to_vec();
+    sizes.sort_unstable();
+    sizes.iter().rev().find(|&&b| b <= queue_len).copied()
+        .or_else(|| sizes.first().copied())
+}
+
+/// The PJRT/XLA artifact backend: borrows an opened [`Model`] and its
+/// parameter literals.
+pub struct PjrtBackend<'a, 'rt> {
+    pub model: &'a Model<'rt>,
+    pub params: &'a [xla::Literal],
+}
+
+impl<'a, 'rt> PjrtBackend<'a, 'rt> {
+    pub fn new(model: &'a Model<'rt>, params: &'a [xla::Literal])
+               -> PjrtBackend<'a, 'rt> {
+        PjrtBackend { model, params }
+    }
+}
+
+impl Backend for PjrtBackend<'_, '_> {
+    type State = Vec<xla::Literal>;
+
+    fn name(&self) -> &str {
+        "pjrt"
+    }
+
+    fn step_batches(&self) -> Vec<usize> {
+        self.model.variant.step_files.iter().map(|s| s.batch).collect()
+    }
+
+    /// Unlike the default, an empty `step_batches` here means the variant
+    /// exports no decode executables at all — refuse instead of planning
+    /// arbitrary batch sizes that would fail deep inside `decode_state`.
+    fn plan_batch(&self, queue_len: usize) -> Option<usize> {
+        plan_batch(queue_len, &self.step_batches())
+    }
+
+    fn decode_state(&self, batch: usize) -> Result<Vec<xla::Literal>> {
+        self.model.decode_state_zeros(batch)
+    }
+
+    fn decode_step(&self, x_t: &Tensor, state: Vec<xla::Literal>)
+                   -> Result<(Tensor, Vec<xla::Literal>)> {
+        self.model.decode_step(self.params, x_t, state)
+    }
+
+    fn prefill(&self, x: &Tensor) -> Result<(Tensor, Vec<xla::Literal>)> {
+        self.model.prefill(self.params, x)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// artifact discovery (shared by CLI and tests)
+// ---------------------------------------------------------------------------
+
+/// How to get PJRT tests/commands running; asserted on by the test-suite
+/// gating test so the remedy can never silently rot.
+pub const ARTIFACTS_HELP: &str =
+    "PJRT artifacts not found: run `make artifacts` (python -m compile.aot \
+     --out ../artifacts) and/or set MINRNN_ARTIFACTS to the artifact \
+     directory; PJRT integration tests additionally need the crate built \
+     with `--features artifacts` and a real `xla` dependency";
+
+/// Artifact directory: `$MINRNN_ARTIFACTS` if set, else `artifacts/`.
+pub fn artifacts_root() -> std::path::PathBuf {
+    std::env::var("MINRNN_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}
+
+/// True when a manifest is present under `root`.
+pub fn artifacts_available_at(root: &std::path::Path) -> bool {
+    root.join("manifest.json").exists()
+}
+
+/// True when a manifest is present under [`artifacts_root`].
+pub fn artifacts_available() -> bool {
+    artifacts_available_at(&artifacts_root())
+}
+
+/// Panic (failing the test) instead of silently passing when artifacts are
+/// required but absent under `root`.
+pub fn require_artifacts_at(root: &std::path::Path) {
+    if !artifacts_available_at(root) {
+        panic!("looked in {}: {}", root.display(), ARTIFACTS_HELP);
+    }
+}
+
+/// Panic (failing the test) instead of silently passing when artifacts are
+/// required but absent.
+pub fn require_artifacts() {
+    require_artifacts_at(&artifacts_root());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_batch_policy() {
+        let avail = [1usize, 8, 32];
+        assert_eq!(plan_batch(0, &avail), None);
+        assert_eq!(plan_batch(1, &avail), Some(1));
+        assert_eq!(plan_batch(7, &avail), Some(1));
+        assert_eq!(plan_batch(8, &avail), Some(8));
+        assert_eq!(plan_batch(31, &avail), Some(8));
+        assert_eq!(plan_batch(100, &avail), Some(32));
+        // only large batches exported → pad up
+        assert_eq!(plan_batch(3, &[8]), Some(8));
+    }
+
+    #[test]
+    fn artifacts_help_names_the_remedy() {
+        assert!(ARTIFACTS_HELP.contains("MINRNN_ARTIFACTS"));
+        assert!(ARTIFACTS_HELP.contains("make artifacts"));
+    }
+}

@@ -1,10 +1,15 @@
-//! Runtime layer: PJRT client + artifact manifest + per-variant model ops.
-//! Python never runs here — artifacts/*.hlo.txt are loaded directly.
+//! Runtime layer: the [`Backend`] inference abstraction, the PJRT client +
+//! artifact manifest + per-variant model ops behind it.  Python never runs
+//! here — artifacts/*.hlo.txt are loaded directly, and the native backend
+//! (`crate::backend`) needs no artifacts at all.
 
+pub mod backend;
 pub mod client;
 pub mod manifest;
 pub mod model;
 
+pub use backend::{artifacts_available, artifacts_root, require_artifacts,
+                  Backend, PjrtBackend, ARTIFACTS_HELP};
 pub use client::Runtime;
 pub use manifest::{Manifest, Variant};
 pub use model::{EvalMetrics, Model, StepMetrics, TrainState};

@@ -1,0 +1,334 @@
+//! Golden-vector tests: the native pure-Rust backend versus the JAX
+//! reference oracles (`python/compile/kernels/ref.py` and
+//! `python/compile/models/backbone.py`).
+//!
+//! The vectors under `tests/golden/` are committed JSON produced by
+//! `python -m compile.export_golden`; these tests need **no artifacts, no
+//! Python, no PJRT** and never skip.  Tolerance is 1e-5 absolute against
+//! the f32 reference outputs.
+
+use std::path::Path;
+
+use minrnn::backend::native::linalg::{g, log_g, sigmoid, softplus};
+use minrnn::backend::native::scan;
+use minrnn::backend::{NativeBackend, NativeModel};
+use minrnn::coordinator::{infer, server};
+use minrnn::runtime::Backend;
+use minrnn::tensor::Tensor;
+use minrnn::util::io::{self, NamedTensor};
+use minrnn::util::json::{self, Json};
+use minrnn::util::rng::Rng;
+
+const TOL: f32 = 1e-5;
+
+fn load_json(name: &str) -> Json {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden").join(name);
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("read {}: {e} — regenerate with \
+                                    `python -m compile.export_golden`",
+                                   path.display()));
+    json::parse(&text).unwrap_or_else(|e| panic!("parse {name}: {e}"))
+}
+
+fn shape_of(j: &Json) -> Vec<usize> {
+    j.req("shape").unwrap().as_arr().unwrap().iter()
+        .map(|d| d.as_usize().unwrap()).collect()
+}
+
+fn f32s(j: &Json) -> (Vec<usize>, Vec<f32>) {
+    let data = j.req("data").unwrap().as_arr().unwrap().iter()
+        .map(|v| v.as_f64().unwrap() as f32).collect();
+    (shape_of(j), data)
+}
+
+fn i32s(j: &Json) -> (Vec<usize>, Vec<i32>) {
+    let data = j.req("data").unwrap().as_arr().unwrap().iter()
+        .map(|v| v.as_i64().unwrap() as i32).collect();
+    (shape_of(j), data)
+}
+
+fn assert_close(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (a, b)) in got.iter().zip(want).enumerate() {
+        assert!((a - b).abs() < TOL,
+                "{what}[{i}]: native {a} vs reference {b} \
+                 (|diff| = {})", (a - b).abs());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// mixer cells (Algorithms 5/7) — both the step formula and the log-space
+// scan path must reproduce the reference state sequence
+// ---------------------------------------------------------------------------
+
+#[test]
+fn golden_mingru_cell() {
+    let doc = load_json("mingru_cells.json");
+    let cases = doc.req("cases").unwrap().as_arr().unwrap();
+    assert!(!cases.is_empty());
+    for (ci, case) in cases.iter().enumerate() {
+        let (dims, k) = f32s(case.req("k").unwrap());
+        let (_, pre) = f32s(case.req("pre").unwrap());
+        let (_, h0) = f32s(case.req("h0").unwrap());
+        let (_, want) = f32s(case.req("h").unwrap());
+        let (b, t, d) = (dims[0], dims[1], dims[2]);
+
+        // sequential decode formula (Algorithm 5)
+        let mut h = h0.clone();
+        let mut got_seq = vec![0.0f32; b * t * d];
+        for bi in 0..b {
+            for ti in 0..t {
+                for di in 0..d {
+                    let off = (bi * t + ti) * d + di;
+                    let z = sigmoid(k[off]);
+                    let hi = bi * d + di;
+                    h[hi] = (1.0 - z) * h[hi] + z * g(pre[off]);
+                    got_seq[off] = h[hi];
+                }
+            }
+        }
+        assert_close(&got_seq, &want, &format!("mingru case {ci} (step)"));
+
+        // log-space scan path (Algorithm 6)
+        let n = b * t * d;
+        let mut log_a = vec![0.0f32; n];
+        let mut log_b = vec![0.0f32; n];
+        for i in 0..n {
+            log_a[i] = -softplus(k[i]);
+            log_b[i] = -softplus(-k[i]) + log_g(pre[i]);
+        }
+        let log_h0: Vec<f32> = h0.iter().map(|&v| v.ln()).collect();
+        let got_scan = scan::scan_log(&log_a, &log_b, &log_h0, b, t, d);
+        assert_close(&got_scan, &want, &format!("mingru case {ci} (scan)"));
+    }
+}
+
+#[test]
+fn golden_minlstm_cell() {
+    let doc = load_json("minlstm_cells.json");
+    let cases = doc.req("cases").unwrap().as_arr().unwrap();
+    assert!(!cases.is_empty());
+    for (ci, case) in cases.iter().enumerate() {
+        let (dims, p) = f32s(case.req("p").unwrap());
+        let (_, k) = f32s(case.req("k").unwrap());
+        let (_, pre) = f32s(case.req("pre").unwrap());
+        let (_, h0) = f32s(case.req("h0").unwrap());
+        let (_, want) = f32s(case.req("h").unwrap());
+        let (b, t, d) = (dims[0], dims[1], dims[2]);
+
+        // sequential decode formula (Algorithm 7)
+        let mut h = h0.clone();
+        let mut got_seq = vec![0.0f32; b * t * d];
+        for bi in 0..b {
+            for ti in 0..t {
+                for di in 0..d {
+                    let off = (bi * t + ti) * d + di;
+                    let f = sigmoid(p[off]);
+                    let i = sigmoid(k[off]);
+                    let denom = f + i;
+                    let hi = bi * d + di;
+                    h[hi] = (f / denom) * h[hi]
+                        + (i / denom) * g(pre[off]);
+                    got_seq[off] = h[hi];
+                }
+            }
+        }
+        assert_close(&got_seq, &want, &format!("minlstm case {ci} (step)"));
+
+        // log-space scan path (Algorithm 8)
+        let n = b * t * d;
+        let mut log_a = vec![0.0f32; n];
+        let mut log_b = vec![0.0f32; n];
+        for i in 0..n {
+            let diff = softplus(-p[i]) - softplus(-k[i]);
+            log_a[i] = -softplus(diff);
+            log_b[i] = -softplus(-diff) + log_g(pre[i]);
+        }
+        let log_h0: Vec<f32> = h0.iter().map(|&v| v.ln()).collect();
+        let got_scan = scan::scan_log(&log_a, &log_b, &log_h0, b, t, d);
+        assert_close(&got_scan, &want, &format!("minlstm case {ci} (scan)"));
+    }
+}
+
+#[test]
+fn golden_scan_primitives() {
+    let doc = load_json("scan_cases.json");
+    for (ci, case) in doc.req("log").unwrap().as_arr().unwrap().iter()
+        .enumerate() {
+        let (dims, la) = f32s(case.req("log_a").unwrap());
+        let (_, lb) = f32s(case.req("log_b").unwrap());
+        let (_, lh0) = f32s(case.req("log_h0").unwrap());
+        let (_, want) = f32s(case.req("h").unwrap());
+        let (b, t, d) = (dims[0], dims[1], dims[2]);
+        let chunked = scan::scan_log(&la, &lb, &lh0, b, t, d);
+        let seq = scan::scan_log_seq(&la, &lb, &lh0, b, t, d);
+        assert_close(&chunked, &want, &format!("scan_log case {ci}"));
+        assert_close(&seq, &want, &format!("scan_log_seq case {ci}"));
+    }
+    for (ci, case) in doc.req("linear").unwrap().as_arr().unwrap().iter()
+        .enumerate() {
+        let (dims, a) = f32s(case.req("a").unwrap());
+        let (_, bb) = f32s(case.req("b").unwrap());
+        let (_, h0) = f32s(case.req("h0").unwrap());
+        let (_, want) = f32s(case.req("h").unwrap());
+        let (b, t, d) = (dims[0], dims[1], dims[2]);
+        let got = scan::scan_linear(&a, &bb, &h0, b, t, d);
+        assert_close(&got, &want, &format!("scan_linear case {ci}"));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// full backbone
+// ---------------------------------------------------------------------------
+
+fn model_from_golden(doc: &Json) -> NativeModel {
+    let named: Vec<NamedTensor> = doc.req("params").unwrap().as_arr()
+        .unwrap().iter().map(|p| {
+            let name = p.req("name").unwrap().as_str().unwrap().to_string();
+            let (dims, data) = f32s(p);
+            NamedTensor { name, dims, data: io::TensorData::F32(data) }
+        }).collect();
+    NativeModel::from_named(&named).expect("build model from golden params")
+}
+
+#[test]
+fn golden_backbone_mingru_forward_and_decode() {
+    let doc = load_json("backbone_mingru.json");
+    let model = model_from_golden(&doc);
+    assert_eq!(model.kind(), "mingru");
+    assert_eq!(model.n_layers(), 2);
+
+    let (xdims, tokens) = i32s(doc.req("x").unwrap());
+    let (b, t) = (xdims[0], xdims[1]);
+    let (_, want_par) = f32s(doc.req("logits_parallel").unwrap());
+    let (_, want_step) = f32s(doc.req("logits_step").unwrap());
+
+    // parallel forward (prefill path)
+    let x = Tensor::i32(vec![b, t], tokens.clone());
+    let (all, _) = model.forward(&x).unwrap();
+    assert_eq!(all.dims, vec![b, t, model.vocab_out]);
+    assert_close(all.data.as_f32().unwrap(), &want_par,
+                 "backbone_mingru forward");
+
+    // sequential decode chain
+    let v = model.vocab_out;
+    let mut st = model.init_state(b);
+    let mut got = vec![0.0f32; b * t * v];
+    for ti in 0..t {
+        let xt = Tensor::i32(
+            vec![b], (0..b).map(|bi| tokens[bi * t + ti]).collect());
+        let (logits, st2) = model.step(&xt, st).unwrap();
+        st = st2;
+        let lv = logits.data.as_f32().unwrap();
+        for bi in 0..b {
+            got[(bi * t + ti) * v..(bi * t + ti + 1) * v]
+                .copy_from_slice(&lv[bi * v..(bi + 1) * v]);
+        }
+    }
+    assert_close(&got, &want_step, "backbone_mingru decode");
+}
+
+#[test]
+fn golden_backbone_minlstm_continuous_input() {
+    let doc = load_json("backbone_minlstm.json");
+    let model = model_from_golden(&doc);
+    assert_eq!(model.kind(), "minlstm");
+
+    let (xdims, feats) = f32s(doc.req("x").unwrap());
+    let (b, t, f) = (xdims[0], xdims[1], xdims[2]);
+    let (_, want_par) = f32s(doc.req("logits_parallel").unwrap());
+    let (_, want_step) = f32s(doc.req("logits_step").unwrap());
+
+    let x = Tensor::f32(vec![b, t, f], feats.clone());
+    let (all, _) = model.forward(&x).unwrap();
+    assert_close(all.data.as_f32().unwrap(), &want_par,
+                 "backbone_minlstm forward");
+
+    let v = model.vocab_out;
+    let mut st = model.init_state(b);
+    let mut got = vec![0.0f32; b * t * v];
+    for ti in 0..t {
+        let mut row = vec![0.0f32; b * f];
+        for bi in 0..b {
+            row[bi * f..(bi + 1) * f].copy_from_slice(
+                &feats[(bi * t + ti) * f..(bi * t + ti + 1) * f]);
+        }
+        let xt = Tensor::f32(vec![b, f], row);
+        let (logits, st2) = model.step(&xt, st).unwrap();
+        st = st2;
+        let lv = logits.data.as_f32().unwrap();
+        for bi in 0..b {
+            got[(bi * t + ti) * v..(bi * t + ti + 1) * v]
+                .copy_from_slice(&lv[bi * v..(bi + 1) * v]);
+        }
+    }
+    assert_close(&got, &want_step, "backbone_minlstm decode");
+}
+
+// ---------------------------------------------------------------------------
+// end-to-end, artifact-free: checkpoint → generate → serve
+// ---------------------------------------------------------------------------
+
+#[test]
+fn checkpoint_generate_serve_without_artifacts() {
+    // golden params → MRNN checkpoint on disk → native backend → tokens
+    let doc = load_json("backbone_mingru.json");
+    let model = model_from_golden(&doc);
+    let vocab = model.vocab_out;
+
+    let dir = std::env::temp_dir().join("minrnn_native_golden");
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt = dir.join("golden.ckpt");
+    io::save(&ckpt, &model.to_named()).unwrap();
+
+    let backend = NativeBackend::from_checkpoint(&ckpt).unwrap();
+    // the reloaded model is bit-identical
+    let x = Tensor::i32(vec![1, 4], vec![1, 2, 3, 4]);
+    let (a, _) = model.forward(&x).unwrap();
+    let (b, _) = backend.model.forward(&x).unwrap();
+    assert_eq!(a, b, "checkpoint round-trip must be bit-exact");
+
+    // generate: prompt ingestion + sampling, O(1)/token decode
+    let mut rng = Rng::new(0);
+    let out = infer::generate(&backend, &[1, 2, 3], 16, 1.0, &mut rng)
+        .unwrap();
+    assert_eq!(out.len(), 16);
+    assert!(out.iter().all(|&tok| (0..vocab as i32).contains(&tok)));
+
+    // greedy decode is deterministic
+    let mut r1 = Rng::new(7);
+    let mut r2 = Rng::new(8);
+    let g1 = infer::generate(&backend, &[5, 6], 8, 0.0, &mut r1).unwrap();
+    let g2 = infer::generate(&backend, &[5, 6], 8, 0.0, &mut r2).unwrap();
+    assert_eq!(g1, g2);
+
+    // prefill state continues into decode identically to step-by-step
+    let ctx = Tensor::i32(vec![1, 4], vec![2, 4, 6, 8]);
+    let (pl, pstate) = backend.prefill(&ctx).unwrap();
+    let mut sstate = backend.decode_state(1).unwrap();
+    let mut sl = Tensor::zeros_f32(vec![1, 1]);
+    for &tok in &[2, 4, 6, 8] {
+        let (l, s) = backend
+            .decode_step(&Tensor::i32(vec![1], vec![tok]), sstate)
+            .unwrap();
+        sl = l;
+        sstate = s;
+    }
+    let (pv, sv) = (pl.data.as_f32().unwrap(), sl.data.as_f32().unwrap());
+    for i in 0..pv.len() {
+        assert!((pv[i] - sv[i]).abs() < 1e-4,
+                "prefill/decode logits diverge at {i}");
+    }
+
+    // dynamic-batched serving end-to-end
+    let requests: Vec<server::Request> = (0..5).map(|i| server::Request {
+        id: i,
+        prompt: vec![1 + i as i32, 2, 3],
+        n_tokens: 6,
+    }).collect();
+    let stats = server::serve(&backend, requests, 0.9, 1).unwrap();
+    assert_eq!(stats.responses.len(), 5);
+    assert!(stats.responses.iter().all(|r| r.tokens.len() == 6));
+    assert_eq!(stats.tokens_generated, 30);
+}

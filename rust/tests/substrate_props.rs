@@ -1,6 +1,10 @@
 //! Property-based tests (util::prop) over the substrates and the data
-//! layer: round-trips, invariants and oracles under random inputs.
+//! layer: round-trips, invariants and oracles under random inputs —
+//! including the native backend's log-space scan against the naive
+//! sequential recurrence and its `a_t → 0/1` edge cases.
 
+use minrnn::backend::native::scan::{scan_linear, scan_log, scan_log_seq,
+                                    LOG_ZERO};
 use minrnn::data::chomsky;
 use minrnn::data::lra::listops;
 use minrnn::util::json::{self, Json};
@@ -166,4 +170,148 @@ fn prop_rng_below_never_exceeds() {
         let mut rng = Rng::new(n as u64);
         (0..100).all(|_| rng.below(n as u64) < n as u64)
     });
+}
+
+// ---------------------------------------------------------------------------
+// native log-space scan: oracle agreement, h0 propagation, gate edge cases
+// ---------------------------------------------------------------------------
+
+/// f64 oracle: `v_t = a_t * v_{t-1} + b_t` evaluated directly.
+fn naive_recurrence(a: &[f32], b: &[f32], h0: &[f32], batch: usize,
+                    t: usize, d: usize) -> Vec<f64> {
+    let mut out = vec![0.0f64; batch * t * d];
+    for bi in 0..batch {
+        for di in 0..d {
+            let mut v = h0[bi * d + di] as f64;
+            for ti in 0..t {
+                let off = (bi * t + ti) * d + di;
+                v = a[off] as f64 * v + b[off] as f64;
+                out[off] = v;
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn prop_native_scan_log_agrees_with_naive_recurrence() {
+    // random positive (a, b, h0) across random shapes, both scan forms
+    let mut rng = Rng::new(0xA11CE);
+    for case in 0..60 {
+        let batch = 1 + rng.usize_below(3);
+        let t = 1 + rng.usize_below(if case % 5 == 0 { 200 } else { 24 });
+        let d = 1 + rng.usize_below(4);
+        let n = batch * t * d;
+        let la: Vec<f32> = (0..n).map(|_| rng.range_f32(-6.0, 0.0))
+            .collect();
+        let lb: Vec<f32> = (0..n).map(|_| rng.range_f32(-6.0, 1.5))
+            .collect();
+        let lh0: Vec<f32> = (0..batch * d)
+            .map(|_| rng.range_f32(-3.0, 1.0)).collect();
+        let a: Vec<f32> = la.iter().map(|&x| x.exp()).collect();
+        let b: Vec<f32> = lb.iter().map(|&x| x.exp()).collect();
+        let h0: Vec<f32> = lh0.iter().map(|&x| x.exp()).collect();
+        let oracle = naive_recurrence(&a, &b, &h0, batch, t, d);
+        let chunked = scan_log(&la, &lb, &lh0, batch, t, d);
+        let seq = scan_log_seq(&la, &lb, &lh0, batch, t, d);
+        for i in 0..n {
+            let tol = 2e-4 * oracle[i].abs().max(1.0);
+            assert!((chunked[i] as f64 - oracle[i]).abs() < tol,
+                    "case {case} chunked[{i}]: {} vs {}", chunked[i],
+                    oracle[i]);
+            assert!((seq[i] as f64 - oracle[i]).abs() < tol,
+                    "case {case} seq[{i}]: {} vs {}", seq[i], oracle[i]);
+        }
+    }
+}
+
+#[test]
+fn prop_native_scan_propagates_h0() {
+    // a_t = 1, b_t = 0: the state must stay exactly h0 forever — this is
+    // what carries prefill state into decode across chunk boundaries
+    let mut rng = Rng::new(0xB0B);
+    for _ in 0..20 {
+        let batch = 1 + rng.usize_below(2);
+        let t = 1 + rng.usize_below(300);
+        let d = 1 + rng.usize_below(3);
+        let n = batch * t * d;
+        let la = vec![0.0f32; n];           // log 1
+        let lb = vec![LOG_ZERO; n];         // log 0
+        let lh0: Vec<f32> = (0..batch * d)
+            .map(|_| rng.range_f32(-2.0, 1.0)).collect();
+        let h = scan_log(&la, &lb, &lh0, batch, t, d);
+        for bi in 0..batch {
+            for ti in 0..t {
+                for di in 0..d {
+                    let want = lh0[bi * d + di].exp();
+                    let got = h[(bi * t + ti) * d + di];
+                    assert!((got - want).abs() < 1e-5 * want.max(1.0),
+                            "h0 not propagated at t={ti}: {got} vs {want}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_native_scan_gate_edge_cases() {
+    let mut rng = Rng::new(0xED6E);
+    let (batch, t, d) = (2usize, 130usize, 2usize);
+    let n = batch * t * d;
+
+    // a_t → 0 (gate fully open): h_t ≈ b_t, history forgotten instantly
+    let la = vec![-40.0f32; n]; // a = e^-40 ≈ 0 in f32
+    let lb: Vec<f32> = (0..n).map(|_| rng.range_f32(-3.0, 2.0)).collect();
+    let lh0: Vec<f32> = (0..batch * d).map(|_| rng.range_f32(-1.0, 1.0))
+        .collect();
+    let h = scan_log(&la, &lb, &lh0, batch, t, d);
+    for i in 0..n {
+        let want = lb[i].exp();
+        assert!((h[i] - want).abs() < 1e-5 * want.max(1.0),
+                "a→0: h[{i}] = {} vs b = {want}", h[i]);
+        assert!(h[i].is_finite());
+    }
+
+    // a_t → 1 with tiny b: long-horizon stability — the state decays
+    // monotonically toward the accumulated b sum, never NaN/inf
+    let la1 = vec![-1e-6f32; n]; // a ≈ 1
+    let lb1 = vec![-30.0f32; n]; // b ≈ 1e-13
+    let lh01 = vec![0.5f32.ln(); batch * d];
+    let h1 = scan_log(&la1, &lb1, &lh01, batch, t, d);
+    for (i, &v) in h1.iter().enumerate() {
+        assert!(v.is_finite(), "a→1: non-finite at {i}");
+        assert!((v - 0.5).abs() < 1e-3, "a→1: drifted to {v} at {i}");
+    }
+
+    // mixed saturated gates stay finite and non-negative
+    let la2: Vec<f32> = (0..n).map(|_| if rng.bool(0.5) { -40.0 }
+                                       else { -1e-7 }).collect();
+    let lb2: Vec<f32> = (0..n).map(|_| if rng.bool(0.5) { LOG_ZERO }
+                                       else { 0.0 }).collect();
+    let h2 = scan_log(&la2, &lb2, &lh01, batch, t, d);
+    assert!(h2.iter().all(|v| v.is_finite() && *v >= 0.0));
+}
+
+#[test]
+fn prop_native_scan_linear_agrees_with_naive() {
+    let mut rng = Rng::new(0x11EA8);
+    for _ in 0..40 {
+        let batch = 1 + rng.usize_below(3);
+        let t = 1 + rng.usize_below(40);
+        let d = 1 + rng.usize_below(4);
+        let n = batch * t * d;
+        let a: Vec<f32> = (0..n).map(|_| rng.range_f32(-1.05, 1.05))
+            .collect();
+        let b: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0))
+            .collect();
+        let h0: Vec<f32> = (0..batch * d).map(|_| rng.normal_f32(0.0, 1.0))
+            .collect();
+        let oracle = naive_recurrence(&a, &b, &h0, batch, t, d);
+        let got = scan_linear(&a, &b, &h0, batch, t, d);
+        for i in 0..n {
+            assert!((got[i] as f64 - oracle[i]).abs()
+                    < 1e-3 * oracle[i].abs().max(1.0),
+                    "[{i}] {} vs {}", got[i], oracle[i]);
+        }
+    }
 }

@@ -1,0 +1,308 @@
+//! Stub of the `xla` crate API surface used by minrnn.
+//!
+//! The real crate binds PJRT/XLA through a native toolchain that the
+//! hermetic build environment cannot provide, but most of what minrnn
+//! passes around are plain host literals (parameter leaves, batches,
+//! checkpoints).  This stub therefore implements [`Literal`] as a real
+//! host-side tensor container — construction, reshape, readback and tuple
+//! decomposition all work — while [`PjRtClient::compile`] and
+//! [`PjRtLoadedExecutable::execute`] return [`Error`] explaining that HLO
+//! execution needs the real crate.  The native pure-Rust backend
+//! (`minrnn::backend`) never hits those paths.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+
+pub const STUB_EXECUTE_MSG: &str =
+    "the in-tree `xla` stub cannot compile or execute HLO; swap the `xla` \
+     path dependency in rust/Cargo.toml for the real PJRT-capable crate to \
+     use the artifact backend (the native backend needs no artifacts)";
+
+#[derive(Clone, Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    fn new(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    Tuple,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Host tensor literal (array or tuple), mirroring `xla::Literal`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: Data,
+}
+
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// Element types a [`Literal`] can hold (mirrors the real crate's
+/// `NativeType` bound on `vec1` / `to_vec` / `get_first_element`).
+pub trait NativeType: Copy {
+    fn element_type() -> ElementType;
+    fn make_literal(v: &[Self]) -> Literal;
+    fn read_literal(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn element_type() -> ElementType {
+        ElementType::F32
+    }
+
+    fn make_literal(v: &[f32]) -> Literal {
+        Literal { dims: vec![v.len() as i64], data: Data::F32(v.to_vec()) }
+    }
+
+    fn read_literal(lit: &Literal) -> Result<Vec<f32>> {
+        match &lit.data {
+            Data::F32(v) => Ok(v.clone()),
+            other => Err(Error::new(format!(
+                "literal is not f32 (got {})", data_kind(other)))),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn element_type() -> ElementType {
+        ElementType::S32
+    }
+
+    fn make_literal(v: &[i32]) -> Literal {
+        Literal { dims: vec![v.len() as i64], data: Data::I32(v.to_vec()) }
+    }
+
+    fn read_literal(lit: &Literal) -> Result<Vec<i32>> {
+        match &lit.data {
+            Data::I32(v) => Ok(v.clone()),
+            other => Err(Error::new(format!(
+                "literal is not i32 (got {})", data_kind(other)))),
+        }
+    }
+}
+
+fn data_kind(d: &Data) -> &'static str {
+    match d {
+        Data::F32(_) => "f32",
+        Data::I32(_) => "i32",
+        Data::Tuple(_) => "tuple",
+    }
+}
+
+impl Literal {
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        T::make_literal(v)
+    }
+
+    pub fn tuple(leaves: Vec<Literal>) -> Literal {
+        Literal { dims: Vec::new(), data: Data::Tuple(leaves) }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::Tuple(leaves) => {
+                leaves.iter().map(|l| l.element_count()).sum()
+            }
+        }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if matches!(self.data, Data::Tuple(_)) {
+            return Err(Error::new("cannot reshape a tuple literal"));
+        }
+        if n as usize != self.element_count() {
+            return Err(Error::new(format!(
+                "reshape to {:?} ({} elements) from {} elements",
+                dims, n, self.element_count())));
+        }
+        Ok(Literal { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        let ty = match &self.data {
+            Data::F32(_) => ElementType::F32,
+            Data::I32(_) => ElementType::S32,
+            Data::Tuple(_) => {
+                return Err(Error::new("tuple literal has no array shape"));
+            }
+        };
+        Ok(ArrayShape { dims: self.dims.clone(), ty })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::read_literal(self)
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        T::read_literal(self)?
+            .first()
+            .copied()
+            .ok_or_else(|| Error::new("empty literal"))
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match &self.data {
+            Data::Tuple(leaves) => Ok(leaves.clone()),
+            _ => Err(Error::new("literal is not a tuple")),
+        }
+    }
+}
+
+/// Parsed-enough representation of an HLO text artifact.
+pub struct HloModuleProto {
+    #[allow(dead_code)]
+    text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            Error::new(format!("read {}: {e}", path.display()))
+        })?;
+        if !text.trim_start().starts_with("HloModule") {
+            return Err(Error::new(format!(
+                "{}: not HLO text (missing HloModule header)",
+                path.display())));
+        }
+        Ok(HloModuleProto { text })
+    }
+}
+
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::new(STUB_EXECUTE_MSG))
+    }
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(
+        &self, _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::new(STUB_EXECUTE_MSG))
+    }
+}
+
+pub struct PjRtClient {
+    platform: String,
+}
+
+impl PjRtClient {
+    /// Always succeeds: the host "client" exists, it just cannot compile.
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { platform: "stub-cpu".to_string() })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.platform.clone()
+    }
+
+    pub fn compile(&self, _c: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::new(STUB_EXECUTE_MSG))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+        let r = l.reshape(&[2, 2]).unwrap();
+        let shape = r.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 2]);
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(r.get_first_element::<f32>().unwrap(), 1.0);
+        assert!(l.reshape(&[3, 3]).is_err());
+        assert!(r.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn tuple_decomposition() {
+        let t = Literal::tuple(vec![
+            Literal::vec1(&[1i32, 2]),
+            Literal::vec1(&[0.5f32]),
+        ]);
+        let leaves = t.to_tuple().unwrap();
+        assert_eq!(leaves.len(), 2);
+        assert_eq!(leaves[0].to_vec::<i32>().unwrap(), vec![1, 2]);
+        assert!(t.array_shape().is_err());
+    }
+
+    #[test]
+    fn client_exists_but_cannot_compile() {
+        let c = PjRtClient::cpu().unwrap();
+        assert!(c.platform_name().contains("cpu"));
+        let dir = std::env::temp_dir().join("xla_stub_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("m.hlo.txt");
+        std::fs::write(&p, "HloModule m\n").unwrap();
+        let proto = HloModuleProto::from_text_file(&p).unwrap();
+        let comp = XlaComputation::from_proto(&proto);
+        let err = c.compile(&comp).unwrap_err();
+        assert!(format!("{err}").contains("stub"));
+    }
+}
