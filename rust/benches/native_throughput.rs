@@ -1,0 +1,15 @@
+//! cargo-bench entry point for the native-backend throughput benchmark
+//! (prefill / decode / serve tokens-per-second; see
+//! `rust/src/bench_harness/native_throughput.rs`).  Needs **no
+//! artifacts**.  Quick mode by default; MINRNN_FULL=1 for full scale.
+//! Writes BENCH_native.json to the working directory; CI uploads it and
+//! gates on regression against the committed baseline.
+
+use minrnn::bench_harness::native_throughput::{run, Config};
+
+fn main() {
+    minrnn::util::logging::init();
+    let full = std::env::var("MINRNN_FULL").ok().as_deref() == Some("1");
+    let cfg = if full { Config::full() } else { Config::quick() };
+    run(&cfg).expect("native throughput bench");
+}

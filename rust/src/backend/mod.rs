@@ -20,7 +20,7 @@ use anyhow::Result;
 use crate::runtime::Backend;
 use crate::tensor::Tensor;
 
-pub use native::{NativeInit, NativeModel, NativeState};
+pub use native::{NativeInit, NativeModel, NativeScratch, NativeState};
 
 /// Native CPU backend: owns the model parameters, serves any batch size.
 pub struct NativeBackend {
@@ -61,5 +61,10 @@ impl Backend for NativeBackend {
 
     fn prefill(&self, x: &Tensor) -> Result<(Tensor, NativeState)> {
         self.model.prefill(x)
+    }
+
+    /// Native lane reset enables continuous batching in the serving loop.
+    fn reset_lane(&self, state: &mut NativeState, lane: usize) -> bool {
+        self.model.reset_lane(state, lane).is_ok()
     }
 }

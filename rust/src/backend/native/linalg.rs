@@ -4,8 +4,41 @@
 //! mirroring the JAX reference in `python/compile/models/layers.py`:
 //! weights are `(d_in, d_out)` row-major, biases `(d_out,)`, activations
 //! match the `jax.nn` definitions bit-for-bit up to libm rounding.
+//!
+//! Hot paths come in two flavors: allocating wrappers (the PR-1 API, kept
+//! for tests and casual callers) and `*_into` variants that reuse caller
+//! scratch buffers and fan work out across a [`ThreadPool`] —
+//! steady-state decode through [`super::model::NativeModel::step`] touches
+//! the allocator only for the returned logits tensor.
+//!
+//! [`Dense::apply`] is a cache/register-blocked tiled GEMM: output columns
+//! are processed in register tiles of [`N_TILE`] accumulators so the
+//! `(d_in, N_TILE)` weight slab stays hot in L1 across a row block, and
+//! the inner update `acc[j] += x[k] * w[k][j]` vectorizes across the tile
+//! without reassociating any float sum.  (A transposed-weight dot-product
+//! kernel was tried first; under strict IEEE semantics its k-reduction
+//! cannot vectorize without changing the summation order, so the
+//! broadcast-tile form wins until explicit SIMD lands — see ROADMAP.)
+//! Per-`(row, column)` summation order is k-ascending with the bias folded
+//! in first, identical to the naive loop and independent of blocking and
+//! thread count, so results are bit-for-bit reproducible.
 
 use anyhow::{bail, Result};
+
+use crate::util::threads::{self, SlicePtr, ThreadPool};
+
+/// Output-column register tile of the GEMM micro-kernel.
+pub const N_TILE: usize = 16;
+/// Rows per parallel task (large-row shapes, e.g. prefill).
+const ROW_BLOCK: usize = 32;
+/// Output columns per parallel task (small-row shapes, e.g. decode).
+const COL_BLOCK: usize = 64;
+/// Below this many multiply-adds a GEMM runs inline on the caller.
+const PAR_MIN_MACS: usize = 1 << 15;
+/// Elementwise maps fan out in chunks of this many elements.
+const MAP_CHUNK: usize = 1 << 12;
+/// Below this many elements an elementwise map runs inline.
+const PAR_MIN_MAP: usize = 1 << 14;
 
 // ---------------------------------------------------------------------------
 // scalar activations
@@ -60,7 +93,7 @@ pub fn gelu(x: f32) -> f32 {
     0.5 * x * (1.0 + (SQRT_2_OVER_PI * (x + 0.044_715 * x * x * x)).tanh())
 }
 
-/// Stable `log(e^a + e^b)` in f64 (the scan accumulates in f64).
+/// Stable `log(e^a + e^b)` in f64 (reference scan accumulation).
 #[inline]
 pub fn logaddexp(a: f64, b: f64) -> f64 {
     if a == f64::NEG_INFINITY {
@@ -73,12 +106,60 @@ pub fn logaddexp(a: f64, b: f64) -> f64 {
     m + ((a - m).exp() + (b - m).exp()).ln()
 }
 
+/// Stable `log(e^a + e^b)` with f64 carriers but the transcendentals in
+/// f32 — the chunked scan's fast path.  `max + ln1p(exp(-|a - b|))` needs
+/// one `expf` + one `log1pf` against the reference's two f64 `exp` + one
+/// f64 `ln`, and because the f32 rounding only touches the *correction*
+/// term (≤ ln 2, absolute error ~1e-7) while the running maximum stays
+/// f64, accumulators keep full absolute precision even when the scan's
+/// `A*` prefix drifts to ±10³ (a pure-f32 accumulator loses ~|p|·6e-8
+/// there and measurably fails the a→0 gate oracle — verified against the
+/// golden vectors at 1e-5 relative).
+#[inline]
+pub fn logaddexp_fast(a: f64, b: f64) -> f64 {
+    if a == f64::NEG_INFINITY {
+        return b;
+    }
+    if b == f64::NEG_INFINITY {
+        return a;
+    }
+    let m = a.max(b);
+    m + ((-(a - b).abs()) as f32).exp().ln_1p() as f64
+}
+
+/// Fully-f32 stable `log(e^a + e^b)`, for contexts whose operands are
+/// already f32-bounded (unlike the scan accumulators — see
+/// [`logaddexp_fast`]).
+#[inline]
+pub fn logaddexp_f32(a: f32, b: f32) -> f32 {
+    if a == f32::NEG_INFINITY {
+        return b;
+    }
+    if b == f32::NEG_INFINITY {
+        return a;
+    }
+    let m = a.max(b);
+    m + ((a - m).exp() + (b - m).exp()).ln()
+}
+
 /// Elementwise `dst += src`.
 #[inline]
 pub fn add_assign(dst: &mut [f32], src: &[f32]) {
     debug_assert_eq!(dst.len(), src.len());
     for (d, s) in dst.iter_mut().zip(src) {
         *d += *s;
+    }
+}
+
+/// Refit a scratch buffer to `n` elements without reallocating once warm.
+/// A warm buffer (`len == n`) is untouched — no redundant zero-fill pass —
+/// which is sound because every kernel writing through a reused buffer
+/// overwrites all `n` positions.
+#[inline]
+pub fn reuse(buf: &mut Vec<f32>, n: usize) {
+    if buf.len() != n {
+        buf.clear();
+        buf.resize(n, 0.0);
     }
 }
 
@@ -106,23 +187,116 @@ impl Dense {
     }
 
     /// Apply to `rows` rows of `d_in` features; returns `rows * d_out`.
+    /// Allocating wrapper over [`Dense::apply_pool_into`] on the global
+    /// pool.
     pub fn apply(&self, x: &[f32], rows: usize) -> Vec<f32> {
+        self.apply_pool(threads::global(), x, rows)
+    }
+
+    /// [`Dense::apply`] on an explicit pool (tests pin thread-count
+    /// invariance through this entry point).
+    pub fn apply_pool(&self, pool: &ThreadPool, x: &[f32], rows: usize)
+                      -> Vec<f32> {
+        let mut y = Vec::new();
+        self.apply_pool_into(pool, x, rows, &mut y);
+        y
+    }
+
+    /// Allocation-free apply: `y` is cleared and refilled with
+    /// `rows * d_out` outputs, reusing its capacity.
+    pub fn apply_into(&self, x: &[f32], rows: usize, y: &mut Vec<f32>) {
+        self.apply_pool_into(threads::global(), x, rows, y);
+    }
+
+    /// Core entry point: tiled GEMM across `pool`.  Large-row shapes
+    /// (prefill) split into row blocks; small-row shapes (decode) split
+    /// the output columns instead so a batch-8 decode step still uses
+    /// every core.
+    pub fn apply_pool_into(&self, pool: &ThreadPool, x: &[f32], rows: usize,
+                           y: &mut Vec<f32>) {
         assert_eq!(x.len(), rows * self.d_in,
                    "dense input: {} != {} rows x {}", x.len(), rows,
                    self.d_in);
-        let mut y = vec![0.0f32; rows * self.d_out];
-        for r in 0..rows {
-            let xr = &x[r * self.d_in..(r + 1) * self.d_in];
-            let yr = &mut y[r * self.d_out..(r + 1) * self.d_out];
-            yr.copy_from_slice(&self.b);
+        reuse(y, rows * self.d_out);
+        let macs = rows * self.d_in * self.d_out;
+        if macs < PAR_MIN_MACS || pool.active() == 1 {
+            self.apply_rows(x, y.as_mut_slice(), 0, rows);
+            return;
+        }
+        if rows >= 2 * ROW_BLOCK {
+            let n_blocks = rows.div_ceil(ROW_BLOCK);
+            let yp = SlicePtr::new(y.as_mut_slice());
+            pool.run(n_blocks, |bi| {
+                let r0 = bi * ROW_BLOCK;
+                let r1 = (r0 + ROW_BLOCK).min(rows);
+                let yb = unsafe {
+                    yp.slice(r0 * self.d_out, (r1 - r0) * self.d_out)
+                };
+                self.apply_rows(x, yb, r0, r1);
+            });
+        } else {
+            let n_blocks = self.d_out.div_ceil(COL_BLOCK);
+            let yp = SlicePtr::new(y.as_mut_slice());
+            pool.run(n_blocks, |ci| {
+                let o0 = ci * COL_BLOCK;
+                let o1 = (o0 + COL_BLOCK).min(self.d_out);
+                for r in 0..rows {
+                    let yr = unsafe {
+                        yp.slice(r * self.d_out + o0, o1 - o0)
+                    };
+                    self.apply_row_cols(x, r, o0, o1, yr);
+                }
+            });
+        }
+    }
+
+    /// One cache block: all columns for rows `[r0, r1)`, writing into
+    /// `yb` (whose row 0 corresponds to `r0`).  Column tiles run in the
+    /// outer loop so each `(d_in, N_TILE)` weight slab is reused across
+    /// the whole row block from L1.
+    fn apply_rows(&self, x: &[f32], yb: &mut [f32], r0: usize, r1: usize) {
+        let d_out = self.d_out;
+        let mut o = 0usize;
+        while o < d_out {
+            let o1 = (o + N_TILE).min(d_out);
+            for r in r0..r1 {
+                let yr = &mut yb[(r - r0) * d_out + o
+                                 ..(r - r0) * d_out + o1];
+                self.apply_row_cols(x, r, o, o1, yr);
+            }
+            o = o1;
+        }
+    }
+
+    /// Micro-kernel: one input row times output columns `[o0, o1)` with
+    /// `o1 - o0 <= N_TILE` handled as a full register tile and a scalar
+    /// tail.  Per-output summation is bias-first then k-ascending —
+    /// exactly the naive loop's order.
+    fn apply_row_cols(&self, x: &[f32], r: usize, o0: usize, o1: usize,
+                      yr: &mut [f32]) {
+        let d_in = self.d_in;
+        let d_out = self.d_out;
+        let xr = &x[r * d_in..(r + 1) * d_in];
+        let mut o = o0;
+        while o + N_TILE <= o1 {
+            let mut acc = [0.0f32; N_TILE];
+            acc.copy_from_slice(&self.b[o..o + N_TILE]);
             for (k, &xv) in xr.iter().enumerate() {
-                let wrow = &self.w[k * self.d_out..(k + 1) * self.d_out];
-                for (yo, &wv) in yr.iter_mut().zip(wrow) {
-                    *yo += xv * wv;
+                let wrow = &self.w[k * d_out + o..k * d_out + o + N_TILE];
+                for j in 0..N_TILE {
+                    acc[j] += xv * wrow[j];
                 }
             }
+            yr[o - o0..o - o0 + N_TILE].copy_from_slice(&acc);
+            o += N_TILE;
         }
-        y
+        for oo in o..o1 {
+            let mut acc = self.b[oo];
+            for (k, &xv) in xr.iter().enumerate() {
+                acc += xv * self.w[k * d_out + oo];
+            }
+            yr[oo - o0] = acc;
+        }
     }
 }
 
@@ -144,13 +318,19 @@ impl Embedding {
 
     /// Gather rows; out-of-range ids clamp (like `jnp.take` under jit).
     pub fn lookup(&self, ids: &[i32]) -> Vec<f32> {
-        let mut out = vec![0.0f32; ids.len() * self.d];
+        let mut out = Vec::new();
+        self.lookup_into(ids, &mut out);
+        out
+    }
+
+    /// Allocation-free gather into a reused buffer.
+    pub fn lookup_into(&self, ids: &[i32], out: &mut Vec<f32>) {
+        reuse(out, ids.len() * self.d);
         for (r, &id) in ids.iter().enumerate() {
             let row = (id.max(0) as usize).min(self.vocab - 1);
             out[r * self.d..(r + 1) * self.d]
                 .copy_from_slice(&self.w[row * self.d..(row + 1) * self.d]);
         }
-        out
     }
 }
 
@@ -160,19 +340,40 @@ impl Embedding {
 
 /// `x * rsqrt(mean(x^2) + 1e-6) * scale`, normalized over the last dim.
 pub fn rmsnorm(x: &[f32], scale: &[f32], rows: usize, d: usize) -> Vec<f32> {
+    let mut y = Vec::new();
+    rmsnorm_pool_into(threads::global(), x, scale, rows, d, &mut y);
+    y
+}
+
+/// Allocation-free RMSNorm, row blocks across `pool`.
+pub fn rmsnorm_pool_into(pool: &ThreadPool, x: &[f32], scale: &[f32],
+                         rows: usize, d: usize, y: &mut Vec<f32>) {
     assert_eq!(x.len(), rows * d, "rmsnorm input");
     assert_eq!(scale.len(), d, "rmsnorm scale");
-    let mut y = vec![0.0f32; rows * d];
-    for r in 0..rows {
-        let xr = &x[r * d..(r + 1) * d];
-        let ms = xr.iter().map(|v| v * v).sum::<f32>() / d as f32;
-        let inv = 1.0 / (ms + 1e-6).sqrt();
-        let yr = &mut y[r * d..(r + 1) * d];
-        for i in 0..d {
-            yr[i] = xr[i] * inv * scale[i];
+    reuse(y, rows * d);
+    let norm_rows = |ys: &mut [f32], r0: usize, r1: usize| {
+        for r in r0..r1 {
+            let xr = &x[r * d..(r + 1) * d];
+            let ms = xr.iter().map(|v| v * v).sum::<f32>() / d as f32;
+            let inv = 1.0 / (ms + 1e-6).sqrt();
+            let yr = &mut ys[(r - r0) * d..(r - r0 + 1) * d];
+            for i in 0..d {
+                yr[i] = xr[i] * inv * scale[i];
+            }
         }
+    };
+    if rows * d < PAR_MIN_MAP || pool.active() == 1 {
+        norm_rows(y.as_mut_slice(), 0, rows);
+        return;
     }
-    y
+    let block = ROW_BLOCK.max(1);
+    let yp = SlicePtr::new(y.as_mut_slice());
+    pool.run(rows.div_ceil(block), |bi| {
+        let r0 = bi * block;
+        let r1 = (r0 + block).min(rows);
+        let yb = unsafe { yp.slice(r0 * d, (r1 - r0) * d) };
+        norm_rows(yb, r0, r1);
+    });
 }
 
 // ---------------------------------------------------------------------------
@@ -202,27 +403,51 @@ impl Conv4 {
     /// Parallel mode over `(B, T, D)`:
     /// `y_t = silu(b + sum_j w_j * x_(t-k+1+j))`, zero padding on the left.
     pub fn parallel(&self, x: &[f32], batch: usize, t: usize) -> Vec<f32> {
+        let mut y = Vec::new();
+        self.parallel_pool_into(threads::global(), x, batch, t, &mut y);
+        y
+    }
+
+    /// Allocation-free parallel conv, `(bi, ti)` rows across `pool`.
+    pub fn parallel_pool_into(&self, pool: &ThreadPool, x: &[f32],
+                              batch: usize, t: usize, y: &mut Vec<f32>) {
         let d = self.d;
         assert_eq!(x.len(), batch * t * d, "conv input");
-        let mut y = vec![0.0f32; batch * t * d];
-        for bi in 0..batch {
-            for ti in 0..t {
-                let yo = (bi * t + ti) * d;
-                for di in 0..d {
-                    let mut acc = self.b[di];
-                    for j in 0..self.k {
-                        let src = ti as isize + j as isize
-                            - (self.k as isize - 1);
-                        if src >= 0 {
-                            acc += self.w[j * d + di]
-                                * x[(bi * t + src as usize) * d + di];
-                        }
+        reuse(y, batch * t * d);
+        let conv_row = |yr: &mut [f32], bi: usize, ti: usize| {
+            for di in 0..d {
+                let mut acc = self.b[di];
+                for j in 0..self.k {
+                    let src = ti as isize + j as isize
+                        - (self.k as isize - 1);
+                    if src >= 0 {
+                        acc += self.w[j * d + di]
+                            * x[(bi * t + src as usize) * d + di];
                     }
-                    y[yo + di] = silu(acc);
+                }
+                yr[di] = silu(acc);
+            }
+        };
+        let rows = batch * t;
+        if rows * d < PAR_MIN_MAP || pool.active() == 1 {
+            for bi in 0..batch {
+                for ti in 0..t {
+                    let yo = (bi * t + ti) * d;
+                    conv_row(&mut y[yo..yo + d], bi, ti);
                 }
             }
+            return;
         }
-        y
+        let block = ROW_BLOCK.max(1);
+        let yp = SlicePtr::new(y.as_mut_slice());
+        pool.run(rows.div_ceil(block), |blk| {
+            let r0 = blk * block;
+            let r1 = (r0 + block).min(rows);
+            for r in r0..r1 {
+                let yr = unsafe { yp.slice(r * d, d) };
+                conv_row(yr, r / t, r % t);
+            }
+        });
     }
 
     /// The `(B, k-1, D)` buffer a parallel pass leaves behind: the last
@@ -254,11 +479,19 @@ impl Conv4 {
     /// ring buffer `buf: (B, k-1, D)` in place.
     pub fn step(&self, buf: &mut [f32], x_t: &[f32], batch: usize)
                 -> Vec<f32> {
+        let mut y = Vec::new();
+        self.step_into(buf, x_t, batch, &mut y);
+        y
+    }
+
+    /// Allocation-free decode step (sequential — per-token work is tiny).
+    pub fn step_into(&self, buf: &mut [f32], x_t: &[f32], batch: usize,
+                     y: &mut Vec<f32>) {
         let d = self.d;
         let km1 = self.k - 1;
         assert_eq!(buf.len(), batch * km1 * d, "conv buffer");
         assert_eq!(x_t.len(), batch * d, "conv step input");
-        let mut y = vec![0.0f32; batch * d];
+        reuse(y, batch * d);
         for bi in 0..batch {
             for di in 0..d {
                 let mut acc = self.b[di] + self.w[km1 * d + di]
@@ -276,7 +509,6 @@ impl Conv4 {
             let last = (bi * km1 + km1 - 1) * d;
             buf[last..last + d].copy_from_slice(&x_t[bi * d..(bi + 1) * d]);
         }
-        y
     }
 }
 
@@ -292,17 +524,40 @@ pub struct Mlp {
 
 impl Mlp {
     pub fn apply(&self, x: &[f32], rows: usize) -> Vec<f32> {
-        let mut h = self.up.apply(x, rows);
-        for v in h.iter_mut() {
-            *v = gelu(*v);
+        let mut h = Vec::new();
+        let mut y = Vec::new();
+        self.apply_pool_into(threads::global(), x, rows, &mut h, &mut y);
+        y
+    }
+
+    /// Allocation-free MLP: `h` holds the hidden activations, `y` the
+    /// output; both are reused buffers.  The GELU map fans out in fixed
+    /// chunks (thread-count invariant).
+    pub fn apply_pool_into(&self, pool: &ThreadPool, x: &[f32], rows: usize,
+                           h: &mut Vec<f32>, y: &mut Vec<f32>) {
+        self.up.apply_pool_into(pool, x, rows, h);
+        let n = h.len();
+        if n < PAR_MIN_MAP || pool.active() == 1 {
+            for v in h.iter_mut() {
+                *v = gelu(*v);
+            }
+        } else {
+            let hp = SlicePtr::new(h.as_mut_slice());
+            pool.run_chunks(n, MAP_CHUNK, |s, e| {
+                let hs = unsafe { hp.slice(s, e - s) };
+                for v in hs.iter_mut() {
+                    *v = gelu(*v);
+                }
+            });
         }
-        self.down.apply(&h, rows)
+        self.down.apply_pool_into(pool, h, rows, y);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::threads::ThreadPool;
 
     #[test]
     fn dense_matches_hand_computation() {
@@ -311,6 +566,37 @@ mod tests {
                            vec![10.0, 20.0]).unwrap();
         assert_eq!(d.apply(&[1.0, 1.0], 1), vec![14.0, 26.0]);
         assert!(Dense::new(2, 2, vec![0.0; 3], vec![0.0; 2]).is_err());
+    }
+
+    /// The tiled kernel must agree bit-for-bit with the naive loop on
+    /// shapes that straddle every tile/tail boundary.
+    #[test]
+    fn dense_tiling_is_exact() {
+        let mut rng = crate::util::rng::Rng::new(19);
+        let pool = ThreadPool::new(3);
+        for &(rows, d_in, d_out) in &[(1usize, 1usize, 1usize), (3, 5, 7),
+                                      (2, 9, 16), (4, 8, 17), (70, 13, 23),
+                                      (65, 16, 33)] {
+            let dense = Dense::new(
+                d_in, d_out,
+                (0..d_in * d_out).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+                (0..d_out).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+                .unwrap();
+            let x: Vec<f32> = (0..rows * d_in)
+                .map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let mut want = vec![0.0f32; rows * d_out];
+            for r in 0..rows {
+                for o in 0..d_out {
+                    let mut acc = dense.b[o];
+                    for k in 0..d_in {
+                        acc += x[r * d_in + k] * dense.w[k * d_out + o];
+                    }
+                    want[r * d_out + o] = acc;
+                }
+            }
+            let got = dense.apply_pool(&pool, &x, rows);
+            assert_eq!(got, want, "rows={rows} d_in={d_in} d_out={d_out}");
+        }
     }
 
     #[test]
@@ -322,9 +608,28 @@ mod tests {
         assert!((log_g(1.5) - 2.0f32.ln()).abs() < 1e-6);
         // continuity of g at 0 from below
         assert!((g(-1e-4) - 0.5).abs() < 1e-4);
-        // logaddexp basics
+        // logaddexp basics: reference, fast path, f32
         assert!((logaddexp(0.0, 0.0) - std::f64::consts::LN_2).abs() < 1e-12);
         assert_eq!(logaddexp(f64::NEG_INFINITY, 3.0), 3.0);
+        assert!((logaddexp_fast(0.0, 0.0) - std::f64::consts::LN_2).abs()
+                < 1e-6);
+        assert_eq!(logaddexp_fast(f64::NEG_INFINITY, 3.0), 3.0);
+        assert_eq!(logaddexp_fast(3.0, f64::NEG_INFINITY), 3.0);
+        // fast path keeps full f64 absolute precision in the max while
+        // the correction is f32: large-magnitude operands stay exact
+        assert_eq!(logaddexp_fast(5200.0, -5200.0), 5200.0);
+        assert!((logaddexp_fast(-3.0, -3.5) - logaddexp(-3.0, -3.5)).abs()
+                < 1e-6);
+        assert!((logaddexp_f32(0.0, 0.0) - std::f32::consts::LN_2).abs()
+                < 1e-6);
+        assert_eq!(logaddexp_f32(f32::NEG_INFINITY, 3.0), 3.0);
+        assert_eq!(logaddexp_f32(3.0, f32::NEG_INFINITY), 3.0);
+        // the LOG_ZERO sentinel is absorbing, not NaN-producing
+        let lz = super::super::scan::LOG_ZERO;
+        assert!(logaddexp_f32(lz, lz).is_finite());
+        assert_eq!(logaddexp_f32(lz, 0.5), 0.5);
+        assert!(logaddexp_fast(lz as f64, lz as f64).is_finite());
+        assert_eq!(logaddexp_fast(lz as f64, 0.5), 0.5);
     }
 
     #[test]

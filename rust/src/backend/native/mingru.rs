@@ -1,13 +1,25 @@
 //! minGRU mixer (Section 3.1) for the native backend: parallel mode via
 //! the log-space scan (Algorithm 6), sequential decode (Algorithm 5).
 //! Mirrors `python/compile/models/mingru.py`.
+//!
+//! The `*_into` entry points are allocation-free: gate pre-activations,
+//! log-space operands, and the scanned state sequence live in a
+//! [`MixerScratch`]; GEMMs and the scan fan out across the given
+//! [`ThreadPool`].  The plain `parallel`/`step` wrappers keep the PR-1
+//! allocating API on the global pool.
 
-use super::linalg::{g, log_g, sigmoid, softplus, Dense};
+use super::linalg::{self, g, log_g, sigmoid, softplus, Dense};
 use super::scan;
+use super::scratch::MixerScratch;
+use crate::util::threads::{self, SlicePtr, ThreadPool};
 
 /// `g(0) = 0.5` — the positive resting hidden state the log-space
 /// formulation starts from.
 pub const H0_VALUE: f32 = 0.5;
+
+/// Elementwise gate maps fan out in chunks of this many elements
+/// (fixed, so results are thread-count invariant).
+pub(crate) const GATE_CHUNK: usize = 1 << 12;
 
 #[derive(Clone, Debug)]
 pub struct MinGru {
@@ -25,40 +37,80 @@ impl MinGru {
     /// `(y: (B, T, d_model), h_T: (B, d_h))`.
     pub fn parallel(&self, x: &[f32], batch: usize, t: usize, h0: &[f32])
                     -> (Vec<f32>, Vec<f32>) {
+        let mut ms = MixerScratch::default();
+        let mut y = Vec::new();
+        let mut h_last = vec![0.0f32; batch * self.d_hidden()];
+        self.parallel_into(threads::global(), x, batch, t, h0, &mut ms,
+                           &mut y, &mut h_last);
+        (y, h_last)
+    }
+
+    /// Allocation-free parallel mode: `y` receives `(B, T, d_model)`
+    /// outputs, `h_last` (len `B * d_h`) the final hidden state.
+    #[allow(clippy::too_many_arguments)]
+    pub fn parallel_into(&self, pool: &ThreadPool, x: &[f32], batch: usize,
+                         t: usize, h0: &[f32], ms: &mut MixerScratch,
+                         y: &mut Vec<f32>, h_last: &mut [f32]) {
         let rows = batch * t;
-        let k = self.linear_z.apply(x, rows);
-        let pre = self.linear_h.apply(x, rows);
         let dh = self.d_hidden();
+        debug_assert_eq!(h0.len(), batch * dh);
+        debug_assert_eq!(h_last.len(), batch * dh);
+        self.linear_z.apply_pool_into(pool, x, rows, &mut ms.k);
+        self.linear_h.apply_pool_into(pool, x, rows, &mut ms.pre);
         let n = rows * dh;
         // Algorithm 6: log(1-z) = -softplus(k); log z = -softplus(-k)
-        let mut log_a = vec![0.0f32; n];
-        let mut log_b = vec![0.0f32; n];
-        for i in 0..n {
-            log_a[i] = -softplus(k[i]);
-            log_b[i] = -softplus(-k[i]) + log_g(pre[i]);
+        linalg::reuse(&mut ms.log_a, n);
+        linalg::reuse(&mut ms.log_b, n);
+        {
+            let lap = SlicePtr::new(ms.log_a.as_mut_slice());
+            let lbp = SlicePtr::new(ms.log_b.as_mut_slice());
+            let k = &ms.k;
+            let pre = &ms.pre;
+            pool.run_chunks(n, GATE_CHUNK, |s, e| {
+                let la = unsafe { lap.slice(s, e - s) };
+                let lb = unsafe { lbp.slice(s, e - s) };
+                for i in 0..e - s {
+                    la[i] = -softplus(k[s + i]);
+                    lb[i] = -softplus(-k[s + i]) + log_g(pre[s + i]);
+                }
+            });
         }
-        let log_h0: Vec<f32> = h0.iter().map(|&v| v.ln()).collect();
-        let h = scan::scan_log(&log_a, &log_b, &log_h0, batch, t, dh);
-        let y = self.down.apply(&h, rows);
-        let mut h_last = vec![0.0f32; batch * dh];
+        linalg::reuse(&mut ms.log_h0, batch * dh);
+        for (l, &v) in ms.log_h0.iter_mut().zip(h0) {
+            *l = v.ln();
+        }
+        scan::scan_log_pool_into(pool, &ms.log_a, &ms.log_b, &ms.log_h0,
+                                 batch, t, dh, &mut ms.h);
+        self.down.apply_pool_into(pool, &ms.h, rows, y);
         for bi in 0..batch {
             h_last[bi * dh..(bi + 1) * dh].copy_from_slice(
-                &h[(bi * t + t - 1) * dh..(bi * t + t) * dh]);
+                &ms.h[(bi * t + t - 1) * dh..(bi * t + t) * dh]);
         }
-        (y, h_last)
     }
 
     /// One decode step (Algorithm 5): `z = σ(k)`,
     /// `h' = (1-z) ⊙ h + z ⊙ g(pre)`.  Updates `h` in place, returns `y`.
     pub fn step(&self, x_t: &[f32], batch: usize, h: &mut [f32]) -> Vec<f32> {
-        let k = self.linear_z.apply(x_t, batch);
-        let pre = self.linear_h.apply(x_t, batch);
+        let mut ms = MixerScratch::default();
+        let mut y = Vec::new();
+        self.step_into(threads::global(), x_t, batch, h, &mut ms, &mut y);
+        y
+    }
+
+    /// Allocation-free decode step.  The gate update is sequential
+    /// (per-token work is tiny); the three GEMMs parallelize themselves
+    /// by size.
+    pub fn step_into(&self, pool: &ThreadPool, x_t: &[f32], batch: usize,
+                     h: &mut [f32], ms: &mut MixerScratch,
+                     y: &mut Vec<f32>) {
+        self.linear_z.apply_pool_into(pool, x_t, batch, &mut ms.k);
+        self.linear_h.apply_pool_into(pool, x_t, batch, &mut ms.pre);
         debug_assert_eq!(h.len(), batch * self.d_hidden());
         for i in 0..h.len() {
-            let z = sigmoid(k[i]);
-            h[i] = (1.0 - z) * h[i] + z * g(pre[i]);
+            let z = sigmoid(ms.k[i]);
+            h[i] = (1.0 - z) * h[i] + z * g(ms.pre[i]);
         }
-        self.down.apply(h, batch)
+        self.down.apply_pool_into(pool, h, batch, y);
     }
 }
 

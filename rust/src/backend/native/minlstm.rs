@@ -1,10 +1,15 @@
 //! minLSTM mixer (Section 3.2, length-independence scaling) for the native
 //! backend: parallel mode via the log-space scan (Algorithm 8), sequential
 //! decode (Algorithm 7).  Mirrors `python/compile/models/minlstm.py`.
+//!
+//! Like `mingru`, the `*_into` entry points are allocation-free and fan
+//! the GEMMs/gate maps/scan out across the given [`ThreadPool`].
 
-use super::linalg::{g, log_g, sigmoid, softplus, Dense};
-use super::mingru::H0_VALUE;
+use super::linalg::{self, g, log_g, sigmoid, softplus, Dense};
+use super::mingru::{GATE_CHUNK, H0_VALUE};
 use super::scan;
+use super::scratch::MixerScratch;
+use crate::util::threads::{self, SlicePtr, ThreadPool};
 
 #[derive(Clone, Debug)]
 pub struct MinLstm {
@@ -23,30 +28,58 @@ impl MinLstm {
     /// `(y: (B, T, d_model), h_T: (B, d_h))`.
     pub fn parallel(&self, x: &[f32], batch: usize, t: usize, h0: &[f32])
                     -> (Vec<f32>, Vec<f32>) {
+        let mut ms = MixerScratch::default();
+        let mut y = Vec::new();
+        let mut h_last = vec![0.0f32; batch * self.d_hidden()];
+        self.parallel_into(threads::global(), x, batch, t, h0, &mut ms,
+                           &mut y, &mut h_last);
+        (y, h_last)
+    }
+
+    /// Allocation-free parallel mode (see [`super::mingru::MinGru`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn parallel_into(&self, pool: &ThreadPool, x: &[f32], batch: usize,
+                         t: usize, h0: &[f32], ms: &mut MixerScratch,
+                         y: &mut Vec<f32>, h_last: &mut [f32]) {
         let rows = batch * t;
-        let p = self.linear_f.apply(x, rows);
-        let k = self.linear_i.apply(x, rows);
-        let pre = self.linear_h.apply(x, rows);
         let dh = self.d_hidden();
+        debug_assert_eq!(h0.len(), batch * dh);
+        debug_assert_eq!(h_last.len(), batch * dh);
+        self.linear_f.apply_pool_into(pool, x, rows, &mut ms.f);
+        self.linear_i.apply_pool_into(pool, x, rows, &mut ms.k);
+        self.linear_h.apply_pool_into(pool, x, rows, &mut ms.pre);
         let n = rows * dh;
         // Algorithm 8: diff = softplus(-p) - softplus(-k);
         //   log f' = -softplus(diff); log i' = -softplus(-diff)
-        let mut log_a = vec![0.0f32; n];
-        let mut log_b = vec![0.0f32; n];
-        for i in 0..n {
-            let diff = softplus(-p[i]) - softplus(-k[i]);
-            log_a[i] = -softplus(diff);
-            log_b[i] = -softplus(-diff) + log_g(pre[i]);
+        linalg::reuse(&mut ms.log_a, n);
+        linalg::reuse(&mut ms.log_b, n);
+        {
+            let lap = SlicePtr::new(ms.log_a.as_mut_slice());
+            let lbp = SlicePtr::new(ms.log_b.as_mut_slice());
+            let p = &ms.f;
+            let k = &ms.k;
+            let pre = &ms.pre;
+            pool.run_chunks(n, GATE_CHUNK, |s, e| {
+                let la = unsafe { lap.slice(s, e - s) };
+                let lb = unsafe { lbp.slice(s, e - s) };
+                for i in 0..e - s {
+                    let diff = softplus(-p[s + i]) - softplus(-k[s + i]);
+                    la[i] = -softplus(diff);
+                    lb[i] = -softplus(-diff) + log_g(pre[s + i]);
+                }
+            });
         }
-        let log_h0: Vec<f32> = h0.iter().map(|&v| v.ln()).collect();
-        let h = scan::scan_log(&log_a, &log_b, &log_h0, batch, t, dh);
-        let y = self.down.apply(&h, rows);
-        let mut h_last = vec![0.0f32; batch * dh];
+        linalg::reuse(&mut ms.log_h0, batch * dh);
+        for (l, &v) in ms.log_h0.iter_mut().zip(h0) {
+            *l = v.ln();
+        }
+        scan::scan_log_pool_into(pool, &ms.log_a, &ms.log_b, &ms.log_h0,
+                                 batch, t, dh, &mut ms.h);
+        self.down.apply_pool_into(pool, &ms.h, rows, y);
         for bi in 0..batch {
             h_last[bi * dh..(bi + 1) * dh].copy_from_slice(
-                &h[(bi * t + t - 1) * dh..(bi * t + t) * dh]);
+                &ms.h[(bi * t + t - 1) * dh..(bi * t + t) * dh]);
         }
-        (y, h_last)
     }
 
     /// One decode step (Algorithm 7): `f' = f/(f+i)`, `i' = i/(f+i)`,
@@ -58,17 +91,27 @@ impl MinLstm {
     /// naive `f/(f+i)` yields `0/0 = NaN` once both sigmoids underflow
     /// (pre-activations below ≈ -103 in f32).
     pub fn step(&self, x_t: &[f32], batch: usize, h: &mut [f32]) -> Vec<f32> {
-        let pf = self.linear_f.apply(x_t, batch);
-        let ki = self.linear_i.apply(x_t, batch);
-        let pre = self.linear_h.apply(x_t, batch);
+        let mut ms = MixerScratch::default();
+        let mut y = Vec::new();
+        self.step_into(threads::global(), x_t, batch, h, &mut ms, &mut y);
+        y
+    }
+
+    /// Allocation-free decode step.
+    pub fn step_into(&self, pool: &ThreadPool, x_t: &[f32], batch: usize,
+                     h: &mut [f32], ms: &mut MixerScratch,
+                     y: &mut Vec<f32>) {
+        self.linear_f.apply_pool_into(pool, x_t, batch, &mut ms.f);
+        self.linear_i.apply_pool_into(pool, x_t, batch, &mut ms.k);
+        self.linear_h.apply_pool_into(pool, x_t, batch, &mut ms.pre);
         debug_assert_eq!(h.len(), batch * self.d_hidden());
         for idx in 0..h.len() {
-            let diff = softplus(-pf[idx]) - softplus(-ki[idx]);
+            let diff = softplus(-ms.f[idx]) - softplus(-ms.k[idx]);
             let fp = sigmoid(-diff);
             let ip = sigmoid(diff);
-            h[idx] = fp * h[idx] + ip * g(pre[idx]);
+            h[idx] = fp * h[idx] + ip * g(ms.pre[idx]);
         }
-        self.down.apply(h, batch)
+        self.down.apply_pool_into(pool, h, batch, y);
     }
 }
 

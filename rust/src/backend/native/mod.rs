@@ -8,7 +8,9 @@ pub mod mingru;
 pub mod minlstm;
 pub mod model;
 pub mod scan;
+pub mod scratch;
 
 pub use mingru::{MinGru, H0_VALUE};
 pub use minlstm::MinLstm;
 pub use model::{NativeInit, NativeModel, NativeState};
+pub use scratch::{MixerScratch, NativeScratch};

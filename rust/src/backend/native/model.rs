@@ -21,10 +21,12 @@ use anyhow::{anyhow, bail, Result};
 use crate::tensor::{Tensor, TensorData};
 use crate::util::io::{self, NamedTensor};
 use crate::util::rng::Rng;
+use crate::util::threads::{self, ThreadPool};
 
 use super::linalg::{self, Conv4, Dense, Embedding, Mlp, CONV_K};
 use super::mingru::{MinGru, H0_VALUE};
 use super::minlstm::MinLstm;
+use super::scratch::NativeScratch;
 
 // ---------------------------------------------------------------------------
 // parameter tree
@@ -51,18 +53,27 @@ impl MixerParams {
         }
     }
 
-    fn parallel(&self, x: &[f32], batch: usize, t: usize, h0: &[f32])
-                -> (Vec<f32>, Vec<f32>) {
+    #[allow(clippy::too_many_arguments)]
+    fn parallel_into(&self, pool: &ThreadPool, x: &[f32], batch: usize,
+                     t: usize, h0: &[f32],
+                     ms: &mut super::scratch::MixerScratch,
+                     y: &mut Vec<f32>, h_last: &mut [f32]) {
         match self {
-            MixerParams::MinGru(m) => m.parallel(x, batch, t, h0),
-            MixerParams::MinLstm(m) => m.parallel(x, batch, t, h0),
+            MixerParams::MinGru(m) =>
+                m.parallel_into(pool, x, batch, t, h0, ms, y, h_last),
+            MixerParams::MinLstm(m) =>
+                m.parallel_into(pool, x, batch, t, h0, ms, y, h_last),
         }
     }
 
-    fn step(&self, x_t: &[f32], batch: usize, h: &mut [f32]) -> Vec<f32> {
+    fn step_into(&self, pool: &ThreadPool, x_t: &[f32], batch: usize,
+                 h: &mut [f32], ms: &mut super::scratch::MixerScratch,
+                 y: &mut Vec<f32>) {
         match self {
-            MixerParams::MinGru(m) => m.step(x_t, batch, h),
-            MixerParams::MinLstm(m) => m.step(x_t, batch, h),
+            MixerParams::MinGru(m) =>
+                m.step_into(pool, x_t, batch, h, ms, y),
+            MixerParams::MinLstm(m) =>
+                m.step_into(pool, x_t, batch, h, ms, y),
         }
     }
 }
@@ -101,12 +112,15 @@ pub struct LayerState {
     pub conv: Option<Vec<f32>>,
 }
 
-/// Full decode state for a batch of lanes.
+/// Full decode state for a batch of lanes.  Carries the reusable
+/// [`NativeScratch`] so decode through the by-value `Backend::decode_step`
+/// API stays allocation-free at steady state.
 #[derive(Clone, Debug)]
 pub struct NativeState {
     pub batch: usize,
     pub pos: usize,
     pub layers: Vec<LayerState>,
+    pub scratch: NativeScratch,
 }
 
 // ---------------------------------------------------------------------------
@@ -417,23 +431,47 @@ impl NativeModel {
             h: vec![H0_VALUE; batch * blk.mixer.d_hidden()],
             conv: blk.conv.as_ref().map(|c| c.zero_state(batch)),
         }).collect();
-        NativeState { batch, pos: 0, layers }
+        NativeState { batch, pos: 0, layers,
+                      scratch: NativeScratch::default() }
     }
 
-    fn embed_rows(&self, x: &Tensor, rows: usize) -> Result<Vec<f32>> {
+    /// Reset one decode lane to the fresh position-0 state (mixer hidden
+    /// back to `g(0)`, conv ring buffer zeroed) without touching the other
+    /// lanes — the primitive behind continuous-batching lane refill in
+    /// `coordinator::server`.
+    pub fn reset_lane(&self, state: &mut NativeState, lane: usize)
+                      -> Result<()> {
+        if lane >= state.batch {
+            bail!("reset_lane: lane {lane} >= batch {}", state.batch);
+        }
+        for (blk, st) in self.blocks.iter().zip(state.layers.iter_mut()) {
+            let dh = blk.mixer.d_hidden();
+            st.h[lane * dh..(lane + 1) * dh].fill(H0_VALUE);
+            if let (Some(conv), Some(buf)) = (&blk.conv, st.conv.as_mut()) {
+                let w = (conv.k - 1) * conv.d;
+                buf[lane * w..(lane + 1) * w].fill(0.0);
+            }
+        }
+        Ok(())
+    }
+
+    fn embed_rows_into(&self, x: &Tensor, rows: usize, out: &mut Vec<f32>)
+                       -> Result<()> {
         match (&self.input, &x.data) {
             (InputLayer::Embed(e), TensorData::I32(ids)) => {
                 if ids.len() != rows {
                     bail!("expected {rows} token ids, got {}", ids.len());
                 }
-                Ok(e.lookup(ids))
+                e.lookup_into(ids, out);
+                Ok(())
             }
             (InputLayer::Proj(p), TensorData::F32(v)) => {
                 if v.len() != rows * p.d_in {
                     bail!("expected {rows}x{} features, got {}", p.d_in,
                           v.len());
                 }
-                Ok(p.apply(v, rows))
+                p.apply_into(v, rows, out);
+                Ok(())
             }
             (InputLayer::Embed(_), _) => {
                 bail!("model embeds token ids; got f32 input")
@@ -446,35 +484,54 @@ impl NativeModel {
 
     /// One decode step.  `x_t`: `(B,)` i32 tokens or `(B, F)` f32 features.
     /// Returns `(logits: (B, vocab_out), state')`.
+    ///
+    /// All intermediates live in the state's [`NativeScratch`]; at steady
+    /// state the only heap allocation is the returned logits tensor.
     pub fn step(&self, x_t: &Tensor, mut state: NativeState)
                 -> Result<(Tensor, NativeState)> {
         let batch = state.batch;
         if x_t.dims.first().copied().unwrap_or(0) != batch {
             bail!("step input batch {:?} != state batch {batch}", x_t.dims);
         }
+        let pool = threads::global();
         let d = self.d_model;
-        let mut h = self.embed_rows(x_t, batch)?;
-        for (blk, st) in self.blocks.iter().zip(state.layers.iter_mut()) {
-            let mut u = linalg::rmsnorm(&h, &blk.ln1, batch, d);
-            if let (Some(conv), Some(buf)) = (&blk.conv, st.conv.as_mut()) {
-                u = conv.step(buf, &u, batch);
+        {
+            let NativeState { layers, scratch: s, .. } = &mut state;
+            self.embed_rows_into(x_t, batch, &mut s.h)?;
+            for (blk, st) in self.blocks.iter().zip(layers.iter_mut()) {
+                linalg::rmsnorm_pool_into(pool, &s.h, &blk.ln1, batch, d,
+                                          &mut s.u);
+                if let (Some(conv), Some(buf)) = (&blk.conv,
+                                                  st.conv.as_mut()) {
+                    conv.step_into(buf, &s.u, batch, &mut s.y);
+                    std::mem::swap(&mut s.u, &mut s.y);
+                }
+                blk.mixer.step_into(pool, &s.u, batch, &mut st.h,
+                                    &mut s.mixer, &mut s.y);
+                linalg::add_assign(&mut s.h, &s.y);
+                if let (Some(ln2), Some(mlp)) = (&blk.ln2, &blk.mlp) {
+                    linalg::rmsnorm_pool_into(pool, &s.h, ln2, batch, d,
+                                              &mut s.u);
+                    mlp.apply_pool_into(pool, &s.u, batch, &mut s.mlp_h,
+                                        &mut s.z);
+                    linalg::add_assign(&mut s.h, &s.z);
+                }
             }
-            let y = blk.mixer.step(&u, batch, &mut st.h);
-            linalg::add_assign(&mut h, &y);
-            if let (Some(ln2), Some(mlp)) = (&blk.ln2, &blk.mlp) {
-                let z = mlp.apply(&linalg::rmsnorm(&h, ln2, batch, d), batch);
-                linalg::add_assign(&mut h, &z);
-            }
+            linalg::rmsnorm_pool_into(pool, &s.h, &self.ln_f, batch, d,
+                                      &mut s.u);
         }
-        let logits = self.head.apply(
-            &linalg::rmsnorm(&h, &self.ln_f, batch, d), batch);
+        let mut logits = Vec::new(); // handed to the caller inside a Tensor
+        self.head.apply_pool_into(pool, &state.scratch.u, batch,
+                                  &mut logits);
         state.pos += 1;
         Ok((Tensor::f32(vec![batch, self.vocab_out], logits), state))
     }
 
     /// Parallel forward over a whole context.  `x`: `(B, T)` i32 or
     /// `(B, T, F)` f32.  Returns all-position logits `(B, T, vocab_out)`
-    /// and the decode state after the last position.
+    /// and the decode state after the last position.  Per-layer work
+    /// (GEMMs, gate maps, the log-space scan, RMSNorm, conv) fans out
+    /// across the global thread pool.
     pub fn forward(&self, x: &Tensor) -> Result<(Tensor, NativeState)> {
         let (batch, t) = match (x.dims.len(), &x.data) {
             (2, TensorData::I32(_)) => (x.dims[0], x.dims[1]),
@@ -485,33 +542,50 @@ impl NativeModel {
         if t == 0 {
             bail!("empty sequence");
         }
+        let pool = threads::global();
         let rows = batch * t;
         let d = self.d_model;
-        let mut h = self.embed_rows(x, rows)?;
+        let mut s = NativeScratch::default();
+        self.embed_rows_into(x, rows, &mut s.h)?;
         let mut layers = Vec::with_capacity(self.blocks.len());
         for blk in &self.blocks {
-            let mut u = linalg::rmsnorm(&h, &blk.ln1, rows, d);
+            linalg::rmsnorm_pool_into(pool, &s.h, &blk.ln1, rows, d,
+                                      &mut s.u);
             let conv_state = match &blk.conv {
                 Some(conv) => {
-                    let st = conv.final_state(&u, batch, t);
-                    u = conv.parallel(&u, batch, t);
+                    let st = conv.final_state(&s.u, batch, t);
+                    conv.parallel_pool_into(pool, &s.u, batch, t, &mut s.y);
+                    std::mem::swap(&mut s.u, &mut s.y);
                     Some(st)
                 }
                 None => None,
             };
-            let h0 = vec![H0_VALUE; batch * blk.mixer.d_hidden()];
-            let (y, h_last) = blk.mixer.parallel(&u, batch, t, &h0);
-            linalg::add_assign(&mut h, &y);
+            let dh = blk.mixer.d_hidden();
+            let h0 = vec![H0_VALUE; batch * dh];
+            let mut h_last = vec![0.0f32; batch * dh];
+            blk.mixer.parallel_into(pool, &s.u, batch, t, &h0,
+                                    &mut s.mixer, &mut s.y, &mut h_last);
+            linalg::add_assign(&mut s.h, &s.y);
             if let (Some(ln2), Some(mlp)) = (&blk.ln2, &blk.mlp) {
-                let z = mlp.apply(&linalg::rmsnorm(&h, ln2, rows, d), rows);
-                linalg::add_assign(&mut h, &z);
+                linalg::rmsnorm_pool_into(pool, &s.h, ln2, rows, d,
+                                          &mut s.u);
+                mlp.apply_pool_into(pool, &s.u, rows, &mut s.mlp_h,
+                                    &mut s.z);
+                linalg::add_assign(&mut s.h, &s.z);
             }
             layers.push(LayerState { h: h_last, conv: conv_state });
         }
-        let logits = self.head.apply(
-            &linalg::rmsnorm(&h, &self.ln_f, rows, d), rows);
+        linalg::rmsnorm_pool_into(pool, &s.h, &self.ln_f, rows, d,
+                                  &mut s.u);
+        let mut logits = Vec::new();
+        self.head.apply_pool_into(pool, &s.u, rows, &mut logits);
+        // Drop the prefill-sized scratch (O(B*T*d) buffers) instead of
+        // pinning it inside the decode state for its whole lifetime —
+        // decode only needs O(B*d) buffers and re-warms them on the
+        // first step.
         Ok((Tensor::f32(vec![batch, t, self.vocab_out], logits),
-            NativeState { batch, pos: t, layers }))
+            NativeState { batch, pos: t, layers,
+                          scratch: NativeScratch::default() }))
     }
 
     /// Parallel prefill: last-position logits `(B, vocab_out)` + state,

@@ -6,11 +6,20 @@
 //!
 //! All variants take flat row-major `(B, T, D)` coefficient/value slices
 //! and a `(B, D)` initial state, and return the `(B, T, D)` state sequence
-//! `h_1..h_T`.  Log-space accumulation runs in f64 internally — on CPU
-//! this is nearly free and removes the catastrophic-cancellation worry the
-//! TPU kernel handles with padding conventions.
+//! `h_1..h_T`.
+//!
+//! The production chunked scan (`scan_log`) fans the independent `B×D`
+//! channel grid out across a [`ThreadPool`] in fixed blocks of
+//! [`D_BLOCK`] channels, and runs its log-sum-exps through
+//! `linalg::logaddexp_fast` — f64 carriers (the `A*` prefix can drift to
+//! ±10³, where any f32 accumulator loses absolute precision) with the
+//! transcendentals dropped to f32, where the cycles actually go.
+//! Per-channel operation order is fixed, so results are bit-for-bit
+//! identical across thread counts.  `scan_log_seq` keeps full-f64
+//! accumulation as the reference oracle.
 
-use super::linalg::logaddexp;
+use super::linalg::{logaddexp, logaddexp_fast};
+use crate::util::threads::{self, SlicePtr, ThreadPool};
 
 /// Stand-in for `log(0)` that keeps padded/zero positions inert without
 /// producing `inf - inf = nan` (mirrors `scan.py::LOG_ZERO`).
@@ -19,28 +28,61 @@ pub const LOG_ZERO: f32 = -1e30;
 /// Chunk length of the chunked scan (the Pallas kernel's `time_chunk`).
 pub const TIME_CHUNK: usize = 64;
 
+/// Channels per parallel task of the chunked/linear scans.  A fixed
+/// constant (never derived from the thread count) so task boundaries —
+/// and therefore results — are independent of parallelism.
+pub const D_BLOCK: usize = 32;
+
+/// Below this many `B*T*D` elements a scan runs inline on the caller.
+const PAR_MIN: usize = 1 << 14;
+
 /// Sequential real-space scan: `h_t = a_t * h_{t-1} + b_t`, `h_0 = h0`.
 pub fn scan_linear(a: &[f32], b: &[f32], h0: &[f32], batch: usize, t: usize,
                    d: usize) -> Vec<f32> {
+    scan_linear_pool(threads::global(), a, b, h0, batch, t, d)
+}
+
+/// [`scan_linear`] on an explicit pool: the `B×D` channel grid splits
+/// into `(batch, D_BLOCK)` tasks, each sequential over time.
+pub fn scan_linear_pool(pool: &ThreadPool, a: &[f32], b: &[f32], h0: &[f32],
+                        batch: usize, t: usize, d: usize) -> Vec<f32> {
     assert_eq!(a.len(), batch * t * d, "scan_linear a");
     assert_eq!(b.len(), batch * t * d, "scan_linear b");
     assert_eq!(h0.len(), batch * d, "scan_linear h0");
     let mut out = vec![0.0f32; batch * t * d];
-    for bi in 0..batch {
-        let mut v: Vec<f32> = h0[bi * d..(bi + 1) * d].to_vec();
+    let blocks = d.div_ceil(D_BLOCK);
+    let op = SlicePtr::new(out.as_mut_slice());
+    let task = |idx: usize| {
+        let bi = idx / blocks;
+        let d0 = (idx % blocks) * D_BLOCK;
+        let d1 = (d0 + D_BLOCK).min(d);
+        let w = d1 - d0;
+        let mut v = [0.0f32; D_BLOCK];
+        v[..w].copy_from_slice(&h0[bi * d + d0..bi * d + d1]);
         for ti in 0..t {
-            let off = (bi * t + ti) * d;
-            for di in 0..d {
-                v[di] = a[off + di] * v[di] + b[off + di];
-                out[off + di] = v[di];
+            let off = (bi * t + ti) * d + d0;
+            let av = &a[off..off + w];
+            let bv = &b[off..off + w];
+            let ov = unsafe { op.slice(off, w) };
+            for j in 0..w {
+                v[j] = av[j] * v[j] + bv[j];
+                ov[j] = v[j];
             }
         }
+    };
+    if batch * t * d < PAR_MIN || pool.active() == 1 {
+        for idx in 0..batch * blocks {
+            task(idx);
+        }
+    } else {
+        pool.run(batch * blocks, task);
     }
     out
 }
 
 /// Sequential log-space scan (Appendix B.1):
 /// `log h_t = logaddexp(log_a_t + log h_{t-1}, log_b_t)`; returns real h.
+/// Full-f64 accumulation — the reference oracle for `scan_log`.
 pub fn scan_log_seq(log_a: &[f32], log_b: &[f32], log_h0: &[f32],
                     batch: usize, t: usize, d: usize) -> Vec<f32> {
     assert_eq!(log_a.len(), batch * t * d, "scan_log_seq log_a");
@@ -76,48 +118,108 @@ pub fn scan_log_seq(log_a: &[f32], log_b: &[f32], log_h0: &[f32],
 /// and at a chunk boundary `carry_A += A_last`, `carry_S = S_last`.
 pub fn scan_log(log_a: &[f32], log_b: &[f32], log_h0: &[f32], batch: usize,
                 t: usize, d: usize) -> Vec<f32> {
+    scan_log_pool(threads::global(), log_a, log_b, log_h0, batch, t, d)
+}
+
+/// [`scan_log`] on an explicit pool.
+pub fn scan_log_pool(pool: &ThreadPool, log_a: &[f32], log_b: &[f32],
+                     log_h0: &[f32], batch: usize, t: usize, d: usize)
+                     -> Vec<f32> {
+    let mut out = Vec::new();
+    scan_log_pool_into(pool, log_a, log_b, log_h0, batch, t, d, &mut out);
+    out
+}
+
+/// Allocation-free core of the chunked scan.
+#[allow(clippy::too_many_arguments)]
+pub fn scan_log_pool_into(pool: &ThreadPool, log_a: &[f32], log_b: &[f32],
+                          log_h0: &[f32], batch: usize, t: usize, d: usize,
+                          out: &mut Vec<f32>) {
     assert_eq!(log_a.len(), batch * t * d, "scan_log log_a");
     assert_eq!(log_b.len(), batch * t * d, "scan_log log_b");
     assert_eq!(log_h0.len(), batch * d, "scan_log log_h0");
-    let mut out = vec![0.0f32; batch * t * d];
-    for bi in 0..batch {
-        for di in 0..d {
-            let mut carry_a = 0.0f64;
-            let mut carry_s = log_h0[bi * d + di] as f64;
-            let mut chunk_start = 0usize;
-            while chunk_start < t {
-                let chunk_end = (chunk_start + TIME_CHUNK).min(t);
-                let mut a_star = 0.0f64;
-                let mut p = f64::NEG_INFINITY;
-                let mut s = carry_s;
-                for ti in chunk_start..chunk_end {
-                    let off = (bi * t + ti) * d + di;
-                    a_star += log_a[off] as f64;
-                    let x = log_b[off] as f64 - a_star;
-                    p = logaddexp(p, x);
-                    s = logaddexp(carry_s, p - carry_a);
-                    out[off] = (carry_a + a_star + s).exp() as f32;
-                }
-                carry_a += a_star;
-                carry_s = s;
-                chunk_start = chunk_end;
+    super::linalg::reuse(out, batch * t * d);
+    let blocks = d.div_ceil(D_BLOCK);
+    let op = SlicePtr::new(out.as_mut_slice());
+    let task = |idx: usize| {
+        let bi = idx / blocks;
+        let d0 = (idx % blocks) * D_BLOCK;
+        let d1 = (d0 + D_BLOCK).min(d);
+        scan_log_block(log_a, log_b, log_h0, bi, t, d, d0, d1, &op);
+    };
+    if batch * t * d < PAR_MIN || pool.active() == 1 {
+        for idx in 0..batch * blocks {
+            task(idx);
+        }
+    } else {
+        pool.run(batch * blocks, task);
+    }
+}
+
+/// One `(batch row, channel block)` of the chunked scan: time-major over
+/// the block so reads/writes stay contiguous.  All carriers (`A*` prefix,
+/// prefix log-sum-exp `p`, carries) are f64 — the recombination
+/// `carry_A + A_i + S_i` cancels a potentially huge `A*` against `S_i`,
+/// which must happen at f64 absolute precision — while every
+/// transcendental runs in f32 via `logaddexp_fast` and a final `expf`.
+#[allow(clippy::too_many_arguments)]
+fn scan_log_block(log_a: &[f32], log_b: &[f32], log_h0: &[f32], bi: usize,
+                  t: usize, d: usize, d0: usize, d1: usize,
+                  out: &SlicePtr<f32>) {
+    let w = d1 - d0;
+    let mut carry_a = [0.0f64; D_BLOCK];
+    let mut carry_s = [0.0f64; D_BLOCK];
+    for j in 0..w {
+        carry_s[j] = log_h0[bi * d + d0 + j] as f64;
+    }
+    let mut a_star = [0.0f64; D_BLOCK];
+    let mut p = [0.0f64; D_BLOCK];
+    let mut s_last = [0.0f64; D_BLOCK];
+    let mut chunk_start = 0usize;
+    while chunk_start < t {
+        let chunk_end = (chunk_start + TIME_CHUNK).min(t);
+        for j in 0..w {
+            a_star[j] = 0.0;
+            p[j] = f64::NEG_INFINITY;
+            s_last[j] = carry_s[j];
+        }
+        for ti in chunk_start..chunk_end {
+            let off = (bi * t + ti) * d + d0;
+            let la = &log_a[off..off + w];
+            let lb = &log_b[off..off + w];
+            let ov = unsafe { out.slice(off, w) };
+            for j in 0..w {
+                a_star[j] += la[j] as f64;
+                let x = lb[j] as f64 - a_star[j];
+                p[j] = logaddexp_fast(p[j], x);
+                let s = logaddexp_fast(carry_s[j], p[j] - carry_a[j]);
+                ov[j] = ((carry_a[j] + a_star[j] + s) as f32).exp();
+                s_last[j] = s;
             }
         }
+        for j in 0..w {
+            carry_a[j] += a_star[j];
+            carry_s[j] = s_last[j];
+        }
+        chunk_start = chunk_end;
     }
-    out
 }
 
 #[cfg(test)]
 mod tests {
     // Agreement with the naive sequential recurrence (and the a_t → 0/1
-    // edge cases) is property-tested in rust/tests/substrate_props.rs;
-    // here we pin only the seam the chunked form introduces.
+    // edge cases) is property-tested in rust/tests/substrate_props.rs,
+    // and thread-count invariance in rust/tests/parallel_props.rs; here
+    // we pin only the seam the chunked form introduces.
     use super::*;
     use crate::util::rng::Rng;
 
     #[test]
     fn chunk_boundaries_are_seamless() {
-        // T straddling several chunks with adversarial magnitudes
+        // T straddling several chunks with adversarial magnitudes; the
+        // fast-path chunked form must track the full-f64 sequential
+        // oracle to 1e-5 relative (observed worst ~1e-7: the f32 rounding
+        // only touches logaddexp correction terms, never the carriers)
         let mut rng = Rng::new(22);
         let (batch, t, d) = (1usize, 3 * TIME_CHUNK + 7, 2usize);
         let la: Vec<f32> = (0..batch * t * d)
@@ -131,6 +233,26 @@ mod tests {
             let tol = 1e-5 * seq[i].abs().max(1.0);
             assert!((seq[i] - chunked[i]).abs() < tol,
                     "[{i}] {} vs {}", seq[i], chunked[i]);
+        }
+    }
+
+    #[test]
+    fn strong_forgetting_cancellation_is_exact() {
+        // a→0 with long T drives the A* prefix to ±10³; h_t must still
+        // equal b_t to 1e-5 relative — this is the case that rules out
+        // f32 carriers in the fast path (they lose ~|A*|·6e-8 absolute)
+        let mut rng = Rng::new(91);
+        let (batch, t, d) = (1usize, 2 * TIME_CHUNK + 3, 3usize);
+        let n = batch * t * d;
+        let la = vec![-40.0f32; n];
+        let lb: Vec<f32> = (0..n).map(|_| rng.range_f32(-3.0, 2.0))
+            .collect();
+        let lh0 = vec![0.0f32; batch * d];
+        let h = scan_log(&la, &lb, &lh0, batch, t, d);
+        for i in 0..n {
+            let want = lb[i].exp();
+            assert!((h[i] - want).abs() < 1e-5 * want.max(1.0),
+                    "[{i}] {} vs {want}", h[i]);
         }
     }
 }

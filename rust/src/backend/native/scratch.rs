@@ -1,0 +1,46 @@
+//! Reusable scratch buffers for the native backend's hot paths.
+//!
+//! Every intermediate a forward/decode pass needs lives here and is
+//! recycled across calls (`linalg::reuse` clears + refits without
+//! reallocating once capacities warm up).  [`super::model::NativeState`]
+//! owns a [`NativeScratch`], so steady-state decode through the
+//! `runtime::Backend` trait performs **zero heap allocations** apart from
+//! the logits tensor handed back to the caller.
+
+/// Buffers used inside a mixer (minGRU/minLSTM) parallel pass or decode
+/// step: gate pre-activations, log-space scan operands, and the scanned
+/// state sequence.
+#[derive(Clone, Debug, Default)]
+pub struct MixerScratch {
+    /// `linear_z` (minGRU) / `linear_i` (minLSTM) pre-activations.
+    pub k: Vec<f32>,
+    /// `linear_h` pre-activations (candidate state).
+    pub pre: Vec<f32>,
+    /// `linear_f` pre-activations (minLSTM only).
+    pub f: Vec<f32>,
+    /// Log-space scan coefficients `log a_t`.
+    pub log_a: Vec<f32>,
+    /// Log-space scan values `log b_t`.
+    pub log_b: Vec<f32>,
+    /// Log initial state `log h_0`.
+    pub log_h0: Vec<f32>,
+    /// Scanned hidden-state sequence `(B, T, d_h)`.
+    pub h: Vec<f32>,
+}
+
+/// Full per-pass scratch: residual stream, normalized inputs, block
+/// outputs, MLP hidden activations, and the nested [`MixerScratch`].
+#[derive(Clone, Debug, Default)]
+pub struct NativeScratch {
+    /// Residual stream `(rows, d_model)`.
+    pub h: Vec<f32>,
+    /// RMSNorm output / block input `(rows, d_model)`.
+    pub u: Vec<f32>,
+    /// Mixer (or conv) output `(rows, d_model)`.
+    pub y: Vec<f32>,
+    /// MLP output `(rows, d_model)`.
+    pub z: Vec<f32>,
+    /// MLP hidden activations `(rows, mlp_mult * d_model)`.
+    pub mlp_h: Vec<f32>,
+    pub mixer: MixerScratch,
+}

@@ -7,6 +7,7 @@ pub mod chomsky_lra;
 pub mod fig1;
 pub mod inference;
 pub mod lm;
+pub mod native_throughput;
 pub mod rl;
 pub mod selective;
 

@@ -1,0 +1,288 @@
+//! Native-backend throughput benchmark: the repo's perf trajectory for
+//! the pure-Rust serving path.
+//!
+//! Measures, on a seeded random-init backbone (conv + MLP, the full block
+//! structure):
+//!
+//! * **prefill** — parallel context ingestion, tokens/sec;
+//! * **decode**  — steady-state lockstep decode, tokens/sec and p95 step
+//!   latency, across batch sizes × {1 thread, all threads};
+//! * **serve**   — the dynamic-batching loop end to end (continuous lane
+//!   refill), tokens/sec + mean/p95 request latency;
+//!
+//! and derives `speedup_batched_threaded`: threaded batch-N decode over
+//! single-threaded batch-1 decode — the "fully parallelizable in
+//! practice" number the paper's pitch implies.  Results are written as
+//! JSON to `BENCH_native.json` (CI uploads it as an artifact and fails on
+//! >30% tokens/sec regression against the committed baseline).
+//!
+//! Entry points: `cargo bench --bench native_throughput` (quick mode;
+//! MINRNN_FULL=1 for full) and `minrnn bench` (see `coordinator`).
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::backend::{NativeBackend, NativeInit, NativeModel};
+use crate::coordinator::server::{self, Request, ServeOpts};
+use crate::log_info;
+use crate::runtime::Backend;
+use crate::tensor::Tensor;
+use crate::util::bench::{bench, BenchConfig};
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+use crate::util::threads;
+
+/// Benchmark profile; `quick()` keeps CI smoke runs in seconds,
+/// `full()` is the number to quote.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub quick: bool,
+    pub kind: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub vocab: usize,
+    pub prefill_batch: usize,
+    pub prefill_t: usize,
+    pub decode_batches: Vec<usize>,
+    pub serve_requests: usize,
+    pub serve_tokens: usize,
+    pub max_batch: usize,
+    /// Output JSON path (`None` = don't write).
+    pub out: Option<PathBuf>,
+}
+
+impl Config {
+    pub fn quick() -> Config {
+        Config {
+            quick: true,
+            kind: "mingru".to_string(),
+            n_layers: 4,
+            d_model: 128,
+            vocab: 64,
+            prefill_batch: 4,
+            prefill_t: 64,
+            decode_batches: vec![1, 8],
+            serve_requests: 12,
+            serve_tokens: 12,
+            max_batch: 8,
+            out: Some(PathBuf::from("BENCH_native.json")),
+        }
+    }
+
+    pub fn full() -> Config {
+        Config {
+            quick: false,
+            kind: "mingru".to_string(),
+            n_layers: 4,
+            d_model: 256,
+            vocab: 64,
+            prefill_batch: 8,
+            prefill_t: 256,
+            decode_batches: vec![1, 8, 32],
+            serve_requests: 24,
+            serve_tokens: 32,
+            max_batch: 8,
+            out: Some(PathBuf::from("BENCH_native.json")),
+        }
+    }
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config::quick()
+    }
+}
+
+/// Run the benchmark, log a summary, optionally write the JSON report,
+/// and return it.
+pub fn run(cfg: &Config) -> Result<Json> {
+    let bc = if cfg.quick {
+        BenchConfig::quick()
+    } else {
+        BenchConfig::default()
+    };
+    let model = NativeModel::init_random(&NativeInit {
+        kind: cfg.kind.clone(),
+        n_layers: cfg.n_layers,
+        d_model: cfg.d_model,
+        expansion: 1,
+        vocab_in: Some(cfg.vocab),
+        input_dim: None,
+        vocab_out: cfg.vocab,
+        conv: true,
+        mlp: true,
+        mlp_mult: 4,
+        forget_bias: 1.0,
+    }, 0x7B)?;
+    let backend = NativeBackend::new(model);
+    let pool = threads::global();
+    let active0 = pool.active();
+    let cores = threads::available_threads();
+    log_info!("native throughput: {} {}L d{} vocab {} — {} threads \
+               ({} cores), {} mode",
+              cfg.kind, cfg.n_layers, cfg.d_model, cfg.vocab, active0,
+              cores, if cfg.quick { "quick" } else { "full" });
+
+    // -- prefill ------------------------------------------------------------
+    let mut rng = Rng::new(0xBE7C);
+    let (pb, pt) = (cfg.prefill_batch, cfg.prefill_t);
+    let ctx = Tensor::i32(
+        vec![pb, pt],
+        (0..pb * pt).map(|_| rng.below(cfg.vocab as u64) as i32).collect());
+    let r = bench("prefill", &bc, || {
+        backend.prefill(&ctx).unwrap();
+    });
+    let prefill_tok_s = (pb * pt) as f64 / r.mean_s;
+    log_info!("  prefill  b{pb} t{pt}: {:>10.0} tok/s  ({:.2} ms/pass)",
+              prefill_tok_s, r.mean_ms());
+    let prefill = json::obj(vec![
+        ("batch", json::num(pb as f64)),
+        ("seq_len", json::num(pt as f64)),
+        ("tok_s", json::num(prefill_tok_s)),
+        ("mean_ms", json::num(r.mean_ms())),
+        ("p95_ms", json::num(r.p95_s * 1e3)),
+    ]);
+
+    // -- decode: batch × thread grid ----------------------------------------
+    let mut decode = Vec::new();
+    let mut tok_s_at = |batch: usize, nthr: usize| -> Result<f64> {
+        pool.set_active(nthr);
+        let x = Tensor::i32(
+            vec![batch],
+            (0..batch).map(|i| (i % cfg.vocab) as i32).collect());
+        let mut state = Some(backend.decode_state(batch)?);
+        let r = bench(&format!("decode_b{batch}_thr{nthr}"), &bc, || {
+            let s = state.take().unwrap();
+            let (_, s2) = backend.decode_step(&x, s).unwrap();
+            state = Some(s2);
+        });
+        pool.set_active(active0);
+        let tok_s = batch as f64 / r.mean_s;
+        log_info!("  decode   b{batch} x{nthr}thr: {:>8.0} tok/s  \
+                   ({:.0} us/step, p95 {:.0} us)",
+                  tok_s, r.mean_us(), r.p95_s * 1e6);
+        decode.push(json::obj(vec![
+            ("batch", json::num(batch as f64)),
+            ("threads", json::num(nthr as f64)),
+            ("tok_s", json::num(tok_s)),
+            ("step_us", json::num(r.mean_us())),
+            ("p95_step_us", json::num(r.p95_s * 1e6)),
+        ]));
+        Ok(tok_s)
+    };
+    let mut base_b1_seq = f64::NAN;
+    let mut best_batched = f64::NAN;
+    let largest = cfg.decode_batches.iter().copied().max().unwrap_or(1);
+    let target_batch = if cfg.decode_batches.contains(&8) { 8 }
+                       else { largest };
+    for &batch in &cfg.decode_batches {
+        let seq = tok_s_at(batch, 1)?;
+        if batch == 1 {
+            base_b1_seq = seq;
+        }
+        let thr = if active0 > 1 {
+            tok_s_at(batch, active0)?
+        } else {
+            seq
+        };
+        if batch == target_batch {
+            // honest "batched + threaded" number: the all-threads run,
+            // even if threading hurt at this batch size — never silently
+            // substitute the single-threaded result
+            best_batched = thr;
+        }
+    }
+    let speedup = best_batched / base_b1_seq;
+    log_info!("  speedup  batched+threaded vs single-thread batch-1: \
+               {speedup:.2}x");
+
+    // -- serve --------------------------------------------------------------
+    pool.set_active(active0);
+    let requests: Vec<Request> = (0..cfg.serve_requests).map(|i| Request {
+        id: i as u64,
+        prompt: (0..8 + rng.usize_below(8))
+            .map(|_| rng.below(cfg.vocab as u64) as i32).collect(),
+        n_tokens: cfg.serve_tokens,
+    }).collect();
+    let stats = server::serve_opts(&backend, requests, &ServeOpts {
+        temperature: 0.8,
+        seed: 7,
+        max_batch: cfg.max_batch,
+    })?;
+    log_info!("  serve    {} req x {} tok (max-batch {}): {:>8.0} tok/s, \
+               mean {:.1} ms, p95 {:.1} ms",
+              cfg.serve_requests, cfg.serve_tokens, cfg.max_batch,
+              stats.throughput_tok_s(), stats.mean_latency_s() * 1e3,
+              stats.p95_latency_s() * 1e3);
+    let serve = json::obj(vec![
+        ("requests", json::num(cfg.serve_requests as f64)),
+        ("tokens_per_request", json::num(cfg.serve_tokens as f64)),
+        ("max_batch", json::num(cfg.max_batch as f64)),
+        ("tok_s", json::num(stats.throughput_tok_s())),
+        ("mean_latency_ms", json::num(stats.mean_latency_s() * 1e3)),
+        ("p95_latency_ms", json::num(stats.p95_latency_s() * 1e3)),
+    ]);
+
+    let report = json::obj(vec![
+        ("schema", json::s("minrnn.native_throughput.v1")),
+        ("quick", Json::Bool(cfg.quick)),
+        ("cores", json::num(cores as f64)),
+        ("threads", json::num(active0 as f64)),
+        ("model", json::obj(vec![
+            ("kind", json::s(&cfg.kind)),
+            ("layers", json::num(cfg.n_layers as f64)),
+            ("d_model", json::num(cfg.d_model as f64)),
+            ("vocab", json::num(cfg.vocab as f64)),
+        ])),
+        ("prefill", prefill),
+        ("decode", Json::Arr(decode)),
+        ("serve", serve),
+        ("speedup_batched_threaded", json::num(speedup)),
+    ]);
+    if let Some(out) = &cfg.out {
+        std::fs::write(out, json::to_string(&report) + "\n")?;
+        log_info!("wrote {}", out.display());
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_profile_produces_a_complete_report() {
+        // minimal model so the full pipeline (prefill + decode grid +
+        // serve + JSON) runs in a couple of seconds of quick-mode timing
+        let cfg = Config {
+            quick: true,
+            n_layers: 1,
+            d_model: 16,
+            vocab: 16,
+            prefill_batch: 2,
+            prefill_t: 8,
+            decode_batches: vec![1, 2],
+            serve_requests: 3,
+            serve_tokens: 2,
+            max_batch: 2,
+            out: None,
+            ..Config::quick()
+        };
+        let report = run(&cfg).unwrap();
+        assert_eq!(report.req("schema").unwrap().as_str().unwrap(),
+                   "minrnn.native_throughput.v1");
+        assert!(report.req("prefill").unwrap().req("tok_s").unwrap()
+                .as_f64().unwrap() > 0.0);
+        // one entry per (batch, thread-count) measured: threads=1 always,
+        // plus the all-threads run when the pool had more than one lane
+        let threads_used = report.req("threads").unwrap()
+            .as_usize().unwrap();
+        assert_eq!(report.req("decode").unwrap().as_arr().unwrap().len(),
+                   if threads_used > 1 { 4 } else { 2 });
+        assert!(report.req("serve").unwrap().req("tok_s").unwrap()
+                .as_f64().unwrap() > 0.0);
+        assert!(report.req("speedup_batched_threaded").unwrap()
+                .as_f64().unwrap() > 0.0);
+    }
+}

@@ -63,6 +63,7 @@ Subcommands:
   train <variant>              train a variant on its workload
   generate [variant]           sample text from a (trained) LM variant
   serve [variant]              dynamic-batching serving demo
+  bench                        native-backend throughput benchmark
   experiment <id>|all          regenerate a paper table/figure
   experiments                  list experiment ids
   perf <variant>               profile the train-step hot path (L3 vs XLA)
@@ -70,8 +71,10 @@ Subcommands:
 `generate` and `serve` take `--backend pjrt|native`: `pjrt` runs the AOT
 XLA artifacts; `native` runs the pure-Rust CPU implementation and needs no
 artifacts (load weights with --resume, or sample from a seeded random
-init sized by --kind/--layers/--d-model/--expansion).
-Run `minrnn <subcommand> --help` for options.";
+init sized by --kind/--layers/--d-model/--expansion).  `generate`,
+`serve`, and `bench` take `--threads N` (or MINRNN_THREADS) to size the
+native backend's thread pool; `serve` takes `--max-batch` to cap lockstep
+decode lanes.  Run `minrnn <subcommand> --help` for options.";
 
 pub fn cli_main(args: Vec<String>) -> i32 {
     crate::util::logging::init();
@@ -96,6 +99,7 @@ fn dispatch(args: Vec<String>) -> Result<()> {
         "train" => cmd_train(rest),
         "generate" => cmd_generate(rest),
         "serve" => cmd_serve(rest),
+        "bench" => cmd_bench(rest),
         "experiment" => cmd_experiment(rest),
         "perf" => cmd_perf(rest),
         "experiments" => {
@@ -290,6 +294,27 @@ fn backend_opts(cmd: Command) -> Command {
         .opt("layers", Some("2"), "native fresh-init layer count")
         .opt("d-model", Some("64"), "native fresh-init residual width")
         .opt("expansion", Some("1"), "native fresh-init hidden expansion")
+        .opt("threads", None,
+             "native thread-pool size (default: MINRNN_THREADS, else all \
+              cores)")
+}
+
+/// Apply `--threads N` to the native backend's global pool before any
+/// kernel touches it.  No-op when the option is absent.
+fn apply_threads_opt(p: &Parsed) -> Result<()> {
+    if let Some(v) = p.get("threads") {
+        let n: usize = v.parse()
+            .map_err(|_| anyhow!("--threads expects a positive integer, \
+                                  got '{v}'"))?;
+        if n == 0 {
+            return Err(anyhow!("--threads must be >= 1"));
+        }
+        let effective = crate::util::threads::set_threads(n);
+        if effective != n {
+            log_info!("threads capped at {effective} (pool already built)");
+        }
+    }
+    Ok(())
 }
 
 /// Backend selection: explicit `--backend` wins, then the config file's
@@ -344,6 +369,7 @@ fn cmd_generate(args: &[String]) -> Result<()> {
         .opt("seed", Some("0"), "sampling seed")
         .positional("variant", "LM variant (pjrt backend only)");
     let p = cmd.parse(args)?;
+    apply_threads_opt(&p)?;
     let vocab = CharVocab::new();
     let prompt = vocab.encode(p.req("prompt")?);
     let mut rng = Rng::new(p.u64("seed")?);
@@ -403,11 +429,18 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         Command::new("serve", "dynamic-batching serving demo")))
         .opt("requests", Some("24"), "number of synthetic requests")
         .opt("tokens", Some("16"), "tokens per request")
+        .opt("max-batch", Some("64"), "max lanes decoded in lockstep")
         .opt("seed", Some("0"), "seed")
         .positional("variant", "LM variant (pjrt backend only)");
     let p = cmd.parse(args)?;
+    apply_threads_opt(&p)?;
     let n = p.usize("requests")?;
     let n_tokens = p.usize("tokens")?;
+    let opts = server::ServeOpts {
+        temperature: 0.8,
+        seed: p.u64("seed")?,
+        max_batch: p.usize("max-batch")?,
+    };
     let mut rng = Rng::new(p.u64("seed")?);
     let stats = match resolve_backend(&p)?.as_str() {
         "native" => {
@@ -415,7 +448,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             let backend = native_backend(&p, CharVocab::new().size())?;
             let requests = synthetic_requests(
                 &mut rng, n, n_tokens, backend.model.vocab_out);
-            server::serve(&backend, requests, 0.8, p.u64("seed")?)?
+            server::serve_opts(&backend, requests, &opts)?
         }
         "pjrt" => {
             let variant = p.pos.first().ok_or_else(
@@ -431,12 +464,48 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             let vocab = model.variant.cfg_usize("vocab_in").unwrap_or(64);
             let requests = synthetic_requests(&mut rng, n, n_tokens, vocab);
             let backend = PjrtBackend::new(&model, &state.params);
-            server::serve(&backend, requests, 0.8, p.u64("seed")?)?
+            server::serve_opts(&backend, requests, &opts)?
         }
         other => return Err(anyhow!(
             "unknown backend '{other}' (expected pjrt | native)")),
     };
     report_serve(&stats);
+    Ok(())
+}
+
+/// Native-backend throughput benchmark (`minrnn bench`): prefill tok/s,
+/// decode tok/s across batch sizes and thread counts, serve p95 — written
+/// to BENCH_native.json (see `bench_harness::native_throughput`).
+fn cmd_bench(args: &[String]) -> Result<()> {
+    let cmd = Command::new("bench", "native-backend throughput benchmark")
+        .opt("threads", None,
+             "native thread-pool size (default: MINRNN_THREADS, else all \
+              cores)")
+        .opt("kind", Some("mingru"), "mixer: mingru | minlstm")
+        .opt("layers", None, "layer count (default: profile)")
+        .opt("d-model", None, "residual width (default: profile)")
+        .opt("max-batch", None, "serve lane cap (default: profile)")
+        .opt("out", Some("BENCH_native.json"), "output JSON path")
+        .flag("full", "full-scale measurement (default: quick)");
+    let p = cmd.parse(args)?;
+    apply_threads_opt(&p)?;
+    let mut cfg = if p.flag("full") {
+        bench_harness::native_throughput::Config::full()
+    } else {
+        bench_harness::native_throughput::Config::quick()
+    };
+    cfg.kind = p.req("kind")?.to_string();
+    if let Some(v) = p.get("layers") {
+        cfg.n_layers = v.parse()?;
+    }
+    if let Some(v) = p.get("d-model") {
+        cfg.d_model = v.parse()?;
+    }
+    if let Some(v) = p.get("max-batch") {
+        cfg.max_batch = v.parse()?;
+    }
+    cfg.out = Some(PathBuf::from(p.req("out")?));
+    bench_harness::native_throughput::run(&cfg)?;
     Ok(())
 }
 

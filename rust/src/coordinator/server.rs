@@ -2,22 +2,30 @@
 //! decode, generic over [`Backend`].
 //!
 //! PJRT handles are not `Send`, so the serving loop owns the backend and
-//! requests are plain host data.  The batcher picks the batch size via
-//! [`Backend::plan_batch`] — for the artifact backend that is the largest
-//! exported batch the queue can fill (padding idle lanes); the native
-//! backend forms exact-fit batches.  The decode loop runs all lanes in
-//! lockstep — prompt tokens are consumed lane-wise (RNN decode is
-//! O(1)/token), then sampling continues until each lane has its requested
+//! requests are plain host data.  The batcher picks the lane count via
+//! [`Backend::plan_batch`] capped at [`ServeOpts::max_batch`], then
+//! decodes every admitted request in **lockstep**: one `decode_step` per
+//! wall-clock tick advances all lanes, prompt tokens are consumed
+//! lane-wise (RNN decode is O(1)/token), idle lanes are padded with an
+//! active-mask, and sampling continues until each lane has its requested
 //! tokens.
+//!
+//! Backends that implement [`Backend::reset_lane`] (native) additionally
+//! get **continuous batching**: the moment a lane finishes, its slot is
+//! re-seeded with the next queued request mid-flight, so a long request
+//! no longer holds the whole batch hostage.  Backends without lane reset
+//! (PJRT artifacts) fall back to run-to-completion batches.
 
 use std::collections::VecDeque;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use crate::runtime::backend::MAX_DYNAMIC_BATCH;
 use crate::runtime::Backend;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
+use crate::util::stats;
 
 use super::infer::sample_logits;
 
@@ -34,11 +42,12 @@ pub struct Request {
 pub struct Response {
     pub id: u64,
     pub tokens: Vec<i32>,
-    /// Seconds spent waiting in queue before the batch started.
+    /// Seconds spent waiting in queue before this request was admitted
+    /// into a decode lane.
     pub queue_s: f64,
-    /// Seconds from batch start to this request's completion.
+    /// Seconds from lane admission to this request's completion.
     pub service_s: f64,
-    /// Batch size this request was served in.
+    /// Lane count of the batch this request was served in.
     pub batch: usize,
 }
 
@@ -60,51 +69,131 @@ impl ServeStats {
         self.responses.iter().map(|r| r.queue_s + r.service_s).sum::<f64>()
             / self.responses.len() as f64
     }
+
+    /// p95 end-to-end latency (queue + service) across responses.
+    pub fn p95_latency_s(&self) -> f64 {
+        if self.responses.is_empty() {
+            return 0.0;
+        }
+        let lat: Vec<f64> = self.responses.iter()
+            .map(|r| r.queue_s + r.service_s).collect();
+        stats::percentile(&lat, 95.0)
+    }
 }
 
-/// Serve a workload of requests to completion using dynamic batching.
+/// Serving knobs beyond the request list.
+#[derive(Clone, Debug)]
+pub struct ServeOpts {
+    pub temperature: f32,
+    pub seed: u64,
+    /// Upper bound on lanes decoded in lockstep (`--max-batch`).
+    pub max_batch: usize,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts { temperature: 0.8, seed: 0, max_batch: MAX_DYNAMIC_BATCH }
+    }
+}
+
+/// One occupied decode lane.
+struct Lane {
+    req: Request,
+    enqueued: Instant,
+    admitted: Instant,
+    /// Prompt cursor.
+    pos: usize,
+    out: Vec<i32>,
+}
+
+impl Lane {
+    /// Admit a queued request into a lane (used at batch formation and at
+    /// continuous-batching refill — keep the bookkeeping in one place).
+    fn admit(req: Request, enqueued: Instant) -> Lane {
+        Lane { req, enqueued, admitted: Instant::now(), pos: 0,
+               out: Vec::new() }
+    }
+
+    fn active(&self) -> bool {
+        self.pos < self.req.prompt.len() || self.out.len() < self.req.n_tokens
+    }
+
+    fn next_input(&self) -> i32 {
+        if self.pos < self.req.prompt.len() {
+            self.req.prompt[self.pos]
+        } else {
+            self.out.last().copied()
+                .unwrap_or_else(|| *self.req.prompt.last().unwrap_or(&0))
+        }
+    }
+
+    fn finish(self, bsize: usize, done: Instant) -> Response {
+        Response {
+            id: self.req.id,
+            tokens: self.out,
+            queue_s: (self.admitted - self.enqueued).as_secs_f64(),
+            service_s: (done - self.admitted).as_secs_f64(),
+            batch: bsize,
+        }
+    }
+}
+
+/// Serve a workload of requests to completion with default options
+/// (PR-1 signature, kept for callers and tests).  No lane cap: PR-1
+/// behavior planned straight from the queue length, so a fixed-batch
+/// PJRT backend exporting executables wider than [`MAX_DYNAMIC_BATCH`]
+/// still fills every lane (native backends self-cap via `plan_batch`).
 pub fn serve<B: Backend>(backend: &B, requests: Vec<Request>,
                          temperature: f32, seed: u64) -> Result<ServeStats> {
+    serve_opts(backend, requests,
+               &ServeOpts { temperature, seed, max_batch: usize::MAX })
+}
+
+/// Serve a workload of requests to completion using dynamic batching,
+/// lockstep decode, and (when the backend supports lane reset)
+/// continuous lane refill.
+pub fn serve_opts<B: Backend>(backend: &B, requests: Vec<Request>,
+                              opts: &ServeOpts) -> Result<ServeStats> {
+    if opts.max_batch == 0 {
+        return Err(anyhow!("--max-batch must be >= 1"));
+    }
     if backend.plan_batch(1).is_none() {
         return Err(anyhow!("backend '{}' exposes no decode batch sizes",
                            backend.name()));
     }
-    let mut rng = Rng::new(seed);
+    let mut rng = Rng::new(opts.seed);
     let mut queue: VecDeque<(Request, Instant)> =
         requests.into_iter().map(|r| (r, Instant::now())).collect();
     let mut responses = Vec::new();
     let mut tokens_generated = 0usize;
     let t_start = Instant::now();
 
-    while let Some(bsize) = backend.plan_batch(queue.len()) {
-        let take = bsize.min(queue.len());
-        let batch: Vec<(Request, Instant)> =
-            (0..take).filter_map(|_| queue.pop_front()).collect();
-        let batch_start = Instant::now();
-
-        // lane state
+    while let Some(bsize) =
+        backend.plan_batch(queue.len().min(opts.max_batch)) {
         let mut state = backend.decode_state(bsize)?;
-        let mut pos = vec![0usize; bsize];            // prompt cursor
-        let mut done_at: Vec<Option<Instant>> = vec![None; bsize];
-        let mut outputs: Vec<Vec<i32>> = vec![Vec::new(); bsize];
+        // Admit at most max_batch requests even when a fixed-size (PJRT)
+        // backend pads up to an exported lane count above the cap — the
+        // extra lanes stay idle padding.
+        let mut lanes: Vec<Option<Lane>> = (0..bsize)
+            .map(|lane| {
+                if lane >= opts.max_batch {
+                    return None;
+                }
+                queue.pop_front()
+                    .map(|(req, enqueued)| Lane::admit(req, enqueued))
+            })
+            .collect();
 
         loop {
-            // build the lane-wise input token vector
+            // lane-wise input tokens; idle/padding lanes feed 0
             let mut xs = vec![0i32; bsize];
             let mut any_active = false;
-            for lane in 0..bsize {
-                if lane >= batch.len() {
-                    continue; // padding lane
-                }
-                let req = &batch[lane].0;
-                if pos[lane] < req.prompt.len() {
-                    xs[lane] = req.prompt[pos[lane]];
-                    any_active = true;
-                } else if outputs[lane].len() < req.n_tokens {
-                    // feed the last sampled token
-                    xs[lane] = outputs[lane].last().copied()
-                        .unwrap_or_else(|| *req.prompt.last().unwrap_or(&0));
-                    any_active = true;
+            for (lane, slot) in lanes.iter().enumerate() {
+                if let Some(l) = slot {
+                    if l.active() {
+                        xs[lane] = l.next_input();
+                        any_active = true;
+                    }
                 }
             }
             if !any_active {
@@ -115,43 +204,49 @@ pub fn serve<B: Backend>(backend: &B, requests: Vec<Request>,
             let (logits, new_state) = backend.decode_step(&x, state)?;
             state = new_state;
 
-            // consume logits: lanes past their prompt sample a token
+            // consume logits: lanes past their prompt sample a token;
+            // finished lanes respond and (continuous batching) refill
             let vocab = logits.dims[1];
             let rows = logits.data.as_f32()
                 .ok_or_else(|| anyhow!("logits not f32"))?;
-            for lane in 0..bsize.min(batch.len()) {
-                let req = &batch[lane].0;
-                if pos[lane] < req.prompt.len() {
-                    pos[lane] += 1;
-                    if pos[lane] < req.prompt.len() {
+            for lane in 0..bsize {
+                let Some(l) = lanes[lane].as_mut() else {
+                    continue;
+                };
+                if l.pos < l.req.prompt.len() {
+                    l.pos += 1;
+                    if l.pos < l.req.prompt.len() {
                         continue;
                     }
-                    // prompt just finished → next step samples
+                    // prompt just finished → this step's logits sample
                 }
-                if pos[lane] >= req.prompt.len()
-                    && outputs[lane].len() < req.n_tokens {
+                if l.pos >= l.req.prompt.len()
+                    && l.out.len() < l.req.n_tokens {
                     let row = &rows[lane * vocab..(lane + 1) * vocab];
-                    let tok = sample_logits(row, temperature, &mut rng)
+                    let tok = sample_logits(row, opts.temperature, &mut rng)
                         as i32;
-                    outputs[lane].push(tok);
+                    l.out.push(tok);
                     tokens_generated += 1;
-                    if outputs[lane].len() == req.n_tokens
-                        && done_at[lane].is_none() {
-                        done_at[lane] = Some(Instant::now());
+                }
+                if !l.active() {
+                    let done = Instant::now();
+                    let finished = lanes[lane].take().unwrap();
+                    responses.push(finished.finish(bsize, done));
+                    if !queue.is_empty()
+                        && backend.reset_lane(&mut state, lane) {
+                        let (req, enqueued) = queue.pop_front().unwrap();
+                        lanes[lane] = Some(Lane::admit(req, enqueued));
                     }
                 }
             }
         }
 
-        for (lane, (req, enqueued)) in batch.into_iter().enumerate() {
-            let finished = done_at[lane].unwrap_or_else(Instant::now);
-            responses.push(Response {
-                id: req.id,
-                tokens: std::mem::take(&mut outputs[lane]),
-                queue_s: (batch_start - enqueued).as_secs_f64(),
-                service_s: (finished - batch_start).as_secs_f64(),
-                batch: bsize,
-            });
+        // run-to-completion fallback: any still-occupied lanes (there are
+        // none — the loop drains them) plus whatever remains in the queue
+        // go through the outer re-plan.
+        for slot in lanes.into_iter().flatten() {
+            let done = Instant::now();
+            responses.push(slot.finish(bsize, done));
         }
     }
 
@@ -169,18 +264,24 @@ mod tests {
 
     // plan_batch's policy test lives with the function in
     // runtime::backend; here we exercise the serving loop itself.
+    // Lockstep-batched vs per-request sequential agreement is
+    // property-tested in rust/tests/parallel_props.rs.
+
+    fn tiny_backend(vocab: usize, seed: u64) -> NativeBackend {
+        let model = NativeModel::init_random(&NativeInit {
+            vocab_in: Some(vocab),
+            vocab_out: vocab,
+            d_model: 8,
+            n_layers: 1,
+            ..Default::default()
+        }, seed).unwrap();
+        NativeBackend::new(model)
+    }
 
     #[test]
     fn serve_native_end_to_end() {
         // dynamic-batched serving with zero artifacts
-        let model = NativeModel::init_random(&NativeInit {
-            vocab_in: Some(32),
-            vocab_out: 32,
-            d_model: 8,
-            n_layers: 1,
-            ..Default::default()
-        }, 5).unwrap();
-        let backend = NativeBackend::new(model);
+        let backend = tiny_backend(32, 5);
         let mut rng = Rng::new(0);
         let requests: Vec<Request> = (0..6).map(|i| Request {
             id: i,
@@ -194,5 +295,42 @@ mod tests {
         assert_eq!(stats.tokens_generated, 30);
         assert!(stats.responses.iter()
                 .all(|r| r.tokens.iter().all(|&t| (0..32).contains(&t))));
+        assert!(stats.p95_latency_s() >= 0.0);
+    }
+
+    #[test]
+    fn continuous_refill_serves_more_requests_than_lanes() {
+        // 9 requests through 2 lanes: finished lanes must be re-seeded
+        // from the queue (native backend supports reset_lane)
+        let backend = tiny_backend(16, 11);
+        let requests: Vec<Request> = (0..9).map(|i| Request {
+            id: i,
+            prompt: vec![1 + (i % 5) as i32, 2],
+            n_tokens: 3 + (i % 3) as usize,
+        }).collect();
+        let want_tokens: usize = requests.iter().map(|r| r.n_tokens).sum();
+        let stats = serve_opts(&backend, requests, &ServeOpts {
+            temperature: 0.7,
+            seed: 3,
+            max_batch: 2,
+        }).unwrap();
+        assert_eq!(stats.responses.len(), 9);
+        assert_eq!(stats.tokens_generated, want_tokens);
+        assert!(stats.responses.iter().all(|r| r.batch == 2));
+        for r in &stats.responses {
+            assert_eq!(r.tokens.len(), 3 + (r.id % 3) as usize, "req {}",
+                       r.id);
+        }
+    }
+
+    #[test]
+    fn max_batch_zero_is_rejected() {
+        let backend = tiny_backend(16, 1);
+        let err = serve_opts(&backend, vec![Request {
+            id: 0,
+            prompt: vec![1],
+            n_tokens: 1,
+        }], &ServeOpts { max_batch: 0, ..Default::default() });
+        assert!(err.is_err());
     }
 }

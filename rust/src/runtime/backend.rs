@@ -42,6 +42,17 @@ pub trait Backend {
     /// Parallel context ingestion: `(last-position logits, state)`.
     fn prefill(&self, x: &Tensor) -> Result<(Tensor, Self::State)>;
 
+    /// Reset one decode lane of `state` to the fresh position-0 state,
+    /// leaving the other lanes untouched.  Returns `true` on success —
+    /// backends that support this (native) get continuous batching in
+    /// `coordinator::server::serve`: a finished lane is re-seeded with the
+    /// next queued request mid-flight instead of idling until the whole
+    /// batch drains.  Default: unsupported (`false`), which falls back to
+    /// run-to-completion batches.
+    fn reset_lane(&self, _state: &mut Self::State, _lane: usize) -> bool {
+        false
+    }
+
     /// Pick a batch size for `queue_len` waiting requests, or `None` when
     /// the queue is empty.
     fn plan_batch(&self, queue_len: usize) -> Option<usize> {

@@ -1,6 +1,6 @@
 //! Substrate layer: in-repo replacements for crates unavailable in the
 //! offline build environment (clap, serde_json, rand, criterion, proptest,
-//! env_logger), each with its own unit tests.
+//! env_logger, rayon), each with its own unit tests.
 
 pub mod bench;
 pub mod cli;
@@ -12,3 +12,4 @@ pub mod plot;
 pub mod rng;
 pub mod stats;
 pub mod table;
+pub mod threads;

