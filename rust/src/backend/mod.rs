@@ -20,7 +20,8 @@ use anyhow::Result;
 use crate::runtime::Backend;
 use crate::tensor::Tensor;
 
-pub use native::{NativeInit, NativeModel, NativeScratch, NativeState};
+pub use native::{NativeInit, NativeModel, NativeScratch, NativeState,
+                 NativeTrainer};
 
 /// Native CPU backend: owns the model parameters, serves any batch size.
 pub struct NativeBackend {

@@ -1,0 +1,752 @@
+//! Reverse-mode gradients through the native backbone — the training half
+//! of the paper's "fully parallelizable" claim (Section 3, Appendix B).
+//!
+//! [`forward`] runs the same parallel pass as inference — GEMMs through
+//! the tiled [`Dense`] kernel, gates in log space, the chunked log-space
+//! scan — but records every activation the backward pass needs on a
+//! [`Tape`].  [`backward`] then walks the tape in reverse:
+//!
+//! * the scan `v_t = a_t ⊙ v_{t-1} + b_t` has the clean reverse recurrence
+//!   `dL/dv_{t-1} = a_t ⊙ dL/dv_t`, so the scan VJP is a per-channel
+//!   time-reversed sweep over the cached state sequence (`da_t = ḡ_t ⊙
+//!   v_{t-1}`, `db_t = ḡ_t`, carry `ḡ_{t-1} += a_t ⊙ ḡ_t`) — parallel
+//!   over the `B×D` channel grid exactly like the forward scan;
+//! * gate pre-activations backprop through the softplus / `log g`
+//!   algebra's real-space equivalents (`a = σ(-k)`, `b = σ(k) g(pre)` for
+//!   minGRU; the normalized `f'/i'` pair for minLSTM);
+//! * Dense/RMSNorm/Conv4/GELU/embedding each get a hand-written VJP with
+//!   the same fixed task granularity as the forward kernels, so gradients
+//!   are bit-for-bit identical across thread counts.
+//!
+//! Gradients accumulate into a [`NativeModel`]-shaped container
+//! ([`NativeModel::zeros_like`]); `backend::native::adam` consumes them
+//! leaf-by-leaf.  Correctness is pinned by finite-difference checks in
+//! `rust/tests/train_props.rs` (every leaf, both mixers, conv/MLP on and
+//! off).
+
+use anyhow::{bail, Result};
+
+use crate::tensor::{Tensor, TensorData};
+use crate::util::threads::{self, SlicePtr, ThreadPool};
+
+use super::linalg::{self, g, g_grad, gelu, gelu_grad, log_g, sigmoid, silu,
+                    silu_grad, softplus, Dense};
+use super::mingru::{GATE_CHUNK, H0_VALUE};
+use super::model::{InputLayer, MixerParams, NativeModel};
+use super::scan;
+
+/// Rows per parallel task in the backward GEMMs (mirrors the forward
+/// kernels' fixed blocking so results are thread-count invariant).
+const ROW_BLOCK: usize = 32;
+/// Channels per parallel task of the reverse scan (the forward scan's
+/// [`scan::D_BLOCK`]).
+const D_BLOCK: usize = scan::D_BLOCK;
+/// Below this many multiply-adds a backward GEMM runs inline.
+const PAR_MIN_MACS: usize = 1 << 15;
+/// Below this many elements an elementwise map / scan runs inline.
+const PAR_MIN_MAP: usize = 1 << 14;
+
+// ---------------------------------------------------------------------------
+// tape
+// ---------------------------------------------------------------------------
+
+/// Per-block cached activations of one training forward pass.
+pub struct BlockTape {
+    /// Residual stream entering the block (RMSNorm 1 input), `(B·T, d)`.
+    pub h_in: Vec<f32>,
+    /// RMSNorm 1 output, `(B·T, d)`.
+    pub u1: Vec<f32>,
+    /// Pre-SiLU conv activations, `(B·T, d)` (conv blocks only).
+    pub conv_pre: Option<Vec<f32>>,
+    /// Mixer input — conv output when conv is present, else `u1`.
+    pub mixer_in: Vec<f32>,
+    /// Gate pre-activations: `linear_z` (minGRU) / `linear_i` (minLSTM).
+    pub k: Vec<f32>,
+    /// Candidate pre-activations (`linear_h`), `(B·T, d_h)`.
+    pub pre: Vec<f32>,
+    /// Forget pre-activations (`linear_f`, minLSTM only).
+    pub f: Option<Vec<f32>>,
+    /// Scanned hidden-state sequence, `(B, T, d_h)`.
+    pub h: Vec<f32>,
+    /// Residual after the mixer (RMSNorm 2 input; MLP blocks only).
+    pub h_mid: Option<Vec<f32>>,
+    /// RMSNorm 2 output (MLP blocks only).
+    pub u2: Option<Vec<f32>>,
+    /// MLP hidden pre-activations (before GELU), `(B·T, mult·d)`.
+    pub mlp_pre: Option<Vec<f32>>,
+}
+
+/// Everything [`backward`] needs from one forward pass.
+pub struct Tape {
+    pub batch: usize,
+    pub t: usize,
+    pub blocks: Vec<BlockTape>,
+    /// Residual stream entering the final RMSNorm, `(B·T, d)`.
+    pub h_fin: Vec<f32>,
+    /// Final RMSNorm output (head input), `(B·T, d)`.
+    pub u_f: Vec<f32>,
+    /// All-position logits, `(B, T, vocab_out)`.
+    pub logits: Vec<f32>,
+}
+
+// ---------------------------------------------------------------------------
+// forward (recording)
+// ---------------------------------------------------------------------------
+
+/// Elementwise map across the pool in fixed chunks.
+fn map_pool(pool: &ThreadPool, src: &[f32], dst: &mut Vec<f32>,
+            f: impl Fn(f32) -> f32 + Sync) {
+    linalg::reuse(dst, src.len());
+    if src.len() < PAR_MIN_MAP || pool.active() == 1 {
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d = f(s);
+        }
+        return;
+    }
+    let dp = SlicePtr::new(dst.as_mut_slice());
+    pool.run_chunks(src.len(), GATE_CHUNK, |s, e| {
+        let dv = unsafe { dp.slice(s, e - s) };
+        for (i, d) in dv.iter_mut().enumerate() {
+            *d = f(src[s + i]);
+        }
+    });
+}
+
+/// Training forward pass: identical math to [`NativeModel::forward`]
+/// (parallel gates + chunked log-space scan), recording activations.
+pub fn forward(model: &NativeModel, x: &Tensor) -> Result<Tape> {
+    let (batch, t) = match (x.dims.len(), &x.data) {
+        (2, TensorData::I32(_)) => (x.dims[0], x.dims[1]),
+        (3, TensorData::F32(_)) => (x.dims[0], x.dims[1]),
+        _ => bail!("train forward expects (B, T) i32 or (B, T, F) f32, \
+                    got {:?} {}", x.dims, x.dtype_name()),
+    };
+    if t == 0 {
+        bail!("empty sequence");
+    }
+    let pool = threads::global();
+    let rows = batch * t;
+    let d = model.d_model;
+    let mut h = Vec::new();
+    model.embed_rows_into(x, rows, &mut h)?;
+
+    let mut blocks = Vec::with_capacity(model.blocks.len());
+    for blk in &model.blocks {
+        let h_in = h.clone();
+        let mut u1 = Vec::new();
+        linalg::rmsnorm_pool_into(pool, &h, &blk.ln1, rows, d, &mut u1);
+        let (conv_pre, mixer_in) = match &blk.conv {
+            Some(conv) => {
+                let mut pre = Vec::new();
+                conv.parallel_pre_pool_into(pool, &u1, batch, t, &mut pre);
+                let mut out = Vec::new();
+                map_pool(pool, &pre, &mut out, silu);
+                (Some(pre), out)
+            }
+            None => (None, u1.clone()),
+        };
+        let dh = blk.mixer.d_hidden();
+        let (k, pre, f, log_a, log_b) = mixer_gates(pool, &blk.mixer,
+                                                    &mixer_in, rows);
+        let log_h0 = vec![H0_VALUE.ln(); batch * dh];
+        let mut h_seq = Vec::new();
+        scan::scan_log_pool_into(pool, &log_a, &log_b, &log_h0, batch, t,
+                                 dh, &mut h_seq);
+        let down = mixer_down(&blk.mixer);
+        let mut y = Vec::new();
+        down.apply_pool_into(pool, &h_seq, rows, &mut y);
+        linalg::add_assign(&mut h, &y);
+
+        let (h_mid, u2, mlp_pre) = match (&blk.ln2, &blk.mlp) {
+            (Some(ln2), Some(mlp)) => {
+                let h_mid = h.clone();
+                let mut u2 = Vec::new();
+                linalg::rmsnorm_pool_into(pool, &h, ln2, rows, d, &mut u2);
+                let mut mlp_pre = Vec::new();
+                mlp.up.apply_pool_into(pool, &u2, rows, &mut mlp_pre);
+                let mut act = Vec::new();
+                map_pool(pool, &mlp_pre, &mut act, gelu);
+                let mut z = Vec::new();
+                mlp.down.apply_pool_into(pool, &act, rows, &mut z);
+                linalg::add_assign(&mut h, &z);
+                (Some(h_mid), Some(u2), Some(mlp_pre))
+            }
+            _ => (None, None, None),
+        };
+        blocks.push(BlockTape { h_in, u1, conv_pre, mixer_in, k, pre, f,
+                                h: h_seq, h_mid, u2, mlp_pre });
+    }
+    let h_fin = h.clone();
+    let mut u_f = Vec::new();
+    linalg::rmsnorm_pool_into(pool, &h, &model.ln_f, rows, d, &mut u_f);
+    let mut logits = Vec::new();
+    model.head.apply_pool_into(pool, &u_f, rows, &mut logits);
+    Ok(Tape { batch, t, blocks, h_fin, u_f, logits })
+}
+
+fn mixer_down(m: &MixerParams) -> &Dense {
+    match m {
+        MixerParams::MinGru(c) => &c.down,
+        MixerParams::MinLstm(c) => &c.down,
+    }
+}
+
+/// Gate pre-activations + log-space scan coefficients for either mixer
+/// (Algorithm 6 / Algorithm 8), mirroring the inference `parallel_into`.
+#[allow(clippy::type_complexity)]
+fn mixer_gates(pool: &ThreadPool, mixer: &MixerParams, x: &[f32],
+               rows: usize)
+               -> (Vec<f32>, Vec<f32>, Option<Vec<f32>>, Vec<f32>, Vec<f32>) {
+    match mixer {
+        MixerParams::MinGru(m) => {
+            let k = m.linear_z.apply_pool(pool, x, rows);
+            let pre = m.linear_h.apply_pool(pool, x, rows);
+            let n = k.len();
+            let mut log_a = vec![0.0f32; n];
+            let mut log_b = vec![0.0f32; n];
+            {
+                let lap = SlicePtr::new(log_a.as_mut_slice());
+                let lbp = SlicePtr::new(log_b.as_mut_slice());
+                let (kr, pr) = (&k, &pre);
+                pool.run_chunks(n, GATE_CHUNK, |s, e| {
+                    let la = unsafe { lap.slice(s, e - s) };
+                    let lb = unsafe { lbp.slice(s, e - s) };
+                    for i in 0..e - s {
+                        la[i] = -softplus(kr[s + i]);
+                        lb[i] = -softplus(-kr[s + i]) + log_g(pr[s + i]);
+                    }
+                });
+            }
+            (k, pre, None, log_a, log_b)
+        }
+        MixerParams::MinLstm(m) => {
+            let f = m.linear_f.apply_pool(pool, x, rows);
+            let k = m.linear_i.apply_pool(pool, x, rows);
+            let pre = m.linear_h.apply_pool(pool, x, rows);
+            let n = k.len();
+            let mut log_a = vec![0.0f32; n];
+            let mut log_b = vec![0.0f32; n];
+            {
+                let lap = SlicePtr::new(log_a.as_mut_slice());
+                let lbp = SlicePtr::new(log_b.as_mut_slice());
+                let (fr, kr, pr) = (&f, &k, &pre);
+                pool.run_chunks(n, GATE_CHUNK, |s, e| {
+                    let la = unsafe { lap.slice(s, e - s) };
+                    let lb = unsafe { lbp.slice(s, e - s) };
+                    for i in 0..e - s {
+                        let diff = softplus(-fr[s + i]) - softplus(-kr[s + i]);
+                        la[i] = -softplus(diff);
+                        lb[i] = -softplus(-diff) + log_g(pr[s + i]);
+                    }
+                });
+            }
+            (k, pre, Some(f), log_a, log_b)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// primitive VJPs
+// ---------------------------------------------------------------------------
+
+/// Backward of `y = x @ w + b`.  Accumulates `gw`/`gb`; when `dx` is given
+/// it receives `dy @ wᵀ` (set or `+=` per `accumulate`).  Work fans out in
+/// fixed row / input-dim blocks, so gradients are thread-count invariant.
+#[allow(clippy::too_many_arguments)]
+fn dense_bwd(pool: &ThreadPool, dense: &Dense, x: &[f32], dy: &[f32],
+             rows: usize, dx: Option<(&mut Vec<f32>, bool)>,
+             gw: &mut [f32], gb: &mut [f32]) {
+    let (d_in, d_out) = (dense.d_in, dense.d_out);
+    debug_assert_eq!(x.len(), rows * d_in);
+    debug_assert_eq!(dy.len(), rows * d_out);
+    debug_assert_eq!(gw.len(), d_in * d_out);
+    debug_assert_eq!(gb.len(), d_out);
+    let inline = rows * d_in * d_out < PAR_MIN_MACS || pool.active() == 1;
+
+    if let Some((dx, accumulate)) = dx {
+        linalg::reuse(dx, rows * d_in);
+        let dx_rows = |dxb: &mut [f32], r0: usize, r1: usize| {
+            for r in r0..r1 {
+                let dyr = &dy[r * d_out..(r + 1) * d_out];
+                let dxr = &mut dxb[(r - r0) * d_in..(r - r0 + 1) * d_in];
+                for i in 0..d_in {
+                    let wrow = &dense.w[i * d_out..(i + 1) * d_out];
+                    let mut acc = 0.0f32;
+                    for j in 0..d_out {
+                        acc += dyr[j] * wrow[j];
+                    }
+                    if accumulate {
+                        dxr[i] += acc;
+                    } else {
+                        dxr[i] = acc;
+                    }
+                }
+            }
+        };
+        if inline {
+            dx_rows(dx.as_mut_slice(), 0, rows);
+        } else {
+            let dxp = SlicePtr::new(dx.as_mut_slice());
+            pool.run(rows.div_ceil(ROW_BLOCK), |bi| {
+                let r0 = bi * ROW_BLOCK;
+                let r1 = (r0 + ROW_BLOCK).min(rows);
+                let dxb = unsafe { dxp.slice(r0 * d_in, (r1 - r0) * d_in) };
+                dx_rows(dxb, r0, r1);
+            });
+        }
+    }
+
+    // gw[i, j] += Σ_r x[r, i] · dy[r, j]; each task owns gw rows [i0, i1)
+    // exclusively, summing rows in ascending order (deterministic).
+    let gw_rows = |gwb: &mut [f32], i0: usize, i1: usize| {
+        for r in 0..rows {
+            let dyr = &dy[r * d_out..(r + 1) * d_out];
+            for i in i0..i1 {
+                let xv = x[r * d_in + i];
+                if xv != 0.0 {
+                    let grow = &mut gwb[(i - i0) * d_out
+                                        ..(i - i0 + 1) * d_out];
+                    for j in 0..d_out {
+                        grow[j] += xv * dyr[j];
+                    }
+                }
+            }
+        }
+    };
+    if inline {
+        gw_rows(gw, 0, d_in);
+    } else {
+        let gwp = SlicePtr::new(gw);
+        pool.run(d_in.div_ceil(ROW_BLOCK), |bi| {
+            let i0 = bi * ROW_BLOCK;
+            let i1 = (i0 + ROW_BLOCK).min(d_in);
+            let gwb = unsafe { gwp.slice(i0 * d_out, (i1 - i0) * d_out) };
+            gw_rows(gwb, i0, i1);
+        });
+    }
+
+    for r in 0..rows {
+        let dyr = &dy[r * d_out..(r + 1) * d_out];
+        for j in 0..d_out {
+            gb[j] += dyr[j];
+        }
+    }
+}
+
+/// Backward of RMSNorm `y_i = x_i · inv · s_i`, `inv = (mean x² + ε)^-½`:
+/// `dx = s ⊙ dy · inv − x · inv³/d · Σ_j dy_j s_j x_j`,
+/// `ds_i += Σ_rows dy_i x_i inv`.
+#[allow(clippy::too_many_arguments)]
+fn rmsnorm_bwd(pool: &ThreadPool, x: &[f32], scale: &[f32], rows: usize,
+               d: usize, dy: &[f32], dx: &mut Vec<f32>, gs: &mut [f32]) {
+    debug_assert_eq!(x.len(), rows * d);
+    debug_assert_eq!(dy.len(), rows * d);
+    debug_assert_eq!(scale.len(), d);
+    debug_assert_eq!(gs.len(), d);
+    linalg::reuse(dx, rows * d);
+    let mut inv = vec![0.0f32; rows];
+    let bwd_rows = |dxb: &mut [f32], invb: &mut [f32], r0: usize,
+                    r1: usize| {
+        for r in r0..r1 {
+            let xr = &x[r * d..(r + 1) * d];
+            let dyr = &dy[r * d..(r + 1) * d];
+            let ms = xr.iter().map(|v| v * v).sum::<f32>() / d as f32;
+            let rinv = 1.0 / (ms + 1e-6).sqrt();
+            invb[r - r0] = rinv;
+            let mut dot = 0.0f32;
+            for i in 0..d {
+                dot += dyr[i] * scale[i] * xr[i];
+            }
+            let c = rinv * rinv * rinv * dot / d as f32;
+            let dxr = &mut dxb[(r - r0) * d..(r - r0 + 1) * d];
+            for i in 0..d {
+                dxr[i] = dyr[i] * scale[i] * rinv - xr[i] * c;
+            }
+        }
+    };
+    if rows * d < PAR_MIN_MAP || pool.active() == 1 {
+        bwd_rows(dx.as_mut_slice(), inv.as_mut_slice(), 0, rows);
+    } else {
+        let dxp = SlicePtr::new(dx.as_mut_slice());
+        let ivp = SlicePtr::new(inv.as_mut_slice());
+        pool.run(rows.div_ceil(ROW_BLOCK), |bi| {
+            let r0 = bi * ROW_BLOCK;
+            let r1 = (r0 + ROW_BLOCK).min(rows);
+            let dxb = unsafe { dxp.slice(r0 * d, (r1 - r0) * d) };
+            let ivb = unsafe { ivp.slice(r0, r1 - r0) };
+            bwd_rows(dxb, ivb, r0, r1);
+        });
+    }
+    // scale gradient: sequential row sweep, deterministic accumulation
+    for r in 0..rows {
+        let xr = &x[r * d..(r + 1) * d];
+        let dyr = &dy[r * d..(r + 1) * d];
+        let rinv = inv[r];
+        for i in 0..d {
+            gs[i] += dyr[i] * xr[i] * rinv;
+        }
+    }
+}
+
+/// Backward of the depthwise causal conv + SiLU.  Channels are
+/// independent, so the `D` axis splits into fixed blocks; each task owns
+/// its channels' `dx` columns and `gw`/`gb` entries exclusively.
+#[allow(clippy::too_many_arguments)]
+fn conv4_bwd(pool: &ThreadPool, conv: &super::linalg::Conv4, x: &[f32],
+             pre: &[f32], dy: &[f32], batch: usize, t: usize,
+             dx: &mut Vec<f32>, gw: &mut [f32], gb: &mut [f32]) {
+    let (d, kk) = (conv.d, conv.k);
+    debug_assert_eq!(x.len(), batch * t * d);
+    debug_assert_eq!(pre.len(), batch * t * d);
+    debug_assert_eq!(dy.len(), batch * t * d);
+    linalg::reuse(dx, batch * t * d);
+    dx.iter_mut().for_each(|v| *v = 0.0);
+    let blocks = d.div_ceil(D_BLOCK);
+    let dxp = SlicePtr::new(dx.as_mut_slice());
+    let gwp = SlicePtr::new(gw);
+    let gbp = SlicePtr::new(gb);
+    let task = |ci: usize| {
+        let d0 = ci * D_BLOCK;
+        let d1 = (d0 + D_BLOCK).min(d);
+        for di in d0..d1 {
+            let mut gwl = vec![0.0f32; kk];
+            let mut gbl = 0.0f32;
+            for bi in 0..batch {
+                for ti in 0..t {
+                    let off = (bi * t + ti) * d + di;
+                    let dpre = dy[off] * silu_grad(pre[off]);
+                    if dpre == 0.0 {
+                        continue;
+                    }
+                    gbl += dpre;
+                    for j in 0..kk {
+                        let src = ti as isize + j as isize
+                            - (kk as isize - 1);
+                        if src >= 0 {
+                            let xoff = (bi * t + src as usize) * d + di;
+                            gwl[j] += dpre * x[xoff];
+                            let dxs = unsafe { dxp.slice(xoff, 1) };
+                            dxs[0] += conv.w[j * d + di] * dpre;
+                        }
+                    }
+                }
+            }
+            for j in 0..kk {
+                let gws = unsafe { gwp.slice(j * d + di, 1) };
+                gws[0] += gwl[j];
+            }
+            let gbs = unsafe { gbp.slice(di, 1) };
+            gbs[0] += gbl;
+        }
+    };
+    if batch * t * d < PAR_MIN_MAP || pool.active() == 1 {
+        for ci in 0..blocks {
+            task(ci);
+        }
+    } else {
+        pool.run(blocks, task);
+    }
+}
+
+/// Scatter-add token-embedding gradients (clamped ids, like the lookup).
+fn embed_bwd(ids: &[i32], dh: &[f32], vocab: usize, d: usize,
+             gw: &mut [f32]) {
+    debug_assert_eq!(dh.len(), ids.len() * d);
+    for (r, &id) in ids.iter().enumerate() {
+        let row = (id.max(0) as usize).min(vocab - 1);
+        let grow = &mut gw[row * d..(row + 1) * d];
+        let dhr = &dh[r * d..(r + 1) * d];
+        for i in 0..d {
+            grow[i] += dhr[i];
+        }
+    }
+}
+
+/// Reverse sweep through the scan + gate algebra of one mixer: consumes
+/// the hidden-state gradient `dh_seq` and writes pre-activation gradients
+/// `dk`/`dpre` (and `df` for minLSTM).  Parallel over the `B×D` channel
+/// grid in fixed blocks, sequential over time within a channel.
+#[allow(clippy::too_many_arguments)]
+fn scan_gate_bwd(pool: &ThreadPool, tape: &BlockTape, is_lstm: bool,
+                 batch: usize, t: usize, dh: usize, dh_seq: &[f32],
+                 dk: &mut Vec<f32>, dpre: &mut Vec<f32>,
+                 df: &mut Vec<f32>) {
+    let n = batch * t * dh;
+    debug_assert_eq!(dh_seq.len(), n);
+    linalg::reuse(dk, n);
+    linalg::reuse(dpre, n);
+    if is_lstm {
+        linalg::reuse(df, n);
+    }
+    let blocks = dh.div_ceil(D_BLOCK);
+    let dkp = SlicePtr::new(dk.as_mut_slice());
+    let dpp = SlicePtr::new(dpre.as_mut_slice());
+    let dfp = SlicePtr::new(df.as_mut_slice());
+    let (kv, pv) = (&tape.k, &tape.pre);
+    let fv = tape.f.as_deref();
+    let hv = &tape.h;
+    let task = |idx: usize| {
+        let bi = idx / blocks;
+        let d0 = (idx % blocks) * D_BLOCK;
+        let d1 = (d0 + D_BLOCK).min(dh);
+        let w = d1 - d0;
+        let mut carry = [0.0f32; scan::D_BLOCK];
+        for ti in (0..t).rev() {
+            let off = (bi * t + ti) * dh + d0;
+            let dks = unsafe { dkp.slice(off, w) };
+            let dps = unsafe { dpp.slice(off, w) };
+            for j in 0..w {
+                let o = off + j;
+                let g_tot = carry[j] + dh_seq[o];
+                let hprev = if ti > 0 { hv[o - dh] } else { H0_VALUE };
+                let da = g_tot * hprev;
+                let db = g_tot;
+                if is_lstm {
+                    // f' = σ(-diff), i' = σ(diff),
+                    // diff = softplus(-f) - softplus(-k)
+                    let f = fv.unwrap();
+                    let diff = softplus(-f[o]) - softplus(-kv[o]);
+                    let fp = sigmoid(-diff);
+                    let ip = sigmoid(diff);
+                    let dip = db * g(pv[o]);
+                    dps[j] = db * ip * g_grad(pv[o]);
+                    let ddiff = ip * (1.0 - ip) * dip
+                        - fp * (1.0 - fp) * da;
+                    let dfs = unsafe { dfp.slice(o, 1) };
+                    dfs[0] = -sigmoid(-f[o]) * ddiff;
+                    dks[j] = sigmoid(-kv[o]) * ddiff;
+                    carry[j] = fp * g_tot;
+                } else {
+                    // a = 1 - z, b = z·g(pre), z = σ(k)
+                    let z = sigmoid(kv[o]);
+                    let dz = db * g(pv[o]) - da;
+                    dks[j] = dz * z * (1.0 - z);
+                    dps[j] = db * z * g_grad(pv[o]);
+                    carry[j] = (1.0 - z) * g_tot;
+                }
+            }
+        }
+    };
+    if n < PAR_MIN_MAP || pool.active() == 1 {
+        for idx in 0..batch * blocks {
+            task(idx);
+        }
+    } else {
+        pool.run(batch * blocks, task);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// backward (full backbone)
+// ---------------------------------------------------------------------------
+
+/// Reverse-mode pass over a recorded [`Tape`]: accumulates `dL/dθ` into
+/// `grads` (a [`NativeModel::zeros_like`] container; leaves are `+=`ed,
+/// callers zero between steps).  `x` is the same input the forward saw.
+pub fn backward(model: &NativeModel, tape: &Tape, x: &Tensor,
+                dlogits: &[f32], grads: &mut NativeModel) -> Result<()> {
+    let pool = threads::global();
+    let (batch, t) = (tape.batch, tape.t);
+    let rows = batch * t;
+    let d = model.d_model;
+    if dlogits.len() != rows * model.vocab_out {
+        bail!("backward: dlogits {} != {} x {}", dlogits.len(), rows,
+              model.vocab_out);
+    }
+    if model.blocks.len() != tape.blocks.len()
+        || grads.blocks.len() != tape.blocks.len() {
+        bail!("backward: model/tape/grads block counts disagree");
+    }
+
+    // head + final norm
+    let mut du = Vec::new();
+    dense_bwd(pool, &model.head, &tape.u_f, dlogits, rows,
+              Some((&mut du, false)), &mut grads.head.w, &mut grads.head.b);
+    let mut dh = Vec::new();
+    rmsnorm_bwd(pool, &tape.h_fin, &model.ln_f, rows, d, &du, &mut dh,
+                &mut grads.ln_f);
+
+    // reusable buffers across blocks
+    let mut dk = Vec::new();
+    let mut dpre = Vec::new();
+    let mut df = Vec::new();
+    let mut dh_seq = Vec::new();
+    let mut dmix_in = Vec::new();
+    let mut dtmp = Vec::new();
+
+    for bi in (0..model.blocks.len()).rev() {
+        let blk = &model.blocks[bi];
+        let bt = &tape.blocks[bi];
+        let gb = &mut grads.blocks[bi];
+
+        // MLP branch: h = h_mid + down(gelu(up(rmsnorm(h_mid, ln2))))
+        if let (Some(ln2), Some(mlp), Some(h_mid), Some(u2), Some(mlp_pre),
+                Some(gln2), Some(gmlp)) =
+            (&blk.ln2, &blk.mlp, &bt.h_mid, &bt.u2, &bt.mlp_pre,
+             gb.ln2.as_deref_mut(), gb.mlp.as_mut()) {
+            let mut act = Vec::new();
+            map_pool(pool, mlp_pre, &mut act, gelu);
+            let mut dact = Vec::new();
+            dense_bwd(pool, &mlp.down, &act, &dh, rows,
+                      Some((&mut dact, false)), &mut gmlp.down.w,
+                      &mut gmlp.down.b);
+            // through GELU
+            for (da, &p) in dact.iter_mut().zip(mlp_pre.iter()) {
+                *da *= gelu_grad(p);
+            }
+            dense_bwd(pool, &mlp.up, u2, &dact, rows,
+                      Some((&mut du, false)), &mut gmlp.up.w,
+                      &mut gmlp.up.b);
+            rmsnorm_bwd(pool, h_mid, ln2, rows, d, &du, &mut dtmp, gln2);
+            linalg::add_assign(&mut dh, &dtmp);
+        }
+
+        // mixer branch: h_mid = h_in + down(scan(gates(mixer_in)))
+        let dhh = blk.mixer.d_hidden();
+        let is_lstm = matches!(blk.mixer, MixerParams::MinLstm(_));
+        {
+            let (down, gdown) = match (&blk.mixer, &mut gb.mixer) {
+                (MixerParams::MinGru(m), MixerParams::MinGru(gm)) =>
+                    (&m.down, &mut gm.down),
+                (MixerParams::MinLstm(m), MixerParams::MinLstm(gm)) =>
+                    (&m.down, &mut gm.down),
+                _ => bail!("backward: grads mixer kind mismatch"),
+            };
+            dense_bwd(pool, down, &bt.h, &dh, rows,
+                      Some((&mut dh_seq, false)), &mut gdown.w,
+                      &mut gdown.b);
+        }
+        scan_gate_bwd(pool, bt, is_lstm, batch, t, dhh, &dh_seq, &mut dk,
+                      &mut dpre, &mut df);
+        match (&blk.mixer, &mut gb.mixer) {
+            (MixerParams::MinGru(m), MixerParams::MinGru(gm)) => {
+                dense_bwd(pool, &m.linear_z, &bt.mixer_in, &dk, rows,
+                          Some((&mut dmix_in, false)), &mut gm.linear_z.w,
+                          &mut gm.linear_z.b);
+                dense_bwd(pool, &m.linear_h, &bt.mixer_in, &dpre, rows,
+                          Some((&mut dmix_in, true)), &mut gm.linear_h.w,
+                          &mut gm.linear_h.b);
+            }
+            (MixerParams::MinLstm(m), MixerParams::MinLstm(gm)) => {
+                dense_bwd(pool, &m.linear_f, &bt.mixer_in, &df, rows,
+                          Some((&mut dmix_in, false)), &mut gm.linear_f.w,
+                          &mut gm.linear_f.b);
+                dense_bwd(pool, &m.linear_i, &bt.mixer_in, &dk, rows,
+                          Some((&mut dmix_in, true)), &mut gm.linear_i.w,
+                          &mut gm.linear_i.b);
+                dense_bwd(pool, &m.linear_h, &bt.mixer_in, &dpre, rows,
+                          Some((&mut dmix_in, true)), &mut gm.linear_h.w,
+                          &mut gm.linear_h.b);
+            }
+            _ => unreachable!("kind mismatch caught above"),
+        }
+
+        // conv (if present), then RMSNorm 1, then the residual join
+        let du1 = match (&blk.conv, &bt.conv_pre, gb.conv.as_mut()) {
+            (Some(conv), Some(pre), Some(gconv)) => {
+                conv4_bwd(pool, conv, &bt.u1, pre, &dmix_in, batch, t,
+                          &mut dtmp, &mut gconv.w, &mut gconv.b);
+                &dtmp
+            }
+            _ => &dmix_in,
+        };
+        rmsnorm_bwd(pool, &bt.h_in, &blk.ln1, rows, d, du1, &mut du,
+                    &mut gb.ln1);
+        linalg::add_assign(&mut dh, &du);
+    }
+
+    // input layer
+    match (&model.input, &mut grads.input, &x.data) {
+        (InputLayer::Embed(e), InputLayer::Embed(ge), TensorData::I32(ids))
+            => embed_bwd(ids, &dh, e.vocab, e.d, &mut ge.w),
+        (InputLayer::Proj(p), InputLayer::Proj(gp), TensorData::F32(v)) => {
+            dense_bwd(pool, p, v, &dh, rows, None, &mut gp.w, &mut gp.b);
+        }
+        _ => bail!("backward: input layer / grads / x dtype mismatch"),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::model::NativeInit;
+
+    fn tiny(kind: &str, conv: bool, mlp: bool) -> NativeModel {
+        NativeModel::init_random(&NativeInit {
+            kind: kind.to_string(),
+            n_layers: 2,
+            d_model: 6,
+            expansion: 1,
+            vocab_in: Some(9),
+            input_dim: None,
+            vocab_out: 9,
+            conv,
+            mlp,
+            mlp_mult: 2,
+            forget_bias: 1.0,
+        }, 5).unwrap()
+    }
+
+    #[test]
+    fn train_forward_matches_inference_forward() {
+        // the recording pass must produce the exact same logits as the
+        // inference pass — same kernels, same order
+        for kind in ["mingru", "minlstm"] {
+            let model = tiny(kind, true, true);
+            let x = Tensor::i32(vec![2, 7],
+                                (0..14).map(|i| (i % 9) as i32).collect());
+            let tape = forward(&model, &x).unwrap();
+            let (logits, _) = model.forward(&x).unwrap();
+            assert_eq!(tape.logits, logits.data.as_f32().unwrap(),
+                       "{kind}: train forward drifted from inference");
+        }
+    }
+
+    #[test]
+    fn backward_fills_every_leaf() {
+        for kind in ["mingru", "minlstm"] {
+            let model = tiny(kind, true, true);
+            let x = Tensor::i32(vec![1, 6], vec![1, 2, 3, 4, 5, 6]);
+            let tape = forward(&model, &x).unwrap();
+            let dlogits = vec![0.01f32; tape.logits.len()];
+            let mut grads = model.zeros_like();
+            backward(&model, &tape, &x, &dlogits, &mut grads).unwrap();
+            for (name, leaf) in grads.leaf_names().iter()
+                .zip(grads.leaves()) {
+                let norm: f32 = leaf.iter().map(|v| v * v).sum();
+                assert!(norm > 0.0, "{kind}: leaf '{name}' got no gradient");
+                assert!(leaf.iter().all(|v| v.is_finite()),
+                        "{kind}: leaf '{name}' has non-finite gradients");
+            }
+        }
+    }
+
+    #[test]
+    fn gradients_are_thread_count_invariant() {
+        // same contract as the forward kernels: fixed task granularity
+        // means bit-identical grads on 1 or N threads.  The global pool is
+        // shared process state, so emulate via set_active.
+        let model = tiny("minlstm", true, true);
+        let x = Tensor::i32(vec![2, 9], (0..18).map(|i| (i % 9) as i32)
+                            .collect());
+        let tape = forward(&model, &x).unwrap();
+        let mut dlogits = vec![0.0f32; tape.logits.len()];
+        for (i, v) in dlogits.iter_mut().enumerate() {
+            *v = ((i % 7) as f32 - 3.0) * 0.01;
+        }
+        let pool = threads::global();
+        let before = pool.active();
+        let mut grads1 = model.zeros_like();
+        pool.set_active(1);
+        backward(&model, &tape, &x, &dlogits, &mut grads1).unwrap();
+        let mut grads_n = model.zeros_like();
+        pool.set_active(pool.threads());
+        backward(&model, &tape, &x, &dlogits, &mut grads_n).unwrap();
+        pool.set_active(before);
+        for ((a, b), name) in grads1.leaves().iter()
+            .zip(grads_n.leaves()).zip(grads1.leaf_names()) {
+            assert_eq!(*a, b, "leaf '{name}' differs across thread counts");
+        }
+    }
+}

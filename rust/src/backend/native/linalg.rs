@@ -81,9 +81,27 @@ pub fn log_g(x: f32) -> f32 {
     }
 }
 
+/// `d g(x) / dx` (see [`g`]): 1 above zero, `σ'(x)` below.
+#[inline]
+pub fn g_grad(x: f32) -> f32 {
+    if x >= 0.0 {
+        1.0
+    } else {
+        let s = sigmoid(x);
+        s * (1.0 - s)
+    }
+}
+
 #[inline]
 pub fn silu(x: f32) -> f32 {
     x * sigmoid(x)
+}
+
+/// `d silu(x) / dx = σ(x) (1 + x (1 - σ(x)))`.
+#[inline]
+pub fn silu_grad(x: f32) -> f32 {
+    let s = sigmoid(x);
+    s * (1.0 + x * (1.0 - s))
 }
 
 /// Tanh-approximate GELU — `jax.nn.gelu`'s default (`approximate=True`).
@@ -91,6 +109,17 @@ pub fn silu(x: f32) -> f32 {
 pub fn gelu(x: f32) -> f32 {
     const SQRT_2_OVER_PI: f32 = 0.797_884_56;
     0.5 * x * (1.0 + (SQRT_2_OVER_PI * (x + 0.044_715 * x * x * x)).tanh())
+}
+
+/// `d gelu(x) / dx` for the tanh approximation (see [`gelu`]).
+#[inline]
+pub fn gelu_grad(x: f32) -> f32 {
+    const SQRT_2_OVER_PI: f32 = 0.797_884_56;
+    const C3: f32 = 0.044_715;
+    let inner = SQRT_2_OVER_PI * (x + C3 * x * x * x);
+    let t = inner.tanh();
+    0.5 * (1.0 + t)
+        + 0.5 * x * (1.0 - t * t) * SQRT_2_OVER_PI * (1.0 + 3.0 * C3 * x * x)
 }
 
 /// Stable `log(e^a + e^b)` in f64 (reference scan accumulation).
@@ -450,6 +479,50 @@ impl Conv4 {
         });
     }
 
+    /// Like [`Conv4::parallel_pool_into`] but writing the **pre-SiLU**
+    /// activations — the training path caches these so the backward pass
+    /// can evaluate `silu'` without re-running the convolution.
+    pub fn parallel_pre_pool_into(&self, pool: &ThreadPool, x: &[f32],
+                                  batch: usize, t: usize, y: &mut Vec<f32>) {
+        let d = self.d;
+        assert_eq!(x.len(), batch * t * d, "conv input");
+        reuse(y, batch * t * d);
+        let conv_row = |yr: &mut [f32], bi: usize, ti: usize| {
+            for di in 0..d {
+                let mut acc = self.b[di];
+                for j in 0..self.k {
+                    let src = ti as isize + j as isize
+                        - (self.k as isize - 1);
+                    if src >= 0 {
+                        acc += self.w[j * d + di]
+                            * x[(bi * t + src as usize) * d + di];
+                    }
+                }
+                yr[di] = acc;
+            }
+        };
+        let rows = batch * t;
+        if rows * d < PAR_MIN_MAP || pool.active() == 1 {
+            for bi in 0..batch {
+                for ti in 0..t {
+                    let yo = (bi * t + ti) * d;
+                    conv_row(&mut y[yo..yo + d], bi, ti);
+                }
+            }
+            return;
+        }
+        let block = ROW_BLOCK.max(1);
+        let yp = SlicePtr::new(y.as_mut_slice());
+        pool.run(rows.div_ceil(block), |blk| {
+            let r0 = blk * block;
+            let r1 = (r0 + block).min(rows);
+            for r in r0..r1 {
+                let yr = unsafe { yp.slice(r * d, d) };
+                conv_row(yr, r / t, r % t);
+            }
+        });
+    }
+
     /// The `(B, k-1, D)` buffer a parallel pass leaves behind: the last
     /// `k-1` raw inputs (zero-padded when `T < k-1`).
     pub fn final_state(&self, x: &[f32], batch: usize, t: usize) -> Vec<f32> {
@@ -630,6 +703,43 @@ mod tests {
         assert_eq!(logaddexp_f32(lz, 0.5), 0.5);
         assert!(logaddexp_fast(lz as f64, lz as f64).is_finite());
         assert_eq!(logaddexp_fast(lz as f64, 0.5), 0.5);
+    }
+
+    #[test]
+    fn activation_grads_match_finite_differences() {
+        let check = |f: &dyn Fn(f32) -> f32, df: &dyn Fn(f32) -> f32| {
+            for &x in &[-4.0f32, -1.2, -0.3, -1e-3, 1e-3, 0.5, 1.7, 3.0] {
+                let e = 1e-3f32;
+                let fd = (f(x + e) as f64 - f(x - e) as f64) / (2e-3);
+                let got = df(x) as f64;
+                assert!((got - fd).abs() < 2e-3 * fd.abs().max(1.0),
+                        "x={x}: analytic {got} vs fd {fd}");
+            }
+        };
+        check(&g, &g_grad);
+        check(&silu, &silu_grad);
+        check(&gelu, &gelu_grad);
+    }
+
+    #[test]
+    fn conv_pre_activations_match_parallel() {
+        let mut rng = crate::util::rng::Rng::new(17);
+        let (b, t, d) = (2usize, 6usize, 5usize);
+        let conv = Conv4::new(CONV_K, d,
+                              (0..CONV_K * d).map(|_| rng.normal_f32(0.0, 0.5))
+                                  .collect(),
+                              (0..d).map(|_| rng.normal_f32(0.0, 0.1))
+                                  .collect()).unwrap();
+        let x: Vec<f32> = (0..b * t * d).map(|_| rng.normal_f32(0.0, 1.0))
+            .collect();
+        let pool = ThreadPool::new(2);
+        let mut pre = Vec::new();
+        conv.parallel_pre_pool_into(&pool, &x, b, t, &mut pre);
+        let mut post = Vec::new();
+        conv.parallel_pool_into(&pool, &x, b, t, &mut post);
+        for (p, y) in pre.iter().zip(&post) {
+            assert_eq!(silu(*p), *y, "silu(pre) must equal the fused path");
+        }
     }
 
     #[test]

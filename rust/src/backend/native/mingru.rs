@@ -77,7 +77,10 @@ impl MinGru {
         }
         linalg::reuse(&mut ms.log_h0, batch * dh);
         for (l, &v) in ms.log_h0.iter_mut().zip(h0) {
-            *l = v.ln();
+            // a zero channel would give ln(0) = -inf and a negative one
+            // NaN; clamp to the scan's absorbing log-zero sentinel, which
+            // keeps the channel inert exactly like h0 = 0 in real space
+            *l = if v > 0.0 { v.ln() } else { scan::LOG_ZERO };
         }
         scan::scan_log_pool_into(pool, &ms.log_a, &ms.log_b, &ms.log_h0,
                                  batch, t, dh, &mut ms.h);
@@ -132,6 +135,46 @@ mod tests {
             linear_z: random_dense(rng, d, dh),
             linear_h: random_dense(rng, d, dh),
             down: random_dense(rng, dh, d),
+        }
+    }
+
+    #[test]
+    fn zero_h0_parallel_matches_sequential_decode() {
+        // regression: log_h0 = ln(0) = -inf used to poison the scan; the
+        // clamp to scan::LOG_ZERO must reproduce the sequential decode
+        // path starting from h = 0 (and stay finite for negative h0)
+        let mut rng = Rng::new(77);
+        let (batch, t, d, dh) = (2usize, 11usize, 3usize, 4usize);
+        let cell = random_mingru(&mut rng, d, dh);
+        let x: Vec<f32> = (0..batch * t * d)
+            .map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        for h0_val in [0.0f32, -0.25] {
+            let h0 = vec![h0_val; batch * dh];
+            let (y_par, h_last) = cell.parallel(&x, batch, t, &h0);
+            assert!(y_par.iter().all(|v| v.is_finite()),
+                    "h0={h0_val}: non-finite parallel output");
+            assert!(h_last.iter().all(|v| v.is_finite()));
+            if h0_val != 0.0 {
+                continue; // sequential decode keeps the sign; the clamp
+                          // treats any non-positive channel as empty
+            }
+            let mut h = h0.clone();
+            for ti in 0..t {
+                let mut xt = vec![0.0f32; batch * d];
+                for bi in 0..batch {
+                    xt[bi * d..(bi + 1) * d].copy_from_slice(
+                        &x[(bi * t + ti) * d..(bi * t + ti + 1) * d]);
+                }
+                let y_t = cell.step(&xt, batch, &mut h);
+                for bi in 0..batch {
+                    for di in 0..d {
+                        let p = y_par[(bi * t + ti) * d + di];
+                        let s = y_t[bi * d + di];
+                        assert!((p - s).abs() < 1e-4,
+                                "h0=0 t={ti} b={bi} d={di}: {p} vs {s}");
+                    }
+                }
+            }
         }
     }
 

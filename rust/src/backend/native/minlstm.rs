@@ -71,7 +71,9 @@ impl MinLstm {
         }
         linalg::reuse(&mut ms.log_h0, batch * dh);
         for (l, &v) in ms.log_h0.iter_mut().zip(h0) {
-            *l = v.ln();
+            // clamp non-positive channels to the absorbing log-zero
+            // sentinel (see MinGru::parallel_into)
+            *l = if v > 0.0 { v.ln() } else { scan::LOG_ZERO };
         }
         scan::scan_log_pool_into(pool, &ms.log_a, &ms.log_b, &ms.log_h0,
                                  batch, t, dh, &mut ms.h);
@@ -127,6 +129,42 @@ mod tests {
                    (0..d_in * d_out).map(|_| rng.normal_f32(0.0, scale))
                        .collect(),
                    vec![bias; d_out]).unwrap()
+    }
+
+    #[test]
+    fn zero_h0_parallel_matches_sequential_decode() {
+        // regression: ln(0) = -inf / ln(negative) = NaN in log_h0 (see
+        // MinGru's twin test); clamped channels must match sequential
+        // decode from h = 0
+        let mut rng = Rng::new(53);
+        let (batch, t, d, dh) = (1usize, 9usize, 3usize, 5usize);
+        let cell = MinLstm {
+            linear_f: random_dense(&mut rng, d, dh, 0.5),
+            linear_i: random_dense(&mut rng, d, dh, 0.0),
+            linear_h: random_dense(&mut rng, d, dh, 0.0),
+            down: random_dense(&mut rng, dh, d, 0.0),
+        };
+        let x: Vec<f32> = (0..batch * t * d)
+            .map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let h0 = vec![0.0f32; batch * dh];
+        let (y_par, h_last) = cell.parallel(&x, batch, t, &h0);
+        assert!(y_par.iter().all(|v| v.is_finite()));
+        assert!(h_last.iter().all(|v| v.is_finite()));
+        let mut h = h0.clone();
+        for ti in 0..t {
+            let xt = &x[ti * d..(ti + 1) * d];
+            let y_t = cell.step(xt, batch, &mut h);
+            for di in 0..d {
+                let p = y_par[ti * d + di];
+                let s = y_t[di];
+                assert!((p - s).abs() < 1e-4,
+                        "h0=0 t={ti} d={di}: {p} vs {s}");
+            }
+        }
+        // negative h0 must clamp, not NaN
+        let h0_neg = vec![-1.0f32; batch * dh];
+        let (y_neg, _) = cell.parallel(&x, batch, t, &h0_neg);
+        assert!(y_neg.iter().all(|v| v.is_finite()));
     }
 
     #[test]

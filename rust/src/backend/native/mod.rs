@@ -1,16 +1,24 @@
-//! Pure-Rust CPU implementations of the minGRU/minLSTM inference path:
-//! scan primitives, mixer cells, and the backbone model.  No PJRT, no
-//! artifacts — everything here runs from a checkpoint (or random init)
-//! alone.
+//! Pure-Rust CPU implementations of the minGRU/minLSTM paths:
+//! scan primitives, mixer cells, the backbone model, and — since the
+//! training subsystem landed — reverse-mode gradients (`autograd`), the
+//! fused masked cross-entropy (`loss`), AdamW (`adam`), and the
+//! [`NativeTrainer`] driving them.  No PJRT, no artifacts — everything
+//! here runs from a checkpoint (or random init) alone.
 
+pub mod adam;
+pub mod autograd;
 pub mod linalg;
+pub mod loss;
 pub mod mingru;
 pub mod minlstm;
 pub mod model;
 pub mod scan;
 pub mod scratch;
+pub mod train;
 
+pub use adam::{AdamCfg, AdamState};
 pub use mingru::{MinGru, H0_VALUE};
 pub use minlstm::MinLstm;
 pub use model::{NativeInit, NativeModel, NativeState};
 pub use scratch::{MixerScratch, NativeScratch};
+pub use train::NativeTrainer;

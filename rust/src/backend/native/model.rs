@@ -421,6 +421,126 @@ impl NativeModel {
     }
 
     // -----------------------------------------------------------------------
+    // parameter leaves (training support)
+    // -----------------------------------------------------------------------
+    //
+    // `leaf_names`, `leaves`, and `leaves_mut` walk the parameter tree in
+    // one canonical order — the `to_named` order.  The three bodies must
+    // stay in lockstep: optimizer state (`adam::AdamState`) and gradient
+    // checks index leaves positionally through them.
+
+    /// Leaf names in canonical order, matching [`NativeModel::to_named`]
+    /// (including the `params/` prefix).
+    pub fn leaf_names(&self) -> Vec<String> {
+        self.to_named().into_iter().map(|t| t.name).collect()
+    }
+
+    /// All parameter leaves in canonical order (shared refs).
+    pub fn leaves(&self) -> Vec<&Vec<f32>> {
+        let mut out: Vec<&Vec<f32>> = Vec::new();
+        match &self.input {
+            InputLayer::Embed(e) => out.push(&e.w),
+            InputLayer::Proj(p) => {
+                out.push(&p.w);
+                out.push(&p.b);
+            }
+        }
+        for blk in &self.blocks {
+            out.push(&blk.ln1);
+            if let Some(c) = &blk.conv {
+                out.push(&c.w);
+                out.push(&c.b);
+            }
+            match &blk.mixer {
+                MixerParams::MinGru(m) => {
+                    for d in [&m.linear_z, &m.linear_h, &m.down] {
+                        out.push(&d.w);
+                        out.push(&d.b);
+                    }
+                }
+                MixerParams::MinLstm(m) => {
+                    for d in [&m.linear_f, &m.linear_i, &m.linear_h,
+                              &m.down] {
+                        out.push(&d.w);
+                        out.push(&d.b);
+                    }
+                }
+            }
+            if let Some(s) = &blk.ln2 {
+                out.push(s);
+            }
+            if let Some(m) = &blk.mlp {
+                for d in [&m.up, &m.down] {
+                    out.push(&d.w);
+                    out.push(&d.b);
+                }
+            }
+        }
+        out.push(&self.ln_f);
+        out.push(&self.head.w);
+        out.push(&self.head.b);
+        out
+    }
+
+    /// All parameter leaves in canonical order (mutable refs).
+    pub fn leaves_mut(&mut self) -> Vec<&mut Vec<f32>> {
+        let mut out: Vec<&mut Vec<f32>> = Vec::new();
+        match &mut self.input {
+            InputLayer::Embed(e) => out.push(&mut e.w),
+            InputLayer::Proj(p) => {
+                out.push(&mut p.w);
+                out.push(&mut p.b);
+            }
+        }
+        for blk in &mut self.blocks {
+            out.push(&mut blk.ln1);
+            if let Some(c) = &mut blk.conv {
+                out.push(&mut c.w);
+                out.push(&mut c.b);
+            }
+            match &mut blk.mixer {
+                MixerParams::MinGru(m) => {
+                    for d in [&mut m.linear_z, &mut m.linear_h,
+                              &mut m.down] {
+                        out.push(&mut d.w);
+                        out.push(&mut d.b);
+                    }
+                }
+                MixerParams::MinLstm(m) => {
+                    for d in [&mut m.linear_f, &mut m.linear_i,
+                              &mut m.linear_h, &mut m.down] {
+                        out.push(&mut d.w);
+                        out.push(&mut d.b);
+                    }
+                }
+            }
+            if let Some(s) = &mut blk.ln2 {
+                out.push(s);
+            }
+            if let Some(m) = &mut blk.mlp {
+                for d in [&mut m.up, &mut m.down] {
+                    out.push(&mut d.w);
+                    out.push(&mut d.b);
+                }
+            }
+        }
+        out.push(&mut self.ln_f);
+        out.push(&mut self.head.w);
+        out.push(&mut self.head.b);
+        out
+    }
+
+    /// A same-shaped model with every parameter zeroed — gradient storage
+    /// for `backend::native::autograd`.
+    pub fn zeros_like(&self) -> NativeModel {
+        let mut z = self.clone();
+        for leaf in z.leaves_mut() {
+            leaf.iter_mut().for_each(|v| *v = 0.0);
+        }
+        z
+    }
+
+    // -----------------------------------------------------------------------
     // inference
     // -----------------------------------------------------------------------
 
@@ -455,8 +575,8 @@ impl NativeModel {
         Ok(())
     }
 
-    fn embed_rows_into(&self, x: &Tensor, rows: usize, out: &mut Vec<f32>)
-                       -> Result<()> {
+    pub(crate) fn embed_rows_into(&self, x: &Tensor, rows: usize,
+                                  out: &mut Vec<f32>) -> Result<()> {
         match (&self.input, &x.data) {
             (InputLayer::Embed(e), TensorData::I32(ids)) => {
                 if ids.len() != rows {
@@ -682,6 +802,37 @@ mod tests {
         let (a, _) = model.forward(&x).unwrap();
         let (b, _) = back.forward(&x).unwrap();
         assert_eq!(a, b, "roundtrip must be bit-exact");
+    }
+
+    #[test]
+    fn leaf_walks_stay_in_lockstep() {
+        // leaf_names / leaves / leaves_mut / to_named must enumerate the
+        // same leaves in the same order — optimizer state is positional
+        for (kind, conv, mlp) in [("mingru", true, true),
+                                  ("minlstm", false, true),
+                                  ("minlstm", true, false)] {
+            let mut model = tiny_model(kind, conv, mlp);
+            let names = model.leaf_names();
+            let named = model.to_named();
+            assert_eq!(names.len(), named.len());
+            let shared_lens: Vec<usize> =
+                model.leaves().iter().map(|l| l.len()).collect();
+            let mut_lens: Vec<usize> =
+                model.leaves_mut().iter().map(|l| l.len()).collect();
+            assert_eq!(shared_lens, mut_lens, "{kind}");
+            for ((name, nt), len) in names.iter().zip(&named)
+                .zip(&shared_lens) {
+                assert_eq!(name, &nt.name);
+                assert_eq!(nt.data.len(), *len,
+                           "{kind}: leaf '{name}' length drifted");
+            }
+            // zeros_like matches shapes and zeroes every value
+            let z = model.zeros_like();
+            for (a, b) in z.leaves().iter().zip(model.leaves()) {
+                assert_eq!(a.len(), b.len());
+                assert!(a.iter().all(|&v| v == 0.0));
+            }
+        }
     }
 
     #[test]

@@ -14,17 +14,42 @@ use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
 /// Softmax sampling with temperature from a logits row.
+///
+/// NaN logits (a poisoned model, an overflowed activation) must not crash
+/// the server: they are treated as `-inf` — never sampled, never greedy —
+/// and an all-NaN row deterministically yields token 0.
 pub fn sample_logits(logits: &[f32], temperature: f32,
                      rng: &mut Rng) -> usize {
     if temperature <= 1e-6 {
-        return logits.iter().enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(i, _)| i).unwrap_or(0);
+        // explicit scan instead of max_by + partial_cmp().unwrap(), which
+        // panics on NaN; `v > best` is false for NaN, so NaN never wins
+        let mut best = f32::NEG_INFINITY;
+        let mut arg = 0usize;
+        for (i, &v) in logits.iter().enumerate() {
+            if v > best {
+                best = v;
+                arg = i;
+            }
+        }
+        return arg;
     }
     let max = logits.iter().cloned().fold(f32::MIN, f32::max);
     let weights: Vec<f64> = logits.iter()
-        .map(|&l| (((l - max) / temperature) as f64).exp())
+        .map(|&l| {
+            if l.is_nan() {
+                0.0
+            } else if l == f32::INFINITY {
+                // saturated logit: (inf - inf) would be NaN; sample
+                // uniformly among the +inf entries instead
+                1.0
+            } else {
+                (((l - max) / temperature) as f64).exp()
+            }
+        })
         .collect();
+    if weights.iter().all(|&w| w <= 0.0) {
+        return 0;
+    }
     rng.categorical(&weights)
 }
 
@@ -120,6 +145,33 @@ mod tests {
         }
         assert!(hits[1] > 400, "{hits:?}");
         assert!(hits[0] + hits[2] > 0);
+    }
+
+    #[test]
+    fn nan_logits_never_panic_or_win() {
+        // regression: the greedy path's partial_cmp().unwrap() panicked on
+        // NaN, turning a poisoned model into a server crash
+        let mut rng = Rng::new(1);
+        let poisoned = [0.5f32, f32::NAN, 2.0, f32::NAN];
+        assert_eq!(sample_logits(&poisoned, 0.0, &mut rng), 2);
+        for _ in 0..200 {
+            let t = sample_logits(&poisoned, 1.0, &mut rng);
+            assert!(t != 1 && t != 3, "sampled a NaN logit");
+        }
+        // fully poisoned rows fall back to token 0, deterministically
+        let all_nan = [f32::NAN; 4];
+        assert_eq!(sample_logits(&all_nan, 0.0, &mut rng), 0);
+        assert_eq!(sample_logits(&all_nan, 1.0, &mut rng), 0);
+        // -inf everywhere (fully masked) also stays in bounds
+        let all_neg = [f32::NEG_INFINITY; 3];
+        assert_eq!(sample_logits(&all_neg, 0.0, &mut rng), 0);
+        assert_eq!(sample_logits(&all_neg, 1.0, &mut rng), 0);
+        // a +inf logit must win, not poison the weights with inf - inf
+        let sat = [0.0f32, f32::INFINITY, 4.0];
+        assert_eq!(sample_logits(&sat, 0.0, &mut rng), 1);
+        for _ in 0..50 {
+            assert_eq!(sample_logits(&sat, 1.0, &mut rng), 1);
+        }
     }
 
     #[test]

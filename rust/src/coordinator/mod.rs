@@ -8,9 +8,9 @@ pub mod trainer;
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
-use crate::backend::{NativeBackend, NativeInit, NativeModel};
+use crate::backend::{NativeBackend, NativeInit, NativeModel, NativeTrainer};
 use crate::bench_harness::{self, Ctx};
 use crate::config::TrainConfig;
 use crate::data::corpus::CharVocab;
@@ -60,7 +60,7 @@ const USAGE: &str = "minrnn — Were RNNs All We Needed? (minGRU/minLSTM)
 Subcommands:
   list                         list artifact variants
   info <variant>               show a variant's manifest entry
-  train <variant>              train a variant on its workload
+  train <variant|workload>     train a variant (pjrt) or workload (native)
   generate [variant]           sample text from a (trained) LM variant
   serve [variant]              dynamic-batching serving demo
   bench                        native-backend throughput benchmark
@@ -68,13 +68,16 @@ Subcommands:
   experiments                  list experiment ids
   perf <variant>               profile the train-step hot path (L3 vs XLA)
 
-`generate` and `serve` take `--backend pjrt|native`: `pjrt` runs the AOT
-XLA artifacts; `native` runs the pure-Rust CPU implementation and needs no
-artifacts (load weights with --resume, or sample from a seeded random
-init sized by --kind/--layers/--d-model/--expansion).  `generate`,
-`serve`, and `bench` take `--threads N` (or MINRNN_THREADS) to size the
-native backend's thread pool; `serve` takes `--max-batch` to cap lockstep
-decode lanes.  Run `minrnn <subcommand> --help` for options.";
+`train`, `generate`, and `serve` take `--backend pjrt|native`: `pjrt`
+runs the AOT XLA artifacts; `native` runs the pure-Rust CPU
+implementation and needs no artifacts.  Native training
+(`train --backend native <workload>`) runs the log-space scan VJP + AdamW
+in Rust on char_lm / random_tokens / selective_copy / chomsky/<task>;
+native inference loads weights with --resume or samples from a seeded
+random init sized by --kind/--layers/--d-model/--expansion.  `train`,
+`generate`, `serve`, and `bench` take `--threads N` (or MINRNN_THREADS)
+to size the native thread pool; `serve` takes `--max-batch` to cap
+lockstep decode lanes.  Run `minrnn <subcommand> --help` for options.";
 
 pub fn cli_main(args: Vec<String>) -> i32 {
     crate::util::logging::init();
@@ -197,32 +200,64 @@ fn train_command() -> Command {
         .opt("resume", None, "checkpoint file to resume from")
         .opt("config", None, "JSON config file (CLI overrides it)")
         .flag("constant-lr", "disable warmup+cosine schedule")
-        .positional("variant", "artifact variant to train")
+        .opt("backend", None,
+             "training backend: pjrt | native (default: config file \
+              `backend` key, else pjrt)")
+        .opt("batch", Some("32"), "native: batch size")
+        .opt("seq-len", Some("64"), "native: sequence length")
+        .opt("kind", Some("mingru"), "native fresh-init mixer: \
+             mingru | minlstm")
+        .opt("layers", Some("2"), "native fresh-init layer count")
+        .opt("d-model", Some("64"), "native fresh-init residual width")
+        .opt("expansion", Some("1"), "native fresh-init hidden expansion")
+        .flag("conv", "native fresh-init: temporal conv4 per block")
+        .flag("mlp", "native fresh-init: MLP per block")
+        .opt("threads", None,
+             "native thread-pool size (default: MINRNN_THREADS, else all \
+              cores)")
+        .positional("variant", "artifact variant (pjrt) or workload \
+                     (native: char_lm, random_tokens, selective_copy, \
+                     chomsky/<task>)")
 }
 
 /// Build the workload data source for a variant from its manifest entry.
 pub fn data_source_for(v: &crate::runtime::Variant)
                        -> Result<Box<dyn trainer::DataSource>> {
+    data_source(&v.workload_kind(), v.batch, v.seq_len, Some(&v.workload))
+}
+
+/// Build a data source from a workload kind alone (`char_lm`,
+/// `random_tokens`, `selective_copy`, `chomsky/<task>`, `lra/<task>`,
+/// `rl/<env>`).  `workload` carries optional manifest extras (vocab,
+/// ctx_len, ...); without it, shape-dependent defaults are derived from
+/// `(b, t)` — this is the path `minrnn train --backend native` uses, where
+/// no artifact manifest exists.
+pub fn data_source(kind: &str, b: usize, t: usize,
+                   workload: Option<&crate::util::json::Json>)
+                   -> Result<Box<dyn trainer::DataSource>> {
     use crate::data::{chomsky, random_tokens, rl, selective_copy};
-    let kind = v.workload_kind();
-    let b = v.batch;
-    let t = v.seq_len;
+    let extra = |key: &str| workload.and_then(|w| w.get(key));
     if kind == "char_lm" {
         let src = bench_harness::lm::LmSource::new(b, t);
         return Ok(Box::new(src));
     }
     if kind == "random_tokens" {
-        let vocab = v.workload.get("vocab").and_then(|x| x.as_i64())
+        let vocab = extra("vocab").and_then(|x| x.as_i64())
             .unwrap_or(16) as i32;
         return Ok(Box::new(trainer::FnSource {
             f: move |rng: &mut Rng| random_tokens::batch(rng, b, t, vocab),
         }));
     }
     if kind == "selective_copy" {
-        let ctx_len = v.workload.get("ctx_len").and_then(|x| x.as_usize())
-            .unwrap_or(256);
-        let n_data = v.workload.get("n_data").and_then(|x| x.as_usize())
-            .unwrap_or(16);
+        // default geometry: 16 data tokens (the paper's setup) inside the
+        // configured sequence length
+        let n_data = extra("n_data").and_then(|x| x.as_usize())
+            .unwrap_or_else(|| 16.min((t / 2).max(1)));
+        if t <= n_data {
+            bail!("selective_copy needs seq_len > n_data ({t} <= {n_data})");
+        }
+        let ctx_len = extra("ctx_len").and_then(|x| x.as_usize())
+            .unwrap_or(t - n_data);
         let task = selective_copy::SelectiveCopy::new(ctx_len, n_data);
         return Ok(Box::new(trainer::FnSource {
             f: move |rng: &mut Rng| task.batch(rng, b),
@@ -255,31 +290,94 @@ pub fn data_source_for(v: &crate::runtime::Variant)
     Err(anyhow!("no data source for workload '{kind}'"))
 }
 
+/// Token vocabulary of a discrete workload — sizes the native model's
+/// embedding and head when training without an artifact manifest.
+fn native_train_vocab(kind: &str) -> Result<usize> {
+    if kind == "char_lm" {
+        return Ok(CharVocab::new().size());
+    }
+    // selective_copy, chomsky/*, and random_tokens all use the shared
+    // 16-symbol token map
+    if kind == "selective_copy" || kind == "random_tokens"
+        || kind.starts_with("chomsky/") {
+        return Ok(16);
+    }
+    Err(anyhow!(
+        "train --backend native supports char_lm, random_tokens, \
+         selective_copy, and chomsky/<task> workloads (got '{kind}'); \
+         continuous (rl/*) and LRA workloads train through the PJRT path"))
+}
+
 fn cmd_train(args: &[String]) -> Result<()> {
     let p = train_command().parse(args)?;
     let mut cfg = TrainConfig::default();
     cfg.apply_cli(&p)?;
     let variant = p.pos.first()
-        .ok_or_else(|| anyhow!("usage: minrnn train <variant>"))?
+        .ok_or_else(|| anyhow!("usage: minrnn train <variant|workload>"))?
         .clone();
     cfg.variant = variant.clone();
     cfg.artifacts = PathBuf::from(p.req("artifacts")?);
 
-    let rt = Runtime::cpu()?;
-    let manifest = open_manifest(cfg.artifacts.to_str().unwrap())?;
-    let model = Model::open(&rt, manifest, &variant)?;
-    let mut data = data_source_for(&model.variant)?;
-    let mut state = match &cfg.resume {
-        Some(path) => model.load_checkpoint(path)?,
-        None => model.init(cfg.seed as i32, cfg.forget_bias)?,
+    let backend = cfg.backend.clone();
+    let report = match backend.as_str() {
+        "native" => {
+            apply_threads_opt(&p)?;
+            let mut nt = native_trainer(&p, &cfg, &variant)?;
+            let mut data = data_source(&variant, p.usize("batch")?,
+                                       p.usize("seq-len")?, None)?;
+            trainer::run_loop(&mut nt, &cfg, 0, data.as_mut())?
+        }
+        "pjrt" => {
+            let rt = Runtime::cpu()?;
+            let manifest = open_manifest(cfg.artifacts.to_str().unwrap())?;
+            let model = Model::open(&rt, manifest, &variant)?;
+            let mut data = data_source_for(&model.variant)?;
+            let mut state = match &cfg.resume {
+                Some(path) => model.load_checkpoint(path)?,
+                None => model.init(cfg.seed as i32, cfg.forget_bias)?,
+            };
+            let trainer = trainer::Trainer::new(&model, cfg);
+            trainer.run(&mut state, data.as_mut())?
+        }
+        other => return Err(anyhow!(
+            "unknown backend '{other}' (expected pjrt | native)")),
     };
-    let trainer = trainer::Trainer::new(&model, cfg);
-    let report = trainer.run(&mut state, data.as_mut())?;
     log_info!("done: final loss {:.4}, best eval {:.4} @ step {}, \
                {:.2} steps/s",
               report.final_loss, report.best_eval_loss,
               report.best_eval_step, report.steps_per_sec);
     Ok(())
+}
+
+/// Build the native trainer for `cmd_train`: resume a full training
+/// checkpoint (params + Adam moments) or start from a seeded random init
+/// sized for the workload's vocabulary.
+fn native_trainer(p: &Parsed, cfg: &TrainConfig, workload: &str)
+                  -> Result<NativeTrainer> {
+    let vocab = native_train_vocab(workload)?;
+    match &cfg.resume {
+        Some(path) => NativeTrainer::from_checkpoint(path, workload),
+        None => {
+            let init = NativeInit {
+                kind: p.req("kind")?.to_string(),
+                n_layers: p.usize("layers")?,
+                d_model: p.usize("d-model")?,
+                expansion: p.usize("expansion")?,
+                vocab_in: Some(vocab),
+                input_dim: None,
+                vocab_out: vocab,
+                conv: p.flag("conv"),
+                mlp: p.flag("mlp"),
+                mlp_mult: 4,
+                forget_bias: cfg.forget_bias,
+            };
+            log_info!("native training: fresh {} init ({} layers, d={}, \
+                       vocab={vocab}) on '{workload}'",
+                      init.kind, init.n_layers, init.d_model);
+            Ok(NativeTrainer::new(NativeModel::init_random(&init, cfg.seed)?,
+                                  workload))
+        }
+    }
 }
 
 /// Options shared by the backend-selectable inference subcommands.

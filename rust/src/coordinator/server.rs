@@ -161,6 +161,14 @@ pub fn serve_opts<B: Backend>(backend: &B, requests: Vec<Request>,
         return Err(anyhow!("backend '{}' exposes no decode batch sizes",
                            backend.name()));
     }
+    // Validate up front so serving agrees with `infer::generate`, which
+    // rejects empty prompts: `Lane::next_input` would otherwise silently
+    // substitute token 0 for an empty-prompt request.
+    if let Some(r) = requests.iter().find(|r| r.prompt.is_empty()) {
+        return Err(anyhow!(
+            "request {} has an empty prompt; every request needs at least \
+             one prompt token", r.id));
+    }
     let mut rng = Rng::new(opts.seed);
     let mut queue: VecDeque<(Request, Instant)> =
         requests.into_iter().map(|r| (r, Instant::now())).collect();
@@ -321,6 +329,20 @@ mod tests {
             assert_eq!(r.tokens.len(), 3 + (r.id % 3) as usize, "req {}",
                        r.id);
         }
+    }
+
+    #[test]
+    fn empty_prompt_requests_are_rejected_up_front() {
+        // serve must agree with infer::generate instead of silently
+        // feeding token 0 into the empty lane
+        let backend = tiny_backend(16, 2);
+        let err = serve_opts(&backend, vec![
+            Request { id: 0, prompt: vec![1, 2], n_tokens: 2 },
+            Request { id: 7, prompt: vec![], n_tokens: 2 },
+        ], &ServeOpts::default());
+        let msg = format!("{:#}", err.unwrap_err());
+        assert!(msg.contains("request 7") && msg.contains("empty prompt"),
+                "unhelpful error: {msg}");
     }
 
     #[test]

@@ -1,14 +1,17 @@
-//! Training loop: drives the AOT train-step executable with host-side
-//! batching, LR scheduling, periodic evaluation, early stopping, and
-//! checkpointing.  One PJRT call per optimizer step — gradients never
-//! reach the host.
+//! Training loop: host-side batching, LR scheduling, periodic evaluation,
+//! early stopping, and checkpointing, generic over
+//! [`crate::runtime::TrainBackend`] — the same loop drives the AOT PJRT
+//! train-step executable ([`PjrtTrain`]) and the native Rust trainer
+//! (`backend::NativeTrainer`), so training works with or without
+//! artifacts.
 
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::config::TrainConfig;
-use crate::runtime::{EvalMetrics, Model, TrainState};
+use crate::runtime::{EvalMetrics, Model, PjrtTrain, TrainBackend,
+                     TrainState};
 use crate::tensor::Batch;
 use crate::util::rng::Rng;
 use crate::util::stats::Ema;
@@ -48,6 +51,98 @@ pub struct TrainReport {
     pub steps_run: usize,
 }
 
+/// Run `cfg.steps` optimizer steps against any [`TrainBackend`]: cosine
+/// (or constant) LR from `cfg`, EMA-smoothed logging, periodic evaluation
+/// with best-checkpoint saving, early stopping after `patience`
+/// non-improving evals (0 = never).
+pub fn run_loop(backend: &mut dyn TrainBackend, cfg: &TrainConfig,
+                patience: usize, data: &mut dyn DataSource)
+                -> Result<TrainReport> {
+    let mut rng = Rng::new(cfg.seed ^ 0x7124_11);
+    let mut eval_rng = Rng::new(cfg.seed ^ 0xEEE1);
+    let mut report = TrainReport {
+        best_eval_loss: f32::INFINITY,
+        ..Default::default()
+    };
+    let mut ema = Ema::new(0.1);
+    let mut evals_since_best = 0usize;
+    let t0 = Instant::now();
+
+    for step in 0..cfg.steps {
+        let batch = data.train_batch(&mut rng);
+        let lr = cfg.lr_at(step);
+        let drop_seed = (cfg.seed as i32)
+            ^ (step as i32).wrapping_mul(2654435761u32 as i32);
+        let m = backend.train_step(&batch, lr, drop_seed)?;
+        let smooth = ema.push(m.loss as f64);
+        if step % cfg.log_every.max(1) == 0 || step + 1 == cfg.steps {
+            report.loss_curve.push((step, m.loss));
+            log_info!("{} step {step:5} loss {:.4} (ema {:.4}) \
+                       gnorm {:.3} lr {:.2e}",
+                      backend.name(), m.loss, smooth, m.grad_norm, lr);
+        }
+        report.final_loss = m.loss;
+
+        let do_eval = cfg.eval_every > 0 && backend.supports_eval()
+            && ((step + 1) % cfg.eval_every == 0 || step + 1 == cfg.steps);
+        if do_eval {
+            let em = evaluate(backend, cfg, data, &mut eval_rng)?;
+            report.eval_curve.push((step + 1, em));
+            log_info!("{} eval@{}: loss {:.4} tok_acc {:.3} seq_acc {:.3}",
+                      backend.name(), step + 1, em.loss, em.token_acc,
+                      em.seq_acc);
+            if em.loss < report.best_eval_loss {
+                report.best_eval_loss = em.loss;
+                report.best_eval_step = step + 1;
+                evals_since_best = 0;
+                if let Some(dir) = &cfg.checkpoint {
+                    std::fs::create_dir_all(dir)?;
+                    backend.save_checkpoint(
+                        &dir.join(format!("{}.best.ckpt", backend.name())))?;
+                }
+            } else {
+                evals_since_best += 1;
+                if patience > 0 && evals_since_best >= patience {
+                    log_info!("early stop at step {} (patience {patience})",
+                              step + 1);
+                    report.steps_run = step + 1;
+                    break;
+                }
+            }
+            report.final_eval = Some(em);
+        }
+        report.steps_run = step + 1;
+    }
+
+    report.steps_per_sec =
+        report.steps_run as f64 / t0.elapsed().as_secs_f64();
+    if let Some(dir) = &cfg.checkpoint {
+        std::fs::create_dir_all(dir)?;
+        backend.save_checkpoint(
+            &dir.join(format!("{}.final.ckpt", backend.name())))?;
+    }
+    Ok(report)
+}
+
+/// Average eval metrics over `cfg.eval_batches` fresh batches.
+pub fn evaluate(backend: &dyn TrainBackend, cfg: &TrainConfig,
+                data: &mut dyn DataSource, rng: &mut Rng)
+                -> Result<EvalMetrics> {
+    let n = cfg.eval_batches.max(1);
+    let mut acc = EvalMetrics::default();
+    for _ in 0..n {
+        let b = data.eval_batch(rng);
+        let m = backend.eval(&b)?;
+        acc.loss += m.loss / n as f32;
+        acc.token_acc += m.token_acc / n as f32;
+        acc.seq_acc += m.seq_acc / n as f32;
+    }
+    Ok(acc)
+}
+
+/// PJRT-facing facade (the PR-1 API): pairs an opened artifact [`Model`]
+/// with a [`TrainConfig`] and drives [`run_loop`] over a [`PjrtTrain`]
+/// borrowing the caller's [`TrainState`].
 pub struct Trainer<'m, 'rt> {
     pub model: &'m Model<'rt>,
     pub cfg: TrainConfig,
@@ -64,92 +159,14 @@ impl<'m, 'rt> Trainer<'m, 'rt> {
     /// the trained state in `state`.
     pub fn run(&self, state: &mut TrainState, data: &mut dyn DataSource)
                -> Result<TrainReport> {
-        let mut rng = Rng::new(self.cfg.seed ^ 0x7124_11);
-        let mut eval_rng = Rng::new(self.cfg.seed ^ 0xEEE1);
-        let mut report = TrainReport {
-            best_eval_loss: f32::INFINITY,
-            ..Default::default()
-        };
-        let mut ema = Ema::new(0.1);
-        let mut evals_since_best = 0usize;
-        let t0 = Instant::now();
-
-        for step in 0..self.cfg.steps {
-            let batch = data.train_batch(&mut rng);
-            let lr = self.cfg.lr_at(step);
-            let m = self.model.train_step(state, &batch, lr,
-                                          (self.cfg.seed as i32)
-                                          ^ (step as i32).wrapping_mul(2654435761u32 as i32))?;
-            let smooth = ema.push(m.loss as f64);
-            if step % self.cfg.log_every.max(1) == 0
-                || step + 1 == self.cfg.steps {
-                report.loss_curve.push((step, m.loss));
-                log_info!("{} step {step:5} loss {:.4} (ema {:.4}) \
-                           gnorm {:.3} lr {:.2e}",
-                          self.model.variant.name, m.loss, smooth,
-                          m.grad_norm, lr);
-            }
-            report.final_loss = m.loss;
-
-            let do_eval = self.cfg.eval_every > 0
-                && !self.model.variant.eval_files.is_empty()
-                && ((step + 1) % self.cfg.eval_every == 0
-                    || step + 1 == self.cfg.steps);
-            if do_eval {
-                let em = self.evaluate(state, data, &mut eval_rng)?;
-                report.eval_curve.push((step + 1, em));
-                log_info!("{} eval@{}: loss {:.4} tok_acc {:.3} \
-                           seq_acc {:.3}",
-                          self.model.variant.name, step + 1, em.loss,
-                          em.token_acc, em.seq_acc);
-                if em.loss < report.best_eval_loss {
-                    report.best_eval_loss = em.loss;
-                    report.best_eval_step = step + 1;
-                    evals_since_best = 0;
-                    if let Some(dir) = &self.cfg.checkpoint {
-                        std::fs::create_dir_all(dir)?;
-                        self.model.save_checkpoint(
-                            state, &dir.join(format!(
-                                "{}.best.ckpt", self.model.variant.name)))?;
-                    }
-                } else {
-                    evals_since_best += 1;
-                    if self.patience > 0 && evals_since_best >= self.patience {
-                        log_info!("early stop at step {} (patience {})",
-                                  step + 1, self.patience);
-                        report.steps_run = step + 1;
-                        break;
-                    }
-                }
-                report.final_eval = Some(em);
-            }
-            report.steps_run = step + 1;
-        }
-
-        report.steps_per_sec =
-            report.steps_run as f64 / t0.elapsed().as_secs_f64();
-        if let Some(dir) = &self.cfg.checkpoint {
-            std::fs::create_dir_all(dir)?;
-            self.model.save_checkpoint(
-                state,
-                &dir.join(format!("{}.final.ckpt",
-                                  self.model.variant.name)))?;
-        }
-        Ok(report)
+        let mut backend = PjrtTrain { model: self.model, state };
+        run_loop(&mut backend, &self.cfg, self.patience, data)
     }
 
     /// Average eval metrics over `eval_batches` fresh batches.
-    pub fn evaluate(&self, state: &TrainState, data: &mut dyn DataSource,
+    pub fn evaluate(&self, state: &mut TrainState, data: &mut dyn DataSource,
                     rng: &mut Rng) -> Result<EvalMetrics> {
-        let n = self.cfg.eval_batches.max(1);
-        let mut acc = EvalMetrics::default();
-        for _ in 0..n {
-            let b = data.eval_batch(rng);
-            let m = self.model.eval(state, &b)?;
-            acc.loss += m.loss / n as f32;
-            acc.token_acc += m.token_acc / n as f32;
-            acc.seq_acc += m.seq_acc / n as f32;
-        }
-        Ok(acc)
+        let backend = PjrtTrain { model: self.model, state };
+        evaluate(&backend, &self.cfg, data, rng)
     }
 }

@@ -7,12 +7,18 @@
 //! `coordinator::infer` (generation, RL rollouts) and
 //! `coordinator::server` (dynamic batching) are generic over this trait,
 //! so the whole serving stack runs identically with or without artifacts.
+//!
+//! [`TrainBackend`] is the training-side mirror: one optimizer step +
+//! evaluation + checkpointing, implemented by [`PjrtTrain`] (the AOT
+//! train-step executable) and `crate::backend::NativeTrainer` (log-space
+//! scan VJP + AdamW in Rust).  `coordinator::trainer::run_loop` drives
+//! either through this trait, making training artifact-optional too.
 
 use anyhow::Result;
 
-use crate::tensor::Tensor;
+use crate::tensor::{Batch, Tensor};
 
-use super::model::Model;
+use super::model::{EvalMetrics, Model, StepMetrics, TrainState};
 
 /// Largest batch a backend without fixed step executables will form when
 /// planning dynamic batches.
@@ -79,6 +85,63 @@ pub fn plan_batch(queue_len: usize, available: &[usize]) -> Option<usize> {
     sizes.sort_unstable();
     sizes.iter().rev().find(|&&b| b <= queue_len).copied()
         .or_else(|| sizes.first().copied())
+}
+
+// ---------------------------------------------------------------------------
+// training backends
+// ---------------------------------------------------------------------------
+
+/// A training engine: one optimizer step per call, periodic evaluation,
+/// checkpointing.  `coordinator::trainer::run_loop` is generic over this,
+/// so the host-side loop (batching, LR schedule, early stopping) is shared
+/// between the PJRT artifact path and the native Rust path.
+pub trait TrainBackend {
+    /// Label used in logs and checkpoint file names.
+    fn name(&self) -> &str;
+
+    /// One optimizer step on `batch` at learning rate `lr`; `drop_seed`
+    /// feeds dropout where the backend supports it (PJRT).
+    fn train_step(&mut self, batch: &Batch, lr: f32, drop_seed: i32)
+                  -> Result<StepMetrics>;
+
+    /// Whether [`TrainBackend::eval`] can run (PJRT needs exported eval
+    /// executables; native always can).
+    fn supports_eval(&self) -> bool;
+
+    fn eval(&self, batch: &Batch) -> Result<EvalMetrics>;
+
+    fn save_checkpoint(&self, path: &std::path::Path) -> Result<()>;
+}
+
+/// [`TrainBackend`] over the AOT train-step executable: borrows the opened
+/// [`Model`] and mutates the caller's [`TrainState`] in place, so callers
+/// keep ownership of the parameter literals for later inference.
+pub struct PjrtTrain<'a, 'rt> {
+    pub model: &'a Model<'rt>,
+    pub state: &'a mut TrainState,
+}
+
+impl TrainBackend for PjrtTrain<'_, '_> {
+    fn name(&self) -> &str {
+        &self.model.variant.name
+    }
+
+    fn train_step(&mut self, batch: &Batch, lr: f32, drop_seed: i32)
+                  -> Result<StepMetrics> {
+        self.model.train_step(self.state, batch, lr, drop_seed)
+    }
+
+    fn supports_eval(&self) -> bool {
+        !self.model.variant.eval_files.is_empty()
+    }
+
+    fn eval(&self, batch: &Batch) -> Result<EvalMetrics> {
+        self.model.eval(self.state, batch)
+    }
+
+    fn save_checkpoint(&self, path: &std::path::Path) -> Result<()> {
+        self.model.save_checkpoint(self.state, path)
+    }
 }
 
 /// The PJRT/XLA artifact backend: borrows an opened [`Model`] and its

@@ -1,13 +1,21 @@
 //! Streaming and batch statistics for benchmarks and training metrics.
 
 /// Welford online mean/variance.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct Welford {
     n: u64,
     mean: f64,
     m2: f64,
     min: f64,
     max: f64,
+}
+
+/// Must match [`Welford::new`]: the derived impl zeroed min/max, so any
+/// all-positive series reported `min() == 0.0` when built via `default()`.
+impl Default for Welford {
+    fn default() -> Self {
+        Welford::new()
+    }
 }
 
 impl Welford {
@@ -146,6 +154,20 @@ mod tests {
         assert_eq!(w.min(), -3.0);
         assert_eq!(w.max(), 16.5);
         assert_eq!(w.count(), 6);
+    }
+
+    #[test]
+    fn default_matches_new() {
+        // regression: the derived Default started min/max at 0.0, so an
+        // all-positive series reported min = 0.0
+        let mut w = Welford::default();
+        w.push(3.0);
+        w.push(5.0);
+        assert_eq!(w.min(), 3.0);
+        assert_eq!(w.max(), 5.0);
+        let mut neg = Welford::default();
+        neg.push(-2.0);
+        assert_eq!(neg.max(), -2.0);
     }
 
     #[test]
