@@ -20,8 +20,8 @@ use anyhow::Result;
 use crate::runtime::Backend;
 use crate::tensor::Tensor;
 
-pub use native::{NativeInit, NativeModel, NativeScratch, NativeState,
-                 NativeTrainer};
+pub use native::{Head, NativeInit, NativeModel, NativeScratch,
+                 NativeState, NativeTrainer};
 
 /// Native CPU backend: owns the model parameters, serves any batch size.
 pub struct NativeBackend {

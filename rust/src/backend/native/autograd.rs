@@ -27,6 +27,7 @@
 use anyhow::{bail, Result};
 
 use crate::tensor::{Tensor, TensorData};
+use crate::util::rng::splitmix64;
 use crate::util::threads::{self, SlicePtr, ThreadPool};
 
 use super::linalg::{self, g, g_grad, gelu, gelu_grad, log_g, sigmoid, silu,
@@ -74,6 +75,12 @@ pub struct BlockTape {
     pub u2: Option<Vec<f32>>,
     /// MLP hidden pre-activations (before GELU), `(B·T, mult·d)`.
     pub mlp_pre: Option<Vec<f32>>,
+    /// Inverted-dropout multipliers applied to the mixer residual branch
+    /// (`None` when `drop_rate == 0` — that path is bit-identical to the
+    /// pre-dropout forward).
+    pub drop_mixer: Option<Vec<f32>>,
+    /// Inverted-dropout multipliers on the MLP residual branch.
+    pub drop_mlp: Option<Vec<f32>>,
 }
 
 /// Everything [`backward`] needs from one forward pass.
@@ -112,9 +119,89 @@ fn map_pool(pool: &ThreadPool, src: &[f32], dst: &mut Vec<f32>,
     });
 }
 
+/// Inverted-dropout multiplier for element `idx` of dropout stream
+/// `stream`: 0 with probability `rate`, else `1/(1-rate)`.  Streams
+/// mirror `backbone.py`'s key folding — `2·layer` for the mixer residual
+/// branch, `2·layer + 1` for the MLP branch.  Counter-based (SplitMix64
+/// of seed/stream/index), so any element's multiplier is computable
+/// independently of every other: masks are bit-identical across thread
+/// counts, and tests can mirror them exactly.
+pub fn drop_multiplier(seed: i32, stream: u64, idx: u64, rate: f32) -> f32 {
+    let mut key = (seed as u32 as u64)
+        ^ stream.wrapping_mul(0xA076_1D64_78BD_642F);
+    key = key.wrapping_add(idx.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let u = (splitmix64(&mut key) >> 11) as f64
+        * (1.0 / (1u64 << 53) as f64);
+    if u < rate as f64 {
+        0.0
+    } else {
+        1.0 / (1.0 - rate)
+    }
+}
+
+/// Generate one residual branch's dropout mask and apply it to `v` in
+/// place (fixed [`GATE_CHUNK`] task granularity).  `None` when
+/// `rate <= 0`: zero rate never touches `v`, keeping that path
+/// bit-identical to the no-dropout forward.
+fn drop_branch(pool: &ThreadPool, v: &mut [f32], rate: f32, seed: i32,
+               stream: u64) -> Option<Vec<f32>> {
+    if rate <= 0.0 {
+        return None;
+    }
+    let n = v.len();
+    let mut mask = vec![0.0f32; n];
+    let apply = |mv: &mut [f32], vv: &mut [f32], s: usize| {
+        for (i, (m, x)) in mv.iter_mut().zip(vv.iter_mut()).enumerate() {
+            *m = drop_multiplier(seed, stream, (s + i) as u64, rate);
+            *x *= *m;
+        }
+    };
+    if n < PAR_MIN_MAP || pool.active() == 1 {
+        apply(mask.as_mut_slice(), v, 0);
+    } else {
+        let mp = SlicePtr::new(mask.as_mut_slice());
+        let vp = SlicePtr::new(v);
+        pool.run_chunks(n, GATE_CHUNK, |s, e| {
+            let mv = unsafe { mp.slice(s, e - s) };
+            let vv = unsafe { vp.slice(s, e - s) };
+            apply(mv, vv, s);
+        });
+    }
+    Some(mask)
+}
+
+/// `dst = a ⊙ b` across the pool in fixed chunks (dropout backward).
+fn mul_pool(pool: &ThreadPool, a: &[f32], b: &[f32], dst: &mut Vec<f32>) {
+    debug_assert_eq!(a.len(), b.len());
+    linalg::reuse(dst, a.len());
+    if a.len() < PAR_MIN_MAP || pool.active() == 1 {
+        for ((d, &x), &y) in dst.iter_mut().zip(a).zip(b) {
+            *d = x * y;
+        }
+        return;
+    }
+    let dp = SlicePtr::new(dst.as_mut_slice());
+    pool.run_chunks(a.len(), GATE_CHUNK, |s, e| {
+        let dv = unsafe { dp.slice(s, e - s) };
+        for (i, d) in dv.iter_mut().enumerate() {
+            *d = a[s + i] * b[s + i];
+        }
+    });
+}
+
+/// Training forward pass without dropout — see [`forward_train`].
+pub fn forward(model: &NativeModel, x: &Tensor) -> Result<Tape> {
+    forward_train(model, x, 0.0, 0)
+}
+
 /// Training forward pass: identical math to [`NativeModel::forward`]
 /// (parallel gates + chunked log-space scan), recording activations.
-pub fn forward(model: &NativeModel, x: &Tensor) -> Result<Tape> {
+/// When `drop_rate > 0`, inverted dropout is applied to the two residual
+/// branches (mixer output, MLP output — `backbone.py`'s placement) with
+/// masks keyed on `drop_seed`; `drop_rate == 0` leaves every value
+/// untouched, bit-identical to the pre-dropout path.
+pub fn forward_train(model: &NativeModel, x: &Tensor, drop_rate: f32,
+                     drop_seed: i32) -> Result<Tape> {
     let (batch, t) = match (x.dims.len(), &x.data) {
         (2, TensorData::I32(_)) => (x.dims[0], x.dims[1]),
         (3, TensorData::F32(_)) => (x.dims[0], x.dims[1]),
@@ -131,7 +218,7 @@ pub fn forward(model: &NativeModel, x: &Tensor) -> Result<Tape> {
     model.embed_rows_into(x, rows, &mut h)?;
 
     let mut blocks = Vec::with_capacity(model.blocks.len());
-    for blk in &model.blocks {
+    for (li, blk) in model.blocks.iter().enumerate() {
         let h_in = h.clone();
         let mut u1 = Vec::new();
         linalg::rmsnorm_pool_into(pool, &h, &blk.ln1, rows, d, &mut u1);
@@ -155,9 +242,11 @@ pub fn forward(model: &NativeModel, x: &Tensor) -> Result<Tape> {
         let down = mixer_down(&blk.mixer);
         let mut y = Vec::new();
         down.apply_pool_into(pool, &h_seq, rows, &mut y);
+        let drop_mixer = drop_branch(pool, &mut y, drop_rate, drop_seed,
+                                     2 * li as u64);
         linalg::add_assign(&mut h, &y);
 
-        let (h_mid, u2, mlp_pre) = match (&blk.ln2, &blk.mlp) {
+        let (h_mid, u2, mlp_pre, drop_mlp) = match (&blk.ln2, &blk.mlp) {
             (Some(ln2), Some(mlp)) => {
                 let h_mid = h.clone();
                 let mut u2 = Vec::new();
@@ -168,13 +257,16 @@ pub fn forward(model: &NativeModel, x: &Tensor) -> Result<Tape> {
                 map_pool(pool, &mlp_pre, &mut act, gelu);
                 let mut z = Vec::new();
                 mlp.down.apply_pool_into(pool, &act, rows, &mut z);
+                let drop_mlp = drop_branch(pool, &mut z, drop_rate,
+                                           drop_seed, 2 * li as u64 + 1);
                 linalg::add_assign(&mut h, &z);
-                (Some(h_mid), Some(u2), Some(mlp_pre))
+                (Some(h_mid), Some(u2), Some(mlp_pre), drop_mlp)
             }
-            _ => (None, None, None),
+            _ => (None, None, None, None),
         };
         blocks.push(BlockTape { h_in, u1, conv_pre, mixer_in, k, pre, f,
-                                h: h_seq, h_mid, u2, mlp_pre });
+                                h: h_seq, h_mid, u2, mlp_pre, drop_mixer,
+                                drop_mlp });
     }
     let h_fin = h.clone();
     let mut u_f = Vec::new();
@@ -573,21 +665,31 @@ pub fn backward(model: &NativeModel, tape: &Tape, x: &Tensor,
     let mut dh_seq = Vec::new();
     let mut dmix_in = Vec::new();
     let mut dtmp = Vec::new();
+    let mut dbranch = Vec::new();
 
     for bi in (0..model.blocks.len()).rev() {
         let blk = &model.blocks[bi];
         let bt = &tape.blocks[bi];
         let gb = &mut grads.blocks[bi];
 
-        // MLP branch: h = h_mid + down(gelu(up(rmsnorm(h_mid, ln2))))
+        // MLP branch: h = h_mid + drop(down(gelu(up(rmsnorm(h_mid, ln2)))))
         if let (Some(ln2), Some(mlp), Some(h_mid), Some(u2), Some(mlp_pre),
                 Some(gln2), Some(gmlp)) =
             (&blk.ln2, &blk.mlp, &bt.h_mid, &bt.u2, &bt.mlp_pre,
              gb.ln2.as_deref_mut(), gb.mlp.as_mut()) {
             let mut act = Vec::new();
             map_pool(pool, mlp_pre, &mut act, gelu);
+            // the branch's upstream gradient passes back through its
+            // dropout mask; the residual passthrough (dh itself) does not
+            let dz: &[f32] = match &bt.drop_mlp {
+                Some(m) => {
+                    mul_pool(pool, &dh, m, &mut dbranch);
+                    &dbranch
+                }
+                None => &dh,
+            };
             let mut dact = Vec::new();
-            dense_bwd(pool, &mlp.down, &act, &dh, rows,
+            dense_bwd(pool, &mlp.down, &act, dz, rows,
                       Some((&mut dact, false)), &mut gmlp.down.w,
                       &mut gmlp.down.b);
             // through GELU
@@ -601,7 +703,7 @@ pub fn backward(model: &NativeModel, tape: &Tape, x: &Tensor,
             linalg::add_assign(&mut dh, &dtmp);
         }
 
-        // mixer branch: h_mid = h_in + down(scan(gates(mixer_in)))
+        // mixer branch: h_mid = h_in + drop(down(scan(gates(mixer_in))))
         let dhh = blk.mixer.d_hidden();
         let is_lstm = matches!(blk.mixer, MixerParams::MinLstm(_));
         {
@@ -612,7 +714,14 @@ pub fn backward(model: &NativeModel, tape: &Tape, x: &Tensor,
                     (&m.down, &mut gm.down),
                 _ => bail!("backward: grads mixer kind mismatch"),
             };
-            dense_bwd(pool, down, &bt.h, &dh, rows,
+            let dy: &[f32] = match &bt.drop_mixer {
+                Some(m) => {
+                    mul_pool(pool, &dh, m, &mut dbranch);
+                    &dbranch
+                }
+                None => &dh,
+            };
+            dense_bwd(pool, down, &bt.h, dy, rows,
                       Some((&mut dh_seq, false)), &mut gdown.w,
                       &mut gdown.b);
         }
@@ -720,6 +829,57 @@ mod tests {
                         "{kind}: leaf '{name}' has non-finite gradients");
             }
         }
+    }
+
+    #[test]
+    fn zero_dropout_rate_is_bit_identical_to_plain_forward() {
+        for kind in ["mingru", "minlstm"] {
+            let model = tiny(kind, true, true);
+            let x = Tensor::i32(vec![2, 8], (0..16).map(|i| (i % 9) as i32)
+                                .collect());
+            let plain = forward(&model, &x).unwrap();
+            // any seed: rate 0 must never sample, scale, or branch
+            let trained = forward_train(&model, &x, 0.0, 0x5EED).unwrap();
+            assert_eq!(plain.logits, trained.logits,
+                       "{kind}: rate=0 drifted from the no-dropout path");
+            for bt in &trained.blocks {
+                assert!(bt.drop_mixer.is_none() && bt.drop_mlp.is_none());
+            }
+        }
+    }
+
+    #[test]
+    fn dropout_masks_are_inverted_and_seed_keyed() {
+        let model = tiny("mingru", false, true);
+        let x = Tensor::i32(vec![2, 16], (0..32).map(|i| (i % 9) as i32)
+                            .collect());
+        let rate = 0.3f32;
+        let tape = forward_train(&model, &x, rate, 7).unwrap();
+        let scale = 1.0 / (1.0 - rate);
+        let mut zeros = 0usize;
+        let mut total = 0usize;
+        for bt in &tape.blocks {
+            for mask in [bt.drop_mixer.as_ref(), bt.drop_mlp.as_ref()]
+                .into_iter().flatten() {
+                for &m in mask {
+                    assert!(m == 0.0 || (m - scale).abs() < 1e-6,
+                            "multiplier {m} is neither 0 nor 1/(1-rate)");
+                    zeros += usize::from(m == 0.0);
+                    total += 1;
+                }
+            }
+        }
+        let frac = zeros as f64 / total as f64;
+        assert!((frac - rate as f64).abs() < 0.08,
+                "dropped fraction {frac} far from rate {rate}");
+        // masks are a pure function of the seed: same seed → same tape,
+        // different seed → different masks
+        let again = forward_train(&model, &x, rate, 7).unwrap();
+        assert_eq!(tape.logits, again.logits);
+        let other = forward_train(&model, &x, rate, 8).unwrap();
+        assert_ne!(tape.blocks[0].drop_mixer, other.blocks[0].drop_mixer);
+        // mixer and MLP branches draw from distinct streams
+        assert_ne!(tape.blocks[0].drop_mixer, tape.blocks[0].drop_mlp);
     }
 
     #[test]

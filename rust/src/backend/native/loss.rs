@@ -1,5 +1,18 @@
-//! Fused masked softmax-cross-entropy for the native training path,
-//! mirroring `python/compile/tasks.py::masked_ce_loss` / `_metrics`:
+//! Fused training heads for the native path — one per task family the
+//! paper's benchmark suite uses:
+//!
+//! * [`masked_ce`] — masked softmax-cross-entropy over discrete targets
+//!   (language modelling, Selective Copying, Chomsky transduction),
+//!   mirroring `python/compile/tasks.py::masked_ce_loss` / `_metrics`;
+//! * [`masked_mse`] — masked mean-squared error over continuous targets
+//!   (Decision-Transformer-style action regression, Table 3), mirroring
+//!   `tasks.py::masked_mse_loss`;
+//! * [`seq_ce`] — sequence classification: mask-weighted mean pooling of
+//!   the per-position logits followed by softmax-cross-entropy against one
+//!   label per sequence (the LRA tasks of Tables 4/6; with the collate's
+//!   single-CLS mask this reduces to final-position classification).
+//!
+//! For masked CE:
 //!
 //! ```text
 //! loss      = Σ mask_rt · (logsumexp(logits_rt) - logits_rt[target_rt]) / M
@@ -8,16 +21,41 @@
 //! seq_acc   = fraction of masked sequences with every masked position right
 //! ```
 //!
-//! with `M = max(Σ mask, 1)`.  The per-row log-sum-exp and the global
-//! reductions accumulate in f64 so the returned loss is stable enough for
-//! finite-difference gradient checks; the backward pass is fused — the
-//! softmax is never materialized separately from `dlogits`.
+//! with `M = max(Σ mask, 1)`.  In every head the per-row log-sum-exp and
+//! the global reductions accumulate in f64 so the returned loss is stable
+//! enough for finite-difference gradient checks; backward passes are fused
+//! — softmaxes are never materialized separately from the gradient.
 
-use anyhow::{bail, Result};
+use std::fmt;
+
+use anyhow::{anyhow, bail, Result};
 
 use crate::runtime::EvalMetrics;
 
 use super::linalg;
+
+/// Which fused loss a [`super::NativeTrainer`] drives — the native
+/// counterpart of the manifest's `task` string plus the pooled
+/// classification refinement for the LRA workloads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Head {
+    /// Per-position softmax-CE over discrete targets under a mask.
+    MaskedCe,
+    /// Per-position squared error over continuous targets under a mask.
+    MaskedMse,
+    /// Mask-pooled softmax-CE: one class label per sequence.
+    SeqClassify,
+}
+
+impl fmt::Display for Head {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Head::MaskedCe => "masked_ce",
+            Head::MaskedMse => "masked_mse",
+            Head::SeqClassify => "seq_classify",
+        })
+    }
+}
 
 /// Loss + metrics for `(batch, t, vocab)` logits against `(batch, t)` i32
 /// targets under a `(batch, t)` f32 mask.  When `dlogits` is given it is
@@ -105,6 +143,217 @@ pub fn masked_ce(logits: &[f32], targets: &[i32], mask: &[f32],
     })
 }
 
+/// Masked mean-squared error for `(batch, t, a_dim)` predictions against
+/// same-shaped f32 targets under a `(batch, t)` mask (the RL regression
+/// head):
+///
+/// ```text
+/// loss  = Σ_rt mask_rt · Σ_a (pred_rta - tgt_rta)² / M
+/// dpred = 2 · mask_rt / M · (pred_rta - tgt_rta)
+/// ```
+///
+/// with `M = max(Σ mask, 1)`.  There is no discrete accuracy for a
+/// regression head, so `token_acc`/`seq_acc` are 0 (matching the PJRT
+/// `masked_mse` eval, which returns loss alone).
+pub fn masked_mse(pred: &[f32], targets: &[f32], mask: &[f32],
+                  batch: usize, t: usize, a_dim: usize,
+                  mut dpred: Option<&mut Vec<f32>>) -> Result<EvalMetrics> {
+    let rows = batch * t;
+    if pred.len() != rows * a_dim {
+        bail!("masked_mse: pred {} != {rows} x {a_dim}", pred.len());
+    }
+    if targets.len() != pred.len() || mask.len() != rows {
+        bail!("masked_mse: targets/mask {} / {} != {} / {rows}",
+              targets.len(), mask.len(), pred.len());
+    }
+    if let Some(d) = dpred.as_mut() {
+        linalg::reuse(d, rows * a_dim);
+    }
+    let msum: f64 = mask.iter().map(|&m| m as f64).sum();
+    let m_norm = msum.max(1.0);
+    let mut loss = 0.0f64;
+    for r in 0..rows {
+        let w = mask[r] as f64;
+        let pr = &pred[r * a_dim..(r + 1) * a_dim];
+        let tr = &targets[r * a_dim..(r + 1) * a_dim];
+        if w > 0.0 {
+            let mut se = 0.0f64;
+            for (&p, &tv) in pr.iter().zip(tr) {
+                let e = p as f64 - tv as f64;
+                se += e * e;
+            }
+            loss += w * se;
+        }
+        if let Some(d) = dpred.as_deref_mut() {
+            let dr = &mut d[r * a_dim..(r + 1) * a_dim];
+            let scale = (2.0 * w / m_norm) as f32;
+            if scale == 0.0 {
+                dr.fill(0.0);
+            } else {
+                for ((dv, &p), &tv) in dr.iter_mut().zip(pr).zip(tr) {
+                    *dv = scale * (p - tv);
+                }
+            }
+        }
+    }
+    Ok(EvalMetrics { loss: (loss / m_norm) as f32, token_acc: 0.0,
+                     seq_acc: 0.0 })
+}
+
+/// Sequence classification: mask-weighted mean pooling of the per-position
+/// logits, then softmax-CE against one label per sequence:
+///
+/// ```text
+/// pool_bv   = Σ_t mask_bt · logits_btv / W_b      W_b = Σ_t mask_bt
+/// loss      = Σ_b [W_b > 0] · CE(pool_b, label_b) / B_m
+/// dlogits   = mask_bt / W_b · (softmax(pool_b) - onehot(label_b)) / B_m
+/// ```
+///
+/// where `B_m` counts sequences with any masked position and `label_b` is
+/// the target at the sequence's first masked position (the LRA collate
+/// puts it on the CLS slot; every masked position must agree).  Both
+/// `token_acc` and `seq_acc` report pooled classification accuracy.
+pub fn seq_ce(logits: &[f32], targets: &[i32], mask: &[f32],
+              batch: usize, t: usize, vocab: usize,
+              mut dlogits: Option<&mut Vec<f32>>) -> Result<EvalMetrics> {
+    let rows = batch * t;
+    if logits.len() != rows * vocab {
+        bail!("seq_ce: logits {} != {rows} x {vocab}", logits.len());
+    }
+    if targets.len() != rows || mask.len() != rows {
+        bail!("seq_ce: targets/mask {} / {} != {rows}", targets.len(),
+              mask.len());
+    }
+    if let Some(d) = dlogits.as_mut() {
+        linalg::reuse(d, rows * vocab);
+        d.iter_mut().for_each(|v| *v = 0.0);
+    }
+    // first pass: which sequences carry a mask (fixes the 1/B_m scale
+    // before any gradient is written)
+    let mut w_seq = vec![0.0f64; batch];
+    let mut labels = vec![0i32; batch];
+    let mut b_m = 0usize;
+    for bi in 0..batch {
+        let mut label: Option<i32> = None;
+        for ti in 0..t {
+            let r = bi * t + ti;
+            if mask[r] > 0.0 {
+                w_seq[bi] += mask[r] as f64;
+                let tgt = targets[r];
+                if tgt < 0 || tgt as usize >= vocab {
+                    bail!("seq_ce: target {tgt} outside {vocab} classes at \
+                           (b={bi}, t={ti})");
+                }
+                match label {
+                    None => label = Some(tgt),
+                    Some(l) if l != tgt => bail!(
+                        "seq_ce: sequence {bi} has conflicting labels \
+                         {l} and {tgt} on masked positions"),
+                    _ => {}
+                }
+            }
+        }
+        if let Some(l) = label {
+            labels[bi] = l;
+            b_m += 1;
+        }
+    }
+    let b_norm = (b_m as f64).max(1.0);
+
+    let mut loss = 0.0f64;
+    let mut correct = 0usize;
+    let mut pool = vec![0.0f64; vocab];
+    let mut soft = vec![0.0f32; vocab];
+    for bi in 0..batch {
+        if w_seq[bi] <= 0.0 {
+            continue;
+        }
+        pool.iter_mut().for_each(|v| *v = 0.0);
+        for ti in 0..t {
+            let r = bi * t + ti;
+            let w = mask[r] as f64 / w_seq[bi];
+            if w > 0.0 {
+                let row = &logits[r * vocab..(r + 1) * vocab];
+                for (p, &l) in pool.iter_mut().zip(row) {
+                    *p += w * l as f64;
+                }
+            }
+        }
+        let label = labels[bi] as usize;
+        let mut pmax = f64::NEG_INFINITY;
+        let mut argmax = 0usize;
+        for (j, &p) in pool.iter().enumerate() {
+            if p > pmax {
+                pmax = p;
+                argmax = j;
+            }
+        }
+        let sum: f64 = pool.iter().map(|&p| (p - pmax).exp()).sum();
+        let lse = pmax + sum.ln();
+        loss += lse - pool[label];
+        if argmax == label {
+            correct += 1;
+        }
+        if let Some(d) = dlogits.as_deref_mut() {
+            // softmax(pool) − onehot(label) is shared by every masked
+            // position of the sequence; compute it once
+            for (j, s) in soft.iter_mut().enumerate() {
+                let one = if j == label { 1.0 } else { 0.0 };
+                *s = ((pool[j] - lse).exp() - one) as f32;
+            }
+            for ti in 0..t {
+                let r = bi * t + ti;
+                let w = (mask[r] as f64 / (w_seq[bi] * b_norm)) as f32;
+                if w <= 0.0 {
+                    continue;
+                }
+                let dr = &mut d[r * vocab..(r + 1) * vocab];
+                for (dv, &s) in dr.iter_mut().zip(&soft) {
+                    *dv = w * s;
+                }
+            }
+        }
+    }
+    let acc = (correct as f64 / b_norm) as f32;
+    Ok(EvalMetrics { loss: (loss / b_norm) as f32, token_acc: acc,
+                     seq_acc: acc })
+}
+
+/// Dispatch `head` on a `(logits, batch)` pair, with the dtype/shape
+/// checks phrased as actionable errors (the up-front workload validation
+/// in `coordinator` should make these unreachable from the CLI).
+#[allow(clippy::too_many_arguments)]
+pub fn apply_head(head: Head, logits: &[f32],
+                  targets: &crate::tensor::Tensor, mask: &[f32],
+                  batch: usize, t: usize, out_dim: usize,
+                  dlogits: Option<&mut Vec<f32>>) -> Result<EvalMetrics> {
+    match head {
+        Head::MaskedCe | Head::SeqClassify => {
+            let tg = targets.data.as_i32().ok_or_else(|| anyhow!(
+                "{head} head needs i32 targets; this batch has {} targets \
+                 — the workload belongs to the masked_mse (regression) \
+                 head", targets.dtype_name()))?;
+            match head {
+                Head::MaskedCe =>
+                    masked_ce(logits, tg, mask, batch, t, out_dim, dlogits),
+                _ => seq_ce(logits, tg, mask, batch, t, out_dim, dlogits),
+            }
+        }
+        Head::MaskedMse => {
+            let tg = targets.data.as_f32().ok_or_else(|| anyhow!(
+                "masked_mse head needs f32 targets; this batch has {} \
+                 targets — the workload belongs to a discrete \
+                 (cross-entropy) head", targets.dtype_name()))?;
+            let a = targets.dims.get(2).copied().unwrap_or(1);
+            if a != out_dim {
+                bail!("masked_mse: batch regresses {a}-dim actions but the \
+                       model head is {out_dim}-dim");
+            }
+            masked_mse(logits, tg, mask, batch, t, out_dim, dlogits)
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -175,5 +424,136 @@ mod tests {
         let logits = vec![0.0f32; 4];
         assert!(masked_ce(&logits, &[4], &[1.0], 1, 1, 4, None).is_err());
         assert!(masked_ce(&logits, &[-1], &[1.0], 1, 1, 4, None).is_err());
+        assert!(seq_ce(&logits, &[4], &[1.0], 1, 1, 4, None).is_err());
+        assert!(seq_ce(&logits, &[-1], &[1.0], 1, 1, 4, None).is_err());
+    }
+
+    #[test]
+    fn mse_loss_and_gradient_match_finite_differences() {
+        let (b, t, a) = (2usize, 3usize, 2usize);
+        let mut rng = crate::util::rng::Rng::new(11);
+        let pred: Vec<f32> = (0..b * t * a)
+            .map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let tgt: Vec<f32> = (0..b * t * a)
+            .map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mask = vec![1.0, 0.5, 0.0, 1.0, 1.0, 0.0];
+        let mut dp = Vec::new();
+        let m = masked_mse(&pred, &tgt, &mask, b, t, a,
+                           Some(&mut dp)).unwrap();
+        assert!(m.loss > 0.0 && m.loss.is_finite());
+        assert_eq!(m.token_acc, 0.0);
+        // masked-out rows (t=2 of seq 0, t=2 of seq 1) get zero gradient
+        assert!(dp[2 * a..3 * a].iter().all(|&g| g == 0.0));
+        let eps = 1e-3f32;
+        for i in 0..pred.len() {
+            let mut pp = pred.clone();
+            pp[i] += eps;
+            let mut pm = pred.clone();
+            pm[i] -= eps;
+            let fp = masked_mse(&pp, &tgt, &mask, b, t, a, None)
+                .unwrap().loss as f64;
+            let fm = masked_mse(&pm, &tgt, &mask, b, t, a, None)
+                .unwrap().loss as f64;
+            let fd = (fp - fm) / (2.0 * eps as f64);
+            assert!((dp[i] as f64 - fd).abs() < 1e-3,
+                    "dpred[{i}] {} vs fd {fd}", dp[i]);
+        }
+    }
+
+    #[test]
+    fn mse_zero_error_is_zero_loss() {
+        let pred = vec![0.3f32, -0.7, 1.1, 0.0];
+        let m = masked_mse(&pred, &pred, &[1.0, 1.0], 1, 2, 2, None)
+            .unwrap();
+        assert_eq!(m.loss, 0.0);
+    }
+
+    #[test]
+    fn seq_ce_single_cls_mask_matches_masked_ce_loss() {
+        // with exactly one masked position per sequence and Σ mask = B_m,
+        // pooling degenerates to that position and both heads agree on the
+        // loss (masked_ce averages over positions, seq_ce over sequences —
+        // equal weights here)
+        let (b, t, v) = (3usize, 4usize, 5usize);
+        let mut rng = crate::util::rng::Rng::new(5);
+        let logits: Vec<f32> = (0..b * t * v)
+            .map(|_| rng.normal_f32(0.0, 2.0)).collect();
+        let mut targets = vec![0i32; b * t];
+        let mut mask = vec![0.0f32; b * t];
+        for bi in 0..b {
+            let r = bi * t + t - 1;
+            mask[r] = 1.0;
+            targets[r] = rng.below(v as u64) as i32;
+        }
+        let mut d_pool = Vec::new();
+        let a = seq_ce(&logits, &targets, &mask, b, t, v,
+                       Some(&mut d_pool)).unwrap();
+        let mut d_ce = Vec::new();
+        let c = masked_ce(&logits, &targets, &mask, b, t, v,
+                          Some(&mut d_ce)).unwrap();
+        assert!((a.loss - c.loss).abs() < 1e-5, "{} vs {}", a.loss, c.loss);
+        for (x, y) in d_pool.iter().zip(&d_ce) {
+            assert!((x - y).abs() < 1e-6, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn seq_ce_gradient_matches_finite_differences_with_pooling() {
+        // genuinely pooled: several masked positions per sequence
+        let (b, t, v) = (2usize, 3usize, 4usize);
+        let mut rng = crate::util::rng::Rng::new(9);
+        let logits: Vec<f32> = (0..b * t * v)
+            .map(|_| rng.normal_f32(0.0, 1.5)).collect();
+        let targets = vec![2i32, 2, 2, 1, 1, 1];
+        let mask = vec![1.0f32, 0.5, 0.0, 0.25, 1.0, 1.0];
+        let mut dl = Vec::new();
+        seq_ce(&logits, &targets, &mask, b, t, v, Some(&mut dl)).unwrap();
+        let eps = 1e-3f32;
+        for i in 0..logits.len() {
+            let mut lp = logits.clone();
+            lp[i] += eps;
+            let mut lm = logits.clone();
+            lm[i] -= eps;
+            let fp = seq_ce(&lp, &targets, &mask, b, t, v, None)
+                .unwrap().loss as f64;
+            let fm = seq_ce(&lm, &targets, &mask, b, t, v, None)
+                .unwrap().loss as f64;
+            let fd = (fp - fm) / (2.0 * eps as f64);
+            assert!((dl[i] as f64 - fd).abs() < 1e-3,
+                    "dlogits[{i}] {} vs fd {fd}", dl[i]);
+        }
+    }
+
+    #[test]
+    fn seq_ce_rejects_conflicting_labels_and_skips_unmasked() {
+        let logits = vec![0.0f32; 8];
+        // two masked positions with different labels: ambiguous example
+        assert!(seq_ce(&logits, &[0, 1], &[1.0, 1.0], 1, 2, 4, None)
+                .is_err());
+        // a fully unmasked sequence contributes nothing (loss over B_m=1)
+        let l2 = vec![0.0f32; 16];
+        let m = seq_ce(&l2, &[1, 0, 0, 0], &[1.0, 0.0, 0.0, 0.0], 2, 2, 4,
+                       None).unwrap();
+        assert!((m.loss - (4.0f32).ln()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn apply_head_rejects_dtype_mismatch_with_clear_error() {
+        use crate::tensor::Tensor;
+        let logits = vec![0.0f32; 4];
+        let mask = vec![1.0f32];
+        let cont = Tensor::f32(vec![1, 1, 4], vec![0.0; 4]);
+        let disc = Tensor::i32(vec![1, 1], vec![1]);
+        let e = apply_head(Head::MaskedCe, &logits, &cont, &mask, 1, 1, 4,
+                           None).unwrap_err();
+        assert!(e.to_string().contains("masked_mse"), "{e}");
+        let e = apply_head(Head::MaskedMse, &logits, &disc, &mask, 1, 1, 4,
+                           None).unwrap_err();
+        assert!(e.to_string().contains("cross-entropy"), "{e}");
+        // and the happy paths dispatch
+        assert!(apply_head(Head::MaskedMse, &logits, &cont, &mask, 1, 1, 4,
+                           None).is_ok());
+        assert!(apply_head(Head::SeqClassify, &logits, &disc, &mask, 1, 1,
+                           4, None).is_ok());
     }
 }

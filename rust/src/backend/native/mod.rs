@@ -1,7 +1,8 @@
 //! Pure-Rust CPU implementations of the minGRU/minLSTM paths:
 //! scan primitives, mixer cells, the backbone model, and — since the
-//! training subsystem landed — reverse-mode gradients (`autograd`), the
-//! fused masked cross-entropy (`loss`), AdamW (`adam`), and the
+//! training subsystem landed — reverse-mode gradients with dropout
+//! (`autograd`), the fused training heads (`loss`: masked CE, masked MSE,
+//! pooled sequence classification), AdamW (`adam`), and the
 //! [`NativeTrainer`] driving them.  No PJRT, no artifacts — everything
 //! here runs from a checkpoint (or random init) alone.
 
@@ -17,6 +18,7 @@ pub mod scratch;
 pub mod train;
 
 pub use adam::{AdamCfg, AdamState};
+pub use loss::Head;
 pub use mingru::{MinGru, H0_VALUE};
 pub use minlstm::MinLstm;
 pub use model::{NativeInit, NativeModel, NativeState};

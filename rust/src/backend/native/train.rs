@@ -3,12 +3,15 @@
 //! `coordinator::trainer::run_loop` drives it exactly like the PJRT
 //! artifact path — no artifacts, no Python, no XLA.
 //!
-//! One [`NativeTrainer::train_step`] is: recording forward
-//! ([`autograd::forward`]) → fused masked softmax-cross-entropy
-//! ([`loss::masked_ce`]) → reverse pass ([`autograd::backward`]) → AdamW
-//! with global-norm clipping ([`AdamState::update`]), all on the shared
-//! thread pool.  Checkpoints carry `params/...` (loadable by native *and*
-//! PJRT inference) plus `opt/adam/...` moments and `meta/step`.
+//! One [`NativeTrainer::train_batch`] is: recording forward with dropout
+//! ([`autograd::forward_train`]) → the workload's fused head
+//! ([`loss::masked_ce`] / [`loss::masked_mse`] / [`loss::seq_ce`], see
+//! [`Head`]) → reverse pass ([`autograd::backward`]) → AdamW with
+//! global-norm clipping ([`AdamState::update`]), all on the shared thread
+//! pool.  The `drop_seed` the loop feeds every step keys the
+//! counter-based dropout masks, so a run is reproducible at any thread
+//! count.  Checkpoints carry `params/...` (loadable by native *and* PJRT
+//! inference) plus `opt/adam/...` moments and `meta/step`.
 
 use std::path::Path;
 
@@ -20,7 +23,7 @@ use crate::util::io::{self, NamedTensor};
 
 use super::adam::{AdamCfg, AdamState};
 use super::autograd;
-use super::loss;
+use super::loss::{self, Head};
 use super::model::NativeModel;
 
 pub struct NativeTrainer {
@@ -29,6 +32,11 @@ pub struct NativeTrainer {
     pub cfg: AdamCfg,
     /// Display / checkpoint-file label (no path separators).
     pub label: String,
+    /// Which fused loss this trainer drives (default: masked CE).
+    pub head: Head,
+    /// Inverted-dropout rate on the residual branches (0 = off; the
+    /// recording forward is then bit-identical to the dropout-free path).
+    pub drop_rate: f32,
     grads: NativeModel,
     dlogits: Vec<f32>,
 }
@@ -39,6 +47,8 @@ impl NativeTrainer {
             adam: AdamState::new(&model),
             cfg: AdamCfg::default(),
             label: label.replace('/', "_"),
+            head: Head::MaskedCe,
+            drop_rate: 0.0,
             grads: model.zeros_like(),
             dlogits: Vec::new(),
             model,
@@ -59,6 +69,8 @@ impl NativeTrainer {
             adam,
             cfg: AdamCfg::default(),
             label: label.replace('/', "_"),
+            head: Head::MaskedCe,
+            drop_rate: 0.0,
             grads: model.zeros_like(),
             dlogits: Vec::new(),
             model,
@@ -78,26 +90,25 @@ impl NativeTrainer {
         io::save(path, &tensors)
     }
 
-    fn batch_targets<'a>(&self, batch: &'a Batch)
-                         -> Result<(&'a [i32], &'a [f32], usize, usize)> {
-        let targets = batch.targets.data.as_i32()
-            .ok_or_else(|| anyhow!(
-                "native training covers masked_ce (discrete targets); this \
-                 batch has {} targets — use the PJRT train path for \
-                 masked_mse workloads", batch.targets.dtype_name()))?;
+    fn head_loss(&self, logits: &[f32], batch: &Batch,
+                 dlogits: Option<&mut Vec<f32>>) -> Result<EvalMetrics> {
         let mask = batch.mask.data.as_f32()
             .ok_or_else(|| anyhow!("batch mask is not f32"))?;
-        Ok((targets, mask, batch.batch_size(), batch.seq_len()))
+        loss::apply_head(self.head, logits, &batch.targets, mask,
+                         batch.batch_size(), batch.seq_len(),
+                         self.model.vocab_out, dlogits)
     }
 
     /// One optimizer step; returns loss and pre-clip gradient norm.
-    pub fn train_batch(&mut self, batch: &Batch, lr: f32)
+    pub fn train_batch(&mut self, batch: &Batch, lr: f32, drop_seed: i32)
                        -> Result<StepMetrics> {
-        let (targets, mask, b, t) = self.batch_targets(batch)?;
-        let tape = autograd::forward(&self.model, &batch.x)?;
-        let metrics = loss::masked_ce(&tape.logits, targets, mask, b, t,
-                                      self.model.vocab_out,
-                                      Some(&mut self.dlogits))?;
+        let tape = autograd::forward_train(&self.model, &batch.x,
+                                           self.drop_rate, drop_seed)?;
+        let mut dlogits = std::mem::take(&mut self.dlogits);
+        let metrics = self.head_loss(&tape.logits, batch,
+                                     Some(&mut dlogits));
+        self.dlogits = dlogits;
+        let metrics = metrics?;
         if !metrics.loss.is_finite() {
             bail!("non-finite loss {} at step {} of {}", metrics.loss,
                   self.adam.step + 1, self.label);
@@ -112,16 +123,15 @@ impl NativeTrainer {
         Ok(StepMetrics { loss: metrics.loss, grad_norm: gnorm })
     }
 
-    /// Forward-only evaluation (loss + token/sequence accuracy) through
-    /// the non-recording inference forward — bit-identical logits to the
-    /// tape-recording pass (pinned by autograd's tests) without its
-    /// per-block activation caches.
+    /// Forward-only evaluation through the non-recording inference
+    /// forward — bit-identical logits to the tape-recording pass (pinned
+    /// by autograd's tests) without its per-block activation caches, and
+    /// always dropout-free (eval mode).
     pub fn eval_batch(&self, batch: &Batch) -> Result<EvalMetrics> {
-        let (targets, mask, b, t) = self.batch_targets(batch)?;
         let (logits, _) = self.model.forward(&batch.x)?;
         let lv = logits.data.as_f32()
             .ok_or_else(|| anyhow!("logits not f32"))?;
-        loss::masked_ce(lv, targets, mask, b, t, self.model.vocab_out, None)
+        self.head_loss(lv, batch, None)
     }
 }
 
@@ -130,9 +140,9 @@ impl TrainBackend for NativeTrainer {
         &self.label
     }
 
-    fn train_step(&mut self, batch: &Batch, lr: f32, _drop_seed: i32)
+    fn train_step(&mut self, batch: &Batch, lr: f32, drop_seed: i32)
                   -> Result<StepMetrics> {
-        self.train_batch(batch, lr)
+        self.train_batch(batch, lr, drop_seed)
     }
 
     /// Native eval needs no per-shape executables: any batch works.
@@ -180,17 +190,121 @@ mod tests {
         let mut tr = NativeTrainer::new(model, "echo");
         let mut rng = Rng::new(4);
         let first = tr.train_batch(&echo_batch(&mut rng, 8, 12, vocab),
-                                   5e-3).unwrap();
+                                   5e-3, 0).unwrap();
         let mut last = first;
-        for _ in 0..60 {
+        for s in 0..60 {
             last = tr.train_batch(&echo_batch(&mut rng, 8, 12, vocab),
-                                  5e-3).unwrap();
+                                  5e-3, s).unwrap();
         }
         assert!(last.loss < first.loss / 2.0,
                 "echo loss {} -> {} (expected >= 2x drop)", first.loss,
                 last.loss);
         assert_eq!(tr.step(), 61);
         assert!(last.grad_norm.is_finite());
+    }
+
+    #[test]
+    fn regression_head_learns_identity_map() {
+        // masked_mse end to end: regress targets = features (in_proj +
+        // head can represent it), loss must collapse
+        let f = 3usize;
+        let model = NativeModel::init_random(&NativeInit {
+            kind: "minlstm".to_string(),
+            d_model: 16,
+            vocab_in: None,
+            input_dim: Some(f),
+            vocab_out: f,
+            n_layers: 1,
+            forget_bias: 1.0,
+            ..Default::default()
+        }, 13).unwrap();
+        let mut tr = NativeTrainer::new(model, "reg");
+        tr.head = Head::MaskedMse;
+        let mut rng = Rng::new(6);
+        let (b, t) = (8usize, 6usize);
+        let mut batch = || {
+            let x: Vec<f32> = (0..b * t * f)
+                .map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            Batch {
+                targets: Tensor::f32(vec![b, t, f], x.clone()),
+                x: Tensor::f32(vec![b, t, f], x),
+                mask: Tensor::f32(vec![b, t], vec![1.0; b * t]),
+            }
+        };
+        let first = tr.train_batch(&batch(), 5e-3, 0).unwrap();
+        let mut last = first;
+        for s in 0..80 {
+            last = tr.train_batch(&batch(), 5e-3, s).unwrap();
+        }
+        assert!(last.loss < first.loss / 2.0,
+                "mse loss {} -> {} (expected >= 2x drop)", first.loss,
+                last.loss);
+        // and eval agrees with the head (no token accuracy for regression)
+        let m = tr.eval_batch(&batch()).unwrap();
+        assert!(m.loss.is_finite());
+        assert_eq!(m.token_acc, 0.0);
+    }
+
+    #[test]
+    fn classification_head_learns_repeated_token_rule() {
+        // seq_ce end to end: label = the (repeated) content token, answer
+        // read at the masked final CLS position
+        let vocab = 6usize;
+        let model = NativeModel::init_random(&NativeInit {
+            d_model: 16,
+            vocab_in: Some(vocab),
+            vocab_out: vocab,
+            n_layers: 1,
+            ..Default::default()
+        }, 17).unwrap();
+        let mut tr = NativeTrainer::new(model, "cls");
+        tr.head = Head::SeqClassify;
+        let mut rng = Rng::new(8);
+        let (b, t) = (8usize, 10usize);
+        let mut batch = || {
+            let mut x = vec![0i32; b * t];
+            let mut tg = vec![0i32; b * t];
+            let mut m = vec![0f32; b * t];
+            for bi in 0..b {
+                let label = rng.below(vocab as u64 - 1) as i32 + 1;
+                x[bi * t..bi * t + t - 1].fill(label);
+                x[bi * t + t - 1] = 0; // CLS slot
+                tg[bi * t + t - 1] = label;
+                m[bi * t + t - 1] = 1.0;
+            }
+            Batch {
+                x: Tensor::i32(vec![b, t], x),
+                targets: Tensor::i32(vec![b, t], tg),
+                mask: Tensor::f32(vec![b, t], m),
+            }
+        };
+        let first = tr.train_batch(&batch(), 5e-3, 0).unwrap();
+        let mut last = first;
+        for s in 0..120 {
+            last = tr.train_batch(&batch(), 5e-3, s).unwrap();
+        }
+        assert!(last.loss < first.loss / 2.0,
+                "cls loss {} -> {} (expected >= 2x drop)", first.loss,
+                last.loss);
+        let m = tr.eval_batch(&batch()).unwrap();
+        assert!(m.seq_acc > 0.5, "classification acc {}", m.seq_acc);
+    }
+
+    #[test]
+    fn head_target_mismatch_is_a_clear_error_not_a_panic() {
+        let model = NativeModel::init_random(&NativeInit {
+            d_model: 8,
+            vocab_in: Some(8),
+            vocab_out: 8,
+            n_layers: 1,
+            ..Default::default()
+        }, 1).unwrap();
+        let mut tr = NativeTrainer::new(model, "mismatch");
+        tr.head = Head::MaskedMse;
+        let mut rng = Rng::new(2);
+        let e = tr.train_batch(&echo_batch(&mut rng, 2, 4, 8), 1e-3, 0)
+            .unwrap_err();
+        assert!(e.to_string().contains("f32 targets"), "{e}");
     }
 
     #[test]
@@ -206,8 +320,8 @@ mod tests {
         let mut tr = NativeTrainer::new(model, "ckpt/label");
         assert_eq!(tr.label, "ckpt_label", "path separators sanitized");
         let mut rng = Rng::new(9);
-        for _ in 0..3 {
-            tr.train_batch(&echo_batch(&mut rng, 4, 6, vocab), 1e-3)
+        for s in 0..3 {
+            tr.train_batch(&echo_batch(&mut rng, 4, 6, vocab), 1e-3, s)
                 .unwrap();
         }
         let dir = std::env::temp_dir().join("minrnn_native_train_test");

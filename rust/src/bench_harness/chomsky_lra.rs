@@ -132,6 +132,21 @@ pub struct LraSource {
     pub t: usize,
 }
 
+impl LraSource {
+    /// Smallest sequence length the task's generator can fill — the
+    /// single owner of the size formulas in [`DataSource::train_batch`]
+    /// below (listops: `t - 10`, retrieval: `(t - 3) / 2` per side,
+    /// gimage: the fixed 16×16 pixel grid + CLS).  Callers must check
+    /// this up front; below it the generators underflow.
+    pub fn min_seq_len(kind: &str) -> usize {
+        match kind {
+            "listops" => 16,
+            "retrieval" => 8,
+            _ => gimage::SIDE * gimage::SIDE + 1,
+        }
+    }
+}
+
 impl DataSource for LraSource {
     fn train_batch(&mut self, rng: &mut Rng) -> Batch {
         let b = self.batch;

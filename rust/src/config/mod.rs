@@ -26,6 +26,9 @@ pub struct TrainConfig {
     pub schedule: Schedule,
     pub seed: u64,
     pub forget_bias: f32,
+    /// Residual-branch dropout rate; honored by the native trainer (PJRT
+    /// bakes its rate into the exported train-step artifact).
+    pub dropout: f32,
     pub eval_every: usize,
     pub eval_batches: usize,
     pub log_every: usize,
@@ -44,6 +47,7 @@ impl Default for TrainConfig {
             schedule: Schedule::WarmupCosine { warmup: 20 },
             seed: 0,
             forget_bias: 0.0,
+            dropout: 0.0,
             eval_every: 50,
             eval_batches: 4,
             log_every: 10,
@@ -87,6 +91,12 @@ impl TrainConfig {
         }
         if let Some(v) = j.get("forget_bias").and_then(|v| v.as_f64()) {
             self.forget_bias = v as f32;
+        }
+        if let Some(v) = j.get("dropout").and_then(|v| v.as_f64()) {
+            if !(0.0..1.0).contains(&v) {
+                anyhow::bail!("config dropout must be in [0, 1), got {v}");
+            }
+            self.dropout = v as f32;
         }
         if let Some(v) = j.get("eval_every").and_then(|v| v.as_usize()) {
             self.eval_every = v;
@@ -144,6 +154,12 @@ impl TrainConfig {
         if let Some(v) = p.get("forget-bias") {
             self.forget_bias = v.parse()?;
         }
+        if let Some(v) = p.get("dropout") {
+            self.dropout = v.parse()?;
+            if !(0.0..1.0).contains(&self.dropout) {
+                anyhow::bail!("--dropout must be in [0, 1), got {v}");
+            }
+        }
         if let Some(v) = p.get("eval-every") {
             self.eval_every = v.parse()?;
         }
@@ -185,6 +201,28 @@ mod tests {
         assert_eq!(cfg.lr, 0.5);
         assert_eq!(cfg.schedule, Schedule::Constant);
         assert_eq!(cfg.lr_at(3), 0.5);
+    }
+
+    #[test]
+    fn dropout_from_json_and_cli_bounds() {
+        let mut cfg = TrainConfig::default();
+        assert_eq!(cfg.dropout, 0.0);
+        let j = json::parse(r#"{"dropout": 0.15}"#).unwrap();
+        cfg.apply_json(&j).unwrap();
+        assert!((cfg.dropout - 0.15).abs() < 1e-6);
+        // JSON rejects rates outside [0, 1), same as the CLI
+        let bad_json = json::parse(r#"{"dropout": 1.0}"#).unwrap();
+        assert!(cfg.apply_json(&bad_json).is_err());
+        // CLI rejects rates outside [0, 1)
+        let cmd = crate::util::cli::Command::new("train", "t")
+            .opt("dropout", Some("0"), "rate");
+        let bad = cmd.parse(&["--dropout".to_string(), "1.0".to_string()])
+            .unwrap();
+        assert!(cfg.apply_cli(&bad).is_err());
+        let good = cmd.parse(&["--dropout".to_string(), "0.5".to_string()])
+            .unwrap();
+        cfg.apply_cli(&good).unwrap();
+        assert_eq!(cfg.dropout, 0.5);
     }
 
     #[test]

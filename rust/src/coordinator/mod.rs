@@ -63,6 +63,7 @@ Subcommands:
   train <variant|workload>     train a variant (pjrt) or workload (native)
   generate [variant]           sample text from a (trained) LM variant
   serve [variant]              dynamic-batching serving demo
+  rollout <env>                roll out a trained RL policy (native)
   bench                        native-backend throughput benchmark
   experiment <id>|all          regenerate a paper table/figure
   experiments                  list experiment ids
@@ -72,12 +73,17 @@ Subcommands:
 runs the AOT XLA artifacts; `native` runs the pure-Rust CPU
 implementation and needs no artifacts.  Native training
 (`train --backend native <workload>`) runs the log-space scan VJP + AdamW
-in Rust on char_lm / random_tokens / selective_copy / chomsky/<task>;
-native inference loads weights with --resume or samples from a seeded
-random init sized by --kind/--layers/--d-model/--expansion.  `train`,
-`generate`, `serve`, and `bench` take `--threads N` (or MINRNN_THREADS)
-to size the native thread pool; `serve` takes `--max-batch` to cap
-lockstep decode lanes.  Run `minrnn <subcommand> --help` for options.";
+in Rust on the full workload matrix — char_lm / random_tokens /
+selective_copy / chomsky/<task> (masked CE), lra/<task> (pooled
+classification), rl/<env> (masked-MSE action regression) — with
+`--dropout` honored on the residual branches; native inference loads
+weights with --resume or samples from a seeded random init sized by
+--kind/--layers/--d-model/--expansion.  `rollout` drives a
+natively-trained rl/<env> checkpoint in its live environment
+(Decision-Transformer-style serving).  `train`, `generate`, `serve`, and
+`bench` take `--threads N` (or MINRNN_THREADS) to size the native thread
+pool; `serve` takes `--max-batch` to cap lockstep decode lanes.  Run
+`minrnn <subcommand> --help` for options.";
 
 pub fn cli_main(args: Vec<String>) -> i32 {
     crate::util::logging::init();
@@ -102,6 +108,7 @@ fn dispatch(args: Vec<String>) -> Result<()> {
         "train" => cmd_train(rest),
         "generate" => cmd_generate(rest),
         "serve" => cmd_serve(rest),
+        "rollout" => cmd_rollout(rest),
         "bench" => cmd_bench(rest),
         "experiment" => cmd_experiment(rest),
         "perf" => cmd_perf(rest),
@@ -195,6 +202,8 @@ fn train_command() -> Command {
         .opt("lr", Some("0.001"), "peak learning rate")
         .opt("seed", Some("0"), "seed")
         .opt("forget-bias", Some("0"), "minLSTM forget-gate bias init")
+        .opt("dropout", Some("0"),
+             "residual-branch dropout rate (native backend; 0 = off)")
         .opt("eval-every", Some("50"), "steps between evals (0 = off)")
         .opt("checkpoint", None, "directory for checkpoints")
         .opt("resume", None, "checkpoint file to resume from")
@@ -217,7 +226,7 @@ fn train_command() -> Command {
               cores)")
         .positional("variant", "artifact variant (pjrt) or workload \
                      (native: char_lm, random_tokens, selective_copy, \
-                     chomsky/<task>)")
+                     chomsky/<task>, lra/<task>, rl/<env>)")
 }
 
 /// Build the workload data source for a variant from its manifest entry.
@@ -274,6 +283,13 @@ pub fn data_source(kind: &str, b: usize, t: usize,
         }));
     }
     if let Some(task_name) = kind.strip_prefix("lra/") {
+        // LraSource derives generator sizes from t; a too-short sequence
+        // must fail here, not as a usize underflow mid-loop
+        let min_t = bench_harness::chomsky_lra::LraSource
+            ::min_seq_len(task_name);
+        if t < min_t {
+            bail!("lra/{task_name} needs seq_len >= {min_t} (got {t})");
+        }
         let src = bench_harness::chomsky_lra::LraSource {
             kind: task_name.to_string(),
             batch: b,
@@ -282,7 +298,8 @@ pub fn data_source(kind: &str, b: usize, t: usize,
         return Ok(Box::new(src));
     }
     if let Some(env) = kind.strip_prefix("rl/") {
-        let ds = rl::OfflineDataset::build(env, rl::Regime::Medium, 100, 0);
+        let ds = rl::OfflineDataset::build(env, rl::Regime::Medium,
+                                           RL_EPISODES, RL_SEED);
         return Ok(Box::new(trainer::FnSource {
             f: move |rng: &mut Rng| ds.batch(rng, b, t),
         }));
@@ -290,22 +307,121 @@ pub fn data_source(kind: &str, b: usize, t: usize,
     Err(anyhow!("no data source for workload '{kind}'"))
 }
 
-/// Token vocabulary of a discrete workload — sizes the native model's
-/// embedding and head when training without an artifact manifest.
-fn native_train_vocab(kind: &str) -> Result<usize> {
+/// Offline-RL dataset defaults shared by `train --backend native rl/<env>`
+/// and `minrnn rollout`, so a rollout rebuilds the exact normalization
+/// statistics the training batches used.
+pub const RL_EPISODES: usize = 100;
+pub const RL_SEED: u64 = 0;
+
+/// What a workload needs from the native trainer: which fused loss head,
+/// the input layer (token embedding or continuous projection), and the
+/// output width.  This is the native stand-in for a manifest entry's
+/// `task`/`workload` fields — derived from the workload name alone, so
+/// `minrnn train --backend native` works from nothing.
+#[derive(Clone, Debug)]
+pub struct WorkloadSpec {
+    pub head: crate::backend::Head,
+    /// Token vocabulary for discrete inputs.
+    pub vocab_in: Option<usize>,
+    /// Feature width for continuous inputs (RL).
+    pub input_dim: Option<usize>,
+    /// Head width: vocabulary, class count, or action dimension.
+    pub out_dim: usize,
+}
+
+/// Resolve the [`WorkloadSpec`] of a native-trainable workload, or a
+/// clear up-front error naming the supported set — the train loop must
+/// never discover an unsupported combination mid-step as a dtype bail.
+pub fn native_workload(kind: &str) -> Result<WorkloadSpec> {
+    use crate::backend::Head;
+    let discrete = |vocab: usize| WorkloadSpec {
+        head: Head::MaskedCe,
+        vocab_in: Some(vocab),
+        input_dim: None,
+        out_dim: vocab,
+    };
     if kind == "char_lm" {
-        return Ok(CharVocab::new().size());
+        return Ok(discrete(CharVocab::new().size()));
     }
     // selective_copy, chomsky/*, and random_tokens all use the shared
     // 16-symbol token map
     if kind == "selective_copy" || kind == "random_tokens"
         || kind.starts_with("chomsky/") {
-        return Ok(16);
+        return Ok(discrete(16));
+    }
+    if let Some(task) = kind.strip_prefix("lra/") {
+        let (vocab_in, n_classes) = crate::data::lra::task_dims(task)
+            .ok_or_else(|| anyhow!(
+                "unknown LRA task '{task}' (expected listops, retrieval, \
+                 or gimage)"))?;
+        return Ok(WorkloadSpec {
+            head: Head::SeqClassify,
+            vocab_in: Some(vocab_in),
+            input_dim: None,
+            out_dim: n_classes,
+        });
+    }
+    if let Some(env_name) = kind.strip_prefix("rl/") {
+        let env = crate::data::rl::envs::by_name(env_name)
+            .ok_or_else(|| anyhow!(
+                "unknown RL env '{env_name}' (expected pointmass, \
+                 pendulum, or walker1d)"))?;
+        return Ok(WorkloadSpec {
+            head: Head::MaskedMse,
+            vocab_in: None,
+            // DT features per step: [rtg, obs (normalized), prev action]
+            input_dim: Some(1 + env.obs_dim() + env.act_dim()),
+            out_dim: env.act_dim(),
+        });
     }
     Err(anyhow!(
         "train --backend native supports char_lm, random_tokens, \
-         selective_copy, and chomsky/<task> workloads (got '{kind}'); \
-         continuous (rl/*) and LRA workloads train through the PJRT path"))
+         selective_copy, chomsky/<task>, lra/<task>, and rl/<env> \
+         workloads (got '{kind}')"))
+}
+
+impl WorkloadSpec {
+    /// Check a model (fresh init or `--resume`d checkpoint) against this
+    /// workload before the first step, so mismatches surface as one clear
+    /// error instead of a mid-loop dtype/shape failure.
+    pub fn validate(&self, model: &NativeModel, workload: &str)
+                    -> Result<()> {
+        use crate::backend::native::model::InputLayer;
+        match (&model.input, self.vocab_in, self.input_dim) {
+            (InputLayer::Embed(e), Some(v), _) => {
+                if e.vocab < v {
+                    bail!("workload '{workload}' uses {v} token ids but \
+                           the model embeds only {}; retrain or resume a \
+                           matching checkpoint", e.vocab);
+                }
+            }
+            (InputLayer::Proj(p), _, Some(f)) => {
+                if p.d_in != f {
+                    bail!("workload '{workload}' feeds {f}-dim features \
+                           but the model projects {}-dim inputs", p.d_in);
+                }
+            }
+            (InputLayer::Embed(_), None, _) => bail!(
+                "workload '{workload}' ({} head) feeds continuous \
+                 features, but the model embeds discrete tokens — its \
+                 checkpoint was trained for a token workload", self.head),
+            (InputLayer::Proj(_), Some(_), _) => bail!(
+                "workload '{workload}' feeds discrete tokens, but the \
+                 model projects continuous features — its checkpoint was \
+                 trained for an rl/* workload"),
+            _ => unreachable!("spec has vocab_in or input_dim"),
+        }
+        let need_exact = matches!(self.head,
+                                  crate::backend::Head::MaskedMse
+                                  | crate::backend::Head::SeqClassify);
+        if (need_exact && model.vocab_out != self.out_dim)
+            || model.vocab_out < self.out_dim {
+            bail!("workload '{workload}' needs a {}-wide {} head but the \
+                   model head is {}-wide", self.out_dim, self.head,
+                  model.vocab_out);
+        }
+        Ok(())
+    }
 }
 
 fn cmd_train(args: &[String]) -> Result<()> {
@@ -322,12 +438,21 @@ fn cmd_train(args: &[String]) -> Result<()> {
     let report = match backend.as_str() {
         "native" => {
             apply_threads_opt(&p)?;
-            let mut nt = native_trainer(&p, &cfg, &variant)?;
+            let spec = native_workload(&variant)?;
+            let mut nt = native_trainer(&p, &cfg, &variant, &spec)?;
             let mut data = data_source(&variant, p.usize("batch")?,
                                        p.usize("seq-len")?, None)?;
             trainer::run_loop(&mut nt, &cfg, 0, data.as_mut())?
         }
         "pjrt" => {
+            if cfg.dropout > 0.0 {
+                return Err(anyhow!(
+                    "--dropout {} has no effect with --backend pjrt: the \
+                     artifact's train step bakes its dropout rate in at \
+                     export time (python/compile/exports.py) — re-export \
+                     the variant, or train with --backend native",
+                    cfg.dropout));
+            }
             let rt = Runtime::cpu()?;
             let manifest = open_manifest(cfg.artifacts.to_str().unwrap())?;
             let model = Model::open(&rt, manifest, &variant)?;
@@ -351,33 +476,39 @@ fn cmd_train(args: &[String]) -> Result<()> {
 
 /// Build the native trainer for `cmd_train`: resume a full training
 /// checkpoint (params + Adam moments) or start from a seeded random init
-/// sized for the workload's vocabulary.
-fn native_trainer(p: &Parsed, cfg: &TrainConfig, workload: &str)
-                  -> Result<NativeTrainer> {
-    let vocab = native_train_vocab(workload)?;
-    match &cfg.resume {
-        Some(path) => NativeTrainer::from_checkpoint(path, workload),
+/// sized by the workload's [`WorkloadSpec`]; either way the model is
+/// validated against the workload before the first step, and the spec's
+/// head plus the configured dropout rate are installed.
+fn native_trainer(p: &Parsed, cfg: &TrainConfig, workload: &str,
+                  spec: &WorkloadSpec) -> Result<NativeTrainer> {
+    let mut nt = match &cfg.resume {
+        Some(path) => NativeTrainer::from_checkpoint(path, workload)?,
         None => {
             let init = NativeInit {
                 kind: p.req("kind")?.to_string(),
                 n_layers: p.usize("layers")?,
                 d_model: p.usize("d-model")?,
                 expansion: p.usize("expansion")?,
-                vocab_in: Some(vocab),
-                input_dim: None,
-                vocab_out: vocab,
+                vocab_in: spec.vocab_in,
+                input_dim: spec.input_dim,
+                vocab_out: spec.out_dim,
                 conv: p.flag("conv"),
                 mlp: p.flag("mlp"),
                 mlp_mult: 4,
                 forget_bias: cfg.forget_bias,
             };
             log_info!("native training: fresh {} init ({} layers, d={}, \
-                       vocab={vocab}) on '{workload}'",
-                      init.kind, init.n_layers, init.d_model);
-            Ok(NativeTrainer::new(NativeModel::init_random(&init, cfg.seed)?,
-                                  workload))
+                       out={}) with the {} head on '{workload}'",
+                      init.kind, init.n_layers, init.d_model, spec.out_dim,
+                      spec.head);
+            NativeTrainer::new(NativeModel::init_random(&init, cfg.seed)?,
+                               workload)
         }
-    }
+    };
+    spec.validate(&nt.model, workload)?;
+    nt.head = spec.head;
+    nt.drop_rate = cfg.dropout;
+    Ok(nt)
 }
 
 /// Options shared by the backend-selectable inference subcommands.
@@ -568,6 +699,52 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             "unknown backend '{other}' (expected pjrt | native)")),
     };
     report_serve(&stats);
+    Ok(())
+}
+
+/// Serve a natively-trained RL policy: load the `rl/<env>` checkpoint,
+/// rebuild the offline dataset (for the normalization statistics and the
+/// conditioning return the training batches used), and roll the policy
+/// out in the live environment — the inference half of the Table 3 loop,
+/// artifact-free.
+fn cmd_rollout(args: &[String]) -> Result<()> {
+    let cmd = Command::new("rollout", "roll out a trained RL policy")
+        .opt("resume", None, "rl/<env> training checkpoint (required)")
+        .opt("episodes", Some("3"), "rollout episodes")
+        .opt("seed", Some("0"), "rollout seed")
+        .opt("threads", None,
+             "native thread-pool size (default: MINRNN_THREADS, else all \
+              cores)")
+        .positional("env", "environment: pointmass, pendulum, walker1d");
+    let p = cmd.parse(args)?;
+    apply_threads_opt(&p)?;
+    let env = p.pos.first()
+        .ok_or_else(|| anyhow!("usage: minrnn rollout <env> --resume \
+                                <ckpt>"))?;
+    let spec = native_workload(&format!("rl/{env}"))?;
+    let ckpt = p.get("resume").ok_or_else(|| anyhow!(
+        "rollout needs --resume <ckpt> (train one with `minrnn train \
+         rl/{env} --backend native --checkpoint <dir>`)"))?;
+    let backend = NativeBackend::from_checkpoint(Path::new(ckpt))?;
+    spec.validate(&backend.model, &format!("rl/{env}"))?;
+
+    use crate::data::rl::{self, Regime};
+    let ds = rl::OfflineDataset::build(env, Regime::Medium, RL_EPISODES,
+                                       RL_SEED);
+    let target = ds.target_return();
+    let n = p.usize("episodes")?.max(1);
+    let seed = p.u64("seed")?;
+    let mut total = 0f32;
+    for k in 0..n {
+        let ret = infer::rollout_decision(&backend, &ds, target,
+                                          seed ^ (1000 + k as u64))?;
+        log_info!("episode {k}: return {ret:.3}");
+        total += ret;
+    }
+    let mean = total / n as f32;
+    let score = rl::normalized_score(env, mean, seed);
+    println!("{env}: mean return {mean:.3} over {n} episodes \
+              (target {target:.3}, expert-normalized score {score:.1})");
     Ok(())
 }
 

@@ -14,6 +14,21 @@ use crate::tensor::{Batch, Tensor};
 pub const PAD: i32 = 0;
 pub const CLS: i32 = 1;
 
+/// `(vocab_in, n_classes)` of an LRA task by name — sizes the native
+/// model's embedding and classification head when training without an
+/// artifact manifest.
+pub fn task_dims(kind: &str) -> Option<(usize, usize)> {
+    match kind {
+        // 0 PAD, 1 CLS, digits 2..=11, ops 12..=15, brackets 16/17
+        "listops" => Some((20, 10)),
+        // 0 PAD, 1 CLS, 2 SEP, body tokens 3..=31; same/different
+        "retrieval" => Some((32, 2)),
+        // 0 PAD, 1 CLS, pixel levels 2..=31; ten shape classes
+        "gimage" => Some((32, gimage::N_CLASSES)),
+        _ => None,
+    }
+}
+
 /// Stack classification examples: inputs padded to `t`, with a CLS answer
 /// slot at the last position carrying the label.
 pub fn collate_classification(examples: &[(Vec<i32>, i32)],

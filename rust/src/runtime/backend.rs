@@ -99,8 +99,10 @@ pub trait TrainBackend {
     /// Label used in logs and checkpoint file names.
     fn name(&self) -> &str;
 
-    /// One optimizer step on `batch` at learning rate `lr`; `drop_seed`
-    /// feeds dropout where the backend supports it (PJRT).
+    /// One optimizer step on `batch` at learning rate `lr`.  `drop_seed`
+    /// keys the step's dropout masks on both backends: PJRT folds it into
+    /// the exported train-step's PRNG, the native trainer feeds its
+    /// counter-based per-position mask generator (a no-op at rate 0).
     fn train_step(&mut self, batch: &Batch, lr: f32, drop_seed: i32)
                   -> Result<StepMetrics>;
 

@@ -1,7 +1,8 @@
 //! Native-training correctness: finite-difference gradient checks over
 //! every parameter leaf of both mixer backbones (conv/MLP on and off, the
-//! continuous-input path), and an end-to-end train → checkpoint → serve
-//! loop that must cut the loss at least 2x.
+//! continuous-input path, all three heads, dropout on and off), dropout
+//! determinism properties, and end-to-end train → checkpoint → serve
+//! loops per head.
 //!
 //! The finite-difference oracle evaluates the loss through an **f64
 //! mirror** of the forward pass (real-space recurrence — mathematically
@@ -10,21 +11,28 @@
 //! in f32 rounding; the analytic f32 gradients from
 //! `backend::native::autograd` must match to 1e-3 relative.  Directions
 //! are the normalized analytic gradients — the projection that catches
-//! both scale and sign errors on every leaf.
+//! both scale and sign errors on every leaf.  Dropout masks are a pure
+//! function of `(drop_seed, stream, index)` via
+//! `autograd::drop_multiplier`, so the mirror applies the exact masks the
+//! f32 pipeline drew.
 
 use minrnn::backend::native::{autograd, loss};
+use minrnn::backend::native::autograd::drop_multiplier;
 use minrnn::backend::native::linalg::CONV_K;
 use minrnn::backend::native::model::{InputLayer, MixerParams, NativeModel};
-use minrnn::backend::native::{NativeInit, NativeTrainer, H0_VALUE};
+use minrnn::backend::native::{Head, NativeInit, NativeTrainer, H0_VALUE};
 use minrnn::backend::NativeBackend;
 use minrnn::config::{Schedule, TrainConfig};
 use minrnn::coordinator::trainer::{run_loop, FnSource};
 use minrnn::coordinator::{infer, server};
+use minrnn::data::lra;
+use minrnn::data::rl::{OfflineDataset, Regime};
 use minrnn::tensor::{Batch, Tensor};
 use minrnn::util::rng::Rng;
+use minrnn::util::threads;
 
 // ---------------------------------------------------------------------------
-// f64 mirror of the forward pass + loss
+// f64 mirror of the forward pass + losses
 // ---------------------------------------------------------------------------
 
 fn sigmoid64(x: f64) -> f64 {
@@ -117,11 +125,14 @@ impl<'a> Leaves<'a> {
     }
 }
 
-/// Full-model loss in f64: real-space recurrence (identical algebra to
+/// Full-model logits in f64: real-space recurrence (identical algebra to
 /// the log-space scan), reading parameter values from `leaves` in
 /// [`NativeModel::leaf_names`] order — `model` supplies only structure.
-fn mirror_loss(model: &NativeModel, leaves: &[Vec<f64>], x: &Tensor,
-               targets: &[i32], mask: &[f32]) -> f64 {
+/// `drop`: the `(rate, seed)` of the training forward under test; masks
+/// come from the same [`drop_multiplier`] the f32 pipeline uses, applied
+/// to the same residual branches.
+fn mirror_logits(model: &NativeModel, leaves: &[Vec<f64>], x: &Tensor,
+                 drop: Option<(f32, i32)>) -> Vec<f64> {
     let mut lv = Leaves { v: leaves, i: 0 };
     let (batch, t) = (x.dims[0], x.dims[1]);
     let rows = batch * t;
@@ -145,7 +156,17 @@ fn mirror_loss(model: &NativeModel, leaves: &[Vec<f64>], x: &Tensor,
         }
         _ => panic!("mirror: input/x mismatch"),
     };
-    for blk in &model.blocks {
+    let drop64 = |v: &mut [f64], stream: u64| {
+        if let Some((rate, seed)) = drop {
+            if rate > 0.0 {
+                for (i, x) in v.iter_mut().enumerate() {
+                    *x *= drop_multiplier(seed, stream, i as u64,
+                                          rate) as f64;
+                }
+            }
+        }
+    };
+    for (li, blk) in model.blocks.iter().enumerate() {
         let ln1 = lv.pop();
         let u1 = rmsnorm64(&h, ln1, rows, d);
         let mixer_in = match &blk.conv {
@@ -206,7 +227,8 @@ fn mirror_loss(model: &NativeModel, leaves: &[Vec<f64>], x: &Tensor,
         }
         let wd = lv.pop();
         let bd = lv.pop();
-        let y = dense64(&hseq, wd, bd, rows, dh, d);
+        let mut y = dense64(&hseq, wd, bd, rows, dh, d);
+        drop64(&mut y, 2 * li as u64);
         for (hv, yv) in h.iter_mut().zip(&y) {
             *hv += yv;
         }
@@ -221,7 +243,8 @@ fn mirror_loss(model: &NativeModel, leaves: &[Vec<f64>], x: &Tensor,
             }
             let dw = lv.pop();
             let db = lv.pop();
-            let z = dense64(&hid, dw, db, rows, mlp.up.d_out, d);
+            let mut z = dense64(&hid, dw, db, rows, mlp.up.d_out, d);
+            drop64(&mut z, 2 * li as u64 + 1);
             for (hv, zv) in h.iter_mut().zip(&z) {
                 *hv += zv;
             }
@@ -231,26 +254,93 @@ fn mirror_loss(model: &NativeModel, leaves: &[Vec<f64>], x: &Tensor,
     let uf = rmsnorm64(&h, ln_f, rows, d);
     let hw = lv.pop();
     let hb = lv.pop();
-    let v = model.vocab_out;
-    let logits = dense64(&uf, hw, hb, rows, d, v);
+    let logits = dense64(&uf, hw, hb, rows, d, model.vocab_out);
     assert_eq!(lv.i, leaves.len(), "mirror consumed {} of {} leaves",
                lv.i, leaves.len());
+    logits
+}
 
-    // masked CE in f64
-    let msum: f64 = mask.iter().map(|&m| m as f64).sum::<f64>().max(1.0);
-    let mut lsum = 0.0;
-    for r in 0..rows {
-        let w = mask[r] as f64;
-        if w == 0.0 {
-            continue;
+/// Per-head targets for a gradient-check case.
+enum HeadData {
+    Ce { targets: Vec<i32> },
+    Mse { targets: Vec<f32> },
+    Cls { targets: Vec<i32> },
+}
+
+/// The head's loss over mirror logits, in f64 — one function per head,
+/// matching the fused f32 implementations' math exactly.
+fn mirror_loss(logits: &[f64], data: &HeadData, mask: &[f32],
+               batch: usize, t: usize, v: usize) -> f64 {
+    let rows = batch * t;
+    match data {
+        HeadData::Ce { targets } => {
+            let msum: f64 = mask.iter().map(|&m| m as f64).sum::<f64>()
+                .max(1.0);
+            let mut lsum = 0.0;
+            for r in 0..rows {
+                let w = mask[r] as f64;
+                if w == 0.0 {
+                    continue;
+                }
+                let row = &logits[r * v..(r + 1) * v];
+                let rmax = row.iter().cloned()
+                    .fold(f64::NEG_INFINITY, f64::max);
+                let lse = rmax + row.iter().map(|&l| (l - rmax).exp())
+                    .sum::<f64>().ln();
+                lsum += w * (lse - row[targets[r] as usize]);
+            }
+            lsum / msum
         }
-        let row = &logits[r * v..(r + 1) * v];
-        let rmax = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-        let lse = rmax
-            + row.iter().map(|&l| (l - rmax).exp()).sum::<f64>().ln();
-        lsum += w * (lse - row[targets[r] as usize]);
+        HeadData::Mse { targets } => {
+            let msum: f64 = mask.iter().map(|&m| m as f64).sum::<f64>()
+                .max(1.0);
+            let mut lsum = 0.0;
+            for r in 0..rows {
+                let w = mask[r] as f64;
+                if w == 0.0 {
+                    continue;
+                }
+                let mut se = 0.0;
+                for a in 0..v {
+                    let e = logits[r * v + a] - targets[r * v + a] as f64;
+                    se += e * e;
+                }
+                lsum += w * se;
+            }
+            lsum / msum
+        }
+        HeadData::Cls { targets } => {
+            let mut lsum = 0.0;
+            let mut b_m = 0usize;
+            for bi in 0..batch {
+                let w_b: f64 = (0..t)
+                    .map(|ti| mask[bi * t + ti] as f64).sum();
+                if w_b <= 0.0 {
+                    continue;
+                }
+                b_m += 1;
+                let mut pool = vec![0.0f64; v];
+                let mut label = None;
+                for ti in 0..t {
+                    let r = bi * t + ti;
+                    let w = mask[r] as f64 / w_b;
+                    if w > 0.0 {
+                        label.get_or_insert(targets[r] as usize);
+                        for (p, &l) in pool.iter_mut()
+                            .zip(&logits[r * v..(r + 1) * v]) {
+                            *p += w * l;
+                        }
+                    }
+                }
+                let pmax = pool.iter().cloned()
+                    .fold(f64::NEG_INFINITY, f64::max);
+                let lse = pmax + pool.iter().map(|&p| (p - pmax).exp())
+                    .sum::<f64>().ln();
+                lsum += lse - pool[label.unwrap()];
+            }
+            lsum / (b_m as f64).max(1.0)
+        }
     }
-    lsum / msum
 }
 
 // ---------------------------------------------------------------------------
@@ -263,18 +353,21 @@ struct Case {
     mlp: bool,
     /// None → token embedding input; Some(f) → continuous features.
     input_dim: Option<usize>,
+    /// `(rate, drop_seed)` of the training forward, if dropout is on.
+    drop: Option<(f32, i32)>,
 }
 
-fn grad_check(case: &Case, seed: u64) {
-    let vocab = 11usize;
+fn grad_check(case: &Case, head: Head, seed: u64) {
+    // out_dim: vocabulary for the discrete heads, action dim for MSE
+    let out = if head == Head::MaskedMse { 4usize } else { 11usize };
     let model = NativeModel::init_random(&NativeInit {
         kind: case.kind.to_string(),
         n_layers: 2,
         d_model: 6,
         expansion: 2,
-        vocab_in: if case.input_dim.is_some() { None } else { Some(vocab) },
+        vocab_in: if case.input_dim.is_some() { None } else { Some(out) },
         input_dim: case.input_dim,
-        vocab_out: vocab,
+        vocab_out: out,
         conv: case.conv,
         mlp: case.mlp,
         mlp_mult: 2,
@@ -285,33 +378,68 @@ fn grad_check(case: &Case, seed: u64) {
     let x = match case.input_dim {
         None => Tensor::i32(vec![batch, t],
                             (0..batch * t)
-                                .map(|_| rng.below(vocab as u64) as i32)
+                                .map(|_| rng.below(out as u64) as i32)
                                 .collect()),
         Some(f) => Tensor::f32(vec![batch, t, f],
                                (0..batch * t * f)
                                    .map(|_| rng.normal_f32(0.0, 1.0))
                                    .collect()),
     };
-    let targets: Vec<i32> = (0..batch * t)
-        .map(|_| rng.below(vocab as u64) as i32).collect();
     let mut mask: Vec<f32> = (0..batch * t)
         .map(|_| if rng.f32() < 0.8 { 1.0 } else { 0.0 }).collect();
     mask[0] = 1.0;
+    let data = match head {
+        Head::MaskedCe => HeadData::Ce {
+            targets: (0..batch * t)
+                .map(|_| rng.below(out as u64) as i32).collect(),
+        },
+        Head::MaskedMse => HeadData::Mse {
+            targets: (0..batch * t * out)
+                .map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+        },
+        Head::SeqClassify => {
+            // pooled: two masked positions per sequence, same label
+            let mut targets = vec![0i32; batch * t];
+            for bi in 0..batch {
+                let label = rng.below(out as u64) as i32;
+                mask[bi * t..(bi + 1) * t].fill(0.0);
+                mask[bi * t + t - 1] = 1.0;
+                mask[bi * t + t - 3] = 0.5;
+                targets[bi * t + t - 1] = label;
+                targets[bi * t + t - 3] = label;
+            }
+            HeadData::Cls { targets }
+        }
+    };
 
     // analytic gradients (f32 pipeline under test)
-    let tape = autograd::forward(&model, &x).unwrap();
+    let (rate, dseed) = case.drop.unwrap_or((0.0, 0));
+    let tape = autograd::forward_train(&model, &x, rate, dseed).unwrap();
     let mut dlogits = Vec::new();
-    let metrics = loss::masked_ce(&tape.logits, &targets, &mask, batch, t,
-                                  vocab, Some(&mut dlogits)).unwrap();
+    let metrics = match &data {
+        HeadData::Ce { targets } => loss::masked_ce(
+            &tape.logits, targets, &mask, batch, t, out,
+            Some(&mut dlogits)),
+        HeadData::Mse { targets } => loss::masked_mse(
+            &tape.logits, targets, &mask, batch, t, out,
+            Some(&mut dlogits)),
+        HeadData::Cls { targets } => loss::seq_ce(
+            &tape.logits, targets, &mask, batch, t, out,
+            Some(&mut dlogits)),
+    }.unwrap();
     let mut grads = model.zeros_like();
     autograd::backward(&model, &tape, &x, &dlogits, &mut grads).unwrap();
 
     // f64 parameter copies for the mirror
     let base: Vec<Vec<f64>> = model.leaves().iter()
         .map(|l| l.iter().map(|&v| v as f64).collect()).collect();
-    let l0 = mirror_loss(&model, &base, &x, &targets, &mask);
-    assert!((l0 - metrics.loss as f64).abs() < 1e-4 * l0.max(1.0),
-            "{}: mirror loss {l0} vs f32 pipeline {}", case.kind,
+    let eval = |leaves: &[Vec<f64>]| -> f64 {
+        let logits = mirror_logits(&model, leaves, &x, case.drop);
+        mirror_loss(&logits, &data, &mask, batch, t, out)
+    };
+    let l0 = eval(&base);
+    assert!((l0 - metrics.loss as f64).abs() < 1e-4 * l0.abs().max(1.0),
+            "{} {head:?}: mirror loss {l0} vs f32 pipeline {}", case.kind,
             metrics.loss);
 
     let names = model.leaf_names();
@@ -321,8 +449,8 @@ fn grad_check(case: &Case, seed: u64) {
         let gnorm = gleaf.iter()
             .map(|&g| g as f64 * g as f64).sum::<f64>().sqrt();
         assert!(gnorm > 1e-8,
-                "{} conv={} mlp={}: leaf '{name}' has ~zero gradient",
-                case.kind, case.conv, case.mlp);
+                "{} {head:?} conv={} mlp={}: leaf '{name}' has ~zero \
+                 gradient", case.kind, case.conv, case.mlp);
         let u: Vec<f64> = gleaf.iter().map(|&g| g as f64 / gnorm).collect();
         let mut plus = base.clone();
         let mut minus = base.clone();
@@ -330,13 +458,12 @@ fn grad_check(case: &Case, seed: u64) {
             plus[li][j] += eps * uj;
             minus[li][j] -= eps * uj;
         }
-        let lp = mirror_loss(&model, &plus, &x, &targets, &mask);
-        let lm = mirror_loss(&model, &minus, &x, &targets, &mask);
-        let num = (lp - lm) / (2.0 * eps);
+        let num = (eval(&plus) - eval(&minus)) / (2.0 * eps);
         let rel = (num - gnorm).abs() / gnorm.max(num.abs()).max(1e-4);
         assert!(rel <= 1e-3,
-                "{} conv={} mlp={} leaf '{name}': analytic {gnorm:.6e} vs \
-                 finite-difference {num:.6e} (rel {rel:.2e} > 1e-3)",
+                "{} {head:?} conv={} mlp={} leaf '{name}': analytic \
+                 {gnorm:.6e} vs finite-difference {num:.6e} \
+                 (rel {rel:.2e} > 1e-3)",
                 case.kind, case.conv, case.mlp);
     }
 }
@@ -345,8 +472,8 @@ fn grad_check(case: &Case, seed: u64) {
 fn grad_check_mingru_all_architectures() {
     for (i, &(conv, mlp)) in [(false, false), (true, true), (true, false),
                               (false, true)].iter().enumerate() {
-        grad_check(&Case { kind: "mingru", conv, mlp, input_dim: None },
-                   100 + i as u64);
+        grad_check(&Case { kind: "mingru", conv, mlp, input_dim: None,
+                           drop: None }, Head::MaskedCe, 100 + i as u64);
     }
 }
 
@@ -354,8 +481,8 @@ fn grad_check_mingru_all_architectures() {
 fn grad_check_minlstm_all_architectures() {
     for (i, &(conv, mlp)) in [(false, false), (true, true), (true, false),
                               (false, true)].iter().enumerate() {
-        grad_check(&Case { kind: "minlstm", conv, mlp, input_dim: None },
-                   200 + i as u64);
+        grad_check(&Case { kind: "minlstm", conv, mlp, input_dim: None,
+                           drop: None }, Head::MaskedCe, 200 + i as u64);
     }
 }
 
@@ -363,13 +490,150 @@ fn grad_check_minlstm_all_architectures() {
 fn grad_check_continuous_input_projection() {
     // the in_proj (RL-style features) path has its own backward
     grad_check(&Case { kind: "mingru", conv: false, mlp: false,
-                       input_dim: Some(3) }, 300);
+                       input_dim: Some(3), drop: None }, Head::MaskedCe,
+               300);
     grad_check(&Case { kind: "minlstm", conv: true, mlp: true,
-                       input_dim: Some(4) }, 301);
+                       input_dim: Some(4), drop: None }, Head::MaskedCe,
+               301);
+}
+
+#[test]
+fn grad_check_masked_mse_head() {
+    // the RL regression head, over the continuous-input backbone
+    grad_check(&Case { kind: "mingru", conv: false, mlp: true,
+                       input_dim: Some(3), drop: None }, Head::MaskedMse,
+               400);
+    grad_check(&Case { kind: "minlstm", conv: true, mlp: true,
+                       input_dim: Some(4), drop: None }, Head::MaskedMse,
+               401);
+}
+
+#[test]
+fn grad_check_seq_classify_head() {
+    // the pooled classification head (LRA), with genuine multi-position
+    // pooling in the mask
+    grad_check(&Case { kind: "mingru", conv: true, mlp: true,
+                       input_dim: None, drop: None }, Head::SeqClassify,
+               500);
+    grad_check(&Case { kind: "minlstm", conv: false, mlp: false,
+                       input_dim: None, drop: None }, Head::SeqClassify,
+               501);
+}
+
+#[test]
+fn grad_check_with_dropout() {
+    // dropout masks enter both the forward and the VJP; the mirror draws
+    // the identical masks from drop_multiplier — every head, both mixers
+    grad_check(&Case { kind: "mingru", conv: true, mlp: true,
+                       input_dim: None, drop: Some((0.35, 77)) },
+               Head::MaskedCe, 600);
+    grad_check(&Case { kind: "minlstm", conv: false, mlp: true,
+                       input_dim: None, drop: Some((0.25, 78)) },
+               Head::MaskedCe, 601);
+    grad_check(&Case { kind: "minlstm", conv: true, mlp: true,
+                       input_dim: Some(4), drop: Some((0.2, 79)) },
+               Head::MaskedMse, 602);
+    grad_check(&Case { kind: "mingru", conv: false, mlp: true,
+                       input_dim: None, drop: Some((0.3, 80)) },
+               Head::SeqClassify, 603);
 }
 
 // ---------------------------------------------------------------------------
-// end-to-end: native train → checkpoint → native serve
+// dropout determinism properties
+// ---------------------------------------------------------------------------
+
+fn dropout_prop_model(seed: u64) -> (NativeModel, Tensor, Vec<i32>,
+                                     Vec<f32>) {
+    // sized so rows·d ≥ the parallel-dispatch threshold: the pooled
+    // (chunked) dropout path must run, not just the inline one
+    let vocab = 9usize;
+    let model = NativeModel::init_random(&NativeInit {
+        kind: "minlstm".to_string(),
+        n_layers: 2,
+        d_model: 128,
+        vocab_in: Some(vocab),
+        vocab_out: vocab,
+        conv: true,
+        mlp: true,
+        mlp_mult: 2,
+        forget_bias: 1.0,
+        ..Default::default()
+    }, seed).unwrap();
+    let (b, t) = (2usize, 64usize);
+    let mut rng = Rng::new(seed ^ 0xD0);
+    let x: Vec<i32> = (0..b * t).map(|_| rng.below(vocab as u64) as i32)
+        .collect();
+    let targets: Vec<i32> = (0..b * t)
+        .map(|_| rng.below(vocab as u64) as i32).collect();
+    let mask = vec![1.0f32; b * t];
+    (model, Tensor::i32(vec![b, t], x), targets, mask)
+}
+
+fn grads_for(model: &NativeModel, x: &Tensor, targets: &[i32],
+             mask: &[f32], rate: f32, seed: i32) -> NativeModel {
+    let (b, t) = (x.dims[0], x.dims[1]);
+    let tape = autograd::forward_train(model, x, rate, seed).unwrap();
+    let mut dlogits = Vec::new();
+    loss::masked_ce(&tape.logits, targets, mask, b, t, model.vocab_out,
+                    Some(&mut dlogits)).unwrap();
+    let mut grads = model.zeros_like();
+    autograd::backward(model, &tape, x, &dlogits, &mut grads).unwrap();
+    grads
+}
+
+#[test]
+fn drop_rate_zero_is_bit_identical_to_pre_dropout_path() {
+    // training at rate 0 must produce the exact tape and gradients of the
+    // dropout-free recording forward, whatever the seed
+    let (model, x, targets, mask) = dropout_prop_model(31);
+    let plain_tape = autograd::forward(&model, &x).unwrap();
+    let train_tape = autograd::forward_train(&model, &x, 0.0, 0x1234)
+        .unwrap();
+    assert_eq!(plain_tape.logits, train_tape.logits);
+    let g0 = grads_for(&model, &x, &targets, &mask, 0.0, 0x1234);
+    let g1 = grads_for(&model, &x, &targets, &mask, 0.0, 0);
+    for ((a, b), name) in g0.leaves().iter().zip(g1.leaves())
+        .zip(g0.leaf_names()) {
+        assert_eq!(*a, b, "rate=0 leaf '{name}' depends on drop_seed");
+    }
+}
+
+#[test]
+fn dropout_grads_are_thread_count_invariant_and_seed_deterministic() {
+    // fixed drop_seed ⇒ identical masks, hence bit-identical grads, on 1
+    // or N threads (the pool is process-global shared state: emulate via
+    // set_active like the autograd tests)
+    let (model, x, targets, mask) = dropout_prop_model(32);
+    let pool = threads::global();
+    let before = pool.active();
+    let mut by_threads = Vec::new();
+    for n in [1usize, 2, 7] {
+        pool.set_active(n);
+        by_threads.push(grads_for(&model, &x, &targets, &mask, 0.4, 99));
+    }
+    pool.set_active(before);
+    let names = by_threads[0].leaf_names();
+    for other in &by_threads[1..] {
+        for ((a, b), name) in by_threads[0].leaves().iter()
+            .zip(other.leaves()).zip(&names) {
+            assert_eq!(*a, b,
+                       "dropout leaf '{name}' differs across thread \
+                        counts");
+        }
+    }
+    // same seed twice: identical; different seed: different gradients
+    let again = grads_for(&model, &x, &targets, &mask, 0.4, 99);
+    for (a, b) in by_threads[0].leaves().iter().zip(again.leaves()) {
+        assert_eq!(*a, b);
+    }
+    let other = grads_for(&model, &x, &targets, &mask, 0.4, 100);
+    let differs = by_threads[0].leaves().iter().zip(other.leaves())
+        .any(|(a, b)| *a != b);
+    assert!(differs, "changing drop_seed must change dropout gradients");
+}
+
+// ---------------------------------------------------------------------------
+// end-to-end: native train → checkpoint → native serve, per head
 // ---------------------------------------------------------------------------
 
 fn echo_batch(rng: &mut Rng, b: usize, t: usize, vocab: usize) -> Batch {
@@ -445,6 +709,138 @@ fn native_train_then_serve_cuts_loss_2x() {
     let resumed = NativeTrainer::from_checkpoint(
         &dir.join("e2e-echo.final.ckpt"), "e2e-echo").unwrap();
     assert_eq!(resumed.step(), report.steps_run as u64);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn rl_regression_trains_checkpoints_and_rolls_out() {
+    // masked_mse e2e on a real offline-RL dataset: train the DT-style
+    // regressor, checkpoint, reload through native inference, and roll
+    // the policy out in the live environment.  Medium-Expert data: half
+    // the actions are near-deterministic functions of the observation, so
+    // the regression loss has substantial learnable structure.
+    let ds = OfflineDataset::build("pointmass", Regime::MediumExpert, 24, 7);
+    let f = ds.feature_dim();
+    let model = NativeModel::init_random(&NativeInit {
+        kind: "mingru".to_string(),
+        d_model: 24,
+        n_layers: 2,
+        vocab_in: None,
+        input_dim: Some(f),
+        vocab_out: ds.act_dim,
+        mlp: true,
+        ..Default::default()
+    }, 40).unwrap();
+    let mut trainer = NativeTrainer::new(model, "e2e-rl");
+    trainer.head = Head::MaskedMse;
+    let dir = std::env::temp_dir().join("minrnn_train_props_rl");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = TrainConfig {
+        steps: 200,
+        lr: 3e-3,
+        schedule: Schedule::Constant,
+        seed: 9,
+        eval_every: 100,
+        eval_batches: 2,
+        log_every: 1000,
+        checkpoint: Some(dir.clone()),
+        ..Default::default()
+    };
+    let (b, ctx) = (16usize, 12usize);
+    let mut data = FnSource {
+        f: move |rng: &mut Rng| ds.batch(rng, b, ctx),
+    };
+    let report = run_loop(&mut trainer, &cfg, 0, &mut data).unwrap();
+    let (_, first_loss) = report.loss_curve[0];
+    assert!(report.final_loss.is_finite());
+    assert!(report.final_loss < 0.75 * first_loss,
+            "mse loss {} -> {} did not drop 25%", first_loss,
+            report.final_loss);
+
+    // the checkpoint serves as a policy through native inference
+    let ckpt = dir.join("e2e-rl.final.ckpt");
+    let backend = NativeBackend::from_checkpoint(&ckpt).unwrap();
+    let ds2 = OfflineDataset::build("pointmass", Regime::MediumExpert, 24,
+                                    7);
+    let ret = infer::rollout_decision(&backend, &ds2, ds2.target_return(),
+                                      3).unwrap();
+    assert!(ret.is_finite(), "rollout return {ret}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Synthetic classification rule over the LRA token map: label ∈ [0, 4)
+/// is the (repeated) content token, filling the sequence right up to the
+/// CLS read-out slot — learnable in CI time without long-range memory,
+/// which is not what this e2e is testing.
+fn cls_sample(rng: &mut Rng, t: usize) -> (Vec<i32>, i32) {
+    let label = rng.below(4) as i32;
+    (vec![label + 2; t - 1], label)
+}
+
+#[test]
+fn lra_classification_trains_checkpoints_and_serves() {
+    // seq_ce e2e through the LRA collate: the repeated-token rule stands
+    // in for a real LRA task (learnable in CI time); the trained
+    // checkpoint must classify through native prefill
+    let (vocab, classes) = (8usize, 4usize);
+    let t = 12usize;
+    let model = NativeModel::init_random(&NativeInit {
+        kind: "mingru".to_string(),
+        d_model: 24,
+        n_layers: 1,
+        vocab_in: Some(vocab),
+        vocab_out: classes,
+        ..Default::default()
+    }, 50).unwrap();
+    let mut trainer = NativeTrainer::new(model, "e2e-cls");
+    trainer.head = Head::SeqClassify;
+    let dir = std::env::temp_dir().join("minrnn_train_props_cls");
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut data = FnSource {
+        f: move |rng: &mut Rng| {
+            let examples: Vec<(Vec<i32>, i32)> =
+                (0..16).map(|_| cls_sample(rng, t)).collect();
+            lra::collate_classification(&examples, t)
+        },
+    };
+    let cfg = TrainConfig {
+        steps: 150,
+        lr: 5e-3,
+        schedule: Schedule::Constant,
+        seed: 11,
+        eval_every: 75,
+        eval_batches: 2,
+        log_every: 1000,
+        checkpoint: Some(dir.clone()),
+        ..Default::default()
+    };
+    let report = run_loop(&mut trainer, &cfg, 0, &mut data).unwrap();
+    let (_, first_loss) = report.loss_curve[0];
+    assert!(report.final_loss < first_loss / 2.0,
+            "cls loss {} -> {} is not a 2x drop", first_loss,
+            report.final_loss);
+    let eval = report.final_eval.expect("eval ran");
+    assert!(eval.seq_acc > 0.5, "classification acc {}", eval.seq_acc);
+
+    // checkpoint → native inference → prefill classifies fresh examples
+    let backend = NativeBackend::from_checkpoint(
+        &dir.join("e2e-cls.final.ckpt")).unwrap();
+    let mut rng = Rng::new(77);
+    let mut correct = 0usize;
+    let n = 32usize;
+    for _ in 0..n {
+        let mut gen = Rng::new(rng.next_u64());
+        let (tokens, label) = cls_sample(&mut gen, t);
+        let batch = lra::collate_classification(&[(tokens, label)], t);
+        let (logits, _) = backend.model.prefill(&batch.x).unwrap();
+        let row = logits.data.as_f32().unwrap();
+        let pred = (0..classes).max_by(|&a, &b| {
+            row[a].partial_cmp(&row[b]).unwrap()
+        }).unwrap();
+        correct += usize::from(pred == label as usize);
+    }
+    assert!(correct as f64 / n as f64 > 0.5,
+            "served classification accuracy {correct}/{n}");
     let _ = std::fs::remove_dir_all(&dir);
 }
 
