@@ -68,4 +68,11 @@ impl Backend for NativeBackend {
     fn reset_lane(&self, state: &mut NativeState, lane: usize) -> bool {
         self.model.reset_lane(state, lane).is_ok()
     }
+
+    /// The native state is plain host data, so lanes re-seed in place —
+    /// this is what opts the backend into mid-decode admission in
+    /// `coordinator::scheduler`.
+    fn lane_reset_supported(&self) -> bool {
+        true
+    }
 }

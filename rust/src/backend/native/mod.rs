@@ -1,10 +1,20 @@
 //! Pure-Rust CPU implementations of the minGRU/minLSTM paths:
-//! scan primitives, mixer cells, the backbone model, and — since the
-//! training subsystem landed — reverse-mode gradients with dropout
-//! (`autograd`), the fused training heads (`loss`: masked CE, masked MSE,
-//! pooled sequence classification), AdamW (`adam`), and the
-//! [`NativeTrainer`] driving them.  No PJRT, no artifacts — everything
-//! here runs from a checkpoint (or random init) alone.
+//! scan primitives ([`scan`]), mixer cells ([`mingru`], [`minlstm`]),
+//! the backbone model ([`model`]) with its zero-allocation decode
+//! scratch ([`scratch`]), the dense/conv/norm kernels ([`linalg`]),
+//! and — since the training subsystem landed — reverse-mode gradients
+//! with dropout ([`autograd`]), the fused training heads ([`loss`]:
+//! masked CE, masked MSE, pooled sequence classification), AdamW
+//! ([`adam`]), and the [`NativeTrainer`] driving them.  No PJRT, no
+//! artifacts — everything here runs from a checkpoint (or random init)
+//! alone.
+//!
+//! Two invariants hold across the whole module (see
+//! `rust/ARCHITECTURE.md`): results — including gradients and dropout
+//! masks — are **bit-for-bit identical at any thread count** (task
+//! granularity is a fixed constant of each kernel), and the log-space
+//! scan carries f64 accumulators with f32 transcendentals, pinned to
+//! the JAX reference by the golden-vector tests.
 
 pub mod adam;
 pub mod autograd;

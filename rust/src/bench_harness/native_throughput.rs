@@ -9,6 +9,11 @@
 //!   latency, across batch sizes × {1 thread, all threads};
 //! * **serve**   — the dynamic-batching loop end to end (continuous lane
 //!   refill), tokens/sec + mean/p95 request latency;
+//! * **serve_async** — the admission scheduler under an *open-loop*
+//!   arrival process (a driver thread submits at 1.25x the closed-loop
+//!   request rate), recording **queue-wait and decode latency
+//!   separately** — under load, tail latency is queueing, and the split
+//!   is what a capacity plan needs;
 //!
 //! and derives `speedup_batched_threaded`: threaded batch-N decode over
 //! single-threaded batch-1 decode — the "fully parallelizable in
@@ -24,6 +29,7 @@ use std::path::PathBuf;
 use anyhow::Result;
 
 use crate::backend::{NativeBackend, NativeInit, NativeModel};
+use crate::coordinator::scheduler::{Backpressure, Scheduler, SchedulerOpts};
 use crate::coordinator::server::{self, Request, ServeOpts};
 use crate::log_info;
 use crate::runtime::Backend;
@@ -224,6 +230,74 @@ pub fn run(cfg: &Config) -> Result<Json> {
         ("p95_latency_ms", json::num(stats.p95_latency_s() * 1e3)),
     ]);
 
+    // -- async serve: open-loop arrival-rate driver --------------------------
+    //
+    // Mild overload (1.25x the request rate the closed-loop run sustained)
+    // so queue-wait becomes visible, then record it *separately* from
+    // decode latency: under load, tail latency is queueing, and a capacity
+    // plan needs the split, not the blur.
+    let sync_req_s =
+        cfg.serve_requests as f64 / stats.total_s.max(1e-9);
+    let arrival_req_s = sync_req_s * 1.25;
+    let async_requests: Vec<Request> = (0..cfg.serve_requests)
+        .map(|i| Request {
+            id: i as u64,
+            prompt: (0..8 + rng.usize_below(8))
+                .map(|_| rng.below(cfg.vocab as u64) as i32).collect(),
+            n_tokens: cfg.serve_tokens,
+        }).collect();
+    let (sched, handle) = Scheduler::new(&backend, SchedulerOpts {
+        serve: ServeOpts {
+            temperature: 0.8,
+            seed: 7,
+            max_batch: cfg.max_batch,
+        },
+        queue_depth: cfg.serve_requests.max(1),
+        backpressure: Backpressure::Block,
+        default_deadline: None,
+        lanes: Some(cfg.max_batch),
+    })?;
+    let gap = std::time::Duration::from_secs_f64(
+        1.0 / arrival_req_s.max(1e-9));
+    let submitter = std::thread::spawn(move || {
+        for req in async_requests {
+            std::thread::sleep(gap);
+            if handle.submit(req).is_err() {
+                break;
+            }
+        }
+        handle.close();
+    });
+    let astats = sched.run()?;
+    submitter.join()
+        .map_err(|_| anyhow::anyhow!("bench submitter thread panicked"))?;
+    log_info!("  async    {} req open-loop @ {:.1} req/s: {:>8.0} tok/s, \
+               queue-wait mean {:.1} ms p95 {:.1} ms, decode mean {:.1} ms \
+               p95 {:.1} ms, {} batch(es)",
+              cfg.serve_requests, arrival_req_s, astats.throughput_tok_s(),
+              astats.mean_queue_s() * 1e3, astats.p95_queue_s() * 1e3,
+              astats.mean_service_s() * 1e3, astats.p95_service_s() * 1e3,
+              astats.batches_started);
+    let serve_async = json::obj(vec![
+        ("requests", json::num(cfg.serve_requests as f64)),
+        ("tokens_per_request", json::num(cfg.serve_tokens as f64)),
+        ("max_batch", json::num(cfg.max_batch as f64)),
+        ("arrival_req_s", json::num(arrival_req_s)),
+        ("queue_depth", json::num(cfg.serve_requests.max(1) as f64)),
+        ("tok_s", json::num(astats.throughput_tok_s())),
+        ("queue_wait_mean_ms", json::num(astats.mean_queue_s() * 1e3)),
+        ("queue_wait_p95_ms", json::num(astats.p95_queue_s() * 1e3)),
+        ("decode_mean_ms", json::num(astats.mean_service_s() * 1e3)),
+        ("decode_p95_ms", json::num(astats.p95_service_s() * 1e3)),
+        ("p95_latency_ms", json::num(astats.p95_latency_s() * 1e3)),
+        ("submitted", json::num(astats.submitted as f64)),
+        ("admitted", json::num(astats.admitted as f64)),
+        ("rejected", json::num(astats.rejected as f64)),
+        ("expired", json::num(astats.expired.len() as f64)),
+        ("max_queue_depth", json::num(astats.max_queue_depth as f64)),
+        ("batches_started", json::num(astats.batches_started as f64)),
+    ]);
+
     let report = json::obj(vec![
         ("schema", json::s("minrnn.native_throughput.v1")),
         ("quick", Json::Bool(cfg.quick)),
@@ -238,6 +312,7 @@ pub fn run(cfg: &Config) -> Result<Json> {
         ("prefill", prefill),
         ("decode", Json::Arr(decode)),
         ("serve", serve),
+        ("serve_async", serve_async),
         ("speedup_batched_threaded", json::num(speedup)),
     ]);
     if let Some(out) = &cfg.out {
@@ -282,6 +357,14 @@ mod tests {
                    if threads_used > 1 { 4 } else { 2 });
         assert!(report.req("serve").unwrap().req("tok_s").unwrap()
                 .as_f64().unwrap() > 0.0);
+        // the open-loop async section reports the queue-wait/decode split
+        let sa = report.req("serve_async").unwrap();
+        assert!(sa.req("tok_s").unwrap().as_f64().unwrap() > 0.0);
+        assert!(sa.req("queue_wait_p95_ms").unwrap().as_f64().unwrap()
+                >= 0.0);
+        assert!(sa.req("decode_p95_ms").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(sa.req("admitted").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(sa.req("rejected").unwrap().as_f64().unwrap(), 0.0);
         assert!(report.req("speedup_batched_threaded").unwrap()
                 .as_f64().unwrap() > 0.0);
     }

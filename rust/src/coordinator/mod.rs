@@ -1,7 +1,10 @@
-//! Coordinator: CLI entrypoints, training orchestration, inference engine,
-//! serving loop, and the experiment registry.
+//! Coordinator: CLI entrypoints, training orchestration ([`trainer`]),
+//! the inference engine ([`infer`]), the serving stack ([`server`] for the
+//! synchronous facade, [`scheduler`] for async admission-controlled
+//! serving), and the experiment registry.
 
 pub mod infer;
+pub mod scheduler;
 pub mod server;
 pub mod trainer;
 
@@ -62,7 +65,8 @@ Subcommands:
   info <variant>               show a variant's manifest entry
   train <variant|workload>     train a variant (pjrt) or workload (native)
   generate [variant]           sample text from a (trained) LM variant
-  serve [variant]              dynamic-batching serving demo
+  serve [variant]              dynamic-batching serving demo (--async for
+                               the admission-queue scheduler)
   rollout <env>                roll out a trained RL policy (native)
   bench                        native-backend throughput benchmark
   experiment <id>|all          regenerate a paper table/figure
@@ -82,8 +86,13 @@ weights with --resume or samples from a seeded random init sized by
 natively-trained rl/<env> checkpoint in its live environment
 (Decision-Transformer-style serving).  `train`, `generate`, `serve`, and
 `bench` take `--threads N` (or MINRNN_THREADS) to size the native thread
-pool; `serve` takes `--max-batch` to cap lockstep decode lanes.  Run
-`minrnn <subcommand> --help` for options.";
+pool; `serve` takes `--max-batch` to cap lockstep decode lanes.
+`serve --async` routes the synthetic workload through the admission
+scheduler instead of handing it over up front: an open-loop driver thread
+submits at `--arrival-rate` req/s into a `--queue-depth`-bounded queue
+(`--backpressure block|reject`, optional `--deadline-ms` queue-wait
+budget) while the decode loop admits requests into free lanes mid-flight.
+Run `minrnn <subcommand> --help` for options.";
 
 pub fn cli_main(args: Vec<String>) -> i32 {
     crate::util::logging::init();
@@ -644,13 +653,85 @@ fn synthetic_requests(rng: &mut Rng, n: usize, n_tokens: usize,
 fn report_serve(stats: &server::ServeStats) {
     println!("served {} requests / {} tokens in {:.2}s",
              stats.responses.len(), stats.tokens_generated, stats.total_s);
-    println!("throughput {:.1} tok/s, mean latency {:.1} ms",
-             stats.throughput_tok_s(), stats.mean_latency_s() * 1e3);
+    println!("throughput {:.1} tok/s, mean latency {:.1} ms \
+              (queue {:.1} + decode {:.1}), p95 {:.1} ms",
+             stats.throughput_tok_s(), stats.mean_latency_s() * 1e3,
+             stats.mean_queue_s() * 1e3, stats.mean_service_s() * 1e3,
+             stats.p95_latency_s() * 1e3);
+    println!("admission: {} submitted, {} admitted, {} rejected, {} \
+              expired, peak queue depth {}, {} batch(es) formed",
+             stats.submitted, stats.admitted, stats.rejected,
+             stats.expired.len(), stats.max_queue_depth,
+             stats.batches_started);
     let mut batches: Vec<usize> = stats.responses.iter().map(|r| r.batch)
         .collect();
     batches.sort_unstable();
     batches.dedup();
     println!("batch sizes used: {batches:?}");
+}
+
+/// Drive the async scheduler with an open-loop arrival process: a
+/// submitter thread feeds `requests` through a [`scheduler::SubmitHandle`]
+/// at `--arrival-rate` req/s (0 = as fast as possible) while the decode
+/// loop runs on this thread — the backend (PJRT handles are not `Send`)
+/// never crosses threads, only plain-data requests do.
+fn serve_async<B: crate::runtime::Backend>(
+    backend: &B, requests: Vec<server::Request>, opts: &server::ServeOpts,
+    p: &Parsed) -> Result<server::ServeStats> {
+    let backpressure = match p.req("backpressure")? {
+        "block" => scheduler::Backpressure::Block,
+        "reject" => scheduler::Backpressure::Reject,
+        other => return Err(anyhow!(
+            "--backpressure expects block | reject, got '{other}'")),
+    };
+    let deadline_ms = p.u64("deadline-ms")?;
+    let rate = p.f64("arrival-rate")?;
+    if rate < 0.0 {
+        return Err(anyhow!("--arrival-rate must be >= 0"));
+    }
+    let (sched, handle) = scheduler::Scheduler::new(
+        backend,
+        scheduler::SchedulerOpts {
+            serve: opts.clone(),
+            queue_depth: p.usize("queue-depth")?,
+            backpressure,
+            default_deadline: if deadline_ms > 0 {
+                Some(std::time::Duration::from_millis(deadline_ms))
+            } else {
+                None
+            },
+            // open-loop serving: provision the full lane budget up front
+            // so requests trickling in one by one still share a batch
+            lanes: Some(opts.max_batch),
+        })?;
+    let n = requests.len();
+    log_info!("async serving: {n} requests, arrival rate {} req/s, queue \
+               depth {}, {:?} backpressure",
+              if rate > 0.0 { format!("{rate:.1}") }
+              else { "max".to_string() },
+              p.usize("queue-depth")?, backpressure);
+    let submitter = std::thread::spawn(move || {
+        let mut refused = 0usize;
+        for req in requests {
+            if rate > 0.0 {
+                std::thread::sleep(
+                    std::time::Duration::from_secs_f64(1.0 / rate));
+            }
+            match handle.submit(req) {
+                Ok(()) => {}
+                Err(scheduler::SubmitError::QueueFull(_)) => refused += 1,
+                Err(_) => break, // closed underneath us: stop submitting
+            }
+        }
+        handle.close();
+        refused
+    });
+    let stats = sched.run()?;
+    let refused = submitter.join()
+        .map_err(|_| anyhow!("submitter thread panicked"))?;
+    debug_assert_eq!(refused, stats.rejected,
+                     "producer- and scheduler-side reject counts agree");
+    Ok(stats)
 }
 
 fn cmd_serve(args: &[String]) -> Result<()> {
@@ -660,6 +741,17 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .opt("tokens", Some("16"), "tokens per request")
         .opt("max-batch", Some("64"), "max lanes decoded in lockstep")
         .opt("seed", Some("0"), "seed")
+        .flag("async", "serve through the async admission scheduler: an \
+              open-loop driver thread submits requests while decode runs")
+        .opt("queue-depth", Some("32"), "async: admission queue capacity")
+        .opt("backpressure", Some("block"),
+             "async: producer behavior on a full queue (block | reject)")
+        .opt("arrival-rate", Some("0"),
+             "async: open-loop arrival rate in requests/sec (0 = submit \
+              as fast as possible)")
+        .opt("deadline-ms", Some("0"),
+             "async: per-request queue-wait deadline in ms (0 = none); \
+              requests still queued past it are dropped, not half-served")
         .positional("variant", "LM variant (pjrt backend only)");
     let p = cmd.parse(args)?;
     apply_threads_opt(&p)?;
@@ -670,6 +762,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         seed: p.u64("seed")?,
         max_batch: p.usize("max-batch")?,
     };
+    let is_async = p.flag("async");
     let mut rng = Rng::new(p.u64("seed")?);
     let stats = match resolve_backend(&p)?.as_str() {
         "native" => {
@@ -677,7 +770,11 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             let backend = native_backend(&p, CharVocab::new().size())?;
             let requests = synthetic_requests(
                 &mut rng, n, n_tokens, backend.model.vocab_out);
-            server::serve_opts(&backend, requests, &opts)?
+            if is_async {
+                serve_async(&backend, requests, &opts, &p)?
+            } else {
+                server::serve_opts(&backend, requests, &opts)?
+            }
         }
         "pjrt" => {
             let variant = p.pos.first().ok_or_else(
@@ -693,7 +790,11 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             let vocab = model.variant.cfg_usize("vocab_in").unwrap_or(64);
             let requests = synthetic_requests(&mut rng, n, n_tokens, vocab);
             let backend = PjrtBackend::new(&model, &state.params);
-            server::serve_opts(&backend, requests, &opts)?
+            if is_async {
+                serve_async(&backend, requests, &opts, &p)?
+            } else {
+                server::serve_opts(&backend, requests, &opts)?
+            }
         }
         other => return Err(anyhow!(
             "unknown backend '{other}' (expected pjrt | native)")),

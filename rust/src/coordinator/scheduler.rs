@@ -1,0 +1,698 @@
+//! Async admission-controlled serving: a queued scheduler that admits
+//! requests **mid-decode**.
+//!
+//! The PR-2 serving loop (`coordinator::server::serve_opts`) batches a
+//! `Vec<Request>` handed in up front; a deployment could not add work
+//! while a batch was decoding.  This module splits serving into a
+//! producer/consumer pair around a [`BoundedQueue`]:
+//!
+//! * [`SubmitHandle`] — the cloneable, `Send` producer side.  Any thread
+//!   submits [`Request`]s with configurable backpressure ([`Backpressure`]:
+//!   block until space, or reject-when-full) and an optional per-request
+//!   queue-wait deadline; [`SubmitHandle::close`] starts a graceful drain.
+//! * [`Scheduler`] — the consumer.  It owns the backend reference and runs
+//!   the lockstep batched decode loop *continuously*: between decode steps
+//!   it admits newly queued requests into free lanes via
+//!   [`Backend::reset_lane`], so a request submitted long after decoding
+//!   started joins the running batch instead of waiting for it to finish.
+//!   Backends without lane reset (PJRT artifacts) fall back to
+//!   run-to-completion batches with admission at batch formation only.
+//!
+//! The scheduler is deliberately a *pump*: [`Scheduler::step`] performs one
+//! admission pass plus one lockstep decode step and never blocks, which is
+//! what makes the async path deterministic enough to property-test
+//! (`rust/tests/scheduler_props.rs` interleaves submissions and steps in
+//! randomized orders and asserts greedy output is bit-identical to
+//! per-request sequential decode).  [`Scheduler::run`] wraps the pump in
+//! the blocking drive loop a real deployment wants: decode while there is
+//! work, sleep on the queue while idle, return [`ServeStats`] once the
+//! queue is closed and drained.
+//!
+//! PJRT handles are not `Send`, so the scheduler (like the PR-2 loop)
+//! stays on the thread that owns the backend; only plain-data requests
+//! cross threads.  The sequential `serve_opts` API survives as a thin
+//! wrapper: submit everything, close, run — token-for-token identical to
+//! the PR-2 behavior.
+//!
+//! ```
+//! use minrnn::backend::{NativeBackend, NativeInit, NativeModel};
+//! use minrnn::coordinator::scheduler::{Scheduler, SchedulerOpts};
+//! use minrnn::coordinator::server::Request;
+//!
+//! let model = NativeModel::init_random(&NativeInit {
+//!     vocab_in: Some(16), vocab_out: 16, d_model: 8, n_layers: 1,
+//!     ..Default::default()
+//! }, 0).unwrap();
+//! let backend = NativeBackend::new(model);
+//! let (scheduler, handle) =
+//!     Scheduler::new(&backend, SchedulerOpts::default()).unwrap();
+//! // producers (any thread) submit; close() starts the graceful drain
+//! handle.submit(Request { id: 0, prompt: vec![1, 2], n_tokens: 3 }).unwrap();
+//! handle.submit(Request { id: 1, prompt: vec![3], n_tokens: 2 }).unwrap();
+//! handle.close();
+//! let stats = scheduler.run().unwrap();
+//! assert_eq!(stats.responses.len(), 2);
+//! assert_eq!(stats.tokens_generated, 5);
+//! ```
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::Backend;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+use crate::util::threads::{BoundedQueue, PushError};
+
+use super::infer::sample_logits;
+use super::server::{Request, Response, ServeOpts, ServeStats};
+
+// ---------------------------------------------------------------------------
+// options
+// ---------------------------------------------------------------------------
+
+/// What a producer experiences when the admission queue is full.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backpressure {
+    /// [`SubmitHandle::submit`] blocks until a slot frees up (closed-loop
+    /// producers, and the sequential `serve_opts` wrapper).
+    Block,
+    /// [`SubmitHandle::submit`] fails fast with [`SubmitError::QueueFull`],
+    /// handing the request back (open-loop producers that would rather
+    /// shed load than build an unbounded backlog).
+    Reject,
+}
+
+/// Scheduler configuration beyond the per-batch [`ServeOpts`] knobs.
+#[derive(Clone, Debug)]
+pub struct SchedulerOpts {
+    /// Sampling / lane-cap options shared with the sequential path.
+    pub serve: ServeOpts,
+    /// Admission queue capacity (`--queue-depth`; ≥ 1).  Requests beyond
+    /// it wait in the producer ([`Backpressure::Block`]) or are refused
+    /// ([`Backpressure::Reject`]).
+    pub queue_depth: usize,
+    pub backpressure: Backpressure,
+    /// Queue-wait budget applied to every submission that does not carry
+    /// its own ([`SubmitHandle::submit_with_deadline`]).  A request still
+    /// queued when its deadline passes is dropped (recorded in
+    /// [`ServeStats::expired`]), never half-served.
+    pub default_deadline: Option<Duration>,
+    /// Decode-lane count for continuous admission.  `None` sizes the batch
+    /// from the backlog at batch formation, exactly like the sequential
+    /// path (right for submit-all-then-drain); `Some(n)` provisions `n`
+    /// lanes up front so requests trickling in one by one still share a
+    /// batch (right for open-loop serving).  Capped at
+    /// [`ServeOpts::max_batch`] either way.
+    pub lanes: Option<usize>,
+}
+
+impl Default for SchedulerOpts {
+    fn default() -> Self {
+        SchedulerOpts {
+            serve: ServeOpts::default(),
+            queue_depth: 64,
+            backpressure: Backpressure::Block,
+            default_deadline: None,
+            lanes: None,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// submission side
+// ---------------------------------------------------------------------------
+
+/// Why a submission was refused.  The request is handed back where
+/// possible so the producer can retry or re-route it.
+#[derive(Debug)]
+pub enum SubmitError {
+    /// Empty prompts are rejected at the door, agreeing with
+    /// `infer::generate` (a lane would otherwise silently decode from
+    /// token 0).
+    EmptyPrompt { id: u64 },
+    /// The queue is at capacity under [`Backpressure::Reject`].
+    QueueFull(Request),
+    /// [`SubmitHandle::close`] was already called.
+    Closed(Request),
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::EmptyPrompt { id } => write!(
+                f, "request {id} has an empty prompt; every request needs \
+                    at least one prompt token"),
+            SubmitError::QueueFull(r) => write!(
+                f, "request {} rejected: admission queue is full", r.id),
+            SubmitError::Closed(r) => write!(
+                f, "request {} refused: scheduler is shutting down", r.id),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// State shared between the producer handles and the scheduler.
+/// `submitted` and the peak queue depth live *inside* the queue (counted
+/// under its lock), so a drain can never observe an item whose
+/// accounting has not landed yet; only the rejected tally — which never
+/// becomes visible to the consumer — is a plain atomic.
+struct Shared {
+    queue: BoundedQueue<Submission>,
+    rejected: AtomicUsize,
+}
+
+/// One queued request plus its admission bookkeeping.
+struct Submission {
+    req: Request,
+    enqueued: Instant,
+    deadline: Option<Duration>,
+}
+
+/// Cloneable, `Send` producer side of the scheduler: submit requests from
+/// any thread while the consumer decodes, then [`SubmitHandle::close`] to
+/// start the graceful drain.
+#[derive(Clone)]
+pub struct SubmitHandle {
+    shared: Arc<Shared>,
+    backpressure: Backpressure,
+    default_deadline: Option<Duration>,
+}
+
+impl SubmitHandle {
+    /// Submit one request using the configured [`Backpressure`] and the
+    /// scheduler's default deadline.
+    pub fn submit(&self, req: Request) -> Result<(), SubmitError> {
+        self.submit_with_deadline(req, self.default_deadline)
+    }
+
+    /// Submit with an explicit queue-wait deadline (`None` = wait
+    /// forever), overriding [`SchedulerOpts::default_deadline`].
+    pub fn submit_with_deadline(&self, req: Request,
+                                deadline: Option<Duration>)
+                                -> Result<(), SubmitError> {
+        if req.prompt.is_empty() {
+            return Err(SubmitError::EmptyPrompt { id: req.id });
+        }
+        let sub = Submission { req, enqueued: Instant::now(), deadline };
+        let pushed = match self.backpressure {
+            Backpressure::Block => self.shared.queue.push(sub),
+            Backpressure::Reject => self.shared.queue.try_push(sub),
+        };
+        match pushed {
+            // the queue itself counts accepted pushes and peak depth
+            // under its lock, so nothing to record here
+            Ok(_depth) => Ok(()),
+            Err(PushError::Full(sub)) => {
+                self.shared.rejected.fetch_add(1, Ordering::SeqCst);
+                Err(SubmitError::QueueFull(sub.req))
+            }
+            Err(PushError::Closed(sub)) => Err(SubmitError::Closed(sub.req)),
+        }
+    }
+
+    /// Requests currently waiting for a lane (racy snapshot).
+    pub fn queue_len(&self) -> usize {
+        self.shared.queue.len()
+    }
+
+    /// Stop accepting submissions and let the scheduler drain: every
+    /// already-queued request is still served (or expired by its
+    /// deadline), then [`Scheduler::run`] returns.  Idempotent; wakes a
+    /// scheduler blocked on an empty queue.
+    pub fn close(&self) {
+        self.shared.queue.close();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// decode lanes
+// ---------------------------------------------------------------------------
+
+/// One occupied decode lane (the PR-2 bookkeeping, moved here so the
+/// sequential wrapper and the async scheduler share one implementation).
+struct Lane {
+    req: Request,
+    enqueued: Instant,
+    admitted: Instant,
+    /// Prompt cursor.
+    pos: usize,
+    out: Vec<i32>,
+}
+
+impl Lane {
+    /// Admit a queued request into a lane (used at batch formation and at
+    /// continuous-admission refill — keep the bookkeeping in one place).
+    fn admit(req: Request, enqueued: Instant) -> Lane {
+        Lane { req, enqueued, admitted: Instant::now(), pos: 0,
+               out: Vec::new() }
+    }
+
+    fn active(&self) -> bool {
+        self.pos < self.req.prompt.len() || self.out.len() < self.req.n_tokens
+    }
+
+    fn next_input(&self) -> i32 {
+        if self.pos < self.req.prompt.len() {
+            self.req.prompt[self.pos]
+        } else {
+            self.out.last().copied()
+                .unwrap_or_else(|| *self.req.prompt.last().unwrap_or(&0))
+        }
+    }
+
+    fn finish(self, bsize: usize, done: Instant) -> Response {
+        Response {
+            id: self.req.id,
+            tokens: self.out,
+            queue_s: (self.admitted - self.enqueued).as_secs_f64(),
+            service_s: (done - self.admitted).as_secs_f64(),
+            batch: bsize,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the scheduler
+// ---------------------------------------------------------------------------
+
+/// Consumer side: owns the decode loop.  Create with [`Scheduler::new`],
+/// feed it through the returned [`SubmitHandle`], and either drive it
+/// manually with [`Scheduler::step`] (tests, custom event loops) or hand
+/// it the thread with [`Scheduler::run`].
+pub struct Scheduler<'b, B: Backend> {
+    backend: &'b B,
+    opts: SchedulerOpts,
+    shared: Arc<Shared>,
+    rng: Rng,
+    /// Submissions popped but not admitted (a lane reset that reneged);
+    /// consulted before the queue so FIFO order is preserved.  Stays
+    /// empty in normal operation — backlog lives in the bounded queue,
+    /// where backpressure can see it.
+    pending: VecDeque<Submission>,
+    /// Current batch, `None` between batches.
+    state: Option<B::State>,
+    bsize: usize,
+    lanes: Vec<Option<Lane>>,
+    /// Whether the backend re-seeds lanes in place (continuous admission).
+    continuous: bool,
+    responses: Vec<Response>,
+    expired: Vec<u64>,
+    tokens_generated: usize,
+    admitted: usize,
+    batches_started: usize,
+    t_start: Instant,
+}
+
+impl<'b, B: Backend> Scheduler<'b, B> {
+    /// Validate the configuration and wire up the admission queue.
+    pub fn new(backend: &'b B, opts: SchedulerOpts)
+               -> Result<(Scheduler<'b, B>, SubmitHandle)> {
+        if opts.serve.max_batch == 0 {
+            return Err(anyhow!("max_batch must be >= 1"));
+        }
+        if let Some(0) = opts.lanes {
+            return Err(anyhow!("lanes must be >= 1 when set"));
+        }
+        if backend.plan_batch(1).is_none() {
+            return Err(anyhow!("backend '{}' exposes no decode batch sizes",
+                               backend.name()));
+        }
+        let shared = Arc::new(Shared {
+            queue: BoundedQueue::new(opts.queue_depth),
+            rejected: AtomicUsize::new(0),
+        });
+        let handle = SubmitHandle {
+            shared: Arc::clone(&shared),
+            backpressure: opts.backpressure,
+            default_deadline: opts.default_deadline,
+        };
+        let rng = Rng::new(opts.serve.seed);
+        let continuous = backend.lane_reset_supported();
+        Ok((Scheduler {
+            backend,
+            opts,
+            shared,
+            rng,
+            pending: VecDeque::new(),
+            state: None,
+            bsize: 0,
+            lanes: Vec::new(),
+            continuous,
+            responses: Vec::new(),
+            expired: Vec::new(),
+            tokens_generated: 0,
+            admitted: 0,
+            batches_started: 0,
+            t_start: Instant::now(),
+        }, handle))
+    }
+
+    /// Batches formed so far (1 after a full run means every request was
+    /// served by one continuously-refilled batch — the async-admission
+    /// acceptance property).
+    pub fn batches_started(&self) -> usize {
+        self.batches_started
+    }
+
+    /// Lanes currently decoding a request.
+    pub fn active_lanes(&self) -> usize {
+        self.lanes.iter().flatten().filter(|l| l.active()).count()
+    }
+
+    /// Requests completed so far.
+    pub fn completed(&self) -> usize {
+        self.responses.len()
+    }
+
+    /// Pop the next live submission, dropping (and recording) any whose
+    /// queue-wait deadline has passed.
+    fn pop_live(&mut self) -> Option<Submission> {
+        loop {
+            let sub = match self.pending.pop_front() {
+                Some(s) => s,
+                None => self.shared.queue.try_pop()?,
+            };
+            if let Some(d) = sub.deadline {
+                if sub.enqueued.elapsed() >= d {
+                    self.expired.push(sub.req.id);
+                    continue;
+                }
+            }
+            return Some(sub);
+        }
+    }
+
+    /// Start a new batch from the backlog.  Returns `false` when no live
+    /// submission is waiting.
+    ///
+    /// Plans *before* popping: only the requests that actually fit the
+    /// planned lanes leave the bounded queue, so overflow keeps pressing
+    /// on `queue_depth` where backpressure and the depth metric can see
+    /// it (draining the whole backlog into a private buffer would let
+    /// producers submit `queue_depth` more behind the configured bound).
+    fn form_batch(&mut self) -> Result<bool> {
+        let cap = self.opts.serve.max_batch;
+        // Plan like the sequential path (from the whole backlog) unless a
+        // fixed lane count was requested for open-loop serving.
+        let backlog = self.pending.len() + self.shared.queue.len();
+        if backlog == 0 {
+            return Ok(false);
+        }
+        let want = self.opts.lanes.unwrap_or(backlog).min(cap);
+        let bsize = self.backend.plan_batch(want).ok_or_else(|| anyhow!(
+            "backend '{}' refused to plan a batch for {want} requests",
+            self.backend.name()))?;
+        // Admit at most max_batch requests even when a fixed-size (PJRT)
+        // backend pads up to an exported lane count above the cap — the
+        // extra lanes stay idle padding.
+        let limit = bsize.min(cap);
+        let mut lanes: Vec<Option<Lane>> = (0..bsize).map(|_| None).collect();
+        let mut admitted = 0usize;
+        for slot in lanes.iter_mut().take(limit) {
+            let Some(sub) = self.pop_live() else { break };
+            *slot = Some(Lane::admit(sub.req, sub.enqueued));
+            admitted += 1;
+        }
+        if admitted == 0 {
+            // the entire backlog expired in queue; no batch to run
+            return Ok(false);
+        }
+        self.state = Some(self.backend.decode_state(bsize)?);
+        self.bsize = bsize;
+        self.batches_started += 1;
+        self.lanes = lanes;
+        self.admitted += admitted;
+        Ok(true)
+    }
+
+    /// Mid-decode admission: seed free lanes of the running batch from the
+    /// queue via [`Backend::reset_lane`].  No-op on fixed backends.
+    fn refill_lanes(&mut self) {
+        if !self.continuous || self.state.is_none() {
+            return;
+        }
+        let limit = self.bsize.min(self.opts.serve.max_batch);
+        for lane in 0..limit {
+            if self.lanes[lane].is_some() {
+                continue;
+            }
+            let Some(sub) = self.pop_live() else { return };
+            let state = self.state.as_mut().expect("checked above");
+            if !self.backend.reset_lane(state, lane) {
+                // the backend reneged on lane_reset_supported(); keep the
+                // request queued for the next batch instead of losing it
+                self.pending.push_front(sub);
+                return;
+            }
+            self.lanes[lane] = Some(Lane::admit(sub.req, sub.enqueued));
+            self.admitted += 1;
+        }
+    }
+
+    /// Drop a fully drained batch (every lane idle).
+    fn retire_batch(&mut self) {
+        // Safety flush: the consume loop responds and clears lanes the
+        // moment they finish, so occupied lanes here are unreachable —
+        // but a response must never be lost to a logic slip.
+        for slot in self.lanes.iter_mut() {
+            if let Some(l) = slot.take() {
+                let done = Instant::now();
+                self.responses.push(l.finish(self.bsize, done));
+            }
+        }
+        self.state = None;
+        self.lanes = Vec::new();
+        self.bsize = 0;
+    }
+
+    /// One scheduler pump: an admission pass (batch formation or
+    /// mid-decode lane refill) plus at most one lockstep decode step.
+    /// Never blocks.  Returns `false` when there was nothing to do — no
+    /// active lane and no live queued request ([`Scheduler::run`] then
+    /// sleeps on the queue).
+    pub fn step(&mut self) -> Result<bool> {
+        if self.state.is_none() {
+            if !self.form_batch()? {
+                return Ok(false);
+            }
+        } else {
+            self.refill_lanes();
+        }
+
+        // lane-wise input tokens; idle/padding lanes feed 0
+        let bsize = self.bsize;
+        let mut xs = vec![0i32; bsize];
+        let mut any_active = false;
+        for (lane, slot) in self.lanes.iter().enumerate() {
+            if let Some(l) = slot {
+                if l.active() {
+                    xs[lane] = l.next_input();
+                    any_active = true;
+                }
+            }
+        }
+        if !any_active {
+            // drained batch: retire it so the next step can re-plan
+            self.retire_batch();
+            return Ok(true);
+        }
+
+        let x = Tensor::i32(vec![bsize], xs);
+        let state = self.state.take().expect("active batch has state");
+        let (logits, new_state) = self.backend.decode_step(&x, state)?;
+        self.state = Some(new_state);
+
+        // consume logits: lanes past their prompt sample a token;
+        // finished lanes respond and free their lane for the next
+        // admission pass
+        let vocab = logits.dims[1];
+        let rows = logits.data.as_f32()
+            .ok_or_else(|| anyhow!("logits not f32"))?;
+        let temperature = self.opts.serve.temperature;
+        for lane in 0..bsize {
+            let Some(l) = self.lanes[lane].as_mut() else {
+                continue;
+            };
+            if l.pos < l.req.prompt.len() {
+                l.pos += 1;
+                if l.pos < l.req.prompt.len() {
+                    continue;
+                }
+                // prompt just finished → this step's logits sample
+            }
+            if l.pos >= l.req.prompt.len() && l.out.len() < l.req.n_tokens {
+                let row = &rows[lane * vocab..(lane + 1) * vocab];
+                let tok = sample_logits(row, temperature, &mut self.rng)
+                    as i32;
+                l.out.push(tok);
+                self.tokens_generated += 1;
+            }
+            if !l.active() {
+                let done = Instant::now();
+                let finished = self.lanes[lane].take().unwrap();
+                self.responses.push(finished.finish(bsize, done));
+            }
+        }
+        Ok(true)
+    }
+
+    /// Drive the scheduler to completion: decode while there is work,
+    /// block on the admission queue while idle, and return once the queue
+    /// is closed and fully drained.  This is the thread a deployment
+    /// parks on the backend.
+    pub fn run(mut self) -> Result<ServeStats> {
+        loop {
+            if self.step()? {
+                continue;
+            }
+            // idle: sleep until a submission arrives or the queue closes
+            if !self.shared.queue.wait_ready() {
+                break;
+            }
+        }
+        Ok(self.take_stats())
+    }
+
+    /// Final accounting, called once the queue is closed and drained.
+    /// Takes `&mut self` (moving the collections out) because the `Drop`
+    /// impl below forbids moving fields out of a consumed `self`.
+    fn take_stats(&mut self) -> ServeStats {
+        ServeStats {
+            responses: std::mem::take(&mut self.responses),
+            total_s: self.t_start.elapsed().as_secs_f64(),
+            tokens_generated: self.tokens_generated,
+            submitted: self.shared.queue.accepted(),
+            admitted: self.admitted,
+            rejected: self.shared.rejected.load(Ordering::SeqCst),
+            expired: std::mem::take(&mut self.expired),
+            max_queue_depth: self.shared.queue.peak_depth(),
+            batches_started: self.batches_started,
+        }
+    }
+}
+
+/// The consumer going away — error propagation out of [`Scheduler::run`],
+/// a panic, or simply dropping a pump-style scheduler — must never leave
+/// producers blocked in [`SubmitHandle::submit`] on a queue nobody will
+/// ever drain again.  Closing here wakes them all with
+/// [`SubmitError::Closed`]; close is idempotent, so the normal
+/// producer-initiated shutdown path is unaffected.
+impl<B: Backend> Drop for Scheduler<'_, B> {
+    fn drop(&mut self) {
+        self.shared.queue.close();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{NativeBackend, NativeInit, NativeModel};
+
+    // The async-vs-sequential equivalence, drain, and late-admission
+    // properties live in rust/tests/scheduler_props.rs; here we cover the
+    // submission-side contracts.
+
+    fn tiny_backend(vocab: usize, seed: u64) -> NativeBackend {
+        let model = NativeModel::init_random(&NativeInit {
+            vocab_in: Some(vocab),
+            vocab_out: vocab,
+            d_model: 8,
+            n_layers: 1,
+            ..Default::default()
+        }, seed).unwrap();
+        NativeBackend::new(model)
+    }
+
+    fn req(id: u64) -> Request {
+        Request { id, prompt: vec![1, 2], n_tokens: 2 }
+    }
+
+    #[test]
+    fn empty_prompt_is_rejected_at_submit() {
+        let backend = tiny_backend(16, 0);
+        let (_sched, handle) =
+            Scheduler::new(&backend, SchedulerOpts::default()).unwrap();
+        let err = handle
+            .submit(Request { id: 9, prompt: vec![], n_tokens: 1 })
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("request 9") && msg.contains("empty prompt"),
+                "unhelpful error: {msg}");
+        assert_eq!(handle.queue_len(), 0);
+    }
+
+    #[test]
+    fn reject_backpressure_hands_the_request_back() {
+        let backend = tiny_backend(16, 1);
+        let (sched, handle) = Scheduler::new(&backend, SchedulerOpts {
+            queue_depth: 1,
+            backpressure: Backpressure::Reject,
+            ..Default::default()
+        }).unwrap();
+        handle.submit(req(0)).unwrap();
+        match handle.submit(req(1)) {
+            Err(SubmitError::QueueFull(r)) => assert_eq!(r.id, 1),
+            other => panic!("expected QueueFull, got {other:?}"),
+        }
+        handle.close();
+        let stats = sched.run().unwrap();
+        assert_eq!(stats.responses.len(), 1);
+        assert_eq!(stats.rejected, 1);
+        assert_eq!(stats.admitted, 1);
+        assert!(stats.max_queue_depth >= 1);
+    }
+
+    #[test]
+    fn submit_after_close_is_refused() {
+        let backend = tiny_backend(16, 2);
+        let (sched, handle) =
+            Scheduler::new(&backend, SchedulerOpts::default()).unwrap();
+        handle.submit(req(0)).unwrap();
+        handle.close();
+        match handle.submit(req(1)) {
+            Err(SubmitError::Closed(r)) => assert_eq!(r.id, 1),
+            other => panic!("expected Closed, got {other:?}"),
+        }
+        let stats = sched.run().unwrap();
+        assert_eq!(stats.responses.len(), 1);
+    }
+
+    #[test]
+    fn zero_deadline_expires_in_queue() {
+        let backend = tiny_backend(16, 3);
+        let (sched, handle) =
+            Scheduler::new(&backend, SchedulerOpts::default()).unwrap();
+        handle.submit(req(0)).unwrap();
+        handle.submit_with_deadline(req(7), Some(Duration::ZERO)).unwrap();
+        handle.close();
+        let stats = sched.run().unwrap();
+        // the zero-deadline request must be dropped as expired, not served
+        assert_eq!(stats.responses.len(), 1);
+        assert_eq!(stats.responses[0].id, 0);
+        assert_eq!(stats.expired, vec![7]);
+        // the drain-accounting invariant: every submission is accounted
+        // for as served or expired
+        assert_eq!(stats.submitted, 2);
+        assert_eq!(stats.submitted,
+                   stats.responses.len() + stats.expired.len());
+    }
+
+    #[test]
+    fn invalid_options_are_rejected() {
+        let backend = tiny_backend(16, 4);
+        assert!(Scheduler::new(&backend, SchedulerOpts {
+            serve: ServeOpts { max_batch: 0, ..Default::default() },
+            ..Default::default()
+        }).is_err());
+        assert!(Scheduler::new(&backend, SchedulerOpts {
+            lanes: Some(0),
+            ..Default::default()
+        }).is_err());
+    }
+}

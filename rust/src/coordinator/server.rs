@@ -1,36 +1,40 @@
-//! Serving layer: request queue + dynamic batcher + continuous batched
-//! decode, generic over [`Backend`].
+//! Serving layer: request/response types, serving statistics, and the
+//! synchronous serve API — a thin wrapper over the async admission
+//! scheduler in [`coordinator::scheduler`](super::scheduler).
+//!
+//! The decode loop itself lives in [`super::scheduler::Scheduler`]: it
+//! decodes every admitted request in **lockstep** (one `decode_step` per
+//! wall-clock tick advances all lanes, prompt tokens are consumed
+//! lane-wise, idle lanes are padding) and, on backends that implement
+//! [`Backend::reset_lane`] (native), admits queued requests into free
+//! lanes **mid-decode** — continuous batching, so a long request never
+//! holds the batch hostage and work submitted after decoding started
+//! still joins the running batch.  Backends without lane reset (PJRT
+//! artifacts) fall back to run-to-completion batches.
+//!
+//! [`serve`] / [`serve_opts`] keep the original submit-everything-up-front
+//! contract: they push the whole `Vec<Request>` through the scheduler's
+//! admission queue, close it, and drain — token-for-token identical to
+//! the PR-2 loop (greedy batched == per-request sequential decode is
+//! property-tested in `rust/tests/parallel_props.rs`; async interleaved
+//! admission in `rust/tests/scheduler_props.rs`).
 //!
 //! PJRT handles are not `Send`, so the serving loop owns the backend and
-//! requests are plain host data.  The batcher picks the lane count via
-//! [`Backend::plan_batch`] capped at [`ServeOpts::max_batch`], then
-//! decodes every admitted request in **lockstep**: one `decode_step` per
-//! wall-clock tick advances all lanes, prompt tokens are consumed
-//! lane-wise (RNN decode is O(1)/token), idle lanes are padded with an
-//! active-mask, and sampling continues until each lane has its requested
-//! tokens.
-//!
-//! Backends that implement [`Backend::reset_lane`] (native) additionally
-//! get **continuous batching**: the moment a lane finishes, its slot is
-//! re-seeded with the next queued request mid-flight, so a long request
-//! no longer holds the whole batch hostage.  Backends without lane reset
-//! (PJRT artifacts) fall back to run-to-completion batches.
-
-use std::collections::VecDeque;
-use std::time::Instant;
+//! requests are plain host data.
 
 use anyhow::{anyhow, Result};
 
 use crate::runtime::backend::MAX_DYNAMIC_BATCH;
 use crate::runtime::Backend;
-use crate::tensor::Tensor;
-use crate::util::rng::Rng;
 use crate::util::stats;
 
-use super::infer::sample_logits;
+use super::scheduler::{Backpressure, Scheduler, SchedulerOpts};
 
 pub use crate::runtime::backend::plan_batch;
 
+/// One unit of serving work: generate `n_tokens` continuation tokens for
+/// `prompt`.  `n_tokens` doubles as the per-request max-new-tokens cap —
+/// the lane frees the moment it is reached.
 #[derive(Clone, Debug)]
 pub struct Request {
     pub id: u64,
@@ -38,6 +42,9 @@ pub struct Request {
     pub n_tokens: usize,
 }
 
+/// A completed request, with its latency split into the two phases that
+/// matter for capacity planning: time *queued* (waiting for a lane) vs
+/// time *in service* (decoding).
 #[derive(Clone, Debug)]
 pub struct Response {
     pub id: u64,
@@ -51,33 +58,89 @@ pub struct Response {
     pub batch: usize,
 }
 
+/// Aggregate statistics for one serving run (one [`serve_opts`] call or
+/// one open-ended scheduler run).
+///
+/// Every latency accessor on this type returns `0.0` when `responses` is
+/// empty — an idle server reports zero latency rather than panicking
+/// inside the percentile sort or returning a 0/0 NaN mean; the
+/// `empty_response_set_reports_zero_latencies` test pins that contract.
 pub struct ServeStats {
     pub responses: Vec<Response>,
     pub total_s: f64,
     pub tokens_generated: usize,
+    /// Requests accepted into the admission queue.  After a graceful
+    /// drain, `submitted == responses.len() + expired.len()` — nothing is
+    /// lost (rejected submissions never enter the queue and are counted
+    /// separately).
+    pub submitted: usize,
+    /// Requests admitted into a decode lane (equals `responses.len()`
+    /// after a full drain).
+    pub admitted: usize,
+    /// Submissions refused at the admission queue under
+    /// [`Backpressure::Reject`] backpressure.
+    pub rejected: usize,
+    /// Ids of requests dropped because their queue-wait deadline passed
+    /// before a lane freed up.  Expired requests are never half-served.
+    pub expired: Vec<u64>,
+    /// Peak admission-queue depth observed over the run.
+    pub max_queue_depth: usize,
+    /// Lockstep batches formed.  `1` means everything was served by a
+    /// single continuously-refilled batch (the async-admission case);
+    /// fixed backends without lane reset re-plan per batch.
+    pub batches_started: usize,
 }
 
 impl ServeStats {
+    fn mean_of<F: Fn(&Response) -> f64>(&self, f: F) -> f64 {
+        if self.responses.is_empty() {
+            return 0.0;
+        }
+        self.responses.iter().map(f).sum::<f64>()
+            / self.responses.len() as f64
+    }
+
+    fn p95_of<F: Fn(&Response) -> f64>(&self, f: F) -> f64 {
+        if self.responses.is_empty() {
+            return 0.0;
+        }
+        let xs: Vec<f64> = self.responses.iter().map(f).collect();
+        stats::percentile(&xs, 95.0)
+    }
+
     pub fn throughput_tok_s(&self) -> f64 {
         self.tokens_generated as f64 / self.total_s.max(1e-9)
     }
 
+    /// Mean end-to-end latency (queue + service); `0.0` with no responses.
     pub fn mean_latency_s(&self) -> f64 {
-        if self.responses.is_empty() {
-            return 0.0;
-        }
-        self.responses.iter().map(|r| r.queue_s + r.service_s).sum::<f64>()
-            / self.responses.len() as f64
+        self.mean_of(|r| r.queue_s + r.service_s)
     }
 
-    /// p95 end-to-end latency (queue + service) across responses.
+    /// p95 end-to-end latency (queue + service) across responses; `0.0`
+    /// with no responses.
     pub fn p95_latency_s(&self) -> f64 {
-        if self.responses.is_empty() {
-            return 0.0;
-        }
-        let lat: Vec<f64> = self.responses.iter()
-            .map(|r| r.queue_s + r.service_s).collect();
-        stats::percentile(&lat, 95.0)
+        self.p95_of(|r| r.queue_s + r.service_s)
+    }
+
+    /// Mean time spent waiting for a lane; `0.0` with no responses.
+    pub fn mean_queue_s(&self) -> f64 {
+        self.mean_of(|r| r.queue_s)
+    }
+
+    /// p95 time spent waiting for a lane; `0.0` with no responses.
+    pub fn p95_queue_s(&self) -> f64 {
+        self.p95_of(|r| r.queue_s)
+    }
+
+    /// Mean decode (in-lane) time; `0.0` with no responses.
+    pub fn mean_service_s(&self) -> f64 {
+        self.mean_of(|r| r.service_s)
+    }
+
+    /// p95 decode (in-lane) time; `0.0` with no responses.
+    pub fn p95_service_s(&self) -> f64 {
+        self.p95_of(|r| r.service_s)
     }
 }
 
@@ -96,53 +159,28 @@ impl Default for ServeOpts {
     }
 }
 
-/// One occupied decode lane.
-struct Lane {
-    req: Request,
-    enqueued: Instant,
-    admitted: Instant,
-    /// Prompt cursor.
-    pos: usize,
-    out: Vec<i32>,
-}
-
-impl Lane {
-    /// Admit a queued request into a lane (used at batch formation and at
-    /// continuous-batching refill — keep the bookkeeping in one place).
-    fn admit(req: Request, enqueued: Instant) -> Lane {
-        Lane { req, enqueued, admitted: Instant::now(), pos: 0,
-               out: Vec::new() }
-    }
-
-    fn active(&self) -> bool {
-        self.pos < self.req.prompt.len() || self.out.len() < self.req.n_tokens
-    }
-
-    fn next_input(&self) -> i32 {
-        if self.pos < self.req.prompt.len() {
-            self.req.prompt[self.pos]
-        } else {
-            self.out.last().copied()
-                .unwrap_or_else(|| *self.req.prompt.last().unwrap_or(&0))
-        }
-    }
-
-    fn finish(self, bsize: usize, done: Instant) -> Response {
-        Response {
-            id: self.req.id,
-            tokens: self.out,
-            queue_s: (self.admitted - self.enqueued).as_secs_f64(),
-            service_s: (done - self.admitted).as_secs_f64(),
-            batch: bsize,
-        }
-    }
-}
-
 /// Serve a workload of requests to completion with default options
 /// (PR-1 signature, kept for callers and tests).  No lane cap: PR-1
 /// behavior planned straight from the queue length, so a fixed-batch
 /// PJRT backend exporting executables wider than [`MAX_DYNAMIC_BATCH`]
 /// still fills every lane (native backends self-cap via `plan_batch`).
+///
+/// ```
+/// use minrnn::backend::{NativeBackend, NativeInit, NativeModel};
+/// use minrnn::coordinator::server::{serve, Request};
+///
+/// let model = NativeModel::init_random(&NativeInit {
+///     vocab_in: Some(16), vocab_out: 16, d_model: 8, n_layers: 1,
+///     ..Default::default()
+/// }, 0).unwrap();
+/// let backend = NativeBackend::new(model);
+/// let stats = serve(&backend, vec![
+///     Request { id: 0, prompt: vec![1, 2, 3], n_tokens: 4 },
+///     Request { id: 1, prompt: vec![4], n_tokens: 2 },
+/// ], 0.8, 0).unwrap();
+/// assert_eq!(stats.responses.len(), 2);
+/// assert_eq!(stats.tokens_generated, 6);
+/// ```
 pub fn serve<B: Backend>(backend: &B, requests: Vec<Request>,
                          temperature: f32, seed: u64) -> Result<ServeStats> {
     serve_opts(backend, requests,
@@ -152,6 +190,11 @@ pub fn serve<B: Backend>(backend: &B, requests: Vec<Request>,
 /// Serve a workload of requests to completion using dynamic batching,
 /// lockstep decode, and (when the backend supports lane reset)
 /// continuous lane refill.
+///
+/// This is the synchronous facade over [`super::scheduler::Scheduler`]:
+/// submit everything, close the queue, drain.  For admitting requests
+/// while decoding is already underway, use the scheduler directly via
+/// [`super::scheduler::SubmitHandle`].
 pub fn serve_opts<B: Backend>(backend: &B, requests: Vec<Request>,
                               opts: &ServeOpts) -> Result<ServeStats> {
     if opts.max_batch == 0 {
@@ -162,118 +205,40 @@ pub fn serve_opts<B: Backend>(backend: &B, requests: Vec<Request>,
                            backend.name()));
     }
     // Validate up front so serving agrees with `infer::generate`, which
-    // rejects empty prompts: `Lane::next_input` would otherwise silently
-    // substitute token 0 for an empty-prompt request.
+    // rejects empty prompts: a lane would otherwise silently substitute
+    // token 0 for an empty-prompt request.
     if let Some(r) = requests.iter().find(|r| r.prompt.is_empty()) {
         return Err(anyhow!(
             "request {} has an empty prompt; every request needs at least \
              one prompt token", r.id));
     }
-    let mut rng = Rng::new(opts.seed);
-    let mut queue: VecDeque<(Request, Instant)> =
-        requests.into_iter().map(|r| (r, Instant::now())).collect();
-    let mut responses = Vec::new();
-    let mut tokens_generated = 0usize;
-    let t_start = Instant::now();
-
-    while let Some(bsize) =
-        backend.plan_batch(queue.len().min(opts.max_batch)) {
-        let mut state = backend.decode_state(bsize)?;
-        // Admit at most max_batch requests even when a fixed-size (PJRT)
-        // backend pads up to an exported lane count above the cap — the
-        // extra lanes stay idle padding.
-        let mut lanes: Vec<Option<Lane>> = (0..bsize)
-            .map(|lane| {
-                if lane >= opts.max_batch {
-                    return None;
-                }
-                queue.pop_front()
-                    .map(|(req, enqueued)| Lane::admit(req, enqueued))
-            })
-            .collect();
-
-        loop {
-            // lane-wise input tokens; idle/padding lanes feed 0
-            let mut xs = vec![0i32; bsize];
-            let mut any_active = false;
-            for (lane, slot) in lanes.iter().enumerate() {
-                if let Some(l) = slot {
-                    if l.active() {
-                        xs[lane] = l.next_input();
-                        any_active = true;
-                    }
-                }
-            }
-            if !any_active {
-                break;
-            }
-
-            let x = Tensor::i32(vec![bsize], xs);
-            let (logits, new_state) = backend.decode_step(&x, state)?;
-            state = new_state;
-
-            // consume logits: lanes past their prompt sample a token;
-            // finished lanes respond and (continuous batching) refill
-            let vocab = logits.dims[1];
-            let rows = logits.data.as_f32()
-                .ok_or_else(|| anyhow!("logits not f32"))?;
-            for lane in 0..bsize {
-                let Some(l) = lanes[lane].as_mut() else {
-                    continue;
-                };
-                if l.pos < l.req.prompt.len() {
-                    l.pos += 1;
-                    if l.pos < l.req.prompt.len() {
-                        continue;
-                    }
-                    // prompt just finished → this step's logits sample
-                }
-                if l.pos >= l.req.prompt.len()
-                    && l.out.len() < l.req.n_tokens {
-                    let row = &rows[lane * vocab..(lane + 1) * vocab];
-                    let tok = sample_logits(row, opts.temperature, &mut rng)
-                        as i32;
-                    l.out.push(tok);
-                    tokens_generated += 1;
-                }
-                if !l.active() {
-                    let done = Instant::now();
-                    let finished = lanes[lane].take().unwrap();
-                    responses.push(finished.finish(bsize, done));
-                    if !queue.is_empty()
-                        && backend.reset_lane(&mut state, lane) {
-                        let (req, enqueued) = queue.pop_front().unwrap();
-                        lanes[lane] = Some(Lane::admit(req, enqueued));
-                    }
-                }
-            }
-        }
-
-        // run-to-completion fallback: any still-occupied lanes (there are
-        // none — the loop drains them) plus whatever remains in the queue
-        // go through the outer re-plan.
-        for slot in lanes.into_iter().flatten() {
-            let done = Instant::now();
-            responses.push(slot.finish(bsize, done));
-        }
+    let (scheduler, handle) = Scheduler::new(backend, SchedulerOpts {
+        serve: opts.clone(),
+        // everything is submitted before the drain starts, so the queue
+        // must hold the whole workload without blocking this thread
+        queue_depth: requests.len().max(1),
+        backpressure: Backpressure::Block,
+        default_deadline: None,
+        lanes: None, // plan from the backlog, like the PR-2 loop
+    })?;
+    for req in requests {
+        handle.submit(req).map_err(|e| anyhow!("{e}"))?;
     }
-
-    Ok(ServeStats {
-        responses,
-        total_s: t_start.elapsed().as_secs_f64(),
-        tokens_generated,
-    })
+    handle.close();
+    scheduler.run()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::backend::{NativeBackend, NativeInit, NativeModel};
+    use crate::util::rng::Rng;
 
     // plan_batch's policy test lives with the function in
-    // runtime::backend; here we exercise the serving loop itself.
+    // runtime::backend; here we exercise the serving facade itself.
     // Lockstep-batched vs per-request sequential agreement is
-    // property-tested in rust/tests/parallel_props.rs.
+    // property-tested in rust/tests/parallel_props.rs, async interleaved
+    // admission in rust/tests/scheduler_props.rs.
 
     fn tiny_backend(vocab: usize, seed: u64) -> NativeBackend {
         let model = NativeModel::init_random(&NativeInit {
@@ -304,6 +269,13 @@ mod tests {
         assert!(stats.responses.iter()
                 .all(|r| r.tokens.iter().all(|&t| (0..32).contains(&t))));
         assert!(stats.p95_latency_s() >= 0.0);
+        // the facade fills the admission accounting too
+        assert_eq!(stats.submitted, 6);
+        assert_eq!(stats.admitted, 6);
+        assert_eq!(stats.rejected, 0);
+        assert!(stats.expired.is_empty());
+        assert!(stats.max_queue_depth >= 1);
+        assert!(stats.batches_started >= 1);
     }
 
     #[test]
@@ -329,6 +301,8 @@ mod tests {
             assert_eq!(r.tokens.len(), 3 + (r.id % 3) as usize, "req {}",
                        r.id);
         }
+        // lane refill, not batch restart: one continuously-refilled batch
+        assert_eq!(stats.batches_started, 1);
     }
 
     #[test]
@@ -354,5 +328,56 @@ mod tests {
             n_tokens: 1,
         }], &ServeOpts { max_batch: 0, ..Default::default() });
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn empty_response_set_reports_zero_latencies() {
+        // the documented edge case: every latency accessor returns 0.0 on
+        // an idle run instead of panicking inside percentile() or
+        // returning NaN from a 0/0 mean
+        let stats = ServeStats {
+            responses: Vec::new(),
+            total_s: 0.25,
+            tokens_generated: 0,
+            submitted: 0,
+            admitted: 0,
+            rejected: 0,
+            expired: Vec::new(),
+            max_queue_depth: 0,
+            batches_started: 0,
+        };
+        assert_eq!(stats.mean_latency_s(), 0.0);
+        assert_eq!(stats.p95_latency_s(), 0.0);
+        assert_eq!(stats.mean_queue_s(), 0.0);
+        assert_eq!(stats.p95_queue_s(), 0.0);
+        assert_eq!(stats.mean_service_s(), 0.0);
+        assert_eq!(stats.p95_service_s(), 0.0);
+        assert_eq!(stats.throughput_tok_s(), 0.0);
+        // serving zero requests through the facade is also well-defined
+        let backend = tiny_backend(16, 8);
+        let empty = serve(&backend, Vec::new(), 1.0, 0).unwrap();
+        assert!(empty.responses.is_empty());
+        assert_eq!(empty.p95_latency_s(), 0.0);
+    }
+
+    #[test]
+    fn queue_and_service_latency_split_is_consistent() {
+        let backend = tiny_backend(16, 13);
+        let requests: Vec<Request> = (0..5).map(|i| Request {
+            id: i,
+            prompt: vec![1, 2, 3],
+            n_tokens: 4,
+        }).collect();
+        let stats = serve_opts(&backend, requests, &ServeOpts {
+            temperature: 0.5,
+            seed: 1,
+            max_batch: 2, // forces some requests to wait in queue
+        }).unwrap();
+        for r in &stats.responses {
+            assert!(r.queue_s >= 0.0 && r.service_s > 0.0, "req {}", r.id);
+        }
+        let eps = 1e-12;
+        assert!(stats.mean_latency_s()
+                >= stats.mean_queue_s() + stats.mean_service_s() - eps);
     }
 }

@@ -19,7 +19,39 @@
 //!   needs no artifacts at all.  `cargo test` exercises it against golden
 //!   vectors exported from the JAX reference (`rust/tests/golden/`).
 //!
-//! See `rust/README.md` for backend selection and test-gating details.
+//! Training mirrors the split behind [`runtime::TrainBackend`]
+//! (`backend::NativeTrainer` runs the log-space scan VJP + AdamW fully in
+//! Rust), and serving runs through [`coordinator::server`] (synchronous
+//! facade) on top of [`coordinator::scheduler`] — async
+//! admission-controlled serving that accepts new requests mid-decode.
+//!
+//! The shortest useful path through the crate — build a model, decode:
+//!
+//! ```
+//! use minrnn::backend::{NativeBackend, NativeInit, NativeModel};
+//! use minrnn::coordinator::infer;
+//! use minrnn::util::rng::Rng;
+//!
+//! // artifact-free: a seeded random init of the paper's backbone
+//! let model = NativeModel::init_random(&NativeInit {
+//!     kind: "minlstm".to_string(),
+//!     vocab_in: Some(16),
+//!     vocab_out: 16,
+//!     d_model: 8,
+//!     n_layers: 2,
+//!     ..Default::default()
+//! }, 0).unwrap();
+//! let backend = NativeBackend::new(model);
+//! let mut rng = Rng::new(0);
+//! let tokens = infer::generate(&backend, &[1, 2, 3], 8, 0.7, &mut rng)
+//!     .unwrap();
+//! assert_eq!(tokens.len(), 8);
+//! assert!(tokens.iter().all(|&t| (0..16).contains(&t)));
+//! ```
+//!
+//! A module map with the train/serve data flows and the numerical
+//! invariants the tests pin lives in `rust/ARCHITECTURE.md`; backend
+//! selection and test-gating details in `rust/README.md`.
 
 // Tensor kernels index by (batch, time, channel) on flat buffers; explicit
 // index loops are the clearest way to write them.

@@ -59,6 +59,17 @@ pub trait Backend {
         false
     }
 
+    /// Whether [`Backend::reset_lane`] actually re-seeds lanes.  The async
+    /// scheduler (`coordinator::scheduler`) consults this *before* popping
+    /// a request off the admission queue: on a lane-resettable backend it
+    /// admits new work into free lanes of the running batch mid-decode; on
+    /// a fixed backend it only admits at batch formation and runs each
+    /// batch to completion.  Must agree with `reset_lane` (`true` here
+    /// while `reset_lane` fails would strand admitted requests).
+    fn lane_reset_supported(&self) -> bool {
+        false
+    }
+
     /// Pick a batch size for `queue_len` waiting requests, or `None` when
     /// the queue is empty.
     fn plan_batch(&self, queue_len: usize) -> Option<usize> {

@@ -14,8 +14,14 @@
 //! the kernel (row blocks, channel blocks) and never depends on the thread
 //! count, so results are bit-for-bit identical whether a kernel runs on 1
 //! or N threads — `rust/tests/parallel_props.rs` pins this.
+//!
+//! This module also hosts the crate's other dependency-free sync
+//! primitives: [`BoundedQueue`], the closable bounded FIFO channel behind
+//! `coordinator::scheduler`'s admission queue, and [`SlicePtr`], the
+//! disjoint-range shared-write handle the kernels use.
 
 use std::cell::Cell;
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
@@ -251,6 +257,206 @@ impl<T> SlicePtr<T> {
 }
 
 // ---------------------------------------------------------------------------
+// bounded closable FIFO queue (the admission channel)
+// ---------------------------------------------------------------------------
+
+/// Why a push was refused; the rejected item is handed back so the caller
+/// can retry, drop, or report it (a serving queue must never swallow a
+/// request silently).
+#[derive(Debug)]
+pub enum PushError<T> {
+    /// The queue is at capacity (only returned by [`BoundedQueue::try_push`];
+    /// the blocking [`BoundedQueue::push`] waits instead).
+    Full(T),
+    /// The queue was closed — no submission can ever be accepted again.
+    Closed(T),
+}
+
+impl<T> PushError<T> {
+    /// Recover the item that was refused.
+    pub fn into_inner(self) -> T {
+        match self {
+            PushError::Full(x) | PushError::Closed(x) => x,
+        }
+    }
+}
+
+struct QueueInner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+    /// Pushes accepted over the queue's lifetime.  Maintained under the
+    /// lock so any item visible to the consumer is already counted —
+    /// metrics read after a drain can never under-report (an atomic
+    /// bumped after the push would race a concurrent close + drain).
+    accepted: usize,
+    /// Peak depth ever observed, also exact by construction.
+    peak: usize,
+}
+
+/// Dependency-free bounded multi-producer FIFO channel with explicit
+/// shutdown — the sync primitive behind `coordinator::scheduler`'s
+/// admission queue (std's `mpsc::SyncSender` hides the length and cannot
+/// be polled from the consumer side without consuming, both of which the
+/// scheduler needs for backpressure metrics and idle-blocking).
+///
+/// Producers choose their backpressure behavior per call:
+/// [`BoundedQueue::try_push`] fails fast with [`PushError::Full`], while
+/// [`BoundedQueue::push`] blocks until space frees up.  [`BoundedQueue::close`]
+/// is idempotent, wakes every blocked producer and consumer, and turns the
+/// queue into drain-only mode: pops keep succeeding until it is empty.
+///
+/// ```
+/// use minrnn::util::threads::BoundedQueue;
+///
+/// let q: BoundedQueue<u32> = BoundedQueue::new(2);
+/// q.try_push(1).unwrap();
+/// q.try_push(2).unwrap();
+/// assert!(q.try_push(3).is_err()); // full
+/// q.close();
+/// assert_eq!(q.try_pop(), Some(1)); // drains after close
+/// assert_eq!(q.try_pop(), Some(2));
+/// assert!(!q.wait_ready()); // closed and empty: never blocks again
+/// ```
+pub struct BoundedQueue<T> {
+    inner: Mutex<QueueInner<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    /// A queue admitting at most `capacity` (≥ 1) waiting items.
+    pub fn new(capacity: usize) -> BoundedQueue<T> {
+        BoundedQueue {
+            inner: Mutex::new(QueueInner {
+                items: VecDeque::new(),
+                closed: false,
+                accepted: 0,
+                peak: 0,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Total pushes accepted so far (exact: counted under the push lock).
+    pub fn accepted(&self) -> usize {
+        self.inner.lock().unwrap().accepted
+    }
+
+    /// Peak queue depth ever reached (exact: sampled under the push lock).
+    pub fn peak_depth(&self) -> usize {
+        self.inner.lock().unwrap().peak
+    }
+
+    /// The capacity the queue was built with.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Items currently waiting (a racy snapshot, for metrics).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Whether [`BoundedQueue::close`] has been called (the queue may
+    /// still hold items to drain).
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+
+    /// Non-blocking push: refused with [`PushError::Full`] at capacity and
+    /// [`PushError::Closed`] after shutdown, handing the item back.
+    /// On success returns the queue depth *including* the pushed item,
+    /// read under the lock — the exact peak-depth sample racy `len()`
+    /// polling cannot provide.
+    pub fn try_push(&self, item: T) -> Result<usize, PushError<T>> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed {
+            return Err(PushError::Closed(item));
+        }
+        if inner.items.len() >= self.capacity {
+            return Err(PushError::Full(item));
+        }
+        inner.items.push_back(item);
+        inner.accepted += 1;
+        let depth = inner.items.len();
+        inner.peak = inner.peak.max(depth);
+        drop(inner);
+        self.not_empty.notify_one();
+        Ok(depth)
+    }
+
+    /// Blocking push: waits for space while the queue is at capacity.
+    /// Fails only with [`PushError::Closed`] (shutdown races the wait).
+    /// On success returns the post-push queue depth, like
+    /// [`BoundedQueue::try_push`].
+    pub fn push(&self, item: T) -> Result<usize, PushError<T>> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if inner.closed {
+                return Err(PushError::Closed(item));
+            }
+            if inner.items.len() < self.capacity {
+                inner.items.push_back(item);
+                inner.accepted += 1;
+                let depth = inner.items.len();
+                inner.peak = inner.peak.max(depth);
+                drop(inner);
+                self.not_empty.notify_one();
+                return Ok(depth);
+            }
+            inner = self.not_full.wait(inner).unwrap();
+        }
+    }
+
+    /// Non-blocking pop (front of the FIFO).  `None` means empty — check
+    /// [`BoundedQueue::is_closed`] to distinguish idle from shut down.
+    pub fn try_pop(&self) -> Option<T> {
+        let mut inner = self.inner.lock().unwrap();
+        let item = inner.items.pop_front();
+        if item.is_some() {
+            drop(inner);
+            self.not_full.notify_one();
+        }
+        item
+    }
+
+    /// Block until at least one item is waiting (`true`) or the queue is
+    /// closed **and** drained (`false`, the consumer's shutdown signal).
+    /// Deliberately does not pop: the scheduler wakes, then admits as many
+    /// queued items as it has free lanes via [`BoundedQueue::try_pop`].
+    pub fn wait_ready(&self) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if !inner.items.is_empty() {
+                return true;
+            }
+            if inner.closed {
+                return false;
+            }
+            inner = self.not_empty.wait(inner).unwrap();
+        }
+    }
+
+    /// Shut the queue down: no further pushes are accepted, every blocked
+    /// producer and consumer wakes, and remaining items stay poppable so
+    /// the consumer can drain gracefully.  Idempotent.
+    pub fn close(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.closed = true;
+        drop(inner);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+// ---------------------------------------------------------------------------
 // process-global pool
 // ---------------------------------------------------------------------------
 
@@ -389,5 +595,91 @@ mod tests {
         assert!(n >= 1);
         let m = set_threads(available_threads());
         assert!(m >= 1);
+    }
+
+    #[test]
+    fn bounded_queue_fifo_capacity_and_close() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(2);
+        assert_eq!(q.capacity(), 2);
+        assert!(q.is_empty() && !q.is_closed());
+        // push returns the post-push depth, sampled under the lock
+        assert_eq!(q.try_push(1).unwrap(), 1);
+        assert_eq!(q.try_push(2).unwrap(), 2);
+        match q.try_push(3) {
+            Err(PushError::Full(x)) => assert_eq!(x, 3),
+            other => panic!("expected Full, got {other:?}"),
+        }
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.try_pop(), Some(1)); // FIFO order
+        q.try_push(3).unwrap(); // space freed
+        q.close();
+        match q.try_push(4) {
+            Err(PushError::Closed(x)) => assert_eq!(x, 4),
+            other => panic!("expected Closed, got {other:?}"),
+        }
+        // drain-after-close
+        assert!(q.is_closed());
+        assert!(q.wait_ready());
+        assert_eq!(q.try_pop(), Some(2));
+        assert_eq!(q.try_pop(), Some(3));
+        assert_eq!(q.try_pop(), None);
+        assert!(!q.wait_ready());
+        // lifetime accounting is exact: 3 accepted pushes, peak depth 2
+        assert_eq!(q.accepted(), 3);
+        assert_eq!(q.peak_depth(), 2);
+    }
+
+    #[test]
+    fn bounded_queue_capacity_floor_is_one() {
+        let q: BoundedQueue<u8> = BoundedQueue::new(0);
+        assert_eq!(q.capacity(), 1);
+        q.try_push(9).unwrap();
+        assert!(q.try_push(10).is_err());
+    }
+
+    #[test]
+    fn bounded_queue_blocking_push_wakes_on_pop() {
+        let q = Arc::new(BoundedQueue::<u32>::new(1));
+        q.try_push(0).unwrap(); // full: the producer's push must wait
+        let producer = {
+            let q = Arc::clone(&q);
+            thread::spawn(move || q.push(1).is_ok())
+        };
+        thread::sleep(std::time::Duration::from_millis(10));
+        assert_eq!(q.try_pop(), Some(0)); // frees space, wakes the producer
+        assert!(producer.join().unwrap());
+        assert_eq!(q.try_pop(), Some(1));
+    }
+
+    #[test]
+    fn bounded_queue_close_wakes_blocked_producer() {
+        let q = Arc::new(BoundedQueue::<u32>::new(1));
+        q.try_push(7).unwrap(); // full: the next push blocks
+        let producer = {
+            let q = Arc::clone(&q);
+            thread::spawn(move || q.push(8))
+        };
+        // nothing ever pops, so the producer can only be released by close
+        thread::sleep(std::time::Duration::from_millis(10));
+        q.close();
+        match producer.join().unwrap() {
+            Err(PushError::Closed(x)) => assert_eq!(x, 8),
+            other => panic!("expected Closed, got {other:?}"),
+        }
+        assert_eq!(q.try_pop(), Some(7)); // 7 still drains
+        assert_eq!(q.try_pop(), None);
+    }
+
+    #[test]
+    fn bounded_queue_close_wakes_blocked_consumer() {
+        let q = Arc::new(BoundedQueue::<u32>::new(4));
+        let consumer = {
+            let q = Arc::clone(&q);
+            thread::spawn(move || q.wait_ready())
+        };
+        // empty queue: the consumer can only be released by close
+        thread::sleep(std::time::Duration::from_millis(10));
+        q.close();
+        assert!(!consumer.join().unwrap());
     }
 }
