@@ -23,6 +23,7 @@ fn main() -> anyhow::Result<()> {
         prompt: (0..6 + rng.usize_below(10))
             .map(|_| rng.below(64) as i32).collect(),
         n_tokens: 12,
+        session: None,
     }).collect();
 
     let backend = PjrtBackend::new(&model, &state.params);

@@ -57,6 +57,7 @@ fn main() -> anyhow::Result<()> {
         prompt: (0..4 + rng.usize_below(4))
             .map(|_| 2 + rng.below(2) as i32).collect(),
         n_tokens: 8,
+        session: None,
     }).collect();
     let stats = serve(&backend, requests, 0.8, 0)?;
     println!("served {} requests at {:.1} tok/s from the trained \

@@ -15,8 +15,9 @@ pub mod native;
 
 use std::path::Path;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
+use crate::runtime::backend::SessionState;
 use crate::runtime::Backend;
 use crate::tensor::Tensor;
 
@@ -74,5 +75,31 @@ impl Backend for NativeBackend {
     /// `coordinator::scheduler`.
     fn lane_reset_supported(&self) -> bool {
         true
+    }
+
+    /// Host-side f32 state: per-lane export/import is supported, which
+    /// opts the backend into the coordinator's session cache.
+    fn state_fingerprint(&self) -> Option<u64> {
+        Some(self.model.state_fingerprint())
+    }
+
+    fn export_state(&self, state: &NativeState, lane: usize)
+                    -> Result<SessionState> {
+        Ok(SessionState {
+            fingerprint: self.model.state_fingerprint(),
+            bytes: self.model.export_lane(state, lane)?,
+        })
+    }
+
+    fn import_state(&self, state: &mut NativeState, lane: usize,
+                    snap: &SessionState) -> Result<()> {
+        let want = self.model.state_fingerprint();
+        if snap.fingerprint != want {
+            bail!("session state fingerprint {:#018x} does not match \
+                   this model's decode-state layout ({want:#018x}); the \
+                   snapshot was exported from a different architecture",
+                  snap.fingerprint);
+        }
+        self.model.import_lane(state, lane, &snap.bytes)
     }
 }

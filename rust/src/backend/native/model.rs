@@ -575,6 +575,108 @@ impl NativeModel {
         Ok(())
     }
 
+    /// Fingerprint of the decode-state layout: folds a layout version,
+    /// the model dims, and each block's (mixer kind, hidden width, conv
+    /// ring-buffer width) through `splitmix64`.  Two models agree exactly
+    /// when a lane exported from one ([`NativeModel::export_lane`]) can
+    /// be imported into the other.
+    pub fn state_fingerprint(&self) -> u64 {
+        let mut fields: Vec<u64> = vec![
+            1, // state-layout version
+            self.d_model as u64,
+            self.vocab_out as u64,
+            self.blocks.len() as u64,
+        ];
+        for blk in &self.blocks {
+            fields.push(match blk.mixer.kind() {
+                "mingru" => 1,
+                _ => 2,
+            });
+            fields.push(blk.mixer.d_hidden() as u64);
+            fields.push(blk.conv.as_ref()
+                .map(|c| ((c.k - 1) * c.d) as u64).unwrap_or(0));
+        }
+        let mut fp = 0u64;
+        for f in fields {
+            let mut s = fp ^ f;
+            fp = crate::util::rng::splitmix64(&mut s);
+        }
+        fp
+    }
+
+    /// Byte length of one exported lane: 4 bytes per f32 of mixer hidden
+    /// plus conv ring buffer, per block.
+    pub fn lane_state_bytes(&self) -> usize {
+        self.blocks.iter().map(|blk| {
+            let mut n = blk.mixer.d_hidden();
+            if let Some(conv) = &blk.conv {
+                n += (conv.k - 1) * conv.d;
+            }
+            n * 4
+        }).sum()
+    }
+
+    /// Serialize one decode lane (per block: mixer hidden, then the conv
+    /// ring buffer if present) to little-endian f32 bytes.  The
+    /// batch-global `pos` counter is informational only and is not part
+    /// of a lane's state.
+    pub fn export_lane(&self, state: &NativeState, lane: usize)
+                       -> Result<Vec<u8>> {
+        if lane >= state.batch {
+            bail!("export_lane: lane {lane} >= batch {}", state.batch);
+        }
+        let mut out = Vec::with_capacity(self.lane_state_bytes());
+        for (blk, st) in self.blocks.iter().zip(state.layers.iter()) {
+            let dh = blk.mixer.d_hidden();
+            for &v in &st.h[lane * dh..(lane + 1) * dh] {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            if let (Some(conv), Some(buf)) = (&blk.conv, st.conv.as_ref()) {
+                let w = (conv.k - 1) * conv.d;
+                for &v in &buf[lane * w..(lane + 1) * w] {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Overwrite one decode lane from bytes produced by
+    /// [`NativeModel::export_lane`] on an identically-shaped model,
+    /// leaving every other lane untouched.  A wrong byte count fails
+    /// cleanly before anything is written.
+    pub fn import_lane(&self, state: &mut NativeState, lane: usize,
+                       bytes: &[u8]) -> Result<()> {
+        if lane >= state.batch {
+            bail!("import_lane: lane {lane} >= batch {}", state.batch);
+        }
+        let want = self.lane_state_bytes();
+        if bytes.len() != want {
+            bail!("import_lane: snapshot is {} bytes but this model's \
+                   lane state is {want}", bytes.len());
+        }
+        let mut off = 0usize;
+        let read_f32 = |off: &mut usize| {
+            let v = f32::from_le_bytes([bytes[*off], bytes[*off + 1],
+                                        bytes[*off + 2], bytes[*off + 3]]);
+            *off += 4;
+            v
+        };
+        for (blk, st) in self.blocks.iter().zip(state.layers.iter_mut()) {
+            let dh = blk.mixer.d_hidden();
+            for v in st.h[lane * dh..(lane + 1) * dh].iter_mut() {
+                *v = read_f32(&mut off);
+            }
+            if let (Some(conv), Some(buf)) = (&blk.conv, st.conv.as_mut()) {
+                let w = (conv.k - 1) * conv.d;
+                for v in buf[lane * w..(lane + 1) * w].iter_mut() {
+                    *v = read_f32(&mut off);
+                }
+            }
+        }
+        Ok(())
+    }
+
     pub(crate) fn embed_rows_into(&self, x: &Tensor, rows: usize,
                                   out: &mut Vec<f32>) -> Result<()> {
         match (&self.input, &x.data) {

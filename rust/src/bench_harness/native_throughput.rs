@@ -14,6 +14,10 @@
 //!   request rate), recording **queue-wait and decode latency
 //!   separately** — under load, tail latency is queueing, and the split
 //!   is what a capacity plan needs;
+//! * **session_cache** — warm multi-turn serving: a cold pass serves
+//!   each session's first turn through a shared session cache, a warm
+//!   pass extends every conversation with a follow-up turn; reports the
+//!   warm hit rate, prefill tokens saved, and cold vs warm tok/s;
 //!
 //! and derives `speedup_batched_threaded`: threaded batch-N decode over
 //! single-threaded batch-1 decode — the "fully parallelizable in
@@ -24,6 +28,7 @@
 //! Entry points: `cargo bench --bench native_throughput` (quick mode;
 //! MINRNN_FULL=1 for full) and `minrnn bench` (see `coordinator`).
 
+use std::cell::RefCell;
 use std::path::PathBuf;
 
 use anyhow::Result;
@@ -31,6 +36,7 @@ use anyhow::Result;
 use crate::backend::{NativeBackend, NativeInit, NativeModel};
 use crate::coordinator::scheduler::{Backpressure, Scheduler, SchedulerOpts};
 use crate::coordinator::server::{self, Request, ServeOpts};
+use crate::coordinator::session_cache::SessionCache;
 use crate::log_info;
 use crate::runtime::Backend;
 use crate::tensor::Tensor;
@@ -210,6 +216,7 @@ pub fn run(cfg: &Config) -> Result<Json> {
         prompt: (0..8 + rng.usize_below(8))
             .map(|_| rng.below(cfg.vocab as u64) as i32).collect(),
         n_tokens: cfg.serve_tokens,
+        session: None,
     }).collect();
     let stats = server::serve_opts(&backend, requests, &ServeOpts {
         temperature: 0.8,
@@ -245,6 +252,7 @@ pub fn run(cfg: &Config) -> Result<Json> {
             prompt: (0..8 + rng.usize_below(8))
                 .map(|_| rng.below(cfg.vocab as u64) as i32).collect(),
             n_tokens: cfg.serve_tokens,
+            session: None,
         }).collect();
     let (sched, handle) = Scheduler::new(&backend, SchedulerOpts {
         serve: ServeOpts {
@@ -298,6 +306,62 @@ pub fn run(cfg: &Config) -> Result<Json> {
         ("batches_started", json::num(astats.batches_started as f64)),
     ]);
 
+    // -- session cache: warm multi-turn serving ------------------------------
+    //
+    // Each session's first turn runs cold through a shared cache (greedy,
+    // so the comparison is sampling-order independent); the second turn
+    // extends prompt + reply with fresh user tokens.  Every warm prompt's
+    // prefix must hit the completion state the cold pass exported, so the
+    // shared history is never re-prefilled.
+    let n_sessions = cfg.serve_requests.max(1);
+    let session_cache = RefCell::new(SessionCache::new(8 << 20));
+    let greedy = ServeOpts {
+        temperature: 0.0,
+        seed: 7,
+        max_batch: cfg.max_batch,
+    };
+    let turn1: Vec<Request> = (0..n_sessions).map(|i| Request {
+        id: i as u64,
+        prompt: (0..8 + rng.usize_below(8))
+            .map(|_| rng.below(cfg.vocab as u64) as i32).collect(),
+        n_tokens: cfg.serve_tokens,
+        session: Some(i as u64),
+    }).collect();
+    let cold = server::serve_with_cache(&backend, turn1.clone(), &greedy,
+                                        &session_cache)?;
+    let mut turn2 = Vec::new();
+    for r in &cold.responses {
+        let mut prompt = turn1[r.id as usize].prompt.clone();
+        prompt.extend_from_slice(&r.tokens);
+        prompt.extend(
+            (0..4).map(|_| rng.below(cfg.vocab as u64) as i32));
+        turn2.push(Request {
+            id: r.id,
+            prompt,
+            n_tokens: cfg.serve_tokens,
+            session: Some(r.id),
+        });
+    }
+    let warm = server::serve_with_cache(&backend, turn2, &greedy,
+                                        &session_cache)?;
+    let lookups = warm.session_hits + warm.session_misses;
+    let hit_rate = warm.session_hits as f64 / lookups.max(1) as f64;
+    log_info!("  sessions {} warm follow-up turns: hit rate {:.2}, {} \
+               prefill tokens saved, cold {:>8.0} tok/s, warm {:>8.0} \
+               tok/s",
+              n_sessions, hit_rate, warm.prefill_tokens_saved,
+              cold.throughput_tok_s(), warm.throughput_tok_s());
+    let session_cache_json = json::obj(vec![
+        ("sessions", json::num(n_sessions as f64)),
+        ("tokens_per_request", json::num(cfg.serve_tokens as f64)),
+        ("hit_rate", json::num(hit_rate)),
+        ("prefill_tokens_saved",
+         json::num(warm.prefill_tokens_saved as f64)),
+        ("cold_tok_s", json::num(cold.throughput_tok_s())),
+        ("warm_tok_s", json::num(warm.throughput_tok_s())),
+        ("evictions", json::num(warm.session_evictions as f64)),
+    ]);
+
     let report = json::obj(vec![
         ("schema", json::s("minrnn.native_throughput.v1")),
         ("quick", Json::Bool(cfg.quick)),
@@ -313,6 +377,7 @@ pub fn run(cfg: &Config) -> Result<Json> {
         ("decode", Json::Arr(decode)),
         ("serve", serve),
         ("serve_async", serve_async),
+        ("session_cache", session_cache_json),
         ("speedup_batched_threaded", json::num(speedup)),
     ]);
     if let Some(out) = &cfg.out {
@@ -365,6 +430,14 @@ mod tests {
         assert!(sa.req("decode_p95_ms").unwrap().as_f64().unwrap() > 0.0);
         assert_eq!(sa.req("admitted").unwrap().as_usize().unwrap(), 3);
         assert_eq!(sa.req("rejected").unwrap().as_f64().unwrap(), 0.0);
+        // warm-session follow-up turns must hit the cache every time:
+        // each second-turn prompt extends the completion state its cold
+        // first turn exported
+        let sc = report.req("session_cache").unwrap();
+        assert_eq!(sc.req("hit_rate").unwrap().as_f64().unwrap(), 1.0);
+        assert!(sc.req("prefill_tokens_saved").unwrap()
+                .as_f64().unwrap() > 0.0);
+        assert!(sc.req("warm_tok_s").unwrap().as_f64().unwrap() > 0.0);
         assert!(report.req("speedup_batched_threaded").unwrap()
                 .as_f64().unwrap() > 0.0);
     }

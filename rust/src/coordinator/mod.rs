@@ -1,13 +1,16 @@
 //! Coordinator: CLI entrypoints, training orchestration ([`trainer`]),
 //! the inference engine ([`infer`]), the serving stack ([`server`] for the
 //! synchronous facade, [`scheduler`] for async admission-controlled
-//! serving), and the experiment registry.
+//! serving, [`session_cache`] for constant-state session warm-starts),
+//! and the experiment registry.
 
 pub mod infer;
 pub mod scheduler;
 pub mod server;
+pub mod session_cache;
 pub mod trainer;
 
+use std::cell::RefCell;
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
@@ -92,6 +95,12 @@ scheduler instead of handing it over up front: an open-loop driver thread
 submits at `--arrival-rate` req/s into a `--queue-depth`-bounded queue
 (`--backpressure block|reject`, optional `--deadline-ms` queue-wait
 budget) while the decode loop admits requests into free lanes mid-flight.
+`serve --session-cache-mb N` attaches the constant-state session cache
+(minGRU/minLSTM decode state is a few KB, O(1) in context): lanes
+warm-start from cached states covering a verified prompt prefix and skip
+that prefix's prefill; `--sessions K` tags the synthetic workload with K
+round-robin conversation ids, `--session-dir P` persists the cache across
+runs, and the hit/miss/evict counters land in the serve report.
 Run `minrnn <subcommand> --help` for options.";
 
 pub fn cli_main(args: Vec<String>) -> i32 {
@@ -640,13 +649,22 @@ fn cmd_generate(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Synthetic serve workload.  `sessions > 0` tags requests with
+/// round-robin conversation ids (`--sessions K`) so a session cache can
+/// export completion states; `0` leaves them session-less.
 fn synthetic_requests(rng: &mut Rng, n: usize, n_tokens: usize,
-                      vocab: usize) -> Vec<server::Request> {
+                      vocab: usize, sessions: usize)
+                      -> Vec<server::Request> {
     (0..n).map(|i| server::Request {
         id: i as u64,
         prompt: (0..8 + rng.usize_below(8))
             .map(|_| rng.below(vocab as u64) as i32).collect(),
         n_tokens,
+        session: if sessions > 0 {
+            Some((i % sessions) as u64)
+        } else {
+            None
+        },
     }).collect()
 }
 
@@ -668,6 +686,13 @@ fn report_serve(stats: &server::ServeStats) {
     batches.sort_unstable();
     batches.dedup();
     println!("batch sizes used: {batches:?}");
+    if stats.session_hits + stats.session_misses > 0 {
+        println!("session cache: {} hits / {} lookups, {} prefill tokens \
+                  saved, {} evictions",
+                 stats.session_hits,
+                 stats.session_hits + stats.session_misses,
+                 stats.prefill_tokens_saved, stats.session_evictions);
+    }
 }
 
 /// Drive the async scheduler with an open-loop arrival process: a
@@ -677,7 +702,8 @@ fn report_serve(stats: &server::ServeStats) {
 /// never crosses threads, only plain-data requests do.
 fn serve_async<B: crate::runtime::Backend>(
     backend: &B, requests: Vec<server::Request>, opts: &server::ServeOpts,
-    p: &Parsed) -> Result<server::ServeStats> {
+    cache: Option<&RefCell<session_cache::SessionCache>>, p: &Parsed)
+    -> Result<server::ServeStats> {
     let backpressure = match p.req("backpressure")? {
         "block" => scheduler::Backpressure::Block,
         "reject" => scheduler::Backpressure::Reject,
@@ -689,7 +715,7 @@ fn serve_async<B: crate::runtime::Backend>(
     if rate < 0.0 {
         return Err(anyhow!("--arrival-rate must be >= 0"));
     }
-    let (sched, handle) = scheduler::Scheduler::new(
+    let (mut sched, handle) = scheduler::Scheduler::new(
         backend,
         scheduler::SchedulerOpts {
             serve: opts.clone(),
@@ -704,6 +730,9 @@ fn serve_async<B: crate::runtime::Backend>(
             // so requests trickling in one by one still share a batch
             lanes: Some(opts.max_batch),
         })?;
+    if let Some(c) = cache {
+        sched.set_session_cache(c);
+    }
     let n = requests.len();
     log_info!("async serving: {n} requests, arrival rate {} req/s, queue \
                depth {}, {:?} backpressure",
@@ -752,26 +781,62 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .opt("deadline-ms", Some("0"),
              "async: per-request queue-wait deadline in ms (0 = none); \
               requests still queued past it are dropped, not half-served")
+        .opt("temperature", Some("0.8"),
+             "sampling temperature (0 = greedy; required for warm-run \
+              output to be bit-identical to a cold run)")
+        .opt("session-cache-mb", Some("0"),
+             "session-cache byte budget in MiB (0 = cache off unless \
+              --session-dir is set)")
+        .opt("session-dir", None,
+             "directory to persist the session cache across runs \
+              (loads <dir>/sessions.mrsc on start, saves it on exit)")
+        .opt("sessions", Some("0"),
+             "tag synthetic requests with this many round-robin \
+              conversation ids (0 = session-less)")
+        .flag("print-responses",
+              "print each response's tokens (sorted by request id), for \
+               comparing runs")
         .positional("variant", "LM variant (pjrt backend only)");
     let p = cmd.parse(args)?;
     apply_threads_opt(&p)?;
     let n = p.usize("requests")?;
     let n_tokens = p.usize("tokens")?;
     let opts = server::ServeOpts {
-        temperature: 0.8,
+        temperature: p.f32("temperature")?,
         seed: p.u64("seed")?,
         max_batch: p.usize("max-batch")?,
     };
     let is_async = p.flag("async");
+    let cache_mb = p.usize("session-cache-mb")?;
+    let session_dir = p.get("session-dir").map(PathBuf::from);
+    let sessions = p.usize("sessions")?;
+    let cache_file = session_dir.as_ref().map(|d| d.join("sessions.mrsc"));
+    let cache = if cache_mb > 0 || session_dir.is_some() {
+        let budget = cache_mb.max(1) << 20;
+        let c = match &cache_file {
+            Some(f) if f.exists() => {
+                let c = session_cache::SessionCache::load(f, budget)?;
+                log_info!("session cache: loaded {} entries ({} KiB) from \
+                           {}", c.len(), c.used_bytes() >> 10, f.display());
+                c
+            }
+            _ => session_cache::SessionCache::new(budget),
+        };
+        Some(RefCell::new(c))
+    } else {
+        None
+    };
     let mut rng = Rng::new(p.u64("seed")?);
     let stats = match resolve_backend(&p)?.as_str() {
         "native" => {
             reject_variant_for_native(&p)?;
             let backend = native_backend(&p, CharVocab::new().size())?;
             let requests = synthetic_requests(
-                &mut rng, n, n_tokens, backend.model.vocab_out);
+                &mut rng, n, n_tokens, backend.model.vocab_out, sessions);
             if is_async {
-                serve_async(&backend, requests, &opts, &p)?
+                serve_async(&backend, requests, &opts, cache.as_ref(), &p)?
+            } else if let Some(c) = &cache {
+                server::serve_with_cache(&backend, requests, &opts, c)?
             } else {
                 server::serve_opts(&backend, requests, &opts)?
             }
@@ -788,10 +853,15 @@ fn cmd_serve(args: &[String]) -> Result<()> {
                 None => model.init(0, 0.0)?,
             };
             let vocab = model.variant.cfg_usize("vocab_in").unwrap_or(64);
-            let requests = synthetic_requests(&mut rng, n, n_tokens, vocab);
+            let requests = synthetic_requests(&mut rng, n, n_tokens, vocab,
+                                              sessions);
             let backend = PjrtBackend::new(&model, &state.params);
+            // the PJRT backend has no state export; an attached cache
+            // stays inert and every request falls back to prefill
             if is_async {
-                serve_async(&backend, requests, &opts, &p)?
+                serve_async(&backend, requests, &opts, cache.as_ref(), &p)?
+            } else if let Some(c) = &cache {
+                server::serve_with_cache(&backend, requests, &opts, c)?
             } else {
                 server::serve_opts(&backend, requests, &opts)?
             }
@@ -799,7 +869,25 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         other => return Err(anyhow!(
             "unknown backend '{other}' (expected pjrt | native)")),
     };
+    if let (Some(c), Some(f)) = (&cache, &cache_file) {
+        if let Some(dir) = f.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        c.borrow().save(f)?;
+        log_info!("session cache: saved {} entries ({} KiB) to {}",
+                  c.borrow().len(), c.borrow().used_bytes() >> 10,
+                  f.display());
+    }
     report_serve(&stats);
+    if p.flag("print-responses") {
+        let mut responses: Vec<_> = stats.responses.iter().collect();
+        responses.sort_by_key(|r| r.id);
+        for r in responses {
+            let toks: Vec<String> =
+                r.tokens.iter().map(|t| t.to_string()).collect();
+            println!("response {}: {}", r.id, toks.join(" "));
+        }
+    }
     Ok(())
 }
 

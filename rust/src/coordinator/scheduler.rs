@@ -28,6 +28,12 @@
 //! work, sleep on the queue while idle, return [`ServeStats`] once the
 //! queue is closed and drained.
 //!
+//! A [`SessionCache`] can be attached with
+//! [`Scheduler::set_session_cache`]: because minGRU/minLSTM decode state
+//! is a few KB and O(1) in context, admitted lanes can import a cached
+//! state covering a verified prompt prefix and skip that prefix's
+//! prefill entirely — see `coordinator::session_cache`.
+//!
 //! PJRT handles are not `Send`, so the scheduler (like the PR-2 loop)
 //! stays on the thread that owns the backend; only plain-data requests
 //! cross threads.  The sequential `serve_opts` API survives as a thin
@@ -47,14 +53,19 @@
 //! let (scheduler, handle) =
 //!     Scheduler::new(&backend, SchedulerOpts::default()).unwrap();
 //! // producers (any thread) submit; close() starts the graceful drain
-//! handle.submit(Request { id: 0, prompt: vec![1, 2], n_tokens: 3 }).unwrap();
-//! handle.submit(Request { id: 1, prompt: vec![3], n_tokens: 2 }).unwrap();
+//! handle.submit(Request {
+//!     id: 0, prompt: vec![1, 2], n_tokens: 3, session: None,
+//! }).unwrap();
+//! handle.submit(Request {
+//!     id: 1, prompt: vec![3], n_tokens: 2, session: None,
+//! }).unwrap();
 //! handle.close();
 //! let stats = scheduler.run().unwrap();
 //! assert_eq!(stats.responses.len(), 2);
 //! assert_eq!(stats.tokens_generated, 5);
 //! ```
 
+use std::cell::RefCell;
 use std::collections::VecDeque;
 use std::fmt;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -70,6 +81,14 @@ use crate::util::threads::{BoundedQueue, PushError};
 
 use super::infer::sample_logits;
 use super::server::{Request, Response, ServeOpts, ServeStats};
+use super::session_cache::SessionCache;
+
+/// How often (in prompt tokens) a decoding lane snapshots its state into
+/// an attached session cache, in addition to the snapshot one token
+/// before the prompt ends.  Periodic snapshots are what let a *different*
+/// request sharing only part of the prompt (a common system prefix) hit
+/// the cache.
+const SNAPSHOT_EVERY: usize = 8;
 
 // ---------------------------------------------------------------------------
 // options
@@ -301,6 +320,13 @@ pub struct Scheduler<'b, B: Backend> {
     lanes: Vec<Option<Lane>>,
     /// Whether the backend re-seeds lanes in place (continuous admission).
     continuous: bool,
+    /// Optional session cache ([`Scheduler::set_session_cache`]): admitted
+    /// lanes warm-start from it, decoding lanes snapshot into it.
+    cache: Option<&'b RefCell<SessionCache>>,
+    cache_hits: usize,
+    cache_misses: usize,
+    prefill_saved: usize,
+    cache_evictions_at_attach: u64,
     responses: Vec<Response>,
     expired: Vec<u64>,
     tokens_generated: usize,
@@ -344,6 +370,11 @@ impl<'b, B: Backend> Scheduler<'b, B> {
             bsize: 0,
             lanes: Vec::new(),
             continuous,
+            cache: None,
+            cache_hits: 0,
+            cache_misses: 0,
+            prefill_saved: 0,
+            cache_evictions_at_attach: 0,
             responses: Vec::new(),
             expired: Vec::new(),
             tokens_generated: 0,
@@ -351,6 +382,20 @@ impl<'b, B: Backend> Scheduler<'b, B> {
             batches_started: 0,
             t_start: Instant::now(),
         }, handle))
+    }
+
+    /// Attach a session cache.  Admitted lanes try to warm-start from it
+    /// (import a cached state covering a verified prompt prefix, skipping
+    /// that prefix's prefill) and decoding lanes snapshot back into it —
+    /// periodically through the prompt (shared-prefix dedup) and, for
+    /// requests carrying a [`Request::session`] id, on completion (the
+    /// multi-turn path).  On backends without state export
+    /// ([`Backend::state_fingerprint`] `== None`, e.g. PJRT artifacts)
+    /// the cache stays inert and every request falls back to a normal
+    /// prefill.
+    pub fn set_session_cache(&mut self, cache: &'b RefCell<SessionCache>) {
+        self.cache_evictions_at_attach = cache.borrow().stats().evictions;
+        self.cache = Some(cache);
     }
 
     /// Batches formed so far (1 after a full run means every request was
@@ -428,7 +473,39 @@ impl<'b, B: Backend> Scheduler<'b, B> {
         self.batches_started += 1;
         self.lanes = lanes;
         self.admitted += admitted;
+        for lane in 0..self.lanes.len() {
+            self.restore_lane(lane);
+        }
         Ok(true)
+    }
+
+    /// Warm-start a freshly admitted lane from the session cache: on a
+    /// verified prefix hit the cached lane state is imported and the
+    /// prompt cursor skips the covered tokens, turning most of the
+    /// prefill into a lookup.  Counts a miss (and decodes from scratch)
+    /// when the cache holds nothing usable; a no-op without an attached
+    /// cache or on backends that cannot import state.
+    fn restore_lane(&mut self, lane: usize) {
+        let Some(cache) = self.cache else { return };
+        let Some(fp) = self.backend.state_fingerprint() else { return };
+        let Some(l) = self.lanes[lane].as_mut() else { return };
+        if l.pos != 0 {
+            return; // already decoding; nothing to warm-start
+        }
+        let hit =
+            cache.borrow_mut().lookup(l.req.session, &l.req.prompt, fp);
+        let Some((covered, snap)) = hit else {
+            self.cache_misses += 1;
+            return;
+        };
+        let state = self.state.as_mut().expect("admitted lane has state");
+        if self.backend.import_state(state, lane, &snap).is_ok() {
+            l.pos = covered;
+            self.cache_hits += 1;
+            self.prefill_saved += covered;
+        } else {
+            self.cache_misses += 1;
+        }
     }
 
     /// Mid-decode admission: seed free lanes of the running batch from the
@@ -452,6 +529,7 @@ impl<'b, B: Backend> Scheduler<'b, B> {
             }
             self.lanes[lane] = Some(Lane::admit(sub.req, sub.enqueued));
             self.admitted += 1;
+            self.restore_lane(lane);
         }
     }
 
@@ -515,6 +593,12 @@ impl<'b, B: Backend> Scheduler<'b, B> {
         let rows = logits.data.as_f32()
             .ok_or_else(|| anyhow!("logits not f32"))?;
         let temperature = self.opts.serve.temperature;
+        let caching = self.cache.is_some()
+            && self.backend.state_fingerprint().is_some();
+        // (lane, session, covered tokens) to export once the loop is
+        // done: a finished lane's bookkeeping is gone, but its state row
+        // stays untouched until the next admission pass.
+        let mut exports: Vec<(usize, Option<u64>, Vec<i32>)> = Vec::new();
         for lane in 0..bsize {
             let Some(l) = self.lanes[lane].as_mut() else {
                 continue;
@@ -522,6 +606,18 @@ impl<'b, B: Backend> Scheduler<'b, B> {
             if l.pos < l.req.prompt.len() {
                 l.pos += 1;
                 if l.pos < l.req.prompt.len() {
+                    // mid-prompt: after the increment the lane state
+                    // covers exactly prompt[..pos].  Snapshot
+                    // periodically (shared-prefix dedup) and one token
+                    // before the prompt ends (so rerunning the same
+                    // prompt hits — a lane must keep one prompt token to
+                    // feed for its first sampling logits).
+                    if caching
+                        && (l.pos % SNAPSHOT_EVERY == 0
+                            || l.pos + 1 == l.req.prompt.len()) {
+                        exports.push((lane, None,
+                                      l.req.prompt[..l.pos].to_vec()));
+                    }
                     continue;
                 }
                 // prompt just finished → this step's logits sample
@@ -536,7 +632,25 @@ impl<'b, B: Backend> Scheduler<'b, B> {
             if !l.active() {
                 let done = Instant::now();
                 let finished = self.lanes[lane].take().unwrap();
+                if caching && finished.req.session.is_some() {
+                    // the final sampled token was never fed through
+                    // decode_step, so the lane state covers
+                    // prompt ++ out[..len-1] — exactly the prefix of a
+                    // follow-up turn that extends this conversation
+                    let n = finished.out.len().saturating_sub(1);
+                    let mut toks = finished.req.prompt.clone();
+                    toks.extend_from_slice(&finished.out[..n]);
+                    exports.push((lane, finished.req.session, toks));
+                }
                 self.responses.push(finished.finish(bsize, done));
+            }
+        }
+        if let Some(cache) = self.cache {
+            let state = self.state.as_ref().expect("active batch has state");
+            for (lane, session, toks) in exports {
+                if let Ok(snap) = self.backend.export_state(state, lane) {
+                    cache.borrow_mut().insert(session, &toks, snap);
+                }
             }
         }
         Ok(true)
@@ -573,6 +687,13 @@ impl<'b, B: Backend> Scheduler<'b, B> {
             expired: std::mem::take(&mut self.expired),
             max_queue_depth: self.shared.queue.peak_depth(),
             batches_started: self.batches_started,
+            session_hits: self.cache_hits,
+            session_misses: self.cache_misses,
+            session_evictions: self.cache
+                .map(|c| (c.borrow().stats().evictions
+                          - self.cache_evictions_at_attach) as usize)
+                .unwrap_or(0),
+            prefill_tokens_saved: self.prefill_saved,
         }
     }
 }
@@ -610,7 +731,7 @@ mod tests {
     }
 
     fn req(id: u64) -> Request {
-        Request { id, prompt: vec![1, 2], n_tokens: 2 }
+        Request { id, prompt: vec![1, 2], n_tokens: 2, session: None }
     }
 
     #[test]
@@ -619,7 +740,9 @@ mod tests {
         let (_sched, handle) =
             Scheduler::new(&backend, SchedulerOpts::default()).unwrap();
         let err = handle
-            .submit(Request { id: 9, prompt: vec![], n_tokens: 1 })
+            .submit(Request {
+                id: 9, prompt: vec![], n_tokens: 1, session: None,
+            })
             .unwrap_err();
         let msg = err.to_string();
         assert!(msg.contains("request 9") && msg.contains("empty prompt"),

@@ -22,6 +22,8 @@
 //! PJRT handles are not `Send`, so the serving loop owns the backend and
 //! requests are plain host data.
 
+use std::cell::RefCell;
+
 use anyhow::{anyhow, Result};
 
 use crate::runtime::backend::MAX_DYNAMIC_BATCH;
@@ -29,6 +31,7 @@ use crate::runtime::Backend;
 use crate::util::stats;
 
 use super::scheduler::{Backpressure, Scheduler, SchedulerOpts};
+use super::session_cache::SessionCache;
 
 pub use crate::runtime::backend::plan_batch;
 
@@ -40,6 +43,13 @@ pub struct Request {
     pub id: u64,
     pub prompt: Vec<i32>,
     pub n_tokens: usize,
+    /// Conversation id for the session cache ([`serve_with_cache`] /
+    /// [`super::scheduler::Scheduler::set_session_cache`]): requests
+    /// carrying a session id export their final decode state on
+    /// completion so the session's next turn skips re-prefilling the
+    /// shared history.  `None` opts out of the completion export (the
+    /// request still benefits from shared-prefix hits).
+    pub session: Option<u64>,
 }
 
 /// A completed request, with its latency split into the two phases that
@@ -89,6 +99,19 @@ pub struct ServeStats {
     /// single continuously-refilled batch (the async-admission case);
     /// fixed backends without lane reset re-plan per batch.
     pub batches_started: usize,
+    /// Session-cache lookups that warm-started a lane from a cached
+    /// state (zero when no cache is attached or the backend cannot
+    /// import state).
+    pub session_hits: usize,
+    /// Session-cache lookups that found nothing usable; the lane
+    /// prefilled from scratch.  `session_hits + session_misses` equals
+    /// the number of admissions that consulted the cache.
+    pub session_misses: usize,
+    /// Cache entries evicted (LRU, byte budget) during this run.
+    pub session_evictions: usize,
+    /// Prompt tokens whose prefill was skipped thanks to cache hits —
+    /// the tentpole saving: each is one `decode_step` that never ran.
+    pub prefill_tokens_saved: usize,
 }
 
 impl ServeStats {
@@ -175,8 +198,8 @@ impl Default for ServeOpts {
 /// }, 0).unwrap();
 /// let backend = NativeBackend::new(model);
 /// let stats = serve(&backend, vec![
-///     Request { id: 0, prompt: vec![1, 2, 3], n_tokens: 4 },
-///     Request { id: 1, prompt: vec![4], n_tokens: 2 },
+///     Request { id: 0, prompt: vec![1, 2, 3], n_tokens: 4, session: None },
+///     Request { id: 1, prompt: vec![4], n_tokens: 2, session: None },
 /// ], 0.8, 0).unwrap();
 /// assert_eq!(stats.responses.len(), 2);
 /// assert_eq!(stats.tokens_generated, 6);
@@ -197,6 +220,28 @@ pub fn serve<B: Backend>(backend: &B, requests: Vec<Request>,
 /// [`super::scheduler::SubmitHandle`].
 pub fn serve_opts<B: Backend>(backend: &B, requests: Vec<Request>,
                               opts: &ServeOpts) -> Result<ServeStats> {
+    serve_inner(backend, requests, opts, None)
+}
+
+/// [`serve_opts`] with a [`SessionCache`] attached: admitted lanes
+/// warm-start from cached per-lane decode states (skipping the covered
+/// prompt prefix) and completed requests carrying a [`Request::session`]
+/// id export their state back into the cache for the next turn.  The
+/// cache is borrowed, not owned, so one cache can span many serve calls
+/// — and, via `save`/`load`, many server restarts.  On backends without
+/// state export the cache stays inert and every request prefills
+/// normally.
+pub fn serve_with_cache<B: Backend>(backend: &B, requests: Vec<Request>,
+                                    opts: &ServeOpts,
+                                    cache: &RefCell<SessionCache>)
+                                    -> Result<ServeStats> {
+    serve_inner(backend, requests, opts, Some(cache))
+}
+
+fn serve_inner<B: Backend>(backend: &B, requests: Vec<Request>,
+                           opts: &ServeOpts,
+                           cache: Option<&RefCell<SessionCache>>)
+                           -> Result<ServeStats> {
     if opts.max_batch == 0 {
         return Err(anyhow!("--max-batch must be >= 1"));
     }
@@ -212,7 +257,7 @@ pub fn serve_opts<B: Backend>(backend: &B, requests: Vec<Request>,
             "request {} has an empty prompt; every request needs at least \
              one prompt token", r.id));
     }
-    let (scheduler, handle) = Scheduler::new(backend, SchedulerOpts {
+    let (mut scheduler, handle) = Scheduler::new(backend, SchedulerOpts {
         serve: opts.clone(),
         // everything is submitted before the drain starts, so the queue
         // must hold the whole workload without blocking this thread
@@ -221,6 +266,9 @@ pub fn serve_opts<B: Backend>(backend: &B, requests: Vec<Request>,
         default_deadline: None,
         lanes: None, // plan from the backlog, like the PR-2 loop
     })?;
+    if let Some(c) = cache {
+        scheduler.set_session_cache(c);
+    }
     for req in requests {
         handle.submit(req).map_err(|e| anyhow!("{e}"))?;
     }
@@ -261,6 +309,7 @@ mod tests {
             prompt: (0..2 + rng.usize_below(4))
                 .map(|_| rng.below(32) as i32).collect(),
             n_tokens: 5,
+            session: None,
         }).collect();
         let stats = serve(&backend, requests, 1.0, 0).unwrap();
         assert_eq!(stats.responses.len(), 6);
@@ -287,6 +336,7 @@ mod tests {
             id: i,
             prompt: vec![1 + (i % 5) as i32, 2],
             n_tokens: 3 + (i % 3) as usize,
+            session: None,
         }).collect();
         let want_tokens: usize = requests.iter().map(|r| r.n_tokens).sum();
         let stats = serve_opts(&backend, requests, &ServeOpts {
@@ -311,8 +361,9 @@ mod tests {
         // feeding token 0 into the empty lane
         let backend = tiny_backend(16, 2);
         let err = serve_opts(&backend, vec![
-            Request { id: 0, prompt: vec![1, 2], n_tokens: 2 },
-            Request { id: 7, prompt: vec![], n_tokens: 2 },
+            Request { id: 0, prompt: vec![1, 2], n_tokens: 2,
+                      session: None },
+            Request { id: 7, prompt: vec![], n_tokens: 2, session: None },
         ], &ServeOpts::default());
         let msg = format!("{:#}", err.unwrap_err());
         assert!(msg.contains("request 7") && msg.contains("empty prompt"),
@@ -326,6 +377,7 @@ mod tests {
             id: 0,
             prompt: vec![1],
             n_tokens: 1,
+            session: None,
         }], &ServeOpts { max_batch: 0, ..Default::default() });
         assert!(err.is_err());
     }
@@ -345,6 +397,10 @@ mod tests {
             expired: Vec::new(),
             max_queue_depth: 0,
             batches_started: 0,
+            session_hits: 0,
+            session_misses: 0,
+            session_evictions: 0,
+            prefill_tokens_saved: 0,
         };
         assert_eq!(stats.mean_latency_s(), 0.0);
         assert_eq!(stats.p95_latency_s(), 0.0);
@@ -367,6 +423,7 @@ mod tests {
             id: i,
             prompt: vec![1, 2, 3],
             n_tokens: 4,
+            session: None,
         }).collect();
         let stats = serve_opts(&backend, requests, &ServeOpts {
             temperature: 0.5,

@@ -1,0 +1,460 @@
+//! Constant-state session cache for the serving stack.
+//!
+//! The paper's recurrence gives minGRU/minLSTM a decode state that is a
+//! few KB per layer and O(1) in context length — unlike a transformer KV
+//! cache, a whole conversation's state fits in a hash-map entry.  This
+//! module turns that into the serving tier's warm-start path: a
+//! returning session's next turn becomes a cache lookup instead of a
+//! prefill.
+//!
+//! * **Keying.**  Entries are content-addressed by a rolling hash of the
+//!   token prefix they cover and verified against the stored tokens (a
+//!   hash collision can never serve the wrong state); a `session id →
+//!   latest prefix` map realizes the `(session, prefix)` key on top —
+//!   [`SessionCache::lookup`] checks the session's own latest entry
+//!   first, then scans for the longest cached prefix of the prompt.
+//! * **Shared-prefix dedup.**  Two sessions with the same system prompt
+//!   hash to the same entry: the prefix is prefilled once, the state is
+//!   stored once ([`std::sync::Arc`]), and every later request clones
+//!   the `Arc`, not the bytes.
+//! * **LRU + byte budget.**  Entries are evicted least-recently-used
+//!   once the byte budget is exceeded; an entry larger than the whole
+//!   budget is refused outright.
+//! * **Persistence.**  [`SessionCache::save`] /
+//!   [`SessionCache::load`] round-trip the cache through a small binary
+//!   format (magic `MRSC`, atomic tmp+rename like `util::io`), so
+//!   sessions survive a server restart.  Snapshots carry the exporting
+//!   model's fingerprint; a cache loaded against a different
+//!   architecture simply never hits.
+//!
+//! The cache stores whatever [`Backend::export_state`] produced and
+//! never interprets the bytes; all model knowledge lives behind the
+//! trait.
+//!
+//! [`Backend::export_state`]: crate::runtime::Backend::export_state
+
+use std::collections::HashMap;
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::backend::SessionState;
+use crate::util::rng::splitmix64;
+
+pub const MAGIC: &[u8; 4] = b"MRSC";
+pub const VERSION: u32 = 1;
+
+/// Fixed per-entry bookkeeping charged against the byte budget on top of
+/// the state bytes and the covered tokens.
+const ENTRY_OVERHEAD: usize = 64;
+
+/// Rolling prefix hash: fold each token through `splitmix64` so the hash
+/// of `tokens[..k+1]` is computable from the hash of `tokens[..k]`.
+pub fn prefix_hash(tokens: &[i32]) -> u64 {
+    let mut h = 0u64;
+    for &t in tokens {
+        h = extend_hash(h, t);
+    }
+    h
+}
+
+#[inline]
+fn extend_hash(h: u64, tok: i32) -> u64 {
+    let mut s = h ^ (tok as u32 as u64);
+    splitmix64(&mut s)
+}
+
+/// Lifetime counters; exposed through `ServeStats` per serving run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+}
+
+struct Entry {
+    /// The exact token prefix this state covers — lookup verifies these
+    /// against the prompt, so a hash collision degrades to a miss.
+    tokens: Vec<i32>,
+    state: Arc<SessionState>,
+    last_used: u64,
+    /// Budget charge: state bytes + token bytes + [`ENTRY_OVERHEAD`].
+    bytes: usize,
+}
+
+/// LRU store of exported per-lane decode states, keyed by token prefix
+/// (content-addressed) with a session-id pointer map on top.  See the
+/// module docs for the design.
+pub struct SessionCache {
+    store: HashMap<u64, Entry>,
+    /// session id → prefix hash of the session's most recent state.
+    sessions: HashMap<u64, u64>,
+    budget: usize,
+    used: usize,
+    tick: u64,
+    stats: CacheStats,
+}
+
+impl SessionCache {
+    /// An empty cache with a byte budget (`--session-cache-mb` × 2^20).
+    pub fn new(budget_bytes: usize) -> SessionCache {
+        SessionCache {
+            store: HashMap::new(),
+            sessions: HashMap::new(),
+            budget: budget_bytes,
+            used: 0,
+            tick: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.store.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.store.is_empty()
+    }
+
+    pub fn used_bytes(&self) -> usize {
+        self.used
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.budget
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    fn touch(&mut self, hash: u64) {
+        self.tick += 1;
+        if let Some(e) = self.store.get_mut(&hash) {
+            e.last_used = self.tick;
+        }
+    }
+
+    /// Longest usable cached prefix of `prompt`: returns
+    /// `(covered, state)` where `state` is the decode state after
+    /// consuming `prompt[..covered]`.  `covered` is capped at
+    /// `prompt.len() - 1` — the admitted lane must still feed at least
+    /// one prompt token to produce the logits it samples from.  Entries
+    /// are verified token-for-token and against `fingerprint` (the
+    /// serving model's [`Backend::state_fingerprint`]), so neither a
+    /// hash collision nor a stale on-disk cache from another
+    /// architecture can ever serve a wrong state — both degrade to a
+    /// miss.
+    ///
+    /// [`Backend::state_fingerprint`]:
+    ///     crate::runtime::Backend::state_fingerprint
+    pub fn lookup(&mut self, session: Option<u64>, prompt: &[i32],
+                  fingerprint: u64)
+                  -> Option<(usize, Arc<SessionState>)> {
+        let usable = |e: &Entry, k: usize| {
+            e.tokens.len() == k && e.tokens[..] == prompt[..k]
+                && e.state.fingerprint == fingerprint
+        };
+        // fast path: the session's own latest state, if it is a prefix
+        let by_session = session.and_then(|s| self.sessions.get(&s))
+            .copied();
+        if let Some(h) = by_session {
+            if let Some(e) = self.store.get(&h) {
+                let k = e.tokens.len();
+                if k < prompt.len() && usable(e, k) {
+                    let state = Arc::clone(&e.state);
+                    self.touch(h);
+                    self.stats.hits += 1;
+                    return Some((k, state));
+                }
+            }
+        }
+        // longest cached prefix: rolling hashes ascending, scan descending
+        if prompt.len() > 1 {
+            let mut hashes = Vec::with_capacity(prompt.len() - 1);
+            let mut h = 0u64;
+            for &t in &prompt[..prompt.len() - 1] {
+                h = extend_hash(h, t);
+                hashes.push(h); // hashes[k-1] = hash of prompt[..k]
+            }
+            for k in (1..prompt.len()).rev() {
+                let h = hashes[k - 1];
+                let Some(e) = self.store.get(&h) else { continue };
+                if !usable(e, k) {
+                    continue;
+                }
+                let state = Arc::clone(&e.state);
+                self.touch(h);
+                self.stats.hits += 1;
+                return Some((k, state));
+            }
+        }
+        self.stats.misses += 1;
+        None
+    }
+
+    /// Store the decode state covering exactly `tokens`.  A duplicate
+    /// prefix refreshes the existing entry instead of storing a second
+    /// copy (shared-prefix dedup); oversized entries are refused; the
+    /// least-recently-used entries are evicted until the budget holds.
+    pub fn insert(&mut self, session: Option<u64>, tokens: &[i32],
+                  state: SessionState) {
+        if tokens.is_empty() {
+            return;
+        }
+        let hash = prefix_hash(tokens);
+        if let Some(e) = self.store.get(&hash) {
+            if e.tokens[..] == tokens[..] {
+                // dedup: decode is deterministic given the prefix, so
+                // the stored state is already this state
+                self.touch(hash);
+                if let Some(s) = session {
+                    self.sessions.insert(s, hash);
+                }
+                return;
+            }
+            // hash collision with different tokens: keep the resident
+            // entry, drop the newcomer (lookup verifies tokens anyway)
+            return;
+        }
+        let bytes =
+            state.bytes.len() + tokens.len() * 4 + ENTRY_OVERHEAD;
+        if bytes > self.budget {
+            return; // would evict the whole cache for one entry
+        }
+        self.tick += 1;
+        self.store.insert(hash, Entry {
+            tokens: tokens.to_vec(),
+            state: Arc::new(state),
+            last_used: self.tick,
+            bytes,
+        });
+        self.used += bytes;
+        self.stats.insertions += 1;
+        if let Some(s) = session {
+            self.sessions.insert(s, hash);
+        }
+        while self.used > self.budget {
+            let Some((&victim, _)) = self.store.iter()
+                .min_by_key(|(_, e)| e.last_used) else { break };
+            let gone = self.store.remove(&victim).expect("victim exists");
+            self.used -= gone.bytes;
+            self.stats.evictions += 1;
+            self.sessions.retain(|_, h| *h != victim);
+        }
+    }
+
+    /// Persist every live entry (and the session pointer map) to `path`
+    /// atomically (tmp + rename), oldest-first so a reload preserves the
+    /// LRU order.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut entries: Vec<(&u64, &Entry)> = self.store.iter().collect();
+        entries.sort_by_key(|(_, e)| e.last_used);
+        let tmp = path.with_extension("tmp");
+        {
+            let mut w = BufWriter::new(File::create(&tmp)
+                .with_context(|| format!("create {}", tmp.display()))?);
+            w.write_all(MAGIC)?;
+            w.write_all(&VERSION.to_le_bytes())?;
+            w.write_all(&(entries.len() as u32).to_le_bytes())?;
+            for (_, e) in &entries {
+                w.write_all(&(e.tokens.len() as u32).to_le_bytes())?;
+                for &t in &e.tokens {
+                    w.write_all(&t.to_le_bytes())?;
+                }
+                let raw = e.state.to_bytes();
+                w.write_all(&(raw.len() as u32).to_le_bytes())?;
+                w.write_all(&raw)?;
+            }
+            w.write_all(&(self.sessions.len() as u32).to_le_bytes())?;
+            for (&s, &h) in &self.sessions {
+                w.write_all(&s.to_le_bytes())?;
+                w.write_all(&h.to_le_bytes())?;
+            }
+            w.flush()?;
+        }
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    /// Load a cache saved by [`SessionCache::save`], re-checking every
+    /// record against corruption; entries beyond `budget_bytes` evict
+    /// LRU exactly as live inserts would.
+    pub fn load(path: &Path, budget_bytes: usize) -> Result<SessionCache> {
+        let mut r = BufReader::new(File::open(path)
+            .with_context(|| format!("open {}", path.display()))?);
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{}: not a MRSC session cache", path.display());
+        }
+        let version = read_u32(&mut r)?;
+        if version != VERSION {
+            bail!("{}: unsupported session-cache version {version}",
+                  path.display());
+        }
+        let mut cache = SessionCache::new(budget_bytes);
+        let n = read_u32(&mut r)? as usize;
+        if n > 1 << 20 {
+            bail!("corrupt session cache: {n} entries");
+        }
+        for _ in 0..n {
+            let n_tok = read_u32(&mut r)? as usize;
+            if n_tok == 0 || n_tok > 1 << 24 {
+                bail!("corrupt session cache: token count {n_tok}");
+            }
+            let mut raw = vec![0u8; n_tok * 4];
+            r.read_exact(&mut raw)?;
+            let tokens: Vec<i32> = raw.chunks_exact(4)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            let len = read_u32(&mut r)? as usize;
+            if len > 1 << 30 {
+                bail!("corrupt session cache: state length {len}");
+            }
+            let mut raw = vec![0u8; len];
+            r.read_exact(&mut raw)?;
+            let state = SessionState::from_bytes(&raw)
+                .with_context(|| format!("{}: bad session state",
+                                         path.display()))?;
+            cache.insert(None, &tokens, state);
+        }
+        let n_sessions = read_u32(&mut r)? as usize;
+        if n_sessions > 1 << 20 {
+            bail!("corrupt session cache: {n_sessions} sessions");
+        }
+        for _ in 0..n_sessions {
+            let s = read_u64(&mut r)?;
+            let h = read_u64(&mut r)?;
+            if cache.store.contains_key(&h) {
+                cache.sessions.insert(s, h);
+            }
+        }
+        // loading is not serving activity; counters start clean
+        cache.stats = CacheStats::default();
+        Ok(cache)
+    }
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(fp: u64, n: usize) -> SessionState {
+        SessionState { fingerprint: fp, bytes: vec![7u8; n] }
+    }
+
+    #[test]
+    fn lookup_returns_longest_verified_prefix() {
+        let mut c = SessionCache::new(1 << 20);
+        c.insert(None, &[1, 2], snap(42, 8));
+        c.insert(None, &[1, 2, 3, 4], snap(42, 8));
+        // longest prefix wins ...
+        let (k, s) = c.lookup(None, &[1, 2, 3, 4, 5, 6], 42).unwrap();
+        assert_eq!(k, 4);
+        assert_eq!(s.bytes.len(), 8);
+        // ... capped at prompt.len()-1: the lane still needs a token to
+        // feed for its sampling logits
+        let (k, _) = c.lookup(None, &[1, 2, 3, 4, 5], 42).unwrap();
+        assert_eq!(k, 4);
+        let (k, _) = c.lookup(None, &[1, 2, 3, 4], 42).unwrap();
+        assert_eq!(k, 2, "full-prompt entry must not be returned");
+        // wrong fingerprint and diverging tokens both miss cleanly
+        assert!(c.lookup(None, &[1, 2, 3, 4, 5], 99).is_none());
+        assert!(c.lookup(None, &[9, 9, 9], 42).is_none());
+        let st = c.stats();
+        assert_eq!(st.hits, 3);
+        assert_eq!(st.misses, 2);
+    }
+
+    #[test]
+    fn session_pointer_fast_path_and_dedup() {
+        let mut c = SessionCache::new(1 << 20);
+        // two sessions share one prompt prefix: stored once
+        c.insert(Some(1), &[5, 6, 7], snap(1, 16));
+        c.insert(Some(2), &[5, 6, 7], snap(1, 16));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.stats().insertions, 1);
+        let (k, a) = c.lookup(Some(1), &[5, 6, 7, 8], 1).unwrap();
+        let (_, b) = c.lookup(Some(2), &[5, 6, 7, 9], 1).unwrap();
+        assert_eq!(k, 3);
+        // the state payload is shared, not copied
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn lru_eviction_respects_byte_budget() {
+        // each entry charges ~ 64 + 3*4 + 100 bytes; budget fits two
+        let mut c = SessionCache::new(2 * (ENTRY_OVERHEAD + 12 + 100));
+        c.insert(Some(1), &[1, 1, 1], snap(0, 100));
+        c.insert(Some(2), &[2, 2, 2], snap(0, 100));
+        assert_eq!(c.len(), 2);
+        // touch entry 1 so entry 2 is the LRU victim
+        assert!(c.lookup(Some(1), &[1, 1, 1, 0], 0).is_some());
+        c.insert(Some(3), &[3, 3, 3], snap(0, 100));
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.stats().evictions, 1);
+        assert!(c.lookup(Some(2), &[2, 2, 2, 0], 0).is_none(),
+                "LRU entry should have been evicted");
+        assert!(c.lookup(Some(1), &[1, 1, 1, 0], 0).is_some());
+        assert!(c.lookup(Some(3), &[3, 3, 3, 0], 0).is_some());
+        assert!(c.used_bytes() <= c.budget_bytes());
+        // an entry bigger than the whole budget is refused outright
+        c.insert(None, &[4, 4, 4], snap(0, 10_000));
+        assert!(c.lookup(None, &[4, 4, 4, 0], 0).is_none());
+    }
+
+    #[test]
+    fn disk_roundtrip_preserves_entries_and_sessions() {
+        let dir = std::env::temp_dir().join("minrnn_session_cache_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sessions.mrsc");
+        let mut c = SessionCache::new(1 << 20);
+        c.insert(Some(7), &[1, 2, 3], snap(42, 32));
+        c.insert(None, &[9, 8], snap(42, 32));
+        c.save(&path).unwrap();
+        let mut back = SessionCache::load(&path, 1 << 20).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.stats(), CacheStats::default());
+        let (k, s) = back.lookup(Some(7), &[1, 2, 3, 4], 42).unwrap();
+        assert_eq!(k, 3);
+        assert_eq!(s.bytes, vec![7u8; 32]);
+        assert!(back.lookup(None, &[9, 8, 0], 42).is_some());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn load_rejects_corrupt_files() {
+        let dir = std::env::temp_dir().join("minrnn_session_cache_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let bad = dir.join("bad.mrsc");
+        std::fs::write(&bad, b"NOPE....").unwrap();
+        assert!(SessionCache::load(&bad, 1 << 20).is_err());
+        // truncation mid-entry must error, not panic or mis-parse
+        let good = dir.join("trunc.mrsc");
+        let mut c = SessionCache::new(1 << 20);
+        c.insert(None, &[1, 2, 3], snap(1, 64));
+        c.save(&good).unwrap();
+        let bytes = std::fs::read(&good).unwrap();
+        std::fs::write(&good, &bytes[..bytes.len() - 9]).unwrap();
+        assert!(SessionCache::load(&good, 1 << 20).is_err());
+        std::fs::remove_file(&bad).unwrap();
+        std::fs::remove_file(&good).unwrap();
+    }
+}

@@ -14,7 +14,7 @@
 //! scan VJP + AdamW in Rust).  `coordinator::trainer::run_loop` drives
 //! either through this trait, making training artifact-optional too.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::tensor::{Batch, Tensor};
 
@@ -70,6 +70,38 @@ pub trait Backend {
         false
     }
 
+    /// Fingerprint of the decode-state layout a [`SessionState`] exported
+    /// from this backend carries (architecture kind, per-layer hidden
+    /// sizes, conv widths).  `Some` promises that
+    /// [`Backend::export_state`] / [`Backend::import_state`] work; `None`
+    /// (the default, and the PJRT path — its state lives in device
+    /// literals) means callers such as `coordinator::session_cache` must
+    /// fall back to prefilling from scratch.
+    fn state_fingerprint(&self) -> Option<u64> {
+        None
+    }
+
+    /// Serialize one decode lane of `state` into an opaque, host-portable
+    /// [`SessionState`] (the constant-size-state payoff of the paper's
+    /// recurrence: a few KB per layer, O(1) in context length).  Default:
+    /// unsupported.
+    fn export_state(&self, _state: &Self::State, _lane: usize)
+                    -> Result<SessionState> {
+        bail!("backend '{}' does not support per-lane state export",
+              self.name())
+    }
+
+    /// Overwrite one decode lane of `state` from a [`SessionState`]
+    /// previously produced by [`Backend::export_state`] on an
+    /// identically-shaped model.  Must fail cleanly (never panic on
+    /// shapes) when the snapshot's fingerprint does not match
+    /// [`Backend::state_fingerprint`].  Default: unsupported.
+    fn import_state(&self, _state: &mut Self::State, _lane: usize,
+                    _snap: &SessionState) -> Result<()> {
+        bail!("backend '{}' does not support per-lane state import",
+              self.name())
+    }
+
     /// Pick a batch size for `queue_len` waiting requests, or `None` when
     /// the queue is empty.
     fn plan_batch(&self, queue_len: usize) -> Option<usize> {
@@ -96,6 +128,55 @@ pub fn plan_batch(queue_len: usize, available: &[usize]) -> Option<usize> {
     sizes.sort_unstable();
     sizes.iter().rev().find(|&&b| b <= queue_len).copied()
         .or_else(|| sizes.first().copied())
+}
+
+// ---------------------------------------------------------------------------
+// per-lane session state
+// ---------------------------------------------------------------------------
+
+/// One decode lane's state, exported for reuse: opaque backend-defined
+/// bytes plus the architecture fingerprint of the model that produced
+/// them.  Because minGRU/minLSTM decode state is constant-size (no KV
+/// cache), this is a few KB per layer regardless of how much context the
+/// lane has consumed — small enough to cache per session, clone per
+/// request, and persist to disk (`coordinator::session_cache`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SessionState {
+    /// Decode-state layout fingerprint ([`Backend::state_fingerprint`]);
+    /// `import_state` refuses a snapshot whose fingerprint differs from
+    /// the importing model's.
+    pub fingerprint: u64,
+    /// Backend-defined serialization of one decode lane.
+    pub bytes: Vec<u8>,
+}
+
+impl SessionState {
+    /// Serialize to a self-contained little-endian byte string:
+    /// `fingerprint u64 | byte_len u32 | bytes`.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(12 + self.bytes.len());
+        out.extend_from_slice(&self.fingerprint.to_le_bytes());
+        out.extend_from_slice(&(self.bytes.len() as u32).to_le_bytes());
+        out.extend_from_slice(&self.bytes);
+        out
+    }
+
+    /// Inverse of [`SessionState::to_bytes`]; rejects truncated or
+    /// trailing-garbage input instead of mis-slicing it.
+    pub fn from_bytes(raw: &[u8]) -> Result<SessionState> {
+        if raw.len() < 12 {
+            bail!("session state truncated: {} bytes < 12-byte header",
+                  raw.len());
+        }
+        let fingerprint = u64::from_le_bytes(raw[..8].try_into().unwrap());
+        let len =
+            u32::from_le_bytes(raw[8..12].try_into().unwrap()) as usize;
+        if raw.len() != 12 + len {
+            bail!("session state corrupt: header says {len} payload \
+                   bytes, got {}", raw.len() - 12);
+        }
+        Ok(SessionState { fingerprint, bytes: raw[12..].to_vec() })
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -267,5 +348,31 @@ mod tests {
     fn artifacts_help_names_the_remedy() {
         assert!(ARTIFACTS_HELP.contains("MINRNN_ARTIFACTS"));
         assert!(ARTIFACTS_HELP.contains("make artifacts"));
+    }
+
+    #[test]
+    fn session_state_bytes_roundtrip() {
+        let snap = SessionState {
+            fingerprint: 0xDEAD_BEEF_1234_5678,
+            bytes: vec![0, 1, 2, 255, 7],
+        };
+        let raw = snap.to_bytes();
+        assert_eq!(SessionState::from_bytes(&raw).unwrap(), snap);
+        // empty payloads are legal (a zero-layer state)
+        let empty = SessionState { fingerprint: 3, bytes: Vec::new() };
+        let raw = empty.to_bytes();
+        assert_eq!(SessionState::from_bytes(&raw).unwrap(), empty);
+    }
+
+    #[test]
+    fn session_state_rejects_corrupt_bytes() {
+        let snap = SessionState { fingerprint: 9, bytes: vec![1, 2, 3] };
+        let raw = snap.to_bytes();
+        // truncated header, truncated payload, trailing garbage
+        assert!(SessionState::from_bytes(&raw[..4]).is_err());
+        assert!(SessionState::from_bytes(&raw[..raw.len() - 1]).is_err());
+        let mut long = raw.clone();
+        long.push(0);
+        assert!(SessionState::from_bytes(&long).is_err());
     }
 }

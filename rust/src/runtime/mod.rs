@@ -9,8 +9,8 @@ pub mod manifest;
 pub mod model;
 
 pub use backend::{artifacts_available, artifacts_root, require_artifacts,
-                  Backend, PjrtBackend, PjrtTrain, TrainBackend,
-                  ARTIFACTS_HELP};
+                  Backend, PjrtBackend, PjrtTrain, SessionState,
+                  TrainBackend, ARTIFACTS_HELP};
 pub use client::Runtime;
 pub use manifest::{Manifest, Variant};
 pub use model::{EvalMetrics, Model, StepMetrics, TrainState};

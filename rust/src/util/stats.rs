@@ -65,10 +65,20 @@ impl Welford {
 }
 
 /// Percentile via linear interpolation on a sorted copy.  q in [0, 100].
+///
+/// NaN samples are ignored and an empty (or all-NaN) input returns
+/// `0.0`, matching the documented `ServeStats` contract that an idle
+/// serving run reports zero latencies.  An earlier version asserted on
+/// empty input and sorted with `partial_cmp(..).unwrap()`, so a single
+/// NaN — e.g. a `0.0 / 0.0` rate from a zero-length run — panicked the
+/// whole report.
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
-    assert!(!xs.is_empty());
-    let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut v: Vec<f64> = xs.iter().copied()
+        .filter(|x| !x.is_nan()).collect();
+    if v.is_empty() {
+        return 0.0;
+    }
+    v.sort_by(f64::total_cmp);
     let rank = q / 100.0 * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -177,6 +187,19 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 100.0), 100.0);
         assert!((percentile(&xs, 99.0) - 99.01).abs() < 0.02);
+    }
+
+    #[test]
+    fn percentile_survives_nan_and_empty_input() {
+        // regression: sort_by(partial_cmp().unwrap()) panicked on NaN and
+        // an assert rejected empty slices; both now degrade gracefully
+        assert_eq!(percentile(&[f64::NAN, 1.0, 3.0], 50.0), 2.0);
+        assert_eq!(percentile(&[1.0, f64::NAN, f64::NAN, 5.0], 100.0), 5.0);
+        assert_eq!(percentile(&[], 95.0), 0.0);
+        assert_eq!(percentile(&[f64::NAN, f64::NAN], 50.0), 0.0);
+        // negative zero and negative values still order correctly under
+        // total_cmp
+        assert_eq!(percentile(&[-1.0, -0.0, 2.0], 0.0), -1.0);
     }
 
     #[test]

@@ -265,6 +265,7 @@ fn serving_dynamic_batching_end_to_end() {
         prompt: (0..3 + rng.usize_below(4))
             .map(|_| rng.below(64) as i32).collect(),
         n_tokens: 5,
+        session: None,
     }).collect();
     let backend = PjrtBackend::new(&model, &state.params);
     let stats = serve(&backend, requests, 1.0, 0).unwrap();

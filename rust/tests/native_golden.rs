@@ -335,6 +335,7 @@ fn checkpoint_generate_serve_without_artifacts() {
         id: i,
         prompt: vec![1 + i as i32, 2, 3],
         n_tokens: 6,
+        session: None,
     }).collect();
     let stats = server::serve(&backend, requests, 0.9, 1).unwrap();
     assert_eq!(stats.responses.len(), 5);

@@ -139,6 +139,7 @@ fn prop_batched_lockstep_decode_matches_sequential() {
                 prompt: (0..1 + rng.usize_below(5))
                     .map(|_| rng.below(24) as i32).collect(),
                 n_tokens: 3 + rng.usize_below(5),
+                session: None,
             }
         }).collect();
 

@@ -12,7 +12,11 @@
 //!   and duplicates none, including when submissions race in from another
 //!   thread;
 //! * **run-to-completion fallback** — a backend without lane reset (the
-//!   PJRT shape) still serves everything, across multiple batches.
+//!   PJRT shape) still serves everything, across multiple batches;
+//! * **mid-decode deadline expiry** — a request whose deadline elapses
+//!   while a long decode step is in flight is expired at the *next*
+//!   admission pass: never served late, never double-counted in drain
+//!   accounting.
 //!
 //! Determinism comes from the scheduler's pump design: `step()` performs
 //! one admission pass plus one lockstep decode step and never blocks, so
@@ -51,6 +55,7 @@ fn random_requests(rng: &mut Rng, n: usize) -> Vec<Request> {
         prompt: (0..1 + rng.usize_below(5))
             .map(|_| rng.below(24) as i32).collect(),
         n_tokens: 3 + rng.usize_below(5),
+        session: None,
     }).collect()
 }
 
@@ -141,8 +146,10 @@ fn prop_async_greedy_matches_sequential_across_queue_depths() {
 #[test]
 fn late_submission_completes_without_restarting_the_batch() {
     let backend = serving_backend(0xBEEF);
-    let a = Request { id: 0, prompt: vec![1, 2, 3], n_tokens: 12 };
-    let b = Request { id: 1, prompt: vec![4, 5], n_tokens: 4 };
+    let a = Request { id: 0, prompt: vec![1, 2, 3], n_tokens: 12,
+                      session: None };
+    let b = Request { id: 1, prompt: vec![4, 5], n_tokens: 4,
+                      session: None };
     let want = sequential_oracle(&backend, &[a.clone(), b.clone()]);
 
     let (mut sched, handle) = Scheduler::new(&backend, SchedulerOpts {
@@ -203,6 +210,7 @@ fn drain_on_shutdown_loses_and_duplicates_nothing() {
                 id: i,
                 prompt: vec![1 + (i % 7) as i32],
                 n_tokens: 2 + (i % 4) as usize,
+                session: None,
             }).unwrap();
         }
         handle.close();
@@ -293,4 +301,53 @@ fn fallback_without_lane_reset_still_serves_everything() {
         assert_eq!(resp.tokens, want[resp.id as usize],
                    "fallback: request {} diverged", resp.id);
     }
+}
+
+// ---------------------------------------------------------------------------
+// deadline expiry while a decode step is in flight
+// ---------------------------------------------------------------------------
+
+#[test]
+fn deadline_elapsing_mid_decode_expires_at_next_admission_pass() {
+    let backend = serving_backend(0xDEAD);
+    let (mut sched, handle) = Scheduler::new(&backend, SchedulerOpts {
+        serve: ServeOpts { temperature: 0.0, seed: 0, max_batch: 1 },
+        queue_depth: 4,
+        backpressure: Backpressure::Block,
+        default_deadline: None,
+        lanes: Some(1),
+    }).unwrap();
+
+    // request 0 occupies the only lane for a long decode
+    handle.submit(Request { id: 0, prompt: vec![1, 2], n_tokens: 16,
+                            session: None }).unwrap();
+    for _ in 0..4 {
+        assert!(sched.step().unwrap());
+    }
+    assert_eq!(sched.active_lanes(), 1);
+    assert_eq!(sched.completed(), 0);
+
+    // request 1's deadline has long elapsed by the time any admission
+    // pass can look at it: deadlines are only evaluated when a submission
+    // is popped toward a free lane, so it waits out request 0's decode in
+    // the queue and must be expired at the next admission pass — never
+    // served late, never counted twice
+    handle.submit_with_deadline(
+        Request { id: 1, prompt: vec![3], n_tokens: 2, session: None },
+        Some(std::time::Duration::ZERO)).unwrap();
+    handle.close();
+    let stats = sched.run().unwrap();
+
+    assert_eq!(stats.responses.len(), 1);
+    assert_eq!(stats.responses[0].id, 0);
+    assert_eq!(stats.responses[0].tokens.len(), 16,
+               "the in-flight request must still be served in full");
+    assert_eq!(stats.expired, vec![1]);
+    // expired ids never overlap response ids, and the drain-accounting
+    // invariant (every submission served or expired, exactly once) holds
+    assert!(stats.responses.iter()
+            .all(|r| !stats.expired.contains(&r.id)));
+    assert_eq!(stats.submitted,
+               stats.responses.len() + stats.expired.len());
+    assert_eq!(stats.tokens_generated, 16);
 }

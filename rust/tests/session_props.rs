@@ -1,0 +1,352 @@
+//! Properties of per-lane session state export/import
+//! (`runtime::Backend::{export_state, import_state}` plus the serving
+//! path's `coordinator::session_cache`):
+//!
+//! * **round-trip bit-identity** — export → wire bytes → import → decode
+//!   matches uninterrupted decode token-for-token, across thread counts
+//!   {1, 2, 7} (the pool is process-global shared state: emulated via
+//!   `set_active` like the autograd and dropout tests);
+//! * **constant-size state** — the paper's O(1)-in-context payoff: a
+//!   snapshot taken after 2 prompt tokens and one taken after 5 prompt
+//!   tokens serialize to the same number of bytes;
+//! * **lane mobility** — a snapshot exported from one lane of a batched
+//!   state resumes bit-identically in a *different* lane of a fresh
+//!   state, undisturbed by traffic in the neighbouring lane;
+//! * **clean fingerprint rejection** — importing a snapshot exported
+//!   from a differently-shaped model (or carrying a tampered
+//!   fingerprint) is an error that names the fingerprint, never a shape
+//!   panic, and leaves the target state usable;
+//! * **warm == cold serving** — replaying identical greedy requests
+//!   through `serve_with_cache` hits the session cache (nonzero hit
+//!   rate, prefill tokens saved) and returns bit-identical responses;
+//! * **inert fallback** — a backend without state export (the PJRT
+//!   shape) serves the same tokens with zero cache traffic.
+
+use std::cell::RefCell;
+
+use minrnn::backend::{NativeBackend, NativeInit, NativeModel, NativeState};
+use minrnn::coordinator::infer;
+use minrnn::coordinator::server::{serve_opts, serve_with_cache, Request,
+                                  ServeOpts, ServeStats};
+use minrnn::coordinator::session_cache::SessionCache;
+use minrnn::runtime::{Backend, SessionState};
+use minrnn::tensor::Tensor;
+use minrnn::util::rng::Rng;
+use minrnn::util::threads;
+
+const VOCAB: usize = 24;
+
+fn session_backend(seed: u64) -> NativeBackend {
+    NativeBackend::new(NativeModel::init_random(&NativeInit {
+        kind: "mingru".to_string(),
+        n_layers: 2,
+        d_model: 16,
+        expansion: 2,
+        vocab_in: Some(VOCAB),
+        input_dim: None,
+        vocab_out: VOCAB,
+        conv: true, // conv ring buffers ride along in the snapshot
+        mlp: true,
+        mlp_mult: 2,
+        forget_bias: 0.5,
+    }, seed).unwrap())
+}
+
+fn session_requests(rng: &mut Rng, n: usize) -> Vec<Request> {
+    (0..n).map(|i| Request {
+        id: i as u64,
+        prompt: (0..4 + rng.usize_below(4))
+            .map(|_| rng.below(VOCAB as u64) as i32).collect(),
+        n_tokens: 6,
+        session: Some(i as u64),
+    }).collect()
+}
+
+/// Greedy batch-1 continuation from `(state, logits)`.
+fn greedy_continue(backend: &NativeBackend, mut state: NativeState,
+                   mut logits: Tensor, n: usize) -> Vec<i32> {
+    let mut rng = Rng::new(0);
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let row = logits.data.as_f32().unwrap();
+        let next = infer::sample_logits(row, 0.0, &mut rng) as i32;
+        out.push(next);
+        let x = Tensor::i32(vec![1], vec![next]);
+        let (l, s) = backend.decode_step(&x, state).unwrap();
+        logits = l;
+        state = s;
+    }
+    out
+}
+
+fn tokens_by_id(stats: &ServeStats) -> Vec<(u64, Vec<i32>)> {
+    let mut v: Vec<(u64, Vec<i32>)> = stats.responses.iter()
+        .map(|r| (r.id, r.tokens.clone())).collect();
+    v.sort_by_key(|(id, _)| *id);
+    v
+}
+
+// ---------------------------------------------------------------------------
+// round-trip bit-identity across thread counts, constant-size state
+// ---------------------------------------------------------------------------
+
+#[test]
+fn export_import_roundtrip_is_bit_identical_across_thread_counts() {
+    let backend = session_backend(11);
+    let prompt = [3i32, 7, 1, 19, 4, 2];
+    let pool = threads::global();
+    let before = pool.active();
+    let mut by_threads: Vec<Vec<i32>> = Vec::new();
+    for n in [1usize, 2, 7] {
+        pool.set_active(n);
+        // chain A: uninterrupted decode, with a snapshot taken just
+        // before the final prompt token (the scheduler restores at most
+        // prompt.len() - 1 positions so the admitted lane still produces
+        // last-token logits to sample from)
+        let mut state = backend.decode_state(1).unwrap();
+        let mut early = None;
+        let mut snap = None;
+        let mut logits = Tensor::zeros_f32(vec![1, 1]);
+        for (i, &tok) in prompt.iter().enumerate() {
+            if i == 2 {
+                early = Some(backend.export_state(&state, 0).unwrap());
+            }
+            if i + 1 == prompt.len() {
+                snap = Some(backend.export_state(&state, 0).unwrap());
+            }
+            let x = Tensor::i32(vec![1], vec![tok]);
+            let (l, s) = backend.decode_step(&x, state).unwrap();
+            logits = l;
+            state = s;
+        }
+        let snap = snap.unwrap();
+        // the constant-size-state payoff: snapshots after 2 and after 5
+        // context tokens serialize to the same number of bytes
+        assert_eq!(early.unwrap().bytes.len(), snap.bytes.len(),
+                   "decode-state snapshot must be O(1) in context");
+        let a = greedy_continue(&backend, state, logits, 12);
+
+        // chain B: snapshot -> wire format -> fresh state, then replay
+        // only the final prompt token
+        let wire = snap.to_bytes();
+        assert!(SessionState::from_bytes(&wire[..wire.len() - 3]).is_err(),
+                "truncated wire bytes must be rejected");
+        let wired = SessionState::from_bytes(&wire).unwrap();
+        assert_eq!(wired.fingerprint, snap.fingerprint);
+        assert_eq!(wired.bytes, snap.bytes);
+        let mut fresh = backend.decode_state(1).unwrap();
+        backend.import_state(&mut fresh, 0, &wired).unwrap();
+        let x = Tensor::i32(vec![1], vec![prompt[prompt.len() - 1]]);
+        let (logits, fresh) = backend.decode_step(&x, fresh).unwrap();
+        let b = greedy_continue(&backend, fresh, logits, 12);
+        assert_eq!(a, b, "resumed decode diverged at {n} threads");
+        by_threads.push(a);
+    }
+    pool.set_active(before);
+    for other in &by_threads[1..] {
+        assert_eq!(&by_threads[0], other,
+                   "decode differs across thread counts");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// lane mobility: export lane 0, resume in lane 1 of another state
+// ---------------------------------------------------------------------------
+
+#[test]
+fn snapshots_resume_in_a_different_lane_of_a_batched_state() {
+    let backend = session_backend(29);
+    let prompt = [5i32, 12, 8, 3, 17];
+
+    // batch-1 reference continuation
+    let mut state = backend.decode_state(1).unwrap();
+    let mut logits = Tensor::zeros_f32(vec![1, 1]);
+    for &tok in &prompt {
+        let x = Tensor::i32(vec![1], vec![tok]);
+        let (l, s) = backend.decode_step(&x, state).unwrap();
+        logits = l;
+        state = s;
+    }
+    let want = greedy_continue(&backend, state, logits, 10);
+
+    // lane 0 of a batch-2 state follows the prompt while lane 1 sees
+    // unrelated traffic; export lane 0 just before the final token
+    let mut batched = backend.decode_state(2).unwrap();
+    let mut snap = None;
+    for (i, &tok) in prompt.iter().enumerate() {
+        if i + 1 == prompt.len() {
+            snap = Some(backend.export_state(&batched, 0).unwrap());
+        }
+        let noise = ((i * 7) % VOCAB) as i32;
+        let x = Tensor::i32(vec![2], vec![tok, noise]);
+        let (_, s) = backend.decode_step(&x, batched).unwrap();
+        batched = s;
+    }
+
+    // resume in lane 1 of a fresh batch-2 state; lane 0 is now the
+    // noisy neighbour and must not disturb the restored lane
+    let mut resumed = backend.decode_state(2).unwrap();
+    backend.import_state(&mut resumed, 1, &snap.unwrap()).unwrap();
+    let x = Tensor::i32(vec![2], vec![9, prompt[prompt.len() - 1]]);
+    let (mut logits, mut resumed) = backend.decode_step(&x, resumed)
+        .unwrap();
+    let mut rng = Rng::new(0);
+    let mut got = Vec::with_capacity(10);
+    for step in 0..10 {
+        let buf = logits.data.as_f32().unwrap();
+        let next = infer::sample_logits(&buf[VOCAB..2 * VOCAB], 0.0,
+                                        &mut rng) as i32;
+        got.push(next);
+        let noise = ((step * 5) % VOCAB) as i32;
+        let x = Tensor::i32(vec![2], vec![noise, next]);
+        let (l, s) = backend.decode_step(&x, resumed).unwrap();
+        logits = l;
+        resumed = s;
+    }
+    assert_eq!(got, want,
+               "lane-1 resume diverged from the batch-1 reference");
+}
+
+// ---------------------------------------------------------------------------
+// fingerprint mismatch: clean error, not a shape panic
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mismatched_fingerprint_is_a_clean_error_not_a_shape_panic() {
+    let backend = session_backend(3);
+    // a differently-shaped model: more layers, wider, no conv/mlp — its
+    // per-lane state would slice the target's buffers out of bounds if
+    // import ever got as far as copying
+    let other = NativeBackend::new(NativeModel::init_random(&NativeInit {
+        kind: "mingru".to_string(),
+        n_layers: 3,
+        d_model: 32,
+        expansion: 2,
+        vocab_in: Some(VOCAB),
+        input_dim: None,
+        vocab_out: VOCAB,
+        conv: false,
+        mlp: false,
+        mlp_mult: 2,
+        forget_bias: 0.5,
+    }, 3).unwrap());
+    assert_ne!(backend.state_fingerprint(), other.state_fingerprint(),
+               "differently shaped models must fingerprint differently");
+
+    let x = Tensor::i32(vec![1], vec![4]);
+    let (_, st) = other.decode_step(&x, other.decode_state(1).unwrap())
+        .unwrap();
+    let foreign = other.export_state(&st, 0).unwrap();
+
+    let mut state = backend.decode_state(1).unwrap();
+    let err = backend.import_state(&mut state, 0, &foreign).unwrap_err();
+    assert!(err.to_string().contains("fingerprint"),
+            "unexpected error: {err}");
+
+    // a tampered fingerprint on otherwise-valid bytes is refused too
+    let own = backend.export_state(&state, 0).unwrap();
+    let tampered = SessionState {
+        fingerprint: own.fingerprint ^ 1,
+        bytes: own.bytes.clone(),
+    };
+    assert!(backend.import_state(&mut state, 0, &tampered).is_err());
+
+    // both refusals happened before any write: the state is still usable
+    let (logits, _) = backend.decode_step(&x, state).unwrap();
+    assert_eq!(logits.dims, vec![1, VOCAB]);
+}
+
+// ---------------------------------------------------------------------------
+// warm serving through the cache is bit-identical to the cold run
+// ---------------------------------------------------------------------------
+
+#[test]
+fn warm_session_serving_is_bit_identical_to_cold() {
+    let backend = session_backend(0x5E55);
+    let requests = session_requests(&mut Rng::new(9), 6);
+    let opts = ServeOpts { temperature: 0.0, seed: 0, max_batch: 3 };
+    let cache = RefCell::new(SessionCache::new(4 << 20));
+
+    let cold = serve_with_cache(&backend, requests.clone(), &opts,
+                                &cache).unwrap();
+    assert_eq!(cold.session_hits, 0);
+    assert!(cold.session_misses > 0);
+    assert!(!cache.borrow().is_empty(),
+            "the cold run must populate the cache");
+
+    let warm = serve_with_cache(&backend, requests.clone(), &opts,
+                                &cache).unwrap();
+    assert_eq!(warm.session_hits, requests.len(),
+               "every replayed request must hit its cached prefix");
+    assert!(warm.prefill_tokens_saved > 0,
+            "cache hits must skip prompt decode steps");
+    assert_eq!(tokens_by_id(&cold), tokens_by_id(&warm),
+               "cache-hit decode must be bit-identical to fresh prefill");
+}
+
+// ---------------------------------------------------------------------------
+// a backend without state export serves correctly with an inert cache
+// ---------------------------------------------------------------------------
+
+/// A native backend masquerading as one whose state cannot leave the
+/// device (the PJRT shape): decode and lane reset work, but the default
+/// `state_fingerprint` (None) and `export_state`/`import_state`
+/// (unsupported) stand, so the session cache must stay inert.
+struct NoExportBackend(NativeBackend);
+
+impl Backend for NoExportBackend {
+    type State = NativeState;
+
+    fn name(&self) -> &str {
+        "native-noexport"
+    }
+
+    fn step_batches(&self) -> Vec<usize> {
+        self.0.step_batches()
+    }
+
+    fn decode_state(&self, batch: usize) -> anyhow::Result<NativeState> {
+        self.0.decode_state(batch)
+    }
+
+    fn decode_step(&self, x_t: &Tensor, state: NativeState)
+                   -> anyhow::Result<(Tensor, NativeState)> {
+        self.0.decode_step(x_t, state)
+    }
+
+    fn prefill(&self, x: &Tensor) -> anyhow::Result<(Tensor, NativeState)> {
+        self.0.prefill(x)
+    }
+
+    fn reset_lane(&self, state: &mut NativeState, lane: usize) -> bool {
+        self.0.reset_lane(state, lane)
+    }
+
+    fn lane_reset_supported(&self) -> bool {
+        self.0.lane_reset_supported()
+    }
+}
+
+#[test]
+fn backend_without_state_export_serves_with_an_inert_cache() {
+    let native = session_backend(0xFA11);
+    let requests = session_requests(&mut Rng::new(31), 5);
+    let opts = ServeOpts { temperature: 0.0, seed: 0, max_batch: 2 };
+    let want = serve_opts(&native, requests.clone(), &opts).unwrap();
+
+    let backend = NoExportBackend(native);
+    assert!(backend.state_fingerprint().is_none());
+    assert!(backend
+        .export_state(&backend.decode_state(1).unwrap(), 0)
+        .is_err());
+
+    let cache = RefCell::new(SessionCache::new(1 << 20));
+    let stats = serve_with_cache(&backend, requests, &opts, &cache)
+        .unwrap();
+    assert_eq!(stats.session_hits, 0);
+    assert_eq!(stats.session_misses, 0);
+    assert_eq!(stats.prefill_tokens_saved, 0);
+    assert!(cache.borrow().is_empty(), "no state export, no entries");
+    assert_eq!(tokens_by_id(&want), tokens_by_id(&stats),
+               "an inert cache must not change served tokens");
+}

@@ -701,6 +701,7 @@ fn native_train_then_serve_cuts_loss_2x() {
         id: i,
         prompt: vec![(i % vocab as u64) as i32 + 1, 2],
         n_tokens: 4,
+        session: None,
     }).collect(), 0.5, 1).unwrap();
     assert_eq!(stats.responses.len(), 4);
     assert!(stats.responses.iter().all(|r| r.tokens.len() == 4));
