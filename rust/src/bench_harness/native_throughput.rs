@@ -264,6 +264,7 @@ pub fn run(cfg: &Config) -> Result<Json> {
         backpressure: Backpressure::Block,
         default_deadline: None,
         lanes: Some(cfg.max_batch),
+        ..Default::default()
     })?;
     let gap = std::time::Duration::from_secs_f64(
         1.0 / arrival_req_s.max(1e-9));
@@ -362,6 +363,59 @@ pub fn run(cfg: &Config) -> Result<Json> {
         ("evictions", json::num(warm.session_evictions as f64)),
     ]);
 
+    // -- recovery: durability and restart floors ------------------------------
+    //
+    // What robustness costs (and buys): a durable checkpoint commit
+    // (write + fsync file + rename + fsync dir, CRC trailer included), a
+    // durable LATEST-pointer commit (the same path on a tiny payload —
+    // nearly pure fsync), and the crash-restart floor: scan the ring for
+    // the newest *valid* checkpoint and load it into a serving-ready
+    // backend.  No faults are injected here — the disabled fault layer is
+    // the production configuration being measured.
+    let rec_dir = std::env::temp_dir().join("minrnn_bench_recovery");
+    std::fs::create_dir_all(&rec_dir)?;
+    let trainer = crate::backend::NativeTrainer::new(
+        NativeModel::init_random(&NativeInit {
+            kind: cfg.kind.clone(),
+            n_layers: cfg.n_layers,
+            d_model: cfg.d_model,
+            expansion: 1,
+            vocab_in: Some(cfg.vocab),
+            input_dim: None,
+            vocab_out: cfg.vocab,
+            conv: true,
+            mlp: true,
+            mlp_mult: 4,
+            forget_bias: 1.0,
+        }, 0x7C)?, "bench-recovery");
+    let ckpt = rec_dir.join("bench-recovery.step00000001.ckpt");
+    let rc = bench("ckpt_commit", &bc, || {
+        trainer.save(&ckpt).unwrap();
+    });
+    let ckpt_bytes = std::fs::metadata(&ckpt)?.len();
+    let latest = rec_dir.join("bench-recovery.LATEST");
+    let rp = bench("pointer_commit", &bc, || {
+        crate::util::io::commit_durable(
+            &latest, b"bench-recovery.step00000001.ckpt").unwrap();
+    });
+    let rl = bench("recover_load", &bc, || {
+        let found = crate::coordinator::trainer::recover_checkpoint(
+            &rec_dir, "bench-recovery").unwrap();
+        NativeBackend::from_checkpoint(&found).unwrap();
+    });
+    let _ = std::fs::remove_dir_all(&rec_dir);
+    log_info!("  recovery ckpt commit {:.2} ms ({} KiB), pointer commit \
+               {:.2} ms, recover+load {:.2} ms",
+              rc.mean_ms(), ckpt_bytes >> 10, rp.mean_ms(), rl.mean_ms());
+    let recovery = json::obj(vec![
+        ("ckpt_bytes", json::num(ckpt_bytes as f64)),
+        ("ckpt_commit_ms", json::num(rc.mean_ms())),
+        ("ckpt_commit_p95_ms", json::num(rc.p95_s * 1e3)),
+        ("pointer_commit_ms", json::num(rp.mean_ms())),
+        ("recover_load_ms", json::num(rl.mean_ms())),
+        ("recover_load_p95_ms", json::num(rl.p95_s * 1e3)),
+    ]);
+
     let report = json::obj(vec![
         ("schema", json::s("minrnn.native_throughput.v1")),
         ("quick", Json::Bool(cfg.quick)),
@@ -378,6 +432,7 @@ pub fn run(cfg: &Config) -> Result<Json> {
         ("serve", serve),
         ("serve_async", serve_async),
         ("session_cache", session_cache_json),
+        ("recovery", recovery),
         ("speedup_batched_threaded", json::num(speedup)),
     ]);
     if let Some(out) = &cfg.out {
@@ -438,6 +493,13 @@ mod tests {
         assert!(sc.req("prefill_tokens_saved").unwrap()
                 .as_f64().unwrap() > 0.0);
         assert!(sc.req("warm_tok_s").unwrap().as_f64().unwrap() > 0.0);
+        // the recovery section reports the durable-commit and
+        // crash-restart floors
+        let rec = report.req("recovery").unwrap();
+        assert!(rec.req("ckpt_bytes").unwrap().as_f64().unwrap() > 0.0);
+        assert!(rec.req("ckpt_commit_ms").unwrap().as_f64().unwrap() > 0.0);
+        assert!(rec.req("recover_load_ms").unwrap().as_f64().unwrap()
+                > 0.0);
         assert!(report.req("speedup_batched_threaded").unwrap()
                 .as_f64().unwrap() > 0.0);
     }

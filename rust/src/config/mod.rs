@@ -33,6 +33,12 @@ pub struct TrainConfig {
     pub eval_batches: usize,
     pub log_every: usize,
     pub checkpoint: Option<PathBuf>,
+    /// Commit a crash-recovery checkpoint to the retained ring every N
+    /// steps (0 = only best/final checkpoints, no ring).
+    pub checkpoint_every: usize,
+    /// How many periodic ring checkpoints to retain (best/final are kept
+    /// separately).
+    pub keep_checkpoints: usize,
     pub resume: Option<PathBuf>,
 }
 
@@ -52,6 +58,8 @@ impl Default for TrainConfig {
             eval_batches: 4,
             log_every: 10,
             checkpoint: None,
+            checkpoint_every: 0,
+            keep_checkpoints: 3,
             resume: None,
         }
     }
@@ -106,6 +114,18 @@ impl TrainConfig {
         }
         if let Some(v) = j.get("log_every").and_then(|v| v.as_usize()) {
             self.log_every = v;
+        }
+        if let Some(v) = j.get("checkpoint_every").and_then(|v| v.as_usize())
+        {
+            self.checkpoint_every = v;
+        }
+        if let Some(v) = j.get("keep_checkpoints")
+            .and_then(|v| v.as_usize())
+        {
+            if v == 0 {
+                anyhow::bail!("config keep_checkpoints must be >= 1");
+            }
+            self.keep_checkpoints = v;
         }
         if let Some(v) = j.get("variant").and_then(|v| v.as_str()) {
             self.variant = v.to_string();
@@ -166,6 +186,15 @@ impl TrainConfig {
         if let Some(v) = p.get("checkpoint") {
             self.checkpoint = Some(PathBuf::from(v));
         }
+        if let Some(v) = p.get("checkpoint-every") {
+            self.checkpoint_every = v.parse()?;
+        }
+        if let Some(v) = p.get("keep-checkpoints") {
+            self.keep_checkpoints = v.parse()?;
+            if self.keep_checkpoints == 0 {
+                anyhow::bail!("--keep-checkpoints must be >= 1");
+            }
+        }
         if let Some(v) = p.get("resume") {
             self.resume = Some(PathBuf::from(v));
         }
@@ -223,6 +252,31 @@ mod tests {
             .unwrap();
         cfg.apply_cli(&good).unwrap();
         assert_eq!(cfg.dropout, 0.5);
+    }
+
+    #[test]
+    fn checkpoint_retention_knobs() {
+        let mut cfg = TrainConfig::default();
+        assert_eq!(cfg.checkpoint_every, 0);
+        assert_eq!(cfg.keep_checkpoints, 3);
+        let j = json::parse(
+            r#"{"checkpoint_every": 25, "keep_checkpoints": 5}"#).unwrap();
+        cfg.apply_json(&j).unwrap();
+        assert_eq!(cfg.checkpoint_every, 25);
+        assert_eq!(cfg.keep_checkpoints, 5);
+        // retaining zero checkpoints would make the ring useless
+        let bad = json::parse(r#"{"keep_checkpoints": 0}"#).unwrap();
+        assert!(cfg.apply_json(&bad).is_err());
+        let cmd = crate::util::cli::Command::new("train", "t")
+            .opt("checkpoint-every", Some("0"), "n")
+            .opt("keep-checkpoints", Some("3"), "n");
+        let p = cmd.parse(&["--checkpoint-every".to_string(),
+                            "10".to_string(),
+                            "--keep-checkpoints".to_string(),
+                            "2".to_string()]).unwrap();
+        cfg.apply_cli(&p).unwrap();
+        assert_eq!(cfg.checkpoint_every, 10);
+        assert_eq!(cfg.keep_checkpoints, 2);
     }
 
     #[test]

@@ -1,13 +1,15 @@
 //! Coordinator: CLI entrypoints, training orchestration ([`trainer`]),
 //! the inference engine ([`infer`]), the serving stack ([`server`] for the
 //! synchronous facade, [`scheduler`] for async admission-controlled
-//! serving, [`session_cache`] for constant-state session warm-starts),
-//! and the experiment registry.
+//! serving, [`session_cache`] for constant-state session warm-starts,
+//! [`supervisor`] for restart-with-backoff serve supervision), and the
+//! experiment registry.
 
 pub mod infer;
 pub mod scheduler;
 pub mod server;
 pub mod session_cache;
+pub mod supervisor;
 pub mod trainer;
 
 use std::cell::RefCell;
@@ -22,8 +24,9 @@ use crate::config::TrainConfig;
 use crate::data::corpus::CharVocab;
 use crate::runtime::{Manifest, Model, PjrtBackend, Runtime};
 use crate::util::cli::{Command, Parsed};
+use crate::util::faults;
 use crate::util::rng::Rng;
-use crate::log_info;
+use crate::{log_info, log_warn};
 
 /// Experiment registry: id → description.
 pub const EXPERIMENTS: &[(&str, &str)] = &[
@@ -101,11 +104,24 @@ warm-start from cached states covering a verified prompt prefix and skip
 that prefix's prefill; `--sessions K` tags the synthetic workload with K
 round-robin conversation ids, `--session-dir P` persists the cache across
 runs, and the hit/miss/evict counters land in the serve report.
+
+Robustness: native training with `--checkpoint <dir> --checkpoint-every N`
+commits a crash-recovery checkpoint (fsync'd, CRC-trailered) to a ring of
+`--keep-checkpoints` files every N steps; `--resume <dir>` resumes from
+the newest checkpoint in the ring that still validates, skipping torn or
+corrupt files.  The async scheduler retries transiently-failing decode
+steps (`--retry-limit`, exponential backoff) and quarantines requests
+that keep failing so they fail alone; `serve --supervised` additionally
+restarts a crashed serving run up to `--max-restarts` times,
+warm-recovering sessions from the session cache.  `--faults <spec>` (or
+MINRNN_FAULTS) installs a deterministic fault-injection plan for chaos
+testing, e.g. `seed=7,io_write=@3,decode=0.01` — see src/util/faults.rs
+for the grammar.
 Run `minrnn <subcommand> --help` for options.";
 
 pub fn cli_main(args: Vec<String>) -> i32 {
     crate::util::logging::init();
-    match dispatch(args) {
+    match faults::init_from_env().and_then(|()| dispatch(args)) {
         Ok(()) => 0,
         Err(e) => {
             eprintln!("{e:#}");
@@ -224,7 +240,18 @@ fn train_command() -> Command {
              "residual-branch dropout rate (native backend; 0 = off)")
         .opt("eval-every", Some("50"), "steps between evals (0 = off)")
         .opt("checkpoint", None, "directory for checkpoints")
-        .opt("resume", None, "checkpoint file to resume from")
+        .opt("checkpoint-every", Some("0"),
+             "native: commit a crash-recovery checkpoint to the retained \
+              ring every N steps (0 = only best/final)")
+        .opt("keep-checkpoints", Some("3"),
+             "native: ring checkpoints retained (best/final kept \
+              separately)")
+        .opt("resume", None,
+             "checkpoint file to resume from (native: a directory resumes \
+              from its newest valid ring checkpoint)")
+        .opt("faults", None,
+             "deterministic fault-injection spec for chaos testing, e.g. \
+              seed=7,io_write=@3 (see src/util/faults.rs)")
         .opt("config", None, "JSON config file (CLI overrides it)")
         .flag("constant-lr", "disable warmup+cosine schedule")
         .opt("backend", None,
@@ -444,6 +471,7 @@ impl WorkloadSpec {
 
 fn cmd_train(args: &[String]) -> Result<()> {
     let p = train_command().parse(args)?;
+    apply_faults_opt(&p)?;
     let mut cfg = TrainConfig::default();
     cfg.apply_cli(&p)?;
     let variant = p.pos.first()
@@ -500,7 +528,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
 fn native_trainer(p: &Parsed, cfg: &TrainConfig, workload: &str,
                   spec: &WorkloadSpec) -> Result<NativeTrainer> {
     let mut nt = match &cfg.resume {
-        Some(path) => NativeTrainer::from_checkpoint(path, workload)?,
+        Some(path) => resume_native(path, workload)?,
         None => {
             let init = NativeInit {
                 kind: p.req("kind")?.to_string(),
@@ -529,6 +557,40 @@ fn native_trainer(p: &Parsed, cfg: &TrainConfig, workload: &str,
     Ok(nt)
 }
 
+/// Resolve `--resume` for the native trainer.  A directory picks the
+/// newest *valid* checkpoint for this workload via
+/// [`trainer::recover_checkpoint`] (skipping torn or corrupt files); a
+/// file that fails to load falls back to recovery in its parent
+/// directory — a crash mid-commit must not strand a run behind one bad
+/// file when the ring still holds a good one.
+fn resume_native(path: &Path, workload: &str) -> Result<NativeTrainer> {
+    let label = workload.replace('/', "_");
+    if path.is_dir() {
+        let ckpt = trainer::recover_checkpoint(path, &label)
+            .ok_or_else(|| anyhow!(
+                "no valid '{label}' checkpoint to resume in {}",
+                path.display()))?;
+        log_info!("resuming from recovered checkpoint {}", ckpt.display());
+        return NativeTrainer::from_checkpoint(&ckpt, workload);
+    }
+    match NativeTrainer::from_checkpoint(path, workload) {
+        Ok(nt) => Ok(nt),
+        Err(e) => {
+            let dir = path.parent()
+                .filter(|d| !d.as_os_str().is_empty())
+                .unwrap_or(Path::new("."));
+            match trainer::recover_checkpoint(dir, &label) {
+                Some(ckpt) if ckpt != *path => {
+                    log_warn!("--resume {}: {e:#}; falling back to {}",
+                              path.display(), ckpt.display());
+                    NativeTrainer::from_checkpoint(&ckpt, workload)
+                }
+                _ => Err(e),
+            }
+        }
+    }
+}
+
 /// Options shared by the backend-selectable inference subcommands.
 fn backend_opts(cmd: Command) -> Command {
     cmd.opt("backend", None,
@@ -544,6 +606,17 @@ fn backend_opts(cmd: Command) -> Command {
         .opt("threads", None,
              "native thread-pool size (default: MINRNN_THREADS, else all \
               cores)")
+}
+
+/// Install a `--faults` injection plan (same grammar as the
+/// `MINRNN_FAULTS` environment variable, which it overrides) before the
+/// command body runs.  No-op when the option is absent.
+fn apply_faults_opt(p: &Parsed) -> Result<()> {
+    if let Some(spec) = p.get("faults") {
+        faults::install(faults::parse(spec)
+            .map_err(|e| anyhow!("--faults: {e}"))?);
+    }
+    Ok(())
 }
 
 /// Apply `--threads N` to the native backend's global pool before any
@@ -693,6 +766,15 @@ fn report_serve(stats: &server::ServeStats) {
                  stats.session_hits + stats.session_misses,
                  stats.prefill_tokens_saved, stats.session_evictions);
     }
+    if stats.retries > 0 || !stats.failed.is_empty()
+        || stats.session_degraded > 0 || stats.restarts > 0 {
+        println!("recovery: {} retried decode attempt(s), {} failed \
+                  request(s), {} degraded session import(s), {} \
+                  supervisor restart(s)",
+                 stats.retries, stats.failed.len(),
+                 stats.session_degraded, stats.restarts);
+    }
+    println!("health: {}", stats.health);
 }
 
 /// Drive the async scheduler with an open-loop arrival process: a
@@ -729,6 +811,7 @@ fn serve_async<B: crate::runtime::Backend>(
             // open-loop serving: provision the full lane budget up front
             // so requests trickling in one by one still share a batch
             lanes: Some(opts.max_batch),
+            retry_limit: p.u64("retry-limit")? as u32,
         })?;
     if let Some(c) = cache {
         sched.set_session_cache(c);
@@ -763,6 +846,31 @@ fn serve_async<B: crate::runtime::Backend>(
     Ok(stats)
 }
 
+/// `serve --supervised`: run [`serve_async`] generations under
+/// [`supervisor::supervise`].  A generation that dies (panic or error
+/// anywhere the scheduler's own self-healing cannot reach) returns
+/// nothing, so the next generation resubmits the full request list; the
+/// session cache is shared across generations (and across processes via
+/// `--session-dir`), so requests the dead generation completed
+/// warm-start from their exported states instead of re-prefilling.
+fn serve_supervised<B: crate::runtime::Backend>(
+    backend: &B, requests: Vec<server::Request>, opts: &server::ServeOpts,
+    cache: Option<&RefCell<session_cache::SessionCache>>, p: &Parsed)
+    -> Result<server::ServeStats> {
+    let sup = supervisor::SupervisorOpts {
+        max_restarts: p.u64("max-restarts")? as u32,
+        seed: opts.seed,
+        ..Default::default()
+    };
+    supervisor::supervise(&sup, |generation| {
+        if generation > 0 {
+            log_info!("serving generation {generation}: resubmitting {} \
+                       request(s)", requests.len());
+        }
+        serve_async(backend, requests.clone(), opts, cache, p)
+    })
+}
+
 fn cmd_serve(args: &[String]) -> Result<()> {
     let cmd = backend_opts(artifacts_opt(
         Command::new("serve", "dynamic-batching serving demo")))
@@ -781,6 +889,18 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .opt("deadline-ms", Some("0"),
              "async: per-request queue-wait deadline in ms (0 = none); \
               requests still queued past it are dropped, not half-served")
+        .opt("retry-limit", Some("2"),
+             "async: decode retries per request beyond its first attempt \
+              before it is failed (transient errors requeue + replay)")
+        .flag("supervised",
+              "run the async scheduler under restart supervision: a \
+               crashed serving run restarts with backoff, warm-recovering \
+               sessions from the session cache (implies --async)")
+        .opt("max-restarts", Some("3"),
+             "supervised: restarts offered before the supervisor gives up")
+        .opt("faults", None,
+             "deterministic fault-injection spec for chaos testing, e.g. \
+              seed=7,decode=0.01 (see src/util/faults.rs)")
         .opt("temperature", Some("0.8"),
              "sampling temperature (0 = greedy; required for warm-run \
               output to be bit-identical to a cold run)")
@@ -798,6 +918,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
                comparing runs")
         .positional("variant", "LM variant (pjrt backend only)");
     let p = cmd.parse(args)?;
+    apply_faults_opt(&p)?;
     apply_threads_opt(&p)?;
     let n = p.usize("requests")?;
     let n_tokens = p.usize("tokens")?;
@@ -806,7 +927,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         seed: p.u64("seed")?,
         max_batch: p.usize("max-batch")?,
     };
-    let is_async = p.flag("async");
+    let supervised = p.flag("supervised");
+    let is_async = p.flag("async") || supervised;
     let cache_mb = p.usize("session-cache-mb")?;
     let session_dir = p.get("session-dir").map(PathBuf::from);
     let sessions = p.usize("sessions")?;
@@ -814,13 +936,19 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let cache = if cache_mb > 0 || session_dir.is_some() {
         let budget = cache_mb.max(1) << 20;
         let c = match &cache_file {
-            Some(f) if f.exists() => {
-                let c = session_cache::SessionCache::load(f, budget)?;
-                log_info!("session cache: loaded {} entries ({} KiB) from \
-                           {}", c.len(), c.used_bytes() >> 10, f.display());
+            // a corrupt cache file is discarded (with a warning) and the
+            // run proceeds cold — never a startup failure
+            Some(f) => {
+                let c = session_cache::SessionCache
+                    ::load_or_recover(f, budget);
+                if c.len() > 0 {
+                    log_info!("session cache: loaded {} entries ({} KiB) \
+                               from {}", c.len(), c.used_bytes() >> 10,
+                              f.display());
+                }
                 c
             }
-            _ => session_cache::SessionCache::new(budget),
+            None => session_cache::SessionCache::new(budget),
         };
         Some(RefCell::new(c))
     } else {
@@ -833,7 +961,10 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             let backend = native_backend(&p, CharVocab::new().size())?;
             let requests = synthetic_requests(
                 &mut rng, n, n_tokens, backend.model.vocab_out, sessions);
-            if is_async {
+            if supervised {
+                serve_supervised(&backend, requests, &opts, cache.as_ref(),
+                                 &p)?
+            } else if is_async {
                 serve_async(&backend, requests, &opts, cache.as_ref(), &p)?
             } else if let Some(c) = &cache {
                 server::serve_with_cache(&backend, requests, &opts, c)?
@@ -858,7 +989,10 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             let backend = PjrtBackend::new(&model, &state.params);
             // the PJRT backend has no state export; an attached cache
             // stays inert and every request falls back to prefill
-            if is_async {
+            if supervised {
+                serve_supervised(&backend, requests, &opts, cache.as_ref(),
+                                 &p)?
+            } else if is_async {
                 serve_async(&backend, requests, &opts, cache.as_ref(), &p)?
             } else if let Some(c) = &cache {
                 server::serve_with_cache(&backend, requests, &opts, c)?

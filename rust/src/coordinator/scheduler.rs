@@ -40,6 +40,27 @@
 //! wrapper: submit everything, close, run — token-for-token identical to
 //! the PR-2 behavior.
 //!
+//! **Self-healing.**  A failing `decode_step` — transient error or
+//! panic — never takes the scheduler down.  The step runs under
+//! [`std::panic::catch_unwind`]; because `decode_step` consumes the
+//! batch state by value, a failed step's lane states are gone, so every
+//! occupied lane is *requeued as a replay*: its generated-so-far tokens
+//! are folded into the prompt (greedy decode is batch-composition
+//! invariant — property-pinned in `rust/tests/scheduler_props.rs` — so
+//! replayed output is bit-identical) and the lane retries in a fresh
+//! batch after an exponential backoff with deterministic jitter.  A
+//! *panicking* batch additionally quarantines its lanes: each retries in
+//! a single-lane batch, so a poisoned request (NaN weights it alone
+//! trips over, adversarial input) can only fail itself.  Lanes that
+//! exhaust [`SchedulerOpts::retry_limit`] are dropped into
+//! [`ServeStats::failed`] ([`SubmitError::Failed`]) — the drain
+//! invariant becomes `submitted == responses + expired + failed`.
+//! Session-cache import failures degrade to a cold prefill and are
+//! counted in [`ServeStats::session_degraded`], never fatal.  With
+//! temperature > 0 a replay consumes the sampling RNG in a different
+//! order than an uninterrupted run; only greedy output is pinned
+//! bit-exact under faults.
+//!
 //! ```
 //! use minrnn::backend::{NativeBackend, NativeInit, NativeModel};
 //! use minrnn::coordinator::scheduler::{Scheduler, SchedulerOpts};
@@ -74,14 +95,17 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use crate::log_warn;
 use crate::runtime::Backend;
 use crate::tensor::Tensor;
-use crate::util::rng::Rng;
+use crate::util::faults;
+use crate::util::rng::{splitmix64, Rng};
 use crate::util::threads::{BoundedQueue, PushError};
 
 use super::infer::sample_logits;
-use super::server::{Request, Response, ServeOpts, ServeStats};
+use super::server::{Health, Request, Response, ServeOpts, ServeStats};
 use super::session_cache::SessionCache;
+use super::supervisor::panic_message;
 
 /// How often (in prompt tokens) a decoding lane snapshots its state into
 /// an attached session cache, in addition to the snapshot one token
@@ -128,6 +152,11 @@ pub struct SchedulerOpts {
     /// batch (right for open-loop serving).  Capped at
     /// [`ServeOpts::max_batch`] either way.
     pub lanes: Option<usize>,
+    /// Decode attempts a request gets beyond the first (`--retry-limit`):
+    /// a lane caught in a failed or panicked decode step is requeued and
+    /// replayed up to this many times before it is dropped into
+    /// [`ServeStats::failed`].
+    pub retry_limit: u32,
 }
 
 impl Default for SchedulerOpts {
@@ -138,6 +167,7 @@ impl Default for SchedulerOpts {
             backpressure: Backpressure::Block,
             default_deadline: None,
             lanes: None,
+            retry_limit: 2,
         }
     }
 }
@@ -158,6 +188,10 @@ pub enum SubmitError {
     QueueFull(Request),
     /// [`SubmitHandle::close`] was already called.
     Closed(Request),
+    /// The request's decode failed (error or panic) on every attempt,
+    /// retry budget included.  Reported through [`ServeStats::failed`];
+    /// surviving lanes are unaffected.
+    Failed { id: u64, attempts: u32 },
 }
 
 impl fmt::Display for SubmitError {
@@ -170,6 +204,8 @@ impl fmt::Display for SubmitError {
                 f, "request {} rejected: admission queue is full", r.id),
             SubmitError::Closed(r) => write!(
                 f, "request {} refused: scheduler is shutting down", r.id),
+            SubmitError::Failed { id, attempts } => write!(
+                f, "request {id} failed after {attempts} decode attempts"),
         }
     }
 }
@@ -191,6 +227,15 @@ struct Submission {
     req: Request,
     enqueued: Instant,
     deadline: Option<Duration>,
+    /// Decode attempts consumed so far (0 for fresh submissions; bumped
+    /// each time a failed step requeues the lane).
+    strikes: u32,
+    /// Quarantine flag: a lane requeued by a *panicking* step must retry
+    /// in a single-lane batch so it can only take down itself.
+    isolated: bool,
+    /// Generated tokens already folded into `req.prompt` by replays; the
+    /// response strips them back out of the prompt.
+    replayed: usize,
 }
 
 /// Cloneable, `Send` producer side of the scheduler: submit requests from
@@ -218,7 +263,8 @@ impl SubmitHandle {
         if req.prompt.is_empty() {
             return Err(SubmitError::EmptyPrompt { id: req.id });
         }
-        let sub = Submission { req, enqueued: Instant::now(), deadline };
+        let sub = Submission { req, enqueued: Instant::now(), deadline,
+                               strikes: 0, isolated: false, replayed: 0 };
         let pushed = match self.backpressure {
             Backpressure::Block => self.shared.queue.push(sub),
             Backpressure::Reject => self.shared.queue.try_push(sub),
@@ -262,18 +308,24 @@ struct Lane {
     /// Prompt cursor.
     pos: usize,
     out: Vec<i32>,
+    /// Decode attempts consumed (carried through requeues).
+    strikes: u32,
+    /// Generated tokens living inside `req.prompt` from earlier replays.
+    replayed: usize,
 }
 
 impl Lane {
     /// Admit a queued request into a lane (used at batch formation and at
     /// continuous-admission refill — keep the bookkeeping in one place).
-    fn admit(req: Request, enqueued: Instant) -> Lane {
-        Lane { req, enqueued, admitted: Instant::now(), pos: 0,
-               out: Vec::new() }
+    fn admit(sub: Submission) -> Lane {
+        Lane { req: sub.req, enqueued: sub.enqueued,
+               admitted: Instant::now(), pos: 0, out: Vec::new(),
+               strikes: sub.strikes, replayed: sub.replayed }
     }
 
     fn active(&self) -> bool {
-        self.pos < self.req.prompt.len() || self.out.len() < self.req.n_tokens
+        self.pos < self.req.prompt.len()
+            || self.replayed + self.out.len() < self.req.n_tokens
     }
 
     fn next_input(&self) -> i32 {
@@ -285,10 +337,38 @@ impl Lane {
         }
     }
 
+    /// Convert an in-flight lane back into a queued submission that
+    /// *replays* its progress after a failed decode step: the tokens
+    /// generated so far move into the prompt (greedy decode is
+    /// batch-composition invariant, so re-deriving the remaining tokens
+    /// in a different batch yields bit-identical output) and `replayed`
+    /// records how many, so [`Lane::finish`] still reports exactly the
+    /// requested continuation.
+    fn requeue(mut self, isolated: bool) -> Submission {
+        let replayed = self.replayed + self.out.len();
+        self.req.prompt.extend_from_slice(&self.out);
+        Submission {
+            req: self.req,
+            enqueued: self.enqueued,
+            // the original deadline bounded *queue wait before first
+            // admission*; a replayed lane was already admitted once
+            deadline: None,
+            strikes: self.strikes,
+            isolated,
+            replayed,
+        }
+    }
+
     fn finish(self, bsize: usize, done: Instant) -> Response {
+        // replays folded earlier output into the prompt; hand it back as
+        // output so the response is indistinguishable from a clean run
+        let mut tokens: Vec<i32> =
+            self.req.prompt[self.req.prompt.len() - self.replayed..]
+            .to_vec();
+        tokens.extend_from_slice(&self.out);
         Response {
             id: self.req.id,
-            tokens: self.out,
+            tokens,
             queue_s: (self.admitted - self.enqueued).as_secs_f64(),
             service_s: (done - self.admitted).as_secs_f64(),
             batch: bsize,
@@ -333,6 +413,25 @@ pub struct Scheduler<'b, B: Backend> {
     admitted: usize,
     batches_started: usize,
     t_start: Instant,
+    /// Whether the current batch is a single quarantined lane retrying
+    /// alone after a panic (no refill while it runs).
+    isolated_batch: bool,
+    /// Ids dropped after exhausting their decode-retry budget.
+    failed: Vec<u64>,
+    /// Lane requeues performed after failed decode steps.
+    retries: usize,
+    /// Decode steps that failed or panicked (all lanes of the batch
+    /// counted once).
+    decode_failures: usize,
+    /// Session-cache imports degraded to cold prefill.
+    session_degraded: usize,
+    /// Consecutive failed decode steps (drives exponential backoff;
+    /// reset by the first successful step).
+    consec_failures: u32,
+    /// Backoff to sleep before the next step; set by a failed step,
+    /// consumed by [`Scheduler::run`] so [`Scheduler::step`] itself
+    /// never blocks.
+    backoff: Option<Duration>,
 }
 
 impl<'b, B: Backend> Scheduler<'b, B> {
@@ -381,6 +480,13 @@ impl<'b, B: Backend> Scheduler<'b, B> {
             admitted: 0,
             batches_started: 0,
             t_start: Instant::now(),
+            isolated_batch: false,
+            failed: Vec::new(),
+            retries: 0,
+            decode_failures: 0,
+            session_degraded: 0,
+            consec_failures: 0,
+            backoff: None,
         }, handle))
     }
 
@@ -449,19 +555,33 @@ impl<'b, B: Backend> Scheduler<'b, B> {
         if backlog == 0 {
             return Ok(false);
         }
-        let want = self.opts.lanes.unwrap_or(backlog).min(cap);
+        // A quarantined submission (requeued by a panicking step) decodes
+        // alone, so a poisoned request can only fail itself.  Isolated
+        // submissions only ever live at the front of `pending`.
+        let isolated =
+            self.pending.front().map_or(false, |s| s.isolated);
+        let want = if isolated {
+            1
+        } else {
+            self.opts.lanes.unwrap_or(backlog).min(cap)
+        };
         let bsize = self.backend.plan_batch(want).ok_or_else(|| anyhow!(
             "backend '{}' refused to plan a batch for {want} requests",
             self.backend.name()))?;
         // Admit at most max_batch requests even when a fixed-size (PJRT)
         // backend pads up to an exported lane count above the cap — the
         // extra lanes stay idle padding.
-        let limit = bsize.min(cap);
+        let limit = if isolated { 1 } else { bsize.min(cap) };
         let mut lanes: Vec<Option<Lane>> = (0..bsize).map(|_| None).collect();
         let mut admitted = 0usize;
         for slot in lanes.iter_mut().take(limit) {
+            if admitted > 0
+                && self.pending.front().map_or(false, |s| s.isolated) {
+                // never mix a quarantined request into a shared batch
+                break;
+            }
             let Some(sub) = self.pop_live() else { break };
-            *slot = Some(Lane::admit(sub.req, sub.enqueued));
+            *slot = Some(Lane::admit(sub));
             admitted += 1;
         }
         if admitted == 0 {
@@ -473,6 +593,7 @@ impl<'b, B: Backend> Scheduler<'b, B> {
         self.batches_started += 1;
         self.lanes = lanes;
         self.admitted += admitted;
+        self.isolated_batch = isolated;
         for lane in 0..self.lanes.len() {
             self.restore_lane(lane);
         }
@@ -499,25 +620,38 @@ impl<'b, B: Backend> Scheduler<'b, B> {
             return;
         };
         let state = self.state.as_mut().expect("admitted lane has state");
-        if self.backend.import_state(state, lane, &snap).is_ok() {
-            l.pos = covered;
-            self.cache_hits += 1;
-            self.prefill_saved += covered;
-        } else {
-            self.cache_misses += 1;
+        match self.backend.import_state(state, lane, &snap) {
+            Ok(()) => {
+                l.pos = covered;
+                self.cache_hits += 1;
+                self.prefill_saved += covered;
+            }
+            Err(e) => {
+                // a bad cached state degrades this lane to a cold
+                // prefill — counted, logged, never fatal to the request
+                self.cache_misses += 1;
+                self.session_degraded += 1;
+                log_warn!("session import failed for request {} \
+                           (degrading to cold prefill): {e:#}",
+                          l.req.id);
+            }
         }
     }
 
     /// Mid-decode admission: seed free lanes of the running batch from the
     /// queue via [`Backend::reset_lane`].  No-op on fixed backends.
     fn refill_lanes(&mut self) {
-        if !self.continuous || self.state.is_none() {
+        if !self.continuous || self.state.is_none() || self.isolated_batch {
             return;
         }
         let limit = self.bsize.min(self.opts.serve.max_batch);
         for lane in 0..limit {
             if self.lanes[lane].is_some() {
                 continue;
+            }
+            if self.pending.front().map_or(false, |s| s.isolated) {
+                // a quarantined submission must start its own batch
+                return;
             }
             let Some(sub) = self.pop_live() else { return };
             let state = self.state.as_mut().expect("checked above");
@@ -527,7 +661,7 @@ impl<'b, B: Backend> Scheduler<'b, B> {
                 self.pending.push_front(sub);
                 return;
             }
-            self.lanes[lane] = Some(Lane::admit(sub.req, sub.enqueued));
+            self.lanes[lane] = Some(Lane::admit(sub));
             self.admitted += 1;
             self.restore_lane(lane);
         }
@@ -547,6 +681,57 @@ impl<'b, B: Backend> Scheduler<'b, B> {
         self.state = None;
         self.lanes = Vec::new();
         self.bsize = 0;
+        self.isolated_batch = false;
+    }
+
+    /// A decode step failed (`poisoned == false`: transient `Err`) or
+    /// panicked (`poisoned == true`).  `decode_step` consumed the batch
+    /// state, so the in-flight lane states are gone: convert every
+    /// occupied lane back into a replaying [`Submission`]
+    /// ([`Lane::requeue`]) at the front of `pending`, drop lanes that
+    /// are out of retry budget into [`ServeStats::failed`], and arm an
+    /// exponential backoff (deterministic jitter keyed off the serve
+    /// seed) for [`Scheduler::run`] to sleep before the retry batch.
+    /// Panicked lanes are quarantined: each replays in a single-lane
+    /// batch.
+    fn recover_failed_step(&mut self, poisoned: bool, why: &str) {
+        self.decode_failures += 1;
+        self.consec_failures += 1;
+        let mut resubs: Vec<Submission> = Vec::new();
+        for slot in self.lanes.iter_mut() {
+            let Some(l) = slot.take() else { continue };
+            let mut sub = l.requeue(poisoned);
+            sub.strikes += 1;
+            if sub.strikes > self.opts.retry_limit {
+                let err = SubmitError::Failed {
+                    id: sub.req.id, attempts: sub.strikes,
+                };
+                log_warn!("{err}: {why}");
+                self.failed.push(sub.req.id);
+                continue;
+            }
+            self.retries += 1;
+            resubs.push(sub);
+        }
+        // push_front in reverse keeps FIFO order among the survivors
+        for sub in resubs.into_iter().rev() {
+            self.pending.push_front(sub);
+        }
+        self.state = None;
+        self.lanes = Vec::new();
+        self.bsize = 0;
+        self.isolated_batch = false;
+        let shift = self.consec_failures.saturating_sub(1).min(6);
+        let base_us = 200u64 << shift;
+        let mut key = self.opts.serve.seed
+            ^ (self.decode_failures as u64)
+                .wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let jitter_us = splitmix64(&mut key) % (base_us / 2 + 1);
+        self.backoff = Some(Duration::from_micros(base_us + jitter_us));
+        log_warn!("decode step {} ({why}); requeued surviving lanes, \
+                   backing off {}us",
+                  if poisoned { "panicked" } else { "failed" },
+                  base_us + jitter_us);
     }
 
     /// One scheduler pump: an admission pass (batch formation or
@@ -583,7 +768,31 @@ impl<'b, B: Backend> Scheduler<'b, B> {
 
         let x = Tensor::i32(vec![bsize], xs);
         let state = self.state.take().expect("active batch has state");
-        let (logits, new_state) = self.backend.decode_step(&x, state)?;
+        // the decode step is the only place model code runs; isolate it
+        // so neither an Err nor a panic (poisoned request, injected
+        // fault) can take the scheduler down with lanes in flight
+        let backend = self.backend;
+        let outcome =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                faults::maybe_decode_panic();
+                faults::maybe_latency();
+                backend.decode_step(&x, state)
+            }));
+        let (logits, new_state) = match outcome {
+            Ok(Ok(pair)) => {
+                self.consec_failures = 0;
+                pair
+            }
+            Ok(Err(e)) => {
+                self.recover_failed_step(false, &format!("{e:#}"));
+                return Ok(true);
+            }
+            Err(payload) => {
+                let msg = panic_message(payload);
+                self.recover_failed_step(true, &msg);
+                return Ok(true);
+            }
+        };
         self.state = Some(new_state);
 
         // consume logits: lanes past their prompt sample a token;
@@ -622,7 +831,8 @@ impl<'b, B: Backend> Scheduler<'b, B> {
                 }
                 // prompt just finished → this step's logits sample
             }
-            if l.pos >= l.req.prompt.len() && l.out.len() < l.req.n_tokens {
+            if l.pos >= l.req.prompt.len()
+                && l.replayed + l.out.len() < l.req.n_tokens {
                 let row = &rows[lane * vocab..(lane + 1) * vocab];
                 let tok = sample_logits(row, temperature, &mut self.rng)
                     as i32;
@@ -662,6 +872,11 @@ impl<'b, B: Backend> Scheduler<'b, B> {
     /// parks on the backend.
     pub fn run(mut self) -> Result<ServeStats> {
         loop {
+            // a failed decode step armed a backoff: sleep it off here so
+            // the pump-style step() stays non-blocking for tests
+            if let Some(d) = self.backoff.take() {
+                std::thread::sleep(d);
+            }
             if self.step()? {
                 continue;
             }
@@ -694,6 +909,18 @@ impl<'b, B: Backend> Scheduler<'b, B> {
                           - self.cache_evictions_at_attach) as usize)
                 .unwrap_or(0),
             prefill_tokens_saved: self.prefill_saved,
+            failed: std::mem::take(&mut self.failed),
+            retries: self.retries,
+            session_degraded: self.session_degraded,
+            // restarts belong to the supervisor; it stamps them onto the
+            // stats of the generation that finally completes
+            restarts: 0,
+            health: if self.decode_failures == 0
+                && self.session_degraded == 0 {
+                Health::Healthy
+            } else {
+                Health::Degraded
+            },
         }
     }
 }
@@ -817,5 +1044,141 @@ mod tests {
             lanes: Some(0),
             ..Default::default()
         }).is_err());
+    }
+
+    // ---- self-healing -----------------------------------------------------
+
+    use std::cell::Cell;
+
+    use crate::runtime::backend::SessionState;
+
+    /// Delegates to a [`NativeBackend`] but makes the first `remaining`
+    /// decode steps fail — with an `Err` (transient fault) or a panic
+    /// (poisoned batch).  Process-local, so unlike `util::faults` it is
+    /// safe in the shared unit-test binary.
+    struct FlakyBackend {
+        inner: NativeBackend,
+        remaining: Cell<u32>,
+        panics: bool,
+    }
+
+    impl Backend for FlakyBackend {
+        type State = <NativeBackend as Backend>::State;
+
+        fn name(&self) -> &str {
+            "flaky"
+        }
+        fn step_batches(&self) -> Vec<usize> {
+            self.inner.step_batches()
+        }
+        fn decode_state(&self, batch: usize) -> Result<Self::State> {
+            self.inner.decode_state(batch)
+        }
+        fn decode_step(&self, x: &Tensor, state: Self::State)
+                       -> Result<(Tensor, Self::State)> {
+            if self.remaining.get() > 0 {
+                self.remaining.set(self.remaining.get() - 1);
+                if self.panics {
+                    panic!("injected poisoned decode");
+                }
+                anyhow::bail!("injected transient decode failure");
+            }
+            self.inner.decode_step(x, state)
+        }
+        fn prefill(&self, x: &Tensor) -> Result<(Tensor, Self::State)> {
+            self.inner.prefill(x)
+        }
+        fn reset_lane(&self, state: &mut Self::State, lane: usize) -> bool {
+            self.inner.reset_lane(state, lane)
+        }
+        fn lane_reset_supported(&self) -> bool {
+            self.inner.lane_reset_supported()
+        }
+        fn state_fingerprint(&self) -> Option<u64> {
+            self.inner.state_fingerprint()
+        }
+        fn export_state(&self, state: &Self::State, lane: usize)
+                        -> Result<SessionState> {
+            self.inner.export_state(state, lane)
+        }
+        fn import_state(&self, state: &mut Self::State, lane: usize,
+                        snap: &SessionState) -> Result<()> {
+            self.inner.import_state(state, lane, snap)
+        }
+    }
+
+    fn flaky(seed: u64, remaining: u32, panics: bool) -> FlakyBackend {
+        let model = NativeModel::init_random(&NativeInit {
+            vocab_in: Some(16),
+            vocab_out: 16,
+            d_model: 8,
+            n_layers: 1,
+            ..Default::default()
+        }, seed).unwrap();
+        FlakyBackend {
+            inner: NativeBackend::new(model),
+            remaining: Cell::new(remaining),
+            panics,
+        }
+    }
+
+    fn greedy_run(backend: &FlakyBackend) -> ServeStats {
+        let (sched, handle) = Scheduler::new(backend, SchedulerOpts {
+            serve: ServeOpts { temperature: 0.0, seed: 0, max_batch: 4 },
+            ..Default::default()
+        }).unwrap();
+        for i in 0..4u64 {
+            handle.submit(Request {
+                id: i,
+                prompt: vec![1 + i as i32, 2, 3],
+                n_tokens: 5,
+                session: None,
+            }).unwrap();
+        }
+        handle.close();
+        sched.run().unwrap()
+    }
+
+    #[test]
+    fn transient_decode_errors_retry_to_bit_identical_greedy_output() {
+        let clean = greedy_run(&flaky(21, 0, false));
+        // the first two decode steps fail; with retry_limit 2 every lane
+        // is requeued twice and the third attempt carries them through
+        let faulty = greedy_run(&flaky(21, 2, false));
+        assert_eq!(clean.responses.len(), 4);
+        assert_eq!(faulty.responses.len(), 4);
+        assert!(faulty.failed.is_empty());
+        assert!(faulty.retries > 0, "the failed steps must retry");
+        assert_eq!(faulty.health, Health::Degraded);
+        assert_eq!(clean.health, Health::Healthy);
+        for c in &clean.responses {
+            let f = faulty.responses.iter().find(|r| r.id == c.id)
+                .expect("every request must still complete");
+            assert_eq!(f.tokens, c.tokens,
+                       "replayed greedy output must be bit-identical \
+                        (req {})", c.id);
+        }
+    }
+
+    #[test]
+    fn poisoned_batches_fail_alone_after_retry_budget() {
+        // quiet the default panic hook: every injected panic would
+        // otherwise spray a backtrace into the test output
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        // every decode panics: all requests must fail cleanly (scheduler
+        // survives, drain invariant holds) after 1 + retry_limit attempts
+        let backend = flaky(3, u32::MAX, true);
+        let stats = greedy_run(&backend);
+        std::panic::set_hook(prev);
+        assert!(stats.responses.is_empty());
+        let mut failed = stats.failed.clone();
+        failed.sort_unstable();
+        assert_eq!(failed, vec![0, 1, 2, 3]);
+        assert_eq!(stats.submitted,
+                   stats.responses.len() + stats.expired.len()
+                       + stats.failed.len(),
+                   "drain invariant must extend to failed requests");
+        assert!(stats.retries > 0);
     }
 }

@@ -23,6 +23,7 @@
 //! requests are plain host data.
 
 use std::cell::RefCell;
+use std::fmt;
 
 use anyhow::{anyhow, Result};
 
@@ -68,6 +69,35 @@ pub struct Response {
     pub batch: usize,
 }
 
+/// Health of a serving run, as reported in [`ServeStats::health`].
+///
+/// * `Healthy` — no decode failures, no supervisor restarts.
+/// * `Degraded` — the run completed, but something was absorbed along
+///   the way: failed requests, decode retries, session-import
+///   downgrades, or a supervisor restart.  Surviving traffic was served
+///   (bit-identically for greedy decode), capacity or latency may have
+///   suffered.
+/// * `Draining` — the supervisor exhausted its restart budget and is
+///   completing in-flight work without accepting recovery restarts; the
+///   operator should expect the process to need attention.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Health {
+    #[default]
+    Healthy,
+    Degraded,
+    Draining,
+}
+
+impl fmt::Display for Health {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Health::Healthy => "healthy",
+            Health::Degraded => "degraded",
+            Health::Draining => "draining",
+        })
+    }
+}
+
 /// Aggregate statistics for one serving run (one [`serve_opts`] call or
 /// one open-ended scheduler run).
 ///
@@ -80,9 +110,9 @@ pub struct ServeStats {
     pub total_s: f64,
     pub tokens_generated: usize,
     /// Requests accepted into the admission queue.  After a graceful
-    /// drain, `submitted == responses.len() + expired.len()` — nothing is
-    /// lost (rejected submissions never enter the queue and are counted
-    /// separately).
+    /// drain, `submitted == responses.len() + expired.len() +
+    /// failed.len()` — nothing is lost (rejected submissions never enter
+    /// the queue and are counted separately).
     pub submitted: usize,
     /// Requests admitted into a decode lane (equals `responses.len()`
     /// after a full drain).
@@ -112,6 +142,23 @@ pub struct ServeStats {
     /// Prompt tokens whose prefill was skipped thanks to cache hits —
     /// the tentpole saving: each is one `decode_step` that never ran.
     pub prefill_tokens_saved: usize,
+    /// Ids of requests dropped after exhausting their decode-retry
+    /// budget (`SubmitError::Failed`): a request whose decode panicked or
+    /// errored on every attempt, in quarantined isolation included.
+    /// Failure is per-request — surviving lanes are unaffected.
+    pub failed: Vec<u64>,
+    /// Decode attempts that were retried after a transient failure
+    /// (requeue + replay, with exponential backoff between batches).
+    pub retries: usize,
+    /// Session-cache imports that failed (corrupt state, import error)
+    /// and were degraded to a cold prefill instead of failing the
+    /// request.  These also count as `session_misses`.
+    pub session_degraded: usize,
+    /// Times the supervisor restarted the scheduler after a crash
+    /// (always 0 without `--supervised`).
+    pub restarts: usize,
+    /// Overall health classification of the run; see [`Health`].
+    pub health: Health,
 }
 
 impl ServeStats {
@@ -265,6 +312,7 @@ fn serve_inner<B: Backend>(backend: &B, requests: Vec<Request>,
         backpressure: Backpressure::Block,
         default_deadline: None,
         lanes: None, // plan from the backlog, like the PR-2 loop
+        ..Default::default()
     })?;
     if let Some(c) = cache {
         scheduler.set_session_cache(c);
@@ -325,6 +373,12 @@ mod tests {
         assert!(stats.expired.is_empty());
         assert!(stats.max_queue_depth >= 1);
         assert!(stats.batches_started >= 1);
+        // a fault-free run is Healthy with nothing failed or retried
+        assert!(stats.failed.is_empty());
+        assert_eq!(stats.retries, 0);
+        assert_eq!(stats.session_degraded, 0);
+        assert_eq!(stats.health, Health::Healthy);
+        assert_eq!(stats.health.to_string(), "healthy");
     }
 
     #[test]
@@ -401,6 +455,11 @@ mod tests {
             session_misses: 0,
             session_evictions: 0,
             prefill_tokens_saved: 0,
+            failed: Vec::new(),
+            retries: 0,
+            session_degraded: 0,
+            restarts: 0,
+            health: Health::Healthy,
         };
         assert_eq!(stats.mean_latency_s(), 0.0);
         assert_eq!(stats.p95_latency_s(), 0.0);

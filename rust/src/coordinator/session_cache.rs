@@ -22,10 +22,15 @@
 //!   budget is refused outright.
 //! * **Persistence.**  [`SessionCache::save`] /
 //!   [`SessionCache::load`] round-trip the cache through a small binary
-//!   format (magic `MRSC`, atomic tmp+rename like `util::io`), so
-//!   sessions survive a server restart.  Snapshots carry the exporting
-//!   model's fingerprint; a cache loaded against a different
-//!   architecture simply never hits.
+//!   format (magic `MRSC`, CRC32 trailer, durable tmp+fsync+rename via
+//!   [`crate::util::io::commit_durable`]), so sessions survive a server
+//!   restart.  Snapshots carry the exporting model's fingerprint; a
+//!   cache loaded against a different architecture simply never hits.
+//!   A cache file is an *optimization*, never a dependency:
+//!   [`SessionCache::load_or_recover`] turns an unreadable or corrupt
+//!   file into a logged warning plus a cold (empty) cache — and deletes
+//!   the bad file so the next save starts clean — instead of failing
+//!   serve startup.
 //!
 //! The cache stores whatever [`Backend::export_state`] produced and
 //! never interprets the bytes; all model knowledge lives behind the
@@ -34,18 +39,21 @@
 //! [`Backend::export_state`]: crate::runtime::Backend::export_state
 
 use std::collections::HashMap;
-use std::fs::File;
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::io::Read;
 use std::path::Path;
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use crate::log_warn;
 use crate::runtime::backend::SessionState;
+use crate::util::io::{commit_durable, crc32};
 use crate::util::rng::splitmix64;
 
 pub const MAGIC: &[u8; 4] = b"MRSC";
-pub const VERSION: u32 = 1;
+/// Version 2 appends a CRC32 trailer (torn-write detection) and commits
+/// through [`commit_durable`]; version-1 files are still read.
+pub const VERSION: u32 = 2;
 
 /// Fixed per-entry bookkeeping charged against the byte budget on top of
 /// the state bytes and the covered tokens.
@@ -249,54 +257,70 @@ impl SessionCache {
     }
 
     /// Persist every live entry (and the session pointer map) to `path`
-    /// atomically (tmp + rename), oldest-first so a reload preserves the
-    /// LRU order.
+    /// durably ([`commit_durable`]: tmp + fsync + rename + parent-dir
+    /// fsync, CRC32 trailer), oldest-first so a reload preserves the LRU
+    /// order.
     pub fn save(&self, path: &Path) -> Result<()> {
         let mut entries: Vec<(&u64, &Entry)> = self.store.iter().collect();
         entries.sort_by_key(|(_, e)| e.last_used);
-        let tmp = path.with_extension("tmp");
-        {
-            let mut w = BufWriter::new(File::create(&tmp)
-                .with_context(|| format!("create {}", tmp.display()))?);
-            w.write_all(MAGIC)?;
-            w.write_all(&VERSION.to_le_bytes())?;
-            w.write_all(&(entries.len() as u32).to_le_bytes())?;
-            for (_, e) in &entries {
-                w.write_all(&(e.tokens.len() as u32).to_le_bytes())?;
-                for &t in &e.tokens {
-                    w.write_all(&t.to_le_bytes())?;
-                }
-                let raw = e.state.to_bytes();
-                w.write_all(&(raw.len() as u32).to_le_bytes())?;
-                w.write_all(&raw)?;
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        buf.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+        for (_, e) in &entries {
+            buf.extend_from_slice(&(e.tokens.len() as u32).to_le_bytes());
+            for &t in &e.tokens {
+                buf.extend_from_slice(&t.to_le_bytes());
             }
-            w.write_all(&(self.sessions.len() as u32).to_le_bytes())?;
-            for (&s, &h) in &self.sessions {
-                w.write_all(&s.to_le_bytes())?;
-                w.write_all(&h.to_le_bytes())?;
-            }
-            w.flush()?;
+            let raw = e.state.to_bytes();
+            buf.extend_from_slice(&(raw.len() as u32).to_le_bytes());
+            buf.extend_from_slice(&raw);
         }
-        std::fs::rename(&tmp, path)?;
-        Ok(())
+        buf.extend_from_slice(&(self.sessions.len() as u32).to_le_bytes());
+        for (&s, &h) in &self.sessions {
+            buf.extend_from_slice(&s.to_le_bytes());
+            buf.extend_from_slice(&h.to_le_bytes());
+        }
+        let crc = crc32(&buf);
+        buf.extend_from_slice(&crc.to_le_bytes());
+        commit_durable(path, &buf)
+            .with_context(|| format!("save session cache {}",
+                                     path.display()))
     }
 
     /// Load a cache saved by [`SessionCache::save`], re-checking every
-    /// record against corruption; entries beyond `budget_bytes` evict
+    /// record against corruption (and, for v2 files, the whole payload
+    /// against the CRC32 trailer); entries beyond `budget_bytes` evict
     /// LRU exactly as live inserts would.
     pub fn load(path: &Path, budget_bytes: usize) -> Result<SessionCache> {
-        let mut r = BufReader::new(File::open(path)
-            .with_context(|| format!("open {}", path.display()))?);
-        let mut magic = [0u8; 4];
-        r.read_exact(&mut magic)?;
-        if &magic != MAGIC {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("open {}", path.display()))?;
+        if bytes.len() < 12 {
+            bail!("{}: truncated session cache ({} bytes is shorter than \
+                   the header)", path.display(), bytes.len());
+        }
+        if &bytes[..4] != MAGIC {
             bail!("{}: not a MRSC session cache", path.display());
         }
-        let version = read_u32(&mut r)?;
-        if version != VERSION {
-            bail!("{}: unsupported session-cache version {version}",
-                  path.display());
-        }
+        let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+        let body: &[u8] = match version {
+            1 => &bytes[8..],
+            VERSION => {
+                let (payload, trailer) = bytes.split_at(bytes.len() - 4);
+                let want = u32::from_le_bytes(trailer.try_into().unwrap());
+                let got = crc32(payload);
+                if want != got {
+                    bail!("{}: corrupt session cache (CRC mismatch: \
+                           trailer {want:08x}, computed {got:08x})",
+                          path.display());
+                }
+                &payload[8..]
+            }
+            v => bail!("{}: session-cache version mismatch (file is v{v}, \
+                        this reader supports v1..=v{VERSION})",
+                       path.display()),
+        };
+        let mut r: &[u8] = body;
         let mut cache = SessionCache::new(budget_bytes);
         let n = read_u32(&mut r)? as usize;
         if n > 1 << 20 {
@@ -337,6 +361,33 @@ impl SessionCache {
         // loading is not serving activity; counters start clean
         cache.stats = CacheStats::default();
         Ok(cache)
+    }
+
+    /// [`SessionCache::load`], downgraded from fatal to best-effort: a
+    /// missing file yields a fresh cache; an unreadable or corrupt file
+    /// is logged, **deleted** (so the next save starts clean rather than
+    /// tripping on the same bad bytes forever), counted as an eviction,
+    /// and replaced by a fresh cache.  Serve startup must never die on a
+    /// cache file — the cache is an optimization, not state of record.
+    pub fn load_or_recover(path: &Path, budget_bytes: usize)
+                           -> SessionCache {
+        if !path.exists() {
+            return SessionCache::new(budget_bytes);
+        }
+        match SessionCache::load(path, budget_bytes) {
+            Ok(cache) => cache,
+            Err(e) => {
+                log_warn!("discarding session cache {}: {e:#}",
+                          path.display());
+                if let Err(rm) = std::fs::remove_file(path) {
+                    log_warn!("could not delete bad session cache {}: \
+                               {rm}", path.display());
+                }
+                let mut cache = SessionCache::new(budget_bytes);
+                cache.stats.evictions += 1;
+                cache
+            }
+        }
     }
 }
 
@@ -456,5 +507,47 @@ mod tests {
         assert!(SessionCache::load(&good, 1 << 20).is_err());
         std::fs::remove_file(&bad).unwrap();
         std::fs::remove_file(&good).unwrap();
+    }
+
+    #[test]
+    fn legacy_v1_cache_files_still_load() {
+        let dir = std::env::temp_dir().join("minrnn_session_cache_v1");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("v1.mrsc");
+        let mut c = SessionCache::new(1 << 20);
+        c.insert(Some(3), &[4, 5, 6], snap(9, 24));
+        c.save(&path).unwrap();
+        // rewrite as a v1 file: version stamp 1, no CRC trailer
+        let bytes = std::fs::read(&path).unwrap();
+        let mut v1 = bytes[..bytes.len() - 4].to_vec();
+        v1[4..8].copy_from_slice(&1u32.to_le_bytes());
+        std::fs::write(&path, &v1).unwrap();
+        let mut back = SessionCache::load(&path, 1 << 20).unwrap();
+        assert!(back.lookup(Some(3), &[4, 5, 6, 7], 9).is_some());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn load_or_recover_deletes_corrupt_file_and_serves_cold() {
+        let dir = std::env::temp_dir().join("minrnn_session_cache_rec");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sessions.mrsc");
+        // missing file: fresh cache, no eviction counted
+        let c = SessionCache::load_or_recover(&path, 1 << 20);
+        assert!(c.is_empty());
+        assert_eq!(c.stats().evictions, 0);
+        // corrupt file: warn, delete, fresh cache, eviction counted
+        std::fs::write(&path, b"MRSCgarbage-that-is-not-a-cache").unwrap();
+        let c = SessionCache::load_or_recover(&path, 1 << 20);
+        assert!(c.is_empty());
+        assert_eq!(c.stats().evictions, 1);
+        assert!(!path.exists(), "bad cache file must be deleted");
+        // a valid file round-trips unchanged through the same entry point
+        let mut live = SessionCache::new(1 << 20);
+        live.insert(Some(1), &[1, 2], snap(5, 16));
+        live.save(&path).unwrap();
+        let mut back = SessionCache::load_or_recover(&path, 1 << 20);
+        assert!(back.lookup(Some(1), &[1, 2, 3], 5).is_some());
+        std::fs::remove_file(&path).unwrap();
     }
 }

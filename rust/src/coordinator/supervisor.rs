@@ -1,0 +1,251 @@
+//! Restart-with-backoff supervision for the serving loop.
+//!
+//! The scheduler already self-heals *within* a run (failed decode steps
+//! retry, poisoned requests are quarantined — see
+//! [`super::scheduler`]); this module covers the failure class above
+//! it: the whole serving generation dying, by panic or by error, in
+//! code the scheduler cannot catch.  [`supervise`] runs a
+//! caller-supplied serving generation in a `catch_unwind` loop,
+//! restarting it with exponential backoff (plus deterministic jitter)
+//! until it completes or the restart budget is exhausted.
+//!
+//! The generation closure receives the restart ordinal, so the caller
+//! can rebuild per-generation state (a fresh [`Scheduler`], the
+//! still-unserved requests).  Warm recovery comes from composition, not
+//! magic: the PR-6 session store outlives generations — the CLI path
+//! (`minrnn serve --supervised`) keeps one `SessionCache` across
+//! restarts (and on disk via `--session-dir`), so a restarted
+//! generation warm-starts returning sessions instead of re-prefilling.
+//!
+//! Outcome is surfaced through [`ServeStats`]: `restarts` counts
+//! recoveries, and [`Health`] is downgraded to `Degraded` after any
+//! restart, or `Draining` when the budget ran out along the way (the
+//! run completed, but the supervisor had stopped offering restarts).
+//!
+//! [`Scheduler`]: super::scheduler::Scheduler
+//! [`Health`]: super::server::Health
+
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::log_warn;
+use crate::util::rng::splitmix64;
+
+use super::server::{Health, ServeStats};
+
+/// Supervision knobs (`minrnn serve --supervised`).
+#[derive(Clone, Debug)]
+pub struct SupervisorOpts {
+    /// Crash recoveries offered before the supervisor gives up
+    /// (`--max-restarts`).
+    pub max_restarts: u32,
+    /// First restart delay; doubles per consecutive restart (capped at
+    /// `base << 6`), with deterministic jitter keyed off `seed`.
+    pub backoff_base: Duration,
+    /// Seed for the jitter (shared with the serve seed so a run's
+    /// timing is reproducible).
+    pub seed: u64,
+}
+
+impl Default for SupervisorOpts {
+    fn default() -> Self {
+        SupervisorOpts {
+            max_restarts: 3,
+            backoff_base: Duration::from_millis(50),
+            seed: 0,
+        }
+    }
+}
+
+/// Render a `catch_unwind` payload as the panic message when it is one
+/// (`panic!("...")` / `panic!(format!)` payloads are `&str` / `String`),
+/// falling back to a placeholder for exotic payload types.
+pub fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Delay before restart number `restart` (1-based): exponential in the
+/// restart ordinal with deterministic jitter in `[0, base/2]` — the
+/// same shape as the scheduler's intra-run retry backoff, one level up.
+pub fn backoff_delay(base: Duration, seed: u64, restart: u32) -> Duration {
+    let shift = restart.saturating_sub(1).min(6);
+    let backoff = base.saturating_mul(1 << shift);
+    let mut key = seed
+        ^ (restart as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    let jitter_ns = if backoff.is_zero() {
+        0
+    } else {
+        splitmix64(&mut key) % (backoff.as_nanos() as u64 / 2 + 1)
+    };
+    backoff + Duration::from_nanos(jitter_ns)
+}
+
+/// Run serving generations under restart supervision.  `generation(n)`
+/// runs the n-th attempt (0 = first) to completion; a panic or `Err`
+/// consumes one restart from the budget and re-invokes it after
+/// [`backoff_delay`].  The stats of the generation that completes are
+/// stamped with the restart count and the final [`Health`]:
+///
+/// * 0 restarts → the generation's own health (it may still be
+///   `Degraded` from intra-run retries);
+/// * ≥ 1 restart → at least `Degraded`;
+/// * budget exhausted, then success → `Draining` (the operator should
+///   expect this process to need attention);
+/// * budget exhausted, then another failure → `Err`.
+pub fn supervise<F>(opts: &SupervisorOpts, mut generation: F)
+                    -> Result<ServeStats>
+where
+    F: FnMut(u32) -> Result<ServeStats>,
+{
+    let mut restarts = 0u32;
+    loop {
+        let draining = restarts >= opts.max_restarts;
+        let attempt = restarts;
+        let outcome =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                generation(attempt)
+            }));
+        let failure = match outcome {
+            Ok(Ok(mut stats)) => {
+                stats.restarts = restarts as usize;
+                if draining {
+                    stats.health = Health::Draining;
+                } else if restarts > 0 && stats.health == Health::Healthy {
+                    stats.health = Health::Degraded;
+                }
+                return Ok(stats);
+            }
+            Ok(Err(e)) => format!("{e:#}"),
+            Err(payload) => format!("panic: {}", panic_message(payload)),
+        };
+        if draining {
+            return Err(anyhow!(
+                "supervised serve gave up after {restarts} restart(s); \
+                 last failure: {failure}"));
+        }
+        restarts += 1;
+        let delay = backoff_delay(opts.backoff_base, opts.seed, restarts);
+        log_warn!("serving generation {attempt} died ({failure}); \
+                   restart {restarts}/{} in {:.1}ms",
+                  opts.max_restarts, delay.as_secs_f64() * 1e3);
+        std::thread::sleep(delay);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts() -> SupervisorOpts {
+        // zero base -> zero backoff: tests never sleep
+        SupervisorOpts {
+            max_restarts: 3,
+            backoff_base: Duration::ZERO,
+            seed: 7,
+        }
+    }
+
+    fn stats() -> ServeStats {
+        ServeStats {
+            responses: Vec::new(),
+            total_s: 0.0,
+            tokens_generated: 0,
+            submitted: 0,
+            admitted: 0,
+            rejected: 0,
+            expired: Vec::new(),
+            max_queue_depth: 0,
+            batches_started: 0,
+            session_hits: 0,
+            session_misses: 0,
+            session_evictions: 0,
+            prefill_tokens_saved: 0,
+            failed: Vec::new(),
+            retries: 0,
+            session_degraded: 0,
+            restarts: 0,
+            health: Health::Healthy,
+        }
+    }
+
+    #[test]
+    fn first_try_success_stays_healthy() {
+        let got = supervise(&opts(), |n| {
+            assert_eq!(n, 0);
+            Ok(stats())
+        }).unwrap();
+        assert_eq!(got.restarts, 0);
+        assert_eq!(got.health, Health::Healthy);
+    }
+
+    #[test]
+    fn panics_and_errors_are_restarted_until_success() {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        let got = supervise(&opts(), |n| match n {
+            0 => panic!("generation zero dies"),
+            1 => Err(anyhow!("generation one errors")),
+            n => {
+                assert_eq!(n, 2);
+                Ok(stats())
+            }
+        });
+        std::panic::set_hook(prev);
+        let got = got.unwrap();
+        assert_eq!(got.restarts, 2);
+        assert_eq!(got.health, Health::Degraded,
+                   "a restarted run must not report Healthy");
+    }
+
+    #[test]
+    fn budget_exhaustion_drains_then_gives_up() {
+        // success on the post-budget attempt completes as Draining
+        let got = supervise(&opts(), |n| {
+            if n < 3 {
+                Err(anyhow!("still failing"))
+            } else {
+                Ok(stats())
+            }
+        }).unwrap();
+        assert_eq!(got.restarts, 3);
+        assert_eq!(got.health, Health::Draining);
+        // one more failure past the budget is terminal
+        let err = supervise(&opts(), |_| -> Result<ServeStats> {
+            Err(anyhow!("hopeless"))
+        }).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("gave up after 3 restart(s)")
+                    && msg.contains("hopeless"),
+                "unhelpful error: {msg}");
+    }
+
+    #[test]
+    fn backoff_is_exponential_deterministic_and_capped() {
+        let base = Duration::from_millis(10);
+        let d1 = backoff_delay(base, 42, 1);
+        let d4 = backoff_delay(base, 42, 4);
+        assert!(d1 >= base && d1 <= base * 3 / 2);
+        assert!(d4 >= base * 8 && d4 <= base * 12);
+        // deterministic: same inputs, same delay
+        assert_eq!(d4, backoff_delay(base, 42, 4));
+        // capped at base << 6 (plus jitter)
+        let d99 = backoff_delay(base, 42, 99);
+        assert!(d99 <= base * 64 * 3 / 2);
+        assert_eq!(backoff_delay(Duration::ZERO, 1, 5), Duration::ZERO);
+    }
+
+    #[test]
+    fn panic_payloads_render_as_messages() {
+        assert_eq!(panic_message(Box::new("static str")), "static str");
+        assert_eq!(panic_message(Box::new(String::from("owned"))), "owned");
+        assert_eq!(panic_message(Box::new(17u32)),
+                   "non-string panic payload");
+    }
+}

@@ -4,7 +4,21 @@
 //! train-step executable ([`PjrtTrain`]) and the native Rust trainer
 //! (`backend::NativeTrainer`), so training works with or without
 //! artifacts.
+//!
+//! **Durability.**  Checkpointing is crash-safe end to end: every save
+//! commits through `util::io` (tmp + fsync + rename + parent-dir fsync,
+//! CRC32 trailer), [`CheckpointRing`] retains the last
+//! `cfg.keep_checkpoints` periodic checkpoints plus an atomically
+//! updated `<label>.LATEST` pointer, and [`recover_checkpoint`] walks
+//! pointer → ring (newest first) → best → final, returning the newest
+//! checkpoint that actually *parses and passes its CRC* — so a `kill
+//! -9` or torn write during a save costs at most `checkpoint_every`
+//! steps of progress, never the run.  Checkpoint IO failures inside
+//! [`run_loop`] are logged and skipped, not fatal: a full disk degrades
+//! durability, it does not kill training.
 
+use std::collections::VecDeque;
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 use anyhow::Result;
@@ -13,9 +27,10 @@ use crate::config::TrainConfig;
 use crate::runtime::{EvalMetrics, Model, PjrtTrain, TrainBackend,
                      TrainState};
 use crate::tensor::Batch;
+use crate::util::io;
 use crate::util::rng::Rng;
 use crate::util::stats::Ema;
-use crate::log_info;
+use crate::{log_info, log_warn};
 
 /// Anything that can produce training / evaluation batches.
 pub trait DataSource {
@@ -51,10 +66,126 @@ pub struct TrainReport {
     pub steps_run: usize,
 }
 
+/// Retained-checkpoint ring: keeps the newest `keep` periodic
+/// checkpoints (`<label>.step<N>.ckpt`) plus an atomically committed
+/// `<label>.LATEST` pointer naming the most recent one.  Adopts any ring
+/// files already in `dir`, so a resumed run keeps pruning where the
+/// crashed one left off.
+pub struct CheckpointRing {
+    dir: PathBuf,
+    label: String,
+    keep: usize,
+    ring: VecDeque<PathBuf>,
+}
+
+impl CheckpointRing {
+    pub fn new(dir: &Path, label: &str, keep: usize) -> CheckpointRing {
+        let label = label.replace('/', "_");
+        let mut adopted: Vec<PathBuf> = Vec::new();
+        if let Ok(rd) = std::fs::read_dir(dir) {
+            let prefix = format!("{label}.step");
+            for entry in rd.flatten() {
+                let name = entry.file_name().to_string_lossy().into_owned();
+                if name.starts_with(&prefix) && name.ends_with(".ckpt") {
+                    adopted.push(entry.path());
+                }
+            }
+        }
+        // step numbers are zero-padded: lexicographic == chronological
+        adopted.sort();
+        CheckpointRing {
+            dir: dir.to_path_buf(),
+            label,
+            keep: keep.max(1),
+            ring: adopted.into(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    /// Path of the `LATEST` pointer file.
+    pub fn latest_path(&self) -> PathBuf {
+        self.dir.join(format!("{}.LATEST", self.label))
+    }
+
+    /// Save a checkpoint for `step`, durably repoint `LATEST` at it,
+    /// then prune the oldest ring entries beyond `keep`.  Ordering
+    /// matters: the pointer only moves *after* the new checkpoint is on
+    /// stable storage, and pruning happens last, so a crash anywhere in
+    /// between leaves at least one valid checkpoint reachable by
+    /// [`recover_checkpoint`].
+    pub fn commit(&mut self, backend: &dyn TrainBackend, step: usize)
+                  -> Result<PathBuf> {
+        let name = format!("{}.step{step:08}.ckpt", self.label);
+        let path = self.dir.join(&name);
+        backend.save_checkpoint(&path)?;
+        io::commit_durable(&self.latest_path(), name.as_bytes())?;
+        self.ring.push_back(path.clone());
+        while self.ring.len() > self.keep {
+            if let Some(old) = self.ring.pop_front() {
+                let _ = std::fs::remove_file(old);
+            }
+        }
+        Ok(path)
+    }
+}
+
+/// Find the newest *valid* checkpoint for `label` in `dir`: try the
+/// `LATEST` pointer's target, then ring files newest-first, then
+/// `<label>.best.ckpt` and `<label>.final.ckpt`.  Each candidate is
+/// fully parsed (including the CRC trailer) before being returned;
+/// invalid ones — a torn write from a crashed save, a stale pointer —
+/// are logged and skipped.  `None` means nothing recoverable exists.
+pub fn recover_checkpoint(dir: &Path, label: &str) -> Option<PathBuf> {
+    let label = label.replace('/', "_");
+    let mut candidates: Vec<PathBuf> = Vec::new();
+    let pointer = dir.join(format!("{label}.LATEST"));
+    if let Ok(name) = std::fs::read_to_string(&pointer) {
+        let name = name.trim();
+        if !name.is_empty() && !name.contains(['/', '\\']) {
+            candidates.push(dir.join(name));
+        }
+    }
+    let mut ring: Vec<PathBuf> = Vec::new();
+    if let Ok(rd) = std::fs::read_dir(dir) {
+        let prefix = format!("{label}.step");
+        for entry in rd.flatten() {
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if name.starts_with(&prefix) && name.ends_with(".ckpt") {
+                ring.push(entry.path());
+            }
+        }
+    }
+    ring.sort();
+    candidates.extend(ring.into_iter().rev());
+    candidates.push(dir.join(format!("{label}.best.ckpt")));
+    candidates.push(dir.join(format!("{label}.final.ckpt")));
+    let mut seen = std::collections::HashSet::new();
+    for p in candidates {
+        if !seen.insert(p.clone()) || !p.is_file() {
+            continue;
+        }
+        match io::load(&p) {
+            Ok(_) => return Some(p),
+            Err(e) => log_warn!("skipping invalid checkpoint: {e:#}"),
+        }
+    }
+    None
+}
+
 /// Run `cfg.steps` optimizer steps against any [`TrainBackend`]: cosine
 /// (or constant) LR from `cfg`, EMA-smoothed logging, periodic evaluation
 /// with best-checkpoint saving, early stopping after `patience`
-/// non-improving evals (0 = never).
+/// non-improving evals (0 = never).  With `cfg.checkpoint_every > 0` a
+/// [`CheckpointRing`] additionally commits every N steps for crash
+/// recovery.  All checkpoint IO is best-effort: a failed save is logged
+/// and training continues.
 pub fn run_loop(backend: &mut dyn TrainBackend, cfg: &TrainConfig,
                 patience: usize, data: &mut dyn DataSource)
                 -> Result<TrainReport> {
@@ -66,6 +197,14 @@ pub fn run_loop(backend: &mut dyn TrainBackend, cfg: &TrainConfig,
     };
     let mut ema = Ema::new(0.1);
     let mut evals_since_best = 0usize;
+    let mut ring = match &cfg.checkpoint {
+        Some(dir) if cfg.checkpoint_every > 0 => {
+            std::fs::create_dir_all(dir)?;
+            Some(CheckpointRing::new(dir, backend.name(),
+                                     cfg.keep_checkpoints))
+        }
+        _ => None,
+    };
     let t0 = Instant::now();
 
     for step in 0..cfg.steps {
@@ -83,6 +222,15 @@ pub fn run_loop(backend: &mut dyn TrainBackend, cfg: &TrainConfig,
         }
         report.final_loss = m.loss;
 
+        if let Some(r) = ring.as_mut() {
+            if (step + 1) % cfg.checkpoint_every == 0 {
+                if let Err(e) = r.commit(&*backend, step + 1) {
+                    log_warn!("checkpoint commit at step {} failed \
+                               (training continues): {e:#}", step + 1);
+                }
+            }
+        }
+
         let do_eval = cfg.eval_every > 0 && backend.supports_eval()
             && ((step + 1) % cfg.eval_every == 0 || step + 1 == cfg.steps);
         if do_eval {
@@ -96,9 +244,15 @@ pub fn run_loop(backend: &mut dyn TrainBackend, cfg: &TrainConfig,
                 report.best_eval_step = step + 1;
                 evals_since_best = 0;
                 if let Some(dir) = &cfg.checkpoint {
-                    std::fs::create_dir_all(dir)?;
-                    backend.save_checkpoint(
-                        &dir.join(format!("{}.best.ckpt", backend.name())))?;
+                    let p = dir.join(format!("{}.best.ckpt",
+                                             backend.name()));
+                    let saved = std::fs::create_dir_all(dir)
+                        .map_err(anyhow::Error::from)
+                        .and_then(|()| backend.save_checkpoint(&p));
+                    if let Err(e) = saved {
+                        log_warn!("best-checkpoint save failed (training \
+                                   continues): {e:#}");
+                    }
                 }
             } else {
                 evals_since_best += 1;
@@ -117,9 +271,13 @@ pub fn run_loop(backend: &mut dyn TrainBackend, cfg: &TrainConfig,
     report.steps_per_sec =
         report.steps_run as f64 / t0.elapsed().as_secs_f64();
     if let Some(dir) = &cfg.checkpoint {
-        std::fs::create_dir_all(dir)?;
-        backend.save_checkpoint(
-            &dir.join(format!("{}.final.ckpt", backend.name())))?;
+        let p = dir.join(format!("{}.final.ckpt", backend.name()));
+        let saved = std::fs::create_dir_all(dir)
+            .map_err(anyhow::Error::from)
+            .and_then(|()| backend.save_checkpoint(&p));
+        if let Err(e) = saved {
+            log_warn!("final-checkpoint save failed: {e:#}");
+        }
     }
     Ok(report)
 }
@@ -168,5 +326,99 @@ impl<'m, 'rt> Trainer<'m, 'rt> {
                     rng: &mut Rng) -> Result<EvalMetrics> {
         let backend = PjrtTrain { model: self.model, state };
         evaluate(&backend, &self.cfg, data, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::StepMetrics;
+    use crate::util::io::NamedTensor;
+
+    /// Minimal [`TrainBackend`] whose checkpoints are tiny valid MRNN
+    /// files — just enough to exercise the ring and recovery.
+    struct StubBackend;
+
+    impl TrainBackend for StubBackend {
+        fn name(&self) -> &str {
+            "stub"
+        }
+        fn train_step(&mut self, _: &Batch, _: f32, _: i32)
+                      -> Result<StepMetrics> {
+            unreachable!("ring tests never step")
+        }
+        fn supports_eval(&self) -> bool {
+            false
+        }
+        fn eval(&self, _: &Batch) -> Result<EvalMetrics> {
+            unreachable!("ring tests never eval")
+        }
+        fn save_checkpoint(&self, path: &Path) -> Result<()> {
+            io::save(path, &[NamedTensor::i32("step", vec![], vec![1])])
+        }
+    }
+
+    fn fresh_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("minrnn_ring_{tag}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn ring_prunes_to_keep_and_tracks_latest() {
+        let dir = fresh_dir("prune");
+        let mut ring = CheckpointRing::new(&dir, "stub", 2);
+        for step in [10usize, 20, 30] {
+            ring.commit(&StubBackend, step).unwrap();
+        }
+        assert_eq!(ring.len(), 2);
+        assert!(!dir.join("stub.step00000010.ckpt").exists(),
+                "oldest ring entry must be pruned");
+        assert!(dir.join("stub.step00000020.ckpt").exists());
+        assert!(dir.join("stub.step00000030.ckpt").exists());
+        let latest = std::fs::read_to_string(dir.join("stub.LATEST"))
+            .unwrap();
+        assert_eq!(latest.trim(), "stub.step00000030.ckpt");
+        // a new ring over the same dir adopts the survivors
+        let adopted = CheckpointRing::new(&dir, "stub", 2);
+        assert_eq!(adopted.len(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn recovery_skips_corrupt_and_falls_back_newest_first() {
+        let dir = fresh_dir("recover");
+        let mut ring = CheckpointRing::new(&dir, "stub", 3);
+        ring.commit(&StubBackend, 10).unwrap();
+        ring.commit(&StubBackend, 20).unwrap();
+        // LATEST points at step 20; corrupt it as a torn write would
+        let newest = dir.join("stub.step00000020.ckpt");
+        let mut bytes = std::fs::read(&newest).unwrap();
+        let n = bytes.len();
+        bytes.truncate(n - 3);
+        std::fs::write(&newest, &bytes).unwrap();
+        let got = recover_checkpoint(&dir, "stub").unwrap();
+        assert_eq!(got, dir.join("stub.step00000010.ckpt"),
+                   "recovery must fall back to the newest valid file");
+        // nothing valid at all -> None
+        let empty = fresh_dir("recover_empty");
+        assert!(recover_checkpoint(&empty, "stub").is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_dir_all(&empty);
+    }
+
+    #[test]
+    fn recovery_prefers_ring_over_best_and_final() {
+        let dir = fresh_dir("prefer");
+        StubBackend.save_checkpoint(&dir.join("stub.best.ckpt")).unwrap();
+        StubBackend.save_checkpoint(&dir.join("stub.final.ckpt")).unwrap();
+        assert_eq!(recover_checkpoint(&dir, "stub").unwrap(),
+                   dir.join("stub.best.ckpt"));
+        let mut ring = CheckpointRing::new(&dir, "stub", 2);
+        ring.commit(&StubBackend, 5).unwrap();
+        assert_eq!(recover_checkpoint(&dir, "stub").unwrap(),
+                   dir.join("stub.step00000005.ckpt"));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

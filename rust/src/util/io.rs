@@ -1,19 +1,57 @@
-//! Binary checkpoint format (NPZ-like, little-endian, self-describing).
+//! Binary checkpoint format (NPZ-like, little-endian, self-describing)
+//! with crash-safe durability.
 //!
 //!   magic "MRNN" | version u32 | n_tensors u32
 //!   per tensor: name_len u32 | name utf-8 | dtype u8 (0=f32, 1=i32)
 //!               | ndim u32 | dims u32[ndim] | raw data
+//!   trailer (version >= 2): crc32 u32 over everything before it
 //!
 //! Used for parameter/optimizer checkpoints and dataset caches.
+//!
+//! **Durability.**  [`save`] goes through [`commit_durable`]: the payload
+//! is written to `<path>.tmp`, the file is fsynced, renamed over `path`,
+//! and the parent directory is fsynced — rename alone survives a process
+//! crash but not power loss, because neither the data nor the directory
+//! entry is guaranteed on stable storage until both fsyncs land.  The
+//! CRC32 trailer catches the remaining hazard: a torn write that
+//! published a truncated or bit-rotted file.  [`load`] reports the three
+//! failure classes distinctly, always naming the offending path:
+//! *truncated* (file ends mid-record), *corrupt* (CRC mismatch or an
+//! impossible field), and *version mismatch*.  Version-1 files
+//! (pre-trailer) remain readable.
+//!
+//! Every durable-commit step is a fault-injection site
+//! ([`crate::util::faults`]): `io_write`, `io_short` (tears the file),
+//! `io_fsync`, `io_rename` — `rust/tests/fault_props.rs` crashes a save
+//! at each and proves recovery finds a valid checkpoint.
 
 use std::fs::File;
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::io::Write;
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::util::faults::{self, Site};
+
 pub const MAGIC: &[u8; 4] = b"MRNN";
-pub const VERSION: u32 = 1;
+/// Version 2 appends the CRC32 trailer; version-1 files are still read
+/// (no trailer to verify).
+pub const VERSION: u32 = 2;
+
+/// CRC-32 (IEEE 802.3, reflected polynomial 0xEDB88320) — the trailer
+/// checksum for torn-write detection.  Bitwise implementation: checkpoint
+/// payloads are at most a few MB, far below where a table would matter.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum TensorData {
@@ -69,98 +107,183 @@ impl NamedTensor {
     }
 }
 
-pub fn save(path: &Path, tensors: &[NamedTensor]) -> Result<()> {
+/// Durably commit `payload` to `path`: write `<path>.tmp`, fsync the
+/// file, rename over `path`, fsync the parent directory.  This is the
+/// shared commit primitive for every on-disk format (MRNN checkpoints,
+/// MRSC session caches, `LATEST` pointers); all four IO fault sites live
+/// here, so chaos coverage of this one function covers every format.
+pub fn commit_durable(path: &Path, payload: &[u8]) -> Result<()> {
     let tmp = path.with_extension("tmp");
-    {
-        let mut w = BufWriter::new(File::create(&tmp)
-            .with_context(|| format!("create {}", tmp.display()))?);
-        w.write_all(MAGIC)?;
-        w.write_all(&VERSION.to_le_bytes())?;
-        w.write_all(&(tensors.len() as u32).to_le_bytes())?;
-        for t in tensors {
-            let nb = t.name.as_bytes();
-            w.write_all(&(nb.len() as u32).to_le_bytes())?;
-            w.write_all(nb)?;
-            match &t.data {
-                TensorData::F32(_) => w.write_all(&[0u8])?,
-                TensorData::I32(_) => w.write_all(&[1u8])?,
-            }
-            w.write_all(&(t.dims.len() as u32).to_le_bytes())?;
-            for &d in &t.dims {
-                w.write_all(&(d as u32).to_le_bytes())?;
-            }
-            match &t.data {
-                TensorData::F32(v) => {
-                    for x in v {
-                        w.write_all(&x.to_le_bytes())?;
-                    }
-                }
-                TensorData::I32(v) => {
-                    for x in v {
-                        w.write_all(&x.to_le_bytes())?;
-                    }
-                }
-            }
-        }
-        w.flush()?;
+    if let Some(e) = faults::io_error(Site::IoWrite) {
+        return Err(e).with_context(|| format!("write {}", tmp.display()));
     }
-    std::fs::rename(&tmp, path)?;
+    let mut f = File::create(&tmp)
+        .with_context(|| format!("create {}", tmp.display()))?;
+    if faults::io_error(Site::IoShort).is_some() {
+        // simulate the torn-write hazard end to end: publish a truncated
+        // file at the *final* path (as if power failed after the rename
+        // but before the data reached stable storage), then report the
+        // failure.  Recovery must detect the tear via the CRC trailer.
+        f.write_all(&payload[..payload.len() / 2])?;
+        let _ = f.sync_all();
+        drop(f);
+        std::fs::rename(&tmp, path)?;
+        bail!("injected short write: committed {} of {} bytes to {}",
+              payload.len() / 2, payload.len(), path.display());
+    }
+    f.write_all(payload)
+        .with_context(|| format!("write {}", tmp.display()))?;
+    if let Some(e) = faults::io_error(Site::IoFsync) {
+        return Err(e).with_context(|| format!("fsync {}", tmp.display()));
+    }
+    f.sync_all().with_context(|| format!("fsync {}", tmp.display()))?;
+    drop(f);
+    if let Some(e) = faults::io_error(Site::IoRename) {
+        return Err(e).with_context(|| format!(
+            "rename {} -> {}", tmp.display(), path.display()));
+    }
+    std::fs::rename(&tmp, path).with_context(|| format!(
+        "rename {} -> {}", tmp.display(), path.display()))?;
+    // the rename is only durable once the directory entry is: fsync the
+    // parent.  Directories that cannot be opened for sync (exotic
+    // filesystems) degrade to the rename-only guarantee.
+    if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+        if let Ok(d) = File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
     Ok(())
 }
 
-fn read_u32(r: &mut impl Read) -> Result<u32> {
-    let mut b = [0u8; 4];
-    r.read_exact(&mut b)?;
-    Ok(u32::from_le_bytes(b))
+pub fn save(path: &Path, tensors: &[NamedTensor]) -> Result<()> {
+    let mut buf: Vec<u8> = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&VERSION.to_le_bytes());
+    buf.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+    for t in tensors {
+        let nb = t.name.as_bytes();
+        buf.extend_from_slice(&(nb.len() as u32).to_le_bytes());
+        buf.extend_from_slice(nb);
+        match &t.data {
+            TensorData::F32(_) => buf.push(0u8),
+            TensorData::I32(_) => buf.push(1u8),
+        }
+        buf.extend_from_slice(&(t.dims.len() as u32).to_le_bytes());
+        for &d in &t.dims {
+            buf.extend_from_slice(&(d as u32).to_le_bytes());
+        }
+        match &t.data {
+            TensorData::F32(v) => {
+                for x in v {
+                    buf.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            TensorData::I32(v) => {
+                for x in v {
+                    buf.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+    }
+    let crc = crc32(&buf);
+    buf.extend_from_slice(&crc.to_le_bytes());
+    commit_durable(path, &buf)
+}
+
+/// In-memory parse cursor that classifies running off the end as
+/// *truncation* (distinct from corrupt-field errors), naming the path
+/// and offset.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    off: usize,
+    path: &'a Path,
+    what: &'static str,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.buf.len() - self.off {
+            bail!("{}: truncated {} (needed {n} bytes at offset {}, only \
+                   {} remain)",
+                  self.path.display(), self.what, self.off,
+                  self.buf.len() - self.off);
+        }
+        let s = &self.buf[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
 }
 
 pub fn load(path: &Path) -> Result<Vec<NamedTensor>> {
-    let mut r = BufReader::new(File::open(path)
-        .with_context(|| format!("open {}", path.display()))?);
-    let mut magic = [0u8; 4];
-    r.read_exact(&mut magic)?;
-    if &magic != MAGIC {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    if bytes.len() < 12 {
+        bail!("{}: truncated checkpoint ({} bytes is shorter than the \
+               header)", path.display(), bytes.len());
+    }
+    if &bytes[..4] != MAGIC {
         bail!("{}: not a MRNN checkpoint", path.display());
     }
-    let version = read_u32(&mut r)?;
-    if version != VERSION {
-        bail!("{}: unsupported checkpoint version {version}", path.display());
-    }
-    let n = read_u32(&mut r)? as usize;
-    let mut out = Vec::with_capacity(n);
-    for _ in 0..n {
-        let name_len = read_u32(&mut r)? as usize;
-        if name_len > 1 << 20 {
-            bail!("corrupt checkpoint: name length {name_len}");
+    let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    let body: &[u8] = match version {
+        1 => &bytes[8..],
+        VERSION => {
+            let (payload, trailer) = bytes.split_at(bytes.len() - 4);
+            let want = u32::from_le_bytes(trailer.try_into().unwrap());
+            let got = crc32(payload);
+            if want != got {
+                bail!("{}: corrupt checkpoint (CRC mismatch: trailer \
+                       {want:08x}, computed {got:08x} — torn or \
+                       bit-rotted write)", path.display());
+            }
+            &payload[8..]
         }
-        let mut name_bytes = vec![0u8; name_len];
-        r.read_exact(&mut name_bytes)?;
-        let name = String::from_utf8(name_bytes)
-            .context("checkpoint name not utf-8")?;
-        let mut dtype = [0u8; 1];
-        r.read_exact(&mut dtype)?;
-        let ndim = read_u32(&mut r)? as usize;
+        v => bail!("{}: checkpoint version mismatch (file is v{v}, this \
+                    reader supports v1..=v{VERSION})", path.display()),
+    };
+    let mut r = Cursor { buf: body, off: 0, path, what: "checkpoint" };
+    let n = r.u32()? as usize;
+    let mut out = Vec::with_capacity(n.min(1 << 16));
+    for _ in 0..n {
+        let name_len = r.u32()? as usize;
+        if name_len > 1 << 20 {
+            bail!("{}: corrupt checkpoint: name length {name_len}",
+                  path.display());
+        }
+        let name = String::from_utf8(r.take(name_len)?.to_vec())
+            .with_context(|| format!("{}: corrupt checkpoint: name not \
+                                      utf-8", path.display()))?;
+        let dtype = r.u8()?;
+        let ndim = r.u32()? as usize;
         if ndim > 16 {
-            bail!("corrupt checkpoint: ndim {ndim}");
+            bail!("{}: corrupt checkpoint: ndim {ndim}", path.display());
         }
         let mut dims = Vec::with_capacity(ndim);
         for _ in 0..ndim {
-            dims.push(read_u32(&mut r)? as usize);
+            dims.push(r.u32()? as usize);
         }
         let count: usize = dims.iter().product();
         if count > 1 << 30 {
-            bail!("corrupt checkpoint: element count {count}");
+            bail!("{}: corrupt checkpoint: element count {count}",
+                  path.display());
         }
-        let mut raw = vec![0u8; count * 4];
-        r.read_exact(&mut raw)?;
-        let data = match dtype[0] {
+        let raw = r.take(count * 4)?;
+        let data = match dtype {
             0 => TensorData::F32(raw.chunks_exact(4)
                 .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
                 .collect()),
             1 => TensorData::I32(raw.chunks_exact(4)
                 .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
                 .collect()),
-            d => bail!("corrupt checkpoint: dtype {d}"),
+            d => bail!("{}: corrupt checkpoint: dtype {d}", path.display()),
         };
         out.push(NamedTensor { name, dims, data });
     }
@@ -192,21 +315,102 @@ mod tests {
         let dir = std::env::temp_dir().join("minrnn_io_test2");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("bad.bin");
-        std::fs::write(&path, b"NOPE....").unwrap();
-        assert!(load(&path).is_err());
+        std::fs::write(&path, b"NOPE....12345678").unwrap();
+        let msg = format!("{:#}", load(&path).unwrap_err());
+        assert!(msg.contains("not a MRNN checkpoint") && msg.contains("bad"),
+                "unhelpful error: {msg}");
         std::fs::remove_file(&path).unwrap();
     }
 
     #[test]
-    fn rejects_truncated() {
+    fn rejects_truncated_as_truncated() {
         let dir = std::env::temp_dir().join("minrnn_io_test3");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("trunc.bin");
         let tensors = vec![NamedTensor::f32("w", vec![4], vec![1.; 4])];
         save(&path, &tensors).unwrap();
         let bytes = std::fs::read(&path).unwrap();
+        // cutting the tail leaves a v2 file whose CRC no longer matches:
+        // exactly the torn-write signature
         std::fs::write(&path, &bytes[..bytes.len() - 5]).unwrap();
-        assert!(load(&path).is_err());
+        let msg = format!("{:#}", load(&path).unwrap_err());
+        assert!(msg.contains("corrupt") && msg.contains("CRC"),
+                "torn file should fail the CRC check: {msg}");
+        // a v1 file (no trailer) that ends mid-record reports truncation
+        let mut v1 = bytes[..bytes.len() - 4].to_vec();
+        v1[4..8].copy_from_slice(&1u32.to_le_bytes());
+        std::fs::write(&path, &v1[..v1.len() - 5]).unwrap();
+        let msg = format!("{:#}", load(&path).unwrap_err());
+        assert!(msg.contains("truncated"),
+                "v1 short read should say truncated: {msg}");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn crc_catches_a_flipped_byte() {
+        let dir = std::env::temp_dir().join("minrnn_io_test4");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rot.bin");
+        save(&path, &[NamedTensor::f32("w", vec![8], vec![0.5; 8])])
+            .unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let msg = format!("{:#}", load(&path).unwrap_err());
+        assert!(msg.contains("corrupt") && msg.contains("CRC"),
+                "bit rot must be caught by the trailer: {msg}");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn version_mismatch_is_reported_distinctly() {
+        let dir = std::env::temp_dir().join("minrnn_io_test5");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("future.bin");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&99u32.to_le_bytes());
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let msg = format!("{:#}", load(&path).unwrap_err());
+        assert!(msg.contains("version mismatch") && msg.contains("v99"),
+                "unhelpful error: {msg}");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn legacy_v1_files_still_load() {
+        // a v1 writer: the old format body with version 1 and no trailer
+        let dir = std::env::temp_dir().join("minrnn_io_test6");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("v1.bin");
+        let tensors = vec![NamedTensor::i32("step", vec![], vec![17])];
+        save(&path, &tensors).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let mut v1 = bytes[..bytes.len() - 4].to_vec();
+        v1[4..8].copy_from_slice(&1u32.to_le_bytes());
+        std::fs::write(&path, &v1).unwrap();
+        assert_eq!(load(&path).unwrap(), tensors);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // IEEE CRC-32 check value for "123456789"
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn commit_durable_leaves_no_tmp_behind() {
+        let dir = std::env::temp_dir().join("minrnn_io_test7");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("blob.bin");
+        commit_durable(&path, b"hello durable world").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"hello durable world");
+        assert!(!path.with_extension("tmp").exists(),
+                "tmp must be renamed away");
         std::fs::remove_file(&path).unwrap();
     }
 }

@@ -4,6 +4,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod faults;
 pub mod io;
 pub mod json;
 pub mod logging;

@@ -1,0 +1,290 @@
+//! Chaos properties of the fault-injection + recovery stack
+//! (`util::faults`, `util::io::commit_durable`, the trainer's checkpoint
+//! ring, and the scheduler's self-healing):
+//!
+//! * **crash-at-every-IO-fault-index** — for every IO fault site and
+//!   every occurrence index a training run consults it at, injecting a
+//!   one-shot failure there still leaves a checkpoint that
+//!   `recover_checkpoint` can find, load, and resume training from.
+//!   This includes torn writes published to the final path (`IoShort`),
+//!   which only the CRC trailer can catch.
+//! * **poisoned-request isolation** — an injected decode panic is
+//!   retried via requeue-and-replay, and the surviving greedy output is
+//!   bit-identical to a fault-free run at 1, 2, and 7 threads (the
+//!   firing schedule is a pure function of `(seed, site, occurrence)`,
+//!   and greedy decode is batch-composition invariant).
+//! * **quarantine** — a request whose decode *always* fails exhausts its
+//!   retry budget and fails alone, without hanging the drain or losing
+//!   accounting (`submitted == responses + expired + failed`).
+//! * **zero overhead off** — with faults disabled, a serve run leaves
+//!   every occurrence counter at zero and reports `Healthy`.
+//!
+//! The fault plan and its counters are process-global, so every test
+//! here serializes on one lock and clears the plan before returning.
+
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use minrnn::backend::{NativeBackend, NativeInit, NativeModel, NativeTrainer};
+use minrnn::config::{Schedule, TrainConfig};
+use minrnn::coordinator::infer;
+use minrnn::coordinator::scheduler::{Backpressure, Scheduler, SchedulerOpts};
+use minrnn::coordinator::server::{Health, Request, ServeOpts, ServeStats};
+use minrnn::coordinator::trainer::{recover_checkpoint, run_loop, FnSource};
+use minrnn::tensor::{Batch, Tensor};
+use minrnn::util::faults::{self, FaultPlan, Rule, Site};
+use minrnn::util::rng::Rng;
+use minrnn::util::threads;
+
+// Serialize every test in this binary: the plan and occurrence counters
+// are process-global.  Recover from poisoning — an injected panic that
+// crosses a test's unwind must not cascade into the remaining tests.
+static FAULT_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    FAULT_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+// ---------------------------------------------------------------------------
+// tiny training workload (echo task, see train_props.rs)
+// ---------------------------------------------------------------------------
+
+const VOCAB: usize = 10;
+const LABEL: &str = "fault-echo";
+
+fn echo_batch(rng: &mut Rng, b: usize, t: usize) -> Batch {
+    let x: Vec<i32> = (0..b * t).map(|_| rng.below(VOCAB as u64) as i32)
+        .collect();
+    Batch {
+        targets: Tensor::i32(vec![b, t], x.clone()),
+        x: Tensor::i32(vec![b, t], x),
+        mask: Tensor::f32(vec![b, t], vec![1.0; b * t]),
+    }
+}
+
+fn fresh_trainer(seed: u64) -> NativeTrainer {
+    NativeTrainer::new(NativeModel::init_random(&NativeInit {
+        kind: "mingru".to_string(),
+        n_layers: 1,
+        d_model: 8,
+        vocab_in: Some(VOCAB),
+        vocab_out: VOCAB,
+        ..Default::default()
+    }, seed).unwrap(), LABEL)
+}
+
+/// One short checkpointing training run into `dir`: 4 steps, a ring
+/// commit every step, ring depth 2 — several `commit_durable` calls per
+/// IO site (step saves, LATEST pointer writes, the final save).
+fn run_train(dir: &Path) -> anyhow::Result<f32> {
+    let mut nt = fresh_trainer(21);
+    let cfg = TrainConfig {
+        steps: 4,
+        lr: 5e-3,
+        schedule: Schedule::Constant,
+        seed: 3,
+        log_every: 1000, // keep test output quiet
+        checkpoint: Some(dir.to_path_buf()),
+        checkpoint_every: 1,
+        keep_checkpoints: 2,
+        ..Default::default()
+    };
+    let mut data = FnSource { f: |rng: &mut Rng| echo_batch(rng, 2, 6) };
+    let report = run_loop(&mut nt, &cfg, 0, &mut data)?;
+    Ok(report.final_loss)
+}
+
+const IO_SITES: [Site; 4] =
+    [Site::IoWrite, Site::IoShort, Site::IoFsync, Site::IoRename];
+
+#[test]
+fn prop_crash_at_every_io_fault_index_leaves_a_recoverable_checkpoint() {
+    let _g = lock();
+    let base = std::env::temp_dir().join("minrnn_fault_props_io");
+    let _ = std::fs::remove_dir_all(&base);
+
+    // probe: an installed plan with all-default rules fires nothing but
+    // counts how often each IO site is consulted by one training run
+    faults::install(FaultPlan::default());
+    run_train(&base.join("probe")).unwrap();
+    let counts: Vec<(Site, u64)> =
+        IO_SITES.iter().map(|&s| (s, faults::occurrences(s))).collect();
+    faults::clear();
+
+    for &(site, n) in &counts {
+        assert!(n >= 4,
+                "probe run consulted {} only {n} times — the sweep below \
+                 would not mean much", site.name());
+        for idx in 0..n {
+            let dir = base.join(format!("{}_{idx}", site.name()));
+            faults::install(FaultPlan::one_shot(site, idx));
+            // checkpoint IO failures are non-fatal: training completes
+            let loss = run_train(&dir).unwrap_or_else(|e| panic!(
+                "{} fault @{idx} killed the training run: {e:#}",
+                site.name()));
+            assert!(loss.is_finite());
+            faults::clear();
+
+            // recovery must skip whatever the fault tore and land on a
+            // checkpoint that still validates and resumes
+            let ckpt: PathBuf = recover_checkpoint(&dir, LABEL)
+                .unwrap_or_else(|| panic!(
+                    "no recoverable checkpoint in {} after {} fault @{idx}",
+                    dir.display(), site.name()));
+            let mut nt = NativeTrainer::from_checkpoint(&ckpt, LABEL)
+                .unwrap_or_else(|e| panic!(
+                    "recovered checkpoint {} does not load: {e:#}",
+                    ckpt.display()));
+            let cfg = TrainConfig {
+                steps: 1,
+                schedule: Schedule::Constant,
+                log_every: 1000,
+                ..Default::default()
+            };
+            let mut data =
+                FnSource { f: |rng: &mut Rng| echo_batch(rng, 2, 6) };
+            let report = run_loop(&mut nt, &cfg, 0, &mut data).unwrap();
+            assert!(report.final_loss.is_finite(),
+                    "resumed step after {} fault @{idx} diverged",
+                    site.name());
+        }
+    }
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+// ---------------------------------------------------------------------------
+// serving under injected decode faults
+// ---------------------------------------------------------------------------
+
+fn serving_backend(seed: u64) -> NativeBackend {
+    NativeBackend::new(NativeModel::init_random(&NativeInit {
+        kind: "mingru".to_string(),
+        n_layers: 1,
+        d_model: 16,
+        vocab_in: Some(24),
+        vocab_out: 24,
+        ..Default::default()
+    }, seed).unwrap())
+}
+
+fn serve_requests() -> Vec<Request> {
+    (0..4).map(|i| Request {
+        id: i,
+        prompt: vec![1 + i as i32, 2, 3],
+        n_tokens: 5,
+        session: None,
+    }).collect()
+}
+
+fn greedy_serve(backend: &NativeBackend) -> ServeStats {
+    let (mut sched, handle) = Scheduler::new(backend, SchedulerOpts {
+        serve: ServeOpts { temperature: 0.0, seed: 0, max_batch: 4 },
+        queue_depth: 8,
+        backpressure: Backpressure::Block,
+        default_deadline: None,
+        lanes: Some(4),
+        ..Default::default()
+    }).unwrap();
+    for r in serve_requests() {
+        handle.submit(r).unwrap();
+    }
+    handle.close();
+    sched.run().unwrap()
+}
+
+#[test]
+fn prop_injected_decode_panic_replays_bit_identically_across_threads() {
+    let _g = lock();
+    faults::clear();
+    let backend = serving_backend(0xBEEF);
+    // fault-free greedy oracle, one request at a time
+    let want: Vec<Vec<i32>> = serve_requests().iter().map(|r| {
+        infer::generate(&backend, &r.prompt, r.n_tokens, 0.0,
+                        &mut Rng::new(0)).unwrap()
+    }).collect();
+
+    let prev = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {})); // injected panics are expected
+    let pool = threads::global();
+    let before = pool.active();
+    for &n in &[1usize, 2, 7] {
+        pool.set_active(n);
+        // the second lockstep decode step of the run panics, once;
+        // install() resets the counters so the schedule is identical at
+        // every thread count
+        faults::install(FaultPlan::one_shot(Site::Decode, 1));
+        let stats = greedy_serve(&backend);
+        faults::clear();
+        assert!(stats.retries > 0,
+                "{n} threads: the injected panic must be retried");
+        assert!(stats.failed.is_empty(),
+                "{n} threads: a transient fault must not fail requests");
+        assert_eq!(stats.health, Health::Degraded);
+        let mut got: Vec<_> = stats.responses.iter().collect();
+        got.sort_by_key(|r| r.id);
+        assert_eq!(got.len(), 4, "{n} threads: all requests served");
+        for (r, w) in got.iter().zip(&want) {
+            assert_eq!(&r.tokens, w,
+                       "{n} threads: request {} diverged after replay",
+                       r.id);
+        }
+    }
+    pool.set_active(before);
+    std::panic::set_hook(prev);
+}
+
+#[test]
+fn prop_perpetual_decode_faults_quarantine_without_hanging_the_drain() {
+    let _g = lock();
+    let backend = serving_backend(0xD00D);
+    let prev = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+    // every decode step panics: every request burns its retry budget,
+    // including the quarantined single-lane attempts
+    faults::install(FaultPlan::default()
+        .with(Site::Decode, Rule { rate: 1.0, one_shot: None }));
+    let stats = greedy_serve(&backend);
+    faults::clear();
+    std::panic::set_hook(prev);
+
+    assert!(stats.responses.is_empty());
+    let mut failed = stats.failed.clone();
+    failed.sort_unstable();
+    assert_eq!(failed, vec![0, 1, 2, 3],
+               "every request fails alone, none is lost");
+    assert_eq!(stats.health, Health::Degraded);
+    // drain accounting holds even when everything failed
+    assert_eq!(stats.submitted,
+               stats.responses.len() + stats.expired.len()
+                   + stats.failed.len());
+}
+
+#[test]
+fn injected_latency_spike_slows_but_does_not_degrade() {
+    let _g = lock();
+    let backend = serving_backend(3);
+    let mut plan = FaultPlan::one_shot(Site::Latency, 0);
+    plan.latency = std::time::Duration::from_millis(1);
+    faults::install(plan);
+    let stats = greedy_serve(&backend);
+    faults::clear();
+    assert_eq!(stats.responses.len(), 4);
+    assert_eq!(stats.health, Health::Healthy,
+               "latency is not a failure; health must stay Healthy");
+}
+
+#[test]
+fn faults_disabled_leave_counters_untouched_and_serving_healthy() {
+    let _g = lock();
+    faults::clear();
+    let backend = serving_backend(7);
+    let stats = greedy_serve(&backend);
+    assert_eq!(stats.responses.len(), 4);
+    assert_eq!(stats.health, Health::Healthy);
+    assert_eq!(stats.retries, 0);
+    for s in Site::ALL {
+        assert_eq!(faults::occurrences(s), 0,
+                   "disabled faults must not even count occurrences \
+                    ({} moved)", s.name());
+    }
+}

@@ -95,6 +95,7 @@ fn prop_async_greedy_matches_sequential_across_queue_depths() {
             backpressure: Backpressure::Reject,
             default_deadline: None,
             lanes: Some(3),
+            ..Default::default()
         }).unwrap();
 
         // randomized arrival order...
@@ -158,6 +159,7 @@ fn late_submission_completes_without_restarting_the_batch() {
         backpressure: Backpressure::Block,
         default_deadline: None,
         lanes: Some(2),
+        ..Default::default()
     }).unwrap();
 
     handle.submit(a).unwrap();
@@ -201,6 +203,7 @@ fn drain_on_shutdown_loses_and_duplicates_nothing() {
         backpressure: Backpressure::Block,
         default_deadline: None,
         lanes: Some(2),
+        ..Default::default()
     }).unwrap();
 
     let n = 17usize;
@@ -284,6 +287,7 @@ fn fallback_without_lane_reset_still_serves_everything() {
         backpressure: Backpressure::Block,
         default_deadline: None,
         lanes: None,
+        ..Default::default()
     }).unwrap();
     for req in requests.iter().cloned() {
         handle.submit(req).unwrap();
@@ -316,6 +320,7 @@ fn deadline_elapsing_mid_decode_expires_at_next_admission_pass() {
         backpressure: Backpressure::Block,
         default_deadline: None,
         lanes: Some(1),
+        ..Default::default()
     }).unwrap();
 
     // request 0 occupies the only lane for a long decode
