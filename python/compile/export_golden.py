@@ -196,6 +196,27 @@ def main() -> None:
     x2 = jax.random.normal(k6, (2, 5, 4), jnp.float32)
     dump(out, "backbone_minlstm.json", backbone_case(k7, cfg2, x2, False))
 
+    # The two native comparison-matrix mixers draw from a separate master
+    # key so every file above stays byte-identical across regenerations.
+    key8 = jax.random.PRNGKey(20260808)
+    k8a, k8b, k8c, k8d = jax.random.split(key8, 4)
+
+    # S6-lite selective scan (input-dependent decay), discrete tokens
+    cfg3 = dict(kind="s6", n_layers=2, d_model=8, expansion=2,
+                vocab_in=11, vocab_out=11, conv=False, mlp=False,
+                dropout=0.0, max_len=16)
+    x3 = jax.random.randint(k8a, (2, 6), 0, 11, jnp.int32)
+    dump(out, "backbone_s6lite.json", backbone_case(k8b, cfg3, x3, True))
+
+    # causal transformer: learned positions + KV cache; T <= max_len so
+    # the native sliding-window ring never diverges from the JAX cache
+    cfg4 = dict(kind="transformer", n_layers=2, d_model=8, n_heads=4,
+                vocab_in=11, vocab_out=11, conv=False, mlp=False,
+                dropout=0.0, max_len=16)
+    x4 = jax.random.randint(k8c, (2, 6), 0, 11, jnp.int32)
+    dump(out, "backbone_transformer.json",
+         backbone_case(k8d, cfg4, x4, True))
+
 
 if __name__ == "__main__":
     main()

@@ -21,8 +21,8 @@ use crate::runtime::backend::SessionState;
 use crate::runtime::Backend;
 use crate::tensor::Tensor;
 
-pub use native::{Head, NativeInit, NativeModel, NativeScratch,
-                 NativeState, NativeTrainer};
+pub use native::{kinds_help, Head, Mixer, NativeInit, NativeModel,
+                 NativeScratch, NativeState, NativeTrainer, MIXER_KINDS};
 
 /// Native CPU backend: owns the model parameters, serves any batch size.
 pub struct NativeBackend {

@@ -18,11 +18,17 @@
 //!   the same fixed task granularity as the forward kernels, so gradients
 //!   are bit-for-bit identical across thread counts.
 //!
+//! Mixer-specific math lives behind [`super::mixer::Mixer`]'s
+//! `forward_tape`/`backward` hooks — this module owns the backbone
+//! plumbing (norms, conv, MLP, dropout, residuals, input/positional
+//! layers) plus the shared primitive VJPs the mixers call back into
+//! ([`dense_bwd`], [`scan_gate_bwd`]).
+//!
 //! Gradients accumulate into a [`NativeModel`]-shaped container
 //! ([`NativeModel::zeros_like`]); `backend::native::adam` consumes them
 //! leaf-by-leaf.  Correctness is pinned by finite-difference checks in
-//! `rust/tests/train_props.rs` (every leaf, both mixers, conv/MLP on and
-//! off).
+//! `rust/tests/train_props.rs` (every leaf, every mixer kind, conv/MLP
+//! on and off).
 
 use anyhow::{bail, Result};
 
@@ -30,10 +36,11 @@ use crate::tensor::{Tensor, TensorData};
 use crate::util::rng::splitmix64;
 use crate::util::threads::{self, SlicePtr, ThreadPool};
 
-use super::linalg::{self, g, g_grad, gelu, gelu_grad, log_g, sigmoid, silu,
+use super::linalg::{self, g, g_grad, gelu, gelu_grad, sigmoid, silu,
                     silu_grad, softplus, Dense};
 use super::mingru::{GATE_CHUNK, H0_VALUE};
-use super::model::{InputLayer, MixerParams, NativeModel};
+use super::mixer::{Mixer, MixerTape};
+use super::model::{InputLayer, NativeModel};
 use super::scan;
 
 /// Rows per parallel task in the backward GEMMs (mirrors the forward
@@ -61,14 +68,8 @@ pub struct BlockTape {
     pub conv_pre: Option<Vec<f32>>,
     /// Mixer input — conv output when conv is present, else `u1`.
     pub mixer_in: Vec<f32>,
-    /// Gate pre-activations: `linear_z` (minGRU) / `linear_i` (minLSTM).
-    pub k: Vec<f32>,
-    /// Candidate pre-activations (`linear_h`), `(B·T, d_h)`.
-    pub pre: Vec<f32>,
-    /// Forget pre-activations (`linear_f`, minLSTM only).
-    pub f: Option<Vec<f32>>,
-    /// Scanned hidden-state sequence, `(B, T, d_h)`.
-    pub h: Vec<f32>,
+    /// Mixer-kind-specific activations ([`Mixer::forward_tape`]).
+    pub mixer: MixerTape,
     /// Residual after the mixer (RMSNorm 2 input; MLP blocks only).
     pub h_mid: Option<Vec<f32>>,
     /// RMSNorm 2 output (MLP blocks only).
@@ -216,6 +217,20 @@ pub fn forward_train(model: &NativeModel, x: &Tensor, drop_rate: f32,
     let d = model.d_model;
     let mut h = Vec::new();
     model.embed_rows_into(x, rows, &mut h)?;
+    // learned absolute positions (transformer backbones): row `min(t,
+    // L-1)` added to every lane, matching the clamped decode lookup
+    if let Some(pe) = &model.pos {
+        for bi in 0..batch {
+            for ti in 0..t {
+                let row = ti.min(pe.vocab - 1);
+                let prow = &pe.w[row * d..(row + 1) * d];
+                let hrow = &mut h[(bi * t + ti) * d..(bi * t + ti + 1) * d];
+                for i in 0..d {
+                    hrow[i] += prow[i];
+                }
+            }
+        }
+    }
 
     let mut blocks = Vec::with_capacity(model.blocks.len());
     for (li, blk) in model.blocks.iter().enumerate() {
@@ -232,16 +247,8 @@ pub fn forward_train(model: &NativeModel, x: &Tensor, drop_rate: f32,
             }
             None => (None, u1.clone()),
         };
-        let dh = blk.mixer.d_hidden();
-        let (k, pre, f, log_a, log_b) = mixer_gates(pool, &blk.mixer,
-                                                    &mixer_in, rows);
-        let log_h0 = vec![H0_VALUE.ln(); batch * dh];
-        let mut h_seq = Vec::new();
-        scan::scan_log_pool_into(pool, &log_a, &log_b, &log_h0, batch, t,
-                                 dh, &mut h_seq);
-        let down = mixer_down(&blk.mixer);
-        let mut y = Vec::new();
-        down.apply_pool_into(pool, &h_seq, rows, &mut y);
+        let (mixer_tape, mut y) =
+            blk.mixer.m().forward_tape(pool, &mixer_in, batch, t)?;
         let drop_mixer = drop_branch(pool, &mut y, drop_rate, drop_seed,
                                      2 * li as u64);
         linalg::add_assign(&mut h, &y);
@@ -264,9 +271,9 @@ pub fn forward_train(model: &NativeModel, x: &Tensor, drop_rate: f32,
             }
             _ => (None, None, None, None),
         };
-        blocks.push(BlockTape { h_in, u1, conv_pre, mixer_in, k, pre, f,
-                                h: h_seq, h_mid, u2, mlp_pre, drop_mixer,
-                                drop_mlp });
+        blocks.push(BlockTape { h_in, u1, conv_pre, mixer_in,
+                                mixer: mixer_tape, h_mid, u2, mlp_pre,
+                                drop_mixer, drop_mlp });
     }
     let h_fin = h.clone();
     let mut u_f = Vec::new();
@@ -276,67 +283,6 @@ pub fn forward_train(model: &NativeModel, x: &Tensor, drop_rate: f32,
     Ok(Tape { batch, t, blocks, h_fin, u_f, logits })
 }
 
-fn mixer_down(m: &MixerParams) -> &Dense {
-    match m {
-        MixerParams::MinGru(c) => &c.down,
-        MixerParams::MinLstm(c) => &c.down,
-    }
-}
-
-/// Gate pre-activations + log-space scan coefficients for either mixer
-/// (Algorithm 6 / Algorithm 8), mirroring the inference `parallel_into`.
-#[allow(clippy::type_complexity)]
-fn mixer_gates(pool: &ThreadPool, mixer: &MixerParams, x: &[f32],
-               rows: usize)
-               -> (Vec<f32>, Vec<f32>, Option<Vec<f32>>, Vec<f32>, Vec<f32>) {
-    match mixer {
-        MixerParams::MinGru(m) => {
-            let k = m.linear_z.apply_pool(pool, x, rows);
-            let pre = m.linear_h.apply_pool(pool, x, rows);
-            let n = k.len();
-            let mut log_a = vec![0.0f32; n];
-            let mut log_b = vec![0.0f32; n];
-            {
-                let lap = SlicePtr::new(log_a.as_mut_slice());
-                let lbp = SlicePtr::new(log_b.as_mut_slice());
-                let (kr, pr) = (&k, &pre);
-                pool.run_chunks(n, GATE_CHUNK, |s, e| {
-                    let la = unsafe { lap.slice(s, e - s) };
-                    let lb = unsafe { lbp.slice(s, e - s) };
-                    for i in 0..e - s {
-                        la[i] = -softplus(kr[s + i]);
-                        lb[i] = -softplus(-kr[s + i]) + log_g(pr[s + i]);
-                    }
-                });
-            }
-            (k, pre, None, log_a, log_b)
-        }
-        MixerParams::MinLstm(m) => {
-            let f = m.linear_f.apply_pool(pool, x, rows);
-            let k = m.linear_i.apply_pool(pool, x, rows);
-            let pre = m.linear_h.apply_pool(pool, x, rows);
-            let n = k.len();
-            let mut log_a = vec![0.0f32; n];
-            let mut log_b = vec![0.0f32; n];
-            {
-                let lap = SlicePtr::new(log_a.as_mut_slice());
-                let lbp = SlicePtr::new(log_b.as_mut_slice());
-                let (fr, kr, pr) = (&f, &k, &pre);
-                pool.run_chunks(n, GATE_CHUNK, |s, e| {
-                    let la = unsafe { lap.slice(s, e - s) };
-                    let lb = unsafe { lbp.slice(s, e - s) };
-                    for i in 0..e - s {
-                        let diff = softplus(-fr[s + i]) - softplus(-kr[s + i]);
-                        la[i] = -softplus(diff);
-                        lb[i] = -softplus(-diff) + log_g(pr[s + i]);
-                    }
-                });
-            }
-            (k, pre, Some(f), log_a, log_b)
-        }
-    }
-}
-
 // ---------------------------------------------------------------------------
 // primitive VJPs
 // ---------------------------------------------------------------------------
@@ -344,10 +290,12 @@ fn mixer_gates(pool: &ThreadPool, mixer: &MixerParams, x: &[f32],
 /// Backward of `y = x @ w + b`.  Accumulates `gw`/`gb`; when `dx` is given
 /// it receives `dy @ wᵀ` (set or `+=` per `accumulate`).  Work fans out in
 /// fixed row / input-dim blocks, so gradients are thread-count invariant.
+/// Shared with the mixer `backward` implementations.
 #[allow(clippy::too_many_arguments)]
-fn dense_bwd(pool: &ThreadPool, dense: &Dense, x: &[f32], dy: &[f32],
-             rows: usize, dx: Option<(&mut Vec<f32>, bool)>,
-             gw: &mut [f32], gb: &mut [f32]) {
+pub(crate) fn dense_bwd(pool: &ThreadPool, dense: &Dense, x: &[f32],
+                        dy: &[f32], rows: usize,
+                        dx: Option<(&mut Vec<f32>, bool)>,
+                        gw: &mut [f32], gb: &mut [f32]) {
     let (d_in, d_out) = (dense.d_in, dense.d_out);
     debug_assert_eq!(x.len(), rows * d_in);
     debug_assert_eq!(dy.len(), rows * d_out);
@@ -554,15 +502,19 @@ fn embed_bwd(ids: &[i32], dh: &[f32], vocab: usize, d: usize,
     }
 }
 
-/// Reverse sweep through the scan + gate algebra of one mixer: consumes
-/// the hidden-state gradient `dh_seq` and writes pre-activation gradients
-/// `dk`/`dpre` (and `df` for minLSTM).  Parallel over the `B×D` channel
-/// grid in fixed blocks, sequential over time within a channel.
+/// Reverse sweep through the scan + gate algebra of the minimal-RNN
+/// mixers: consumes the hidden-state gradient `dh_seq` and writes
+/// pre-activation gradients `dk`/`dpre` (and `df` for minLSTM, which
+/// passes `f: Some(..)`).  Parallel over the `B×D` channel grid in fixed
+/// blocks, sequential over time within a channel.  Called from the
+/// [`Mixer::backward`] impls in `mixer.rs`.
 #[allow(clippy::too_many_arguments)]
-fn scan_gate_bwd(pool: &ThreadPool, tape: &BlockTape, is_lstm: bool,
-                 batch: usize, t: usize, dh: usize, dh_seq: &[f32],
-                 dk: &mut Vec<f32>, dpre: &mut Vec<f32>,
-                 df: &mut Vec<f32>) {
+pub(crate) fn scan_gate_bwd(pool: &ThreadPool, k: &[f32], pre: &[f32],
+                            f: Option<&[f32]>, h: &[f32], batch: usize,
+                            t: usize, dh: usize, dh_seq: &[f32],
+                            dk: &mut Vec<f32>, dpre: &mut Vec<f32>,
+                            df: &mut Vec<f32>) {
+    let is_lstm = f.is_some();
     let n = batch * t * dh;
     debug_assert_eq!(dh_seq.len(), n);
     linalg::reuse(dk, n);
@@ -574,9 +526,9 @@ fn scan_gate_bwd(pool: &ThreadPool, tape: &BlockTape, is_lstm: bool,
     let dkp = SlicePtr::new(dk.as_mut_slice());
     let dpp = SlicePtr::new(dpre.as_mut_slice());
     let dfp = SlicePtr::new(df.as_mut_slice());
-    let (kv, pv) = (&tape.k, &tape.pre);
-    let fv = tape.f.as_deref();
-    let hv = &tape.h;
+    let (kv, pv) = (k, pre);
+    let fv = f;
+    let hv = h;
     let task = |idx: usize| {
         let bi = idx / blocks;
         let d0 = (idx % blocks) * D_BLOCK;
@@ -659,10 +611,6 @@ pub fn backward(model: &NativeModel, tape: &Tape, x: &Tensor,
                 &mut grads.ln_f);
 
     // reusable buffers across blocks
-    let mut dk = Vec::new();
-    let mut dpre = Vec::new();
-    let mut df = Vec::new();
-    let mut dh_seq = Vec::new();
     let mut dmix_in = Vec::new();
     let mut dtmp = Vec::new();
     let mut dbranch = Vec::new();
@@ -703,17 +651,9 @@ pub fn backward(model: &NativeModel, tape: &Tape, x: &Tensor,
             linalg::add_assign(&mut dh, &dtmp);
         }
 
-        // mixer branch: h_mid = h_in + drop(down(scan(gates(mixer_in))))
-        let dhh = blk.mixer.d_hidden();
-        let is_lstm = matches!(blk.mixer, MixerParams::MinLstm(_));
+        // mixer branch: h_mid = h_in + drop(mixer(mixer_in)) — the
+        // kind-specific VJP is behind the trait; it overwrites dmix_in
         {
-            let (down, gdown) = match (&blk.mixer, &mut gb.mixer) {
-                (MixerParams::MinGru(m), MixerParams::MinGru(gm)) =>
-                    (&m.down, &mut gm.down),
-                (MixerParams::MinLstm(m), MixerParams::MinLstm(gm)) =>
-                    (&m.down, &mut gm.down),
-                _ => bail!("backward: grads mixer kind mismatch"),
-            };
             let dy: &[f32] = match &bt.drop_mixer {
                 Some(m) => {
                     mul_pool(pool, &dh, m, &mut dbranch);
@@ -721,33 +661,9 @@ pub fn backward(model: &NativeModel, tape: &Tape, x: &Tensor,
                 }
                 None => &dh,
             };
-            dense_bwd(pool, down, &bt.h, dy, rows,
-                      Some((&mut dh_seq, false)), &mut gdown.w,
-                      &mut gdown.b);
-        }
-        scan_gate_bwd(pool, bt, is_lstm, batch, t, dhh, &dh_seq, &mut dk,
-                      &mut dpre, &mut df);
-        match (&blk.mixer, &mut gb.mixer) {
-            (MixerParams::MinGru(m), MixerParams::MinGru(gm)) => {
-                dense_bwd(pool, &m.linear_z, &bt.mixer_in, &dk, rows,
-                          Some((&mut dmix_in, false)), &mut gm.linear_z.w,
-                          &mut gm.linear_z.b);
-                dense_bwd(pool, &m.linear_h, &bt.mixer_in, &dpre, rows,
-                          Some((&mut dmix_in, true)), &mut gm.linear_h.w,
-                          &mut gm.linear_h.b);
-            }
-            (MixerParams::MinLstm(m), MixerParams::MinLstm(gm)) => {
-                dense_bwd(pool, &m.linear_f, &bt.mixer_in, &df, rows,
-                          Some((&mut dmix_in, false)), &mut gm.linear_f.w,
-                          &mut gm.linear_f.b);
-                dense_bwd(pool, &m.linear_i, &bt.mixer_in, &dk, rows,
-                          Some((&mut dmix_in, true)), &mut gm.linear_i.w,
-                          &mut gm.linear_i.b);
-                dense_bwd(pool, &m.linear_h, &bt.mixer_in, &dpre, rows,
-                          Some((&mut dmix_in, true)), &mut gm.linear_h.w,
-                          &mut gm.linear_h.b);
-            }
-            _ => unreachable!("kind mismatch caught above"),
+            blk.mixer.m().backward(pool, &bt.mixer, &bt.mixer_in, dy,
+                                   batch, t, &mut dmix_in,
+                                   &mut gb.mixer)?;
         }
 
         // conv (if present), then RMSNorm 1, then the residual join
@@ -762,6 +678,21 @@ pub fn backward(model: &NativeModel, tape: &Tape, x: &Tensor,
         rmsnorm_bwd(pool, &bt.h_in, &blk.ln1, rows, d, du1, &mut du,
                     &mut gb.ln1);
         linalg::add_assign(&mut dh, &du);
+    }
+
+    // positional table: every lane's row `min(ti, L-1)` sums its dh rows
+    // (sequential scatter-add, deterministic like embed_bwd)
+    if let (Some(pe), Some(gpe)) = (&model.pos, &mut grads.pos) {
+        for bi in 0..batch {
+            for ti in 0..t {
+                let row = ti.min(pe.vocab - 1);
+                let grow = &mut gpe.w[row * d..(row + 1) * d];
+                let dhr = &dh[(bi * t + ti) * d..(bi * t + ti + 1) * d];
+                for i in 0..d {
+                    grow[i] += dhr[i];
+                }
+            }
+        }
     }
 
     // input layer
@@ -794,14 +725,18 @@ mod tests {
             mlp,
             mlp_mult: 2,
             forget_bias: 1.0,
+            max_len: 16,
+            n_heads: 2,
         }, 5).unwrap()
     }
+
+    const KINDS: [&str; 4] = ["mingru", "minlstm", "s6lite", "transformer"];
 
     #[test]
     fn train_forward_matches_inference_forward() {
         // the recording pass must produce the exact same logits as the
         // inference pass — same kernels, same order
-        for kind in ["mingru", "minlstm"] {
+        for kind in KINDS {
             let model = tiny(kind, true, true);
             let x = Tensor::i32(vec![2, 7],
                                 (0..14).map(|i| (i % 9) as i32).collect());
@@ -814,7 +749,7 @@ mod tests {
 
     #[test]
     fn backward_fills_every_leaf() {
-        for kind in ["mingru", "minlstm"] {
+        for kind in KINDS {
             let model = tiny(kind, true, true);
             let x = Tensor::i32(vec![1, 6], vec![1, 2, 3, 4, 5, 6]);
             let tape = forward(&model, &x).unwrap();
@@ -833,7 +768,7 @@ mod tests {
 
     #[test]
     fn zero_dropout_rate_is_bit_identical_to_plain_forward() {
-        for kind in ["mingru", "minlstm"] {
+        for kind in KINDS {
             let model = tiny(kind, true, true);
             let x = Tensor::i32(vec![2, 8], (0..16).map(|i| (i % 9) as i32)
                                 .collect());
@@ -887,26 +822,29 @@ mod tests {
         // same contract as the forward kernels: fixed task granularity
         // means bit-identical grads on 1 or N threads.  The global pool is
         // shared process state, so emulate via set_active.
-        let model = tiny("minlstm", true, true);
-        let x = Tensor::i32(vec![2, 9], (0..18).map(|i| (i % 9) as i32)
-                            .collect());
-        let tape = forward(&model, &x).unwrap();
-        let mut dlogits = vec![0.0f32; tape.logits.len()];
-        for (i, v) in dlogits.iter_mut().enumerate() {
-            *v = ((i % 7) as f32 - 3.0) * 0.01;
-        }
-        let pool = threads::global();
-        let before = pool.active();
-        let mut grads1 = model.zeros_like();
-        pool.set_active(1);
-        backward(&model, &tape, &x, &dlogits, &mut grads1).unwrap();
-        let mut grads_n = model.zeros_like();
-        pool.set_active(pool.threads());
-        backward(&model, &tape, &x, &dlogits, &mut grads_n).unwrap();
-        pool.set_active(before);
-        for ((a, b), name) in grads1.leaves().iter()
-            .zip(grads_n.leaves()).zip(grads1.leaf_names()) {
-            assert_eq!(*a, b, "leaf '{name}' differs across thread counts");
+        for kind in ["minlstm", "s6lite", "transformer"] {
+            let model = tiny(kind, true, true);
+            let x = Tensor::i32(vec![2, 9], (0..18).map(|i| (i % 9) as i32)
+                                .collect());
+            let tape = forward(&model, &x).unwrap();
+            let mut dlogits = vec![0.0f32; tape.logits.len()];
+            for (i, v) in dlogits.iter_mut().enumerate() {
+                *v = ((i % 7) as f32 - 3.0) * 0.01;
+            }
+            let pool = threads::global();
+            let before = pool.active();
+            let mut grads1 = model.zeros_like();
+            pool.set_active(1);
+            backward(&model, &tape, &x, &dlogits, &mut grads1).unwrap();
+            let mut grads_n = model.zeros_like();
+            pool.set_active(pool.threads());
+            backward(&model, &tape, &x, &dlogits, &mut grads_n).unwrap();
+            pool.set_active(before);
+            for ((a, b), name) in grads1.leaves().iter()
+                .zip(grads_n.leaves()).zip(grads1.leaf_names()) {
+                assert_eq!(*a, b,
+                           "{kind}: leaf '{name}' differs across threads");
+            }
         }
     }
 }

@@ -1,0 +1,324 @@
+//! The mixer abstraction: one trait covering everything the backbone
+//! needs from a sequence mixer — prefill, decode, recording forward,
+//! VJP, and the per-lane decode-state layout.
+//!
+//! [`super::model::MixerParams`] stays a closed enum-of-impls (the MRNN
+//! checkpoint format is versioned and closed), but every call site in
+//! `model.rs` / `autograd.rs` dispatches through `&dyn Mixer` instead of
+//! matching on the variant, so adding a mixer touches exactly three
+//! places: its own file, the enum, and checkpoint probing.
+//!
+//! Four mixers implement the trait, completing the paper's comparison
+//! matrix natively:
+//!
+//! | kind          | recurrence            | per-lane state        |
+//! |---------------|-----------------------|-----------------------|
+//! | `mingru`      | log-space scan        | `d_h` floats, O(1)    |
+//! | `minlstm`     | log-space scan        | `d_h` floats, O(1)    |
+//! | `s6lite`      | selective linear scan | `d_h` floats, O(1)    |
+//! | `transformer` | causal attention      | `2·max_len·d`, O(T)   |
+//!
+//! The minGRU/minLSTM impls live here (thin adapters over the original
+//! cell code plus the gate/scan VJP in `autograd`); S6-lite and the
+//! transformer implement the trait in their own modules.
+
+use anyhow::{bail, Result};
+
+use crate::util::threads::{SlicePtr, ThreadPool};
+
+use super::autograd;
+use super::linalg::{log_g, softplus};
+use super::mingru::{MinGru, GATE_CHUNK, H0_VALUE};
+use super::minlstm::MinLstm;
+use super::model::MixerParams;
+use super::scan;
+use super::scratch::MixerScratch;
+
+/// Every mixer kind the native backend accepts, in canonical order —
+/// the single source of truth for CLI validation and error messages.
+pub const MIXER_KINDS: &[&str] = &["mingru", "minlstm", "s6lite",
+                                   "transformer"];
+
+/// `mingru|minlstm|s6lite|transformer` — for error messages.
+pub fn kinds_help() -> String {
+    MIXER_KINDS.join("|")
+}
+
+// ---------------------------------------------------------------------------
+// trait
+// ---------------------------------------------------------------------------
+
+/// A sequence mixer behind the backbone's residual blocks.
+///
+/// State contract: a lane's decode state is a flat `[f32; state_len()]`
+/// slice whose meaning is private to the mixer (hidden vector for the
+/// recurrent mixers, K/V ring cache for attention).  `parallel_into`
+/// consumes a fresh (`init_lane`d) state and leaves the post-prefix
+/// state behind; `step_into` advances it by one token.  All entry points
+/// keep the backend-wide invariant: results are bit-for-bit identical
+/// at any thread count.
+pub trait Mixer {
+    /// Canonical kind string (one of [`MIXER_KINDS`]).
+    fn kind(&self) -> &'static str;
+
+    /// Hidden width of the mixer core (`d_h`).
+    fn d_hidden(&self) -> usize;
+
+    /// Per-lane decode-state length in f32s.  `d_h` for the recurrent
+    /// mixers; `2·max_len·d` for the transformer's KV ring.
+    fn state_len(&self) -> usize {
+        self.d_hidden()
+    }
+
+    /// Write the fresh position-0 state into one lane's slice.
+    fn init_lane(&self, lane: &mut [f32]);
+
+    /// Parallel prefill.  `x: (B, T, d)` rows, `state: (B, state_len)`
+    /// pre-initialized fresh; on return `y` holds `(B, T, d)` outputs
+    /// and `state` the post-prefix decode state.
+    #[allow(clippy::too_many_arguments)]
+    fn parallel_into(&self, pool: &ThreadPool, x: &[f32], batch: usize,
+                     t: usize, ms: &mut MixerScratch, y: &mut Vec<f32>,
+                     state: &mut [f32]) -> Result<()>;
+
+    /// One decode step.  `x_t: (B, d)`; `pos[b]` is the 0-based position
+    /// of the incoming token in lane `b` (recurrent mixers ignore it).
+    #[allow(clippy::too_many_arguments)]
+    fn step_into(&self, pool: &ThreadPool, x_t: &[f32], batch: usize,
+                 pos: &[u32], state: &mut [f32], ms: &mut MixerScratch,
+                 y: &mut Vec<f32>) -> Result<()>;
+
+    /// Recording forward for training: same math as `parallel_into`
+    /// (from the fresh position-0 state), returning the activations the
+    /// VJP needs plus the `(B, T, d)` output rows.
+    fn forward_tape(&self, pool: &ThreadPool, x: &[f32], batch: usize,
+                    t: usize) -> Result<(MixerTape, Vec<f32>)>;
+
+    /// VJP: consume the output gradient `dy`, accumulate parameter
+    /// gradients into the matching `grads` variant, and write the input
+    /// gradient into `dx` (overwriting, not accumulating).
+    #[allow(clippy::too_many_arguments)]
+    fn backward(&self, pool: &ThreadPool, tape: &MixerTape, x: &[f32],
+                dy: &[f32], batch: usize, t: usize, dx: &mut Vec<f32>,
+                grads: &mut MixerParams) -> Result<()>;
+}
+
+// ---------------------------------------------------------------------------
+// tape
+// ---------------------------------------------------------------------------
+
+/// Per-mixer activations cached by [`Mixer::forward_tape`] for the VJP.
+pub enum MixerTape {
+    /// `linear_z` / `linear_h` pre-activations + scanned states.
+    MinGru { k: Vec<f32>, pre: Vec<f32>, h: Vec<f32> },
+    /// `linear_f` / `linear_i` / `linear_h` pre-activations + states.
+    MinLstm { f: Vec<f32>, k: Vec<f32>, pre: Vec<f32>, h: Vec<f32> },
+    /// `dt` / `b` / `gate` pre-projections + scanned states.
+    S6Lite { dt_pre: Vec<f32>, bx: Vec<f32>, gate_pre: Vec<f32>,
+             h: Vec<f32> },
+    /// Fused QKV rows, attention probabilities `(B, H, T, T)`, and the
+    /// merged pre-projection context `(B·T, d)`.
+    Transformer { qkv: Vec<f32>, att: Vec<f32>, ctx: Vec<f32> },
+}
+
+// ---------------------------------------------------------------------------
+// minGRU
+// ---------------------------------------------------------------------------
+
+/// Gate pre-activations → log-space scan coefficients for minGRU
+/// (Algorithm 6): `log a = -softplus(k)`, `log b = -softplus(-k) +
+/// log g(pre)`.  Fixed [`GATE_CHUNK`] task granularity.
+fn mingru_log_coeffs(pool: &ThreadPool, k: &[f32], pre: &[f32],
+                     log_a: &mut [f32], log_b: &mut [f32]) {
+    let n = k.len();
+    let lap = SlicePtr::new(log_a);
+    let lbp = SlicePtr::new(log_b);
+    pool.run_chunks(n, GATE_CHUNK, |s, e| {
+        let la = unsafe { lap.slice(s, e - s) };
+        let lb = unsafe { lbp.slice(s, e - s) };
+        for i in 0..e - s {
+            la[i] = -softplus(k[s + i]);
+            lb[i] = -softplus(-k[s + i]) + log_g(pre[s + i]);
+        }
+    });
+}
+
+/// minLSTM (Algorithm 8): with `diff = softplus(-f) - softplus(-k)`,
+/// `log a = -softplus(diff)`, `log b = -softplus(-diff) + log g(pre)`.
+fn minlstm_log_coeffs(pool: &ThreadPool, f: &[f32], k: &[f32], pre: &[f32],
+                      log_a: &mut [f32], log_b: &mut [f32]) {
+    let n = k.len();
+    let lap = SlicePtr::new(log_a);
+    let lbp = SlicePtr::new(log_b);
+    pool.run_chunks(n, GATE_CHUNK, |s, e| {
+        let la = unsafe { lap.slice(s, e - s) };
+        let lb = unsafe { lbp.slice(s, e - s) };
+        for i in 0..e - s {
+            let diff = softplus(-f[s + i]) - softplus(-k[s + i]);
+            la[i] = -softplus(diff);
+            lb[i] = -softplus(-diff) + log_g(pre[s + i]);
+        }
+    });
+}
+
+impl Mixer for MinGru {
+    fn kind(&self) -> &'static str {
+        "mingru"
+    }
+
+    fn d_hidden(&self) -> usize {
+        MinGru::d_hidden(self)
+    }
+
+    fn init_lane(&self, lane: &mut [f32]) {
+        lane.fill(H0_VALUE);
+    }
+
+    fn parallel_into(&self, pool: &ThreadPool, x: &[f32], batch: usize,
+                     t: usize, ms: &mut MixerScratch, y: &mut Vec<f32>,
+                     state: &mut [f32]) -> Result<()> {
+        let h0 = state.to_vec();
+        MinGru::parallel_into(self, pool, x, batch, t, &h0, ms, y, state);
+        Ok(())
+    }
+
+    fn step_into(&self, pool: &ThreadPool, x_t: &[f32], batch: usize,
+                 _pos: &[u32], state: &mut [f32], ms: &mut MixerScratch,
+                 y: &mut Vec<f32>) -> Result<()> {
+        MinGru::step_into(self, pool, x_t, batch, state, ms, y);
+        Ok(())
+    }
+
+    fn forward_tape(&self, pool: &ThreadPool, x: &[f32], batch: usize,
+                    t: usize) -> Result<(MixerTape, Vec<f32>)> {
+        let rows = batch * t;
+        let dh = MinGru::d_hidden(self);
+        let k = self.linear_z.apply_pool(pool, x, rows);
+        let pre = self.linear_h.apply_pool(pool, x, rows);
+        let mut log_a = vec![0.0f32; k.len()];
+        let mut log_b = vec![0.0f32; k.len()];
+        mingru_log_coeffs(pool, &k, &pre, &mut log_a, &mut log_b);
+        let log_h0 = vec![H0_VALUE.ln(); batch * dh];
+        let mut h = Vec::new();
+        scan::scan_log_pool_into(pool, &log_a, &log_b, &log_h0, batch, t,
+                                 dh, &mut h);
+        let mut y = Vec::new();
+        self.down.apply_pool_into(pool, &h, rows, &mut y);
+        Ok((MixerTape::MinGru { k, pre, h }, y))
+    }
+
+    fn backward(&self, pool: &ThreadPool, tape: &MixerTape, x: &[f32],
+                dy: &[f32], batch: usize, t: usize, dx: &mut Vec<f32>,
+                grads: &mut MixerParams) -> Result<()> {
+        let (k, pre, h) = match tape {
+            MixerTape::MinGru { k, pre, h } => (k, pre, h),
+            _ => bail!("minGRU backward: tape kind mismatch"),
+        };
+        let gm = match grads {
+            MixerParams::MinGru(gm) => gm,
+            _ => bail!("backward: grads mixer kind mismatch"),
+        };
+        let rows = batch * t;
+        let dh = MinGru::d_hidden(self);
+        let mut dh_seq = Vec::new();
+        autograd::dense_bwd(pool, &self.down, h, dy, rows,
+                            Some((&mut dh_seq, false)), &mut gm.down.w,
+                            &mut gm.down.b);
+        let (mut dk, mut dpre, mut df) = (Vec::new(), Vec::new(),
+                                          Vec::new());
+        autograd::scan_gate_bwd(pool, k, pre, None, h, batch, t, dh,
+                                &dh_seq, &mut dk, &mut dpre, &mut df);
+        autograd::dense_bwd(pool, &self.linear_z, x, &dk, rows,
+                            Some((dx, false)), &mut gm.linear_z.w,
+                            &mut gm.linear_z.b);
+        autograd::dense_bwd(pool, &self.linear_h, x, &dpre, rows,
+                            Some((dx, true)), &mut gm.linear_h.w,
+                            &mut gm.linear_h.b);
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// minLSTM
+// ---------------------------------------------------------------------------
+
+impl Mixer for MinLstm {
+    fn kind(&self) -> &'static str {
+        "minlstm"
+    }
+
+    fn d_hidden(&self) -> usize {
+        MinLstm::d_hidden(self)
+    }
+
+    fn init_lane(&self, lane: &mut [f32]) {
+        lane.fill(H0_VALUE);
+    }
+
+    fn parallel_into(&self, pool: &ThreadPool, x: &[f32], batch: usize,
+                     t: usize, ms: &mut MixerScratch, y: &mut Vec<f32>,
+                     state: &mut [f32]) -> Result<()> {
+        let h0 = state.to_vec();
+        MinLstm::parallel_into(self, pool, x, batch, t, &h0, ms, y, state);
+        Ok(())
+    }
+
+    fn step_into(&self, pool: &ThreadPool, x_t: &[f32], batch: usize,
+                 _pos: &[u32], state: &mut [f32], ms: &mut MixerScratch,
+                 y: &mut Vec<f32>) -> Result<()> {
+        MinLstm::step_into(self, pool, x_t, batch, state, ms, y);
+        Ok(())
+    }
+
+    fn forward_tape(&self, pool: &ThreadPool, x: &[f32], batch: usize,
+                    t: usize) -> Result<(MixerTape, Vec<f32>)> {
+        let rows = batch * t;
+        let dh = MinLstm::d_hidden(self);
+        let f = self.linear_f.apply_pool(pool, x, rows);
+        let k = self.linear_i.apply_pool(pool, x, rows);
+        let pre = self.linear_h.apply_pool(pool, x, rows);
+        let mut log_a = vec![0.0f32; k.len()];
+        let mut log_b = vec![0.0f32; k.len()];
+        minlstm_log_coeffs(pool, &f, &k, &pre, &mut log_a, &mut log_b);
+        let log_h0 = vec![H0_VALUE.ln(); batch * dh];
+        let mut h = Vec::new();
+        scan::scan_log_pool_into(pool, &log_a, &log_b, &log_h0, batch, t,
+                                 dh, &mut h);
+        let mut y = Vec::new();
+        self.down.apply_pool_into(pool, &h, rows, &mut y);
+        Ok((MixerTape::MinLstm { f, k, pre, h }, y))
+    }
+
+    fn backward(&self, pool: &ThreadPool, tape: &MixerTape, x: &[f32],
+                dy: &[f32], batch: usize, t: usize, dx: &mut Vec<f32>,
+                grads: &mut MixerParams) -> Result<()> {
+        let (f, k, pre, h) = match tape {
+            MixerTape::MinLstm { f, k, pre, h } => (f, k, pre, h),
+            _ => bail!("minLSTM backward: tape kind mismatch"),
+        };
+        let gm = match grads {
+            MixerParams::MinLstm(gm) => gm,
+            _ => bail!("backward: grads mixer kind mismatch"),
+        };
+        let rows = batch * t;
+        let dh = MinLstm::d_hidden(self);
+        let mut dh_seq = Vec::new();
+        autograd::dense_bwd(pool, &self.down, h, dy, rows,
+                            Some((&mut dh_seq, false)), &mut gm.down.w,
+                            &mut gm.down.b);
+        let (mut dk, mut dpre, mut df) = (Vec::new(), Vec::new(),
+                                          Vec::new());
+        autograd::scan_gate_bwd(pool, k, pre, Some(f), h, batch, t, dh,
+                                &dh_seq, &mut dk, &mut dpre, &mut df);
+        autograd::dense_bwd(pool, &self.linear_f, x, &df, rows,
+                            Some((dx, false)), &mut gm.linear_f.w,
+                            &mut gm.linear_f.b);
+        autograd::dense_bwd(pool, &self.linear_i, x, &dk, rows,
+                            Some((dx, true)), &mut gm.linear_i.w,
+                            &mut gm.linear_i.b);
+        autograd::dense_bwd(pool, &self.linear_h, x, &dpre, rows,
+                            Some((dx, true)), &mut gm.linear_h.w,
+                            &mut gm.linear_h.b);
+        Ok(())
+    }
+}

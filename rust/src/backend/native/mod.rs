@@ -1,13 +1,15 @@
-//! Pure-Rust CPU implementations of the minGRU/minLSTM paths:
-//! scan primitives ([`scan`]), mixer cells ([`mingru`], [`minlstm`]),
-//! the backbone model ([`model`]) with its zero-allocation decode
-//! scratch ([`scratch`]), the dense/conv/norm kernels ([`linalg`]),
-//! and — since the training subsystem landed — reverse-mode gradients
-//! with dropout ([`autograd`]), the fused training heads ([`loss`]:
-//! masked CE, masked MSE, pooled sequence classification), AdamW
-//! ([`adam`]), and the [`NativeTrainer`] driving them.  No PJRT, no
-//! artifacts — everything here runs from a checkpoint (or random init)
-//! alone.
+//! Pure-Rust CPU implementations of the paper's comparison matrix:
+//! scan primitives ([`scan`]), the four sequence mixers behind the
+//! [`mixer::Mixer`] trait ([`mingru`], [`minlstm`], the [`s6lite`]
+//! selective scan, and the causal-attention [`transformer`] with its
+//! per-lane KV ring cache), the backbone model ([`model`]) with its
+//! zero-allocation decode scratch ([`scratch`]), the dense/conv/norm
+//! kernels ([`linalg`]), and — since the training subsystem landed —
+//! reverse-mode gradients with dropout ([`autograd`]), the fused
+//! training heads ([`loss`]: masked CE, masked MSE, pooled sequence
+//! classification), AdamW ([`adam`]), and the [`NativeTrainer`] driving
+//! them.  No PJRT, no artifacts — everything here runs from a
+//! checkpoint (or random init) alone.
 //!
 //! Two invariants hold across the whole module (see
 //! `rust/ARCHITECTURE.md`): results — including gradients and dropout
@@ -22,15 +24,21 @@ pub mod linalg;
 pub mod loss;
 pub mod mingru;
 pub mod minlstm;
+pub mod mixer;
 pub mod model;
+pub mod s6lite;
 pub mod scan;
 pub mod scratch;
 pub mod train;
+pub mod transformer;
 
 pub use adam::{AdamCfg, AdamState};
 pub use loss::Head;
 pub use mingru::{MinGru, H0_VALUE};
 pub use minlstm::MinLstm;
+pub use mixer::{kinds_help, Mixer, MixerTape, MIXER_KINDS};
 pub use model::{NativeInit, NativeModel, NativeState};
+pub use s6lite::S6Lite;
 pub use scratch::{MixerScratch, NativeScratch};
 pub use train::NativeTrainer;
+pub use transformer::Transformer;

@@ -1,8 +1,9 @@
 //! Native backbone (Appendix C.2), mirroring
-//! `python/compile/models/backbone.py` for the minGRU/minLSTM mixers:
+//! `python/compile/models/backbone.py` for the natively-supported mixers
+//! (minGRU, minLSTM, S6-lite, causal transformer):
 //!
 //! ```text
-//! x → Embed (or in_proj for continuous features)
+//! x → Embed (or in_proj for continuous features) [+ pos, transformer]
 //!   → N × [ RMSNorm → (Conv4) → mixer → +residual
 //!           (RMSNorm → MLP → +residual) ]
 //!   → RMSNorm → Head
@@ -13,6 +14,10 @@
 //! (`params/blocks/0/mixer/linear_z/w`, ...), so a model trained through
 //! the PJRT path serves natively with zero conversion.  A seeded random
 //! init is provided for artifact-free smoke runs.
+//!
+//! Mixer math lives behind the [`Mixer`] trait (`mixer.rs`); this module
+//! owns the closed, versioned parameter enum ([`MixerParams`]) plus the
+//! backbone plumbing around it.
 
 use std::path::Path;
 
@@ -24,57 +29,50 @@ use crate::util::rng::Rng;
 use crate::util::threads::{self, ThreadPool};
 
 use super::linalg::{self, Conv4, Dense, Embedding, Mlp, CONV_K};
-use super::mingru::{MinGru, H0_VALUE};
+use super::mingru::MinGru;
 use super::minlstm::MinLstm;
+use super::mixer::{kinds_help, Mixer};
+use super::s6lite::S6Lite;
 use super::scratch::NativeScratch;
+use super::transformer::Transformer;
 
 // ---------------------------------------------------------------------------
 // parameter tree
 // ---------------------------------------------------------------------------
 
+/// The closed set of mixers a checkpoint can carry.  Kept as an enum —
+/// not trait objects — so the MRNN format stays a closed, versioned
+/// surface; behavior dispatches through [`MixerParams::m`].
 #[derive(Clone, Debug)]
 pub enum MixerParams {
     MinGru(MinGru),
     MinLstm(MinLstm),
+    S6Lite(S6Lite),
+    Transformer(Transformer),
 }
 
 impl MixerParams {
-    pub fn d_hidden(&self) -> usize {
+    /// The mixer behavior behind this parameter set.
+    pub fn m(&self) -> &dyn Mixer {
         match self {
-            MixerParams::MinGru(m) => m.d_hidden(),
-            MixerParams::MinLstm(m) => m.d_hidden(),
+            MixerParams::MinGru(m) => m,
+            MixerParams::MinLstm(m) => m,
+            MixerParams::S6Lite(m) => m,
+            MixerParams::Transformer(m) => m,
         }
+    }
+
+    pub fn d_hidden(&self) -> usize {
+        self.m().d_hidden()
     }
 
     pub fn kind(&self) -> &'static str {
-        match self {
-            MixerParams::MinGru(_) => "mingru",
-            MixerParams::MinLstm(_) => "minlstm",
-        }
+        self.m().kind()
     }
 
-    #[allow(clippy::too_many_arguments)]
-    fn parallel_into(&self, pool: &ThreadPool, x: &[f32], batch: usize,
-                     t: usize, h0: &[f32],
-                     ms: &mut super::scratch::MixerScratch,
-                     y: &mut Vec<f32>, h_last: &mut [f32]) {
-        match self {
-            MixerParams::MinGru(m) =>
-                m.parallel_into(pool, x, batch, t, h0, ms, y, h_last),
-            MixerParams::MinLstm(m) =>
-                m.parallel_into(pool, x, batch, t, h0, ms, y, h_last),
-        }
-    }
-
-    fn step_into(&self, pool: &ThreadPool, x_t: &[f32], batch: usize,
-                 h: &mut [f32], ms: &mut super::scratch::MixerScratch,
-                 y: &mut Vec<f32>) {
-        match self {
-            MixerParams::MinGru(m) =>
-                m.step_into(pool, x_t, batch, h, ms, y),
-            MixerParams::MinLstm(m) =>
-                m.step_into(pool, x_t, batch, h, ms, y),
-        }
+    /// Per-lane decode-state length in f32s ([`Mixer::state_len`]).
+    pub fn state_len(&self) -> usize {
+        self.m().state_len()
     }
 }
 
@@ -100,12 +98,17 @@ pub struct NativeModel {
     pub d_model: usize,
     pub vocab_out: usize,
     pub input: InputLayer,
+    /// Learned absolute positional embeddings — transformer backbones
+    /// only (`params/pos/w`, `(max_len, d)`; lookups clamp to the last
+    /// row past `max_len`, like `backbone.py`'s `jnp.take`).
+    pub pos: Option<Embedding>,
     pub blocks: Vec<BlockParams>,
     pub ln_f: Vec<f32>,
     pub head: Dense,
 }
 
-/// Per-layer decode state: mixer hidden + optional conv ring buffer.
+/// Per-layer decode state: the mixer's per-lane state (hidden vector for
+/// recurrent mixers, KV ring cache for attention) + optional conv ring.
 #[derive(Clone, Debug)]
 pub struct LayerState {
     pub h: Vec<f32>,
@@ -118,7 +121,12 @@ pub struct LayerState {
 #[derive(Clone, Debug)]
 pub struct NativeState {
     pub batch: usize,
+    /// Batch-global step counter (informational; drives serve logs).
     pub pos: usize,
+    /// Per-lane 0-based position of the *next* token — diverges from
+    /// `pos` once continuous batching resets individual lanes.  Drives
+    /// the positional lookup and the transformer's ring-slot addressing.
+    pub lane_pos: Vec<u32>,
     pub layers: Vec<LayerState>,
     pub scratch: NativeScratch,
 }
@@ -142,6 +150,10 @@ pub struct NativeInit {
     pub mlp: bool,
     pub mlp_mult: usize,
     pub forget_bias: f32,
+    /// Positional-table length / KV-cache capacity (transformer only).
+    pub max_len: usize,
+    /// Attention heads (transformer only; must divide `d_model`).
+    pub n_heads: usize,
 }
 
 impl Default for NativeInit {
@@ -158,6 +170,8 @@ impl Default for NativeInit {
             mlp: false,
             mlp_mult: 4,
             forget_bias: 0.0,
+            max_len: 256,
+            n_heads: 4,
         }
     }
 }
@@ -193,6 +207,19 @@ impl NativeModel {
         let lecun = |rng: &mut Rng, d_in: usize, d_out: usize, bias: f32| {
             dense_random(rng, d_in, d_out, 1.0 / (d_in as f32).sqrt(), bias)
         };
+        if cfg.kind == "transformer" && (cfg.n_heads == 0
+                                         || d % cfg.n_heads != 0) {
+            bail!("transformer: d_model {d} not divisible by n_heads {}",
+                  cfg.n_heads);
+        }
+        // learned absolute positions (transformer backbones only), like
+        // backbone.py's params["pos"]
+        let pos = (cfg.kind == "transformer").then(|| Embedding {
+            vocab: cfg.max_len.max(1),
+            d,
+            w: (0..cfg.max_len.max(1) * d)
+                .map(|_| rng.normal_f32(0.0, 0.02)).collect(),
+        });
         let mut blocks = Vec::with_capacity(cfg.n_layers);
         for _ in 0..cfg.n_layers {
             let mixer = match cfg.kind.as_str() {
@@ -207,8 +234,30 @@ impl NativeModel {
                     linear_h: lecun(&mut rng, d, dh, 0.0),
                     down: lecun(&mut rng, dh, d, 0.0),
                 }),
-                other => bail!("native backend supports mingru/minlstm, \
-                                not '{other}'"),
+                // s6lite.py: dt bias -1 keeps Δ = softplus(dt(x)) small
+                // at init; a_log spans log(linspace(1, 8, d_h))
+                "s6lite" => MixerParams::S6Lite(S6Lite {
+                    dt: lecun(&mut rng, d, dh, -1.0),
+                    b: lecun(&mut rng, d, dh, 0.0),
+                    gate: lecun(&mut rng, d, dh, 0.0),
+                    down: lecun(&mut rng, dh, d, 0.0),
+                    a_log: (0..dh).map(|j| {
+                        let lin = if dh > 1 {
+                            1.0 + 7.0 * j as f32 / (dh - 1) as f32
+                        } else {
+                            1.0
+                        };
+                        lin.ln()
+                    }).collect(),
+                }),
+                "transformer" => MixerParams::Transformer(Transformer {
+                    qkv: lecun(&mut rng, d, 3 * d, 0.0),
+                    proj: dense_random(&mut rng, d, d, 0.02, 0.0),
+                    n_heads: cfg.n_heads,
+                    max_len: cfg.max_len.max(1),
+                }),
+                other => bail!("unknown mixer kind '{other}' — the native \
+                                backend supports {}", kinds_help()),
             };
             let conv = if cfg.conv {
                 Some(Conv4 {
@@ -239,6 +288,7 @@ impl NativeModel {
             d_model: d,
             vocab_out: cfg.vocab_out,
             input,
+            pos,
             blocks,
             ln_f: vec![1.0; d],
             head: dense_random(&mut rng, d, cfg.vocab_out, 0.02, 0.0),
@@ -292,6 +342,29 @@ impl NativeModel {
             (InputLayer::Proj(proj), d)
         };
 
+        // learned positional table (transformer checkpoints)
+        let pos = match find("pos/w") {
+            Some(_) => {
+                let (dims, w) = tensor_f32("pos/w")?;
+                if dims.len() != 2 || dims[1] != d_model {
+                    bail!("'pos/w' dims {dims:?} do not match d_model \
+                           {d_model}");
+                }
+                Some(Embedding::new(dims[0], dims[1], w)?)
+            }
+            None => None,
+        };
+        // attention head count rides along as metadata (i32 or f32
+        // scalar); absent in older checkpoints → the backbone.py default
+        let n_heads = match find("meta/n_heads") {
+            Some(t) => match (&t.data, t.data.as_f32()) {
+                (TensorData::I32(v), _) if !v.is_empty() => v[0] as usize,
+                (_, Some(v)) if !v.is_empty() => v[0] as usize,
+                _ => bail!("'meta/n_heads' is empty"),
+            },
+            None => 4,
+        };
+
         let mut blocks = Vec::new();
         let mut i = 0usize;
         while find(&format!("blocks/{i}/ln1/scale")).is_some() {
@@ -311,9 +384,34 @@ impl NativeModel {
                     linear_h: dense(&format!("blocks/{i}/mixer/linear_h"))?,
                     down: dense(&format!("blocks/{i}/mixer/down"))?,
                 })
+            } else if find(&format!("blocks/{i}/mixer/dt/w")).is_some() {
+                let (ad, a_log) =
+                    tensor_f32(&format!("blocks/{i}/mixer/a_log"))?;
+                if ad.len() != 1 {
+                    bail!("'blocks/{i}/mixer/a_log' dims {ad:?}");
+                }
+                MixerParams::S6Lite(S6Lite {
+                    dt: dense(&format!("blocks/{i}/mixer/dt"))?,
+                    b: dense(&format!("blocks/{i}/mixer/b"))?,
+                    gate: dense(&format!("blocks/{i}/mixer/gate"))?,
+                    down: dense(&format!("blocks/{i}/mixer/down"))?,
+                    a_log,
+                })
+            } else if find(&format!("blocks/{i}/mixer/qkv/w")).is_some() {
+                let pe = pos.as_ref().ok_or_else(|| anyhow!(
+                    "block {i} is a transformer but the checkpoint has no \
+                     'pos/w' positional table"))?;
+                let m = Transformer {
+                    qkv: dense(&format!("blocks/{i}/mixer/qkv"))?,
+                    proj: dense(&format!("blocks/{i}/mixer/proj"))?,
+                    n_heads,
+                    max_len: pe.vocab,
+                };
+                m.check()?;
+                MixerParams::Transformer(m)
             } else {
-                bail!("block {i}: mixer is not minGRU/minLSTM — the native \
-                       backend serves only the minimal RNN variants");
+                bail!("block {i}: unrecognized mixer parameters — the \
+                       native backend supports {}", kinds_help());
             };
             let conv = match find(&format!("blocks/{i}/conv/w")) {
                 Some(_) => {
@@ -345,10 +443,24 @@ impl NativeModel {
             bail!("checkpoint has no 'blocks/0/ln1/scale' — not a backbone \
                    parameter set");
         }
+        // homogeneity: a mixed-kind stack would make `kind()` (and every
+        // serve log / fingerprint derived from it) a lie — reject early
+        let kind0 = blocks[0].mixer.kind();
+        if let Some((i, blk)) = blocks.iter().enumerate()
+            .find(|(_, b)| b.mixer.kind() != kind0) {
+            bail!("mixed mixer kinds: block 0 is {kind0} but block {i} is \
+                   {} — the native backbone requires one kind throughout",
+                  blk.mixer.kind());
+        }
+        if pos.is_some() && kind0 != "transformer" {
+            bail!("checkpoint has a 'pos/w' positional table but {kind0} \
+                   blocks — not a transformer backbone");
+        }
         let (_, ln_f) = tensor_f32("ln_f/scale")?;
         let head = dense("head")?;
         let vocab_out = head.d_out;
-        Ok(NativeModel { d_model, vocab_out, input, blocks, ln_f, head })
+        Ok(NativeModel { d_model, vocab_out, input, pos, blocks, ln_f,
+                         head })
     }
 
     /// Export as named tensors (with the `params/` prefix), the inverse of
@@ -366,6 +478,10 @@ impl NativeModel {
                 "params/embed/w", vec![e.vocab, e.d], e.w.clone())),
             InputLayer::Proj(p) => dense(&mut out,
                                          "params/in_proj".to_string(), p),
+        }
+        if let Some(pe) = &self.pos {
+            out.push(NamedTensor::f32("params/pos/w",
+                                      vec![pe.vocab, pe.d], pe.w.clone()));
         }
         for (i, blk) in self.blocks.iter().enumerate() {
             out.push(NamedTensor::f32(&format!("params/blocks/{i}/ln1/scale"),
@@ -402,6 +518,25 @@ impl NativeModel {
                     dense(&mut out,
                           format!("params/blocks/{i}/mixer/down"), &m.down);
                 }
+                MixerParams::S6Lite(m) => {
+                    dense(&mut out, format!("params/blocks/{i}/mixer/dt"),
+                          &m.dt);
+                    dense(&mut out, format!("params/blocks/{i}/mixer/b"),
+                          &m.b);
+                    dense(&mut out, format!("params/blocks/{i}/mixer/gate"),
+                          &m.gate);
+                    dense(&mut out, format!("params/blocks/{i}/mixer/down"),
+                          &m.down);
+                    out.push(NamedTensor::f32(
+                        &format!("params/blocks/{i}/mixer/a_log"),
+                        vec![m.a_log.len()], m.a_log.clone()));
+                }
+                MixerParams::Transformer(m) => {
+                    dense(&mut out, format!("params/blocks/{i}/mixer/qkv"),
+                          &m.qkv);
+                    dense(&mut out, format!("params/blocks/{i}/mixer/proj"),
+                          &m.proj);
+                }
             }
             if let Some(s) = &blk.ln2 {
                 out.push(NamedTensor::f32(
@@ -417,6 +552,13 @@ impl NativeModel {
         out.push(NamedTensor::f32("params/ln_f/scale",
                                   vec![self.ln_f.len()], self.ln_f.clone()));
         dense(&mut out, "params/head".to_string(), &self.head);
+        // non-parameter metadata rides last; `leaf_names` filters it so
+        // the positional leaf walks (optimizer state) never see it
+        if let Some(MixerParams::Transformer(m)) =
+            self.blocks.first().map(|b| &b.mixer) {
+            out.push(NamedTensor::i32("meta/n_heads", vec![1],
+                                      vec![m.n_heads as i32]));
+        }
         out
     }
 
@@ -430,9 +572,11 @@ impl NativeModel {
     // checks index leaves positionally through them.
 
     /// Leaf names in canonical order, matching [`NativeModel::to_named`]
-    /// (including the `params/` prefix).
+    /// minus the non-parameter `meta/` tensors (including the `params/`
+    /// prefix).
     pub fn leaf_names(&self) -> Vec<String> {
-        self.to_named().into_iter().map(|t| t.name).collect()
+        self.to_named().into_iter().map(|t| t.name)
+            .filter(|n| !n.starts_with("meta/")).collect()
     }
 
     /// All parameter leaves in canonical order (shared refs).
@@ -444,6 +588,9 @@ impl NativeModel {
                 out.push(&p.w);
                 out.push(&p.b);
             }
+        }
+        if let Some(pe) = &self.pos {
+            out.push(&pe.w);
         }
         for blk in &self.blocks {
             out.push(&blk.ln1);
@@ -461,6 +608,19 @@ impl NativeModel {
                 MixerParams::MinLstm(m) => {
                     for d in [&m.linear_f, &m.linear_i, &m.linear_h,
                               &m.down] {
+                        out.push(&d.w);
+                        out.push(&d.b);
+                    }
+                }
+                MixerParams::S6Lite(m) => {
+                    for d in [&m.dt, &m.b, &m.gate, &m.down] {
+                        out.push(&d.w);
+                        out.push(&d.b);
+                    }
+                    out.push(&m.a_log);
+                }
+                MixerParams::Transformer(m) => {
+                    for d in [&m.qkv, &m.proj] {
                         out.push(&d.w);
                         out.push(&d.b);
                     }
@@ -492,6 +652,9 @@ impl NativeModel {
                 out.push(&mut p.b);
             }
         }
+        if let Some(pe) = &mut self.pos {
+            out.push(&mut pe.w);
+        }
         for blk in &mut self.blocks {
             out.push(&mut blk.ln1);
             if let Some(c) = &mut blk.conv {
@@ -509,6 +672,20 @@ impl NativeModel {
                 MixerParams::MinLstm(m) => {
                     for d in [&mut m.linear_f, &mut m.linear_i,
                               &mut m.linear_h, &mut m.down] {
+                        out.push(&mut d.w);
+                        out.push(&mut d.b);
+                    }
+                }
+                MixerParams::S6Lite(m) => {
+                    for d in [&mut m.dt, &mut m.b, &mut m.gate,
+                              &mut m.down] {
+                        out.push(&mut d.w);
+                        out.push(&mut d.b);
+                    }
+                    out.push(&mut m.a_log);
+                }
+                MixerParams::Transformer(m) => {
+                    for d in [&mut m.qkv, &mut m.proj] {
                         out.push(&mut d.w);
                         out.push(&mut d.b);
                     }
@@ -544,42 +721,54 @@ impl NativeModel {
     // inference
     // -----------------------------------------------------------------------
 
-    /// Fresh decode state: mixer hiddens at `g(0) = 0.5`, conv buffers and
-    /// the position counter at zero.
+    /// Fresh decode state: each lane's mixer state at its position-0
+    /// value ([`Mixer::init_lane`] — `g(0) = 0.5` for the minimal RNNs,
+    /// zeros for S6-lite and the KV ring), conv buffers and the position
+    /// counters at zero.
     pub fn init_state(&self, batch: usize) -> NativeState {
-        let layers = self.blocks.iter().map(|blk| LayerState {
-            h: vec![H0_VALUE; batch * blk.mixer.d_hidden()],
-            conv: blk.conv.as_ref().map(|c| c.zero_state(batch)),
+        let layers = self.blocks.iter().map(|blk| {
+            let sl = blk.mixer.state_len();
+            let mut h = vec![0.0f32; batch * sl];
+            for lane in h.chunks_mut(sl.max(1)) {
+                blk.mixer.m().init_lane(lane);
+            }
+            LayerState {
+                h,
+                conv: blk.conv.as_ref().map(|c| c.zero_state(batch)),
+            }
         }).collect();
-        NativeState { batch, pos: 0, layers,
+        NativeState { batch, pos: 0, lane_pos: vec![0; batch], layers,
                       scratch: NativeScratch::default() }
     }
 
-    /// Reset one decode lane to the fresh position-0 state (mixer hidden
-    /// back to `g(0)`, conv ring buffer zeroed) without touching the other
-    /// lanes — the primitive behind continuous-batching lane refill in
-    /// `coordinator::server`.
+    /// Reset one decode lane to the fresh position-0 state (mixer state
+    /// re-initialized, conv ring buffer zeroed, lane position back to 0)
+    /// without touching the other lanes — the primitive behind
+    /// continuous-batching lane refill in `coordinator::server`.
     pub fn reset_lane(&self, state: &mut NativeState, lane: usize)
                       -> Result<()> {
         if lane >= state.batch {
             bail!("reset_lane: lane {lane} >= batch {}", state.batch);
         }
         for (blk, st) in self.blocks.iter().zip(state.layers.iter_mut()) {
-            let dh = blk.mixer.d_hidden();
-            st.h[lane * dh..(lane + 1) * dh].fill(H0_VALUE);
+            let sl = blk.mixer.state_len();
+            blk.mixer.m().init_lane(&mut st.h[lane * sl..(lane + 1) * sl]);
             if let (Some(conv), Some(buf)) = (&blk.conv, st.conv.as_mut()) {
                 let w = (conv.k - 1) * conv.d;
                 buf[lane * w..(lane + 1) * w].fill(0.0);
             }
         }
+        state.lane_pos[lane] = 0;
         Ok(())
     }
 
     /// Fingerprint of the decode-state layout: folds a layout version,
-    /// the model dims, and each block's (mixer kind, hidden width, conv
+    /// the model dims, and each block's (mixer kind, state length, conv
     /// ring-buffer width) through `splitmix64`.  Two models agree exactly
     /// when a lane exported from one ([`NativeModel::export_lane`]) can
-    /// be imported into the other.
+    /// be imported into the other.  minGRU/minLSTM fingerprints are
+    /// unchanged from layout v1 (state length == hidden width there), so
+    /// session caches written before the mixer refactor stay valid.
     pub fn state_fingerprint(&self) -> u64 {
         let mut fields: Vec<u64> = vec![
             1, // state-layout version
@@ -590,9 +779,11 @@ impl NativeModel {
         for blk in &self.blocks {
             fields.push(match blk.mixer.kind() {
                 "mingru" => 1,
-                _ => 2,
+                "minlstm" => 2,
+                "s6lite" => 3,
+                _ => 4,
             });
-            fields.push(blk.mixer.d_hidden() as u64);
+            fields.push(blk.mixer.state_len() as u64);
             fields.push(blk.conv.as_ref()
                 .map(|c| ((c.k - 1) * c.d) as u64).unwrap_or(0));
         }
@@ -604,31 +795,41 @@ impl NativeModel {
         fp
     }
 
-    /// Byte length of one exported lane: 4 bytes per f32 of mixer hidden
-    /// plus conv ring buffer, per block.
+    /// Byte length of one exported lane: 4 bytes per f32 of mixer state
+    /// plus conv ring buffer per block, plus a 4-byte lane-position
+    /// header on positional (transformer) backbones.  O(1) in context
+    /// length for the recurrent mixers, O(max_len · d) for attention —
+    /// the session-cache contrast the comparison matrix is about.
     pub fn lane_state_bytes(&self) -> usize {
-        self.blocks.iter().map(|blk| {
-            let mut n = blk.mixer.d_hidden();
+        let header = if self.pos.is_some() { 4 } else { 0 };
+        header + self.blocks.iter().map(|blk| {
+            let mut n = blk.mixer.state_len();
             if let Some(conv) = &blk.conv {
                 n += (conv.k - 1) * conv.d;
             }
             n * 4
-        }).sum()
+        }).sum::<usize>()
     }
 
-    /// Serialize one decode lane (per block: mixer hidden, then the conv
-    /// ring buffer if present) to little-endian f32 bytes.  The
-    /// batch-global `pos` counter is informational only and is not part
-    /// of a lane's state.
+    /// Serialize one decode lane (positional backbones: the lane's
+    /// position counter first; then per block the mixer state and the
+    /// conv ring buffer if present) to little-endian bytes.  The
+    /// transformer's KV ring is exported verbatim — slot addressing is a
+    /// pure function of the preserved position, so re-imported lanes
+    /// re-attend bit-identically.  The batch-global `pos` counter is
+    /// informational only and is not part of a lane's state.
     pub fn export_lane(&self, state: &NativeState, lane: usize)
                        -> Result<Vec<u8>> {
         if lane >= state.batch {
             bail!("export_lane: lane {lane} >= batch {}", state.batch);
         }
         let mut out = Vec::with_capacity(self.lane_state_bytes());
+        if self.pos.is_some() {
+            out.extend_from_slice(&state.lane_pos[lane].to_le_bytes());
+        }
         for (blk, st) in self.blocks.iter().zip(state.layers.iter()) {
-            let dh = blk.mixer.d_hidden();
-            for &v in &st.h[lane * dh..(lane + 1) * dh] {
+            let sl = blk.mixer.state_len();
+            for &v in &st.h[lane * sl..(lane + 1) * sl] {
                 out.extend_from_slice(&v.to_le_bytes());
             }
             if let (Some(conv), Some(buf)) = (&blk.conv, st.conv.as_ref()) {
@@ -656,6 +857,11 @@ impl NativeModel {
                    lane state is {want}", bytes.len());
         }
         let mut off = 0usize;
+        if self.pos.is_some() {
+            state.lane_pos[lane] = u32::from_le_bytes(
+                [bytes[0], bytes[1], bytes[2], bytes[3]]);
+            off = 4;
+        }
         let read_f32 = |off: &mut usize| {
             let v = f32::from_le_bytes([bytes[*off], bytes[*off + 1],
                                         bytes[*off + 2], bytes[*off + 3]]);
@@ -663,8 +869,8 @@ impl NativeModel {
             v
         };
         for (blk, st) in self.blocks.iter().zip(state.layers.iter_mut()) {
-            let dh = blk.mixer.d_hidden();
-            for v in st.h[lane * dh..(lane + 1) * dh].iter_mut() {
+            let sl = blk.mixer.state_len();
+            for v in st.h[lane * sl..(lane + 1) * sl].iter_mut() {
                 *v = read_f32(&mut off);
             }
             if let (Some(conv), Some(buf)) = (&blk.conv, st.conv.as_mut()) {
@@ -718,8 +924,21 @@ impl NativeModel {
         let pool = threads::global();
         let d = self.d_model;
         {
-            let NativeState { layers, scratch: s, .. } = &mut state;
+            let NativeState { layers, scratch: s, lane_pos, .. } =
+                &mut state;
             self.embed_rows_into(x_t, batch, &mut s.h)?;
+            // positional embedding: each lane looks up its own position
+            // (clamped to the last row, like backbone.py's jnp.take)
+            if let Some(pe) = &self.pos {
+                for (bi, &p) in lane_pos.iter().enumerate() {
+                    let row = (p as usize).min(pe.vocab - 1);
+                    let prow = &pe.w[row * d..(row + 1) * d];
+                    let hrow = &mut s.h[bi * d..(bi + 1) * d];
+                    for i in 0..d {
+                        hrow[i] += prow[i];
+                    }
+                }
+            }
             for (blk, st) in self.blocks.iter().zip(layers.iter_mut()) {
                 linalg::rmsnorm_pool_into(pool, &s.h, &blk.ln1, batch, d,
                                           &mut s.u);
@@ -728,8 +947,9 @@ impl NativeModel {
                     conv.step_into(buf, &s.u, batch, &mut s.y);
                     std::mem::swap(&mut s.u, &mut s.y);
                 }
-                blk.mixer.step_into(pool, &s.u, batch, &mut st.h,
-                                    &mut s.mixer, &mut s.y);
+                blk.mixer.m().step_into(pool, &s.u, batch, lane_pos,
+                                        &mut st.h, &mut s.mixer,
+                                        &mut s.y)?;
                 linalg::add_assign(&mut s.h, &s.y);
                 if let (Some(ln2), Some(mlp)) = (&blk.ln2, &blk.mlp) {
                     linalg::rmsnorm_pool_into(pool, &s.h, ln2, batch, d,
@@ -741,6 +961,9 @@ impl NativeModel {
             }
             linalg::rmsnorm_pool_into(pool, &s.h, &self.ln_f, batch, d,
                                       &mut s.u);
+            for p in lane_pos.iter_mut() {
+                *p += 1;
+            }
         }
         let mut logits = Vec::new(); // handed to the caller inside a Tensor
         self.head.apply_pool_into(pool, &state.scratch.u, batch,
@@ -769,6 +992,22 @@ impl NativeModel {
         let d = self.d_model;
         let mut s = NativeScratch::default();
         self.embed_rows_into(x, rows, &mut s.h)?;
+        // positional embedding — position `ti` for every lane (clamped,
+        // matching the decode path; prefill lengths past the table are
+        // rejected by the transformer mixer before this matters)
+        if let Some(pe) = &self.pos {
+            for bi in 0..batch {
+                for ti in 0..t {
+                    let row = ti.min(pe.vocab - 1);
+                    let prow = &pe.w[row * d..(row + 1) * d];
+                    let hrow =
+                        &mut s.h[(bi * t + ti) * d..(bi * t + ti + 1) * d];
+                    for i in 0..d {
+                        hrow[i] += prow[i];
+                    }
+                }
+            }
+        }
         let mut layers = Vec::with_capacity(self.blocks.len());
         for blk in &self.blocks {
             linalg::rmsnorm_pool_into(pool, &s.h, &blk.ln1, rows, d,
@@ -782,11 +1021,13 @@ impl NativeModel {
                 }
                 None => None,
             };
-            let dh = blk.mixer.d_hidden();
-            let h0 = vec![H0_VALUE; batch * dh];
-            let mut h_last = vec![0.0f32; batch * dh];
-            blk.mixer.parallel_into(pool, &s.u, batch, t, &h0,
-                                    &mut s.mixer, &mut s.y, &mut h_last);
+            let sl = blk.mixer.state_len();
+            let mut mixer_state = vec![0.0f32; batch * sl];
+            for lane in mixer_state.chunks_mut(sl.max(1)) {
+                blk.mixer.m().init_lane(lane);
+            }
+            blk.mixer.m().parallel_into(pool, &s.u, batch, t, &mut s.mixer,
+                                        &mut s.y, &mut mixer_state)?;
             linalg::add_assign(&mut s.h, &s.y);
             if let (Some(ln2), Some(mlp)) = (&blk.ln2, &blk.mlp) {
                 linalg::rmsnorm_pool_into(pool, &s.h, ln2, rows, d,
@@ -795,7 +1036,7 @@ impl NativeModel {
                                     &mut s.z);
                 linalg::add_assign(&mut s.h, &s.z);
             }
-            layers.push(LayerState { h: h_last, conv: conv_state });
+            layers.push(LayerState { h: mixer_state, conv: conv_state });
         }
         linalg::rmsnorm_pool_into(pool, &s.h, &self.ln_f, rows, d,
                                   &mut s.u);
@@ -806,8 +1047,8 @@ impl NativeModel {
         // decode only needs O(B*d) buffers and re-warms them on the
         // first step.
         Ok((Tensor::f32(vec![batch, t, self.vocab_out], logits),
-            NativeState { batch, pos: t, layers,
-                          scratch: NativeScratch::default() }))
+            NativeState { batch, pos: t, lane_pos: vec![t as u32; batch],
+                          layers, scratch: NativeScratch::default() }))
     }
 
     /// Parallel prefill: last-position logits `(B, vocab_out)` + state,
@@ -830,8 +1071,17 @@ impl NativeModel {
         self.blocks.len()
     }
 
+    /// The stack's mixer kind.  Construction (random init and checkpoint
+    /// load) enforces that every block uses the same mixer, so the first
+    /// block speaks for all of them.
     pub fn kind(&self) -> &'static str {
         self.blocks.first().map(|b| b.mixer.kind()).unwrap_or("empty")
+    }
+
+    /// Human-readable block summary for `describe`/serve logs, spelling
+    /// out the per-block count rather than a bare kind: `"2×transformer"`.
+    pub fn kind_summary(&self) -> String {
+        format!("{}×{}", self.blocks.len(), self.kind())
     }
 }
 
@@ -852,13 +1102,15 @@ mod tests {
             mlp,
             mlp_mult: 2,
             forget_bias: 0.5,
+            max_len: 16,
+            n_heads: 2,
         }, 7).unwrap()
     }
 
     #[test]
     fn forward_and_step_agree() {
         // the paper's parallel/sequential identity through the full stack
-        for kind in ["mingru", "minlstm"] {
+        for kind in ["mingru", "minlstm", "s6lite", "transformer"] {
             let model = tiny_model(kind, true, true);
             let (batch, t) = (2usize, 9usize);
             let mut rng = crate::util::rng::Rng::new(3);
@@ -897,25 +1149,33 @@ mod tests {
 
     #[test]
     fn named_roundtrip_is_exact() {
-        let model = tiny_model("minlstm", true, true);
-        let named = model.to_named();
-        let back = NativeModel::from_named(&named).unwrap();
-        let x = Tensor::i32(vec![1, 5], vec![1, 2, 3, 4, 5]);
-        let (a, _) = model.forward(&x).unwrap();
-        let (b, _) = back.forward(&x).unwrap();
-        assert_eq!(a, b, "roundtrip must be bit-exact");
+        for kind in ["minlstm", "s6lite", "transformer"] {
+            let model = tiny_model(kind, true, true);
+            let named = model.to_named();
+            let back = NativeModel::from_named(&named).unwrap();
+            let x = Tensor::i32(vec![1, 5], vec![1, 2, 3, 4, 5]);
+            let (a, _) = model.forward(&x).unwrap();
+            let (b, _) = back.forward(&x).unwrap();
+            assert_eq!(a, b, "{kind}: roundtrip must be bit-exact");
+            assert_eq!(back.kind(), kind);
+        }
     }
 
     #[test]
     fn leaf_walks_stay_in_lockstep() {
         // leaf_names / leaves / leaves_mut / to_named must enumerate the
         // same leaves in the same order — optimizer state is positional
+        // (to_named may carry trailing non-parameter `meta/` tensors,
+        // which every leaf walk skips)
         for (kind, conv, mlp) in [("mingru", true, true),
                                   ("minlstm", false, true),
-                                  ("minlstm", true, false)] {
+                                  ("minlstm", true, false),
+                                  ("s6lite", true, true),
+                                  ("transformer", true, true)] {
             let mut model = tiny_model(kind, conv, mlp);
             let names = model.leaf_names();
-            let named = model.to_named();
+            let named: Vec<NamedTensor> = model.to_named().into_iter()
+                .filter(|t| !t.name.starts_with("meta/")).collect();
             assert_eq!(names.len(), named.len());
             let shared_lens: Vec<usize> =
                 model.leaves().iter().map(|l| l.len()).collect();
@@ -959,6 +1219,8 @@ mod tests {
             mlp: false,
             mlp_mult: 4,
             forget_bias: 1.0,
+            max_len: 16,
+            n_heads: 2,
         }, 9).unwrap();
         let x = Tensor::f32(vec![2, 3, 4], vec![0.1; 24]);
         let (logits, state) = model.forward(&x).unwrap();
@@ -966,5 +1228,60 @@ mod tests {
         let xt = Tensor::f32(vec![2, 4], vec![0.2; 8]);
         let (l2, _) = model.step(&xt, state).unwrap();
         assert_eq!(l2.dims, vec![2, 2]);
+    }
+
+    #[test]
+    fn unknown_kind_error_lists_accepted_values() {
+        let err = NativeModel::init_random(&NativeInit {
+            kind: "mamba9000".to_string(),
+            ..NativeInit::default()
+        }, 1).unwrap_err();
+        let msg = format!("{err:#}");
+        for kind in super::super::mixer::MIXER_KINDS {
+            assert!(msg.contains(kind),
+                    "error should list '{kind}': {msg}");
+        }
+    }
+
+    #[test]
+    fn rejects_mixed_kind_checkpoints() {
+        // splice block 0 of a minGRU model into a minLSTM model's tensors
+        let gru = tiny_model("mingru", false, false);
+        let lstm = tiny_model("minlstm", false, false);
+        let mut named: Vec<NamedTensor> = lstm.to_named().into_iter()
+            .filter(|t| !t.name.starts_with("params/blocks/0/mixer/"))
+            .collect();
+        named.extend(gru.to_named().into_iter()
+            .filter(|t| t.name.starts_with("params/blocks/0/mixer/")));
+        let err = NativeModel::from_named(&named).unwrap_err();
+        assert!(format!("{err:#}").contains("mixed mixer kinds"),
+                "got: {err:#}");
+    }
+
+    #[test]
+    fn transformer_lane_roundtrip_is_bit_exact() {
+        // export mid-stream, import into a fresh state, decode both:
+        // the KV ring + lane_pos header must reproduce decode exactly
+        let model = tiny_model("transformer", true, false);
+        let (batch, t) = (2usize, 5usize);
+        let x = Tensor::i32(vec![batch, t],
+                            (0..batch * t).map(|i| (i % 11) as i32)
+                                .collect());
+        let (_, state) = model.forward(&x).unwrap();
+        assert!(model.lane_state_bytes() >= 4 + 2 * 16 * 8 * 4 * 2,
+                "KV lane export should be O(max_len)");
+        let snap = model.export_lane(&state, 1).unwrap();
+        assert_eq!(snap.len(), model.lane_state_bytes());
+
+        let mut fresh = model.init_state(batch);
+        model.import_lane(&mut fresh, 0, &snap).unwrap();
+        // lane 0 of `fresh` now mirrors lane 1 of `state`
+        let xt = Tensor::i32(vec![batch], vec![7, 7]);
+        let (la, _) = model.step(&xt, state).unwrap();
+        let (lb, _) = model.step(&xt, fresh).unwrap();
+        let (av, bv) = (la.data.as_f32().unwrap(),
+                        lb.data.as_f32().unwrap());
+        assert_eq!(&av[11..22], &bv[0..11],
+                   "imported lane drifted from the exported one");
     }
 }

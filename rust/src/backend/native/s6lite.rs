@@ -1,0 +1,354 @@
+//! S6-lite mixer — the stand-in for Mamba's selective state-space model
+//! (`python/compile/models/s6lite.py`), Section 4.2's comparison point:
+//! *input-dependent* diagonal transitions through the same parallel scan:
+//!
+//! ```text
+//! Δ_t = softplus(W_Δ x_t + b_Δ)        (input-dependent step size)
+//! a_t = exp(-Δ_t ⊙ exp(A_log))         (diagonal transition ∈ (0,1))
+//! b_t = Δ_t ⊙ (W_B x_t)                (input-dependent injection)
+//! h_t = a_t ⊙ h_{t-1} + b_t            (real-space linear scan)
+//! y_t = W_down (h_t ⊙ silu(W_g x_t))   (gated output, as in Mamba)
+//! ```
+//!
+//! Unlike minGRU/minLSTM the transition is not a probability from a
+//! gate pair, so the scan runs in real space
+//! ([`scan::scan_linear_pool_into`]) with a zero initial state; the
+//! thread-invariance machinery (fixed `(batch, D_BLOCK)` channel tasks)
+//! is shared with the log-space scan.
+
+use anyhow::{bail, Result};
+
+use crate::util::threads::{SlicePtr, ThreadPool};
+
+use super::autograd;
+use super::linalg::{self, sigmoid, silu, silu_grad, softplus, Dense};
+use super::mingru::GATE_CHUNK;
+use super::mixer::{Mixer, MixerTape};
+use super::model::MixerParams;
+use super::scan::{self, D_BLOCK};
+use super::scratch::MixerScratch;
+
+/// Below this many elements the reverse selective scan runs inline.
+const PAR_MIN_MAP: usize = 1 << 14;
+
+#[derive(Clone, Debug)]
+pub struct S6Lite {
+    /// `W_Δ`: `d_model → d_h` (bias init −1.0: `softplus(−1) ≈ 0.31`).
+    pub dt: Dense,
+    /// `W_B`: `d_model → d_h`.
+    pub b: Dense,
+    /// `W_g`: `d_model → d_h` (SiLU output gate).
+    pub gate: Dense,
+    /// `d_h → d_model` down-projection.
+    pub down: Dense,
+    /// `A_log` per channel; transitions start near `exp(-Δ·exp(A_log))`
+    /// (S4D-real-style init `log(linspace(1, 8, d_h))`).
+    pub a_log: Vec<f32>,
+}
+
+impl S6Lite {
+    pub fn d_hidden(&self) -> usize {
+        self.dt.d_out
+    }
+
+    /// `(a_t, b_t)` from the `dt`/`b` pre-projections, in fixed
+    /// [`GATE_CHUNK`] chunks (channel index is `i mod d_h`).
+    fn coeffs_into(&self, pool: &ThreadPool, dt_pre: &[f32], bx: &[f32],
+                   a: &mut Vec<f32>, bval: &mut Vec<f32>) {
+        let dh = self.d_hidden();
+        let n = dt_pre.len();
+        linalg::reuse(a, n);
+        linalg::reuse(bval, n);
+        let ap = SlicePtr::new(a.as_mut_slice());
+        let bp = SlicePtr::new(bval.as_mut_slice());
+        let al = &self.a_log;
+        pool.run_chunks(n, GATE_CHUNK, |s, e| {
+            let av = unsafe { ap.slice(s, e - s) };
+            let bv = unsafe { bp.slice(s, e - s) };
+            for i in 0..e - s {
+                let o = s + i;
+                let delta = softplus(dt_pre[o]);
+                av[i] = (-delta * al[o % dh].exp()).exp();
+                bv[i] = delta * bx[o];
+            }
+        });
+    }
+}
+
+/// `out = h ⊙ silu(gate_pre)` across the pool in fixed chunks.
+fn gate_mul_into(pool: &ThreadPool, h: &[f32], gate_pre: &[f32],
+                 out: &mut Vec<f32>) {
+    debug_assert_eq!(h.len(), gate_pre.len());
+    linalg::reuse(out, h.len());
+    let op = SlicePtr::new(out.as_mut_slice());
+    pool.run_chunks(h.len(), GATE_CHUNK, |s, e| {
+        let ov = unsafe { op.slice(s, e - s) };
+        for i in 0..e - s {
+            ov[i] = h[s + i] * silu(gate_pre[s + i]);
+        }
+    });
+}
+
+impl Mixer for S6Lite {
+    fn kind(&self) -> &'static str {
+        "s6lite"
+    }
+
+    fn d_hidden(&self) -> usize {
+        S6Lite::d_hidden(self)
+    }
+
+    fn init_lane(&self, lane: &mut [f32]) {
+        lane.fill(0.0);
+    }
+
+    fn parallel_into(&self, pool: &ThreadPool, x: &[f32], batch: usize,
+                     t: usize, ms: &mut MixerScratch, y: &mut Vec<f32>,
+                     state: &mut [f32]) -> Result<()> {
+        let rows = batch * t;
+        let dh = S6Lite::d_hidden(self);
+        self.dt.apply_pool_into(pool, x, rows, &mut ms.k);
+        self.b.apply_pool_into(pool, x, rows, &mut ms.pre);
+        self.gate.apply_pool_into(pool, x, rows, &mut ms.f);
+        self.coeffs_into(pool, &ms.k, &ms.pre, &mut ms.log_a, &mut ms.log_b);
+        scan::scan_linear_pool_into(pool, &ms.log_a, &ms.log_b, state,
+                                    batch, t, dh, &mut ms.h);
+        for bi in 0..batch {
+            state[bi * dh..(bi + 1) * dh].copy_from_slice(
+                &ms.h[(bi * t + t - 1) * dh..(bi * t + t) * dh]);
+        }
+        gate_mul_into(pool, &ms.h, &ms.f, &mut ms.tmp);
+        self.down.apply_pool_into(pool, &ms.tmp, rows, y);
+        Ok(())
+    }
+
+    fn step_into(&self, pool: &ThreadPool, x_t: &[f32], batch: usize,
+                 _pos: &[u32], state: &mut [f32], ms: &mut MixerScratch,
+                 y: &mut Vec<f32>) -> Result<()> {
+        let dh = S6Lite::d_hidden(self);
+        let n = batch * dh;
+        self.dt.apply_pool_into(pool, x_t, batch, &mut ms.k);
+        self.b.apply_pool_into(pool, x_t, batch, &mut ms.pre);
+        self.gate.apply_pool_into(pool, x_t, batch, &mut ms.f);
+        linalg::reuse(&mut ms.tmp, n);
+        {
+            let sp = SlicePtr::new(&mut *state);
+            let tp = SlicePtr::new(ms.tmp.as_mut_slice());
+            let (dtv, bxv, gv, al) = (&ms.k, &ms.pre, &ms.f, &self.a_log);
+            pool.run_chunks(n, GATE_CHUNK, |s, e| {
+                let sv = unsafe { sp.slice(s, e - s) };
+                let tv = unsafe { tp.slice(s, e - s) };
+                for i in 0..e - s {
+                    let o = s + i;
+                    let delta = softplus(dtv[o]);
+                    let a = (-delta * al[o % dh].exp()).exp();
+                    let h = a * sv[i] + delta * bxv[o];
+                    sv[i] = h;
+                    tv[i] = h * silu(gv[o]);
+                }
+            });
+        }
+        self.down.apply_pool_into(pool, &ms.tmp, batch, y);
+        Ok(())
+    }
+
+    fn forward_tape(&self, pool: &ThreadPool, x: &[f32], batch: usize,
+                    t: usize) -> Result<(MixerTape, Vec<f32>)> {
+        let rows = batch * t;
+        let dh = S6Lite::d_hidden(self);
+        let dt_pre = self.dt.apply_pool(pool, x, rows);
+        let bx = self.b.apply_pool(pool, x, rows);
+        let gate_pre = self.gate.apply_pool(pool, x, rows);
+        let mut a = Vec::new();
+        let mut bval = Vec::new();
+        self.coeffs_into(pool, &dt_pre, &bx, &mut a, &mut bval);
+        let h0 = vec![0.0f32; batch * dh];
+        let mut h = Vec::new();
+        scan::scan_linear_pool_into(pool, &a, &bval, &h0, batch, t, dh,
+                                    &mut h);
+        let mut gated = Vec::new();
+        gate_mul_into(pool, &h, &gate_pre, &mut gated);
+        let mut y = Vec::new();
+        self.down.apply_pool_into(pool, &gated, rows, &mut y);
+        Ok((MixerTape::S6Lite { dt_pre, bx, gate_pre, h }, y))
+    }
+
+    fn backward(&self, pool: &ThreadPool, tape: &MixerTape, x: &[f32],
+                dy: &[f32], batch: usize, t: usize, dx: &mut Vec<f32>,
+                grads: &mut MixerParams) -> Result<()> {
+        let (dt_pre, bx, gate_pre, h) = match tape {
+            MixerTape::S6Lite { dt_pre, bx, gate_pre, h } =>
+                (dt_pre, bx, gate_pre, h),
+            _ => bail!("S6-lite backward: tape kind mismatch"),
+        };
+        let gm = match grads {
+            MixerParams::S6Lite(gm) => gm,
+            _ => bail!("backward: grads mixer kind mismatch"),
+        };
+        let rows = batch * t;
+        let dh = S6Lite::d_hidden(self);
+        let n = rows * dh;
+
+        // y = down(h ⊙ silu(gate_pre)): recompute the gated product,
+        // backprop the down-projection, then split into the gate branch
+        // and the direct state gradient.
+        let mut gated = Vec::new();
+        gate_mul_into(pool, h, gate_pre, &mut gated);
+        let mut dgated = Vec::new();
+        autograd::dense_bwd(pool, &self.down, &gated, dy, rows,
+                            Some((&mut dgated, false)), &mut gm.down.w,
+                            &mut gm.down.b);
+        let mut dgate_pre = vec![0.0f32; n];
+        let mut dh_dir = vec![0.0f32; n];
+        {
+            let gp = SlicePtr::new(dgate_pre.as_mut_slice());
+            let hp = SlicePtr::new(dh_dir.as_mut_slice());
+            let dg = &dgated;
+            pool.run_chunks(n, GATE_CHUNK, |s, e| {
+                let gv = unsafe { gp.slice(s, e - s) };
+                let hv = unsafe { hp.slice(s, e - s) };
+                for i in 0..e - s {
+                    let o = s + i;
+                    gv[i] = dg[o] * h[o] * silu_grad(gate_pre[o]);
+                    hv[i] = dg[o] * silu(gate_pre[o]);
+                }
+            });
+        }
+
+        // Reverse selective scan.  Tasks split the channel axis only
+        // (not batch × channel): each task owns its channels' `da_log`
+        // entries exclusively, so the a_log accumulation is
+        // deterministic at any thread count.
+        let mut ddt = vec![0.0f32; n];
+        let mut dbx = vec![0.0f32; n];
+        let mut da_log = vec![0.0f32; dh];
+        let blocks = dh.div_ceil(D_BLOCK);
+        {
+            let ddtp = SlicePtr::new(ddt.as_mut_slice());
+            let dbxp = SlicePtr::new(dbx.as_mut_slice());
+            let dalp = SlicePtr::new(da_log.as_mut_slice());
+            let task = |ci: usize| {
+                let d0 = ci * D_BLOCK;
+                let d1 = (d0 + D_BLOCK).min(dh);
+                let w = d1 - d0;
+                let dal = unsafe { dalp.slice(d0, w) };
+                for bi in 0..batch {
+                    let mut carry = [0.0f32; D_BLOCK];
+                    for ti in (0..t).rev() {
+                        let off = (bi * t + ti) * dh + d0;
+                        let ddts = unsafe { ddtp.slice(off, w) };
+                        let dbxs = unsafe { dbxp.slice(off, w) };
+                        for j in 0..w {
+                            let o = off + j;
+                            let g_tot = carry[j] + dh_dir[o];
+                            let delta = softplus(dt_pre[o]);
+                            let aj = self.a_log[d0 + j].exp();
+                            let a = (-delta * aj).exp();
+                            let hprev = if ti > 0 { h[o - dh] } else { 0.0 };
+                            let da = g_tot * hprev;
+                            let ddelta = -aj * a * da + g_tot * bx[o];
+                            dal[j] += da * a * (-delta * aj);
+                            dbxs[j] = g_tot * delta;
+                            ddts[j] = ddelta * sigmoid(dt_pre[o]);
+                            carry[j] = a * g_tot;
+                        }
+                    }
+                }
+            };
+            if n < PAR_MIN_MAP || pool.active() == 1 {
+                for ci in 0..blocks {
+                    task(ci);
+                }
+            } else {
+                pool.run(blocks, task);
+            }
+        }
+
+        autograd::dense_bwd(pool, &self.dt, x, &ddt, rows,
+                            Some((dx, false)), &mut gm.dt.w, &mut gm.dt.b);
+        autograd::dense_bwd(pool, &self.b, x, &dbx, rows,
+                            Some((dx, true)), &mut gm.b.w, &mut gm.b.b);
+        autograd::dense_bwd(pool, &self.gate, x, &dgate_pre, rows,
+                            Some((dx, true)), &mut gm.gate.w,
+                            &mut gm.gate.b);
+        for (g, v) in gm.a_log.iter_mut().zip(&da_log) {
+            *g += v;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::threads;
+
+    fn tiny(d: usize, dh: usize) -> S6Lite {
+        let mut rng = Rng::new(0xA5);
+        let mut dense = |d_in: usize, d_out: usize, bias: f32| Dense {
+            d_in,
+            d_out,
+            w: (0..d_in * d_out)
+                .map(|_| rng.normal_f32(0.0, 1.0 / (d_in as f32).sqrt()))
+                .collect(),
+            b: vec![bias; d_out],
+        };
+        let dt = dense(d, dh, -1.0);
+        let b = dense(d, dh, 0.0);
+        let gate = dense(d, dh, 0.0);
+        let down = dense(dh, d, 0.0);
+        let a_log: Vec<f32> = (0..dh)
+            .map(|j| {
+                let v = if dh > 1 {
+                    1.0 + 7.0 * j as f32 / (dh - 1) as f32
+                } else {
+                    1.0
+                };
+                v.ln()
+            })
+            .collect();
+        S6Lite { dt, b, gate, down, a_log }
+    }
+
+    #[test]
+    fn parallel_and_step_agree() {
+        // the same parallel/sequential identity the paper proves for the
+        // minimal RNNs holds for the selective scan
+        let (batch, t, d, dh) = (2usize, 7usize, 5usize, 6usize);
+        let m = tiny(d, dh);
+        let mut rng = Rng::new(11);
+        let x: Vec<f32> = (0..batch * t * d)
+            .map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let pool = threads::global();
+        let mut ms = MixerScratch::default();
+        let mut y = Vec::new();
+        let mut state = vec![0.0f32; batch * dh];
+        m.parallel_into(pool, &x, batch, t, &mut ms, &mut y, &mut state)
+            .unwrap();
+
+        let mut st = vec![0.0f32; batch * dh];
+        let mut ms2 = MixerScratch::default();
+        let mut yt = Vec::new();
+        for ti in 0..t {
+            let mut x_t = vec![0.0f32; batch * d];
+            for bi in 0..batch {
+                x_t[bi * d..(bi + 1) * d].copy_from_slice(
+                    &x[(bi * t + ti) * d..(bi * t + ti + 1) * d]);
+            }
+            m.step_into(pool, &x_t, batch, &[ti as u32; 2], &mut st,
+                        &mut ms2, &mut yt).unwrap();
+            for bi in 0..batch {
+                for i in 0..d {
+                    let p = y[(bi * t + ti) * d + i];
+                    let s = yt[bi * d + i];
+                    assert!((p - s).abs() < 1e-5,
+                            "t={ti} b={bi} i={i}: {p} vs {s}");
+                }
+            }
+        }
+        for (a, b) in state.iter().zip(&st) {
+            assert!((a - b).abs() < 1e-5, "final state drifted");
+        }
+    }
+}

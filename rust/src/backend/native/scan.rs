@@ -46,10 +46,21 @@ pub fn scan_linear(a: &[f32], b: &[f32], h0: &[f32], batch: usize, t: usize,
 /// into `(batch, D_BLOCK)` tasks, each sequential over time.
 pub fn scan_linear_pool(pool: &ThreadPool, a: &[f32], b: &[f32], h0: &[f32],
                         batch: usize, t: usize, d: usize) -> Vec<f32> {
+    let mut out = Vec::new();
+    scan_linear_pool_into(pool, a, b, h0, batch, t, d, &mut out);
+    out
+}
+
+/// Allocation-free core of the real-space scan (the S6-lite selective
+/// scan runs through here with input-dependent `a_t`).
+#[allow(clippy::too_many_arguments)]
+pub fn scan_linear_pool_into(pool: &ThreadPool, a: &[f32], b: &[f32],
+                             h0: &[f32], batch: usize, t: usize, d: usize,
+                             out: &mut Vec<f32>) {
     assert_eq!(a.len(), batch * t * d, "scan_linear a");
     assert_eq!(b.len(), batch * t * d, "scan_linear b");
     assert_eq!(h0.len(), batch * d, "scan_linear h0");
-    let mut out = vec![0.0f32; batch * t * d];
+    super::linalg::reuse(out, batch * t * d);
     let blocks = d.div_ceil(D_BLOCK);
     let op = SlicePtr::new(out.as_mut_slice());
     let task = |idx: usize| {
@@ -77,7 +88,6 @@ pub fn scan_linear_pool(pool: &ThreadPool, a: &[f32], b: &[f32], h0: &[f32],
     } else {
         pool.run(batch * blocks, task);
     }
-    out
 }
 
 /// Sequential log-space scan (Appendix B.1):

@@ -7,9 +7,11 @@
 //! `runtime::Backend` trait performs **zero heap allocations** apart from
 //! the logits tensor handed back to the caller.
 
-/// Buffers used inside a mixer (minGRU/minLSTM) parallel pass or decode
-/// step: gate pre-activations, log-space scan operands, and the scanned
-/// state sequence.
+/// Buffers used inside a mixer parallel pass or decode step.  The gate
+/// fields are shared across mixer kinds (minGRU/minLSTM gates, S6-lite
+/// Δ/B/gate pre-activations); the attention fields are transformer-only.
+/// Unused fields stay empty — capacity is only paid for the paths a
+/// model actually runs.
 #[derive(Clone, Debug, Default)]
 pub struct MixerScratch {
     /// `linear_z` (minGRU) / `linear_i` (minLSTM) pre-activations.
@@ -26,6 +28,12 @@ pub struct MixerScratch {
     pub log_h0: Vec<f32>,
     /// Scanned hidden-state sequence `(B, T, d_h)`.
     pub h: Vec<f32>,
+    /// Gated product (S6-lite) or merged attention context (transformer).
+    pub tmp: Vec<f32>,
+    /// Fused Q/K/V projections `(rows, 3 d_model)` (transformer).
+    pub qkv: Vec<f32>,
+    /// Decode attention scores `(B, n_heads, max_len)` (transformer).
+    pub att: Vec<f32>,
 }
 
 /// Full per-pass scratch: residual stream, normalized inputs, block

@@ -1,0 +1,499 @@
+//! Causal multi-head self-attention mixer — the Transformer baseline of
+//! Figure 2 (`python/compile/models/transformer.py`), and the codebase's
+//! first attention path.  Positional information is added by the
+//! backbone (learned absolute embeddings, `params/pos/w`).
+//!
+//! Decode keeps a **per-lane KV ring cache** of capacity
+//! `max_len`: position `p` writes slot `p mod max_len`, and attention
+//! runs over the last `min(p+1, max_len)` tokens in chronological
+//! order, so a lane's numbers are a pure function of its cache content
+//! and position — exported lanes re-attend bit-identically after
+//! import.  Past `max_len` the cache degrades to a sliding window (the
+//! JAX reference instead clamps its write cursor; the two agree on all
+//! contexts that fit).
+//!
+//! This is the backend's perf foil: every recurrent mixer carries O(1)
+//! state per lane, the transformer carries O(max_len) — the
+//! session-cache export cost difference the paper's comparison matrix
+//! is about.
+
+use anyhow::{bail, Result};
+
+use crate::util::threads::{SlicePtr, ThreadPool};
+
+use super::autograd;
+use super::linalg::{self, Dense};
+use super::mixer::{Mixer, MixerTape};
+use super::model::MixerParams;
+use super::scratch::MixerScratch;
+
+/// Below this many multiply-adds the attention loops run inline.
+const PAR_MIN_ATT: usize = 1 << 15;
+
+#[derive(Clone, Debug)]
+pub struct Transformer {
+    /// Fused `d_model → 3·d_model` Q/K/V projection.
+    pub qkv: Dense,
+    /// `d_model → d_model` output projection.
+    pub proj: Dense,
+    pub n_heads: usize,
+    /// KV cache capacity (and the backbone's positional-table length).
+    pub max_len: usize,
+}
+
+impl Transformer {
+    pub fn d_model(&self) -> usize {
+        self.proj.d_out
+    }
+
+    /// Construction-time validation shared by random init and
+    /// checkpoint load.
+    pub fn check(&self) -> Result<()> {
+        let d = self.d_model();
+        if self.n_heads == 0 || d % self.n_heads != 0 {
+            bail!("transformer: d_model {d} not divisible by n_heads {}",
+                  self.n_heads);
+        }
+        if self.max_len == 0 {
+            bail!("transformer: max_len must be >= 1");
+        }
+        if self.qkv.d_out != 3 * d {
+            bail!("transformer: qkv is {}x{}, want {d}x{}", self.qkv.d_in,
+                  self.qkv.d_out, 3 * d);
+        }
+        Ok(())
+    }
+
+    fn scale(&self) -> f32 {
+        1.0 / ((self.d_model() / self.n_heads) as f32).sqrt()
+    }
+}
+
+impl Mixer for Transformer {
+    fn kind(&self) -> &'static str {
+        "transformer"
+    }
+
+    /// The attention path has no expanded hidden state; its "hidden
+    /// width" is the residual width.
+    fn d_hidden(&self) -> usize {
+        self.d_model()
+    }
+
+    /// Per-lane K cache then V cache, each `max_len × d_model`, slot
+    /// `p mod max_len` holding position `p`'s row.
+    fn state_len(&self) -> usize {
+        2 * self.max_len * self.d_model()
+    }
+
+    fn init_lane(&self, lane: &mut [f32]) {
+        lane.fill(0.0);
+    }
+
+    fn parallel_into(&self, pool: &ThreadPool, x: &[f32], batch: usize,
+                     t: usize, ms: &mut MixerScratch, y: &mut Vec<f32>,
+                     state: &mut [f32]) -> Result<()> {
+        let d = self.d_model();
+        let l = self.max_len;
+        if t > l {
+            bail!("transformer: context length {t} exceeds max_len {l}");
+        }
+        let hh = self.n_heads;
+        let hd = d / hh;
+        let rows = batch * t;
+        let scale = self.scale();
+        self.qkv.apply_pool_into(pool, x, rows, &mut ms.qkv);
+        linalg::reuse(&mut ms.tmp, rows * d);
+        {
+            let qkv: &[f32] = &ms.qkv;
+            let cp = SlicePtr::new(ms.tmp.as_mut_slice());
+            let task = |idx: usize| {
+                let bi = idx / hh;
+                let hi = idx % hh;
+                let (qo, ko, vo) = (hi * hd, d + hi * hd, 2 * d + hi * hd);
+                let mut scores = vec![0.0f32; t];
+                for ti in 0..t {
+                    let q = &qkv[(bi * t + ti) * 3 * d + qo..][..hd];
+                    let mut m = f32::NEG_INFINITY;
+                    for (tj, sc) in scores.iter_mut().enumerate().take(ti + 1) {
+                        let k = &qkv[(bi * t + tj) * 3 * d + ko..][..hd];
+                        let mut dot = 0.0f32;
+                        for u in 0..hd {
+                            dot += q[u] * k[u];
+                        }
+                        *sc = dot * scale;
+                        m = m.max(*sc);
+                    }
+                    let mut denom = 0.0f32;
+                    for sc in scores.iter_mut().take(ti + 1) {
+                        *sc = (*sc - m).exp();
+                        denom += *sc;
+                    }
+                    let inv = 1.0 / denom;
+                    let ctx = unsafe {
+                        cp.slice((bi * t + ti) * d + hi * hd, hd)
+                    };
+                    ctx.fill(0.0);
+                    for (tj, sc) in scores.iter().enumerate().take(ti + 1) {
+                        let p = sc * inv;
+                        let v = &qkv[(bi * t + tj) * 3 * d + vo..][..hd];
+                        for u in 0..hd {
+                            ctx[u] += p * v[u];
+                        }
+                    }
+                }
+            };
+            if batch * hh * t * t * hd < PAR_MIN_ATT || pool.active() == 1 {
+                for idx in 0..batch * hh {
+                    task(idx);
+                }
+            } else {
+                pool.run(batch * hh, task);
+            }
+        }
+        self.proj.apply_pool_into(pool, &ms.tmp, rows, y);
+        // prefill the KV ring: position ti lands in slot ti (t <= L)
+        let sl = 2 * l * d;
+        for bi in 0..batch {
+            for ti in 0..t {
+                let row = &ms.qkv[(bi * t + ti) * 3 * d..][d..3 * d];
+                state[bi * sl + ti * d..bi * sl + (ti + 1) * d]
+                    .copy_from_slice(&row[..d]);
+                state[bi * sl + (l + ti) * d..bi * sl + (l + ti + 1) * d]
+                    .copy_from_slice(&row[d..]);
+            }
+        }
+        Ok(())
+    }
+
+    fn step_into(&self, pool: &ThreadPool, x_t: &[f32], batch: usize,
+                 pos: &[u32], state: &mut [f32], ms: &mut MixerScratch,
+                 y: &mut Vec<f32>) -> Result<()> {
+        let d = self.d_model();
+        let l = self.max_len;
+        let hh = self.n_heads;
+        let hd = d / hh;
+        let sl = 2 * l * d;
+        if pos.len() != batch {
+            bail!("transformer step: {} lane positions for batch {batch}",
+                  pos.len());
+        }
+        let scale = self.scale();
+        self.qkv.apply_pool_into(pool, x_t, batch, &mut ms.qkv);
+        // write this token's K/V row into its lane's ring slot
+        for bi in 0..batch {
+            let slot = pos[bi] as usize % l;
+            let row = &ms.qkv[bi * 3 * d..][d..3 * d];
+            state[bi * sl + slot * d..bi * sl + (slot + 1) * d]
+                .copy_from_slice(&row[..d]);
+            state[bi * sl + (l + slot) * d..bi * sl + (l + slot + 1) * d]
+                .copy_from_slice(&row[d..]);
+        }
+        linalg::reuse(&mut ms.tmp, batch * d);
+        linalg::reuse(&mut ms.att, batch * hh * l);
+        {
+            let st: &[f32] = state;
+            let qkv: &[f32] = &ms.qkv;
+            let cp = SlicePtr::new(ms.tmp.as_mut_slice());
+            let ap = SlicePtr::new(ms.att.as_mut_slice());
+            let task = |idx: usize| {
+                let bi = idx / hh;
+                let hi = idx % hh;
+                let p = pos[bi] as usize;
+                let count = (p + 1).min(l);
+                // oldest kept position is p+1-count; walk chronologically
+                let start = (p + 1 - count) % l;
+                let q = &qkv[bi * 3 * d + hi * hd..][..hd];
+                let scores = unsafe {
+                    ap.slice((bi * hh + hi) * l, count)
+                };
+                let mut m = f32::NEG_INFINITY;
+                for (i, sc) in scores.iter_mut().enumerate() {
+                    let slot = (start + i) % l;
+                    let k = &st[bi * sl + slot * d + hi * hd..][..hd];
+                    let mut dot = 0.0f32;
+                    for u in 0..hd {
+                        dot += q[u] * k[u];
+                    }
+                    *sc = dot * scale;
+                    m = m.max(*sc);
+                }
+                let mut denom = 0.0f32;
+                for sc in scores.iter_mut() {
+                    *sc = (*sc - m).exp();
+                    denom += *sc;
+                }
+                let inv = 1.0 / denom;
+                let ctx = unsafe { cp.slice(bi * d + hi * hd, hd) };
+                ctx.fill(0.0);
+                for (i, sc) in scores.iter().enumerate() {
+                    let slot = (start + i) % l;
+                    let p_att = sc * inv;
+                    let v = &st[bi * sl + (l + slot) * d + hi * hd..][..hd];
+                    for u in 0..hd {
+                        ctx[u] += p_att * v[u];
+                    }
+                }
+            };
+            if batch * hh * l * hd < PAR_MIN_ATT || pool.active() == 1 {
+                for idx in 0..batch * hh {
+                    task(idx);
+                }
+            } else {
+                pool.run(batch * hh, task);
+            }
+        }
+        self.proj.apply_pool_into(pool, &ms.tmp, batch, y);
+        Ok(())
+    }
+
+    fn forward_tape(&self, pool: &ThreadPool, x: &[f32], batch: usize,
+                    t: usize) -> Result<(MixerTape, Vec<f32>)> {
+        let d = self.d_model();
+        let l = self.max_len;
+        if t > l {
+            bail!("transformer: context length {t} exceeds max_len {l}");
+        }
+        let hh = self.n_heads;
+        let hd = d / hh;
+        let rows = batch * t;
+        let scale = self.scale();
+        let qkv = self.qkv.apply_pool(pool, x, rows);
+        let mut att = vec![0.0f32; batch * hh * t * t];
+        let mut ctx = vec![0.0f32; rows * d];
+        {
+            let qr: &[f32] = &qkv;
+            let apx = SlicePtr::new(att.as_mut_slice());
+            let cp = SlicePtr::new(ctx.as_mut_slice());
+            let task = |idx: usize| {
+                let bi = idx / hh;
+                let hi = idx % hh;
+                let (qo, ko, vo) = (hi * hd, d + hi * hd, 2 * d + hi * hd);
+                for ti in 0..t {
+                    let q = &qr[(bi * t + ti) * 3 * d + qo..][..hd];
+                    let probs = unsafe {
+                        apx.slice(((bi * hh + hi) * t + ti) * t, ti + 1)
+                    };
+                    let mut m = f32::NEG_INFINITY;
+                    for (tj, sc) in probs.iter_mut().enumerate() {
+                        let k = &qr[(bi * t + tj) * 3 * d + ko..][..hd];
+                        let mut dot = 0.0f32;
+                        for u in 0..hd {
+                            dot += q[u] * k[u];
+                        }
+                        *sc = dot * scale;
+                        m = m.max(*sc);
+                    }
+                    let mut denom = 0.0f32;
+                    for sc in probs.iter_mut() {
+                        *sc = (*sc - m).exp();
+                        denom += *sc;
+                    }
+                    let inv = 1.0 / denom;
+                    let cv = unsafe {
+                        cp.slice((bi * t + ti) * d + hi * hd, hd)
+                    };
+                    for (tj, sc) in probs.iter_mut().enumerate() {
+                        *sc *= inv;
+                        let v = &qr[(bi * t + tj) * 3 * d + vo..][..hd];
+                        for u in 0..hd {
+                            cv[u] += *sc * v[u];
+                        }
+                    }
+                }
+            };
+            if batch * hh * t * t * hd < PAR_MIN_ATT || pool.active() == 1 {
+                for idx in 0..batch * hh {
+                    task(idx);
+                }
+            } else {
+                pool.run(batch * hh, task);
+            }
+        }
+        let mut y = Vec::new();
+        self.proj.apply_pool_into(pool, &ctx, rows, &mut y);
+        Ok((MixerTape::Transformer { qkv, att, ctx }, y))
+    }
+
+    fn backward(&self, pool: &ThreadPool, tape: &MixerTape, x: &[f32],
+                dy: &[f32], batch: usize, t: usize, dx: &mut Vec<f32>,
+                grads: &mut MixerParams) -> Result<()> {
+        let (qkv, att, ctx) = match tape {
+            MixerTape::Transformer { qkv, att, ctx } => (qkv, att, ctx),
+            _ => bail!("transformer backward: tape kind mismatch"),
+        };
+        let gm = match grads {
+            MixerParams::Transformer(gm) => gm,
+            _ => bail!("backward: grads mixer kind mismatch"),
+        };
+        let d = self.d_model();
+        let hh = self.n_heads;
+        let hd = d / hh;
+        let rows = batch * t;
+        let scale = self.scale();
+        let mut dctx = Vec::new();
+        autograd::dense_bwd(pool, &self.proj, ctx, dy, rows,
+                            Some((&mut dctx, false)), &mut gm.proj.w,
+                            &mut gm.proj.b);
+        let mut dqkv = vec![0.0f32; rows * 3 * d];
+        {
+            let dq: &[f32] = &dctx;
+            let dp = SlicePtr::new(dqkv.as_mut_slice());
+            let task = |idx: usize| {
+                let bi = idx / hh;
+                let hi = idx % hh;
+                let (qo, ko, vo) = (hi * hd, d + hi * hd, 2 * d + hi * hd);
+                let mut dprobs = vec![0.0f32; t];
+                for ti in 0..t {
+                    let dc = &dq[(bi * t + ti) * d + hi * hd..][..hd];
+                    let probs = &att[((bi * hh + hi) * t + ti) * t..][..=ti];
+                    // dv_tj += p_tj · dctx; dprobs_tj = dctx · v_tj
+                    let mut psum = 0.0f32;
+                    for (tj, &p) in probs.iter().enumerate() {
+                        let v = &qkv[(bi * t + tj) * 3 * d + vo..][..hd];
+                        let dv = unsafe {
+                            dp.slice((bi * t + tj) * 3 * d + vo, hd)
+                        };
+                        let mut dot = 0.0f32;
+                        for u in 0..hd {
+                            dv[u] += p * dc[u];
+                            dot += dc[u] * v[u];
+                        }
+                        dprobs[tj] = dot;
+                        psum += dot * p;
+                    }
+                    // softmax VJP, then through the scaled dot product
+                    let q = &qkv[(bi * t + ti) * 3 * d + qo..][..hd];
+                    let dqr = unsafe {
+                        dp.slice((bi * t + ti) * 3 * d + qo, hd)
+                    };
+                    for (tj, &p) in probs.iter().enumerate() {
+                        let ds = p * (dprobs[tj] - psum) * scale;
+                        if ds == 0.0 {
+                            continue;
+                        }
+                        let k = &qkv[(bi * t + tj) * 3 * d + ko..][..hd];
+                        let dk = unsafe {
+                            dp.slice((bi * t + tj) * 3 * d + ko, hd)
+                        };
+                        for u in 0..hd {
+                            dqr[u] += ds * k[u];
+                            dk[u] += ds * q[u];
+                        }
+                    }
+                }
+            };
+            if batch * hh * t * t * hd < PAR_MIN_ATT || pool.active() == 1 {
+                for idx in 0..batch * hh {
+                    task(idx);
+                }
+            } else {
+                pool.run(batch * hh, task);
+            }
+        }
+        autograd::dense_bwd(pool, &self.qkv, x, &dqkv, rows,
+                            Some((dx, false)), &mut gm.qkv.w,
+                            &mut gm.qkv.b);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::threads;
+
+    fn tiny(d: usize, n_heads: usize, max_len: usize) -> Transformer {
+        let mut rng = Rng::new(0x7F);
+        let mut dense = |d_in: usize, d_out: usize, scale: f32| Dense {
+            d_in,
+            d_out,
+            w: (0..d_in * d_out).map(|_| rng.normal_f32(0.0, scale))
+                .collect(),
+            b: vec![0.0; d_out],
+        };
+        let qkv = dense(d, 3 * d, 1.0 / (d as f32).sqrt());
+        let proj = dense(d, d, 0.02);
+        let m = Transformer { qkv, proj, n_heads, max_len };
+        m.check().unwrap();
+        m
+    }
+
+    #[test]
+    fn parallel_and_step_agree() {
+        let (batch, t, d) = (2usize, 6usize, 8usize);
+        let m = tiny(d, 4, 16);
+        let mut rng = Rng::new(13);
+        let x: Vec<f32> = (0..batch * t * d)
+            .map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let pool = threads::global();
+        let mut ms = MixerScratch::default();
+        let mut y = Vec::new();
+        let mut state = vec![0.0f32; batch * m.state_len()];
+        m.parallel_into(pool, &x, batch, t, &mut ms, &mut y, &mut state)
+            .unwrap();
+
+        let mut st = vec![0.0f32; batch * m.state_len()];
+        let mut ms2 = MixerScratch::default();
+        let mut yt = Vec::new();
+        for ti in 0..t {
+            let mut x_t = vec![0.0f32; batch * d];
+            for bi in 0..batch {
+                x_t[bi * d..(bi + 1) * d].copy_from_slice(
+                    &x[(bi * t + ti) * d..(bi * t + ti + 1) * d]);
+            }
+            m.step_into(pool, &x_t, batch, &[ti as u32; 2], &mut st,
+                        &mut ms2, &mut yt).unwrap();
+            for bi in 0..batch {
+                for i in 0..d {
+                    let p = y[(bi * t + ti) * d + i];
+                    let s = yt[bi * d + i];
+                    assert!((p - s).abs() < 1e-4,
+                            "t={ti} b={bi} i={i}: {p} vs {s}");
+                }
+            }
+        }
+        // the prefilled ring must match the step-built one exactly
+        for (a, b) in state.iter().zip(&st) {
+            assert!((a - b).abs() < 1e-5, "KV ring drifted");
+        }
+    }
+
+    #[test]
+    fn ring_wraps_into_a_sliding_window() {
+        // decoding past max_len keeps attending over the last max_len
+        // tokens: numbers stay finite and depend only on that window
+        let (batch, d, l) = (1usize, 4usize, 3usize);
+        let m = tiny(d, 2, l);
+        let pool = threads::global();
+        let mut rng = Rng::new(17);
+        let mut st = vec![0.0f32; batch * m.state_len()];
+        let mut ms = MixerScratch::default();
+        let mut y = Vec::new();
+        let mut last = Vec::new();
+        for ti in 0..l as u32 + 4 {
+            let x_t: Vec<f32> = (0..batch * d)
+                .map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            m.step_into(pool, &x_t, batch, &[ti], &mut st, &mut ms, &mut y)
+                .unwrap();
+            assert!(y.iter().all(|v| v.is_finite()), "step {ti}");
+            last = y.clone();
+        }
+        assert!(last.iter().any(|v| *v != 0.0));
+    }
+
+    #[test]
+    fn rejects_contexts_beyond_capacity() {
+        let m = tiny(4, 2, 4);
+        let pool = threads::global();
+        let mut ms = MixerScratch::default();
+        let mut y = Vec::new();
+        let mut state = vec![0.0f32; m.state_len()];
+        let x = vec![0.1f32; 5 * 4];
+        let err = m.parallel_into(pool, &x, 1, 5, &mut ms, &mut y,
+                                  &mut state);
+        assert!(err.is_err());
+        assert!(format!("{:#}", err.unwrap_err()).contains("max_len"));
+    }
+}

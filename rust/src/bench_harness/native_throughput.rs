@@ -126,6 +126,10 @@ pub fn run(cfg: &Config) -> Result<Json> {
         mlp: true,
         mlp_mult: 4,
         forget_bias: 1.0,
+        // transformer bench runs need the KV ring to cover the prefill
+        // context; harmless for the recurrent kinds
+        max_len: cfg.prefill_t.max(256),
+        n_heads: 4,
     }, 0x7B)?;
     let backend = NativeBackend::new(model);
     let pool = threads::global();
@@ -387,6 +391,8 @@ pub fn run(cfg: &Config) -> Result<Json> {
             mlp: true,
             mlp_mult: 4,
             forget_bias: 1.0,
+            max_len: cfg.prefill_t.max(256),
+            n_heads: 4,
         }, 0x7C)?, "bench-recovery");
     let ckpt = rec_dir.join("bench-recovery.step00000001.ckpt");
     let rc = bench("ckpt_commit", &bc, || {

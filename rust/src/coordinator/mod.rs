@@ -75,6 +75,9 @@ Subcommands:
                                the admission-queue scheduler)
   rollout <env>                roll out a trained RL policy (native)
   bench                        native-backend throughput benchmark
+  compare <workload>           train every mixer kind (mingru, minlstm,
+                               s6lite, transformer) on one workload and
+                               print the paper-style comparison table
   experiment <id>|all          regenerate a paper table/figure
   experiments                  list experiment ids
   perf <variant>               profile the train-step hot path (L3 vs XLA)
@@ -88,7 +91,10 @@ selective_copy / chomsky/<task> (masked CE), lra/<task> (pooled
 classification), rl/<env> (masked-MSE action regression) — with
 `--dropout` honored on the residual branches; native inference loads
 weights with --resume or samples from a seeded random init sized by
---kind/--layers/--d-model/--expansion.  `rollout` drives a
+--kind/--layers/--d-model/--expansion (`--kind` selects the sequence
+mixer: mingru | minlstm | s6lite | transformer; the transformer also
+takes --max-len/--n-heads and keeps O(context) per-lane KV state, the
+recurrent kinds keep O(1) state).  `rollout` drives a
 natively-trained rl/<env> checkpoint in its live environment
 (Decision-Transformer-style serving).  `train`, `generate`, `serve`, and
 `bench` take `--threads N` (or MINRNN_THREADS) to size the native thread
@@ -144,6 +150,7 @@ fn dispatch(args: Vec<String>) -> Result<()> {
         "serve" => cmd_serve(rest),
         "rollout" => cmd_rollout(rest),
         "bench" => cmd_bench(rest),
+        "compare" => cmd_compare(rest),
         "experiment" => cmd_experiment(rest),
         "perf" => cmd_perf(rest),
         "experiments" => {
@@ -260,10 +267,15 @@ fn train_command() -> Command {
         .opt("batch", Some("32"), "native: batch size")
         .opt("seq-len", Some("64"), "native: sequence length")
         .opt("kind", Some("mingru"), "native fresh-init mixer: \
-             mingru | minlstm")
+             mingru | minlstm | s6lite | transformer")
         .opt("layers", Some("2"), "native fresh-init layer count")
         .opt("d-model", Some("64"), "native fresh-init residual width")
         .opt("expansion", Some("1"), "native fresh-init hidden expansion")
+        .opt("max-len", Some("0"),
+             "transformer: positional table / KV-cache capacity \
+              (0 = seq-len)")
+        .opt("n-heads", Some("4"),
+             "transformer: attention heads (must divide d-model)")
         .flag("conv", "native fresh-init: temporal conv4 per block")
         .flag("mlp", "native fresh-init: MLP per block")
         .opt("threads", None,
@@ -542,6 +554,11 @@ fn native_trainer(p: &Parsed, cfg: &TrainConfig, workload: &str,
                 mlp: p.flag("mlp"),
                 mlp_mult: 4,
                 forget_bias: cfg.forget_bias,
+                max_len: match p.usize("max-len")? {
+                    0 => p.usize("seq-len")?,
+                    n => n,
+                },
+                n_heads: p.usize("n-heads")?,
             };
             log_info!("native training: fresh {} init ({} layers, d={}, \
                        out={}) with the {} head on '{workload}'",
@@ -599,10 +616,15 @@ fn backend_opts(cmd: Command) -> Command {
         .opt("config", None, "JSON config file (`backend` key honored)")
         .opt("resume", None, "checkpoint to load (default: fresh init)")
         .opt("kind", Some("mingru"),
-             "native fresh-init mixer: mingru | minlstm")
+             "native fresh-init mixer: mingru | minlstm | s6lite | \
+              transformer")
         .opt("layers", Some("2"), "native fresh-init layer count")
         .opt("d-model", Some("64"), "native fresh-init residual width")
         .opt("expansion", Some("1"), "native fresh-init hidden expansion")
+        .opt("max-len", Some("256"),
+             "transformer: positional table / KV-cache capacity")
+        .opt("n-heads", Some("4"),
+             "transformer: attention heads (must divide d-model)")
         .opt("threads", None,
              "native thread-pool size (default: MINRNN_THREADS, else all \
               cores)")
@@ -661,7 +683,14 @@ fn reject_variant_for_native(p: &Parsed) -> Result<()> {
 /// Build the native backend from --resume or a seeded random init.
 fn native_backend(p: &Parsed, vocab: usize) -> Result<NativeBackend> {
     match p.get("resume") {
-        Some(path) => NativeBackend::from_checkpoint(Path::new(path)),
+        Some(path) => {
+            let backend = NativeBackend::from_checkpoint(Path::new(path))?;
+            log_info!("native backend: loaded {} from {path} \
+                       ({} state bytes/lane)",
+                      backend.model.kind_summary(),
+                      backend.model.lane_state_bytes());
+            Ok(backend)
+        }
         None => {
             let cfg = NativeInit {
                 kind: p.req("kind")?.to_string(),
@@ -670,12 +699,16 @@ fn native_backend(p: &Parsed, vocab: usize) -> Result<NativeBackend> {
                 expansion: p.usize("expansion")?,
                 vocab_in: Some(vocab),
                 vocab_out: vocab,
+                max_len: p.usize("max-len")?,
+                n_heads: p.usize("n-heads")?,
                 ..Default::default()
             };
-            log_info!("native backend: fresh {} init ({} layers, d={})",
-                      cfg.kind, cfg.n_layers, cfg.d_model);
-            Ok(NativeBackend::new(NativeModel::init_random(
-                &cfg, p.u64("seed")?)?))
+            let model = NativeModel::init_random(&cfg, p.u64("seed")?)?;
+            log_info!("native backend: fresh {} init (d={}, {} state \
+                       bytes/lane)",
+                      model.kind_summary(), cfg.d_model,
+                      model.lane_state_bytes());
+            Ok(NativeBackend::new(model))
         }
     }
 }
@@ -1079,7 +1112,8 @@ fn cmd_bench(args: &[String]) -> Result<()> {
         .opt("threads", None,
              "native thread-pool size (default: MINRNN_THREADS, else all \
               cores)")
-        .opt("kind", Some("mingru"), "mixer: mingru | minlstm")
+        .opt("kind", Some("mingru"),
+             "mixer: mingru | minlstm | s6lite | transformer")
         .opt("layers", None, "layer count (default: profile)")
         .opt("d-model", None, "residual width (default: profile)")
         .opt("max-batch", None, "serve lane cap (default: profile)")
@@ -1104,6 +1138,97 @@ fn cmd_bench(args: &[String]) -> Result<()> {
     }
     cfg.out = Some(PathBuf::from(p.req("out")?));
     bench_harness::native_throughput::run(&cfg)?;
+    Ok(())
+}
+
+/// `minrnn compare <workload>`: train each mixer kind in the paper's
+/// comparison matrix on the same workload with an identical budget and
+/// print one summary row per kind — parameter count, final training
+/// loss, best eval loss, steps/s, and the per-lane decode state each
+/// kind carries (the recurrent kinds are O(1) in context; the
+/// transformer's KV ring is O(max-len), the foil the paper measures
+/// against).
+fn cmd_compare(args: &[String]) -> Result<()> {
+    use crate::backend::MIXER_KINDS;
+    let cmd = Command::new("compare",
+                           "train every mixer kind on one workload")
+        .opt("steps", Some("80"), "optimizer steps per mixer")
+        .opt("lr", Some("0.003"), "peak learning rate")
+        .opt("seed", Some("0"), "seed (shared across kinds)")
+        .opt("batch", Some("8"), "batch size")
+        .opt("seq-len", Some("32"), "sequence length")
+        .opt("layers", Some("2"), "layer count")
+        .opt("d-model", Some("32"), "residual width")
+        .opt("expansion", Some("1"),
+             "hidden expansion (recurrent mixers; the transformer always \
+              mixes at d-model)")
+        .opt("n-heads", Some("4"),
+             "transformer attention heads (must divide d-model)")
+        .opt("dropout", Some("0"), "residual-branch dropout rate")
+        .opt("eval-every", Some("20"), "steps between evals (0 = off)")
+        .opt("faults", None,
+             "deterministic fault-injection spec for chaos testing")
+        .opt("threads", None,
+             "native thread-pool size (default: MINRNN_THREADS, else all \
+              cores)")
+        .positional("workload", "native workload (char_lm, random_tokens, \
+                     selective_copy, chomsky/<task>, lra/<task>, rl/<env>)");
+    let p = cmd.parse(args)?;
+    apply_faults_opt(&p)?;
+    apply_threads_opt(&p)?;
+    let workload = p.pos.first()
+        .ok_or_else(|| anyhow!("usage: minrnn compare <workload>"))?
+        .clone();
+    let spec = native_workload(&workload)?;
+    let mut cfg = TrainConfig::default();
+    cfg.apply_cli(&p)?;
+    cfg.backend = "native".to_string();
+    cfg.variant = workload.clone();
+    let (b, t) = (p.usize("batch")?, p.usize("seq-len")?);
+    log_info!("compare: {} kinds x {} steps on '{workload}' \
+               (b{b} t{t}, {} layers, d={})",
+              MIXER_KINDS.len(), cfg.steps, p.usize("layers")?,
+              p.usize("d-model")?);
+    let mut rows = Vec::new();
+    for kind in MIXER_KINDS {
+        let init = NativeInit {
+            kind: kind.to_string(),
+            n_layers: p.usize("layers")?,
+            d_model: p.usize("d-model")?,
+            expansion: p.usize("expansion")?,
+            vocab_in: spec.vocab_in,
+            input_dim: spec.input_dim,
+            vocab_out: spec.out_dim,
+            conv: false,
+            mlp: false,
+            mlp_mult: 4,
+            forget_bias: cfg.forget_bias,
+            max_len: t.max(1),
+            n_heads: p.usize("n-heads")?,
+        };
+        let model = NativeModel::init_random(&init, cfg.seed)?;
+        let n_params: usize = model.leaves().iter().map(|v| v.len()).sum();
+        let state_bytes = model.lane_state_bytes();
+        let mut nt = NativeTrainer::new(model, &workload);
+        nt.head = spec.head;
+        nt.drop_rate = cfg.dropout;
+        let mut data = data_source(&workload, b, t, None)?;
+        log_info!("compare: training {kind} ({n_params} params, \
+                   {state_bytes} state bytes/lane)");
+        let report = trainer::run_loop(&mut nt, &cfg, 0, data.as_mut())?;
+        rows.push((kind, n_params, state_bytes, report));
+    }
+    println!();
+    println!("workload '{workload}': {} steps each, b{b} t{t}, lr {}",
+             cfg.steps, cfg.lr);
+    println!("{:<12} {:>9} {:>11} {:>11} {:>8} {:>12}",
+             "kind", "params", "final_loss", "best_eval", "steps/s",
+             "state/lane");
+    for (kind, n_params, state_bytes, r) in &rows {
+        println!("{:<12} {:>9} {:>11.4} {:>11.4} {:>8.1} {:>11}B",
+                 kind, n_params, r.final_loss, r.best_eval_loss,
+                 r.steps_per_sec, state_bytes);
+    }
     Ok(())
 }
 

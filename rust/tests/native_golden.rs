@@ -201,13 +201,10 @@ fn model_from_golden(doc: &Json) -> NativeModel {
     NativeModel::from_named(&named).expect("build model from golden params")
 }
 
-#[test]
-fn golden_backbone_mingru_forward_and_decode() {
-    let doc = load_json("backbone_mingru.json");
-    let model = model_from_golden(&doc);
-    assert_eq!(model.kind(), "mingru");
-    assert_eq!(model.n_layers(), 2);
-
+/// Shared token-input backbone check: parallel forward (prefill path)
+/// against `logits_parallel`, then the sequential decode chain against
+/// `logits_step`.
+fn assert_token_backbone(doc: &Json, model: &NativeModel, what: &str) {
     let (xdims, tokens) = i32s(doc.req("x").unwrap());
     let (b, t) = (xdims[0], xdims[1]);
     let (_, want_par) = f32s(doc.req("logits_parallel").unwrap());
@@ -218,7 +215,7 @@ fn golden_backbone_mingru_forward_and_decode() {
     let (all, _) = model.forward(&x).unwrap();
     assert_eq!(all.dims, vec![b, t, model.vocab_out]);
     assert_close(all.data.as_f32().unwrap(), &want_par,
-                 "backbone_mingru forward");
+                 &format!("{what} forward"));
 
     // sequential decode chain
     let v = model.vocab_out;
@@ -235,7 +232,37 @@ fn golden_backbone_mingru_forward_and_decode() {
                 .copy_from_slice(&lv[bi * v..(bi + 1) * v]);
         }
     }
-    assert_close(&got, &want_step, "backbone_mingru decode");
+    assert_close(&got, &want_step, &format!("{what} decode"));
+}
+
+#[test]
+fn golden_backbone_mingru_forward_and_decode() {
+    let doc = load_json("backbone_mingru.json");
+    let model = model_from_golden(&doc);
+    assert_eq!(model.kind(), "mingru");
+    assert_eq!(model.n_layers(), 2);
+    assert_token_backbone(&doc, &model, "backbone_mingru");
+}
+
+#[test]
+fn golden_backbone_s6lite_forward_and_decode() {
+    // the selective scan (input-dependent decay) against the JAX oracle:
+    // Δ/B from the token stream, real-space scan, gated SiLU output
+    let doc = load_json("backbone_s6lite.json");
+    let model = model_from_golden(&doc);
+    assert_eq!(model.kind(), "s6lite");
+    assert_token_backbone(&doc, &model, "backbone_s6lite");
+}
+
+#[test]
+fn golden_backbone_transformer_forward_and_decode() {
+    // causal attention + learned positions against the JAX oracle; the
+    // decode chain exercises the per-lane KV ring (T <= max_len here, so
+    // the sliding window never engages and JAX parity holds)
+    let doc = load_json("backbone_transformer.json");
+    let model = model_from_golden(&doc);
+    assert_eq!(model.kind(), "transformer");
+    assert_token_backbone(&doc, &model, "backbone_transformer");
 }
 
 #[test]

@@ -15,7 +15,9 @@
 use minrnn::backend::native::linalg::Dense;
 use minrnn::backend::native::scan::{scan_linear, scan_linear_pool,
                                     scan_log, scan_log_pool};
-use minrnn::backend::{NativeBackend, NativeInit, NativeModel};
+use minrnn::backend::native::MixerScratch;
+use minrnn::backend::{Mixer, NativeBackend, NativeInit, NativeModel,
+                      MIXER_KINDS};
 use minrnn::coordinator::{infer, server};
 use minrnn::util::rng::Rng;
 use minrnn::util::threads::ThreadPool;
@@ -109,6 +111,96 @@ fn prop_scan_linear_bit_exact_across_thread_counts() {
 }
 
 // ---------------------------------------------------------------------------
+// every mixer kind is bit-exact across thread counts (prefill + decode)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_mixer_kinds_bit_exact_across_thread_counts() {
+    // big enough that batch*heads*t*t*hd and the gate chunking exceed the
+    // kernels' inline thresholds, so the pooled paths actually run
+    let (batch, t, d) = (4usize, 40usize, 32usize);
+    let pools: Vec<ThreadPool> =
+        THREAD_COUNTS.iter().map(|&n| ThreadPool::new(n)).collect();
+    for &kind in MIXER_KINDS {
+        let model = NativeModel::init_random(&NativeInit {
+            kind: kind.to_string(),
+            n_layers: 1,
+            d_model: d,
+            expansion: 2,
+            vocab_in: Some(24),
+            vocab_out: 24,
+            max_len: 64,
+            n_heads: 4,
+            ..NativeInit::default()
+        }, 0xB17).unwrap();
+        let mixer = model.blocks[0].mixer.m();
+        let sl = mixer.state_len();
+        let mut rng = Rng::new(0x5EED);
+        let x: Vec<f32> = (0..batch * t * d)
+            .map(|_| rng.normal_f32(0.0, 1.0)).collect();
+
+        // prefill: outputs AND final mixer state identical on every pool
+        let mut want_y: Option<Vec<f32>> = None;
+        let mut want_state: Option<Vec<f32>> = None;
+        for (pool, &n) in pools.iter().zip(&THREAD_COUNTS) {
+            let mut ms = MixerScratch::default();
+            let mut y = Vec::new();
+            let mut state = vec![0.0f32; batch * sl];
+            for lane in state.chunks_mut(sl.max(1)) {
+                mixer.init_lane(lane);
+            }
+            mixer.parallel_into(pool, &x, batch, t, &mut ms, &mut y,
+                                &mut state).unwrap();
+            match (&want_y, &want_state) {
+                (None, _) => {
+                    want_y = Some(y);
+                    want_state = Some(state);
+                }
+                (Some(wy), Some(ws)) => {
+                    assert_eq!(&y, wy,
+                               "{kind} prefill differs on {n} threads");
+                    assert_eq!(&state, ws,
+                               "{kind} state differs on {n} threads");
+                }
+                _ => unreachable!(),
+            }
+        }
+
+        // decode: every step's output identical on every pool
+        let mut states: Vec<Vec<f32>> = pools.iter()
+            .map(|_| {
+                let mut s = vec![0.0f32; batch * sl];
+                for lane in s.chunks_mut(sl.max(1)) {
+                    mixer.init_lane(lane);
+                }
+                s
+            }).collect();
+        let mut scratch: Vec<MixerScratch> =
+            pools.iter().map(|_| MixerScratch::default()).collect();
+        for ti in 0..t {
+            let mut x_t = vec![0.0f32; batch * d];
+            for bi in 0..batch {
+                x_t[bi * d..(bi + 1) * d].copy_from_slice(
+                    &x[(bi * t + ti) * d..(bi * t + ti + 1) * d]);
+            }
+            let pos = vec![ti as u32; batch];
+            let mut want: Option<Vec<f32>> = None;
+            for (pi, pool) in pools.iter().enumerate() {
+                let mut y = Vec::new();
+                mixer.step_into(pool, &x_t, batch, &pos, &mut states[pi],
+                                &mut scratch[pi], &mut y).unwrap();
+                match &want {
+                    None => want = Some(y),
+                    Some(w) => assert_eq!(&y, w,
+                        "{kind} step {ti} differs on {} threads",
+                        THREAD_COUNTS[pi]),
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // batched lockstep serving == per-request sequential decode
 // ---------------------------------------------------------------------------
 
@@ -125,12 +217,14 @@ fn serving_model(kind: &str) -> NativeModel {
         mlp: true,
         mlp_mult: 2,
         forget_bias: 0.5,
+        max_len: 32, // covers the longest prompt + decode below
+        n_heads: 4,
     }, 0xFACE).unwrap()
 }
 
 #[test]
 fn prop_batched_lockstep_decode_matches_sequential() {
-    for kind in ["mingru", "minlstm"] {
+    for &kind in MIXER_KINDS {
         let backend = NativeBackend::new(serving_model(kind));
         let mut rng = Rng::new(77);
         let requests: Vec<server::Request> = (0..7).map(|i| {

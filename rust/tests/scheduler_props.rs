@@ -46,6 +46,7 @@ fn serving_backend(seed: u64) -> NativeBackend {
         mlp: true,
         mlp_mult: 2,
         forget_bias: 0.5,
+        ..NativeInit::default()
     }, seed).unwrap())
 }
 

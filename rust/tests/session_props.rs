@@ -49,6 +49,7 @@ fn session_backend(seed: u64) -> NativeBackend {
         mlp: true,
         mlp_mult: 2,
         forget_bias: 0.5,
+        ..NativeInit::default()
     }, seed).unwrap())
 }
 
@@ -229,6 +230,7 @@ fn mismatched_fingerprint_is_a_clean_error_not_a_shape_panic() {
         mlp: false,
         mlp_mult: 2,
         forget_bias: 0.5,
+        ..NativeInit::default()
     }, 3).unwrap());
     assert_ne!(backend.state_fingerprint(), other.state_fingerprint(),
                "differently shaped models must fingerprint differently");

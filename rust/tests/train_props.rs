@@ -156,6 +156,20 @@ fn mirror_logits(model: &NativeModel, leaves: &[Vec<f64>], x: &Tensor,
         }
         _ => panic!("mirror: input/x mismatch"),
     };
+    // learned positional table (transformer backbones) rides right after
+    // the input leaves in canonical order
+    if model.pos.is_some() {
+        let pw = lv.pop();
+        let pl = pw.len() / d;
+        for bi in 0..batch {
+            for ti in 0..t {
+                let row = ti.min(pl - 1);
+                for i in 0..d {
+                    h[(bi * t + ti) * d + i] += pw[row * d + i];
+                }
+            }
+        }
+    }
     let drop64 = |v: &mut [f64], stream: u64| {
         if let Some((rate, seed)) = drop {
             if rate > 0.0 {
@@ -178,9 +192,8 @@ fn mirror_logits(model: &NativeModel, leaves: &[Vec<f64>], x: &Tensor,
             None => u1,
         };
         let dh = blk.mixer.d_hidden();
-        // recurrence h_t = a ⊙ h_{t-1} + b, h_0 = g(0) = 0.5
-        let mut hseq = vec![0.0; rows * dh];
-        match &blk.mixer {
+        let mut y = match &blk.mixer {
+            // recurrence h_t = a ⊙ h_{t-1} + b, h_0 = g(0) = 0.5
             MixerParams::MinGru(_) => {
                 let wz = lv.pop();
                 let bz = lv.pop();
@@ -188,6 +201,7 @@ fn mirror_logits(model: &NativeModel, leaves: &[Vec<f64>], x: &Tensor,
                 let bh = lv.pop();
                 let k = dense64(&mixer_in, wz, bz, rows, d, dh);
                 let pre = dense64(&mixer_in, wh, bh, rows, d, dh);
+                let mut hseq = vec![0.0; rows * dh];
                 for bi in 0..batch {
                     for di in 0..dh {
                         let mut v = H0_VALUE as f64;
@@ -199,6 +213,9 @@ fn mirror_logits(model: &NativeModel, leaves: &[Vec<f64>], x: &Tensor,
                         }
                     }
                 }
+                let wd = lv.pop();
+                let bd = lv.pop();
+                dense64(&hseq, wd, bd, rows, dh, d)
             }
             MixerParams::MinLstm(_) => {
                 let wf = lv.pop();
@@ -210,6 +227,7 @@ fn mirror_logits(model: &NativeModel, leaves: &[Vec<f64>], x: &Tensor,
                 let f = dense64(&mixer_in, wf, bf, rows, d, dh);
                 let k = dense64(&mixer_in, wi, bi_, rows, d, dh);
                 let pre = dense64(&mixer_in, wh, bh, rows, d, dh);
+                let mut hseq = vec![0.0; rows * dh];
                 for bi in 0..batch {
                     for di in 0..dh {
                         let mut v = H0_VALUE as f64;
@@ -223,11 +241,85 @@ fn mirror_logits(model: &NativeModel, leaves: &[Vec<f64>], x: &Tensor,
                         }
                     }
                 }
+                let wd = lv.pop();
+                let bd = lv.pop();
+                dense64(&hseq, wd, bd, rows, dh, d)
             }
-        }
-        let wd = lv.pop();
-        let bd = lv.pop();
-        let mut y = dense64(&hseq, wd, bd, rows, dh, d);
+            // selective scan: Δ = softplus(dt(x)), a = exp(-Δ·exp(a_log)),
+            // h_t = a ⊙ h_{t-1} + Δ ⊙ b(x), y = down(h ⊙ silu(gate(x)))
+            MixerParams::S6Lite(_) => {
+                let wdt = lv.pop();
+                let bdt = lv.pop();
+                let wb = lv.pop();
+                let bb = lv.pop();
+                let wg = lv.pop();
+                let bg = lv.pop();
+                let wd = lv.pop();
+                let bd = lv.pop();
+                let a_log = lv.pop();
+                let dt = dense64(&mixer_in, wdt, bdt, rows, d, dh);
+                let bx = dense64(&mixer_in, wb, bb, rows, d, dh);
+                let gp = dense64(&mixer_in, wg, bg, rows, d, dh);
+                let mut gated = vec![0.0; rows * dh];
+                for bi in 0..batch {
+                    for di in 0..dh {
+                        let mut v = 0.0f64;
+                        for ti in 0..t {
+                            let o = (bi * t + ti) * dh + di;
+                            let delta = softplus64(dt[o]);
+                            let a = (-delta * a_log[di].exp()).exp();
+                            v = a * v + delta * bx[o];
+                            gated[o] = v * silu64(gp[o]);
+                        }
+                    }
+                }
+                dense64(&gated, wd, bd, rows, dh, d)
+            }
+            // causal multi-head attention over the fused qkv projection
+            MixerParams::Transformer(m) => {
+                let wq = lv.pop();
+                let bq = lv.pop();
+                let wp = lv.pop();
+                let bp = lv.pop();
+                let qkv = dense64(&mixer_in, wq, bq, rows, d, 3 * d);
+                let hh = m.n_heads;
+                let hd = d / hh;
+                let scale = 1.0 / (hd as f64).sqrt();
+                let mut ctx = vec![0.0; rows * d];
+                for bi in 0..batch {
+                    for hi in 0..hh {
+                        for ti in 0..t {
+                            let q = &qkv[(bi * t + ti) * 3 * d + hi * hd..]
+                                [..hd];
+                            let mut sc = vec![0.0f64; ti + 1];
+                            for (tj, s) in sc.iter_mut().enumerate() {
+                                let k = &qkv[(bi * t + tj) * 3 * d + d
+                                             + hi * hd..][..hd];
+                                *s = (0..hd).map(|u| q[u] * k[u])
+                                    .sum::<f64>() * scale;
+                            }
+                            let mx = sc.iter().cloned()
+                                .fold(f64::NEG_INFINITY, f64::max);
+                            let mut denom = 0.0;
+                            for s in sc.iter_mut() {
+                                *s = (*s - mx).exp();
+                                denom += *s;
+                            }
+                            for (tj, s) in sc.iter().enumerate() {
+                                let p = s / denom;
+                                let v = &qkv[(bi * t + tj) * 3 * d + 2 * d
+                                             + hi * hd..][..hd];
+                                for u in 0..hd {
+                                    ctx[(bi * t + ti) * d + hi * hd + u] +=
+                                        p * v[u];
+                                }
+                            }
+                        }
+                    }
+                }
+                dense64(&ctx, wp, bp, rows, d, d)
+            }
+        };
         drop64(&mut y, 2 * li as u64);
         for (hv, yv) in h.iter_mut().zip(&y) {
             *hv += yv;
@@ -372,6 +464,8 @@ fn grad_check(case: &Case, head: Head, seed: u64) {
         mlp: case.mlp,
         mlp_mult: 2,
         forget_bias: 1.0,
+        max_len: 16, // covers t = 6 below
+        n_heads: 2,  // must divide d_model = 6
     }, seed).unwrap();
     let (batch, t) = (2usize, 6usize);
     let mut rng = Rng::new(seed ^ 0xFD);
@@ -487,6 +581,28 @@ fn grad_check_minlstm_all_architectures() {
 }
 
 #[test]
+fn grad_check_s6lite_all_architectures() {
+    // the selective-scan VJP (input-dependent decay, a_log accumulation,
+    // the gated output path) across the same architecture matrix
+    for (i, &(conv, mlp)) in [(false, false), (true, true), (true, false),
+                              (false, true)].iter().enumerate() {
+        grad_check(&Case { kind: "s6lite", conv, mlp, input_dim: None,
+                           drop: None }, Head::MaskedCe, 700 + i as u64);
+    }
+}
+
+#[test]
+fn grad_check_transformer_all_architectures() {
+    // the attention VJP (softmax, fused qkv, the learned positional
+    // table's scatter-add) across the same architecture matrix
+    for (i, &(conv, mlp)) in [(false, false), (true, true), (true, false),
+                              (false, true)].iter().enumerate() {
+        grad_check(&Case { kind: "transformer", conv, mlp, input_dim: None,
+                           drop: None }, Head::MaskedCe, 800 + i as u64);
+    }
+}
+
+#[test]
 fn grad_check_continuous_input_projection() {
     // the in_proj (RL-style features) path has its own backward
     grad_check(&Case { kind: "mingru", conv: false, mlp: false,
@@ -536,6 +652,12 @@ fn grad_check_with_dropout() {
     grad_check(&Case { kind: "mingru", conv: false, mlp: true,
                        input_dim: None, drop: Some((0.3, 80)) },
                Head::SeqClassify, 603);
+    grad_check(&Case { kind: "s6lite", conv: false, mlp: true,
+                       input_dim: None, drop: Some((0.15, 81)) },
+               Head::MaskedCe, 604);
+    grad_check(&Case { kind: "transformer", conv: true, mlp: true,
+                       input_dim: None, drop: Some((0.15, 82)) },
+               Head::MaskedCe, 605);
 }
 
 // ---------------------------------------------------------------------------
