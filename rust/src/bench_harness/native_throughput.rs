@@ -222,11 +222,12 @@ pub fn run(cfg: &Config) -> Result<Json> {
         n_tokens: cfg.serve_tokens,
         session: None,
     }).collect();
-    let stats = server::serve_opts(&backend, requests, &ServeOpts {
-        temperature: 0.8,
-        seed: 7,
-        max_batch: cfg.max_batch,
-    })?;
+    let stats = server::ServeConfig::new()
+        .temperature(0.8)
+        .seed(7)
+        .max_batch(cfg.max_batch)
+        .build()?
+        .run(&backend, requests)?;
     log_info!("  serve    {} req x {} tok (max-batch {}): {:>8.0} tok/s, \
                mean {:.1} ms, p95 {:.1} ms",
               cfg.serve_requests, cfg.serve_tokens, cfg.max_batch,
@@ -320,11 +321,11 @@ pub fn run(cfg: &Config) -> Result<Json> {
     // shared history is never re-prefilled.
     let n_sessions = cfg.serve_requests.max(1);
     let session_cache = RefCell::new(SessionCache::new(8 << 20));
-    let greedy = ServeOpts {
-        temperature: 0.0,
-        seed: 7,
-        max_batch: cfg.max_batch,
-    };
+    let greedy = server::ServeConfig::new()
+        .temperature(0.0)
+        .seed(7)
+        .max_batch(cfg.max_batch)
+        .build()?;
     let turn1: Vec<Request> = (0..n_sessions).map(|i| Request {
         id: i as u64,
         prompt: (0..8 + rng.usize_below(8))
@@ -332,8 +333,8 @@ pub fn run(cfg: &Config) -> Result<Json> {
         n_tokens: cfg.serve_tokens,
         session: Some(i as u64),
     }).collect();
-    let cold = server::serve_with_cache(&backend, turn1.clone(), &greedy,
-                                        &session_cache)?;
+    let cold = greedy.run_with_cache(&backend, turn1.clone(),
+                                     Some(&session_cache))?;
     let mut turn2 = Vec::new();
     for r in &cold.responses {
         let mut prompt = turn1[r.id as usize].prompt.clone();
@@ -347,8 +348,8 @@ pub fn run(cfg: &Config) -> Result<Json> {
             session: Some(r.id),
         });
     }
-    let warm = server::serve_with_cache(&backend, turn2, &greedy,
-                                        &session_cache)?;
+    let warm = greedy.run_with_cache(&backend, turn2,
+                                     Some(&session_cache))?;
     let lookups = warm.session_hits + warm.session_misses;
     let hit_rate = warm.session_hits as f64 / lookups.max(1) as f64;
     log_info!("  sessions {} warm follow-up turns: hit rate {:.2}, {} \

@@ -1,0 +1,356 @@
+//! Dependency-free HTTP/1.1 front-end over the sharded serving tier —
+//! hand-rolled on [`std::net::TcpListener`], in the spirit of the
+//! vendored-crate policy: no hyper, no tokio, no serde.
+//!
+//! Endpoints (all JSON, via [`crate::util::json`]):
+//!
+//! * `POST /v1/submit` — `{"prompt": [i32…], "n_tokens": N,
+//!   "session": S?}` → `{"id", "tokens", "queue_s", "service_s",
+//!   "batch"}`.  The connection blocks until the tokens are generated;
+//!   greedy output is bit-identical to an in-process
+//!   [`super::scheduler::SubmitHandle`] submission (pinned by
+//!   `tests/http_props.rs`).
+//! * `GET /v1/stats` — live [`super::server::ServeStats`] wire shape
+//!   ([`super::server::ServeStats::to_json`]) plus `"replicas"`.
+//! * `GET /v1/health` — `{"health", "replicas"}`, cheap enough for a
+//!   load-balancer probe.
+//! * `POST /v1/reload` — `{"checkpoint": "path"}`; rolls the checkpoint
+//!   across the replicas one at a time ([`super::shard::Shard::reload`])
+//!   with zero dropped requests.
+//! * `POST /v1/shutdown` — graceful drain; the process's
+//!   [`HttpServer::wait`] then returns the final stats.
+//!
+//! Error responses are `{"error": …, "kind": …}` where `error` is the
+//! uniform [`std::fmt::Display`] rendering of the typed error
+//! ([`super::scheduler::SubmitError`], or the checkpoint
+//! [`crate::util::io::LoadError`] surfaced through the reload reply) —
+//! no ad-hoc `format!` per call site.  Submission errors map onto
+//! status codes: empty prompt → 400, queue full / shutting down → 503,
+//! expired → 504, failed → 500.
+//!
+//! The concurrency model is deliberately boring: one accept loop, one
+//! thread per connection (each request blocks on its replica anyway),
+//! one request per connection (`Connection: close`).  The interesting
+//! concurrency — batching, routing, hot-swap — lives in
+//! [`super::shard`].
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::{self, Json};
+use crate::{log_info, log_warn};
+
+use super::scheduler::SubmitError;
+use super::server::ServeStats;
+use super::shard::Shard;
+
+/// Largest accepted request body.  Prompts are token-id arrays, so even
+/// a book-length prompt is far below this; anything bigger is a client
+/// bug or abuse.
+const MAX_BODY_BYTES: usize = 16 << 20;
+
+/// How long a connection may dribble its request in before we hang up.
+const READ_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// The serving tier's network front door: an accept loop owning a
+/// [`Shard`].  Bind, then either [`HttpServer::wait`] (deployments park
+/// here; returns the final drained stats after a shutdown request) or
+/// keep the handle around and [`HttpServer::stop`] from the same
+/// process (tests).
+pub struct HttpServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept: Option<JoinHandle<Result<ServeStats>>>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (e.g. `127.0.0.1:8080`; port 0 picks a free port —
+    /// read it back from [`HttpServer::addr`]) and start serving the
+    /// shard.
+    pub fn bind(addr: &str, shard: Shard) -> Result<HttpServer> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding http server to {addr}"))?;
+        let local = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&shutdown);
+        let accept = std::thread::Builder::new()
+            .name("http-accept".to_string())
+            .spawn(move || accept_loop(listener, shard, flag))?;
+        log_info!("http: serving on {local} (POST /v1/submit, GET \
+                   /v1/stats, GET /v1/health, POST /v1/reload, POST \
+                   /v1/shutdown)");
+        Ok(HttpServer { addr: local, shutdown, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Ask the server to stop from this process: equivalent to
+    /// `POST /v1/shutdown` without the socket round-trip.
+    pub fn stop(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        wake(self.addr);
+    }
+
+    /// Block until the server shuts down (via `POST /v1/shutdown` or
+    /// [`HttpServer::stop`]) and every replica drains, then return the
+    /// merged lifetime [`ServeStats`].
+    pub fn wait(mut self) -> Result<ServeStats> {
+        let accept = self.accept.take()
+            .ok_or_else(|| anyhow!("http server already waited on"))?;
+        accept.join().map_err(|_| anyhow!("http accept loop panicked"))?
+    }
+}
+
+/// Unblock an accept loop that is parked in `accept()` by completing
+/// one throwaway connection.
+fn wake(addr: SocketAddr) {
+    let _ = TcpStream::connect(addr);
+}
+
+fn accept_loop(listener: TcpListener, shard: Shard,
+               shutdown: Arc<AtomicBool>) -> Result<ServeStats> {
+    let shard = Arc::new(shard);
+    let addr = listener.local_addr()?;
+    let mut workers: Vec<JoinHandle<()>> = Vec::new();
+    for conn in listener.incoming() {
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = match conn {
+            Ok(s) => s,
+            Err(e) => {
+                log_warn!("http: accept failed: {e}");
+                continue;
+            }
+        };
+        let conn_shard = Arc::clone(&shard);
+        let conn_flag = Arc::clone(&shutdown);
+        workers.push(std::thread::spawn(move || {
+            if let Err(e) = handle_connection(stream, &conn_shard,
+                                              &conn_flag, addr) {
+                log_warn!("http: connection error: {e:#}");
+            }
+        }));
+        // reap finished handlers so the vec tracks live connections only
+        workers.retain(|w| !w.is_finished());
+    }
+    for w in workers {
+        let _ = w.join();
+    }
+    let shard = Arc::try_unwrap(shard)
+        .map_err(|_| anyhow!("a connection still holds the shard after \
+                              shutdown"))?;
+    log_info!("http: draining replicas");
+    shard.shutdown()
+}
+
+/// Serve exactly one request on `stream` and close it.
+fn handle_connection(mut stream: TcpStream, shard: &Shard,
+                     shutdown: &AtomicBool, addr: SocketAddr) -> Result<()> {
+    stream.set_read_timeout(Some(READ_TIMEOUT))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    if reader.read_line(&mut line)? == 0 {
+        return Ok(()); // bare connect (e.g. the shutdown wake); fine
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    // headers: only Content-Length matters to us
+    let mut content_len = 0usize;
+    loop {
+        let mut header = String::new();
+        if reader.read_line(&mut header)? == 0 {
+            break;
+        }
+        let header = header.trim();
+        if header.is_empty() {
+            break;
+        }
+        if let Some((key, val)) = header.split_once(':') {
+            if key.trim().eq_ignore_ascii_case("content-length") {
+                content_len = val.trim().parse().map_err(
+                    |_| anyhow!("bad Content-Length '{}'", val.trim()))?;
+            }
+        }
+    }
+    if content_len > MAX_BODY_BYTES {
+        return respond(&mut stream, 413, &json::obj(vec![
+            ("error", json::s("request body too large")),
+            ("kind", json::s("body_too_large")),
+        ]));
+    }
+    let mut body = vec![0u8; content_len];
+    reader.read_exact(&mut body)?;
+    let (status, payload, stop) = route(&method, &path, &body, shard);
+    respond(&mut stream, status, &payload)?;
+    if stop {
+        // flag first, then complete one connection to unpark accept()
+        shutdown.store(true, Ordering::SeqCst);
+        wake(addr);
+    }
+    Ok(())
+}
+
+/// Dispatch one parsed request.  Returns `(status, body, shutdown?)`.
+fn route(method: &str, path: &str, body: &[u8], shard: &Shard)
+         -> (u16, Json, bool) {
+    match (method, path) {
+        ("POST", "/v1/submit") => {
+            let (status, payload) = submit(body, shard);
+            (status, payload, false)
+        }
+        ("GET", "/v1/stats") => {
+            let mut stats = shard.stats().to_json();
+            if let Json::Obj(pairs) = &mut stats {
+                pairs.push(("replicas".to_string(),
+                            json::num(shard.replicas() as f64)));
+            }
+            (200, stats, false)
+        }
+        ("GET", "/v1/health") => {
+            let health = shard.stats().health;
+            (200, json::obj(vec![
+                ("health", json::s(&health.to_string())),
+                ("replicas", json::num(shard.replicas() as f64)),
+            ]), false)
+        }
+        ("POST", "/v1/reload") => match reload(body, shard) {
+            Ok(n) => (200, json::obj(vec![
+                ("reloaded", json::num(n as f64)),
+            ]), false),
+            Err((status, e)) => (status, json::obj(vec![
+                ("error", json::s(&e)),
+                ("kind", json::s("reload_failed")),
+            ]), false),
+        },
+        ("POST", "/v1/shutdown") => {
+            (200, json::obj(vec![("draining", Json::Bool(true))]), true)
+        }
+        ("GET" | "POST", p) if ["/v1/submit", "/v1/stats", "/v1/health",
+                                "/v1/reload", "/v1/shutdown"]
+            .contains(&p) => {
+            (405, json::obj(vec![
+                ("error", json::s(&format!("method {method} not allowed \
+                                            on {p}"))),
+                ("kind", json::s("method_not_allowed")),
+            ]), false)
+        }
+        _ => (404, json::obj(vec![
+            ("error", json::s(&format!("no such endpoint: {method} \
+                                        {path}"))),
+            ("kind", json::s("not_found")),
+        ]), false),
+    }
+}
+
+/// `POST /v1/submit` body → shard submission → response body.
+fn submit(body: &[u8], shard: &Shard) -> (u16, Json) {
+    let parsed = match parse_submit(body) {
+        Ok(p) => p,
+        Err(e) => {
+            return (400, json::obj(vec![
+                ("error", json::s(&e)),
+                ("kind", json::s("bad_request")),
+            ]));
+        }
+    };
+    let (prompt, n_tokens, session) = parsed;
+    match shard.submit(prompt, n_tokens, session) {
+        Ok(r) => (200, json::obj(vec![
+            ("id", json::num(r.id as f64)),
+            ("tokens", Json::Arr(
+                r.tokens.iter().map(|&t| json::num(t as f64)).collect())),
+            ("queue_s", json::num(r.queue_s)),
+            ("service_s", json::num(r.service_s)),
+            ("batch", json::num(r.batch as f64)),
+        ])),
+        // the typed error's Display rendering *is* the error body
+        Err(e) => {
+            let (status, kind) = match &e {
+                SubmitError::EmptyPrompt { .. } => (400, "empty_prompt"),
+                SubmitError::QueueFull(_) => (503, "queue_full"),
+                SubmitError::Closed(_) => (503, "shutting_down"),
+                SubmitError::Expired { .. } => (504, "expired"),
+                SubmitError::Failed { .. } => (500, "failed"),
+            };
+            (status, json::obj(vec![
+                ("error", json::s(&e.to_string())),
+                ("kind", json::s(kind)),
+            ]))
+        }
+    }
+}
+
+type SubmitBody = (Vec<i32>, usize, Option<u64>);
+
+fn parse_submit(body: &[u8]) -> std::result::Result<SubmitBody, String> {
+    let text = std::str::from_utf8(body)
+        .map_err(|_| "body is not utf-8".to_string())?;
+    let v = json::parse(text).map_err(|e| format!("bad json: {e}"))?;
+    let prompt = v.get("prompt").and_then(Json::as_arr)
+        .ok_or("missing 'prompt' (array of token ids)")?
+        .iter()
+        .map(|t| t.as_i64().map(|x| x as i32))
+        .collect::<Option<Vec<i32>>>()
+        .ok_or("'prompt' must contain only integer token ids")?;
+    let n_tokens = v.get("n_tokens").and_then(Json::as_usize)
+        .ok_or("missing 'n_tokens' (tokens to generate)")?;
+    if n_tokens == 0 {
+        return Err("'n_tokens' must be >= 1".to_string());
+    }
+    let session = match v.get("session") {
+        None | Some(Json::Null) => None,
+        Some(s) => Some(s.as_i64().map(|x| x as u64)
+            .ok_or("'session' must be an integer id")?),
+    };
+    Ok((prompt, n_tokens, session))
+}
+
+/// `POST /v1/reload` body → rolling swap.  A load failure keeps the old
+/// model serving and reports the typed load error's rendering.
+fn reload(body: &[u8], shard: &Shard)
+          -> std::result::Result<usize, (u16, String)> {
+    let text = std::str::from_utf8(body)
+        .map_err(|_| (400, "body is not utf-8".to_string()))?;
+    let v = json::parse(text).map_err(|e| (400, format!("bad json: {e}")))?;
+    let ckpt = v.get("checkpoint").and_then(Json::as_str)
+        .ok_or_else(|| (400, "missing 'checkpoint' (path to an MRNN \
+                             checkpoint)".to_string()))?;
+    shard.reload(std::path::Path::new(ckpt))
+        .map_err(|e| (500, format!("{e:#}")))
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+fn respond(stream: &mut TcpStream, status: u16, payload: &Json)
+           -> Result<()> {
+    let body = json::to_string(payload);
+    write!(stream,
+           "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\n\
+            Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+           reason(status), body.len())?;
+    stream.flush()?;
+    Ok(())
+}

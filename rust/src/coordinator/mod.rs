@@ -1,14 +1,18 @@
 //! Coordinator: CLI entrypoints, training orchestration ([`trainer`]),
-//! the inference engine ([`infer`]), the serving stack ([`server`] for the
-//! synchronous facade, [`scheduler`] for async admission-controlled
-//! serving, [`session_cache`] for constant-state session warm-starts,
-//! [`supervisor`] for restart-with-backoff serve supervision), and the
-//! experiment registry.
+//! the inference engine ([`infer`]), the serving stack ([`server`] for
+//! the [`server::ServeConfig`] facade, [`scheduler`] for async
+//! admission-controlled serving, [`session_cache`] for constant-state
+//! session warm-starts, [`supervisor`] for restart-with-backoff serve
+//! supervision, [`shard`] for consistent-hash-routed multi-replica
+//! serving, [`http`] for the dependency-free network front-end), and
+//! the experiment registry.
 
+pub mod http;
 pub mod infer;
 pub mod scheduler;
 pub mod server;
 pub mod session_cache;
+pub mod shard;
 pub mod supervisor;
 pub mod trainer;
 
@@ -110,6 +114,15 @@ warm-start from cached states covering a verified prompt prefix and skip
 that prefix's prefill; `--sessions K` tags the synthetic workload with K
 round-robin conversation ids, `--session-dir P` persists the cache across
 runs, and the hit/miss/evict counters land in the serve report.
+`serve --http HOST:PORT` (native backend only) puts the serving tier on
+the network instead of running a synthetic workload: `--replicas N`
+scheduler replicas (one model + session cache each) behind a
+consistent-hash router keyed on the session id, fronted by a
+dependency-free HTTP/1.1 server exposing POST /v1/submit,
+GET /v1/stats, GET /v1/health, POST /v1/reload (rolling checkpoint
+hot-swap with zero dropped requests), and POST /v1/shutdown (graceful
+drain).  All serve entrypoints — flag-driven and HTTP — parse into the
+same ServeConfig, so they are one code path.
 
 Robustness: native training with `--checkpoint <dir> --checkpoint-every N`
 commits a crash-recovery checkpoint (fsync'd, CRC-trailered) to a ring of
@@ -816,45 +829,29 @@ fn report_serve(stats: &server::ServeStats) {
 /// loop runs on this thread — the backend (PJRT handles are not `Send`)
 /// never crosses threads, only plain-data requests do.
 fn serve_async<B: crate::runtime::Backend>(
-    backend: &B, requests: Vec<server::Request>, opts: &server::ServeOpts,
-    cache: Option<&RefCell<session_cache::SessionCache>>, p: &Parsed)
+    backend: &B, requests: Vec<server::Request>, cfg: &server::ServeConfig,
+    cache: Option<&RefCell<session_cache::SessionCache>>, rate: f64)
     -> Result<server::ServeStats> {
-    let backpressure = match p.req("backpressure")? {
-        "block" => scheduler::Backpressure::Block,
-        "reject" => scheduler::Backpressure::Reject,
-        other => return Err(anyhow!(
-            "--backpressure expects block | reject, got '{other}'")),
-    };
-    let deadline_ms = p.u64("deadline-ms")?;
-    let rate = p.f64("arrival-rate")?;
     if rate < 0.0 {
         return Err(anyhow!("--arrival-rate must be >= 0"));
     }
-    let (mut sched, handle) = scheduler::Scheduler::new(
-        backend,
-        scheduler::SchedulerOpts {
-            serve: opts.clone(),
-            queue_depth: p.usize("queue-depth")?,
-            backpressure,
-            default_deadline: if deadline_ms > 0 {
-                Some(std::time::Duration::from_millis(deadline_ms))
-            } else {
-                None
-            },
-            // open-loop serving: provision the full lane budget up front
-            // so requests trickling in one by one still share a batch
-            lanes: Some(opts.max_batch),
-            retry_limit: p.u64("retry-limit")? as u32,
-        })?;
+    // open-loop serving: provision the full lane budget up front so
+    // requests trickling in one by one still share a batch
+    let mut opts = cfg.scheduler_opts();
+    if opts.lanes.is_none() {
+        opts.lanes = Some(cfg.max_batch);
+    }
+    let queue_depth = opts.queue_depth;
+    let backpressure = opts.backpressure;
+    let (mut sched, handle) = scheduler::Scheduler::new(backend, opts)?;
     if let Some(c) = cache {
         sched.set_session_cache(c);
     }
     let n = requests.len();
     log_info!("async serving: {n} requests, arrival rate {} req/s, queue \
-               depth {}, {:?} backpressure",
+               depth {queue_depth}, {backpressure:?} backpressure",
               if rate > 0.0 { format!("{rate:.1}") }
-              else { "max".to_string() },
-              p.usize("queue-depth")?, backpressure);
+              else { "max".to_string() });
     let submitter = std::thread::spawn(move || {
         let mut refused = 0usize;
         for req in requests {
@@ -887,12 +884,12 @@ fn serve_async<B: crate::runtime::Backend>(
 /// `--session-dir`), so requests the dead generation completed
 /// warm-start from their exported states instead of re-prefilling.
 fn serve_supervised<B: crate::runtime::Backend>(
-    backend: &B, requests: Vec<server::Request>, opts: &server::ServeOpts,
-    cache: Option<&RefCell<session_cache::SessionCache>>, p: &Parsed)
-    -> Result<server::ServeStats> {
+    backend: &B, requests: Vec<server::Request>, cfg: &server::ServeConfig,
+    cache: Option<&RefCell<session_cache::SessionCache>>, rate: f64,
+    max_restarts: u32) -> Result<server::ServeStats> {
     let sup = supervisor::SupervisorOpts {
-        max_restarts: p.u64("max-restarts")? as u32,
-        seed: opts.seed,
+        max_restarts,
+        seed: cfg.seed,
         ..Default::default()
     };
     supervisor::supervise(&sup, |generation| {
@@ -900,7 +897,7 @@ fn serve_supervised<B: crate::runtime::Backend>(
             log_info!("serving generation {generation}: resubmitting {} \
                        request(s)", requests.len());
         }
-        serve_async(backend, requests.clone(), opts, cache, p)
+        serve_async(backend, requests.clone(), cfg, cache, rate)
     })
 }
 
@@ -949,45 +946,32 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .flag("print-responses",
               "print each response's tokens (sorted by request id), for \
                comparing runs")
+        .opt("http", None,
+             "serve over HTTP on this address (host:port; native backend \
+              only): --replicas scheduler replicas behind a \
+              consistent-hash session router, with POST /v1/submit, GET \
+              /v1/stats, GET /v1/health, POST /v1/reload (rolling \
+              checkpoint hot-swap), POST /v1/shutdown")
+        .opt("replicas", Some("2"),
+             "http: scheduler replicas (one model + session cache each)")
         .positional("variant", "LM variant (pjrt backend only)");
     let p = cmd.parse(args)?;
-    apply_faults_opt(&p)?;
     apply_threads_opt(&p)?;
+    // every serve mode — sync, async, supervised, HTTP — parses into the
+    // same ServeConfig (which also installs --faults); one code path
+    let cfg = server::ServeConfig::from_cli(&p)?;
+    if let Some(addr) = p.get("http") {
+        return cmd_serve_http(&p, &cfg, addr);
+    }
     let n = p.usize("requests")?;
     let n_tokens = p.usize("tokens")?;
-    let opts = server::ServeOpts {
-        temperature: p.f32("temperature")?,
-        seed: p.u64("seed")?,
-        max_batch: p.usize("max-batch")?,
-    };
     let supervised = p.flag("supervised");
     let is_async = p.flag("async") || supervised;
-    let cache_mb = p.usize("session-cache-mb")?;
-    let session_dir = p.get("session-dir").map(PathBuf::from);
     let sessions = p.usize("sessions")?;
-    let cache_file = session_dir.as_ref().map(|d| d.join("sessions.mrsc"));
-    let cache = if cache_mb > 0 || session_dir.is_some() {
-        let budget = cache_mb.max(1) << 20;
-        let c = match &cache_file {
-            // a corrupt cache file is discarded (with a warning) and the
-            // run proceeds cold — never a startup failure
-            Some(f) => {
-                let c = session_cache::SessionCache
-                    ::load_or_recover(f, budget);
-                if c.len() > 0 {
-                    log_info!("session cache: loaded {} entries ({} KiB) \
-                               from {}", c.len(), c.used_bytes() >> 10,
-                              f.display());
-                }
-                c
-            }
-            None => session_cache::SessionCache::new(budget),
-        };
-        Some(RefCell::new(c))
-    } else {
-        None
-    };
-    let mut rng = Rng::new(p.u64("seed")?);
+    let rate = p.f64("arrival-rate")?;
+    let max_restarts = p.u64("max-restarts")? as u32;
+    let cache = cfg.open_session_cache("sessions").map(RefCell::new);
+    let mut rng = Rng::new(cfg.seed);
     let stats = match resolve_backend(&p)?.as_str() {
         "native" => {
             reject_variant_for_native(&p)?;
@@ -995,14 +979,12 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             let requests = synthetic_requests(
                 &mut rng, n, n_tokens, backend.model.vocab_out, sessions);
             if supervised {
-                serve_supervised(&backend, requests, &opts, cache.as_ref(),
-                                 &p)?
+                serve_supervised(&backend, requests, &cfg, cache.as_ref(),
+                                 rate, max_restarts)?
             } else if is_async {
-                serve_async(&backend, requests, &opts, cache.as_ref(), &p)?
-            } else if let Some(c) = &cache {
-                server::serve_with_cache(&backend, requests, &opts, c)?
+                serve_async(&backend, requests, &cfg, cache.as_ref(), rate)?
             } else {
-                server::serve_opts(&backend, requests, &opts)?
+                cfg.run_with_cache(&backend, requests, cache.as_ref())?
             }
         }
         "pjrt" => {
@@ -1023,27 +1005,19 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             // the PJRT backend has no state export; an attached cache
             // stays inert and every request falls back to prefill
             if supervised {
-                serve_supervised(&backend, requests, &opts, cache.as_ref(),
-                                 &p)?
+                serve_supervised(&backend, requests, &cfg, cache.as_ref(),
+                                 rate, max_restarts)?
             } else if is_async {
-                serve_async(&backend, requests, &opts, cache.as_ref(), &p)?
-            } else if let Some(c) = &cache {
-                server::serve_with_cache(&backend, requests, &opts, c)?
+                serve_async(&backend, requests, &cfg, cache.as_ref(), rate)?
             } else {
-                server::serve_opts(&backend, requests, &opts)?
+                cfg.run_with_cache(&backend, requests, cache.as_ref())?
             }
         }
         other => return Err(anyhow!(
             "unknown backend '{other}' (expected pjrt | native)")),
     };
-    if let (Some(c), Some(f)) = (&cache, &cache_file) {
-        if let Some(dir) = f.parent() {
-            std::fs::create_dir_all(dir)?;
-        }
-        c.borrow().save(f)?;
-        log_info!("session cache: saved {} entries ({} KiB) to {}",
-                  c.borrow().len(), c.borrow().used_bytes() >> 10,
-                  f.display());
+    if let Some(c) = &cache {
+        cfg.save_session_cache("sessions", &c.borrow())?;
     }
     report_serve(&stats);
     if p.flag("print-responses") {
@@ -1055,6 +1029,48 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             println!("response {}: {}", r.id, toks.join(" "));
         }
     }
+    Ok(())
+}
+
+/// `minrnn serve --http HOST:PORT`: the network serving tier.  Builds a
+/// [`shard::ModelSource`] from the CLI (checkpoint or seeded fresh init),
+/// stands up `--replicas` scheduler replicas behind the consistent-hash
+/// session router, and blocks in the HTTP accept loop until a client
+/// POSTs `/v1/shutdown`.  Native backend only: PJRT handles are not
+/// `Send` and cannot cross the replica worker threads.
+fn cmd_serve_http(p: &Parsed, cfg: &server::ServeConfig, addr: &str)
+                  -> Result<()> {
+    if resolve_backend(p)?.as_str() != "native" {
+        return Err(anyhow!(
+            "--http requires --backend native: PJRT buffers cannot cross \
+             the replica worker threads"));
+    }
+    reject_variant_for_native(p)?;
+    let replicas = p.usize("replicas")?;
+    let vocab = CharVocab::new().size();
+    let source = match p.get("resume") {
+        Some(path) => shard::ModelSource::Checkpoint(PathBuf::from(path)),
+        None => {
+            let init = NativeInit {
+                kind: p.req("kind")?.to_string(),
+                n_layers: p.usize("layers")?,
+                d_model: p.usize("d-model")?,
+                expansion: p.usize("expansion")?,
+                vocab_in: Some(vocab),
+                vocab_out: vocab,
+                max_len: p.usize("max-len")?,
+                n_heads: p.usize("n-heads")?,
+                ..Default::default()
+            };
+            shard::ModelSource::Fresh(init, cfg.seed)
+        }
+    };
+    let shrd = shard::Shard::new(&source, cfg, replicas)?;
+    let http = http::HttpServer::bind(addr, shrd)?;
+    // the smoke harness greps this line for readiness + the bound port
+    println!("listening on {}", http.addr());
+    let stats = http.wait()?;
+    report_serve(&stats);
     Ok(())
 }
 

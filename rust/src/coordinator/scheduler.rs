@@ -192,6 +192,11 @@ pub enum SubmitError {
     /// retry budget included.  Reported through [`ServeStats::failed`];
     /// surviving lanes are unaffected.
     Failed { id: u64, attempts: u32 },
+    /// The request's queue-wait deadline passed before a lane freed up
+    /// ([`ServeStats::expired`]); it was never half-served.  Raised by
+    /// drivers that deliver per-request outcomes (the sharded network
+    /// tier) — the scheduler itself reports expiry only through stats.
+    Expired { id: u64 },
 }
 
 impl fmt::Display for SubmitError {
@@ -206,6 +211,8 @@ impl fmt::Display for SubmitError {
                 f, "request {} refused: scheduler is shutting down", r.id),
             SubmitError::Failed { id, attempts } => write!(
                 f, "request {id} failed after {attempts} decode attempts"),
+            SubmitError::Expired { id } => write!(
+                f, "request {id} expired in queue before a lane freed up"),
         }
     }
 }
@@ -516,9 +523,80 @@ impl<'b, B: Backend> Scheduler<'b, B> {
         self.lanes.iter().flatten().filter(|l| l.active()).count()
     }
 
-    /// Requests completed so far.
+    /// Requests completed so far and not yet drained by
+    /// [`Scheduler::take_completed`].
     pub fn completed(&self) -> usize {
         self.responses.len()
+    }
+
+    /// Drain the responses completed since the last drain (or the
+    /// start).  A pump-style driver — the sharded serving tier — calls
+    /// this after each [`Scheduler::step`] to deliver every response to
+    /// its waiter as it lands, instead of waiting for the final
+    /// [`ServeStats`].  Drained responses are the caller's to account
+    /// for: they no longer appear in [`Scheduler::stats_snapshot`] or
+    /// the stats returned by [`Scheduler::run`] /
+    /// [`Scheduler::into_stats`].
+    pub fn take_completed(&mut self) -> Vec<Response> {
+        std::mem::take(&mut self.responses)
+    }
+
+    /// Drain the ids of requests that expired in queue since the last
+    /// drain (same contract as [`Scheduler::take_completed`]).
+    pub fn take_expired(&mut self) -> Vec<u64> {
+        std::mem::take(&mut self.expired)
+    }
+
+    /// Drain the ids of requests failed past their retry budget since
+    /// the last drain (same contract as [`Scheduler::take_completed`]).
+    pub fn take_failed(&mut self) -> Vec<u64> {
+        std::mem::take(&mut self.failed)
+    }
+
+    /// Non-destructive view of the accounting so far — the live
+    /// `GET /v1/stats` answer for a scheduler that is still running.
+    /// Outcomes already drained via the `take_*` methods are *not*
+    /// re-counted here; an incrementally draining driver merges this
+    /// snapshot into its own cumulative stats
+    /// ([`ServeStats::merge`]).
+    pub fn stats_snapshot(&self) -> ServeStats {
+        ServeStats {
+            responses: self.responses.clone(),
+            total_s: self.t_start.elapsed().as_secs_f64(),
+            tokens_generated: self.tokens_generated,
+            submitted: self.shared.queue.accepted(),
+            admitted: self.admitted,
+            rejected: self.shared.rejected.load(Ordering::SeqCst),
+            expired: self.expired.clone(),
+            max_queue_depth: self.shared.queue.peak_depth(),
+            batches_started: self.batches_started,
+            session_hits: self.cache_hits,
+            session_misses: self.cache_misses,
+            session_evictions: self.cache
+                .map(|c| (c.borrow().stats().evictions
+                          - self.cache_evictions_at_attach) as usize)
+                .unwrap_or(0),
+            prefill_tokens_saved: self.prefill_saved,
+            failed: self.failed.clone(),
+            retries: self.retries,
+            session_degraded: self.session_degraded,
+            restarts: 0,
+            health: if self.decode_failures == 0
+                && self.session_degraded == 0 {
+                Health::Healthy
+            } else {
+                Health::Degraded
+            },
+        }
+    }
+
+    /// Final accounting for an externally pumped scheduler.  The sharded
+    /// tier drives [`Scheduler::step`] itself (it cannot park in
+    /// [`Scheduler::run`] because it also services its replica inbox),
+    /// so it consumes the scheduler here once the queue is closed and
+    /// drained.
+    pub fn into_stats(mut self) -> ServeStats {
+        self.take_stats()
     }
 
     /// Pop the next live submission, dropping (and recording) any whose

@@ -12,24 +12,39 @@
 //! still joins the running batch.  Backends without lane reset (PJRT
 //! artifacts) fall back to run-to-completion batches.
 //!
-//! [`serve`] / [`serve_opts`] keep the original submit-everything-up-front
-//! contract: they push the whole `Vec<Request>` through the scheduler's
-//! admission queue, close it, and drain — token-for-token identical to
+//! Every entrypoint funnels through one [`ServeConfig`]: a builder
+//! holding the full serving knob set (sampling, lane cap, admission
+//! queue, backpressure, deadlines, retries, session cache).  The CLI
+//! parses its flags into a `ServeConfig` ([`ServeConfig::from_cli`]) and
+//! the HTTP tier ([`super::http`] / [`super::shard`]) consumes the same
+//! struct, so a request takes provably the same code path whether it
+//! arrives as a flag-built synthetic workload or a network submission.
+//! [`ServeConfig::run`] keeps the original submit-everything-up-front
+//! contract: it pushes the whole `Vec<Request>` through the scheduler's
+//! admission queue, closes it, and drains — token-for-token identical to
 //! the PR-2 loop (greedy batched == per-request sequential decode is
 //! property-tested in `rust/tests/parallel_props.rs`; async interleaved
-//! admission in `rust/tests/scheduler_props.rs`).
+//! admission in `rust/tests/scheduler_props.rs`).  The pre-redesign trio
+//! [`serve`] / [`serve_opts`] / [`serve_with_cache`] survives as thin
+//! deprecated shims over it.
 //!
 //! PJRT handles are not `Send`, so the serving loop owns the backend and
 //! requests are plain host data.
 
 use std::cell::RefCell;
 use std::fmt;
+use std::path::PathBuf;
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
+use crate::log_info;
 use crate::runtime::backend::MAX_DYNAMIC_BATCH;
 use crate::runtime::Backend;
+use crate::util::cli::Parsed;
+use crate::util::json::{self, Json};
 use crate::util::stats;
+use crate::util::faults;
 
 use super::scheduler::{Backpressure, Scheduler, SchedulerOpts};
 use super::session_cache::SessionCache;
@@ -105,6 +120,7 @@ impl fmt::Display for Health {
 /// empty — an idle server reports zero latency rather than panicking
 /// inside the percentile sort or returning a 0/0 NaN mean; the
 /// `empty_response_set_reports_zero_latencies` test pins that contract.
+#[derive(Clone, Debug, Default)]
 pub struct ServeStats {
     pub responses: Vec<Response>,
     pub total_s: f64,
@@ -212,6 +228,76 @@ impl ServeStats {
     pub fn p95_service_s(&self) -> f64 {
         self.p95_of(|r| r.service_s)
     }
+
+    /// Fold another run's accounting into this one.  The sharded tier
+    /// aggregates per-replica stats with this, and each replica folds a
+    /// finished scheduler generation (a hot-swap drain boundary) into its
+    /// lifetime totals.  Counters add and id/latency vectors concatenate;
+    /// `total_s` takes the max because the merged runs execute
+    /// concurrently (so throughput stays honest); `health` takes the
+    /// worst of the two.
+    pub fn merge(&mut self, other: ServeStats) {
+        self.responses.extend(other.responses);
+        self.total_s = self.total_s.max(other.total_s);
+        self.tokens_generated += other.tokens_generated;
+        self.submitted += other.submitted;
+        self.admitted += other.admitted;
+        self.rejected += other.rejected;
+        self.expired.extend(other.expired);
+        self.max_queue_depth = self.max_queue_depth.max(other.max_queue_depth);
+        self.batches_started += other.batches_started;
+        self.session_hits += other.session_hits;
+        self.session_misses += other.session_misses;
+        self.session_evictions += other.session_evictions;
+        self.prefill_tokens_saved += other.prefill_tokens_saved;
+        self.failed.extend(other.failed);
+        self.retries += other.retries;
+        self.session_degraded += other.session_degraded;
+        self.restarts += other.restarts;
+        self.health = match (self.health, other.health) {
+            (Health::Draining, _) | (_, Health::Draining) => Health::Draining,
+            (Health::Degraded, _) | (_, Health::Degraded) => Health::Degraded,
+            _ => Health::Healthy,
+        };
+    }
+
+    /// The `GET /v1/stats` wire shape: every counter plus the derived
+    /// latency/throughput accessors, encoded with the dependency-free
+    /// [`crate::util::json`] encoder.  `responses` flattens to a count
+    /// (the per-response latency split stays server-side); `expired` and
+    /// `failed` keep their request ids so a client can correlate drops.
+    pub fn to_json(&self) -> Json {
+        let ids =
+            |v: &[u64]| Json::Arr(v.iter().map(|&x| json::num(x as f64)).collect());
+        json::obj(vec![
+            ("responses", json::num(self.responses.len() as f64)),
+            ("submitted", json::num(self.submitted as f64)),
+            ("admitted", json::num(self.admitted as f64)),
+            ("rejected", json::num(self.rejected as f64)),
+            ("expired", ids(&self.expired)),
+            ("failed", ids(&self.failed)),
+            ("tokens_generated", json::num(self.tokens_generated as f64)),
+            ("total_s", json::num(self.total_s)),
+            ("throughput_tok_s", json::num(self.throughput_tok_s())),
+            ("mean_latency_s", json::num(self.mean_latency_s())),
+            ("p95_latency_s", json::num(self.p95_latency_s())),
+            ("mean_queue_s", json::num(self.mean_queue_s())),
+            ("p95_queue_s", json::num(self.p95_queue_s())),
+            ("mean_service_s", json::num(self.mean_service_s())),
+            ("p95_service_s", json::num(self.p95_service_s())),
+            ("max_queue_depth", json::num(self.max_queue_depth as f64)),
+            ("batches_started", json::num(self.batches_started as f64)),
+            ("session_hits", json::num(self.session_hits as f64)),
+            ("session_misses", json::num(self.session_misses as f64)),
+            ("session_evictions", json::num(self.session_evictions as f64)),
+            ("prefill_tokens_saved",
+             json::num(self.prefill_tokens_saved as f64)),
+            ("retries", json::num(self.retries as f64)),
+            ("session_degraded", json::num(self.session_degraded as f64)),
+            ("restarts", json::num(self.restarts as f64)),
+            ("health", json::s(&self.health.to_string())),
+        ])
+    }
 }
 
 /// Serving knobs beyond the request list.
@@ -229,102 +315,391 @@ impl Default for ServeOpts {
     }
 }
 
-/// Serve a workload of requests to completion with default options
-/// (PR-1 signature, kept for callers and tests).  No lane cap: PR-1
-/// behavior planned straight from the queue length, so a fixed-batch
-/// PJRT backend exporting executables wider than [`MAX_DYNAMIC_BATCH`]
-/// still fills every lane (native backends self-cap via `plan_batch`).
+/// The full serving knob set, builder-style — the single configuration
+/// type behind every serve entrypoint.
+///
+/// The CLI parses its `serve` flags into one of these
+/// ([`ServeConfig::from_cli`]) and the network tier
+/// ([`super::shard::Shard`] behind [`super::http::HttpServer`]) clones
+/// the same struct into each replica, so a request is handled by
+/// provably the same code path whether it arrived as a `--requests N`
+/// synthetic workload or a `POST /v1/submit` body.  The pre-redesign
+/// trio [`serve`] / [`serve_opts`] / [`serve_with_cache`] survives as
+/// deprecated shims that build a `ServeConfig` and call
+/// [`ServeConfig::run`] / [`ServeConfig::run_with_cache`].
 ///
 /// ```
 /// use minrnn::backend::{NativeBackend, NativeInit, NativeModel};
-/// use minrnn::coordinator::server::{serve, Request};
+/// use minrnn::coordinator::server::{Request, ServeConfig};
 ///
 /// let model = NativeModel::init_random(&NativeInit {
 ///     vocab_in: Some(16), vocab_out: 16, d_model: 8, n_layers: 1,
 ///     ..Default::default()
 /// }, 0).unwrap();
 /// let backend = NativeBackend::new(model);
-/// let stats = serve(&backend, vec![
+/// let cfg = ServeConfig::new().temperature(0.0).seed(1).build().unwrap();
+/// let stats = cfg.run(&backend, vec![
 ///     Request { id: 0, prompt: vec![1, 2, 3], n_tokens: 4, session: None },
 ///     Request { id: 1, prompt: vec![4], n_tokens: 2, session: None },
-/// ], 0.8, 0).unwrap();
+/// ]).unwrap();
 /// assert_eq!(stats.responses.len(), 2);
 /// assert_eq!(stats.tokens_generated, 6);
 /// ```
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Sampling temperature (`0` = greedy argmax, the bit-identical mode).
+    pub temperature: f32,
+    /// Sampling seed (also the supervisor's backoff-jitter seed).
+    pub seed: u64,
+    /// Upper bound on lanes decoded in lockstep (`--max-batch`).
+    pub max_batch: usize,
+    /// Admission-queue capacity.  `None` sizes the queue from the
+    /// workload in [`ServeConfig::run`] (submit-all-then-drain never
+    /// blocks the caller) and defaults to 64 for open-ended schedulers.
+    pub queue_depth: Option<usize>,
+    /// Producer behavior on a full admission queue.
+    pub backpressure: Backpressure,
+    /// Per-request queue-wait deadline; queued past it → dropped, never
+    /// half-served.
+    pub deadline: Option<Duration>,
+    /// Lane budget provisioned up front (`None` = plan from the
+    /// backlog).  Open-loop drivers set `Some(max_batch)` so requests
+    /// trickling in one by one still share a batch.
+    pub lanes: Option<usize>,
+    /// Decode retries per request beyond its first attempt.
+    pub retry_limit: u32,
+    /// Session-cache byte budget (`0` = cache off unless `session_dir`
+    /// is set, in which case a 1 MiB floor applies).
+    pub session_cache_bytes: usize,
+    /// Directory persisting session caches across runs.
+    pub session_dir: Option<PathBuf>,
+    /// Deterministic fault-injection spec (the `--faults` /
+    /// `MINRNN_FAULTS` grammar); installed process-wide by
+    /// [`ServeConfig::build`].
+    pub faults: Option<String>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            temperature: 0.8,
+            seed: 0,
+            max_batch: MAX_DYNAMIC_BATCH,
+            queue_depth: None,
+            backpressure: Backpressure::Block,
+            deadline: None,
+            lanes: None,
+            retry_limit: 2,
+            session_cache_bytes: 0,
+            session_dir: None,
+            faults: None,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn new() -> ServeConfig {
+        ServeConfig::default()
+    }
+
+    pub fn temperature(mut self, t: f32) -> Self {
+        self.temperature = t;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn max_batch(mut self, n: usize) -> Self {
+        self.max_batch = n;
+        self
+    }
+
+    pub fn queue_depth(mut self, depth: usize) -> Self {
+        self.queue_depth = Some(depth);
+        self
+    }
+
+    pub fn backpressure(mut self, bp: Backpressure) -> Self {
+        self.backpressure = bp;
+        self
+    }
+
+    pub fn deadline(mut self, d: Option<Duration>) -> Self {
+        self.deadline = d;
+        self
+    }
+
+    pub fn lanes(mut self, lanes: Option<usize>) -> Self {
+        self.lanes = lanes;
+        self
+    }
+
+    pub fn retry_limit(mut self, n: u32) -> Self {
+        self.retry_limit = n;
+        self
+    }
+
+    /// Session-cache byte budget; `0` disables caching (unless a
+    /// [`ServeConfig::session_dir`] is set).
+    pub fn session_cache(mut self, bytes: usize) -> Self {
+        self.session_cache_bytes = bytes;
+        self
+    }
+
+    pub fn session_dir(mut self, dir: Option<PathBuf>) -> Self {
+        self.session_dir = dir;
+        self
+    }
+
+    /// Fault-injection spec, e.g. `"seed=7,decode=0.01"`.
+    pub fn faults(mut self, spec: &str) -> Self {
+        self.faults = Some(spec.to_string());
+        self
+    }
+
+    /// Validate the knob set and install the fault plan (if any).  An
+    /// unset fault spec leaves any already-installed plan (e.g. from
+    /// `MINRNN_FAULTS`) untouched.
+    pub fn build(self) -> Result<ServeConfig> {
+        if self.max_batch == 0 {
+            return Err(anyhow!("max_batch must be >= 1"));
+        }
+        if self.queue_depth == Some(0) {
+            return Err(anyhow!("queue_depth must be >= 1"));
+        }
+        if self.lanes == Some(0) {
+            return Err(anyhow!("lanes must be >= 1"));
+        }
+        if let Some(spec) = &self.faults {
+            faults::install(faults::parse(spec)
+                .map_err(|e| anyhow!("faults spec: {e}"))?);
+        }
+        Ok(self)
+    }
+
+    /// Parse the `minrnn serve` flag set into a config (the CLI half of
+    /// "CLI and HTTP are the same code path").  Mode-specific knobs the
+    /// caller still owns: `lanes` (open-loop drivers want
+    /// `Some(max_batch)`) and the workload shape (`--requests`,
+    /// `--arrival-rate`, `--sessions`).
+    pub fn from_cli(p: &Parsed) -> Result<ServeConfig> {
+        let backpressure = match p.req("backpressure")? {
+            "block" => Backpressure::Block,
+            "reject" => Backpressure::Reject,
+            other => return Err(anyhow!(
+                "--backpressure expects block | reject, got '{other}'")),
+        };
+        let deadline_ms = p.u64("deadline-ms")?;
+        let mut cfg = ServeConfig::new()
+            .temperature(p.f32("temperature")?)
+            .seed(p.u64("seed")?)
+            .max_batch(p.usize("max-batch")?)
+            .queue_depth(p.usize("queue-depth")?)
+            .backpressure(backpressure)
+            .deadline(if deadline_ms > 0 {
+                Some(Duration::from_millis(deadline_ms))
+            } else {
+                None
+            })
+            .retry_limit(p.u64("retry-limit")? as u32)
+            .session_cache(p.usize("session-cache-mb")? << 20)
+            .session_dir(p.get("session-dir").map(PathBuf::from));
+        if let Some(spec) = p.get("faults") {
+            cfg = cfg.faults(spec);
+        }
+        cfg.build()
+    }
+
+    /// Just the sampling knobs, as the scheduler's [`ServeOpts`].
+    pub fn sampling(&self) -> ServeOpts {
+        ServeOpts {
+            temperature: self.temperature,
+            seed: self.seed,
+            max_batch: self.max_batch,
+        }
+    }
+
+    /// [`SchedulerOpts`] for an open-ended scheduler (async CLI driver,
+    /// shard replicas): requests keep arriving while decode runs, so the
+    /// queue depth comes from the config (default 64), not the workload.
+    pub fn scheduler_opts(&self) -> SchedulerOpts {
+        SchedulerOpts {
+            serve: self.sampling(),
+            queue_depth: self.queue_depth.unwrap_or(64).max(1),
+            backpressure: self.backpressure,
+            default_deadline: self.deadline,
+            lanes: self.lanes,
+            retry_limit: self.retry_limit,
+        }
+    }
+
+    /// Whether this config asks for a session cache at all.
+    pub fn cache_enabled(&self) -> bool {
+        self.session_cache_bytes > 0 || self.session_dir.is_some()
+    }
+
+    /// Persistence path for the cache named `name` (replicas use
+    /// distinct names so their caches do not clobber each other).
+    pub fn session_file(&self, name: &str) -> Option<PathBuf> {
+        self.session_dir.as_ref().map(|d| d.join(format!("{name}.mrsc")))
+    }
+
+    /// Build the configured session cache, warm-loading `name`'s
+    /// persisted file if a `session_dir` is set.  A corrupt cache file
+    /// is discarded (with a warning inside `load_or_recover`) and the
+    /// cache starts cold — never a startup failure.  `None` when
+    /// caching is off.
+    pub fn open_session_cache(&self, name: &str) -> Option<SessionCache> {
+        if !self.cache_enabled() {
+            return None;
+        }
+        let budget = self.session_cache_bytes.max(1 << 20);
+        Some(match self.session_file(name) {
+            Some(f) => {
+                let c = SessionCache::load_or_recover(&f, budget);
+                if c.len() > 0 {
+                    log_info!("session cache: loaded {} entries ({} KiB) \
+                               from {}", c.len(), c.used_bytes() >> 10,
+                              f.display());
+                }
+                c
+            }
+            None => SessionCache::new(budget),
+        })
+    }
+
+    /// Persist `cache` to `name`'s file under `session_dir` (no-op
+    /// without one), creating the directory if needed.
+    pub fn save_session_cache(&self, name: &str, cache: &SessionCache)
+                              -> Result<()> {
+        if let Some(f) = self.session_file(name) {
+            if let Some(dir) = f.parent() {
+                std::fs::create_dir_all(dir)?;
+            }
+            cache.save(&f)?;
+            log_info!("session cache: saved {} entries ({} KiB) to {}",
+                      cache.len(), cache.used_bytes() >> 10, f.display());
+        }
+        Ok(())
+    }
+
+    /// Serve a workload of requests to completion: submit everything,
+    /// close the queue, drain — the synchronous facade over
+    /// [`super::scheduler::Scheduler`], using dynamic batching, lockstep
+    /// decode, and (when the backend supports lane reset) continuous
+    /// lane refill.  For admitting requests while decoding is already
+    /// underway, use the scheduler directly via
+    /// [`super::scheduler::SubmitHandle`] — or the network tier.
+    pub fn run<B: Backend>(&self, backend: &B, requests: Vec<Request>)
+                           -> Result<ServeStats> {
+        self.run_with_cache(backend, requests, None)
+    }
+
+    /// [`ServeConfig::run`] with an externally owned [`SessionCache`]
+    /// attached: admitted lanes warm-start from cached per-lane decode
+    /// states (skipping the covered prompt prefix) and completed
+    /// requests carrying a [`Request::session`] id export their state
+    /// back for the next turn.  The cache is borrowed, not owned, so one
+    /// cache can span many runs — and, via `save`/`load`, many server
+    /// restarts.  On backends without state export the cache stays inert
+    /// and every request prefills normally.
+    pub fn run_with_cache<B: Backend>(&self, backend: &B,
+                                      requests: Vec<Request>,
+                                      cache: Option<&RefCell<SessionCache>>)
+                                      -> Result<ServeStats> {
+        if self.max_batch == 0 {
+            return Err(anyhow!("max_batch must be >= 1"));
+        }
+        if backend.plan_batch(1).is_none() {
+            return Err(anyhow!("backend '{}' exposes no decode batch sizes",
+                               backend.name()));
+        }
+        // Validate up front so serving agrees with `infer::generate`,
+        // which rejects empty prompts: a lane would otherwise silently
+        // substitute token 0 for an empty-prompt request.
+        if let Some(r) = requests.iter().find(|r| r.prompt.is_empty()) {
+            return Err(anyhow!(
+                "request {} has an empty prompt; every request needs at \
+                 least one prompt token", r.id));
+        }
+        let (mut scheduler, handle) = Scheduler::new(backend, SchedulerOpts {
+            serve: self.sampling(),
+            // everything is submitted before the drain starts, so the
+            // queue must hold the whole workload without blocking this
+            // thread, whatever depth an open-ended tier would use
+            queue_depth: self.queue_depth.unwrap_or(0)
+                .max(requests.len()).max(1),
+            backpressure: Backpressure::Block,
+            default_deadline: self.deadline,
+            lanes: self.lanes, // None = plan from the backlog (PR-2 loop)
+            retry_limit: self.retry_limit,
+        })?;
+        if let Some(c) = cache {
+            scheduler.set_session_cache(c);
+        }
+        for req in requests {
+            handle.submit(req).map_err(|e| anyhow!("{e}"))?;
+        }
+        handle.close();
+        scheduler.run()
+    }
+}
+
+/// Serve a workload of requests to completion with default options
+/// (PR-1 signature, kept for callers and tests).  No lane cap: PR-1
+/// behavior planned straight from the queue length, so a fixed-batch
+/// PJRT backend exporting executables wider than [`MAX_DYNAMIC_BATCH`]
+/// still fills every lane (native backends self-cap via `plan_batch`).
+#[deprecated(since = "0.2.0",
+             note = "use ServeConfig::new()…build()?.run(backend, requests)")]
 pub fn serve<B: Backend>(backend: &B, requests: Vec<Request>,
                          temperature: f32, seed: u64) -> Result<ServeStats> {
-    serve_opts(backend, requests,
-               &ServeOpts { temperature, seed, max_batch: usize::MAX })
+    ServeConfig::new()
+        .temperature(temperature)
+        .seed(seed)
+        .max_batch(usize::MAX)
+        .build()?
+        .run(backend, requests)
 }
 
-/// Serve a workload of requests to completion using dynamic batching,
-/// lockstep decode, and (when the backend supports lane reset)
-/// continuous lane refill.
-///
-/// This is the synchronous facade over [`super::scheduler::Scheduler`]:
-/// submit everything, close the queue, drain.  For admitting requests
-/// while decoding is already underway, use the scheduler directly via
-/// [`super::scheduler::SubmitHandle`].
+/// Serve a workload with explicit [`ServeOpts`] (pre-[`ServeConfig`]
+/// signature, kept for callers and tests).
+#[deprecated(since = "0.2.0",
+             note = "use ServeConfig::new()…build()?.run(backend, requests)")]
 pub fn serve_opts<B: Backend>(backend: &B, requests: Vec<Request>,
                               opts: &ServeOpts) -> Result<ServeStats> {
-    serve_inner(backend, requests, opts, None)
+    ServeConfig::new()
+        .temperature(opts.temperature)
+        .seed(opts.seed)
+        .max_batch(opts.max_batch)
+        .build()?
+        .run(backend, requests)
 }
 
-/// [`serve_opts`] with a [`SessionCache`] attached: admitted lanes
-/// warm-start from cached per-lane decode states (skipping the covered
-/// prompt prefix) and completed requests carrying a [`Request::session`]
-/// id export their state back into the cache for the next turn.  The
-/// cache is borrowed, not owned, so one cache can span many serve calls
-/// — and, via `save`/`load`, many server restarts.  On backends without
-/// state export the cache stays inert and every request prefills
-/// normally.
+/// Serve with a [`SessionCache`] attached (pre-[`ServeConfig`]
+/// signature, kept for callers and tests).
+#[deprecated(since = "0.2.0",
+             note = "use ServeConfig::new()…build()?\
+                     .run_with_cache(backend, requests, Some(cache))")]
 pub fn serve_with_cache<B: Backend>(backend: &B, requests: Vec<Request>,
                                     opts: &ServeOpts,
                                     cache: &RefCell<SessionCache>)
                                     -> Result<ServeStats> {
-    serve_inner(backend, requests, opts, Some(cache))
-}
-
-fn serve_inner<B: Backend>(backend: &B, requests: Vec<Request>,
-                           opts: &ServeOpts,
-                           cache: Option<&RefCell<SessionCache>>)
-                           -> Result<ServeStats> {
-    if opts.max_batch == 0 {
-        return Err(anyhow!("--max-batch must be >= 1"));
-    }
-    if backend.plan_batch(1).is_none() {
-        return Err(anyhow!("backend '{}' exposes no decode batch sizes",
-                           backend.name()));
-    }
-    // Validate up front so serving agrees with `infer::generate`, which
-    // rejects empty prompts: a lane would otherwise silently substitute
-    // token 0 for an empty-prompt request.
-    if let Some(r) = requests.iter().find(|r| r.prompt.is_empty()) {
-        return Err(anyhow!(
-            "request {} has an empty prompt; every request needs at least \
-             one prompt token", r.id));
-    }
-    let (mut scheduler, handle) = Scheduler::new(backend, SchedulerOpts {
-        serve: opts.clone(),
-        // everything is submitted before the drain starts, so the queue
-        // must hold the whole workload without blocking this thread
-        queue_depth: requests.len().max(1),
-        backpressure: Backpressure::Block,
-        default_deadline: None,
-        lanes: None, // plan from the backlog, like the PR-2 loop
-        ..Default::default()
-    })?;
-    if let Some(c) = cache {
-        scheduler.set_session_cache(c);
-    }
-    for req in requests {
-        handle.submit(req).map_err(|e| anyhow!("{e}"))?;
-    }
-    handle.close();
-    scheduler.run()
+    ServeConfig::new()
+        .temperature(opts.temperature)
+        .seed(opts.seed)
+        .max_batch(opts.max_batch)
+        .build()?
+        .run_with_cache(backend, requests, Some(cache))
 }
 
 #[cfg(test)]
+// The pre-ServeConfig entrypoints are exercised on purpose: the shims
+// must keep their historical behavior until they are removed.
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::backend::{NativeBackend, NativeInit, NativeModel};
@@ -473,6 +848,86 @@ mod tests {
         let empty = serve(&backend, Vec::new(), 1.0, 0).unwrap();
         assert!(empty.responses.is_empty());
         assert_eq!(empty.p95_latency_s(), 0.0);
+    }
+
+    #[test]
+    fn serve_config_and_deprecated_shims_agree_token_for_token() {
+        // the shims are thin: a greedy ServeConfig::run and the old
+        // serve() must produce bit-identical responses
+        let backend = tiny_backend(32, 9);
+        let mk = || -> Vec<Request> {
+            (0..5).map(|i| Request {
+                id: i,
+                prompt: vec![1 + i as i32, 2, 3],
+                n_tokens: 4,
+                session: None,
+            }).collect()
+        };
+        let old = serve(&backend, mk(), 0.0, 7).unwrap();
+        let new = ServeConfig::new().temperature(0.0).seed(7)
+            .max_batch(usize::MAX).build().unwrap()
+            .run(&backend, mk()).unwrap();
+        let sorted = |s: &ServeStats| {
+            let mut v: Vec<(u64, Vec<i32>)> = s.responses.iter()
+                .map(|r| (r.id, r.tokens.clone())).collect();
+            v.sort();
+            v
+        };
+        assert_eq!(sorted(&old), sorted(&new));
+    }
+
+    #[test]
+    fn serve_config_builder_validates() {
+        assert!(ServeConfig::new().max_batch(0).build().is_err());
+        assert!(ServeConfig::new().queue_depth(0).build().is_err());
+        assert!(ServeConfig::new().lanes(Some(0)).build().is_err());
+        assert!(ServeConfig::new().faults("no-such-knob=1").build().is_err());
+        let cfg = ServeConfig::new().queue_depth(8).retry_limit(1)
+            .build().unwrap();
+        assert_eq!(cfg.scheduler_opts().queue_depth, 8);
+        assert_eq!(cfg.scheduler_opts().retry_limit, 1);
+        // no queue depth set: open-ended schedulers get the default,
+        // run() sizes from the workload instead
+        assert_eq!(ServeConfig::new().build().unwrap()
+                   .scheduler_opts().queue_depth, 64);
+    }
+
+    #[test]
+    fn serve_stats_merge_and_json_roundtrip() {
+        let mut a = ServeStats {
+            submitted: 3,
+            admitted: 3,
+            tokens_generated: 12,
+            total_s: 1.0,
+            max_queue_depth: 2,
+            health: Health::Healthy,
+            ..Default::default()
+        };
+        let b = ServeStats {
+            submitted: 2,
+            admitted: 1,
+            tokens_generated: 4,
+            total_s: 0.5,
+            max_queue_depth: 5,
+            expired: vec![41],
+            failed: vec![42],
+            health: Health::Degraded,
+            ..Default::default()
+        };
+        a.merge(b);
+        assert_eq!(a.submitted, 5);
+        assert_eq!(a.tokens_generated, 16);
+        assert_eq!(a.total_s, 1.0); // concurrent runs: max, not sum
+        assert_eq!(a.max_queue_depth, 5);
+        assert_eq!(a.expired, vec![41]);
+        assert_eq!(a.failed, vec![42]);
+        assert_eq!(a.health, Health::Degraded);
+        // the /v1/stats wire shape survives the dependency-free encoder
+        let text = json::to_string(&a.to_json());
+        let back = json::parse(&text).unwrap();
+        assert_eq!(back.req("submitted").unwrap().as_usize(), Some(5));
+        assert_eq!(back.req("health").unwrap().as_str(), Some("degraded"));
+        assert_eq!(back.req("failed").unwrap().as_arr().unwrap().len(), 1);
     }
 
     #[test]

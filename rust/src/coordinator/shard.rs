@@ -1,0 +1,558 @@
+//! Sharded multi-replica serving: N scheduler replicas — one
+//! [`NativeBackend`] plus one session cache each — behind a
+//! consistent-hash router, with rolling checkpoint hot-swap.
+//!
+//! This is the layer that turns the in-process
+//! [`super::scheduler::SubmitHandle`] into a system the HTTP front-end
+//! ([`super::http`]) can put on the network:
+//!
+//! * **Routing.**  Requests are routed by [`HashRing`] on their session
+//!   key, so a returning conversation's turns land on the replica
+//!   holding its O(1) decode state — the paper's constant-state
+//!   advantage only pays off if the state is *found*.  Session-less
+//!   requests spread by request id.
+//! * **Isolation.**  Each replica is one OS thread owning its own
+//!   backend, scheduler and [`SessionCache`]
+//!   (`PJRT` handles are not `Send`, so the sharded tier is
+//!   native-only); replicas exchange nothing but jobs and stats.
+//! * **Hot-swap.**  [`Shard::reload`] rolls a new MRNN checkpoint across
+//!   the replicas one at a time: the replica stops admitting, drains its
+//!   in-flight generation, swaps backends, and resumes — requests that
+//!   arrived meanwhile wait in its bounded inbox, so a rolling reload
+//!   completes with zero dropped requests (`responses + expired +
+//!   failed == submitted` holds across the swap; `tests/http_props.rs`
+//!   pins it).  A checkpoint that fails to load
+//!   ([`crate::util::io::LoadError`]) leaves the old model serving.
+//!
+//! The replica loop itself is a pump: it services its inbox and the
+//! scheduler's [`super::scheduler::Scheduler::step`] in turns, draining
+//! per-request outcomes to their waiting submitters as they land.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::backend::{NativeBackend, NativeInit, NativeModel};
+use crate::runtime::backend::MAX_DYNAMIC_BATCH;
+use crate::util::rng::splitmix64;
+use crate::util::threads::{BoundedQueue, PushError};
+use crate::{log_info, log_warn};
+
+use super::scheduler::{Backpressure, Scheduler, SubmitError};
+use super::server::{Request, Response, ServeConfig, ServeStats};
+use super::session_cache::SessionCache;
+use super::supervisor::panic_message;
+
+/// Virtual nodes per replica on the [`HashRing`].  More vnodes smooth
+/// the key distribution and shrink the slice of sessions a membership
+/// change remaps; 64 keeps the imbalance under a few percent for small
+/// replica counts while the ring stays a cache-line-scale binary search.
+pub const DEFAULT_VNODES: usize = 64;
+
+// ---------------------------------------------------------------------------
+// consistent hashing
+// ---------------------------------------------------------------------------
+
+/// Consistent-hash ring over replica indices.
+///
+/// Each member contributes `vnodes` points (splitmix64 of member ×
+/// vnode); a key routes to the owner of the first point clockwise from
+/// the key's own hash.  The property that makes this worth it over
+/// `key % n`: adding or removing a member only remaps the keys owned by
+/// the affected ring segments — every other session keeps its replica,
+/// and therefore its cached decode state (property-tested in
+/// `tests/http_props.rs`).
+pub struct HashRing {
+    /// `(point, member)`, sorted — the ring flattened at 0.
+    points: Vec<(u64, usize)>,
+}
+
+impl HashRing {
+    /// Ring over an explicit member set (distinct indices).
+    pub fn new(members: &[usize], vnodes: usize) -> HashRing {
+        assert!(!members.is_empty(), "a hash ring needs >= 1 member");
+        assert!(vnodes >= 1, "a hash ring needs >= 1 vnode per member");
+        let mut points = Vec::with_capacity(members.len() * vnodes);
+        for &m in members {
+            for v in 0..vnodes {
+                // one deterministic point per (member, vnode); the seed
+                // layout keeps every member's vnode family disjoint
+                let mut x = ((m as u64) << 32) ^ v as u64;
+                points.push((splitmix64(&mut x), m));
+            }
+        }
+        points.sort_unstable();
+        HashRing { points }
+    }
+
+    /// Ring over replicas `0..n`.
+    pub fn for_replicas(n: usize, vnodes: usize) -> HashRing {
+        let members: Vec<usize> = (0..n).collect();
+        HashRing::new(&members, vnodes)
+    }
+
+    /// The member owning `key`'s ring segment.
+    pub fn route(&self, key: u64) -> usize {
+        let mut x = key;
+        let h = splitmix64(&mut x);
+        let i = self.points.partition_point(|&(p, _)| p < h);
+        // past the last point wraps to the first — it's a ring
+        self.points[i % self.points.len()].1
+    }
+}
+
+// ---------------------------------------------------------------------------
+// model source
+// ---------------------------------------------------------------------------
+
+/// Where a replica's model comes from.  Every replica builds its *own*
+/// backend instance from this (replicas live on their own threads and
+/// share nothing), and [`Shard::reload`] swaps in
+/// `ModelSource::Checkpoint`s at runtime.
+#[derive(Clone, Debug)]
+pub enum ModelSource {
+    /// Load an MRNN checkpoint from disk.
+    Checkpoint(PathBuf),
+    /// Deterministic seeded random init — demos, tests, and the
+    /// bit-identical in-process reference for the loopback property.
+    Fresh(NativeInit, u64),
+}
+
+impl ModelSource {
+    /// Instantiate one backend from this source.
+    pub fn build(&self) -> Result<NativeBackend> {
+        match self {
+            ModelSource::Checkpoint(p) => NativeBackend::from_checkpoint(p),
+            ModelSource::Fresh(init, seed) => {
+                Ok(NativeBackend::new(NativeModel::init_random(init, *seed)?))
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// replica jobs
+// ---------------------------------------------------------------------------
+
+/// Per-request outcome a submitter blocks on.
+type SubmitResult = std::result::Result<Response, SubmitError>;
+
+/// What flows through a replica inbox.  Submissions carry their reply
+/// channel so the replica can answer each request individually; control
+/// jobs (stats, reload) ride the same queue and are therefore ordered
+/// with respect to the traffic around them.
+enum Job {
+    Submit { req: Request, reply: mpsc::Sender<SubmitResult> },
+    Stats { reply: mpsc::Sender<ServeStats> },
+    Reload { ckpt: PathBuf, reply: mpsc::Sender<Result<(), String>> },
+}
+
+/// Outcomes drained from the current scheduler generation, kept so live
+/// stats and the generation's final accounting both see them exactly
+/// once.
+#[derive(Default)]
+struct Drained {
+    responses: Vec<Response>,
+    expired: Vec<u64>,
+    failed: Vec<u64>,
+}
+
+/// Drain every outcome the scheduler produced since the last call,
+/// answer the waiting submitters, and record the outcomes for this
+/// generation's accounting.
+fn deliver(sched: &mut Scheduler<'_, NativeBackend>,
+           waiters: &mut HashMap<u64, mpsc::Sender<SubmitResult>>,
+           done: &mut Drained, attempts: u32) {
+    for r in sched.take_completed() {
+        if let Some(tx) = waiters.remove(&r.id) {
+            let _ = tx.send(Ok(r.clone()));
+        }
+        done.responses.push(r);
+    }
+    for id in sched.take_expired() {
+        if let Some(tx) = waiters.remove(&id) {
+            let _ = tx.send(Err(SubmitError::Expired { id }));
+        }
+        done.expired.push(id);
+    }
+    for id in sched.take_failed() {
+        if let Some(tx) = waiters.remove(&id) {
+            let _ = tx.send(Err(SubmitError::Failed { id, attempts }));
+        }
+        done.failed.push(id);
+    }
+}
+
+/// A replica thread: own backend, own session cache, one scheduler
+/// *generation* per model — a reload closes the current generation,
+/// drains it, swaps the backend, and opens the next.  Returns the
+/// replica's lifetime [`ServeStats`] once the shard shuts down.
+fn run_replica(idx: usize, mut backend: NativeBackend, cfg: ServeConfig,
+               inbox: Arc<BoundedQueue<Job>>) -> Result<ServeStats> {
+    let cache_name = format!("sessions.r{idx}");
+    let cache = cfg.open_session_cache(&cache_name).map(RefCell::new);
+    let mut opts = cfg.scheduler_opts();
+    // This thread is the scheduler's only producer *and* its consumer: a
+    // blocking push would deadlock the pump, so the scheduler queue runs
+    // in reject mode and admission is gated on queue_len below (the
+    // operator-configured backpressure applies at the shard inbox).
+    opts.backpressure = Backpressure::Reject;
+    if opts.lanes.is_none() {
+        // open-loop serving: provision the full lane budget up front so
+        // requests trickling in one by one still share a batch
+        opts.lanes = Some(cfg.max_batch.min(MAX_DYNAMIC_BATCH).max(1));
+    }
+    let attempts = opts.retry_limit + 1;
+    let mut total = ServeStats::default();
+    let mut shutting_down = false;
+    while !shutting_down {
+        let (mut sched, handle) = Scheduler::new(&backend, opts.clone())?;
+        if let Some(c) = &cache {
+            sched.set_session_cache(c);
+        }
+        let mut waiters: HashMap<u64, mpsc::Sender<SubmitResult>> =
+            HashMap::new();
+        let mut done = Drained::default();
+        let mut reload: Option<(PathBuf, mpsc::Sender<Result<(), String>>)> =
+            None;
+        loop {
+            // Admit inbox jobs while the scheduler queue has room.  Once
+            // a reload arrives, admission stops but the inbox keeps
+            // queueing — those requests ride out the swap and are served
+            // by the next generation, so the rollout drops nothing.
+            while reload.is_none() && handle.queue_len() < opts.queue_depth {
+                let Some(job) = inbox.try_pop() else { break };
+                match job {
+                    Job::Submit { req, reply } => {
+                        let id = req.id;
+                        match handle.submit(req) {
+                            Ok(()) => {
+                                waiters.insert(id, reply);
+                            }
+                            Err(e) => {
+                                let _ = reply.send(Err(e));
+                            }
+                        }
+                    }
+                    Job::Stats { reply } => {
+                        // lifetime totals + this generation so far
+                        let mut snap = total.clone();
+                        let mut live = sched.stats_snapshot();
+                        live.responses.extend(done.responses.iter().cloned());
+                        live.expired.extend(done.expired.iter().copied());
+                        live.failed.extend(done.failed.iter().copied());
+                        snap.merge(live);
+                        let _ = reply.send(snap);
+                    }
+                    Job::Reload { ckpt, reply } => {
+                        handle.close();
+                        reload = Some((ckpt, reply));
+                    }
+                }
+            }
+            let worked = sched.step()?;
+            deliver(&mut sched, &mut waiters, &mut done, attempts);
+            if worked {
+                continue;
+            }
+            if reload.is_some() {
+                break; // generation drained; swap below
+            }
+            if !inbox.is_empty() {
+                continue; // jobs deferred while the queue was full
+            }
+            // idle: park until a job arrives or the shard shuts down
+            if !inbox.wait_ready() {
+                handle.close();
+                while sched.step()? {
+                    deliver(&mut sched, &mut waiters, &mut done, attempts);
+                }
+                deliver(&mut sched, &mut waiters, &mut done, attempts);
+                shutting_down = true;
+                break;
+            }
+        }
+        // fold the finished generation into the lifetime totals,
+        // restoring the outcomes drained to waiters along the way
+        let mut gen_stats = sched.into_stats();
+        gen_stats.responses.extend(done.responses);
+        gen_stats.expired.extend(done.expired);
+        gen_stats.failed.extend(done.failed);
+        total.merge(gen_stats);
+        if let Some((ckpt, reply)) = reload {
+            match NativeBackend::from_checkpoint(&ckpt) {
+                Ok(swapped) => {
+                    log_info!("replica {idx}: hot-swapped {}",
+                              ckpt.display());
+                    backend = swapped;
+                    let _ = reply.send(Ok(()));
+                }
+                Err(e) => {
+                    // the old model keeps serving; the typed load error
+                    // renders into the reply for the HTTP error path
+                    log_warn!("replica {idx}: reload failed, keeping old \
+                               model: {e:#}");
+                    let _ = reply.send(Err(format!("{e:#}")));
+                }
+            }
+        }
+    }
+    if let Some(c) = &cache {
+        cfg.save_session_cache(&cache_name, &c.borrow())?;
+    }
+    Ok(total)
+}
+
+// ---------------------------------------------------------------------------
+// the shard
+// ---------------------------------------------------------------------------
+
+/// N replica threads behind a consistent-hash router.  `Shard` is
+/// `Sync`: the HTTP tier shares one instance across its connection
+/// threads and every call routes through the replica inboxes.
+pub struct Shard {
+    ring: HashRing,
+    inboxes: Vec<Arc<BoundedQueue<Job>>>,
+    threads: Vec<JoinHandle<Result<ServeStats>>>,
+    /// Request ids are assigned here so they are unique shard-wide —
+    /// the id doubles as the routing key for session-less requests.
+    next_id: AtomicU64,
+    backpressure: Backpressure,
+}
+
+impl Shard {
+    /// Build the replicas (each from its own [`ModelSource::build`]
+    /// call, so a bad checkpoint fails here rather than killing replica
+    /// threads later) and start their serving loops.
+    pub fn new(source: &ModelSource, cfg: &ServeConfig, replicas: usize)
+               -> Result<Shard> {
+        if replicas == 0 {
+            return Err(anyhow!("--replicas must be >= 1"));
+        }
+        let depth = cfg.scheduler_opts().queue_depth;
+        let mut inboxes = Vec::with_capacity(replicas);
+        let mut threads = Vec::with_capacity(replicas);
+        for idx in 0..replicas {
+            let backend = source.build()?;
+            let inbox = Arc::new(BoundedQueue::new(depth));
+            let thread_inbox = Arc::clone(&inbox);
+            let thread_cfg = cfg.clone();
+            threads.push(std::thread::Builder::new()
+                .name(format!("replica-{idx}"))
+                .spawn(move || {
+                    run_replica(idx, backend, thread_cfg, thread_inbox)
+                })?);
+            inboxes.push(inbox);
+        }
+        log_info!("shard: {replicas} replica(s), {} vnodes/replica, inbox \
+                   depth {depth}", DEFAULT_VNODES);
+        Ok(Shard {
+            ring: HashRing::for_replicas(replicas, DEFAULT_VNODES),
+            inboxes,
+            threads,
+            next_id: AtomicU64::new(0),
+            backpressure: cfg.backpressure,
+        })
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.inboxes.len()
+    }
+
+    /// Submit one request and block until its outcome.  Sessions pin to
+    /// their ring segment (their cached decode state lives on that
+    /// replica); session-less requests spread by their shard-assigned
+    /// id.  The configured [`Backpressure`] applies at the replica
+    /// inbox: `Block` parks this caller, `Reject` fails fast with
+    /// [`SubmitError::QueueFull`].
+    pub fn submit(&self, prompt: Vec<i32>, n_tokens: usize,
+                  session: Option<u64>) -> SubmitResult {
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        if prompt.is_empty() {
+            return Err(SubmitError::EmptyPrompt { id });
+        }
+        let replica = self.ring.route(session.unwrap_or(id));
+        let (tx, rx) = mpsc::channel();
+        let req = Request { id, prompt, n_tokens, session };
+        let job = Job::Submit { req, reply: tx };
+        let pushed = match self.backpressure {
+            Backpressure::Block => self.inboxes[replica].push(job),
+            Backpressure::Reject => self.inboxes[replica].try_push(job),
+        };
+        if let Err(e) = pushed {
+            return Err(match e {
+                PushError::Full(Job::Submit { req, .. }) => {
+                    SubmitError::QueueFull(req)
+                }
+                PushError::Closed(Job::Submit { req, .. }) => {
+                    SubmitError::Closed(req)
+                }
+                _ => unreachable!("submit jobs come back as submit jobs"),
+            });
+        }
+        match rx.recv() {
+            Ok(outcome) => outcome,
+            // the replica died with the request in flight
+            Err(_) => Err(SubmitError::Failed { id, attempts: 0 }),
+        }
+    }
+
+    /// Live aggregate stats across all replicas (each replica's lifetime
+    /// totals plus its in-flight generation).
+    pub fn stats(&self) -> ServeStats {
+        let mut agg = ServeStats::default();
+        for inbox in &self.inboxes {
+            let (tx, rx) = mpsc::channel();
+            if inbox.push(Job::Stats { reply: tx }).is_err() {
+                continue; // shutting down; report what the rest say
+            }
+            if let Ok(s) = rx.recv() {
+                agg.merge(s);
+            }
+        }
+        agg
+    }
+
+    /// Roll `ckpt` across the replicas **one at a time**: each drains
+    /// its in-flight generation, swaps backends, and acks before the
+    /// next replica starts, so at most one replica is out of rotation
+    /// and queued requests (held in the replica inboxes) are never
+    /// dropped.  On a load failure the replica keeps its old model and
+    /// the rollout stops with an error naming how many replicas had
+    /// already swapped.  Returns the number of replicas swapped.
+    pub fn reload(&self, ckpt: &Path) -> Result<usize> {
+        for (i, inbox) in self.inboxes.iter().enumerate() {
+            let (tx, rx) = mpsc::channel();
+            inbox.push(Job::Reload { ckpt: ckpt.to_path_buf(), reply: tx })
+                .map_err(|_| anyhow!("replica {i} is shut down"))?;
+            match rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(msg)) => {
+                    return Err(anyhow!(
+                        "replica {i} failed to load {} ({i} replica(s) \
+                         already swapped, all still serving): {msg}",
+                        ckpt.display()));
+                }
+                Err(_) => {
+                    return Err(anyhow!("replica {i} died during reload"));
+                }
+            }
+        }
+        Ok(self.inboxes.len())
+    }
+
+    /// Close every inbox, drain the replicas, and return the merged
+    /// lifetime stats.  In-flight and inbox-queued requests are served
+    /// before their replica exits — shutdown is a drain, not a drop.
+    pub fn shutdown(self) -> Result<ServeStats> {
+        for inbox in &self.inboxes {
+            inbox.close();
+        }
+        let mut agg = ServeStats::default();
+        let mut first_err: Option<anyhow::Error> = None;
+        for (i, t) in self.threads.into_iter().enumerate() {
+            match t.join() {
+                Ok(Ok(stats)) => agg.merge(stats),
+                Ok(Err(e)) => {
+                    if first_err.is_none() {
+                        first_err = Some(anyhow!("replica {i}: {e:#}"));
+                    }
+                }
+                Err(p) => {
+                    if first_err.is_none() {
+                        first_err = Some(anyhow!("replica {i} panicked: {}",
+                                                 panic_message(p)));
+                    }
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(agg),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_init(vocab: usize) -> NativeInit {
+        NativeInit {
+            vocab_in: Some(vocab),
+            vocab_out: vocab,
+            d_model: 8,
+            n_layers: 1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn ring_covers_every_member_and_is_deterministic() {
+        let ring = HashRing::for_replicas(3, DEFAULT_VNODES);
+        let again = HashRing::for_replicas(3, DEFAULT_VNODES);
+        let mut owned = [0usize; 3];
+        for key in 0..3000u64 {
+            let m = ring.route(key);
+            assert_eq!(m, again.route(key), "routing must be deterministic");
+            owned[m] += 1;
+        }
+        // every member owns a nontrivial share (vnodes smooth the split)
+        for (m, n) in owned.iter().enumerate() {
+            assert!(*n > 300, "member {m} owns only {n}/3000 keys");
+        }
+    }
+
+    #[test]
+    fn shard_serves_and_shuts_down_clean() {
+        let cfg = ServeConfig::new().temperature(0.0).seed(3).max_batch(4)
+            .build().unwrap();
+        let source = ModelSource::Fresh(tiny_init(16), 3);
+        let shard = Shard::new(&source, &cfg, 2).unwrap();
+        assert_eq!(shard.replicas(), 2);
+        for i in 0..6u64 {
+            let resp = shard
+                .submit(vec![1 + (i % 5) as i32, 2], 3, Some(i % 3))
+                .unwrap();
+            assert_eq!(resp.tokens.len(), 3);
+        }
+        // empty prompts are rejected at the shard door, like everywhere
+        assert!(matches!(shard.submit(vec![], 1, None),
+                         Err(SubmitError::EmptyPrompt { .. })));
+        let live = shard.stats();
+        assert_eq!(live.responses.len(), 6);
+        let stats = shard.shutdown().unwrap();
+        assert_eq!(stats.responses.len(), 6);
+        assert_eq!(stats.submitted,
+                   stats.responses.len() + stats.expired.len()
+                       + stats.failed.len());
+    }
+
+    #[test]
+    fn same_session_routes_to_same_replica_and_hits_cache() {
+        let cfg = ServeConfig::new().temperature(0.0).seed(5).max_batch(4)
+            .session_cache(1 << 20).build().unwrap();
+        let source = ModelSource::Fresh(tiny_init(16), 5);
+        let shard = Shard::new(&source, &cfg, 3).unwrap();
+        // two turns of the same conversation: the second extends the
+        // first's prompt, so it can only warm-start if it landed on the
+        // replica caching turn one's exported state
+        let prompt: Vec<i32> = vec![1, 2, 3, 4, 5, 6, 7, 8];
+        let turn1 = shard.submit(prompt.clone(), 2, Some(42)).unwrap();
+        let mut turn2_prompt = prompt;
+        turn2_prompt.extend(&turn1.tokens);
+        turn2_prompt.push(9);
+        shard.submit(turn2_prompt, 2, Some(42)).unwrap();
+        let stats = shard.shutdown().unwrap();
+        assert!(stats.session_hits >= 1,
+                "turn 2 should warm-start from turn 1's exported state \
+                 (hits={}, misses={})",
+                stats.session_hits, stats.session_misses);
+        assert!(stats.prefill_tokens_saved > 0);
+    }
+}

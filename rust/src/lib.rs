@@ -21,9 +21,13 @@
 //!
 //! Training mirrors the split behind [`runtime::TrainBackend`]
 //! (`backend::NativeTrainer` runs the log-space scan VJP + AdamW fully in
-//! Rust), and serving runs through [`coordinator::server`] (synchronous
-//! facade) on top of [`coordinator::scheduler`] — async
-//! admission-controlled serving that accepts new requests mid-decode.
+//! Rust), and serving runs through
+//! [`coordinator::server::ServeConfig`] — the one builder every serve
+//! entrypoint parses into — on top of [`coordinator::scheduler`] (async
+//! admission-controlled decode that accepts new requests mid-batch),
+//! with a network tier ([`coordinator::http`] over
+//! [`coordinator::shard`]) sharding requests across scheduler replicas
+//! by consistent hashing on the session key.
 //!
 //! The shortest useful path through the crate — build a model, decode:
 //!

@@ -25,9 +25,10 @@
 //! `io_fsync`, `io_rename` — `rust/tests/fault_props.rs` crashes a save
 //! at each and proves recovery finds a valid checkpoint.
 
+use std::fmt;
 use std::fs::File;
 use std::io::Write;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
@@ -190,6 +191,77 @@ pub fn save(path: &Path, tensors: &[NamedTensor]) -> Result<()> {
     commit_durable(path, &buf)
 }
 
+/// Typed classification of a checkpoint load failure.  [`load`] wraps
+/// this in `anyhow` for existing callers; paths that need to *react* to
+/// the class — the HTTP reload endpoint refusing a torn checkpoint while
+/// keeping the old model, recovery scanning a ring for the newest file
+/// that still validates — match on [`load_classified`]'s error instead
+/// of grepping message strings.  Implements `Display` +
+/// `std::error::Error`, so it propagates through `?` and error-response
+/// encoders without ad-hoc `format!` at each call site.
+#[derive(Debug)]
+pub enum LoadError {
+    /// The file could not be read at all (missing, permissions, IO).
+    Io { path: PathBuf, source: std::io::Error },
+    /// The magic bytes are wrong — some other file format.
+    NotACheckpoint { path: PathBuf },
+    /// The file ends mid-record (v1 files without a CRC trailer; a torn
+    /// v2 file fails its CRC first and reports as [`LoadError::Corrupt`]).
+    Truncated { path: PathBuf, detail: String },
+    /// CRC mismatch or an impossible field value.
+    Corrupt { path: PathBuf, detail: String },
+    /// Written by a format revision this reader does not support.
+    VersionMismatch { path: PathBuf, version: u32 },
+}
+
+impl LoadError {
+    /// The offending file, whatever the failure class.
+    pub fn path(&self) -> &Path {
+        match self {
+            LoadError::Io { path, .. }
+            | LoadError::NotACheckpoint { path }
+            | LoadError::Truncated { path, .. }
+            | LoadError::Corrupt { path, .. }
+            | LoadError::VersionMismatch { path, .. } => path,
+        }
+    }
+}
+
+impl fmt::Display for LoadError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            LoadError::Io { path, source } => {
+                write!(f, "open {}: {source}", path.display())
+            }
+            LoadError::NotACheckpoint { path } => {
+                write!(f, "{}: not a MRNN checkpoint", path.display())
+            }
+            LoadError::Truncated { path, detail } => {
+                write!(f, "{}: truncated checkpoint ({detail})",
+                       path.display())
+            }
+            LoadError::Corrupt { path, detail } => {
+                write!(f, "{}: corrupt checkpoint ({detail})",
+                       path.display())
+            }
+            LoadError::VersionMismatch { path, version } => {
+                write!(f, "{}: checkpoint version mismatch (file is \
+                           v{version}, this reader supports \
+                           v1..=v{VERSION})", path.display())
+            }
+        }
+    }
+}
+
+impl std::error::Error for LoadError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            LoadError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
 /// In-memory parse cursor that classifies running off the end as
 /// *truncation* (distinct from corrupt-field errors), naming the path
 /// and offset.
@@ -197,40 +269,54 @@ struct Cursor<'a> {
     buf: &'a [u8],
     off: usize,
     path: &'a Path,
-    what: &'static str,
 }
 
 impl<'a> Cursor<'a> {
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], LoadError> {
         if n > self.buf.len() - self.off {
-            bail!("{}: truncated {} (needed {n} bytes at offset {}, only \
-                   {} remain)",
-                  self.path.display(), self.what, self.off,
-                  self.buf.len() - self.off);
+            return Err(LoadError::Truncated {
+                path: self.path.to_path_buf(),
+                detail: format!("needed {n} bytes at offset {}, only {} \
+                                 remain", self.off,
+                                self.buf.len() - self.off),
+            });
         }
         let s = &self.buf[self.off..self.off + n];
         self.off += n;
         Ok(s)
     }
 
-    fn u8(&mut self) -> Result<u8> {
+    fn u8(&mut self) -> Result<u8, LoadError> {
         Ok(self.take(1)?[0])
     }
 
-    fn u32(&mut self) -> Result<u32> {
+    fn u32(&mut self) -> Result<u32, LoadError> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn corrupt(&self, detail: String) -> LoadError {
+        LoadError::Corrupt { path: self.path.to_path_buf(), detail }
     }
 }
 
-pub fn load(path: &Path) -> Result<Vec<NamedTensor>> {
-    let bytes = std::fs::read(path)
-        .with_context(|| format!("open {}", path.display()))?;
+/// [`load`] with the failure class preserved as a [`LoadError`] instead
+/// of flattened into an `anyhow` message.
+pub fn load_classified(path: &Path)
+                       -> Result<Vec<NamedTensor>, LoadError> {
+    let bytes = std::fs::read(path).map_err(|source| LoadError::Io {
+        path: path.to_path_buf(), source,
+    })?;
     if bytes.len() < 12 {
-        bail!("{}: truncated checkpoint ({} bytes is shorter than the \
-               header)", path.display(), bytes.len());
+        return Err(LoadError::Truncated {
+            path: path.to_path_buf(),
+            detail: format!("{} bytes is shorter than the header",
+                            bytes.len()),
+        });
     }
     if &bytes[..4] != MAGIC {
-        bail!("{}: not a MRNN checkpoint", path.display());
+        return Err(LoadError::NotACheckpoint {
+            path: path.to_path_buf(),
+        });
     }
     let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
     let body: &[u8] = match version {
@@ -240,31 +326,33 @@ pub fn load(path: &Path) -> Result<Vec<NamedTensor>> {
             let want = u32::from_le_bytes(trailer.try_into().unwrap());
             let got = crc32(payload);
             if want != got {
-                bail!("{}: corrupt checkpoint (CRC mismatch: trailer \
-                       {want:08x}, computed {got:08x} — torn or \
-                       bit-rotted write)", path.display());
+                return Err(LoadError::Corrupt {
+                    path: path.to_path_buf(),
+                    detail: format!("CRC mismatch: trailer {want:08x}, \
+                                     computed {got:08x} — torn or \
+                                     bit-rotted write"),
+                });
             }
             &payload[8..]
         }
-        v => bail!("{}: checkpoint version mismatch (file is v{v}, this \
-                    reader supports v1..=v{VERSION})", path.display()),
+        v => return Err(LoadError::VersionMismatch {
+            path: path.to_path_buf(), version: v,
+        }),
     };
-    let mut r = Cursor { buf: body, off: 0, path, what: "checkpoint" };
+    let mut r = Cursor { buf: body, off: 0, path };
     let n = r.u32()? as usize;
     let mut out = Vec::with_capacity(n.min(1 << 16));
     for _ in 0..n {
         let name_len = r.u32()? as usize;
         if name_len > 1 << 20 {
-            bail!("{}: corrupt checkpoint: name length {name_len}",
-                  path.display());
+            return Err(r.corrupt(format!("name length {name_len}")));
         }
         let name = String::from_utf8(r.take(name_len)?.to_vec())
-            .with_context(|| format!("{}: corrupt checkpoint: name not \
-                                      utf-8", path.display()))?;
+            .map_err(|_| r.corrupt("name not utf-8".to_string()))?;
         let dtype = r.u8()?;
         let ndim = r.u32()? as usize;
         if ndim > 16 {
-            bail!("{}: corrupt checkpoint: ndim {ndim}", path.display());
+            return Err(r.corrupt(format!("ndim {ndim}")));
         }
         let mut dims = Vec::with_capacity(ndim);
         for _ in 0..ndim {
@@ -272,8 +360,7 @@ pub fn load(path: &Path) -> Result<Vec<NamedTensor>> {
         }
         let count: usize = dims.iter().product();
         if count > 1 << 30 {
-            bail!("{}: corrupt checkpoint: element count {count}",
-                  path.display());
+            return Err(r.corrupt(format!("element count {count}")));
         }
         let raw = r.take(count * 4)?;
         let data = match dtype {
@@ -283,11 +370,15 @@ pub fn load(path: &Path) -> Result<Vec<NamedTensor>> {
             1 => TensorData::I32(raw.chunks_exact(4)
                 .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
                 .collect()),
-            d => bail!("{}: corrupt checkpoint: dtype {d}", path.display()),
+            d => return Err(r.corrupt(format!("dtype {d}"))),
         };
         out.push(NamedTensor { name, dims, data });
     }
     Ok(out)
+}
+
+pub fn load(path: &Path) -> Result<Vec<NamedTensor>> {
+    Ok(load_classified(path)?)
 }
 
 #[cfg(test)]
@@ -400,6 +491,46 @@ mod tests {
         // IEEE CRC-32 check value for "123456789"
         assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
         assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn load_errors_are_classified_and_std_errors() {
+        let dir = std::env::temp_dir().join("minrnn_io_test8");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("classified.bin");
+        // missing file → Io, with the io::Error preserved as source()
+        let err = load_classified(&path).unwrap_err();
+        assert!(matches!(err, LoadError::Io { .. }), "got {err:?}");
+        assert!(std::error::Error::source(&err).is_some(),
+                "Io must expose its source");
+        assert_eq!(err.path(), path);
+        // wrong magic → NotACheckpoint
+        std::fs::write(&path, b"NOPE....12345678").unwrap();
+        let err = load_classified(&path).unwrap_err();
+        assert!(matches!(err, LoadError::NotACheckpoint { .. }));
+        assert!(err.to_string().contains("not a MRNN checkpoint"));
+        // future version → VersionMismatch
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&99u32.to_le_bytes());
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load_classified(&path).unwrap_err();
+        assert!(matches!(err,
+                         LoadError::VersionMismatch { version: 99, .. }));
+        assert!(err.to_string().contains("v99"));
+        // torn v2 file → Corrupt (CRC), and the anyhow wrapper keeps the
+        // same message the string-matching callers rely on
+        save(&path, &[NamedTensor::f32("w", vec![2], vec![1., 2.])])
+            .unwrap();
+        let good = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &good[..good.len() - 3]).unwrap();
+        let err = load_classified(&path).unwrap_err();
+        assert!(matches!(err, LoadError::Corrupt { .. }));
+        let msg = format!("{:#}", load(&path).unwrap_err());
+        assert!(msg.contains("corrupt") && msg.contains("CRC"),
+                "anyhow wrapper lost the classification: {msg}");
+        std::fs::remove_file(&path).unwrap();
     }
 
     #[test]

@@ -1,0 +1,314 @@
+//! Properties of the network serving tier (`coordinator::{http, shard}`):
+//!
+//! * **consistent-hash remap locality** — growing the replica set from N
+//!   to N+1 moves only the keys the new member's ring segments claim
+//!   (every moved key routes to the *added* member, and the moved share
+//!   is bounded near 1/(N+1)); removing a member leaves every other
+//!   member's keys exactly where they were;
+//! * **loopback bit-identity** — greedy responses fetched over a real
+//!   TCP socket (`POST /v1/submit`) match an in-process
+//!   `Scheduler`/`SubmitHandle` run on an identically-seeded model
+//!   token-for-token, and the error surface maps onto status codes
+//!   (empty prompt → 400, unknown endpoint → 404, wrong method → 405);
+//! * **hot-swap under traffic** — `POST /v1/reload` rolls a new
+//!   checkpoint across the replicas while client threads keep
+//!   submitting: every request gets a 200, post-swap output is
+//!   bit-identical to the new checkpoint served in-process, a reload of
+//!   a garbage path fails with a 5xx while the old model keeps serving,
+//!   and the final drained stats satisfy
+//!   `submitted == responses + expired + failed` with zero failures.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+
+use minrnn::backend::{NativeBackend, NativeInit, NativeModel};
+use minrnn::coordinator::http::HttpServer;
+use minrnn::coordinator::scheduler::Scheduler;
+use minrnn::coordinator::server::{Request, ServeConfig};
+use minrnn::coordinator::shard::{HashRing, ModelSource, Shard,
+                                 DEFAULT_VNODES};
+use minrnn::util::io;
+use minrnn::util::json::{self, Json};
+
+const VOCAB: usize = 16;
+const KEYS: u64 = 2000;
+
+fn tiny_init() -> NativeInit {
+    NativeInit {
+        vocab_in: Some(VOCAB),
+        vocab_out: VOCAB,
+        d_model: 16,
+        n_layers: 1,
+        ..Default::default()
+    }
+}
+
+fn greedy_cfg() -> ServeConfig {
+    ServeConfig::new().temperature(0.0).seed(7).max_batch(4)
+        .build().unwrap()
+}
+
+/// Deterministic per-index prompt (no RNG: the HTTP and in-process runs
+/// must build the exact same requests).
+fn prompt_for(i: usize) -> Vec<i32> {
+    (0..6).map(|k| (1 + (i * 5 + k * 3) % (VOCAB - 1)) as i32).collect()
+}
+
+// ---------------------------------------------------------------------------
+// raw HTTP/1.1 client, hand-rolled like the server
+// ---------------------------------------------------------------------------
+
+/// One request/response round-trip.  Returns `(status, parsed body)`.
+fn http(addr: SocketAddr, method: &str, path: &str, body: &str)
+        -> (u16, Json) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    write!(stream,
+           "{method} {path} HTTP/1.1\r\nHost: {addr}\r\n\
+            Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+           body.len()).unwrap();
+    stream.flush().unwrap();
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).unwrap();
+    let status: u16 = raw.split_whitespace().nth(1)
+        .unwrap_or_else(|| panic!("malformed response: {raw:?}"))
+        .parse().unwrap();
+    let (_, payload) = raw.split_once("\r\n\r\n")
+        .unwrap_or_else(|| panic!("no body in response: {raw:?}"));
+    (status, json::parse(payload).unwrap())
+}
+
+fn submit(addr: SocketAddr, prompt: &[i32], n_tokens: usize,
+          session: Option<u64>) -> (u16, Json) {
+    let toks: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
+    let sess = match session {
+        Some(s) => format!(", \"session\": {s}"),
+        None => String::new(),
+    };
+    let body = format!("{{\"prompt\": [{}], \"n_tokens\": {n_tokens}{sess}}}",
+                       toks.join(", "));
+    http(addr, "POST", "/v1/submit", &body)
+}
+
+fn tokens_of(v: &Json) -> Vec<i32> {
+    v.req("tokens").unwrap().as_arr().unwrap().iter()
+        .map(|t| t.as_i64().unwrap() as i32).collect()
+}
+
+// ---------------------------------------------------------------------------
+// hash-ring remap locality
+// ---------------------------------------------------------------------------
+
+#[test]
+fn adding_a_replica_remaps_only_onto_the_new_member() {
+    for n in 1..=5usize {
+        let before = HashRing::for_replicas(n, DEFAULT_VNODES);
+        let after = HashRing::for_replicas(n + 1, DEFAULT_VNODES);
+        let mut moved = 0usize;
+        for key in 0..KEYS {
+            let (old, new) = (before.route(key), after.route(key));
+            if old != new {
+                assert_eq!(new, n,
+                           "key {key} moved {old} -> {new}, but only the \
+                            added member {n} may claim moved keys");
+                moved += 1;
+            }
+        }
+        // the new member claims ~1/(n+1) of the key space — nonzero, and
+        // nowhere near a full reshuffle (key % n would move ~n/(n+1))
+        assert!(moved > 0, "n={n}: adding a member must claim some keys");
+        let expect = KEYS as usize / (n + 1);
+        assert!(moved < expect * 2 + 50,
+                "n={n}: moved {moved} keys, expected about {expect}");
+    }
+}
+
+#[test]
+fn removing_a_replica_leaves_other_members_keys_in_place() {
+    let n = 4usize;
+    let full = HashRing::for_replicas(n, DEFAULT_VNODES);
+    for dead in 0..n {
+        let members: Vec<usize> = (0..n).filter(|&m| m != dead).collect();
+        let reduced = HashRing::new(&members, DEFAULT_VNODES);
+        let mut orphans = 0usize;
+        for key in 0..KEYS {
+            let old = full.route(key);
+            let new = reduced.route(key);
+            if old == dead {
+                assert_ne!(new, dead, "key {key} routed to a dead member");
+                orphans += 1;
+            } else {
+                // the survivors' ring points did not move: their
+                // sessions keep their replica (and its cached state)
+                assert_eq!(new, old,
+                           "key {key} moved {old} -> {new} though only \
+                            member {dead} was removed");
+            }
+        }
+        assert!(orphans > 0, "member {dead} owned no keys at all");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// loopback e2e: HTTP == in-process, bit for bit
+// ---------------------------------------------------------------------------
+
+#[test]
+fn http_greedy_responses_match_in_process_submit_handle() {
+    let init = tiny_init();
+    let cfg = greedy_cfg();
+    let n_requests = 6usize;
+    let n_tokens = 4usize;
+
+    // in-process reference: same seeded model, raw Scheduler/SubmitHandle
+    let backend =
+        NativeBackend::new(NativeModel::init_random(&init, 11).unwrap());
+    let (sched, handle) =
+        Scheduler::new(&backend, cfg.scheduler_opts()).unwrap();
+    for i in 0..n_requests {
+        handle.submit(Request {
+            id: i as u64,
+            prompt: prompt_for(i),
+            n_tokens,
+            session: None,
+        }).unwrap();
+    }
+    handle.close();
+    let want = sched.run().unwrap();
+    assert_eq!(want.responses.len(), n_requests);
+
+    // network side: 2 replicas of the identically-seeded model
+    let source = ModelSource::Fresh(init, 11);
+    let shard = Shard::new(&source, &cfg, 2).unwrap();
+    let server = HttpServer::bind("127.0.0.1:0", shard).unwrap();
+    let addr = server.addr();
+
+    for i in 0..n_requests {
+        let (status, body) =
+            submit(addr, &prompt_for(i), n_tokens, Some(i as u64));
+        assert_eq!(status, 200, "submit {i} failed: {}",
+                   json::to_string(&body));
+        let got = tokens_of(&body);
+        let reference = &want.responses.iter().find(|r| r.id == i as u64)
+            .unwrap().tokens;
+        assert_eq!(&got, reference,
+                   "request {i}: greedy decode over HTTP must be \
+                    bit-identical to the in-process scheduler");
+    }
+
+    // the error surface maps onto status codes
+    let (status, body) = submit(addr, &[], 1, None);
+    assert_eq!(status, 400);
+    assert_eq!(body.req("kind").unwrap().as_str(), Some("empty_prompt"));
+    let (status, _) = http(addr, "GET", "/v1/nope", "");
+    assert_eq!(status, 404);
+    let (status, _) = http(addr, "GET", "/v1/submit", "");
+    assert_eq!(status, 405);
+
+    // observability endpoints agree with what we just did
+    let (status, health) = http(addr, "GET", "/v1/health", "");
+    assert_eq!(status, 200);
+    assert_eq!(health.req("health").unwrap().as_str(), Some("healthy"));
+    assert_eq!(health.req("replicas").unwrap().as_usize(), Some(2));
+    let (status, stats) = http(addr, "GET", "/v1/stats", "");
+    assert_eq!(status, 200);
+    assert_eq!(stats.req("responses").unwrap().as_usize(), Some(n_requests));
+
+    server.stop();
+    let drained = server.wait().unwrap();
+    assert_eq!(drained.responses.len(), n_requests);
+    assert_eq!(drained.submitted,
+               drained.responses.len() + drained.expired.len()
+                   + drained.failed.len(),
+               "shutdown must account for every admitted request");
+}
+
+// ---------------------------------------------------------------------------
+// checkpoint hot-swap under open-loop traffic
+// ---------------------------------------------------------------------------
+
+#[test]
+fn hot_swap_mid_traffic_drops_nothing_and_switches_models() {
+    let dir = std::env::temp_dir()
+        .join(format!("minrnn_http_props_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let init = tiny_init();
+    let save = |name: &str, seed: u64| -> PathBuf {
+        let model = NativeModel::init_random(&init, seed).unwrap();
+        let path = dir.join(name);
+        io::save(&path, &model.to_named()).unwrap();
+        path
+    };
+    let ckpt_a = save("a.ckpt", 11);
+    let ckpt_b = save("b.ckpt", 99);
+
+    let cfg = greedy_cfg();
+    let source = ModelSource::Checkpoint(ckpt_a);
+    let shard = Shard::new(&source, &cfg, 2).unwrap();
+    let server = HttpServer::bind("127.0.0.1:0", shard).unwrap();
+    let addr = server.addr();
+
+    // open-loop traffic from 3 client threads, reload racing alongside
+    let clients: Vec<_> = (0..3u64).map(|c| {
+        std::thread::spawn(move || {
+            let mut statuses = Vec::new();
+            for i in 0..5usize {
+                let (status, body) = submit(
+                    addr, &prompt_for(i), 3, Some(c * 100 + i as u64));
+                statuses.push((status, json::to_string(&body)));
+            }
+            statuses
+        })
+    }).collect();
+    let body = format!("{{\"checkpoint\": {:?}}}", ckpt_b.to_str().unwrap());
+    let (status, reply) = http(addr, "POST", "/v1/reload", &body);
+    assert_eq!(status, 200, "reload failed: {}", json::to_string(&reply));
+    assert_eq!(reply.req("reloaded").unwrap().as_usize(), Some(2));
+    let mut submitted = 0usize;
+    for c in clients {
+        for (status, body) in c.join().unwrap() {
+            assert_eq!(status, 200,
+                       "a request was dropped during the rolling swap: \
+                        {body}");
+            submitted += 1;
+        }
+    }
+
+    // after the swap, the shard serves checkpoint B bit-for-bit
+    let backend_b = NativeBackend::from_checkpoint(&ckpt_b).unwrap();
+    let want = cfg.run(&backend_b, vec![Request {
+        id: 0, prompt: prompt_for(7), n_tokens: 4, session: None,
+    }]).unwrap();
+    let (status, body) = submit(addr, &prompt_for(7), 4, None);
+    assert_eq!(status, 200);
+    assert_eq!(tokens_of(&body), want.responses[0].tokens,
+               "post-swap output must come from the new checkpoint");
+    submitted += 1;
+
+    // a garbage reload is a 5xx and leaves the (new) model serving
+    let (status, reply) =
+        http(addr, "POST", "/v1/reload",
+             "{\"checkpoint\": \"/nonexistent/nope.ckpt\"}");
+    assert_eq!(status, 500, "bogus checkpoint must not reload: {}",
+               json::to_string(&reply));
+    assert_eq!(reply.req("kind").unwrap().as_str(), Some("reload_failed"));
+    let (status, body) = submit(addr, &prompt_for(8), 2, None);
+    assert_eq!(status, 200);
+    assert_eq!(tokens_of(&body).len(), 2);
+    submitted += 1;
+
+    // graceful drain over the wire, then the ledger must balance
+    let (status, reply) = http(addr, "POST", "/v1/shutdown", "");
+    assert_eq!(status, 200);
+    assert_eq!(reply.req("draining").unwrap().as_bool(), Some(true));
+    let stats = server.wait().unwrap();
+    assert_eq!(stats.responses.len(), submitted,
+               "every submitted request must have been answered");
+    assert_eq!(stats.submitted,
+               stats.responses.len() + stats.expired.len()
+                   + stats.failed.len(),
+               "hot-swap accounting must balance");
+    assert!(stats.failed.is_empty(), "swap-attributable failures: {:?}",
+            stats.failed);
+    std::fs::remove_dir_all(&dir).ok();
+}
