@@ -18,14 +18,24 @@
 //! without reassociating any float sum.  (A transposed-weight dot-product
 //! kernel was tried first; under strict IEEE semantics its k-reduction
 //! cannot vectorize without changing the summation order, so the
-//! broadcast-tile form wins until explicit SIMD lands — see ROADMAP.)
+//! broadcast-tile form won.)  The register tile now runs through the
+//! dispatched lane kernels in [`crate::util::simd`] — explicit AVX2
+//! broadcast-multiply-add across the 16 accumulators, with a scalar twin
+//! that performs the identical per-lane op sequence, so f32 results stay
+//! bit-for-bit identical across dispatch levels.  A [`Dense`] may also
+//! carry per-tile-scaled int8 weights (`q`, see
+//! [`super::quant`]); the tile kernel then dequantizes inside the
+//! register tile, halving weight bandwidth on the decode hot path.
 //! Per-`(row, column)` summation order is k-ascending with the bias folded
 //! in first, identical to the naive loop and independent of blocking and
 //! thread count, so results are bit-for-bit reproducible.
 
 use anyhow::{bail, Result};
 
+use crate::util::simd::{self, Level};
 use crate::util::threads::{self, SlicePtr, ThreadPool};
+
+use super::quant::QuantDense;
 
 /// Output-column register tile of the GEMM micro-kernel.
 pub const N_TILE: usize = 16;
@@ -197,12 +207,17 @@ pub fn reuse(buf: &mut Vec<f32>, n: usize) {
 // ---------------------------------------------------------------------------
 
 /// Affine layer `y = x @ w + b`, `w: (d_in, d_out)` row-major.
+///
+/// When `q` is set the layer is inference-only: `w` is empty and the
+/// weights live as per-tile-scaled int8 in [`QuantDense`], dequantized
+/// inside the register tile (see [`super::quant`]).  The bias stays f32.
 #[derive(Clone, Debug)]
 pub struct Dense {
     pub d_in: usize,
     pub d_out: usize,
     pub w: Vec<f32>,
     pub b: Vec<f32>,
+    pub q: Option<QuantDense>,
 }
 
 impl Dense {
@@ -212,7 +227,7 @@ impl Dense {
             bail!("dense shape mismatch: w {} != {}x{}, b {} != {}",
                   w.len(), d_in, d_out, b.len(), d_out);
         }
-        Ok(Dense { d_in, d_out, w, b })
+        Ok(Dense { d_in, d_out, w, b, q: None })
     }
 
     /// Apply to `rows` rows of `d_in` features; returns `rows * d_out`.
@@ -247,9 +262,10 @@ impl Dense {
                    "dense input: {} != {} rows x {}", x.len(), rows,
                    self.d_in);
         reuse(y, rows * self.d_out);
+        let lvl = simd::level();
         let macs = rows * self.d_in * self.d_out;
         if macs < PAR_MIN_MACS || pool.active() == 1 {
-            self.apply_rows(x, y.as_mut_slice(), 0, rows);
+            self.apply_rows(lvl, x, y.as_mut_slice(), 0, rows);
             return;
         }
         if rows >= 2 * ROW_BLOCK {
@@ -261,7 +277,7 @@ impl Dense {
                 let yb = unsafe {
                     yp.slice(r0 * self.d_out, (r1 - r0) * self.d_out)
                 };
-                self.apply_rows(x, yb, r0, r1);
+                self.apply_rows(lvl, x, yb, r0, r1);
             });
         } else {
             let n_blocks = self.d_out.div_ceil(COL_BLOCK);
@@ -273,7 +289,7 @@ impl Dense {
                     let yr = unsafe {
                         yp.slice(r * self.d_out + o0, o1 - o0)
                     };
-                    self.apply_row_cols(x, r, o0, o1, yr);
+                    self.apply_row_cols(lvl, x, r, o0, o1, yr);
                 }
             });
         }
@@ -283,7 +299,8 @@ impl Dense {
     /// `yb` (whose row 0 corresponds to `r0`).  Column tiles run in the
     /// outer loop so each `(d_in, N_TILE)` weight slab is reused across
     /// the whole row block from L1.
-    fn apply_rows(&self, x: &[f32], yb: &mut [f32], r0: usize, r1: usize) {
+    fn apply_rows(&self, lvl: Level, x: &[f32], yb: &mut [f32], r0: usize,
+                  r1: usize) {
         let d_out = self.d_out;
         let mut o = 0usize;
         while o < d_out {
@@ -291,7 +308,7 @@ impl Dense {
             for r in r0..r1 {
                 let yr = &mut yb[(r - r0) * d_out + o
                                  ..(r - r0) * d_out + o1];
-                self.apply_row_cols(x, r, o, o1, yr);
+                self.apply_row_cols(lvl, x, r, o, o1, yr);
             }
             o = o1;
         }
@@ -300,22 +317,42 @@ impl Dense {
     /// Micro-kernel: one input row times output columns `[o0, o1)` with
     /// `o1 - o0 <= N_TILE` handled as a full register tile and a scalar
     /// tail.  Per-output summation is bias-first then k-ascending —
-    /// exactly the naive loop's order.
-    fn apply_row_cols(&self, x: &[f32], r: usize, o0: usize, o1: usize,
-                      yr: &mut [f32]) {
+    /// exactly the naive loop's order; the tile body lives in
+    /// [`crate::util::simd`] so scalar and AVX2 dispatch share it.
+    /// `o0` is always a multiple of [`N_TILE`] at every call site, so
+    /// the quantized path's per-tile scale column is `o / N_TILE`.
+    fn apply_row_cols(&self, lvl: Level, x: &[f32], r: usize, o0: usize,
+                      o1: usize, yr: &mut [f32]) {
         let d_in = self.d_in;
         let d_out = self.d_out;
         let xr = &x[r * d_in..(r + 1) * d_in];
         let mut o = o0;
+        if let Some(qw) = &self.q {
+            let n_ct = d_out.div_ceil(N_TILE);
+            while o + N_TILE <= o1 {
+                let mut acc = [0.0f32; N_TILE];
+                simd::dense_tile16_q8(lvl, xr, &qw.q, o, d_out, &qw.scales,
+                                      n_ct, o / N_TILE,
+                                      &self.b[o..o + N_TILE], &mut acc);
+                yr[o - o0..o - o0 + N_TILE].copy_from_slice(&acc);
+                o += N_TILE;
+            }
+            for oo in o..o1 {
+                let ct = oo / N_TILE;
+                let mut acc = self.b[oo];
+                for (k, &xv) in xr.iter().enumerate() {
+                    let sc = qw.scales[(k / simd::K_TILE) * n_ct + ct];
+                    let wde = sc * (qw.q[k * d_out + oo] as f32);
+                    acc += xv * wde;
+                }
+                yr[oo - o0] = acc;
+            }
+            return;
+        }
         while o + N_TILE <= o1 {
             let mut acc = [0.0f32; N_TILE];
-            acc.copy_from_slice(&self.b[o..o + N_TILE]);
-            for (k, &xv) in xr.iter().enumerate() {
-                let wrow = &self.w[k * d_out + o..k * d_out + o + N_TILE];
-                for j in 0..N_TILE {
-                    acc[j] += xv * wrow[j];
-                }
-            }
+            simd::dense_tile16(lvl, xr, &self.w, o, d_out,
+                               &self.b[o..o + N_TILE], &mut acc);
             yr[o - o0..o - o0 + N_TILE].copy_from_slice(&acc);
             o += N_TILE;
         }

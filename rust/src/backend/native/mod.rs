@@ -4,7 +4,8 @@
 //! selective scan, and the causal-attention [`transformer`] with its
 //! per-lane KV ring cache), the backbone model ([`model`]) with its
 //! zero-allocation decode scratch ([`scratch`]), the dense/conv/norm
-//! kernels ([`linalg`]), and — since the training subsystem landed —
+//! kernels ([`linalg`], whose int8 inference payload lives in
+//! [`quant`]), and — since the training subsystem landed —
 //! reverse-mode gradients with dropout ([`autograd`]), the fused
 //! training heads ([`loss`]: masked CE, masked MSE, pooled sequence
 //! classification), AdamW ([`adam`]), and the [`NativeTrainer`] driving
@@ -26,6 +27,7 @@ pub mod mingru;
 pub mod minlstm;
 pub mod mixer;
 pub mod model;
+pub mod quant;
 pub mod s6lite;
 pub mod scan;
 pub mod scratch;
@@ -38,6 +40,7 @@ pub use mingru::{MinGru, H0_VALUE};
 pub use minlstm::MinLstm;
 pub use mixer::{kinds_help, Mixer, MixerTape, MIXER_KINDS};
 pub use model::{NativeInit, NativeModel, NativeState};
+pub use quant::QuantDense;
 pub use s6lite::S6Lite;
 pub use scratch::{MixerScratch, NativeScratch};
 pub use train::NativeTrainer;

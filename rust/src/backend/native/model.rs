@@ -32,6 +32,7 @@ use super::linalg::{self, Conv4, Dense, Embedding, Mlp, CONV_K};
 use super::mingru::MinGru;
 use super::minlstm::MinLstm;
 use super::mixer::{kinds_help, Mixer};
+use super::quant::{self, QuantDense};
 use super::s6lite::S6Lite;
 use super::scratch::NativeScratch;
 use super::transformer::Transformer;
@@ -183,6 +184,7 @@ fn dense_random(rng: &mut Rng, d_in: usize, d_out: usize, scale: f32,
         d_out,
         w: (0..d_in * d_out).map(|_| rng.normal_f32(0.0, scale)).collect(),
         b: vec![bias; d_out],
+        q: None,
     }
 }
 
@@ -320,13 +322,44 @@ impl NativeModel {
                 .ok_or_else(|| anyhow!("'{name}' is not f32"))?;
             Ok((t.dims.clone(), v.to_vec()))
         };
+        // a dense leaf is either f32 (`{name}/w`) or the v3 int8 pair
+        // (`{name}/q` + `{name}/scale`, see `super::quant`)
         let dense = |name: &str| -> Result<Dense> {
-            let (wd, w) = tensor_f32(&format!("{name}/w"))?;
             let (_, b) = tensor_f32(&format!("{name}/b"))?;
-            if wd.len() != 2 {
-                bail!("'{name}/w' is not a matrix: dims {wd:?}");
+            if find(&format!("{name}/q")).is_none() {
+                let (wd, w) = tensor_f32(&format!("{name}/w"))?;
+                if wd.len() != 2 {
+                    bail!("'{name}/w' is not a matrix: dims {wd:?}");
+                }
+                return Dense::new(wd[0], wd[1], w, b);
             }
-            Dense::new(wd[0], wd[1], w, b)
+            let qn = format!("{name}/q");
+            let qt = find(&qn).unwrap();
+            let q = qt.data.as_i8()
+                .ok_or_else(|| anyhow!("'{qn}' is not i8"))?.to_vec();
+            let qd = qt.dims.clone();
+            if qd.len() != 2 {
+                bail!("'{qn}' is not a matrix: dims {qd:?}");
+            }
+            let (d_in, d_out) = (qd[0], qd[1]);
+            if q.len() != d_in * d_out || b.len() != d_out {
+                bail!("'{qn}' shape mismatch: {} != {d_in}x{d_out}, \
+                       b {} != {d_out}", q.len(), b.len());
+            }
+            let (sd, scales) = tensor_f32(&format!("{name}/scale"))?;
+            if sd.len() != 2 || sd[0] != quant::n_kt(d_in)
+                || sd[1] != quant::n_ct(d_out) {
+                bail!("'{name}/scale' dims {sd:?} do not match a \
+                       ({d_in}, {d_out}) int8 matrix (want ({}, {}))",
+                      quant::n_kt(d_in), quant::n_ct(d_out));
+            }
+            Ok(Dense { d_in, d_out, w: Vec::new(), b,
+                       q: Some(QuantDense { q, scales }) })
+        };
+        // mixer-kind probes must see both encodings
+        let has_dense = |name: &str| -> bool {
+            find(&format!("{name}/w")).is_some()
+                || find(&format!("{name}/q")).is_some()
         };
 
         let (input, d_model) = if find("embed/w").is_some() {
@@ -369,22 +402,21 @@ impl NativeModel {
         let mut i = 0usize;
         while find(&format!("blocks/{i}/ln1/scale")).is_some() {
             let (_, ln1) = tensor_f32(&format!("blocks/{i}/ln1/scale"))?;
-            let mixer = if find(&format!("blocks/{i}/mixer/linear_f/w"))
-                .is_some() {
+            let mixer = if has_dense(&format!("blocks/{i}/mixer/linear_f"))
+            {
                 MixerParams::MinLstm(MinLstm {
                     linear_f: dense(&format!("blocks/{i}/mixer/linear_f"))?,
                     linear_i: dense(&format!("blocks/{i}/mixer/linear_i"))?,
                     linear_h: dense(&format!("blocks/{i}/mixer/linear_h"))?,
                     down: dense(&format!("blocks/{i}/mixer/down"))?,
                 })
-            } else if find(&format!("blocks/{i}/mixer/linear_z/w"))
-                .is_some() {
+            } else if has_dense(&format!("blocks/{i}/mixer/linear_z")) {
                 MixerParams::MinGru(MinGru {
                     linear_z: dense(&format!("blocks/{i}/mixer/linear_z"))?,
                     linear_h: dense(&format!("blocks/{i}/mixer/linear_h"))?,
                     down: dense(&format!("blocks/{i}/mixer/down"))?,
                 })
-            } else if find(&format!("blocks/{i}/mixer/dt/w")).is_some() {
+            } else if has_dense(&format!("blocks/{i}/mixer/dt")) {
                 let (ad, a_log) =
                     tensor_f32(&format!("blocks/{i}/mixer/a_log"))?;
                 if ad.len() != 1 {
@@ -397,7 +429,7 @@ impl NativeModel {
                     down: dense(&format!("blocks/{i}/mixer/down"))?,
                     a_log,
                 })
-            } else if find(&format!("blocks/{i}/mixer/qkv/w")).is_some() {
+            } else if has_dense(&format!("blocks/{i}/mixer/qkv")) {
                 let pe = pos.as_ref().ok_or_else(|| anyhow!(
                     "block {i} is a transformer but the checkpoint has no \
                      'pos/w' positional table"))?;
@@ -468,8 +500,20 @@ impl NativeModel {
     pub fn to_named(&self) -> Vec<NamedTensor> {
         let mut out = Vec::new();
         let dense = |out: &mut Vec<NamedTensor>, name: String, d: &Dense| {
-            out.push(NamedTensor::f32(&format!("{name}/w"),
-                                      vec![d.d_in, d.d_out], d.w.clone()));
+            match &d.q {
+                Some(qd) => {
+                    out.push(NamedTensor::i8(&format!("{name}/q"),
+                                             vec![d.d_in, d.d_out],
+                                             qd.q.clone()));
+                    out.push(NamedTensor::f32(
+                        &format!("{name}/scale"),
+                        vec![quant::n_kt(d.d_in), quant::n_ct(d.d_out)],
+                        qd.scales.clone()));
+                }
+                None => out.push(NamedTensor::f32(
+                    &format!("{name}/w"), vec![d.d_in, d.d_out],
+                    d.w.clone())),
+            }
             out.push(NamedTensor::f32(&format!("{name}/b"),
                                       vec![d.d_out], d.b.clone()));
         };
@@ -717,6 +761,95 @@ impl NativeModel {
         z
     }
 
+    /// Visit every [`Dense`] layer (the quantizable leaves) in canonical
+    /// order.  Embeddings, conv taps, and norm gains are not visited —
+    /// they stay f32 under quantization.
+    pub fn for_each_dense(&self, f: &mut dyn FnMut(&Dense)) {
+        if let InputLayer::Proj(p) = &self.input {
+            f(p);
+        }
+        for blk in &self.blocks {
+            match &blk.mixer {
+                MixerParams::MinGru(m) => {
+                    for d in [&m.linear_z, &m.linear_h, &m.down] {
+                        f(d);
+                    }
+                }
+                MixerParams::MinLstm(m) => {
+                    for d in [&m.linear_f, &m.linear_i, &m.linear_h,
+                              &m.down] {
+                        f(d);
+                    }
+                }
+                MixerParams::S6Lite(m) => {
+                    for d in [&m.dt, &m.b, &m.gate, &m.down] {
+                        f(d);
+                    }
+                }
+                MixerParams::Transformer(m) => {
+                    for d in [&m.qkv, &m.proj] {
+                        f(d);
+                    }
+                }
+            }
+            if let Some(m) = &blk.mlp {
+                f(&m.up);
+                f(&m.down);
+            }
+        }
+        f(&self.head);
+    }
+
+    /// Mutable twin of [`NativeModel::for_each_dense`] — the hook
+    /// `quant::quantize_model` converts layers through.
+    pub fn for_each_dense_mut(&mut self, f: &mut dyn FnMut(&mut Dense)) {
+        if let InputLayer::Proj(p) = &mut self.input {
+            f(p);
+        }
+        for blk in &mut self.blocks {
+            match &mut blk.mixer {
+                MixerParams::MinGru(m) => {
+                    for d in [&mut m.linear_z, &mut m.linear_h,
+                              &mut m.down] {
+                        f(d);
+                    }
+                }
+                MixerParams::MinLstm(m) => {
+                    for d in [&mut m.linear_f, &mut m.linear_i,
+                              &mut m.linear_h, &mut m.down] {
+                        f(d);
+                    }
+                }
+                MixerParams::S6Lite(m) => {
+                    for d in [&mut m.dt, &mut m.b, &mut m.gate,
+                              &mut m.down] {
+                        f(d);
+                    }
+                }
+                MixerParams::Transformer(m) => {
+                    for d in [&mut m.qkv, &mut m.proj] {
+                        f(d);
+                    }
+                }
+            }
+            if let Some(m) = &mut blk.mlp {
+                f(&mut m.up);
+                f(&mut m.down);
+            }
+        }
+        f(&mut self.head);
+    }
+
+    /// True when any dense layer carries an int8 payload.  Quantized
+    /// models are inference-only (the trainer refuses them) and
+    /// fingerprint differently from their f32 source (see
+    /// [`NativeModel::state_fingerprint`]).
+    pub fn is_quantized(&self) -> bool {
+        let mut any = false;
+        self.for_each_dense(&mut |d| any |= d.q.is_some());
+        any
+    }
+
     // -----------------------------------------------------------------------
     // inference
     // -----------------------------------------------------------------------
@@ -769,6 +902,13 @@ impl NativeModel {
     /// be imported into the other.  minGRU/minLSTM fingerprints are
     /// unchanged from layout v1 (state length == hidden width there), so
     /// session caches written before the mixer refactor stay valid.
+    ///
+    /// Quantized models fold in an extra marker: their decode-state
+    /// *layout* matches the f32 source (cache state stays f32), but the
+    /// logits the states were computed under differ, so a session
+    /// snapshot exported from the f32 model must not silently import
+    /// into its int8 twin (or vice versa).  f32 fingerprints are
+    /// unchanged, keeping existing session caches valid.
     pub fn state_fingerprint(&self) -> u64 {
         let mut fields: Vec<u64> = vec![
             1, // state-layout version
@@ -786,6 +926,9 @@ impl NativeModel {
             fields.push(blk.mixer.state_len() as u64);
             fields.push(blk.conv.as_ref()
                 .map(|c| ((c.k - 1) * c.d) as u64).unwrap_or(0));
+        }
+        if self.is_quantized() {
+            fields.push(0x6938_5131_7131_0001); // int8-weights marker
         }
         let mut fp = 0u64;
         for f in fields {
@@ -1081,7 +1224,8 @@ impl NativeModel {
     /// Human-readable block summary for `describe`/serve logs, spelling
     /// out the per-block count rather than a bare kind: `"2×transformer"`.
     pub fn kind_summary(&self) -> String {
-        format!("{}×{}", self.blocks.len(), self.kind())
+        let q = if self.is_quantized() { " int8" } else { "" };
+        format!("{}×{}{q}", self.blocks.len(), self.kind())
     }
 }
 
@@ -1158,6 +1302,29 @@ mod tests {
             let (b, _) = back.forward(&x).unwrap();
             assert_eq!(a, b, "{kind}: roundtrip must be bit-exact");
             assert_eq!(back.kind(), kind);
+        }
+    }
+
+    #[test]
+    fn quantized_named_roundtrip_is_exact() {
+        // int8 leaves survive to_named → from_named bit for bit, and the
+        // quantized model fingerprints differently from its f32 source
+        for kind in ["mingru", "s6lite", "transformer"] {
+            let model = tiny_model(kind, true, true);
+            let fp_f32 = model.state_fingerprint();
+            let mut qm = model.clone();
+            quant::quantize_model(&mut qm).unwrap();
+            assert!(qm.is_quantized() && !model.is_quantized());
+            assert_ne!(qm.state_fingerprint(), fp_f32,
+                       "{kind}: quantization must change the fingerprint");
+            assert!(qm.kind_summary().contains("int8"), "{kind}");
+            let back = NativeModel::from_named(&qm.to_named()).unwrap();
+            assert!(back.is_quantized());
+            assert_eq!(back.state_fingerprint(), qm.state_fingerprint());
+            let x = Tensor::i32(vec![1, 5], vec![1, 2, 3, 4, 5]);
+            let (a, _) = qm.forward(&x).unwrap();
+            let (b, _) = back.forward(&x).unwrap();
+            assert_eq!(a, b, "{kind}: quantized roundtrip must be exact");
         }
     }
 

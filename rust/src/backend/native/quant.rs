@@ -1,0 +1,321 @@
+//! Per-tile-scaled int8 weight quantization for inference.
+//!
+//! Decode is memory-bandwidth-bound — a batch-1 step streams every
+//! weight matrix through the core once — so storing [`Dense`] weights
+//! as int8 halves the bytes per step (the paper's efficiency argument
+//! for minimal RNNs is exactly this bandwidth economy).  The scheme is
+//! symmetric linear quantization with one f32 scale per
+//! `(K_TILE x N_TILE)` weight tile: `w ≈ scale * q`, `q ∈ [-127, 127]`.
+//! Tiles match the GEMM register tile in `linalg.rs`, so the scale for
+//! a tile is loaded once per `(k-block, column-tile)` and the dequant
+//! `sc * (q as f32)` happens inside the register tile
+//! ([`crate::util::simd::dense_tile16_q8`]).
+//!
+//! Contract (see `ARCHITECTURE.md`): int8 results are **not** bit-equal
+//! to f32 — they are gated on the error budgets below instead.  The
+//! dequant op sequence itself is identical between scalar and AVX2
+//! dispatch, so quantized outputs *are* bit-identical across dispatch
+//! levels and thread counts, same as f32.
+//!
+//! Quantized models are inference-only: `quantize` drops the f32
+//! weights, the trainer refuses to resume from such a checkpoint, and
+//! biases (plus every non-[`Dense`] leaf: embeddings, conv taps, norm
+//! gains, head) stay f32.
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+use crate::util::simd::K_TILE;
+
+use super::linalg::{Dense, N_TILE};
+use super::model::{InputLayer, NativeModel};
+
+/// Max allowed relative logit error after quantization, measured as
+/// `max_i |q_i - f_i| / max(1, |f_i|)` over a probe batch.  The tiled
+/// scheme lands well under this on trained checkpoints; the budget is
+/// the serve/CI gate, not the expected error.
+pub const LOGIT_REL_ERR_BUDGET: f32 = 0.05;
+
+/// Max allowed eval-loss increase (mean CE, nats) on a held-out batch
+/// after quantization.
+pub const EVAL_LOSS_DELTA_BUDGET: f32 = 0.10;
+
+/// Int8 payload for a [`Dense`]: `q` has the same `(d_in, d_out)`
+/// row-major layout as `w`; `scales` is an `(n_kt, n_ct)` row-major
+/// grid, one f32 per `(K_TILE x N_TILE)` tile of the weight matrix
+/// (ragged edge tiles included).  An all-zero tile stores scale 0.
+#[derive(Clone, Debug)]
+pub struct QuantDense {
+    pub q: Vec<i8>,
+    pub scales: Vec<f32>,
+}
+
+/// Number of `K_TILE`-row blocks covering `d_in`.
+pub fn n_kt(d_in: usize) -> usize {
+    d_in.div_ceil(K_TILE).max(1)
+}
+
+/// Number of `N_TILE`-column blocks covering `d_out`.
+pub fn n_ct(d_out: usize) -> usize {
+    d_out.div_ceil(N_TILE).max(1)
+}
+
+impl QuantDense {
+    /// Quantize a row-major `(d_in, d_out)` f32 weight matrix.
+    pub fn from_f32(d_in: usize, d_out: usize, w: &[f32]) -> QuantDense {
+        assert_eq!(w.len(), d_in * d_out, "quantize: w shape mismatch");
+        let (nk, nc) = (n_kt(d_in), n_ct(d_out));
+        let mut scales = vec![0.0f32; nk * nc];
+        for kt in 0..nk {
+            let k1 = ((kt + 1) * K_TILE).min(d_in);
+            for ct in 0..nc {
+                let j1 = ((ct + 1) * N_TILE).min(d_out);
+                let mut maxabs = 0.0f32;
+                for k in kt * K_TILE..k1 {
+                    for j in ct * N_TILE..j1 {
+                        maxabs = maxabs.max(w[k * d_out + j].abs());
+                    }
+                }
+                scales[kt * nc + ct] =
+                    if maxabs > 0.0 { maxabs / 127.0 } else { 0.0 };
+            }
+        }
+        let mut q = vec![0i8; d_in * d_out];
+        for k in 0..d_in {
+            for j in 0..d_out {
+                let sc = scales[(k / K_TILE) * nc + j / N_TILE];
+                if sc > 0.0 {
+                    let v = (w[k * d_out + j] / sc).round();
+                    q[k * d_out + j] = v.clamp(-127.0, 127.0) as i8;
+                }
+            }
+        }
+        QuantDense { q, scales }
+    }
+
+    /// Reconstruct the f32 weights the kernel effectively uses
+    /// (`sc * q` per element) — for error accounting and tests.
+    pub fn dequant(&self, d_in: usize, d_out: usize) -> Vec<f32> {
+        assert_eq!(self.q.len(), d_in * d_out, "dequant: q shape mismatch");
+        let nc = n_ct(d_out);
+        (0..d_in * d_out)
+            .map(|i| {
+                let (k, j) = (i / d_out, i % d_out);
+                self.scales[(k / K_TILE) * nc + j / N_TILE]
+                    * (self.q[i] as f32)
+            })
+            .collect()
+    }
+}
+
+/// Convert a [`Dense`] to int8 in place, dropping the f32 weights.
+pub fn quantize_dense(d: &mut Dense) -> Result<()> {
+    if d.q.is_some() {
+        bail!("dense layer is already quantized");
+    }
+    let qd = QuantDense::from_f32(d.d_in, d.d_out, &d.w);
+    if qd.scales.len() != n_kt(d.d_in) * n_ct(d.d_out) {
+        bail!("quantize produced a malformed scale grid");
+    }
+    d.w = Vec::new();
+    d.q = Some(qd);
+    Ok(())
+}
+
+/// Quantize every [`Dense`] leaf of a model in place.  Embeddings,
+/// conv taps, norm gains, and biases stay f32.  Fails (leaving the
+/// model partially converted is impossible — the check runs first) if
+/// the model is already quantized.
+pub fn quantize_model(m: &mut NativeModel) -> Result<()> {
+    if m.is_quantized() {
+        bail!("model is already quantized");
+    }
+    let mut res = Ok(());
+    m.for_each_dense_mut(&mut |d| {
+        if res.is_ok() {
+            res = quantize_dense(d);
+        }
+    });
+    res
+}
+
+/// A deterministic probe input matching the model's input contract:
+/// tokens below the embedding vocab for discrete models, unit-normal
+/// features for continuous ones.  `t` is clamped to the positional
+/// table for transformer backbones.
+pub fn probe_input(m: &NativeModel, batch: usize, t: usize,
+                   seed: u64) -> Tensor {
+    let t = match &m.pos {
+        Some(pe) => t.min(pe.vocab).max(1),
+        None => t.max(1),
+    };
+    let mut rng = Rng::new(seed);
+    match &m.input {
+        InputLayer::Embed(e) => Tensor::i32(
+            vec![batch, t],
+            (0..batch * t).map(|_| rng.below(e.vocab as u64) as i32)
+                .collect()),
+        InputLayer::Proj(p) => Tensor::f32(
+            vec![batch, t, p.d_in],
+            (0..batch * t * p.d_in).map(|_| rng.normal_f32(0.0, 1.0))
+                .collect()),
+    }
+}
+
+/// Golden-error self-check: run the same seeded probe batch through the
+/// f32 source and the quantized model and report [`max_rel_err`] over
+/// all logits.  Shared by `minrnn quantize`, the bench harness, and the
+/// property tests so they gate on one number.
+pub fn probe_rel_err(reference: &NativeModel, quantized: &NativeModel)
+                     -> Result<f32> {
+    let x = probe_input(reference, 2, 16, 0x5138);
+    let (lf, _) = reference.forward(&x)?;
+    let (lq, _) = quantized.forward(&x)?;
+    let (f, q) = (lf.data.as_f32().unwrap(), lq.data.as_f32().unwrap());
+    Ok(max_rel_err(f, q))
+}
+
+/// `max_i |q_i - f_i| / max(1, |f_i|)` — the golden-error metric the
+/// CLI, bench harness, and tests all share.
+pub fn max_rel_err(reference: &[f32], quantized: &[f32]) -> f32 {
+    assert_eq!(reference.len(), quantized.len(), "rel err: len mismatch");
+    let mut worst = 0.0f32;
+    for (&f, &q) in reference.iter().zip(quantized) {
+        worst = worst.max((q - f).abs() / f.abs().max(1.0));
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_w(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32(0.0, scale)).collect()
+    }
+
+    #[test]
+    fn per_tile_error_bound_holds() {
+        // symmetric rounding to 127 levels: |deq - w| <= scale / 2
+        let mut rng = Rng::new(11);
+        for &(d_in, d_out) in &[(1usize, 1usize), (7, 5), (64, 16),
+                                (65, 17), (130, 48), (40, 33)] {
+            let w = random_w(&mut rng, d_in * d_out, 0.3);
+            let qd = QuantDense::from_f32(d_in, d_out, &w);
+            assert_eq!(qd.scales.len(), n_kt(d_in) * n_ct(d_out));
+            let deq = qd.dequant(d_in, d_out);
+            let nc = n_ct(d_out);
+            for k in 0..d_in {
+                for j in 0..d_out {
+                    let sc = qd.scales[(k / K_TILE) * nc + j / N_TILE];
+                    let err = (deq[k * d_out + j] - w[k * d_out + j]).abs();
+                    assert!(err <= 0.5 * sc + 1e-7,
+                            "({d_in},{d_out}) [{k},{j}]: err {err} > \
+                             scale/2 {}", 0.5 * sc);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_tile_quantizes_to_zero() {
+        let qd = QuantDense::from_f32(3, 4, &vec![0.0; 12]);
+        assert!(qd.scales.iter().all(|&s| s == 0.0));
+        assert!(qd.q.iter().all(|&v| v == 0));
+        assert!(qd.dequant(3, 4).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn extremes_saturate_to_127() {
+        // the max-abs element of each tile must map to exactly +/-127
+        let mut w = vec![0.01f32; 64 * 16];
+        w[5] = -2.0;
+        let qd = QuantDense::from_f32(64, 16, &w);
+        assert_eq!(qd.q[5], -127);
+        assert!((qd.scales[0] - 2.0 / 127.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantize_dense_drops_w_and_rejects_twice() {
+        let mut rng = Rng::new(5);
+        let mut d = Dense::new(20, 18, random_w(&mut rng, 360, 0.2),
+                               vec![0.1; 18]).unwrap();
+        quantize_dense(&mut d).unwrap();
+        assert!(d.w.is_empty());
+        assert!(d.q.is_some());
+        let err = quantize_dense(&mut d).unwrap_err().to_string();
+        assert!(err.contains("already quantized"), "{err}");
+    }
+
+    #[test]
+    fn quantized_apply_matches_dequant_reference() {
+        // the kernel must compute exactly x @ dequant(w) + b (the
+        // budgeted error is quantization itself, not the kernel)
+        let mut rng = Rng::new(23);
+        for &(rows, d_in, d_out) in &[(1usize, 33usize, 17usize),
+                                      (3, 70, 48), (2, 64, 16)] {
+            let w = random_w(&mut rng, d_in * d_out, 0.3);
+            let b = random_w(&mut rng, d_out, 0.1);
+            let x = random_w(&mut rng, rows * d_in, 1.0);
+            let mut d =
+                Dense::new(d_in, d_out, w, b.clone()).unwrap();
+            quantize_dense(&mut d).unwrap();
+            let deq = d.q.as_ref().unwrap().dequant(d_in, d_out);
+            let dref = Dense::new(d_in, d_out, deq, b).unwrap();
+            let got = d.apply(&x, rows);
+            let want = dref.apply(&x, rows);
+            assert_eq!(got.len(), want.len());
+            for (i, (&g, &wv)) in got.iter().zip(&want).enumerate() {
+                let err = (g - wv).abs();
+                assert!(err <= 1e-4 * wv.abs().max(1.0),
+                        "({rows},{d_in},{d_out})[{i}]: {g} vs {wv}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_apply_is_close_to_f32() {
+        let mut rng = Rng::new(77);
+        let (rows, d_in, d_out) = (4usize, 96usize, 50usize);
+        let w = random_w(&mut rng, d_in * d_out, 0.1);
+        let b = random_w(&mut rng, d_out, 0.1);
+        let x = random_w(&mut rng, rows * d_in, 1.0);
+        let f = Dense::new(d_in, d_out, w.clone(), b.clone()).unwrap();
+        let mut q = Dense::new(d_in, d_out, w, b).unwrap();
+        quantize_dense(&mut q).unwrap();
+        let rel = max_rel_err(&f.apply(&x, rows), &q.apply(&x, rows));
+        assert!(rel < LOGIT_REL_ERR_BUDGET,
+                "single-layer rel err {rel} over budget");
+    }
+
+    #[test]
+    fn whole_model_probe_is_within_budget_and_deterministic() {
+        use crate::backend::native::model::{NativeInit, NativeModel};
+        let init = NativeInit {
+            n_layers: 2,
+            d_model: 16,
+            expansion: 2,
+            vocab_in: Some(11),
+            vocab_out: 11,
+            conv: true,
+            mlp: true,
+            ..Default::default()
+        };
+        let m = NativeModel::init_random(&init, 9).unwrap();
+        let mut qm = m.clone();
+        quantize_model(&mut qm).unwrap();
+        let rel = probe_rel_err(&m, &qm).unwrap();
+        assert!(rel < LOGIT_REL_ERR_BUDGET,
+                "probe rel err {rel} over budget");
+        assert_eq!(rel, probe_rel_err(&m, &qm).unwrap(),
+                   "probe must be deterministic");
+    }
+
+    #[test]
+    fn max_rel_err_uses_absolute_floor() {
+        assert_eq!(max_rel_err(&[0.0, 10.0], &[0.5, 10.0]), 0.5);
+        assert_eq!(max_rel_err(&[100.0], &[90.0]), 0.1);
+    }
+}

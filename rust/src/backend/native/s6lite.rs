@@ -293,6 +293,7 @@ mod tests {
                 .map(|_| rng.normal_f32(0.0, 1.0 / (d_in as f32).sqrt()))
                 .collect(),
             b: vec![bias; d_out],
+            q: None,
         };
         let dt = dense(d, dh, -1.0);
         let b = dense(d, dh, 0.0);

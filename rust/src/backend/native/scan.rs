@@ -10,15 +10,21 @@
 //!
 //! The production chunked scan (`scan_log`) fans the independent `B×D`
 //! channel grid out across a [`ThreadPool`] in fixed blocks of
-//! [`D_BLOCK`] channels, and runs its log-sum-exps through
-//! `linalg::logaddexp_fast` — f64 carriers (the `A*` prefix can drift to
+//! [`D_BLOCK`] channels — f64 carriers (the `A*` prefix can drift to
 //! ±10³, where any f32 accumulator loses absolute precision) with the
-//! transcendentals dropped to f32, where the cycles actually go.
-//! Per-channel operation order is fixed, so results are bit-for-bit
-//! identical across thread counts.  `scan_log_seq` keeps full-f64
-//! accumulation as the reference oracle.
+//! transcendentals dropped to f32, where the cycles actually go.  The
+//! f32 transcendentals run through the dispatched lane kernels in
+//! [`crate::util::simd`]: each time step stages its `logaddexp`
+//! correction terms and final exponentials into small f32 buffers and
+//! sweeps them with `log1p_exp_inplace`/`exp_inplace`, so the scalar and
+//! AVX2 paths evaluate the identical polynomial op sequence and results
+//! stay bit-for-bit identical across dispatch levels.  Per-channel
+//! operation order is fixed, so results are also bit-for-bit identical
+//! across thread counts.  `scan_log_seq` keeps full-f64 accumulation as
+//! the reference oracle.
 
-use super::linalg::{logaddexp, logaddexp_fast};
+use super::linalg::logaddexp;
+use crate::util::simd;
 use crate::util::threads::{self, SlicePtr, ThreadPool};
 
 /// Stand-in for `log(0)` that keeps padded/zero positions inert without
@@ -166,16 +172,31 @@ pub fn scan_log_pool_into(pool: &ThreadPool, log_a: &[f32], log_b: &[f32],
     }
 }
 
+/// `-|a - b|` as the f32 argument of the `logaddexp` correction term.
+/// Both-`-inf` operands would produce `NaN`; map that to `-inf` so the
+/// correction is exactly `0.0` and `logaddexp(-inf, -inf) = -inf`.
+#[inline]
+fn lae_arg(a: f64, b: f64) -> f32 {
+    let arg = (-(a - b).abs()) as f32;
+    if arg.is_nan() { f32::NEG_INFINITY } else { arg }
+}
+
 /// One `(batch row, channel block)` of the chunked scan: time-major over
 /// the block so reads/writes stay contiguous.  All carriers (`A*` prefix,
 /// prefix log-sum-exp `p`, carries) are f64 — the recombination
 /// `carry_A + A_i + S_i` cancels a potentially huge `A*` against `S_i`,
 /// which must happen at f64 absolute precision — while every
-/// transcendental runs in f32 via `logaddexp_fast` and a final `expf`.
+/// transcendental runs in f32.  Each time step stages the two
+/// `logaddexp` corrections (`m + log1p(exp(-|a-b|))` with the max kept
+/// in f64) and the output exponential into f32 buffers swept by the
+/// dispatched [`simd`] kernels; a `-inf` operand clamps through
+/// `exp`/`log1p` to a correction of exactly `0.0`, so the branch-free
+/// form is exact where the old short-circuit was.
 #[allow(clippy::too_many_arguments)]
 fn scan_log_block(log_a: &[f32], log_b: &[f32], log_h0: &[f32], bi: usize,
                   t: usize, d: usize, d0: usize, d1: usize,
                   out: &SlicePtr<f32>) {
+    let lvl = simd::level();
     let w = d1 - d0;
     let mut carry_a = [0.0f64; D_BLOCK];
     let mut carry_s = [0.0f64; D_BLOCK];
@@ -185,6 +206,11 @@ fn scan_log_block(log_a: &[f32], log_b: &[f32], log_h0: &[f32], bi: usize,
     let mut a_star = [0.0f64; D_BLOCK];
     let mut p = [0.0f64; D_BLOCK];
     let mut s_last = [0.0f64; D_BLOCK];
+    let mut m1 = [0.0f64; D_BLOCK];
+    let mut m2 = [0.0f64; D_BLOCK];
+    let mut t1 = [0.0f32; D_BLOCK];
+    let mut t2 = [0.0f32; D_BLOCK];
+    let mut ex = [0.0f32; D_BLOCK];
     let mut chunk_start = 0usize;
     while chunk_start < t {
         let chunk_end = (chunk_start + TIME_CHUNK).min(t);
@@ -201,11 +227,24 @@ fn scan_log_block(log_a: &[f32], log_b: &[f32], log_h0: &[f32], bi: usize,
             for j in 0..w {
                 a_star[j] += la[j] as f64;
                 let x = lb[j] as f64 - a_star[j];
-                p[j] = logaddexp_fast(p[j], x);
-                let s = logaddexp_fast(carry_s[j], p[j] - carry_a[j]);
-                ov[j] = ((carry_a[j] + a_star[j] + s) as f32).exp();
+                m1[j] = if p[j] > x { p[j] } else { x };
+                t1[j] = lae_arg(p[j], x);
+            }
+            simd::log1p_exp_inplace(lvl, &mut t1[..w]);
+            for j in 0..w {
+                p[j] = m1[j] + t1[j] as f64;
+                let q = p[j] - carry_a[j];
+                m2[j] = if carry_s[j] > q { carry_s[j] } else { q };
+                t2[j] = lae_arg(carry_s[j], q);
+            }
+            simd::log1p_exp_inplace(lvl, &mut t2[..w]);
+            for j in 0..w {
+                let s = m2[j] + t2[j] as f64;
+                ex[j] = (carry_a[j] + a_star[j] + s) as f32;
                 s_last[j] = s;
             }
+            simd::exp_inplace(lvl, &mut ex[..w]);
+            ov.copy_from_slice(&ex[..w]);
         }
         for j in 0..w {
             carry_a[j] += a_star[j];

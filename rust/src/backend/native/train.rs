@@ -62,6 +62,12 @@ impl NativeTrainer {
                            -> Result<NativeTrainer> {
         let tensors = io::load(path)?;
         let model = NativeModel::from_named(&tensors)?;
+        if model.is_quantized() {
+            bail!("{} holds quantized (int8) weights — quantized \
+                   checkpoints are inference-only and cannot resume \
+                   training; keep the f32 source checkpoint for that",
+                  path.display());
+        }
         let names = model.leaf_names();
         let adam = AdamState::from_named(&tensors, &names, &model)?
             .unwrap_or_else(|| AdamState::new(&model));

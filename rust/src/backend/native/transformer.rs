@@ -412,6 +412,7 @@ mod tests {
             w: (0..d_in * d_out).map(|_| rng.normal_f32(0.0, scale))
                 .collect(),
             b: vec![0.0; d_out],
+            q: None,
         };
         let qkv = dense(d, 3 * d, 1.0 / (d as f32).sqrt());
         let proj = dense(d, d, 0.02);

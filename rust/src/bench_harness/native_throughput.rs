@@ -33,6 +33,7 @@ use std::path::PathBuf;
 
 use anyhow::Result;
 
+use crate::backend::native::quant;
 use crate::backend::{NativeBackend, NativeInit, NativeModel};
 use crate::coordinator::scheduler::{Backpressure, Scheduler, SchedulerOpts};
 use crate::coordinator::server::{self, Request, ServeOpts};
@@ -43,6 +44,7 @@ use crate::tensor::Tensor;
 use crate::util::bench::{bench, BenchConfig};
 use crate::util::json::{self, Json};
 use crate::util::rng::Rng;
+use crate::util::simd::{self, Level};
 use crate::util::threads;
 
 /// Benchmark profile; `quick()` keeps CI smoke runs in seconds,
@@ -423,6 +425,82 @@ pub fn run(cfg: &Config) -> Result<Json> {
         ("recover_load_p95_ms", json::num(rl.p95_s * 1e3)),
     ]);
 
+    // -- simd: dispatched lane kernels vs forced-scalar ----------------------
+    //
+    // f32 results are bit-identical across dispatch levels (the invariance
+    // contract in ARCHITECTURE.md and tests/simd_props.rs), so this section
+    // is pure speed: steady-state batch-1 decode under the forced scalar
+    // fallback vs the runtime-detected level.
+    let decode_b1 = |bk: &NativeBackend, label: &str| -> Result<f64> {
+        let x = Tensor::i32(vec![1], vec![0]);
+        let mut state = Some(bk.decode_state(1)?);
+        let r = bench(label, &bc, || {
+            let s = state.take().unwrap();
+            let (_, s2) = bk.decode_step(&x, s).unwrap();
+            state = Some(s2);
+        });
+        Ok(1.0 / r.mean_s)
+    };
+    let detected = simd::level();
+    let lvl_name = |l: Level| match l {
+        Level::Scalar => "scalar",
+        Level::Avx2 => "avx2",
+    };
+    simd::set_forced(Some(Level::Scalar));
+    let scalar_res = decode_b1(&backend, "decode_b1_forced_scalar");
+    simd::set_forced(None);
+    let simd_scalar_tok_s = scalar_res?;
+    let simd_tok_s = if detected == Level::Scalar {
+        simd_scalar_tok_s
+    } else {
+        decode_b1(&backend, "decode_b1_simd")?
+    };
+    log_info!("  simd     level {}: decode b1 {:>8.0} tok/s scalar, \
+               {:>8.0} tok/s dispatched ({:.2}x)",
+              lvl_name(detected), simd_scalar_tok_s, simd_tok_s,
+              simd_tok_s / simd_scalar_tok_s);
+    let simd_json = json::obj(vec![
+        ("level", json::s(lvl_name(detected))),
+        ("decode_b1_scalar_tok_s", json::num(simd_scalar_tok_s)),
+        ("decode_b1_tok_s", json::num(simd_tok_s)),
+        ("speedup", json::num(simd_tok_s / simd_scalar_tok_s)),
+    ]);
+
+    // -- quant: int8 weights vs the f32 source -------------------------------
+    //
+    // Quantize a clone of the bench model, report the golden error the
+    // `minrnn quantize` gate uses, the dense weight-byte shrink, and the
+    // batch-1 decode throughput on both (decode is bandwidth-bound, so
+    // halving weight bytes is the paper-relevant lever).
+    let mut qmodel = backend.model.clone();
+    quant::quantize_model(&mut qmodel)?;
+    let quant_rel_err = quant::probe_rel_err(&backend.model, &qmodel)?;
+    let mut bytes_f32 = 0usize;
+    backend.model.for_each_dense(&mut |d| {
+        bytes_f32 += 4 * (d.w.len() + d.b.len());
+    });
+    let mut bytes_int8 = 0usize;
+    qmodel.for_each_dense(&mut |d| {
+        let qd = d.q.as_ref().expect("just quantized");
+        bytes_int8 += qd.q.len() + 4 * (qd.scales.len() + d.b.len());
+    });
+    let qbackend = NativeBackend::new(qmodel);
+    let f32_b1_tok_s = decode_b1(&backend, "decode_b1_f32")?;
+    let int8_b1_tok_s = decode_b1(&qbackend, "decode_b1_int8")?;
+    log_info!("  quant    int8 rel err {:.2e} (budget {}), dense bytes \
+               {} -> {}, decode b1 {:>8.0} -> {:>8.0} tok/s",
+              quant_rel_err, quant::LOGIT_REL_ERR_BUDGET, bytes_f32,
+              bytes_int8, f32_b1_tok_s, int8_b1_tok_s);
+    let quant_json = json::obj(vec![
+        ("logit_rel_err", json::num(quant_rel_err as f64)),
+        ("logit_rel_err_budget",
+         json::num(quant::LOGIT_REL_ERR_BUDGET as f64)),
+        ("dense_bytes_f32", json::num(bytes_f32 as f64)),
+        ("dense_bytes_int8", json::num(bytes_int8 as f64)),
+        ("decode_b1_f32_tok_s", json::num(f32_b1_tok_s)),
+        ("decode_b1_int8_tok_s", json::num(int8_b1_tok_s)),
+    ]);
+
     let report = json::obj(vec![
         ("schema", json::s("minrnn.native_throughput.v1")),
         ("quick", Json::Bool(cfg.quick)),
@@ -440,6 +518,8 @@ pub fn run(cfg: &Config) -> Result<Json> {
         ("serve_async", serve_async),
         ("session_cache", session_cache_json),
         ("recovery", recovery),
+        ("simd", simd_json),
+        ("quant", quant_json),
         ("speedup_batched_threaded", json::num(speedup)),
     ]);
     if let Some(out) = &cfg.out {
@@ -507,6 +587,26 @@ mod tests {
         assert!(rec.req("ckpt_commit_ms").unwrap().as_f64().unwrap() > 0.0);
         assert!(rec.req("recover_load_ms").unwrap().as_f64().unwrap()
                 > 0.0);
+        // simd section: a recognized dispatch level and positive decode
+        // throughput under both forced-scalar and dispatched kernels
+        let sd = report.req("simd").unwrap();
+        let level = sd.req("level").unwrap().as_str().unwrap().to_string();
+        assert!(level == "scalar" || level == "avx2", "{level}");
+        assert!(sd.req("decode_b1_scalar_tok_s").unwrap()
+                .as_f64().unwrap() > 0.0);
+        assert!(sd.req("decode_b1_tok_s").unwrap().as_f64().unwrap() > 0.0);
+        // quant section: the golden error sits inside the CLI/CI budget
+        // and int8 shrinks the dense weight bytes
+        let q = report.req("quant").unwrap();
+        let rel = q.req("logit_rel_err").unwrap().as_f64().unwrap();
+        let budget = q.req("logit_rel_err_budget").unwrap()
+            .as_f64().unwrap();
+        assert!(rel >= 0.0 && rel < budget,
+                "quant rel err {rel} outside [0, {budget})");
+        assert!(q.req("dense_bytes_int8").unwrap().as_f64().unwrap()
+                < q.req("dense_bytes_f32").unwrap().as_f64().unwrap());
+        assert!(q.req("decode_b1_int8_tok_s").unwrap()
+                .as_f64().unwrap() > 0.0);
         assert!(report.req("speedup_batched_threaded").unwrap()
                 .as_f64().unwrap() > 0.0);
     }

@@ -78,6 +78,8 @@ Subcommands:
   serve [variant]              dynamic-batching serving demo (--async for
                                the admission-queue scheduler)
   rollout <env>                roll out a trained RL policy (native)
+  quantize <ckpt>              convert a checkpoint's dense weights to
+                               per-tile int8 (inference-only)
   bench                        native-backend throughput benchmark
   compare <workload>           train every mixer kind (mingru, minlstm,
                                s6lite, transformer) on one workload and
@@ -100,7 +102,13 @@ mixer: mingru | minlstm | s6lite | transformer; the transformer also
 takes --max-len/--n-heads and keeps O(context) per-lane KV state, the
 recurrent kinds keep O(1) state).  `rollout` drives a
 natively-trained rl/<env> checkpoint in its live environment
-(Decision-Transformer-style serving).  `train`, `generate`, `serve`, and
+(Decision-Transformer-style serving).  `quantize <ckpt>` rewrites a
+native checkpoint's dense weights as per-tile-scaled int8 (default
+output `<ckpt>.int8.ckpt`), self-checks the quantized logits against
+the f32 source on a seeded probe batch, and refuses to emit a
+checkpoint over the error budget; quantized checkpoints serve and
+generate normally (state/cache stays f32) but cannot resume training.
+`train`, `generate`, `serve`, and
 `bench` take `--threads N` (or MINRNN_THREADS) to size the native thread
 pool; `serve` takes `--max-batch` to cap lockstep decode lanes.
 `serve --async` routes the synthetic workload through the admission
@@ -162,6 +170,7 @@ fn dispatch(args: Vec<String>) -> Result<()> {
         "generate" => cmd_generate(rest),
         "serve" => cmd_serve(rest),
         "rollout" => cmd_rollout(rest),
+        "quantize" => cmd_quantize(rest),
         "bench" => cmd_bench(rest),
         "compare" => cmd_compare(rest),
         "experiment" => cmd_experiment(rest),
@@ -1117,6 +1126,62 @@ fn cmd_rollout(args: &[String]) -> Result<()> {
     let score = rl::normalized_score(env, mean, seed);
     println!("{env}: mean return {mean:.3} over {n} episodes \
               (target {target:.3}, expert-normalized score {score:.1})");
+    Ok(())
+}
+
+/// `minrnn quantize <ckpt>`: rewrite a checkpoint's dense weights as
+/// per-tile int8 (see `backend::native::quant`).  Self-checks the
+/// result against the f32 source on a seeded probe batch and refuses
+/// to write a checkpoint over the golden-error budget.  The output is
+/// inference-only: `serve` / `generate` / `bench` accept it, `train
+/// --resume` rejects it.
+fn cmd_quantize(args: &[String]) -> Result<()> {
+    use crate::backend::native::quant;
+    use crate::util::io;
+    let cmd = Command::new("quantize",
+                           "convert dense weights to per-tile int8")
+        .opt("out", None,
+             "output checkpoint path (default: <ckpt>.int8.ckpt)")
+        .opt("threads", None,
+             "native thread-pool size (default: MINRNN_THREADS, else all \
+              cores)")
+        .positional("ckpt", "f32 checkpoint to quantize");
+    let p = cmd.parse(args)?;
+    apply_threads_opt(&p)?;
+    let ckpt = p.pos.first()
+        .ok_or_else(|| anyhow!("usage: minrnn quantize <ckpt> [--out \
+                                <path>]"))?;
+    let src = Path::new(ckpt);
+    let model = NativeModel::from_checkpoint(src)?;
+    if model.is_quantized() {
+        bail!("{} is already quantized", src.display());
+    }
+    let mut qm = model.clone();
+    quant::quantize_model(&mut qm)?;
+    let rel = quant::probe_rel_err(&model, &qm)?;
+    // the CI quantize-smoke greps this line; keep it stable
+    println!("quantize: max relative logit error {rel:.6} \
+              (budget {})", quant::LOGIT_REL_ERR_BUDGET);
+    if rel > quant::LOGIT_REL_ERR_BUDGET {
+        bail!("quantized model exceeds the golden-error budget \
+               ({rel:.6} > {}); keeping the f32 checkpoint",
+              quant::LOGIT_REL_ERR_BUDGET);
+    }
+    let out = match p.get("out") {
+        Some(o) => PathBuf::from(o),
+        None => PathBuf::from(format!("{}.int8.ckpt", ckpt)),
+    };
+    io::save(&out, &qm.to_named())?;
+    let (before, after) = (std::fs::metadata(src).map(|m| m.len()),
+                           std::fs::metadata(&out).map(|m| m.len()));
+    if let (Ok(b), Ok(a)) = (before, after) {
+        log_info!("wrote {} ({} -> {} bytes, {:.0}% of f32)",
+                  out.display(), b, a, 100.0 * a as f64 / b.max(1) as f64);
+    } else {
+        log_info!("wrote {}", out.display());
+    }
+    println!("quantized checkpoint: {} ({})", out.display(),
+             qm.kind_summary());
     Ok(())
 }
 

@@ -247,6 +247,7 @@ impl<'rt> Model<'rt> {
                 out.push(match t.data {
                     TensorData::F32(v) => NamedTensor::f32(&name, t.dims, v),
                     TensorData::I32(v) => NamedTensor::i32(&name, t.dims, v),
+                    TensorData::I8(v) => NamedTensor::i8(&name, t.dims, v),
                 });
             }
             Ok(())

@@ -51,6 +51,7 @@ impl Tensor {
         match self.data {
             TensorData::F32(_) => "f32",
             TensorData::I32(_) => "i32",
+            TensorData::I8(_) => "i8",
         }
     }
 
@@ -60,6 +61,10 @@ impl Tensor {
         let lit = match &self.data {
             TensorData::F32(v) => xla::Literal::vec1(v),
             TensorData::I32(v) => xla::Literal::vec1(v),
+            TensorData::I8(_) => {
+                bail!("i8 tensors are host-only (quantized weights); \
+                       no XLA literal conversion")
+            }
         };
         Ok(lit.reshape(&dims)?)
     }

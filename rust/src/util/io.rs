@@ -2,9 +2,14 @@
 //! with crash-safe durability.
 //!
 //!   magic "MRNN" | version u32 | n_tensors u32
-//!   per tensor: name_len u32 | name utf-8 | dtype u8 (0=f32, 1=i32)
-//!               | ndim u32 | dims u32[ndim] | raw data
+//!   per tensor: name_len u32 | name utf-8 | dtype u8 (0=f32, 1=i32,
+//!               2=i8) | ndim u32 | dims u32[ndim] | raw data
 //!   trailer (version >= 2): crc32 u32 over everything before it
+//!
+//! Version 3 adds the i8 dtype (quantized weight leaves); the writer
+//! only stamps v3 when an i8 tensor is present, so pure-f32/i32
+//! checkpoints remain byte-identical to v2 and older readers keep
+//! loading them.
 //!
 //! Used for parameter/optimizer checkpoints and dataset caches.
 //!
@@ -35,9 +40,15 @@ use anyhow::{bail, Context, Result};
 use crate::util::faults::{self, Site};
 
 pub const MAGIC: &[u8; 4] = b"MRNN";
-/// Version 2 appends the CRC32 trailer; version-1 files are still read
-/// (no trailer to verify).
-pub const VERSION: u32 = 2;
+/// Version 2 appends the CRC32 trailer; version 3 adds the i8 dtype.
+/// Version-1 files are still read (no trailer to verify), and [`save`]
+/// stamps the oldest version that can represent the payload (v2 unless
+/// an i8 tensor forces v3).
+pub const VERSION: u32 = 3;
+
+/// Version stamped on checkpoints with no i8 tensors — byte-identical
+/// output to the pre-quantization writer.
+pub const VERSION_F32: u32 = 2;
 
 /// CRC-32 (IEEE 802.3, reflected polynomial 0xEDB88320) — the trailer
 /// checksum for torn-write detection.  Bitwise implementation: checkpoint
@@ -58,6 +69,7 @@ pub fn crc32(bytes: &[u8]) -> u32 {
 pub enum TensorData {
     F32(Vec<f32>),
     I32(Vec<i32>),
+    I8(Vec<i8>),
 }
 
 impl TensorData {
@@ -65,6 +77,7 @@ impl TensorData {
         match self {
             TensorData::F32(v) => v.len(),
             TensorData::I32(v) => v.len(),
+            TensorData::I8(v) => v.len(),
         }
     }
 
@@ -82,6 +95,13 @@ impl TensorData {
     pub fn as_i32(&self) -> Option<&[i32]> {
         match self {
             TensorData::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_i8(&self) -> Option<&[i8]> {
+        match self {
+            TensorData::I8(v) => Some(v),
             _ => None,
         }
     }
@@ -105,6 +125,12 @@ impl NamedTensor {
         assert_eq!(dims.iter().product::<usize>(), data.len());
         NamedTensor { name: name.to_string(), dims,
                       data: TensorData::I32(data) }
+    }
+
+    pub fn i8(name: &str, dims: Vec<usize>, data: Vec<i8>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        NamedTensor { name: name.to_string(), dims,
+                      data: TensorData::I8(data) }
     }
 }
 
@@ -157,9 +183,16 @@ pub fn commit_durable(path: &Path, payload: &[u8]) -> Result<()> {
 }
 
 pub fn save(path: &Path, tensors: &[NamedTensor]) -> Result<()> {
+    let version = if tensors.iter()
+        .any(|t| matches!(t.data, TensorData::I8(_)))
+    {
+        VERSION
+    } else {
+        VERSION_F32
+    };
     let mut buf: Vec<u8> = Vec::new();
     buf.extend_from_slice(MAGIC);
-    buf.extend_from_slice(&VERSION.to_le_bytes());
+    buf.extend_from_slice(&version.to_le_bytes());
     buf.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
     for t in tensors {
         let nb = t.name.as_bytes();
@@ -168,6 +201,7 @@ pub fn save(path: &Path, tensors: &[NamedTensor]) -> Result<()> {
         match &t.data {
             TensorData::F32(_) => buf.push(0u8),
             TensorData::I32(_) => buf.push(1u8),
+            TensorData::I8(_) => buf.push(2u8),
         }
         buf.extend_from_slice(&(t.dims.len() as u32).to_le_bytes());
         for &d in &t.dims {
@@ -182,6 +216,11 @@ pub fn save(path: &Path, tensors: &[NamedTensor]) -> Result<()> {
             TensorData::I32(v) => {
                 for x in v {
                     buf.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            TensorData::I8(v) => {
+                for &x in v {
+                    buf.push(x as u8);
                 }
             }
         }
@@ -321,7 +360,7 @@ pub fn load_classified(path: &Path)
     let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
     let body: &[u8] = match version {
         1 => &bytes[8..],
-        VERSION => {
+        2 | 3 => {
             let (payload, trailer) = bytes.split_at(bytes.len() - 4);
             let want = u32::from_le_bytes(trailer.try_into().unwrap());
             let got = crc32(payload);
@@ -362,7 +401,12 @@ pub fn load_classified(path: &Path)
         if count > 1 << 30 {
             return Err(r.corrupt(format!("element count {count}")));
         }
-        let raw = r.take(count * 4)?;
+        let esize = match dtype {
+            0 | 1 => 4,
+            2 => 1,
+            d => return Err(r.corrupt(format!("dtype {d}"))),
+        };
+        let raw = r.take(count * esize)?;
         let data = match dtype {
             0 => TensorData::F32(raw.chunks_exact(4)
                 .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
@@ -370,7 +414,7 @@ pub fn load_classified(path: &Path)
             1 => TensorData::I32(raw.chunks_exact(4)
                 .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
                 .collect()),
-            d => return Err(r.corrupt(format!("dtype {d}"))),
+            _ => TensorData::I8(raw.iter().map(|&b| b as i8).collect()),
         };
         out.push(NamedTensor { name, dims, data });
     }
@@ -482,6 +526,32 @@ mod tests {
         let mut v1 = bytes[..bytes.len() - 4].to_vec();
         v1[4..8].copy_from_slice(&1u32.to_le_bytes());
         std::fs::write(&path, &v1).unwrap();
+        assert_eq!(load(&path).unwrap(), tensors);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn i8_tensors_roundtrip_and_bump_the_version() {
+        let dir = std::env::temp_dir().join("minrnn_io_test9");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("q.bin");
+        // pure-f32 payload stamps the legacy version (byte-identical to
+        // the pre-quantization writer)
+        save(&path, &[NamedTensor::f32("w", vec![2], vec![1., 2.])])
+            .unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(u32::from_le_bytes(bytes[4..8].try_into().unwrap()),
+                   VERSION_F32);
+        // an i8 leaf forces v3, and the data round-trips exactly
+        let tensors = vec![
+            NamedTensor::i8("w/q", vec![2, 3], vec![-127, -1, 0, 1, 5, 127]),
+            NamedTensor::f32("w/scale", vec![1, 1], vec![0.25]),
+            NamedTensor::i32("step", vec![], vec![7]),
+        ];
+        save(&path, &tensors).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(u32::from_le_bytes(bytes[4..8].try_into().unwrap()),
+                   VERSION);
         assert_eq!(load(&path).unwrap(), tensors);
         std::fs::remove_file(&path).unwrap();
     }

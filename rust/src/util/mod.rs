@@ -11,6 +11,7 @@ pub mod logging;
 pub mod prop;
 pub mod plot;
 pub mod rng;
+pub mod simd;
 pub mod stats;
 pub mod table;
 pub mod threads;

@@ -1,0 +1,614 @@
+//! Guarded SIMD lane kernels for the native hot paths.
+//!
+//! Two dispatch levels exist: a portable scalar fallback and an x86_64
+//! AVX2 path (`std::arch` intrinsics behind runtime
+//! `is_x86_feature_detected!`).  The contract every kernel here obeys —
+//! and `tests/simd_props.rs` pins — is **bit-for-bit identity across
+//! dispatch levels for f32**: the AVX2 bodies perform exactly the
+//! per-lane operation sequence of their scalar twins (multiply then add,
+//! never FMA — a fused multiply-add rounds once where the scalar code
+//! rounds twice, which would break `dense_tiling_is_exact` and the
+//! golden vectors), so switching levels never changes a result, only its
+//! speed.
+//!
+//! Dispatch: [`level()`] caches [`detect_level()`] (CPU feature probe +
+//! the `MINRNN_SIMD` environment variable; `MINRNN_SIMD=off` — or
+//! `scalar`/`0` — pins the fallback).  [`set_forced`] overrides it for
+//! tests and the bench harness.
+//!
+//! The transcendental kernels ([`exp_f32`]/[`log1p_f32`] and the slice
+//! forms [`exp_inplace`]/[`log1p_exp_inplace`]) use Cephes-style
+//! polynomials rather than libm so the scalar and vector paths share one
+//! op-for-op definition; they agree with libm to a few f32 ulps (unit
+//! tests below), well inside the scan's golden-error budget.  Arguments
+//! are assumed non-NaN (the scan feeds finite gate values; `-inf` from
+//! an empty accumulator clamps to `exp(EXP_LO) ≈ 1e-38` whose `log1p`
+//! is exactly `0.0`, so `logaddexp(-inf, x) == x` still holds exactly).
+//!
+//! The int8 tile kernel ([`dense_tile16_q8`]) dequantizes per-tile-scaled
+//! weights (see `backend::native::quant`, [`K_TILE`] input rows × 16
+//! output columns per scale) inside the register tile:
+//! `wde = scale * (q as f32); acc += x * wde` — the same two-rounding
+//! order at both dispatch levels, so int8 results are also bit-identical
+//! across levels (the *budgeted* error is int8-vs-f32, not
+//! scalar-vs-vector).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Input rows per quantization tile (columns are tiled by the fixed
+/// 16-wide output tile).  `backend::native::quant` derives its scale
+/// grid from this.
+pub const K_TILE: usize = 64;
+
+/// Dispatch level for the lane kernels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Level {
+    /// Portable scalar fallback (always available).
+    Scalar,
+    /// x86_64 AVX2 f32x8 lanes.
+    Avx2,
+}
+
+static FORCED: AtomicU8 = AtomicU8::new(0);
+static DETECTED: AtomicU8 = AtomicU8::new(0);
+
+fn code(l: Level) -> u8 {
+    match l {
+        Level::Scalar => 1,
+        Level::Avx2 => 2,
+    }
+}
+
+fn decode(c: u8) -> Option<Level> {
+    match c {
+        1 => Some(Level::Scalar),
+        2 => Some(Level::Avx2),
+        _ => None,
+    }
+}
+
+/// Resolve a `MINRNN_SIMD` setting against CPU capability — pure, so
+/// the env grammar is unit-testable without process-global env races.
+/// `off`/`scalar`/`0` pin the fallback; anything else (including unset)
+/// uses the best level the CPU supports.
+pub fn parse_level(env: Option<&str>, avx2_available: bool) -> Level {
+    if let Some(s) = env.map(str::trim) {
+        if s.eq_ignore_ascii_case("off") || s.eq_ignore_ascii_case("scalar")
+            || s == "0" {
+            return Level::Scalar;
+        }
+    }
+    if avx2_available {
+        Level::Avx2
+    } else {
+        Level::Scalar
+    }
+}
+
+/// Probe the environment: `MINRNN_SIMD` + runtime CPU feature detection.
+pub fn detect_level() -> Level {
+    #[cfg(target_arch = "x86_64")]
+    let avx2 = std::arch::is_x86_feature_detected!("avx2");
+    #[cfg(not(target_arch = "x86_64"))]
+    let avx2 = false;
+    parse_level(std::env::var("MINRNN_SIMD").ok().as_deref(), avx2)
+}
+
+/// The active dispatch level: a forced override ([`set_forced`]) wins,
+/// else the cached [`detect_level`] probe.
+pub fn level() -> Level {
+    if let Some(l) = decode(FORCED.load(Ordering::Relaxed)) {
+        return l;
+    }
+    if let Some(l) = decode(DETECTED.load(Ordering::Relaxed)) {
+        return l;
+    }
+    let l = detect_level();
+    DETECTED.store(code(l), Ordering::Relaxed);
+    l
+}
+
+/// Force a dispatch level (tests / bench); `None` restores detection.
+/// Forcing [`Level::Avx2`] on a CPU without AVX2 is the caller's bug.
+pub fn set_forced(l: Option<Level>) {
+    FORCED.store(l.map(code).unwrap_or(0), Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// Polynomial exp / log1p (shared scalar definition; AVX2 mirrors it)
+// ---------------------------------------------------------------------------
+
+/// Largest input the polynomial exp accepts before clamping (≈ ln(f32
+/// MAX); above it the result saturates like libm's overflow behavior).
+pub const EXP_HI: f32 = 88.72283;
+/// Smallest input (≈ ln of the smallest normal); below it results clamp
+/// to ~1.18e-38, which is exactly absorbed by `log1p` (→ 0.0).
+pub const EXP_LO: f32 = -87.33655;
+
+const LOG2E: f32 = 1.442695;
+const LN2_HI: f32 = 0.693359375;
+const LN2_LO: f32 = -2.1219444e-4;
+
+const EXP_P0: f32 = 1.98756915e-4;
+const EXP_P1: f32 = 1.3981999e-3;
+const EXP_P2: f32 = 8.333452e-3;
+const EXP_P3: f32 = 4.16658e-2;
+const EXP_P4: f32 = 1.6666666e-1;
+const EXP_P5: f32 = 5.0000001e-1;
+
+const SQRT2: f32 = 1.4142135;
+
+const LOG_P0: f32 = 7.0376836e-2;
+const LOG_P1: f32 = -1.1514610e-1;
+const LOG_P2: f32 = 1.1676998e-1;
+const LOG_P3: f32 = -1.2420140e-1;
+const LOG_P4: f32 = 1.4249322e-1;
+const LOG_P5: f32 = -1.6668057e-1;
+const LOG_P6: f32 = 2.0000714e-1;
+const LOG_P7: f32 = -2.4999993e-1;
+const LOG_P8: f32 = 3.3333331e-1;
+
+/// Polynomial `e^x` (Cephes expf form): range-reduce with Cody–Waite
+/// two-part ln 2, degree-6 polynomial, scale by `2^n` via exponent-bit
+/// construction.  Exactly `1.0` at `x = 0`.  The op order here is the
+/// normative definition the AVX2 path mirrors lane for lane.
+#[inline]
+pub fn exp_f32(x: f32) -> f32 {
+    let x = x.min(EXP_HI).max(EXP_LO);
+    let n = (x * LOG2E + 0.5).floor();
+    let r = (x - n * LN2_HI) - n * LN2_LO;
+    let mut p = EXP_P0;
+    p = p * r + EXP_P1;
+    p = p * r + EXP_P2;
+    p = p * r + EXP_P3;
+    p = p * r + EXP_P4;
+    p = p * r + EXP_P5;
+    let t = (p * r) * r;
+    let y = (t + r) + 1.0;
+    // 2^n: n ∈ [-126, 128] after the clamp; peel one doubling off the
+    // n = 128 edge so the exponent-bit trick never overflows the field
+    let hi = n > 127.0;
+    let n = if hi { n - 1.0 } else { n };
+    let two = if hi { 2.0f32 } else { 1.0 };
+    let p2 = f32::from_bits((((n as i32) + 127) as u32) << 23);
+    (y * p2) * two
+}
+
+/// Polynomial `ln(1 + y)` for `y ∈ [0, 1]` (Cephes logf form on
+/// `z = 1 + y ∈ [1, 2]`).  Exactly `0.0` at `y = 0` — which is what
+/// makes the branch-free `logaddexp` below exact when one operand is
+/// `-inf` (or merely far below the other).  Normative op order.
+#[inline]
+pub fn log1p_f32(y: f32) -> f32 {
+    let z = 1.0 + y;
+    let big = z >= SQRT2;
+    let z = if big { z * 0.5 } else { z };
+    let e = if big { 1.0f32 } else { 0.0 };
+    let t = z - 1.0;
+    let w = t * t;
+    let mut p = LOG_P0;
+    p = p * t + LOG_P1;
+    p = p * t + LOG_P2;
+    p = p * t + LOG_P3;
+    p = p * t + LOG_P4;
+    p = p * t + LOG_P5;
+    p = p * t + LOG_P6;
+    p = p * t + LOG_P7;
+    p = p * t + LOG_P8;
+    let p = (p * t) * w;
+    let p = p + (-0.5) * w;
+    let r = (t + p) + e * LN2_LO;
+    r + e * LN2_HI
+}
+
+// ---------------------------------------------------------------------------
+// Slice kernels
+// ---------------------------------------------------------------------------
+
+/// `buf[i] = exp(buf[i])` with the polynomial exp, dispatched.
+pub fn exp_inplace(lvl: Level, buf: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if lvl == Level::Avx2 {
+        unsafe { avx2::exp_inplace(buf) };
+        return;
+    }
+    let _ = lvl;
+    for v in buf.iter_mut() {
+        *v = exp_f32(*v);
+    }
+}
+
+/// `buf[i] = log1p(exp(buf[i]))` for non-positive inputs (the
+/// `logaddexp` correction term), dispatched.
+pub fn log1p_exp_inplace(lvl: Level, buf: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if lvl == Level::Avx2 {
+        unsafe { avx2::log1p_exp_inplace(buf) };
+        return;
+    }
+    let _ = lvl;
+    for v in buf.iter_mut() {
+        *v = log1p_f32(exp_f32(*v));
+    }
+}
+
+/// One 16-wide f32 output tile of a row × matrix product:
+/// `acc[j] = bias[j] + Σ_k x[k] · w[o + k·stride + j]`, `j ∈ 0..16`,
+/// accumulated in strict k order with separate multiply and add — the
+/// exact loop `Dense::apply_row_cols` has always run, now dispatched.
+pub fn dense_tile16(lvl: Level, x: &[f32], w: &[f32], o: usize,
+                    stride: usize, bias: &[f32], acc: &mut [f32; 16]) {
+    assert!(bias.len() >= 16);
+    assert!(x.is_empty() || w.len() >= o + (x.len() - 1) * stride + 16);
+    #[cfg(target_arch = "x86_64")]
+    if lvl == Level::Avx2 {
+        unsafe { avx2::dense_tile16(x, w, o, stride, bias, acc) };
+        return;
+    }
+    let _ = lvl;
+    acc.copy_from_slice(&bias[..16]);
+    for (k, &xv) in x.iter().enumerate() {
+        let wrow = &w[o + k * stride..o + k * stride + 16];
+        for j in 0..16 {
+            acc[j] += xv * wrow[j];
+        }
+    }
+}
+
+/// The int8 twin of [`dense_tile16`]: weights arrive as `q: i8` plus one
+/// f32 scale per ([`K_TILE`] input rows × this 16-column tile), looked
+/// up as `scales[(k / K_TILE) * scale_stride + scale_col]`.  Dequantize
+/// then accumulate: `wde = sc * (q as f32); acc[j] += x[k] * wde` — two
+/// roundings per element at both dispatch levels, so scalar and AVX2
+/// int8 results match bit for bit.
+#[allow(clippy::too_many_arguments)]
+pub fn dense_tile16_q8(lvl: Level, x: &[f32], q: &[i8], o: usize,
+                       stride: usize, scales: &[f32], scale_stride: usize,
+                       scale_col: usize, bias: &[f32],
+                       acc: &mut [f32; 16]) {
+    assert!(bias.len() >= 16);
+    assert!(x.is_empty() || q.len() >= o + (x.len() - 1) * stride + 16);
+    assert!(x.is_empty()
+            || scales.len() >= (x.len() - 1) / K_TILE * scale_stride
+                + scale_col + 1);
+    #[cfg(target_arch = "x86_64")]
+    if lvl == Level::Avx2 {
+        unsafe {
+            avx2::dense_tile16_q8(x, q, o, stride, scales, scale_stride,
+                                  scale_col, bias, acc)
+        };
+        return;
+    }
+    let _ = lvl;
+    acc.copy_from_slice(&bias[..16]);
+    for (k, &xv) in x.iter().enumerate() {
+        let sc = scales[(k / K_TILE) * scale_stride + scale_col];
+        let qrow = &q[o + k * stride..o + k * stride + 16];
+        for j in 0..16 {
+            let wde = sc * (qrow[j] as f32);
+            acc[j] += xv * wde;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 bodies — lane-for-lane mirrors of the scalar definitions above
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::*;
+    use std::arch::x86_64::*;
+
+    /// 8-lane mirror of [`exp_f32`]: same clamp, same Cody–Waite
+    /// reduction, same Horner order, mul+add only (no FMA).
+    #[inline]
+    unsafe fn exp_ps(x: __m256) -> __m256 {
+        let x = _mm256_max_ps(_mm256_min_ps(x, _mm256_set1_ps(EXP_HI)),
+                              _mm256_set1_ps(EXP_LO));
+        let n = _mm256_floor_ps(_mm256_add_ps(
+            _mm256_mul_ps(x, _mm256_set1_ps(LOG2E)),
+            _mm256_set1_ps(0.5)));
+        let r = _mm256_sub_ps(
+            _mm256_sub_ps(x, _mm256_mul_ps(n, _mm256_set1_ps(LN2_HI))),
+            _mm256_mul_ps(n, _mm256_set1_ps(LN2_LO)));
+        let mut p = _mm256_set1_ps(EXP_P0);
+        p = _mm256_add_ps(_mm256_mul_ps(p, r), _mm256_set1_ps(EXP_P1));
+        p = _mm256_add_ps(_mm256_mul_ps(p, r), _mm256_set1_ps(EXP_P2));
+        p = _mm256_add_ps(_mm256_mul_ps(p, r), _mm256_set1_ps(EXP_P3));
+        p = _mm256_add_ps(_mm256_mul_ps(p, r), _mm256_set1_ps(EXP_P4));
+        p = _mm256_add_ps(_mm256_mul_ps(p, r), _mm256_set1_ps(EXP_P5));
+        let t = _mm256_mul_ps(_mm256_mul_ps(p, r), r);
+        let y = _mm256_add_ps(_mm256_add_ps(t, r), _mm256_set1_ps(1.0));
+        let hi = _mm256_cmp_ps::<_CMP_GT_OQ>(n, _mm256_set1_ps(127.0));
+        let n = _mm256_sub_ps(n, _mm256_and_ps(hi, _mm256_set1_ps(1.0)));
+        let two = _mm256_blendv_ps(_mm256_set1_ps(1.0),
+                                   _mm256_set1_ps(2.0), hi);
+        let ni = _mm256_cvtps_epi32(n);
+        let bits = _mm256_slli_epi32::<23>(
+            _mm256_add_epi32(ni, _mm256_set1_epi32(127)));
+        let p2 = _mm256_castsi256_ps(bits);
+        _mm256_mul_ps(_mm256_mul_ps(y, p2), two)
+    }
+
+    /// 8-lane mirror of [`log1p_f32`].
+    #[inline]
+    unsafe fn log1p_ps(y: __m256) -> __m256 {
+        let z = _mm256_add_ps(_mm256_set1_ps(1.0), y);
+        let big = _mm256_cmp_ps::<_CMP_GE_OQ>(z, _mm256_set1_ps(SQRT2));
+        let z = _mm256_mul_ps(z, _mm256_blendv_ps(_mm256_set1_ps(1.0),
+                                                  _mm256_set1_ps(0.5),
+                                                  big));
+        let e = _mm256_and_ps(big, _mm256_set1_ps(1.0));
+        let t = _mm256_sub_ps(z, _mm256_set1_ps(1.0));
+        let w = _mm256_mul_ps(t, t);
+        let mut p = _mm256_set1_ps(LOG_P0);
+        p = _mm256_add_ps(_mm256_mul_ps(p, t), _mm256_set1_ps(LOG_P1));
+        p = _mm256_add_ps(_mm256_mul_ps(p, t), _mm256_set1_ps(LOG_P2));
+        p = _mm256_add_ps(_mm256_mul_ps(p, t), _mm256_set1_ps(LOG_P3));
+        p = _mm256_add_ps(_mm256_mul_ps(p, t), _mm256_set1_ps(LOG_P4));
+        p = _mm256_add_ps(_mm256_mul_ps(p, t), _mm256_set1_ps(LOG_P5));
+        p = _mm256_add_ps(_mm256_mul_ps(p, t), _mm256_set1_ps(LOG_P6));
+        p = _mm256_add_ps(_mm256_mul_ps(p, t), _mm256_set1_ps(LOG_P7));
+        p = _mm256_add_ps(_mm256_mul_ps(p, t), _mm256_set1_ps(LOG_P8));
+        let p = _mm256_mul_ps(_mm256_mul_ps(p, t), w);
+        let p = _mm256_add_ps(p, _mm256_mul_ps(_mm256_set1_ps(-0.5), w));
+        let r = _mm256_add_ps(_mm256_add_ps(t, p),
+                              _mm256_mul_ps(e, _mm256_set1_ps(LN2_LO)));
+        _mm256_add_ps(r, _mm256_mul_ps(e, _mm256_set1_ps(LN2_HI)))
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn exp_inplace(buf: &mut [f32]) {
+        let n = buf.len();
+        let ptr = buf.as_mut_ptr();
+        let mut i = 0;
+        while i + 8 <= n {
+            let v = _mm256_loadu_ps(ptr.add(i));
+            _mm256_storeu_ps(ptr.add(i), exp_ps(v));
+            i += 8;
+        }
+        for v in &mut buf[i..] {
+            *v = exp_f32(*v);
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn log1p_exp_inplace(buf: &mut [f32]) {
+        let n = buf.len();
+        let ptr = buf.as_mut_ptr();
+        let mut i = 0;
+        while i + 8 <= n {
+            let v = _mm256_loadu_ps(ptr.add(i));
+            _mm256_storeu_ps(ptr.add(i), log1p_ps(exp_ps(v)));
+            i += 8;
+        }
+        for v in &mut buf[i..] {
+            *v = log1p_f32(exp_f32(*v));
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dense_tile16(x: &[f32], w: &[f32], o: usize,
+                               stride: usize, bias: &[f32],
+                               acc: &mut [f32; 16]) {
+        let bp = bias.as_ptr();
+        let mut a0 = _mm256_loadu_ps(bp);
+        let mut a1 = _mm256_loadu_ps(bp.add(8));
+        let wp = w.as_ptr();
+        for (k, &xv) in x.iter().enumerate() {
+            let xb = _mm256_set1_ps(xv);
+            let row = wp.add(o + k * stride);
+            let w0 = _mm256_loadu_ps(row);
+            let w1 = _mm256_loadu_ps(row.add(8));
+            a0 = _mm256_add_ps(a0, _mm256_mul_ps(xb, w0));
+            a1 = _mm256_add_ps(a1, _mm256_mul_ps(xb, w1));
+        }
+        _mm256_storeu_ps(acc.as_mut_ptr(), a0);
+        _mm256_storeu_ps(acc.as_mut_ptr().add(8), a1);
+    }
+
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn dense_tile16_q8(x: &[f32], q: &[i8], o: usize,
+                                  stride: usize, scales: &[f32],
+                                  scale_stride: usize, scale_col: usize,
+                                  bias: &[f32], acc: &mut [f32; 16]) {
+        let bp = bias.as_ptr();
+        let mut a0 = _mm256_loadu_ps(bp);
+        let mut a1 = _mm256_loadu_ps(bp.add(8));
+        let qp = q.as_ptr();
+        for (k, &xv) in x.iter().enumerate() {
+            let sc = _mm256_set1_ps(
+                scales[(k / K_TILE) * scale_stride + scale_col]);
+            let xb = _mm256_set1_ps(xv);
+            let row = qp.add(o + k * stride);
+            let qv = _mm_loadu_si128(row as *const __m128i);
+            let lo = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(qv));
+            let hi = _mm256_cvtepi32_ps(
+                _mm256_cvtepi8_epi32(_mm_srli_si128::<8>(qv)));
+            let w0 = _mm256_mul_ps(sc, lo);
+            let w1 = _mm256_mul_ps(sc, hi);
+            a0 = _mm256_add_ps(a0, _mm256_mul_ps(xb, w0));
+            a1 = _mm256_add_ps(a1, _mm256_mul_ps(xb, w1));
+        }
+        _mm256_storeu_ps(acc.as_mut_ptr(), a0);
+        _mm256_storeu_ps(acc.as_mut_ptr().add(8), a1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn env_grammar_pins_the_fallback() {
+        assert_eq!(parse_level(Some("off"), true), Level::Scalar);
+        assert_eq!(parse_level(Some("OFF"), true), Level::Scalar);
+        assert_eq!(parse_level(Some("scalar"), true), Level::Scalar);
+        assert_eq!(parse_level(Some("0"), true), Level::Scalar);
+        assert_eq!(parse_level(Some("on"), true), Level::Avx2);
+        assert_eq!(parse_level(None, true), Level::Avx2);
+        assert_eq!(parse_level(None, false), Level::Scalar);
+        assert_eq!(parse_level(Some("on"), false), Level::Scalar);
+    }
+
+    #[test]
+    fn poly_exp_tracks_libm_to_a_few_ulps() {
+        // sweep the range the scan feeds (log-space values are ≤ 0 on
+        // the correction path; the output exp sees moderate magnitudes)
+        let mut worst = 0.0f64;
+        let mut x = -87.0f32;
+        while x < 88.0 {
+            let got = exp_f32(x) as f64;
+            let want = (x as f64).exp();
+            let rel = ((got - want) / want).abs();
+            if rel > worst {
+                worst = rel;
+            }
+            x += 0.0137;
+        }
+        assert!(worst < 5e-7, "poly exp rel err {worst}");
+        assert_eq!(exp_f32(0.0), 1.0);
+        // clamped underflow stays positive (log1p absorbs it exactly)
+        assert!(exp_f32(-1e30) > 0.0);
+        assert!(exp_f32(f32::NEG_INFINITY) > 0.0);
+    }
+
+    #[test]
+    fn poly_log1p_tracks_libm_on_the_unit_interval() {
+        let mut worst = 0.0f64;
+        let mut y = 0.0f32;
+        while y <= 1.0 {
+            let got = log1p_f32(y) as f64;
+            let want = (y as f64).ln_1p();
+            let err = (got - want).abs() / want.abs().max(1e-3);
+            if err > worst {
+                worst = err;
+            }
+            y += 0.00113;
+        }
+        assert!(worst < 5e-7, "poly log1p rel err {worst}");
+        assert_eq!(log1p_f32(0.0), 0.0);
+        // the tiny clamped exp output rounds to z = 1.0 → exactly 0
+        assert_eq!(log1p_f32(exp_f32(f32::NEG_INFINITY)), 0.0);
+    }
+
+    #[test]
+    fn logaddexp_identity_survives_the_branch_free_form() {
+        // m + log1p(exp(-|d|)) == logaddexp(a, b) to f32 accuracy
+        let cases = [(-3.0f64, -3.5f64), (0.25, 0.25), (-40.0, 0.0),
+                     (f64::NEG_INFINITY, -2.0)];
+        for (a, b) in cases {
+            let m = if a > b { a } else { b };
+            let d = (-(a - b).abs()) as f32;
+            let got = m + log1p_f32(exp_f32(d)) as f64;
+            let want = if a == f64::NEG_INFINITY {
+                b
+            } else {
+                let mx = a.max(b);
+                mx + ((a - mx).exp() + (b - mx).exp()).ln()
+            };
+            assert!((got - want).abs() < 1e-6,
+                    "lae({a},{b}) = {got}, want {want}");
+        }
+    }
+
+    #[test]
+    fn scalar_tile_matches_a_naive_product() {
+        let d_in = 23;
+        let stride = 40; // d_out
+        let x: Vec<f32> = (0..d_in)
+            .map(|i| ((i * 37 % 19) as f32 - 9.0) * 0.17).collect();
+        let w: Vec<f32> = (0..d_in * stride)
+            .map(|i| ((i * 53 % 31) as f32 - 15.0) * 0.061).collect();
+        let bias: Vec<f32> = (0..16).map(|i| i as f32 * 0.25).collect();
+        let o = 8;
+        let mut acc = [0.0f32; 16];
+        dense_tile16(Level::Scalar, &x, &w, o, stride, &bias, &mut acc);
+        for j in 0..16 {
+            let mut want = bias[j];
+            for (k, &xv) in x.iter().enumerate() {
+                want += xv * w[o + k * stride + j];
+            }
+            assert_eq!(acc[j], want, "lane {j}");
+        }
+    }
+
+    #[test]
+    fn q8_tile_dequantizes_with_per_tile_scales() {
+        let d_in = K_TILE + 9; // spans two scale tiles
+        let stride = 16;
+        let x: Vec<f32> = (0..d_in).map(|i| (i % 5) as f32 - 2.0).collect();
+        let q: Vec<i8> = (0..d_in * stride)
+            .map(|i| ((i * 7 % 255) as i32 - 127) as i8).collect();
+        let scales = [0.5f32, 0.25];
+        let bias = [1.0f32; 16];
+        let mut acc = [0.0f32; 16];
+        dense_tile16_q8(Level::Scalar, &x, &q, 0, stride, &scales, 1, 0,
+                        &bias, &mut acc);
+        for j in 0..16 {
+            let mut want = 1.0f32;
+            for (k, &xv) in x.iter().enumerate() {
+                let sc = scales[k / K_TILE];
+                want += xv * (sc * (q[k * stride + j] as f32));
+            }
+            assert_eq!(acc[j], want, "lane {j}");
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_kernels_match_scalar_bit_for_bit() {
+        if !std::arch::is_x86_feature_detected!("avx2") {
+            eprintln!("avx2 unavailable; scalar-only box — skipping");
+            return;
+        }
+        // transcendental slices, odd length for an unaligned tail
+        let src: Vec<f32> = (0..67)
+            .map(|i| -0.13 * i as f32 + 0.5 - (i % 7) as f32).collect();
+        let mut a = src.clone();
+        let mut b = src.clone();
+        exp_inplace(Level::Scalar, &mut a);
+        exp_inplace(Level::Avx2, &mut b);
+        assert_eq!(a, b, "exp slice");
+        let src2: Vec<f32> = (0..67).map(|i| -(i as f32) * 0.31).collect();
+        let mut a = src2.clone();
+        let mut b = src2;
+        log1p_exp_inplace(Level::Scalar, &mut a);
+        log1p_exp_inplace(Level::Avx2, &mut b);
+        assert_eq!(a, b, "log1p∘exp slice");
+        // dense tiles
+        let d_in = 2 * K_TILE + 5;
+        let stride = 48;
+        let x: Vec<f32> = (0..d_in)
+            .map(|i| ((i * 29 % 23) as f32 - 11.0) * 0.09).collect();
+        let w: Vec<f32> = (0..d_in * stride)
+            .map(|i| ((i * 41 % 37) as f32 - 18.0) * 0.031).collect();
+        let bias: Vec<f32> = (0..stride).map(|i| i as f32 * 0.1).collect();
+        for o in [0usize, 16, 32] {
+            let mut s = [0.0f32; 16];
+            let mut v = [0.0f32; 16];
+            dense_tile16(Level::Scalar, &x, &w, o, stride, &bias[o..],
+                         &mut s);
+            dense_tile16(Level::Avx2, &x, &w, o, stride, &bias[o..],
+                         &mut v);
+            assert_eq!(s, v, "f32 tile at o={o}");
+        }
+        let q: Vec<i8> = (0..d_in * stride)
+            .map(|i| ((i * 11 % 255) as i32 - 127) as i8).collect();
+        let n_kt = d_in.div_ceil(K_TILE);
+        let n_ct = stride / 16;
+        let scales: Vec<f32> = (0..n_kt * n_ct)
+            .map(|i| 0.01 + 0.003 * i as f32).collect();
+        for (ct, o) in [(0usize, 0usize), (1, 16), (2, 32)] {
+            let mut s = [0.0f32; 16];
+            let mut v = [0.0f32; 16];
+            dense_tile16_q8(Level::Scalar, &x, &q, o, stride, &scales,
+                            n_ct, ct, &bias[o..], &mut s);
+            dense_tile16_q8(Level::Avx2, &x, &q, o, stride, &scales,
+                            n_ct, ct, &bias[o..], &mut v);
+            assert_eq!(s, v, "q8 tile at o={o}");
+        }
+    }
+}

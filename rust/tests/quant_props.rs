@@ -1,0 +1,231 @@
+//! Properties of per-tile int8 weight quantization
+//! (`backend::native::quant` + the v3 checkpoint leaf encoding):
+//!
+//! * **round-trip exactness** — quantize → save → load reproduces the
+//!   quantized model bit for bit (logits included), and the on-disk
+//!   version byte moves 2 → 3 only when int8 leaves are present (pure
+//!   f32 checkpoints stay byte-compatible with older readers);
+//! * **golden-error budget** — quantized logits stay within
+//!   `LOGIT_REL_ERR_BUDGET` (max |q−f| / max(1, |f|), the same gate
+//!   `minrnn quantize` enforces) of the f32 source on a seeded probe;
+//! * **eval-loss budget** — on a trained tiny char-LM the mean-CE
+//!   delta between f32 and int8 stays under
+//!   `EVAL_LOSS_DELTA_BUDGET` nats;
+//! * **stale sessions fail clean** — a session snapshot exported from
+//!   the f32 model is refused by the quantized model with an error
+//!   naming the fingerprint (quantization changes the fingerprint on
+//!   purpose: cached f32 states describe a different serving model);
+//! * **training is refused** — resuming a trainer from a quantized
+//!   checkpoint errors, naming quantization, instead of optimizing
+//!   empty weight vectors.
+
+use std::path::PathBuf;
+
+use minrnn::backend::native::quant;
+use minrnn::backend::{NativeBackend, NativeInit, NativeModel,
+                      NativeTrainer};
+use minrnn::runtime::Backend;
+use minrnn::tensor::{Batch, Tensor};
+use minrnn::util::io;
+use minrnn::util::rng::Rng;
+
+const VOCAB: usize = 16;
+
+fn tiny_lm(seed: u64) -> NativeModel {
+    NativeModel::init_random(&NativeInit {
+        kind: "mingru".to_string(),
+        n_layers: 2,
+        d_model: 16,
+        expansion: 2,
+        vocab_in: Some(VOCAB),
+        input_dim: None,
+        vocab_out: VOCAB,
+        conv: true,
+        mlp: true,
+        mlp_mult: 2,
+        forget_bias: 0.5,
+        ..NativeInit::default()
+    }, seed).unwrap()
+}
+
+/// Identity-task batch: predict the current token — learnable through
+/// the residual path in a handful of steps, which is all the loss-delta
+/// property needs.
+fn identity_batch(rng: &mut Rng, b: usize, t: usize) -> Batch {
+    let toks: Vec<i32> = (0..b * t)
+        .map(|_| rng.below(VOCAB as u64) as i32).collect();
+    Batch {
+        x: Tensor::i32(vec![b, t], toks.clone()),
+        targets: Tensor::i32(vec![b, t], toks),
+        mask: Tensor::f32(vec![b, t], vec![1.0; b * t]),
+    }
+}
+
+/// Mean cross-entropy of all-position logits against `targets` —
+/// computed the same way for the f32 and the quantized model, so the
+/// delta isolates quantization.
+fn mean_ce(model: &NativeModel, x: &Tensor, targets: &[i32]) -> f32 {
+    let (logits, _) = model.forward(x).unwrap();
+    let lv = logits.data.as_f32().unwrap();
+    let v = model.vocab_out;
+    let rows = lv.len() / v;
+    assert_eq!(rows, targets.len());
+    let mut total = 0.0f64;
+    for r in 0..rows {
+        let row = &lv[r * v..(r + 1) * v];
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let lse = row.iter()
+            .map(|&z| ((z - m) as f64).exp()).sum::<f64>().ln()
+            + m as f64;
+        total += lse - row[targets[r] as usize] as f64;
+    }
+    (total / rows as f64) as f32
+}
+
+fn tmp_path(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("minrnn_quant_props");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// The MRNN header version field: magic (4 bytes) then a LE u32.
+fn ckpt_version(path: &std::path::Path) -> u32 {
+    let bytes = std::fs::read(path).unwrap();
+    assert_eq!(&bytes[..4], b"MRNN");
+    u32::from_le_bytes(bytes[4..8].try_into().unwrap())
+}
+
+// ---------------------------------------------------------------------------
+// quantize → save → load round-trip + version stamping
+// ---------------------------------------------------------------------------
+
+#[test]
+fn quantized_checkpoints_roundtrip_exactly_and_stamp_v3() {
+    let model = tiny_lm(0xABC);
+    let f32_path = tmp_path("roundtrip_f32.ckpt");
+    io::save(&f32_path, &model.to_named()).unwrap();
+    assert_eq!(ckpt_version(&f32_path), io::VERSION_F32,
+               "pure-f32 checkpoints must keep the v2 encoding");
+
+    let mut qm = model.clone();
+    quant::quantize_model(&mut qm).unwrap();
+    let q_path = tmp_path("roundtrip_int8.ckpt");
+    io::save(&q_path, &qm.to_named()).unwrap();
+    assert_eq!(ckpt_version(&q_path), io::VERSION,
+               "int8 leaves must bump the container version");
+    assert!(std::fs::metadata(&q_path).unwrap().len()
+            < std::fs::metadata(&f32_path).unwrap().len(),
+            "the int8 checkpoint must be smaller than its f32 source");
+
+    let back = NativeModel::from_checkpoint(&q_path).unwrap();
+    assert!(back.is_quantized());
+    assert_eq!(back.state_fingerprint(), qm.state_fingerprint());
+    let x = quant::probe_input(&model, 2, 16, 1);
+    let (a, _) = qm.forward(&x).unwrap();
+    let (b, _) = back.forward(&x).unwrap();
+    assert_eq!(a, b, "reloaded quantized model must match bit for bit");
+}
+
+// ---------------------------------------------------------------------------
+// golden-error budget on the shared probe
+// ---------------------------------------------------------------------------
+
+#[test]
+fn quantized_logits_stay_within_the_golden_error_budget() {
+    let model = tiny_lm(0x60D);
+    let mut qm = model.clone();
+    quant::quantize_model(&mut qm).unwrap();
+    let rel = quant::probe_rel_err(&model, &qm).unwrap();
+    assert!(rel < quant::LOGIT_REL_ERR_BUDGET,
+            "probe rel err {rel} over budget {}",
+            quant::LOGIT_REL_ERR_BUDGET);
+    // the budget is a ceiling, not the expectation: a tiny random-init
+    // model should land an order of magnitude under it
+    assert!(rel < quant::LOGIT_REL_ERR_BUDGET * 0.5,
+            "probe rel err {rel} suspiciously close to the budget");
+}
+
+// ---------------------------------------------------------------------------
+// eval-loss delta on a trained tiny char-LM
+// ---------------------------------------------------------------------------
+
+#[test]
+fn eval_loss_delta_stays_within_budget_on_a_trained_lm() {
+    let mut trainer = NativeTrainer::new(tiny_lm(0x7EA1), "quant-props");
+    let mut rng = Rng::new(4);
+    let mut last = f32::NAN;
+    for step in 0..30 {
+        let batch = identity_batch(&mut rng, 8, 12);
+        last = trainer.train_batch(&batch, 0.01, step).unwrap().loss;
+    }
+    assert!(last.is_finite() && last < (VOCAB as f32).ln(),
+            "tiny LM failed to learn anything (loss {last})");
+
+    let mut qm = trainer.model.clone();
+    quant::quantize_model(&mut qm).unwrap();
+    let eval = identity_batch(&mut Rng::new(99), 8, 12);
+    let targets = eval.targets.data.as_i32().unwrap().to_vec();
+    let lf = mean_ce(&trainer.model, &eval.x, &targets);
+    let lq = mean_ce(&qm, &eval.x, &targets);
+    assert!((lq - lf).abs() < quant::EVAL_LOSS_DELTA_BUDGET,
+            "eval CE moved {lf} -> {lq}, outside the {} nat budget",
+            quant::EVAL_LOSS_DELTA_BUDGET);
+}
+
+// ---------------------------------------------------------------------------
+// stale f32 session snapshots are refused cleanly
+// ---------------------------------------------------------------------------
+
+#[test]
+fn f32_session_snapshots_are_stale_against_the_quantized_model() {
+    let model = tiny_lm(0x5E55);
+    let mut qm = model.clone();
+    quant::quantize_model(&mut qm).unwrap();
+    let f32_backend = NativeBackend::new(model);
+    let q_backend = NativeBackend::new(qm);
+    assert_ne!(f32_backend.state_fingerprint(),
+               q_backend.state_fingerprint(),
+               "quantization must change the serving fingerprint");
+
+    // build some real f32 session state, snapshot it
+    let mut state = f32_backend.decode_state(1).unwrap();
+    for &tok in &[3i32, 7, 1] {
+        let x = Tensor::i32(vec![1], vec![tok]);
+        let (_, s) = f32_backend.decode_step(&x, state).unwrap();
+        state = s;
+    }
+    let snap = f32_backend.export_state(&state, 0).unwrap();
+
+    // the quantized model must refuse it by fingerprint, not crash —
+    // and the refused state must stay usable
+    let mut qstate = q_backend.decode_state(1).unwrap();
+    let err = q_backend.import_state(&mut qstate, 0, &snap).unwrap_err();
+    assert!(err.to_string().contains("fingerprint"),
+            "unexpected error: {err}");
+    let x = Tensor::i32(vec![1], vec![2]);
+    let (logits, _) = q_backend.decode_step(&x, qstate).unwrap();
+    assert_eq!(logits.dims, vec![1, VOCAB]);
+
+    // its own snapshots round-trip fine
+    let mut s2 = q_backend.decode_state(1).unwrap();
+    let own = q_backend.export_state(&s2, 0).unwrap();
+    q_backend.import_state(&mut s2, 0, &own).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// the trainer refuses quantized checkpoints
+// ---------------------------------------------------------------------------
+
+#[test]
+fn training_cannot_resume_from_a_quantized_checkpoint() {
+    let mut qm = tiny_lm(0xBAD);
+    quant::quantize_model(&mut qm).unwrap();
+    let path = tmp_path("trainer_reject_int8.ckpt");
+    io::save(&path, &qm.to_named()).unwrap();
+    let err = NativeTrainer::from_checkpoint(&path, "reject")
+        .unwrap_err().to_string();
+    assert!(err.contains("quantized"), "unexpected error: {err}");
+    // double-quantizing is refused too
+    let err2 = quant::quantize_model(&mut qm).unwrap_err().to_string();
+    assert!(err2.contains("already quantized"), "{err2}");
+}

@@ -20,7 +20,11 @@
 //!   through `serve_with_cache` hits the session cache (nonzero hit
 //!   rate, prefill tokens saved) and returns bit-identical responses;
 //! * **inert fallback** — a backend without state export (the PJRT
-//!   shape) serves the same tokens with zero cache traffic.
+//!   shape) serves the same tokens with zero cache traffic;
+//! * **quantized checkpoints** — an int8-weight model exports/imports
+//!   f32 decode state and serves warm==cold like any other backend,
+//!   while its fingerprint diverges from the f32 source so stale f32
+//!   sessions are refused cleanly.
 
 use std::cell::RefCell;
 
@@ -327,6 +331,78 @@ impl Backend for NoExportBackend {
     fn lane_reset_supported(&self) -> bool {
         self.0.lane_reset_supported()
     }
+}
+
+// ---------------------------------------------------------------------------
+// quantized checkpoints serve sessions like any other model
+// ---------------------------------------------------------------------------
+
+/// The int8 payload quantizes *weights*; decode state stays f32, so
+/// session snapshots export/import and the warm cache works unchanged —
+/// while the fingerprint (deliberately) diverges from the f32 source,
+/// so stale f32 sessions can never resume against the quantized model.
+#[test]
+fn quantized_backend_sessions_roundtrip_and_serve_warm() {
+    use minrnn::backend::native::quant;
+    let f32_backend = session_backend(0x17E8);
+    let mut qm = f32_backend.model.clone();
+    quant::quantize_model(&mut qm).unwrap();
+    let backend = NativeBackend::new(qm);
+    assert_ne!(backend.state_fingerprint(),
+               f32_backend.state_fingerprint(),
+               "quantization must re-key the session namespace");
+
+    // export → wire → import round-trip, bit-identical continuation
+    let prompt = [2i32, 9, 14, 6, 1];
+    let mut state = backend.decode_state(1).unwrap();
+    let mut snap = None;
+    let mut logits = Tensor::zeros_f32(vec![1, 1]);
+    for (i, &tok) in prompt.iter().enumerate() {
+        if i + 1 == prompt.len() {
+            snap = Some(backend.export_state(&state, 0).unwrap());
+        }
+        let x = Tensor::i32(vec![1], vec![tok]);
+        let (l, s) = backend.decode_step(&x, state).unwrap();
+        logits = l;
+        state = s;
+    }
+    let want = greedy_continue(&backend, state, logits, 10);
+    let wired = SessionState::from_bytes(&snap.unwrap().to_bytes())
+        .unwrap();
+    let mut fresh = backend.decode_state(1).unwrap();
+    backend.import_state(&mut fresh, 0, &wired).unwrap();
+    let x = Tensor::i32(vec![1], vec![prompt[prompt.len() - 1]]);
+    let (logits, fresh) = backend.decode_step(&x, fresh).unwrap();
+    assert_eq!(want, greedy_continue(&backend, fresh, logits, 10),
+               "quantized-backend resume diverged");
+
+    // warm == cold serving through the session cache
+    let requests = session_requests(&mut Rng::new(41), 5);
+    let opts = ServeOpts { temperature: 0.0, seed: 0, max_batch: 2 };
+    let cache = RefCell::new(SessionCache::new(4 << 20));
+    let cold = serve_with_cache(&backend, requests.clone(), &opts,
+                                &cache).unwrap();
+    assert!(cold.session_misses > 0);
+    let warm = serve_with_cache(&backend, requests.clone(), &opts,
+                                &cache).unwrap();
+    assert_eq!(warm.session_hits, requests.len(),
+               "every replayed request must hit the quantized cache");
+    assert!(warm.prefill_tokens_saved > 0);
+    assert_eq!(tokens_by_id(&cold), tokens_by_id(&warm),
+               "warm quantized serving must match cold bit for bit");
+
+    // an f32-model snapshot is refused by fingerprint, never imported
+    let f32_state = {
+        let x = Tensor::i32(vec![1], vec![4]);
+        let st = f32_backend.decode_state(1).unwrap();
+        let (_, st) = f32_backend.decode_step(&x, st).unwrap();
+        st
+    };
+    let stale = f32_backend.export_state(&f32_state, 0).unwrap();
+    let mut target = backend.decode_state(1).unwrap();
+    let err = backend.import_state(&mut target, 0, &stale).unwrap_err();
+    assert!(err.to_string().contains("fingerprint"),
+            "unexpected error: {err}");
 }
 
 #[test]

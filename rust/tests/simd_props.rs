@@ -1,0 +1,286 @@
+//! The SIMD invariance contract (see `ARCHITECTURE.md`): f32 results
+//! are **bit-for-bit identical** whichever dispatch level the lane
+//! kernels run at — forced scalar fallback vs the runtime-detected
+//! AVX2 path — and, as before, at any thread count.  Quantized (int8)
+//! layers share the same guarantee across dispatch levels because the
+//! dequant op sequence is identical in both kernels.
+//!
+//! * **env grammar** — `MINRNN_SIMD=off|scalar|0` pins the scalar
+//!   fallback (`parse_level` is pure, so no env races);
+//! * **dense** — odd shapes and unaligned tails through the 16-wide
+//!   register tile, f32 and int8;
+//! * **transcendentals** — the staged `exp` / `log1p(exp(x))` buffers
+//!   the scan uses, odd lengths so the 8-lane loop plus scalar tail
+//!   both run;
+//! * **scan** — the chunked log-space scan end to end;
+//! * **models** — full forward + decode for every mixer kind, across
+//!   dispatch levels x thread counts {1, 2, 7}.
+//!
+//! On hardware without AVX2 the cross-level assertions degenerate to
+//! scalar-vs-scalar (still run, trivially equal) — the contract is
+//! only falsifiable on an AVX2 machine, which CI provides.
+
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use minrnn::backend::native::linalg::Dense;
+use minrnn::backend::native::{quant, scan};
+use minrnn::backend::{NativeBackend, NativeInit, NativeModel, MIXER_KINDS};
+use minrnn::runtime::Backend;
+use minrnn::tensor::Tensor;
+use minrnn::util::rng::Rng;
+use minrnn::util::simd::{self, Level};
+use minrnn::util::threads;
+
+/// `set_forced` is process-global; every test that flips it holds this
+/// lock so parallel test threads never observe a foreign level.
+fn forced_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+}
+
+/// Run `f` with the dispatch level pinned, restoring detection after.
+fn at_level<T>(lvl: Level, f: impl FnOnce() -> T) -> T {
+    simd::set_forced(Some(lvl));
+    let out = f();
+    simd::set_forced(None);
+    out
+}
+
+/// The levels this machine can actually falsify the contract at.
+fn levels_here() -> Vec<Level> {
+    match simd::detect_level() {
+        Level::Scalar => vec![Level::Scalar],
+        Level::Avx2 => vec![Level::Scalar, Level::Avx2],
+    }
+}
+
+fn randn(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.normal_f32(0.0, scale)).collect()
+}
+
+// ---------------------------------------------------------------------------
+// MINRNN_SIMD grammar
+// ---------------------------------------------------------------------------
+
+#[test]
+fn minrnn_simd_off_pins_the_scalar_fallback() {
+    for off in ["off", "OFF", "Off", "scalar", "SCALAR", "0", " off "] {
+        assert_eq!(simd::parse_level(Some(off), true), Level::Scalar,
+                   "MINRNN_SIMD={off:?} must force scalar");
+        assert_eq!(simd::parse_level(Some(off), false), Level::Scalar);
+    }
+    // anything else (including unset) defers to CPU capability
+    for other in [None, Some("on"), Some("1"), Some("avx2"), Some("")] {
+        assert_eq!(simd::parse_level(other, true), Level::Avx2,
+                   "MINRNN_SIMD={other:?} must allow dispatch");
+        assert_eq!(simd::parse_level(other, false), Level::Scalar);
+    }
+}
+
+#[test]
+fn forcing_a_level_overrides_detection_until_cleared() {
+    let _g = forced_lock();
+    simd::set_forced(Some(Level::Scalar));
+    assert_eq!(simd::level(), Level::Scalar);
+    simd::set_forced(None);
+    assert_eq!(simd::level(), simd::detect_level());
+}
+
+// ---------------------------------------------------------------------------
+// dense: odd shapes + unaligned tails, f32 and int8
+// ---------------------------------------------------------------------------
+
+#[test]
+fn dense_is_bit_identical_across_dispatch_levels() {
+    let _g = forced_lock();
+    let levels = levels_here();
+    let mut rng = Rng::new(0x51AD);
+    // shapes straddling the 16-wide column tile and 64-deep k tile:
+    // exact fits, sub-tile, and ragged tails on both axes
+    for &(rows, d_in, d_out) in &[(1usize, 1usize, 1usize), (2, 7, 5),
+                                  (3, 33, 17), (1, 64, 16), (2, 65, 31),
+                                  (1, 130, 48), (4, 96, 50)] {
+        let w = randn(&mut rng, d_in * d_out, 0.3);
+        let b = randn(&mut rng, d_out, 0.1);
+        let x = randn(&mut rng, rows * d_in, 1.0);
+        let f = Dense::new(d_in, d_out, w.clone(), b.clone()).unwrap();
+        let mut q = Dense::new(d_in, d_out, w, b).unwrap();
+        quant::quantize_dense(&mut q).unwrap();
+        let outs: Vec<(Vec<f32>, Vec<f32>)> = levels.iter()
+            .map(|&l| at_level(l, || (f.apply(&x, rows),
+                                      q.apply(&x, rows))))
+            .collect();
+        for (i, other) in outs.iter().enumerate().skip(1) {
+            assert_eq!(outs[0].0, other.0,
+                       "f32 dense ({rows},{d_in},{d_out}) differs at \
+                        level {:?}", levels[i]);
+            assert_eq!(outs[0].1, other.1,
+                       "int8 dense ({rows},{d_in},{d_out}) differs at \
+                        level {:?}", levels[i]);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// transcendental buffers: 8-lane body + scalar tail
+// ---------------------------------------------------------------------------
+
+#[test]
+fn staged_transcendentals_are_bit_identical_across_levels() {
+    let _g = forced_lock();
+    let levels = levels_here();
+    let mut rng = Rng::new(0xE79);
+    // odd lengths so both the vector body and the tail see data; include
+    // the clamp edges and the -inf that the scan feeds through log1p∘exp
+    for n in [1usize, 7, 8, 9, 13, 64, 67] {
+        let mut base = randn(&mut rng, n, 30.0);
+        base[0] = f32::NEG_INFINITY;
+        if n > 2 {
+            base[1] = simd::EXP_HI + 5.0;
+            base[2] = simd::EXP_LO - 5.0;
+        }
+        let runs: Vec<(Vec<f32>, Vec<f32>)> = levels.iter().map(|&l| {
+            at_level(l, || {
+                let mut e = base.clone();
+                simd::exp_inplace(l, &mut e);
+                let mut le = base.clone();
+                simd::log1p_exp_inplace(l, &mut le);
+                (e, le)
+            })
+        }).collect();
+        for (i, other) in runs.iter().enumerate().skip(1) {
+            assert_eq!(runs[0].0, other.0,
+                       "exp buf len {n} differs at {:?}", levels[i]);
+            assert_eq!(runs[0].1, other.1,
+                       "log1p∘exp buf len {n} differs at {:?}", levels[i]);
+        }
+        // the -inf identity the scan's seamless-chunk property rests on
+        assert_eq!(runs[0].0[0], 0.0);
+        assert_eq!(runs[0].1[0], 0.0);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// log-space scan end to end
+// ---------------------------------------------------------------------------
+
+#[test]
+fn log_scan_is_bit_identical_across_levels_and_threads() {
+    let _g = forced_lock();
+    let levels = levels_here();
+    let pool = threads::global();
+    let before = pool.active();
+    let mut rng = Rng::new(0x5CA9);
+    // odd (t, d) so chunk boundaries (64) and lane blocks (32) both have
+    // ragged tails
+    let (batch, t, d) = (2usize, 67usize, 19usize);
+    let la: Vec<f32> = (0..batch * t * d)
+        .map(|_| rng.range_f32(-3.0, 0.0)).collect();
+    let lb: Vec<f32> = (0..batch * t * d)
+        .map(|_| rng.range_f32(-4.0, 0.0)).collect();
+    let lh0: Vec<f32> = (0..batch * d)
+        .map(|_| rng.range_f32(-2.0, 0.0)).collect();
+    let mut runs = Vec::new();
+    for &lvl in &levels {
+        for nthr in [1usize, 2, 7] {
+            pool.set_active(nthr);
+            let h = at_level(lvl, || scan::scan_log(&la, &lb, &lh0,
+                                                    batch, t, d));
+            runs.push(((lvl, nthr), h));
+        }
+    }
+    pool.set_active(before);
+    for (key, h) in &runs[1..] {
+        assert_eq!(&runs[0].1, h,
+                   "scan_log differs at level/threads {key:?}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// full models: every mixer kind x dispatch level x thread count
+// ---------------------------------------------------------------------------
+
+fn tiny_backend(kind: &str) -> NativeBackend {
+    NativeBackend::new(NativeModel::init_random(&NativeInit {
+        kind: kind.to_string(),
+        n_layers: 2,
+        d_model: 16,
+        expansion: 2,
+        vocab_in: Some(23),
+        input_dim: None,
+        vocab_out: 23,
+        conv: true,
+        mlp: true,
+        mlp_mult: 2,
+        forget_bias: 0.5,
+        max_len: 32,
+        n_heads: 2,
+    }, 0xD15).unwrap())
+}
+
+#[test]
+fn every_mixer_kind_is_bit_identical_across_levels_and_threads() {
+    let _g = forced_lock();
+    let levels = levels_here();
+    let pool = threads::global();
+    let before = pool.active();
+    for &kind in MIXER_KINDS {
+        let backend = tiny_backend(kind);
+        let ctx = Tensor::i32(vec![2, 11], (0..22).map(|i| i % 23).collect());
+        let mut runs: Vec<((Level, usize), Vec<f32>)> = Vec::new();
+        for &lvl in &levels {
+            for nthr in [1usize, 2, 7] {
+                pool.set_active(nthr);
+                let out = at_level(lvl, || {
+                    // prefill logits + a few decode steps, concatenated
+                    let (logits, mut state) =
+                        backend.prefill(&ctx).unwrap();
+                    let mut all =
+                        logits.data.as_f32().unwrap().to_vec();
+                    for step in 0..3 {
+                        let x = Tensor::i32(vec![2],
+                                            vec![step, (step + 5) % 23]);
+                        let (l, s) =
+                            backend.decode_step(&x, state).unwrap();
+                        all.extend_from_slice(l.data.as_f32().unwrap());
+                        state = s;
+                    }
+                    all
+                });
+                runs.push(((lvl, nthr), out));
+            }
+        }
+        for (key, out) in &runs[1..] {
+            assert_eq!(&runs[0].1, out,
+                       "{kind}: outputs differ at level/threads {key:?}");
+        }
+        pool.set_active(before);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// quantized models share the cross-level guarantee
+// ---------------------------------------------------------------------------
+
+#[test]
+fn quantized_model_is_bit_identical_across_levels() {
+    let _g = forced_lock();
+    let levels = levels_here();
+    let backend = tiny_backend("mingru");
+    let mut qmodel = backend.model.clone();
+    quant::quantize_model(&mut qmodel).unwrap();
+    let qbackend = NativeBackend::new(qmodel);
+    let ctx = Tensor::i32(vec![1, 9], (0..9).map(|i| (i * 3) % 23).collect());
+    let runs: Vec<Vec<f32>> = levels.iter().map(|&lvl| {
+        at_level(lvl, || {
+            let (logits, _) = qbackend.prefill(&ctx).unwrap();
+            logits.data.as_f32().unwrap().to_vec()
+        })
+    }).collect();
+    for (i, other) in runs.iter().enumerate().skip(1) {
+        assert_eq!(&runs[0], other,
+                   "quantized model differs at {:?}", levels[i]);
+    }
+}
